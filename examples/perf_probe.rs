@@ -1,0 +1,24 @@
+use koalja::prelude::*;
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let prov: bool = args.next().unwrap().parse().unwrap();
+    let text = "[t]\n(w0) t0 (w1)\n(w1) t1 (w2)\n(w2) t2 (w3)\n(w3) t3 (w4)\n";
+    for _ in 0..5 {
+        let spec = parse(text).unwrap();
+        let cfg = DeployConfig { provenance: prov, ..Default::default() };
+        let mut c = Coordinator::deploy(&spec, cfg).unwrap();
+        // steady-state: inject in small batches like a live stream (the
+        // pre-load-everything variant measured heap churn, not the loop)
+        let wall = std::time::Instant::now();
+        for batch in 0..500u64 {
+            for i in 0..100u64 {
+                let t = batch * 100 + i;
+                c.inject_at("w0", Payload::scalar(t as f32), DataClass::Summary, RegionId::new(0), SimTime::micros(t)).unwrap();
+            }
+            c.run_until_idle();
+        }
+        let secs = wall.elapsed().as_secs_f64();
+        let hops: u64 = c.links.iter().map(|l| l.delivered).sum();
+        println!("prov={prov} {:.0} hops/s", hops as f64 / secs);
+    }
+}

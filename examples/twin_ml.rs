@@ -1,0 +1,241 @@
+//! Fig. 6: the twin-pipeline data circuit (E9).
+//!
+//! "The upper pipeline shows a training process for a ... neural network,
+//! which is deployed as a service consulted by the lower pipeline. The
+//! lower pipeline receives sample images to be recognized and classified
+//! according to the machine learning model trained by the upper pipeline.
+//! ... Clearly, the timescales of the upper and lower pipelines are
+//! unrelated."
+//!
+//! Both the train step and the serving forward pass are AOT-compiled
+//! JAX+Pallas artifacts executed via PJRT from rust — Python never runs
+//! here. The model server is a *service* (the fig. 5 `lookup implicit`
+//! link); every deployment bumps its version, so provenance shows exactly
+//! which model classified which image.
+//!
+//! Run: `make artifacts && cargo run --release --example twin_ml`
+
+use anyhow::Result;
+use koalja::prelude::*;
+use koalja::task::compute::{pack_params, MlpDims, ModelServer, PjrtTask};
+use koalja::util::TaskId;
+
+/// Trainer: PJRT train-step with param state; deploys the packed model on
+/// the `model` wire every `deploy_every` steps.
+struct Trainer {
+    inner: PjrtTask,
+    dims: MlpDims,
+    steps: u64,
+    deploy_every: u64,
+    losses: Vec<f32>,
+}
+
+impl UserCode for Trainer {
+    fn version(&self) -> u32 {
+        1
+    }
+
+    fn run(&mut self, ctx: &mut TaskCtx<'_>, snap: &Snapshot) -> Result<Vec<Output>> {
+        let mut outs = self.inner.run(ctx, snap)?;
+        self.steps += 1;
+        if let Some((_, loss)) = outs[0].payload.as_tensor() {
+            self.losses.push(loss[0]);
+        }
+        if self.steps % self.deploy_every == 0 {
+            outs.push(Output::summary("model", pack_params(&self.inner.state)?));
+        }
+        let _ = self.dims;
+        Ok(outs)
+    }
+
+    fn compute_cost(&self, bytes: u64) -> SimDuration {
+        // fwd + bwd ≈ 3x fwd flops
+        SimDuration::micros(100 + 3 * self.dims.fwd_flops() / 1_000 + bytes / 4096)
+    }
+}
+
+fn main() -> Result<()> {
+    let mut rt = Runtime::open(Runtime::default_dir())?;
+    let train_exe = rt.load("mlp_train_step")?;
+    let infer_exe = rt.load("mlp_infer")?;
+    let dims = MlpDims::default();
+    let mut r = rng(1234);
+    let init_params = dims.init_params(&mut r);
+
+    // the twin circuit of fig. 6, in the fig. 5 wiring language
+    let spec = parse(
+        "[twin]\n\
+         # upper pipeline: slow timescale — learning\n\
+         (batch-x, batch-y) learn (loss, model)\n\
+         (model) deploy (deployed)\n\
+         # lower pipeline: fast timescale — recognition via the implicit\n\
+         # client-server link to the deployed model\n\
+         (images, classifier?) predict (classification)\n",
+    )?;
+    let mut koalja = Coordinator::deploy(&spec, DeployConfig::default())?;
+
+    // the deployed model service (starts untrained)
+    koalja.plat.services.register(
+        "classifier",
+        Box::new(ModelServer::new(infer_exe.clone(), dims, init_params.clone())),
+    );
+
+    koalja.set_code(
+        "learn",
+        Box::new(Trainer {
+            inner: PjrtTask::new(train_exe, "loss")
+                .with_state(init_params)
+                .with_emit(vec![(4, "loss".into(), DataClass::Summary)])
+                .with_absorb(vec![(0, 0), (1, 1), (2, 2), (3, 3)]),
+            dims,
+            steps: 0,
+            deploy_every: 50,
+            losses: vec![],
+        }),
+    )?;
+
+    // deploy: push packed params into the running service
+    koalja.set_code(
+        "deploy",
+        Box::new(FnTask::new(move |ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
+            let mut outs = vec![];
+            for av in snap.all_avs() {
+                let packed = ctx.fetch(av)?;
+                let ok = ctx.plat.services.update("classifier", |s| {
+                    s.update_payload(&packed);
+                });
+                ctx.remark(&format!("deployed model {} (ok={ok})", av.content));
+                outs.push(Output::summary("deployed", Payload::scalar(1.0)));
+            }
+            Ok(outs)
+        })),
+    )?;
+
+    // predict: consult the service (out-of-band lookup, recorded)
+    koalja.set_code(
+        "predict",
+        Box::new(FnTask::new(|ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
+            let mut outs = vec![];
+            for av in snap.all_avs() {
+                let batch = ctx.fetch(av)?;
+                let probs = ctx.lookup("classifier", &batch)?;
+                let (shape, p) = probs
+                    .as_tensor()
+                    .ok_or_else(|| anyhow::anyhow!("bad model response"))?;
+                let classes = shape[1];
+                let preds: Vec<f32> = p
+                    .chunks(classes)
+                    .map(|row| {
+                        row.iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                            .unwrap()
+                            .0 as f32
+                    })
+                    .collect();
+                let n = preds.len();
+                outs.push(Output::summary("classification", Payload::tensor(&[n], preds)));
+            }
+            Ok(outs)
+        })),
+    )?;
+
+    // ---- drive both timescales ----
+    let stream = koalja::workload::ImageStream::new(&mut r, dims.classes, dims.input, 0.4);
+    let train_period = SimDuration::millis(500); // slow: learning
+    let image_period = SimDuration::millis(90); // fast: recognition
+    let steps = 300u64;
+    let horizon = SimTime::ZERO + train_period.scale(steps as f64 + 2.0);
+
+    for i in 0..steps {
+        let (x, labels) = stream.batch(&mut r, dims.batch);
+        let y = stream.one_hot(&labels);
+        let t = SimTime::ZERO + train_period.scale(i as f64);
+        koalja.inject_at("batch-x", x, DataClass::Summary, RegionId::new(0), t)?;
+        koalja.inject_at("batch-y", y, DataClass::Summary, RegionId::new(0), t)?;
+    }
+    let mut truth: Vec<Vec<usize>> = Vec::new();
+    let mut t = SimTime::ZERO;
+    loop {
+        t += image_period;
+        if t > horizon {
+            break;
+        }
+        let (x, labels) = stream.batch(&mut r, dims.batch);
+        truth.push(labels);
+        koalja.inject_at("images", x, DataClass::Summary, RegionId::new(0), t)?;
+    }
+
+    koalja.run_until_idle();
+
+    // ---- results ----
+    let learn_id = koalja.task_id("learn")?;
+    let _ = learn_id;
+    println!("== twin pipeline run: {steps} train steps, {} image batches ==", truth.len());
+
+    // loss curve from the collected sink
+    let losses: Vec<f32> = koalja
+        .collected
+        .get("loss")
+        .map(|v| v.iter().map(|c| c.payload.as_tensor().unwrap().1[0]).collect())
+        .unwrap_or_default();
+    println!("\nloss curve (every 25 steps):");
+    for (i, chunk) in losses.chunks(25).enumerate() {
+        println!("  step {:>4}: loss {:.4}", i * 25, chunk[0]);
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.2),
+        "training converged: {} -> {}",
+        losses[0],
+        losses.last().unwrap()
+    );
+
+    // accuracy per classification batch, split before/after first deploy
+    let classifications = koalja.collected.get("classification").cloned().unwrap_or_default();
+    let mut early_correct = 0usize;
+    let mut early_total = 0usize;
+    let mut late_correct = 0usize;
+    let mut late_total = 0usize;
+    let n_images = classifications.len().min(truth.len());
+    for (i, c) in classifications.iter().take(n_images).enumerate() {
+        let (_, preds) = c.payload.as_tensor().unwrap();
+        for (p, t) in preds.iter().zip(&truth[i]) {
+            let hit = (*p as usize) == *t;
+            if i < n_images / 10 {
+                early_total += 1;
+                early_correct += hit as usize;
+            } else if i > n_images * 9 / 10 {
+                late_total += 1;
+                late_correct += hit as usize;
+            }
+        }
+    }
+    let early_acc = early_correct as f64 / early_total.max(1) as f64;
+    let late_acc = late_correct as f64 / late_total.max(1) as f64;
+    println!("\nclassification accuracy: first 10% of stream {:.1}% -> last 10% {:.1}%",
+        early_acc * 100.0, late_acc * 100.0);
+    assert!(late_acc > early_acc, "deployed model improved the lower pipeline");
+    assert!(late_acc > 0.85, "trained accuracy {late_acc}");
+
+    // provenance: model versions visible on the serving path
+    let deploys = koalja.collected_count("deployed");
+    let version = koalja.plat.services.version("classifier").unwrap();
+    println!("model deployments: {deploys}; serving version now v{version}");
+    let predict_id = koalja.task_id("predict")?;
+    let lookups = koalja
+        .plat
+        .prov
+        .checkpoint_log(predict_id)
+        .iter()
+        .filter(|e| {
+            matches!(
+                e.event,
+                koalja::provenance::CheckpointEvent::ServiceLookup { .. }
+            )
+        })
+        .count();
+    println!("recorded service lookups on the predict path: {lookups}");
+    let _ = TaskId::new(0);
+    println!("\n{}", koalja.plat.metrics.report());
+    Ok(())
+}

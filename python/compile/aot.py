@@ -1,0 +1,132 @@
+"""AOT compile path: lower every L2 graph to HLO *text* + a manifest.
+
+Run once at build time (`make artifacts`); the rust runtime
+(`rust/src/runtime/`) loads the text with `HloModuleProto::from_text_file`,
+compiles on the PJRT CPU client and executes from the L3 hot path. Python
+never runs at request time.
+
+HLO **text** — not `.serialize()` — is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. Lowered with `return_tuple=True` so
+the rust side always unwraps a tuple.
+
+Usage:  cd python && python -m compile.aot [--out-dir ../artifacts]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def artifact_catalog():
+    """name → (fn, example_specs, doc). One HLO module per entry.
+
+    Shapes are the platform defaults; the rust ArtifactRegistry reads them
+    from the manifest, so changing them here is the single source of truth.
+    """
+    dims = model.MlpDims()
+    mlp_param_specs = [
+        _spec((dims.in_dim, dims.hidden)),
+        _spec((dims.hidden,)),
+        _spec((dims.hidden, dims.classes)),
+        _spec((dims.classes,)),
+    ]
+    return {
+        "edge_summarize": (
+            model.edge_summarize,
+            [_spec((1024, 8))],
+            "(1024,8) chunk -> (4,8) sketch [sum,sumsq,min,max] (E7)",
+        ),
+        "window_mean": (
+            functools.partial(model.window_mean, w=32, s=8),
+            [_spec((256, 8))],
+            "(256,8) stream -> (29,8) moving averages, window [32/8] (E5)",
+        ),
+        "anomaly": (
+            functools.partial(model.detect_anomalies, k=3.0),
+            [_spec((256, 8)), _spec((4, 8))],
+            "(256,8) x + (4,8) sketch -> (256,8) mask, count (fig. 9)",
+        ),
+        "mlp_infer": (
+            model.mlp_infer,
+            mlp_param_specs + [_spec((dims.batch, dims.in_dim))],
+            "params + (32,64) batch -> (32,4) class probabilities (E9)",
+        ),
+        "mlp_train_step": (
+            functools.partial(model.mlp_train_step, lr=0.05),
+            mlp_param_specs
+            + [_spec((dims.batch, dims.in_dim)), _spec((dims.batch, dims.classes))],
+            "params + batch + onehot -> params' + loss, SGD lr=0.05 (E9)",
+        ),
+    }
+
+
+def _dt_name(dt) -> str:
+    return jnp.dtype(dt).name  # e.g. "float32"
+
+
+def build(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text/return-tuple", "artifacts": []}
+    for name, (fn, specs, doc) in artifact_catalog().items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *specs)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "doc": doc,
+                "inputs": [
+                    {"shape": list(s.shape), "dtype": _dt_name(s.dtype)} for s in specs
+                ],
+                "outputs": [
+                    {"shape": list(o.shape), "dtype": _dt_name(o.dtype)}
+                    for o in jax.tree_util.tree_leaves(outs)
+                ],
+            }
+        )
+        print(f"  {name}: {len(text)} chars -> {fname}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    m = build(args.out_dir)
+    print(f"wrote {len(m['artifacts'])} artifacts + manifest.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""L1 Pallas kernels (build-time only; lowered to HLO by compile.aot)."""
+
+from .anomaly import anomaly_pallas
+from .matmul import matmul, matmul_pallas
+from .summarize import moments, summarize_pallas
+from .window import n_windows, window_mean_pallas
+
+__all__ = [
+    "anomaly_pallas",
+    "matmul",
+    "matmul_pallas",
+    "moments",
+    "n_windows",
+    "summarize_pallas",
+    "window_mean_pallas",
+]

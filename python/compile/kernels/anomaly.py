@@ -1,0 +1,62 @@
+"""L1: z-score anomaly flagging Pallas kernel.
+
+Koalja's metadata system records "[anomalous CPU spike: ...]" events
+(fig. 9) in the CFEngine observational-measurement tradition (§III-A refs
+[10]-[12]). This kernel is the detector the smart-task wrapper runs over
+each snapshot: flag samples further than `k` standard deviations from the
+per-channel mean produced by the summarize kernel.
+
+Elementwise over (N, D), tiled on the sample axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 256
+
+
+def _anomaly_kernel(k: float, x_ref, mean_ref, std_ref, o_ref):
+    x = x_ref[...]
+    dev = jnp.abs(x - mean_ref[...])
+    thresh = k * std_ref[...]
+    o_ref[...] = jnp.where(dev > thresh, jnp.ones_like(x), jnp.zeros_like(x))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n"))
+def anomaly_pallas(
+    x: jax.Array,
+    mean: jax.Array,
+    std: jax.Array,
+    *,
+    k: float = 3.0,
+    block_n: int = BLOCK_N,
+) -> jax.Array:
+    """(N, D) samples + (D,) mean/std → (N, D) {0,1} anomaly mask."""
+    if x.ndim != 2 or mean.shape != (x.shape[1],) or std.shape != mean.shape:
+        raise ValueError(
+            f"anomaly shapes: x={x.shape} mean={mean.shape} std={std.shape}"
+        )
+    n, d = x.shape
+    bn = min(block_n, max(n, 1))
+    n_pad = ((n + bn - 1) // bn) * bn
+    x_in = jnp.pad(x, ((0, n_pad - n), (0, 0))) if n_pad != n else x
+    mean2 = mean.reshape(1, d)
+    std2 = std.reshape(1, d)
+    out = pl.pallas_call(
+        functools.partial(_anomaly_kernel, float(k)),
+        grid=(n_pad // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, d), x.dtype),
+        interpret=True,
+    )(x_in, mean2, std2)
+    return out[:n, :]

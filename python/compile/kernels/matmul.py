@@ -1,0 +1,102 @@
+"""L1: tiled Pallas matmul — the MXU-shaped compute hot-spot.
+
+The Koalja paper lists "calculating matrix operations" among the key user
+cases (§III-A) and fig. 6's twin pipeline trains/serves a neural model.
+This kernel is the hot-spot both the MLP forward and backward passes lower
+through.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): blocks are 128×128 —
+the MXU systolic-array native tile — and the K reduction walks HBM→VMEM one
+(bm, bk)×(bk, bn) pair per grid step, accumulating in the revisited output
+block (VMEM-resident across the K axis because K is the innermost grid
+dimension). `interpret=True` everywhere: the CPU PJRT plugin cannot execute
+Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-native tile. Small inputs are zero-padded up to one tile; the pad is
+# sliced back off after the call, so callers see exact shapes.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (bm, bk) @ (bk, bn) MAC into the revisited (bm, bn) output block."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def _ceil_to(n: int, b: int) -> int:
+    return ((n + b - 1) // b) * b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = BLOCK_M,
+    bn: int = BLOCK_N,
+    bk: int = BLOCK_K,
+) -> jax.Array:
+    """`a @ b` via the tiled Pallas kernel. Exact shapes, any M/N/K."""
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"matmul shape mismatch: {a.shape} @ {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    a_p = _pad_to(a, mp, kp)
+    b_p = _pad_to(b, kp, np_)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),  # K innermost → accumulate
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Differentiable tiled matmul: forward AND both cotangent products go
+    through the same Pallas kernel, so training lowers through L1 too."""
+    return matmul_pallas(a, b)
+
+
+def _matmul_fwd(a, b):
+    return matmul_pallas(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    # dA = g @ B^T and dB = A^T @ g — both are matmuls, both stay on-kernel.
+    return matmul_pallas(g, b.T), matmul_pallas(a.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

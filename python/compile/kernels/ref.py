@@ -1,0 +1,38 @@
+"""Pure-jnp correctness oracles for every L1 Pallas kernel.
+
+These are the specification; the kernels must match them to numerical
+tolerance on all shapes/dtypes the hypothesis sweeps generate.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a, b, preferred_element_type=a.dtype)
+
+
+def summarize_ref(x: jax.Array) -> jax.Array:
+    """(N, D) → (4, D): [sum, sumsq, min, max]."""
+    return jnp.stack(
+        [
+            jnp.sum(x, axis=0),
+            jnp.sum(x * x, axis=0),
+            jnp.min(x, axis=0),
+            jnp.max(x, axis=0),
+        ]
+    )
+
+
+def window_mean_ref(x: jax.Array, *, w: int, s: int) -> jax.Array:
+    t = x.shape[0]
+    nw = (t - w) // s + 1
+    return jnp.stack([jnp.mean(x[i * s : i * s + w], axis=0) for i in range(nw)])
+
+
+def anomaly_ref(
+    x: jax.Array, mean: jax.Array, std: jax.Array, *, k: float = 3.0
+) -> jax.Array:
+    return (jnp.abs(x - mean[None, :]) > k * std[None, :]).astype(x.dtype)

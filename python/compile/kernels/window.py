@@ -1,0 +1,53 @@
+"""L1: sliding-window statistics Pallas kernel.
+
+Koalja §III-I: sliding windows `input[N/S]` — "a buffer of 10 values,
+sliding 2 positions at a time ... useful for computing moving averages".
+The smart-task agent assembles the window snapshots (that part is L3, in
+rust); this kernel is the *compute* those snapshots feed: per-window mean
+over a (T, D) stream, windows of W samples advancing S at a time.
+
+Overlapping windows cannot be expressed as disjoint BlockSpec tiles, so the
+stream block is brought into VMEM whole (streams here are the already
+chunked link batches — small by construction, §III-G "packaged in a size
+that can fit into local RAM") and each grid step dynamic-slices its window.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def n_windows(t: int, w: int, s: int) -> int:
+    """Number of full windows of length `w`, stride `s`, over `t` samples."""
+    if t < w:
+        return 0
+    return (t - w) // s + 1
+
+
+def _window_kernel(w: int, s: int, x_ref, o_ref):
+    i = pl.program_id(0)
+    win = x_ref[pl.dslice(i * s, w), :]
+    o_ref[pl.dslice(i, 1), :] = jnp.mean(win, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("w", "s"))
+def window_mean_pallas(x: jax.Array, *, w: int, s: int) -> jax.Array:
+    """(T, D) stream → (n_windows, D) moving averages."""
+    if x.ndim != 2:
+        raise ValueError(f"window_mean expects (T, D), got {x.shape}")
+    t, d = x.shape
+    nw = n_windows(t, w, s)
+    if nw == 0:
+        raise ValueError(f"stream of {t} samples has no window of {w}")
+    return pl.pallas_call(
+        functools.partial(_window_kernel, w, s),
+        grid=(nw,),
+        in_specs=[pl.BlockSpec((t, d), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((nw, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nw, d), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,181 @@
+"""L2: JAX compute graphs for Koalja's user tasks.
+
+Each function here is the body of a Koalja *task container* (§III-I): the
+rust smart-task agent assembles a snapshot of annotated values, feeds the
+payload arrays to the AOT-compiled executable, and ships the outputs down
+the smart links. Four graphs cover the paper's workloads:
+
+  * ``edge_summarize`` — the §III-G edge data-reduction (E7): chunk →
+    moment sketch, via the L1 summarize kernel.
+  * ``window_mean`` — §III-I sliding windows ``[N/S]`` (E5), via the L1
+    window kernel.
+  * ``detect_anomalies`` — the fig. 9 "anomalous CPU spike" style detector,
+    via the L1 anomaly kernel.
+  * ``mlp_infer`` / ``mlp_train_step`` — fig. 6's twin pipeline (E9):
+    train a small MLP classifier upstream, serve it downstream. Both the
+    forward pass and (through the custom VJP) the backward pass lower
+    through the L1 tiled matmul kernel.
+
+Everything is shape-static so `compile.aot` can lower one HLO artifact per
+(graph, shape) pair. Python never runs at request time.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    anomaly_pallas,
+    matmul,
+    summarize_pallas,
+    window_mean_pallas,
+)
+
+# ---------------------------------------------------------------------------
+# Edge analytics graphs (E5/E7 compute)
+# ---------------------------------------------------------------------------
+
+
+def edge_summarize(chunk: jax.Array) -> tuple[jax.Array]:
+    """(N, D) raw samples → (4, D) sketch [sum, sumsq, min, max].
+
+    Mean/var are derived from the sketch by whoever consumes it (rust side
+    or `kernels.summarize.moments`); shipping raw moments keeps sketches
+    mergeable across edge regions (sum of sketches = sketch of union).
+    """
+    return (summarize_pallas(chunk),)
+
+
+def window_mean(stream: jax.Array, *, w: int, s: int) -> tuple[jax.Array]:
+    """(T, D) stream → (n_windows, D) moving averages (input ``[w/s]``)."""
+    return (window_mean_pallas(stream, w=w, s=s),)
+
+
+def detect_anomalies(
+    x: jax.Array, sketch: jax.Array, *, k: float = 3.0
+) -> tuple[jax.Array, jax.Array]:
+    """Flag |x-μ|>kσ against a summarize sketch; also return flag count.
+
+    Takes the (4, D) sketch directly (as produced upstream) so the two
+    tasks wire together without an intermediate format.
+    """
+    n = x.shape[0]
+    nf = jnp.asarray(n, x.dtype)
+    mean = sketch[0] / nf
+    var = jnp.maximum(sketch[1] / nf - mean * mean, 0.0)
+    std = jnp.sqrt(var)
+    mask = anomaly_pallas(x, mean, std, k=k)
+    return mask, jnp.sum(mask)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6 twin pipeline: MLP train (upper) / serve (lower)
+# ---------------------------------------------------------------------------
+
+
+class MlpDims(NamedTuple):
+    """Static dimensions for one MLP variant."""
+
+    in_dim: int = 64
+    hidden: int = 128
+    classes: int = 4
+    batch: int = 32
+
+
+def mlp_init(key: jax.Array, dims: MlpDims) -> tuple[jax.Array, ...]:
+    """He-initialized params as a flat tuple (w1, b1, w2, b2)."""
+    k1, k2 = jax.random.split(key)
+    w1 = jax.random.normal(k1, (dims.in_dim, dims.hidden), jnp.float32)
+    w1 = w1 * jnp.sqrt(2.0 / dims.in_dim)
+    w2 = jax.random.normal(k2, (dims.hidden, dims.classes), jnp.float32)
+    w2 = w2 * jnp.sqrt(2.0 / dims.hidden)
+    return (w1, jnp.zeros((dims.hidden,)), w2, jnp.zeros((dims.classes,)))
+
+
+def mlp_logits(
+    w1: jax.Array, b1: jax.Array, w2: jax.Array, b2: jax.Array, x: jax.Array
+) -> jax.Array:
+    """Two-layer ReLU MLP; both matmuls go through the L1 Pallas kernel."""
+    h = jax.nn.relu(matmul(x, w1) + b1)
+    return matmul(h, w2) + b2
+
+
+def mlp_infer(
+    w1: jax.Array, b1: jax.Array, w2: jax.Array, b2: jax.Array, x: jax.Array
+) -> tuple[jax.Array]:
+    """(B, IN) → (B, C) class probabilities — the serving task's body."""
+    return (jax.nn.softmax(mlp_logits(w1, b1, w2, b2, x), axis=-1),)
+
+
+def _xent(params: tuple[jax.Array, ...], x: jax.Array, y1h: jax.Array) -> jax.Array:
+    logits = mlp_logits(*params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y1h * logp, axis=-1))
+
+
+def mlp_train_step(
+    w1: jax.Array,
+    b1: jax.Array,
+    w2: jax.Array,
+    b2: jax.Array,
+    x: jax.Array,
+    y1h: jax.Array,
+    *,
+    lr: float = 0.05,
+) -> tuple[jax.Array, ...]:
+    """One SGD step; returns (w1', b1', w2', b2', loss).
+
+    The gradient of the Pallas matmul is its custom VJP, so fwd+bwd both
+    execute the L1 kernel inside the single lowered HLO module.
+    """
+    params = (w1, b1, w2, b2)
+    loss, grads = jax.value_and_grad(_xent)(params, x, y1h)
+    new = tuple(p - lr * g for p, g in zip(params, grads))
+    return (*new, loss)
+
+
+# ---------------------------------------------------------------------------
+# Reference (pure-jnp) twins for pytest — no pallas anywhere.
+# ---------------------------------------------------------------------------
+
+
+def mlp_logits_ref(w1, b1, w2, b2, x):
+    h = jax.nn.relu(x @ w1 + b1)
+    return h @ w2 + b2
+
+
+def mlp_train_step_ref(w1, b1, w2, b2, x, y1h, *, lr: float = 0.05):
+    def loss_fn(params):
+        logits = mlp_logits_ref(*params, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.sum(y1h * logp, axis=-1))
+
+    params = (w1, b1, w2, b2)
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new = tuple(p - lr * g for p, g in zip(params, grads))
+    return (*new, loss)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic 2-class "image" data for the twin-pipeline example (E9): class c
+# is a blob pattern + noise; linearly separable enough for a tiny MLP.
+# ---------------------------------------------------------------------------
+
+
+def synth_classes(
+    key: jax.Array, n: int, dims: MlpDims, noise: float = 0.5
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (x (n, in_dim), y (n,) int labels)."""
+    kp, kl, kn = jax.random.split(key, 3)
+    protos = jax.random.normal(kp, (dims.classes, dims.in_dim)) * 2.0
+    y = jax.random.randint(kl, (n,), 0, dims.classes)
+    x = protos[y] + noise * jax.random.normal(kn, (n, dims.in_dim))
+    return x.astype(jnp.float32), y
+
+
+def one_hot(y: jax.Array, classes: int) -> jax.Array:
+    return jax.nn.one_hot(y, classes, dtype=jnp.float32)

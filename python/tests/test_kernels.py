@@ -1,0 +1,255 @@
+"""L1 kernel vs pure-jnp oracle — the core correctness signal.
+
+hypothesis sweeps shapes/dtypes; every case asserts allclose against ref.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    anomaly_pallas,
+    matmul,
+    matmul_pallas,
+    moments,
+    n_windows,
+    summarize_pallas,
+    window_mean_pallas,
+)
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+class TestMatmul:
+    def test_square(self):
+        a, b = _rand(0, (64, 64)), _rand(1, (64, 64))
+        np.testing.assert_allclose(
+            matmul_pallas(a, b), ref.matmul_ref(a, b), rtol=1e-5, atol=1e-5
+        )
+
+    def test_bigger_than_one_tile(self):
+        a, b = _rand(2, (300, 200)), _rand(3, (200, 150))
+        np.testing.assert_allclose(
+            matmul_pallas(a, b), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4
+        )
+
+    def test_small_blocks_force_k_accumulation(self):
+        a, b = _rand(4, (96, 96)), _rand(5, (96, 96))
+        got = matmul_pallas(a, b, bm=32, bn=32, bk=32)
+        np.testing.assert_allclose(got, ref.matmul_ref(a, b), rtol=1e-5, atol=1e-5)
+
+    @SETTINGS
+    @given(
+        m=st.integers(1, 70),
+        k=st.integers(1, 70),
+        n=st.integers(1, 70),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, m, k, n, seed):
+        kk = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(kk)
+        a = jax.random.normal(k1, (m, k), jnp.float32)
+        b = jax.random.normal(k2, (k, n), jnp.float32)
+        got = matmul_pallas(a, b, bm=32, bn=32, bk=32)
+        np.testing.assert_allclose(got, ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4)
+
+    def test_bf16(self):
+        a = _rand(6, (64, 64), jnp.bfloat16)
+        b = _rand(7, (64, 64), jnp.bfloat16)
+        got = matmul_pallas(a, b).astype(jnp.float32)
+        want = ref.matmul_ref(a, b).astype(jnp.float32)
+        np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-1)
+
+    def test_shape_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            matmul_pallas(_rand(0, (4, 5)), _rand(1, (6, 4)))
+
+    def test_grad_matches_jnp(self):
+        """The custom VJP (both cotangents via the kernel) equals jnp grad."""
+        a, b = _rand(8, (48, 40)), _rand(9, (40, 24))
+
+        def f_pallas(a, b):
+            return jnp.sum(matmul(a, b) ** 2)
+
+        def f_ref(a, b):
+            return jnp.sum((a @ b) ** 2)
+
+        ga_p, gb_p = jax.grad(f_pallas, argnums=(0, 1))(a, b)
+        ga_r, gb_r = jax.grad(f_ref, argnums=(0, 1))(a, b)
+        np.testing.assert_allclose(ga_p, ga_r, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(gb_p, gb_r, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# summarize
+# ---------------------------------------------------------------------------
+
+
+class TestSummarize:
+    def test_exact_multiple_of_block(self):
+        x = _rand(10, (512, 8))
+        np.testing.assert_allclose(
+            summarize_pallas(x), ref.summarize_ref(x), rtol=1e-4, atol=1e-4
+        )
+
+    def test_ragged_tail(self):
+        x = _rand(11, (300, 5))
+        np.testing.assert_allclose(
+            summarize_pallas(x), ref.summarize_ref(x), rtol=1e-4, atol=1e-4
+        )
+
+    def test_single_row(self):
+        x = _rand(12, (1, 3))
+        np.testing.assert_allclose(
+            summarize_pallas(x), ref.summarize_ref(x), rtol=1e-5, atol=1e-5
+        )
+
+    @SETTINGS
+    @given(n=st.integers(1, 600), d=st.integers(1, 9), seed=st.integers(0, 2**16))
+    def test_hypothesis_shapes(self, n, d, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (n, d), jnp.float32)
+        np.testing.assert_allclose(
+            summarize_pallas(x, block_n=64),
+            ref.summarize_ref(x),
+            rtol=1e-3,
+            atol=1e-3,
+        )
+
+    def test_moments_derivation(self):
+        x = _rand(13, (256, 4))
+        mean, var, mn, mx = moments(summarize_pallas(x), x.shape[0])
+        np.testing.assert_allclose(mean, jnp.mean(x, axis=0), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(var, jnp.var(x, axis=0), rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(mn, jnp.min(x, axis=0), rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(mx, jnp.max(x, axis=0), rtol=1e-6, atol=1e-6)
+
+    def test_sketch_mergeability(self):
+        """sum of region sketches == sketch of union (edge aggregation)."""
+        x = _rand(14, (400, 6))
+        s1, s2 = summarize_pallas(x[:150]), summarize_pallas(x[150:])
+        merged = jnp.stack(
+            [
+                s1[0] + s2[0],
+                s1[1] + s2[1],
+                jnp.minimum(s1[2], s2[2]),
+                jnp.maximum(s1[3], s2[3]),
+            ]
+        )
+        np.testing.assert_allclose(
+            merged, ref.summarize_ref(x), rtol=1e-4, atol=1e-4
+        )
+
+    def test_rejects_1d(self):
+        with pytest.raises(ValueError):
+            summarize_pallas(jnp.ones((8,)))
+
+
+# ---------------------------------------------------------------------------
+# window
+# ---------------------------------------------------------------------------
+
+
+class TestWindow:
+    def test_paper_example_10_slide_2(self):
+        """The paper's `input[10/2]` example (§III-I)."""
+        x = _rand(15, (50, 3))
+        got = window_mean_pallas(x, w=10, s=2)
+        np.testing.assert_allclose(
+            got, ref.window_mean_ref(x, w=10, s=2), rtol=1e-5, atol=1e-5
+        )
+
+    def test_non_overlapping(self):
+        x = _rand(16, (64, 2))
+        got = window_mean_pallas(x, w=8, s=8)
+        np.testing.assert_allclose(
+            got, ref.window_mean_ref(x, w=8, s=8), rtol=1e-5, atol=1e-5
+        )
+
+    def test_window_equals_stream(self):
+        x = _rand(17, (16, 4))
+        got = window_mean_pallas(x, w=16, s=1)
+        assert got.shape == (1, 4)
+        np.testing.assert_allclose(got[0], jnp.mean(x, axis=0), rtol=1e-5, atol=1e-5)
+
+    @SETTINGS
+    @given(
+        t=st.integers(4, 128),
+        d=st.integers(1, 6),
+        w=st.integers(1, 16),
+        s=st.integers(1, 8),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, t, d, w, s, seed):
+        if t < w:
+            return
+        x = jax.random.normal(jax.random.PRNGKey(seed), (t, d), jnp.float32)
+        got = window_mean_pallas(x, w=w, s=s)
+        assert got.shape == (n_windows(t, w, s), d)
+        np.testing.assert_allclose(
+            got, ref.window_mean_ref(x, w=w, s=s), rtol=1e-4, atol=1e-4
+        )
+
+    def test_too_short_raises(self):
+        with pytest.raises(ValueError):
+            window_mean_pallas(jnp.ones((4, 2)), w=8, s=2)
+
+
+# ---------------------------------------------------------------------------
+# anomaly
+# ---------------------------------------------------------------------------
+
+
+class TestAnomaly:
+    def test_known_spike(self):
+        x = jnp.zeros((32, 2)).at[7, 1].set(100.0)
+        mean = jnp.zeros((2,))
+        std = jnp.ones((2,))
+        mask = anomaly_pallas(x, mean, std, k=3.0)
+        assert float(mask[7, 1]) == 1.0
+        assert float(jnp.sum(mask)) == 1.0
+
+    def test_matches_ref(self):
+        x = _rand(18, (200, 5))
+        mean = jnp.mean(x, axis=0)
+        std = jnp.std(x, axis=0)
+        np.testing.assert_allclose(
+            anomaly_pallas(x, mean, std, k=1.5),
+            ref.anomaly_ref(x, mean, std, k=1.5),
+        )
+
+    @SETTINGS
+    @given(
+        n=st.integers(1, 300),
+        d=st.integers(1, 8),
+        k=st.floats(0.5, 4.0),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, n, d, k, seed):
+        kx, km = jax.random.split(jax.random.PRNGKey(seed))
+        x = jax.random.normal(kx, (n, d), jnp.float32)
+        mean = jax.random.normal(km, (d,), jnp.float32) * 0.1
+        std = jnp.ones((d,)) * 0.8
+        np.testing.assert_allclose(
+            anomaly_pallas(x, mean, std, k=k, block_n=64),
+            ref.anomaly_ref(x, mean, std, k=k),
+        )
+
+    def test_bad_shapes_raise(self):
+        with pytest.raises(ValueError):
+            anomaly_pallas(jnp.ones((4, 3)), jnp.ones((2,)), jnp.ones((2,)))

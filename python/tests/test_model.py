@@ -1,0 +1,122 @@
+"""L2 graph tests: MLP vs pure-jnp twin, training convergence, task graphs."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.summarize import moments, summarize_pallas
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = model.MlpDims(in_dim=16, hidden=32, classes=3, batch=16)
+
+
+def _data(seed=0, n=16, dims=DIMS):
+    return model.synth_classes(jax.random.PRNGKey(seed), n, dims)
+
+
+class TestMlp:
+    def test_logits_match_ref(self):
+        params = model.mlp_init(jax.random.PRNGKey(1), DIMS)
+        x, _ = _data()
+        np.testing.assert_allclose(
+            model.mlp_logits(*params, x),
+            model.mlp_logits_ref(*params, x),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_infer_probabilities_normalized(self):
+        params = model.mlp_init(jax.random.PRNGKey(2), DIMS)
+        x, _ = _data(1)
+        (probs,) = model.mlp_infer(*params, x)
+        np.testing.assert_allclose(jnp.sum(probs, axis=-1), 1.0, rtol=1e-5)
+        assert bool(jnp.all(probs >= 0))
+
+    def test_train_step_matches_ref(self):
+        params = model.mlp_init(jax.random.PRNGKey(3), DIMS)
+        x, y = _data(2)
+        y1h = model.one_hot(y, DIMS.classes)
+        got = model.mlp_train_step(*params, x, y1h, lr=0.1)
+        want = model.mlp_train_step_ref(*params, x, y1h, lr=0.1)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=2e-3, atol=2e-3)
+
+    def test_training_reduces_loss(self):
+        """A few steps on a separable synthetic set must reduce loss."""
+        params = model.mlp_init(jax.random.PRNGKey(4), DIMS)
+        x, y = _data(3, n=64)
+        y1h = model.one_hot(y, DIMS.classes)
+        step = jax.jit(lambda *a: model.mlp_train_step(*a, lr=0.1))
+        losses = []
+        for _ in range(20):
+            *params, loss = step(*params, x, y1h)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.7, losses
+
+    def test_training_improves_accuracy(self):
+        params = model.mlp_init(jax.random.PRNGKey(5), DIMS)
+        x, y = _data(6, n=64)
+        y1h = model.one_hot(y, DIMS.classes)
+        (p0,) = model.mlp_infer(*params, x[: DIMS.batch])
+        acc0 = float(jnp.mean(jnp.argmax(p0, -1) == y[: DIMS.batch]))
+        step = jax.jit(lambda *a: model.mlp_train_step(*a, lr=0.1))
+        for _ in range(40):
+            *params, _ = step(*params, x, y1h)
+        (p1,) = model.mlp_infer(*params, x[: DIMS.batch])
+        acc1 = float(jnp.mean(jnp.argmax(p1, -1) == y[: DIMS.batch]))
+        assert acc1 >= acc0
+        assert acc1 > 0.8
+
+
+class TestTaskGraphs:
+    def test_edge_summarize_is_kernel_sketch(self):
+        x = jax.random.normal(jax.random.PRNGKey(7), (300, 8))
+        (sk,) = model.edge_summarize(x)
+        # atol 1e-3: the ragged-tail pad correction subtracts near-equal
+        # sums, so near-zero channel totals see ~1e-4 cancellation error.
+        np.testing.assert_allclose(sk, ref.summarize_ref(x), rtol=1e-4, atol=1e-3)
+
+    def test_window_mean_graph(self):
+        x = jax.random.normal(jax.random.PRNGKey(8), (64, 4))
+        (wm,) = model.window_mean(x, w=8, s=4)
+        np.testing.assert_allclose(
+            wm, ref.window_mean_ref(x, w=8, s=4), rtol=1e-4, atol=1e-4
+        )
+
+    def test_anomaly_graph_wires_to_sketch(self):
+        """anomaly consumes the summarize sketch directly (pipeline wiring)."""
+        x = jax.random.normal(jax.random.PRNGKey(9), (256, 4))
+        x = x.at[3, 2].set(50.0)
+        (sk,) = model.edge_summarize(x)
+        mask, count = model.detect_anomalies(x, sk, k=4.0)
+        assert float(mask[3, 2]) == 1.0
+        assert float(count) == float(jnp.sum(mask))
+
+    def test_anomaly_count_zero_on_uniform(self):
+        x = jnp.ones((128, 4))
+        (sk,) = model.edge_summarize(x)
+        _, count = model.detect_anomalies(x, sk, k=1.0)
+        assert float(count) == 0.0
+
+    def test_moments_roundtrip_through_graph(self):
+        x = jax.random.normal(jax.random.PRNGKey(10), (200, 6)) * 3.0 + 1.0
+        (sk,) = model.edge_summarize(x)
+        mean, var, mn, mx = moments(sk, x.shape[0])
+        np.testing.assert_allclose(mean, jnp.mean(x, 0), rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(var, jnp.var(x, 0), rtol=1e-2, atol=1e-2)
+
+    def test_synth_classes_separable(self):
+        x, y = model.synth_classes(jax.random.PRNGKey(11), 128, DIMS, noise=0.1)
+        assert x.shape == (128, DIMS.in_dim)
+        assert int(jnp.max(y)) < DIMS.classes
+        # nearest-prototype accuracy should be ~1 at low noise: reconstruct
+        # prototypes from class means and classify.
+        protos = jnp.stack([jnp.mean(x[y == c], 0) for c in range(DIMS.classes)])
+        d = jnp.linalg.norm(x[:, None, :] - protos[None], axis=-1)
+        acc = float(jnp.mean(jnp.argmin(d, -1) == y))
+        assert acc > 0.95

@@ -1,0 +1,190 @@
+//! Annotated Values — §III-I.
+//!
+//! "Smart tasks arrange for data to arrive at user containers as sets of
+//! 'Annotated Values' ... The value is in fact a message that points to a
+//! storage location for the data, thus avoiding the need to send actual
+//! data through from link to link." The annotation carries:
+//!   * a unique identifier for forensic tracing,
+//!   * the source task that produced it,
+//!   * pointers to the links and storage locations of the actual data,
+//!   * a local timestamp referring to the source agent's clock.
+
+use crate::util::{AvId, ContentHash, LinkId, ObjectId, RegionId, SimTime, TaskId};
+
+
+/// Sovereignty / sensitivity classification of a payload (§IV, fig. 11):
+/// raw data may be forbidden from leaving its region while summaries are
+/// free to travel.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub enum DataClass {
+    /// Full-resolution source data — sovereignty-restricted by default.
+    Raw,
+    /// Derived/aggregated data (sketches, windows, model params) — portable.
+    Summary,
+    /// Ghost/wireframe marker batches (§III-K) — metadata only, always portable.
+    Ghost,
+}
+
+/// The actual bytes an AV points to. Tensors are what the PJRT-backed
+/// compute tasks exchange; `Ghost` carries only a pretend size so wireframe
+/// runs can exercise routing without payload cost (§III-K).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    Tensor { shape: Vec<usize>, data: Vec<f32> },
+    Bytes(Vec<u8>),
+    Text(String),
+    Ghost { pretend_bytes: u64 },
+}
+
+impl Payload {
+    pub fn tensor(shape: &[usize], data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Payload::Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Payload::Tensor { shape: vec![1], data: vec![v] }
+    }
+
+    /// Size on the wire / in storage.
+    pub fn size_bytes(&self) -> u64 {
+        match self {
+            Payload::Tensor { data, .. } => (data.len() * 4) as u64,
+            Payload::Bytes(b) => b.len() as u64,
+            Payload::Text(s) => s.len() as u64,
+            Payload::Ghost { pretend_bytes } => *pretend_bytes,
+        }
+    }
+
+    /// Ghosts cost nothing to move — that is their point.
+    pub fn transfer_bytes(&self) -> u64 {
+        match self {
+            Payload::Ghost { .. } => 0,
+            p => p.size_bytes(),
+        }
+    }
+
+    pub fn is_ghost(&self) -> bool {
+        matches!(self, Payload::Ghost { .. })
+    }
+
+    pub fn content_hash(&self) -> ContentHash {
+        match self {
+            Payload::Tensor { shape, data } => {
+                let mut h = ContentHash::EMPTY;
+                for &d in shape {
+                    h = h.combine(ContentHash(d as u64));
+                }
+                h.combine(ContentHash::of_f32s(data))
+            }
+            Payload::Bytes(b) => ContentHash::of_bytes(b),
+            Payload::Text(s) => ContentHash::of_str(s),
+            Payload::Ghost { pretend_bytes } => {
+                ContentHash(0x6007_0000).combine(ContentHash(*pretend_bytes))
+            }
+        }
+    }
+
+    pub fn as_tensor(&self) -> Option<(&[usize], &[f32])> {
+        match self {
+            Payload::Tensor { shape, data } => Some((shape, data)),
+            _ => None,
+        }
+    }
+}
+
+/// The routable unit: metadata plus a URI-style pointer into object storage.
+#[derive(Clone, Debug)]
+pub struct AnnotatedValue {
+    /// Unique id for forensic tracing.
+    pub id: AvId,
+    /// Task that produced this value as output.
+    pub source_task: TaskId,
+    /// Link this AV was published on.
+    pub link: LinkId,
+    /// Storage location of the actual data ("URI reference", not the data).
+    pub object: ObjectId,
+    /// Region whose store holds the object (where it was produced).
+    pub region: RegionId,
+    /// Local timestamp of creation — the *source agent's* clock (§III-I).
+    pub created: SimTime,
+    /// Sequence number on the producing link (FCFS ordering).
+    pub seq: u64,
+    /// Size of the payload pointed to, for transfer planning.
+    pub size_bytes: u64,
+    /// Content hash of the payload, for make-style staleness checks.
+    pub content: ContentHash,
+    /// Sovereignty class.
+    pub class: DataClass,
+    /// True for wireframe batches.
+    pub ghost: bool,
+    /// Birth time of the *oldest source sample* this value derives from —
+    /// carried forward so sinks can measure true end-to-end latency.
+    pub born: SimTime,
+}
+
+impl AnnotatedValue {
+    /// A human-readable URI for logs and the traveller passport.
+    pub fn uri(&self) -> String {
+        format!("koalja://{}/{}#{}", self.region, self.object, self.content)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn av(class: DataClass, ghost: bool) -> AnnotatedValue {
+        AnnotatedValue {
+            id: AvId::new(1),
+            source_task: TaskId::new(2),
+            link: LinkId::new(3),
+            object: ObjectId::new(4),
+            region: RegionId::new(0),
+            created: SimTime::millis(5),
+            seq: 0,
+            size_bytes: 128,
+            content: ContentHash::of_str("x"),
+            class,
+            ghost,
+            born: SimTime::millis(5),
+        }
+    }
+
+    #[test]
+    fn payload_sizes() {
+        assert_eq!(Payload::tensor(&[2, 3], vec![0.0; 6]).size_bytes(), 24);
+        assert_eq!(Payload::Bytes(vec![0; 10]).size_bytes(), 10);
+        assert_eq!(Payload::Ghost { pretend_bytes: 1 << 20 }.size_bytes(), 1 << 20);
+        // ...but ghosts are free to move:
+        assert_eq!(Payload::Ghost { pretend_bytes: 1 << 20 }.transfer_bytes(), 0);
+    }
+
+    #[test]
+    fn content_hash_distinguishes_shape() {
+        let a = Payload::tensor(&[2, 3], vec![1.0; 6]);
+        let b = Payload::tensor(&[3, 2], vec![1.0; 6]);
+        assert_ne!(a.content_hash(), b.content_hash());
+    }
+
+    #[test]
+    fn content_hash_stable() {
+        let p = Payload::tensor(&[4], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(p.content_hash(), p.content_hash());
+    }
+
+    #[test]
+    fn uri_mentions_region_object_and_hash() {
+        let v = av(DataClass::Raw, false);
+        let uri = v.uri();
+        assert!(uri.starts_with("koalja://region-0/obj-4#"));
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let p = Payload::scalar(7.5);
+        let (shape, data) = p.as_tensor().unwrap();
+        assert_eq!(shape, &[1]);
+        assert_eq!(data, &[7.5]);
+    }
+}

@@ -1,0 +1,179 @@
+//! Comparator baselines.
+//!
+//! The paper positions Koalja against "simple-minded tools like Airflow
+//! that treat processing as a series of scheduled tasks without being
+//! 'data aware'" (§I), and against the push-everything-to-the-datacentre
+//! reflex (§III-G). Two concrete strawmen exercise the same workloads:
+//!
+//!  * [`ScheduledRunner`] — a cron/Airflow-style driver: every `period`,
+//!    run *every* task in topological order on whatever its inputs
+//!    currently hold, regardless of whether anything changed. Unchanged
+//!    recipes still execute (`wasted_runs`); data arriving mid-period
+//!    waits for the next tick (staleness).
+//!  * Central placement — `DeployConfig::force_central` ignores `@region`
+//!    attrs so all compute (and therefore all raw data) lands in the
+//!    nearest datacentre; the E7 bench compares its WAN bill against
+//!    edge placement.
+
+use crate::coordinator::{Coordinator, DeployConfig};
+use crate::policy::Snapshot;
+use crate::util::{SimDuration, SimTime, TaskId};
+use anyhow::Result;
+
+/// Deploy config for schedule-driven operation: links queue silently
+/// (Manual notify) so arrivals update wire currency but trigger nothing —
+/// the cron tick is the only driver, as in Airflow.
+pub fn scheduled_config() -> DeployConfig {
+    DeployConfig {
+        default_notify: crate::bus::NotifyMode::Manual,
+        ..Default::default()
+    }
+}
+
+/// Cron-style schedule-driven execution over a deployed pipeline.
+pub struct ScheduledRunner {
+    pub period: SimDuration,
+    pub ticks: u64,
+    pub runs: u64,
+    pub wasted: u64,
+    pub skipped_no_input: u64,
+}
+
+impl ScheduledRunner {
+    pub fn new(period: SimDuration) -> Self {
+        Self { period, ticks: 0, runs: 0, wasted: 0, skipped_no_input: 0 }
+    }
+
+    /// One schedule tick at the coordinator's current virtual time: run
+    /// every task (topo order) on the latest value of each input.
+    pub fn tick(&mut self, coord: &mut Coordinator) -> Result<()> {
+        self.ticks += 1;
+        coord.plat.metrics.bump("schedule_ticks");
+        let order = coord.graph.topo_order();
+        for task in order {
+            self.run_task(coord, task)?;
+        }
+        Ok(())
+    }
+
+    fn run_task(&mut self, coord: &mut Coordinator, task: TaskId) -> Result<()> {
+        let ports: Vec<String> =
+            coord.graph.task(task).stream_inputs().map(|i| i.wire.clone()).collect();
+        if ports.is_empty() {
+            return Ok(()); // pure sources are driven by injection
+        }
+        let mut inputs = Vec::with_capacity(ports.len());
+        for wire in &ports {
+            match coord.latest_on_wire.get(wire) {
+                Some(av) => inputs.push((std::rc::Rc::from(wire.as_str()), vec![av.clone()])),
+                None => {
+                    self.skipped_no_input += 1;
+                    return Ok(()); // nothing ever arrived; cron skips
+                }
+            }
+        }
+        let snapshot = Snapshot::new(inputs, coord.plat.now);
+        // Data-unawareness: if nothing changed, Koalja would have skipped
+        // this entirely — the cron baseline burns the run anyway.
+        if coord.agents[task.index()].would_memoize(&coord.plat, &snapshot) {
+            self.wasted += 1;
+            coord.plat.metrics.wasted_runs += 1;
+        }
+        self.runs += 1;
+        coord.suppress_routing = true;
+        let r = coord.fire_snapshot_forced(task, snapshot);
+        coord.suppress_routing = false;
+        r
+    }
+
+    /// Drive ticks from the current time until `horizon`. Deliveries are
+    /// drained up to each tick (so wire currency advances with time), but
+    /// with [`scheduled_config`] nothing fires between ticks.
+    pub fn run(&mut self, coord: &mut Coordinator, horizon: SimTime) -> Result<()> {
+        let mut t = coord.plat.now + self.period;
+        while t <= horizon {
+            coord.run_until(t);
+            coord.plat.now = t;
+            self.tick(coord)?;
+            t += self.period;
+        }
+        coord.run_until(horizon);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::av::{DataClass, Payload};
+    use crate::coordinator::DeployConfig;
+    use crate::spec::parse;
+
+    fn pipeline() -> Coordinator {
+        let spec = parse("[b]\n(raw) work (out)\n").unwrap();
+        Coordinator::deploy(&spec, scheduled_config()).unwrap()
+    }
+
+    #[test]
+    fn scheduled_runner_burns_unchanged_recipes() {
+        let mut coord = pipeline();
+        coord.inject("raw", Payload::scalar(1.0), DataClass::Summary).unwrap();
+        coord.run_until_idle(); // reactive delivery populates latest_on_wire
+        let mut cron = ScheduledRunner::new(SimDuration::secs(1));
+        // 5 ticks, data never changes: 1 real run + 4 wasted
+        cron.run(&mut coord, SimTime::secs(5)).unwrap();
+        assert_eq!(cron.runs, 5);
+        assert!(cron.wasted >= 4, "wasted {}", cron.wasted);
+        assert_eq!(coord.plat.metrics.wasted_runs, cron.wasted);
+    }
+
+    #[test]
+    fn scheduled_runner_skips_tasks_with_no_data() {
+        let mut coord = pipeline();
+        let mut cron = ScheduledRunner::new(SimDuration::secs(1));
+        cron.run(&mut coord, SimTime::secs(3)).unwrap();
+        assert_eq!(cron.runs, 0);
+        assert_eq!(cron.skipped_no_input, 3);
+    }
+
+    #[test]
+    fn scheduled_staleness_vs_reactive() {
+        // data arrives at t=0.1s; cron with 1s period produces output at
+        // t=1s — reactive Koalja produced it within milliseconds.
+        let spec = parse("[b]\n(raw) work (out)\n").unwrap();
+        let mut coord = Coordinator::deploy(&spec, DeployConfig::default()).unwrap();
+        coord
+            .inject_at(
+                "raw",
+                Payload::scalar(2.0),
+                DataClass::Summary,
+                crate::util::RegionId::new(0),
+                SimTime::millis(100),
+            )
+            .unwrap();
+        coord.run_until_idle();
+        let reactive_latency = coord.plat.metrics.e2e_latency.mean();
+        assert!(reactive_latency < SimDuration::millis(100));
+
+        let mut coord2 = pipeline();
+        coord2
+            .inject_at(
+                "raw",
+                Payload::scalar(2.0),
+                DataClass::Summary,
+                crate::util::RegionId::new(0),
+                SimTime::millis(100),
+            )
+            .unwrap();
+        // cron never lets the reactive path run; drain deliveries only
+        // (they queue in topics but Wake fires... to isolate, use make-less
+        // approach: tick at 1s with latest_on_wire set by injection)
+        let mut cron = ScheduledRunner::new(SimDuration::secs(1));
+        cron.run(&mut coord2, SimTime::secs(2)).unwrap();
+        let cron_latency = coord2.plat.metrics.e2e_latency.mean();
+        assert!(
+            cron_latency > reactive_latency.scale(2.0),
+            "cron {cron_latency} vs reactive {reactive_latency}"
+        );
+    }
+}

@@ -1,0 +1,80 @@
+//! In-tree micro-benchmark harness (criterion is not vendored in this
+//! offline environment). Good enough for the repo's needs: warmup,
+//! calibrated iteration counts, median-of-samples timing, and table-style
+//! output that EXPERIMENTS.md records verbatim.
+
+use std::time::{Duration, Instant};
+
+/// One measured series entry.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub label: String,
+    pub value: f64,
+    pub unit: String,
+}
+
+/// Time a closure: warm up, pick an iteration count targeting ~`budget`,
+/// then report the median per-iteration time over `samples` batches.
+pub fn bench_fn<F: FnMut()>(mut f: F, budget: Duration, samples: usize) -> Duration {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let iters = ((budget.as_secs_f64() / samples as f64) / once.as_secs_f64())
+        .clamp(1.0, 1e7) as u64;
+    let mut per_iter: Vec<Duration> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        per_iter.push(t.elapsed() / iters as u32);
+    }
+    per_iter.sort();
+    per_iter[samples / 2]
+}
+
+/// Convenience: ns/op for quick ratios.
+pub fn bench_ns<F: FnMut()>(f: F) -> f64 {
+    bench_fn(f, Duration::from_millis(300), 5).as_nanos() as f64
+}
+
+/// Print a table header + alignment rule.
+pub fn table_header(title: &str, cols: &[&str]) {
+    println!("\n== {title} ==");
+    println!("{}", cols.join("\t"));
+}
+
+/// Print one row.
+pub fn row(cells: &[String]) {
+    println!("{}", cells.join("\t"));
+}
+
+/// Format helpers.
+pub fn f(x: f64) -> String {
+    if x.abs() >= 1000.0 {
+        format!("{x:.0}")
+    } else if x.abs() >= 10.0 {
+        format!("{x:.1}")
+    } else {
+        format!("{x:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_fn_returns_positive() {
+        let d = bench_fn(|| { std::hint::black_box(1 + 1); }, Duration::from_millis(20), 3);
+        assert!(d.as_nanos() > 0);
+    }
+
+    #[test]
+    fn format_helper() {
+        assert_eq!(f(1234.5), "1234"); // ties-to-even
+        assert_eq!(f(42.0), "42.0");
+        assert_eq!(f(1.23456), "1.235");
+    }
+}

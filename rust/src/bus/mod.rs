@@ -1,0 +1,217 @@
+//! Publish–subscribe data plane with a separate notification side channel —
+//! §III-F.
+//!
+//! "In order to scale data transfers ... we look to a publish-subscribe
+//! (pull) model for data handovers, with a separate side channel for
+//! instant messaging." AV *metadata* is published to a per-link topic;
+//! payloads stay in object storage, so forwarding the same data to
+//! multiple branches replicates nothing but a pointer.
+//!
+//! Principle 1 decides per link whether consumers learn of arrivals by a
+//! pushed notification or by sampling (polling) the topic — see
+//! [`NotifyMode`].
+
+use crate::av::AnnotatedValue;
+use crate::util::{LinkId, SimDuration, TaskId};
+
+use std::collections::VecDeque;
+
+/// How a consumer learns that a topic has news (Principle 1, §III-F).
+///
+/// * `Push` — a message on the side channel wakes the consumer immediately.
+///   Right when inter-arrival time ≫ service time (no idle sampling).
+/// * `Poll(interval)` — the consumer samples the queue on a timer. Right
+///   when arrivals are frequent relative to the infrastructure timescale;
+///   notification traffic would be pure overhead.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NotifyMode {
+    Push,
+    Poll(SimDuration),
+    /// Deliveries queue silently; an external driver (make-mode demand or
+    /// the schedule-driven baseline) decides when work happens.
+    Manual,
+}
+
+impl NotifyMode {
+    /// The paper's rule of thumb: notify when arrivals are slower than the
+    /// service timescale, sample otherwise.
+    pub fn auto(mean_interarrival: SimDuration, service_time: SimDuration) -> Self {
+        if mean_interarrival > service_time {
+            NotifyMode::Push
+        } else {
+            // Sample at roughly the service timescale.
+            NotifyMode::Poll(service_time)
+        }
+    }
+}
+
+/// One per-link topic: FCFS queue of AV metadata plus subscriber list.
+#[derive(Clone, Debug, Default)]
+pub struct Topic {
+    pub queue: VecDeque<AnnotatedValue>,
+    pub subscribers: Vec<TaskId>,
+    pub published: u64,
+    pub consumed: u64,
+}
+
+/// The message bus. Topics are indexed densely by `LinkId` (links are
+/// created once, at pipeline deployment).
+#[derive(Clone, Debug, Default)]
+pub struct Bus {
+    topics: Vec<Topic>,
+    /// side-channel messages sent (for the E3 overhead accounting)
+    pub notifications: u64,
+}
+
+impl Bus {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Ensure a topic exists for `link`.
+    pub fn create_topic(&mut self, link: LinkId) {
+        if self.topics.len() <= link.index() {
+            self.topics.resize_with(link.index() + 1, Topic::default);
+        }
+    }
+
+    pub fn subscribe(&mut self, link: LinkId, task: TaskId) {
+        self.create_topic(link);
+        let t = &mut self.topics[link.index()];
+        if !t.subscribers.contains(&task) {
+            t.subscribers.push(task);
+        }
+    }
+
+    /// Publish AV metadata to the link topic; returns the subscriber list
+    /// (the coordinator decides whether to send side-channel notifications
+    /// based on the link's [`NotifyMode`]).
+    pub fn publish(&mut self, link: LinkId, av: AnnotatedValue) -> &[TaskId] {
+        self.create_topic(link);
+        let t = &mut self.topics[link.index()];
+        t.queue.push_back(av);
+        t.published += 1;
+        &t.subscribers
+    }
+
+    /// Non-destructive peek at queue depth — the "is there anything new on
+    /// the channel?" sample a smart task performs (§III-F).
+    pub fn depth(&self, link: LinkId) -> usize {
+        self.topics.get(link.index()).map_or(0, |t| t.queue.len())
+    }
+
+    /// Non-destructive peek at the head AV (for FCFS pulls across links).
+    pub fn peek_head(&self, link: LinkId) -> Option<&AnnotatedValue> {
+        self.topics.get(link.index())?.queue.front()
+    }
+
+    /// Consume the next AV on the topic (FCFS).
+    pub fn consume(&mut self, link: LinkId) -> Option<AnnotatedValue> {
+        let t = self.topics.get_mut(link.index())?;
+        let av = t.queue.pop_front()?;
+        t.consumed += 1;
+        Some(av)
+    }
+
+    /// Drain up to `max` AVs.
+    pub fn consume_up_to(&mut self, link: LinkId, max: usize) -> Vec<AnnotatedValue> {
+        let mut out = Vec::new();
+        while out.len() < max {
+            match self.consume(link) {
+                Some(av) => out.push(av),
+                None => break,
+            }
+        }
+        out
+    }
+
+    pub fn record_notification(&mut self) {
+        self.notifications += 1;
+    }
+
+    pub fn topic_stats(&self, link: LinkId) -> (u64, u64) {
+        self.topics
+            .get(link.index())
+            .map_or((0, 0), |t| (t.published, t.consumed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::av::DataClass;
+    use crate::util::*;
+
+    fn av(seq: u64) -> AnnotatedValue {
+        AnnotatedValue {
+            id: AvId::new(seq),
+            source_task: TaskId::new(0),
+            link: LinkId::new(0),
+            object: ObjectId::new(seq),
+            region: RegionId::new(0),
+            created: SimTime::micros(seq),
+            seq,
+            size_bytes: 8,
+            content: ContentHash::of_str("p"),
+            class: DataClass::Summary,
+            ghost: false,
+            born: SimTime::micros(seq),
+        }
+    }
+
+    #[test]
+    fn fcfs_ordering() {
+        let mut bus = Bus::new();
+        let l = LinkId::new(0);
+        bus.create_topic(l);
+        for i in 0..5 {
+            bus.publish(l, av(i));
+        }
+        let drained = bus.consume_up_to(l, 10);
+        let seqs: Vec<u64> = drained.iter().map(|a| a.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2, 3, 4]);
+        assert_eq!(bus.topic_stats(l), (5, 5));
+    }
+
+    #[test]
+    fn subscribers_deduplicated() {
+        let mut bus = Bus::new();
+        let l = LinkId::new(2);
+        bus.subscribe(l, TaskId::new(1));
+        bus.subscribe(l, TaskId::new(1));
+        bus.subscribe(l, TaskId::new(2));
+        assert_eq!(bus.publish(l, av(0)).len(), 2);
+    }
+
+    #[test]
+    fn depth_is_nondestructive() {
+        let mut bus = Bus::new();
+        let l = LinkId::new(0);
+        bus.publish(l, av(0));
+        assert_eq!(bus.depth(l), 1);
+        assert_eq!(bus.depth(l), 1);
+        bus.consume(l);
+        assert_eq!(bus.depth(l), 0);
+    }
+
+    #[test]
+    fn auto_mode_follows_principle_1() {
+        // slow arrivals (1s) vs fast service (1ms) -> push notifications
+        assert_eq!(
+            NotifyMode::auto(SimDuration::secs(1), SimDuration::millis(1)),
+            NotifyMode::Push
+        );
+        // fast arrivals (1ms) vs slow service (100ms) -> polling
+        match NotifyMode::auto(SimDuration::millis(1), SimDuration::millis(100)) {
+            NotifyMode::Poll(iv) => assert_eq!(iv, SimDuration::millis(100)),
+            _ => panic!("expected poll"),
+        }
+    }
+
+    #[test]
+    fn consume_on_missing_topic_is_none() {
+        let mut bus = Bus::new();
+        assert!(bus.consume(LinkId::new(9)).is_none());
+        assert_eq!(bus.depth(LinkId::new(9)), 0);
+    }
+}

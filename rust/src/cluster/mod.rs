@@ -1,0 +1,244 @@
+//! The container-scheduling underlay — what the paper delegates to
+//! Kubernetes, rebuilt as an in-process simulator (DESIGN.md substitution
+//! table).
+//!
+//! Koalja's platform-transparency promise (§III-B: "no reference should
+//! ever be made to Kubernetes ... in the description of processes") means
+//! the user API never touches this module; only the coordinator does.
+//! Modelled here: nodes per region, pod placement, elastic replica scaling
+//! driven by queue depth, and scale-to-zero when links go quiet ("when no
+//! work is arriving, resources can be scaled down to zero as long as cache
+//! is not lost", §III-E).
+
+use crate::util::{RegionId, SimDuration, SimTime, TaskId};
+
+use std::collections::HashMap;
+
+/// One machine in a region.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub region: RegionId,
+    /// How many pods this node can host.
+    pub capacity: u32,
+    pub pods: u32,
+}
+
+/// Lifecycle of a task's pod set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PodState {
+    Running,
+    /// Scaled to zero — next dispatch pays a cold-start penalty.
+    Zero,
+}
+
+/// The deployment record for one task.
+#[derive(Clone, Debug)]
+pub struct Deployment {
+    pub task: TaskId,
+    pub region: RegionId,
+    pub node: usize,
+    pub replicas: u32,
+    pub state: PodState,
+    pub last_active: SimTime,
+    pub cold_starts: u64,
+}
+
+/// Elastic-scaling policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ScalePolicy {
+    /// Queue depth per replica that triggers scale-up.
+    pub depth_per_replica: usize,
+    pub max_replicas: u32,
+    /// Idle time before scale-to-zero.
+    pub idle_to_zero: SimDuration,
+    /// Cold-start penalty when dispatching to a Zero deployment.
+    pub cold_start: SimDuration,
+}
+
+impl Default for ScalePolicy {
+    fn default() -> Self {
+        Self {
+            depth_per_replica: 8,
+            max_replicas: 8,
+            idle_to_zero: SimDuration::secs(30),
+            cold_start: SimDuration::millis(800),
+        }
+    }
+}
+
+/// The cluster: nodes + deployments, with k8s-ish placement.
+#[derive(Clone, Debug, Default)]
+pub struct Cluster {
+    pub nodes: Vec<Node>,
+    pub deployments: HashMap<TaskId, Deployment>,
+    pub policy: ScalePolicy,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    pub to_zero: u64,
+}
+
+impl Cluster {
+    pub fn new(policy: ScalePolicy) -> Self {
+        Self { policy, ..Default::default() }
+    }
+
+    pub fn add_node(&mut self, region: RegionId, capacity: u32) -> usize {
+        self.nodes.push(Node { region, capacity, pods: 0 });
+        self.nodes.len() - 1
+    }
+
+    /// Place a task in `region` on the least-loaded node there (the paper's
+    /// "Kubernetes plays a role here in scheduling related tasks in local
+    /// rackspace", §III-G). Falls back to adding a node if the region has
+    /// none — the simulated cloud is elastic.
+    pub fn place(&mut self, task: TaskId, region: RegionId, now: SimTime) -> usize {
+        let node = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.region == region && n.pods < n.capacity)
+            .min_by_key(|(_, n)| n.pods)
+            .map(|(i, _)| i)
+            .unwrap_or_else(|| self.add_node(region, 16));
+        self.nodes[node].pods += 1;
+        self.deployments.insert(
+            task,
+            Deployment {
+                task,
+                region,
+                node,
+                replicas: 1,
+                state: PodState::Running,
+                last_active: now,
+                cold_starts: 0,
+            },
+        );
+        node
+    }
+
+    pub fn deployment(&self, task: TaskId) -> Option<&Deployment> {
+        self.deployments.get(&task)
+    }
+
+    /// Called by the coordinator before dispatching work. Returns the
+    /// dispatch penalty (cold start if scaled to zero) and marks activity.
+    pub fn activate(&mut self, task: TaskId, now: SimTime) -> SimDuration {
+        let policy = self.policy;
+        let Some(d) = self.deployments.get_mut(&task) else {
+            return SimDuration::ZERO;
+        };
+        d.last_active = now;
+        if d.state == PodState::Zero {
+            d.state = PodState::Running;
+            d.cold_starts += 1;
+            policy.cold_start
+        } else {
+            SimDuration::ZERO
+        }
+    }
+
+    /// Queue-depth-driven replica adjustment; returns new replica count.
+    pub fn autoscale(&mut self, task: TaskId, queue_depth: usize) -> u32 {
+        let policy = self.policy;
+        let Some(d) = self.deployments.get_mut(&task) else {
+            return 0;
+        };
+        let want = ((queue_depth as f64 / policy.depth_per_replica as f64).ceil() as u32)
+            .clamp(1, policy.max_replicas);
+        if want > d.replicas {
+            self.scale_ups += 1;
+        } else if want < d.replicas {
+            self.scale_downs += 1;
+        }
+        d.replicas = want;
+        want
+    }
+
+    /// Sweep deployments; scale idle ones to zero. Cache is *not* lost —
+    /// only pods are reclaimed (the paper's condition for zero-scaling).
+    pub fn scale_to_zero_sweep(&mut self, now: SimTime) -> usize {
+        let idle = self.policy.idle_to_zero;
+        let mut count = 0;
+        for d in self.deployments.values_mut() {
+            if d.state == PodState::Running && now.saturating_sub(d.last_active) > idle {
+                d.state = PodState::Zero;
+                d.replicas = 0;
+                self.to_zero += 1;
+                count += 1;
+            }
+        }
+        count
+    }
+
+    /// Effective parallelism for a task (≥1 even when zero-scaled; the
+    /// dispatch path revives it first).
+    pub fn replicas(&self, task: TaskId) -> u32 {
+        self.deployments.get(&task).map_or(1, |d| d.replicas.max(1))
+    }
+
+    pub fn running_pods(&self) -> u32 {
+        self.deployments
+            .values()
+            .filter(|d| d.state == PodState::Running)
+            .map(|d| d.replicas)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster() -> Cluster {
+        let mut c = Cluster::new(ScalePolicy::default());
+        c.add_node(RegionId::new(0), 4);
+        c.add_node(RegionId::new(0), 4);
+        c
+    }
+
+    #[test]
+    fn placement_balances_nodes() {
+        let mut c = cluster();
+        let n1 = c.place(TaskId::new(0), RegionId::new(0), SimTime::ZERO);
+        let n2 = c.place(TaskId::new(1), RegionId::new(0), SimTime::ZERO);
+        assert_ne!(n1, n2, "least-loaded placement should alternate");
+    }
+
+    #[test]
+    fn placement_in_empty_region_adds_node() {
+        let mut c = cluster();
+        let n = c.place(TaskId::new(0), RegionId::new(9), SimTime::ZERO);
+        assert_eq!(c.nodes[n].region, RegionId::new(9));
+    }
+
+    #[test]
+    fn scale_to_zero_and_cold_start() {
+        let mut c = cluster();
+        c.place(TaskId::new(0), RegionId::new(0), SimTime::ZERO);
+        assert_eq!(c.scale_to_zero_sweep(SimTime::secs(60)), 1);
+        assert_eq!(c.deployment(TaskId::new(0)).unwrap().state, PodState::Zero);
+        let penalty = c.activate(TaskId::new(0), SimTime::secs(61));
+        assert_eq!(penalty, c.policy.cold_start);
+        assert_eq!(c.deployment(TaskId::new(0)).unwrap().state, PodState::Running);
+        // second dispatch is warm
+        assert_eq!(c.activate(TaskId::new(0), SimTime::secs(62)), SimDuration::ZERO);
+    }
+
+    #[test]
+    fn active_deployment_not_zeroed() {
+        let mut c = cluster();
+        c.place(TaskId::new(0), RegionId::new(0), SimTime::ZERO);
+        c.activate(TaskId::new(0), SimTime::secs(50));
+        assert_eq!(c.scale_to_zero_sweep(SimTime::secs(60)), 0);
+    }
+
+    #[test]
+    fn autoscale_tracks_queue_depth() {
+        let mut c = cluster();
+        c.place(TaskId::new(0), RegionId::new(0), SimTime::ZERO);
+        assert_eq!(c.autoscale(TaskId::new(0), 100), 8); // clamped at max
+        assert_eq!(c.autoscale(TaskId::new(0), 9), 2);
+        assert_eq!(c.autoscale(TaskId::new(0), 0), 1);
+        assert!(c.scale_ups >= 1 && c.scale_downs >= 1);
+    }
+}

@@ -1,0 +1,100 @@
+//! Make-mode triggering — §III-B's first trigger case.
+//!
+//! "A 'make' model, in which a request for the target at the logical
+//! output end of the pipes triggers a hierarchical rebuild of dependencies
+//! 'backwards', recursively."
+//!
+//! [`Coordinator::demand`] walks producers of the requested wire
+//! depth-first, refreshing every dependency, then executes each task on
+//! the *latest* value of each input (Makefile semantics = SwapNewForOld
+//! over currency). Staleness is decided by the recipe hash (input content
+//! hashes × software version): an unchanged recipe is a memo hit and runs
+//! nothing — that is precisely make's "don't rebuild what didn't change"
+//! (E1/E4).
+
+use super::Coordinator;
+use crate::av::AnnotatedValue;
+use crate::policy::Snapshot;
+use crate::util::TaskId;
+use anyhow::{anyhow, Result};
+use std::collections::HashSet;
+
+impl Coordinator {
+    /// Bring `wire` up to date, rebuilding stale dependencies backwards.
+    /// Returns the (now current) AV on the wire.
+    pub fn demand(&mut self, wire: &str) -> Result<AnnotatedValue> {
+        let mut visited = HashSet::new();
+        self.suppress_routing = true;
+        let r = self.demand_wire(wire, &mut visited);
+        self.suppress_routing = false;
+        r
+    }
+
+    /// Demand-build every producer of `wire`, then return its latest AV.
+    fn demand_wire(
+        &mut self,
+        wire: &str,
+        visited: &mut HashSet<TaskId>,
+    ) -> Result<AnnotatedValue> {
+        let producers: Vec<TaskId> = self
+            .graph
+            .tasks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.outputs.iter().any(|o| o == wire))
+            .map(|(i, _)| TaskId::new(i as u64))
+            .collect();
+        if producers.is_empty() {
+            // external in-tray: someone must have dropped a file
+            return self
+                .latest_on_wire
+                .get(wire)
+                .cloned()
+                .ok_or_else(|| anyhow!("no data ever injected on external wire '{wire}'"));
+        }
+        for p in producers {
+            self.demand_task_inner(p, visited)?;
+        }
+        self.latest_on_wire
+            .get(wire)
+            .cloned()
+            .ok_or_else(|| anyhow!("producers of '{wire}' made no output"))
+    }
+
+    /// Demand-build one task (dependencies first).
+    pub fn demand_task(&mut self, name: &str) -> Result<()> {
+        let id = self.task_id(name)?;
+        let mut visited = HashSet::new();
+        self.suppress_routing = true;
+        let r = self.demand_task_inner(id, &mut visited);
+        self.suppress_routing = false;
+        r
+    }
+
+    fn demand_task_inner(&mut self, task: TaskId, visited: &mut HashSet<TaskId>) -> Result<()> {
+        if !visited.insert(task) {
+            return Ok(()); // diamond dependency or cycle: build once per demand
+        }
+        let ports: Vec<String> = self
+            .graph
+            .task(task)
+            .stream_inputs()
+            .map(|i| i.wire.clone())
+            .collect();
+        for wire in &ports {
+            self.demand_wire(wire, visited)?;
+        }
+        // assemble the Makefile-style snapshot: the latest value per port
+        let mut inputs = Vec::with_capacity(ports.len());
+        for wire in &ports {
+            let av = self
+                .latest_on_wire
+                .get(wire)
+                .cloned()
+                .ok_or_else(|| anyhow!("input '{wire}' has no current value"))?;
+            inputs.push((std::rc::Rc::from(wire.as_str()), vec![av]));
+        }
+        let snapshot = Snapshot::new(inputs, self.plat.now);
+        self.fire_snapshot(task, snapshot)
+    }
+}

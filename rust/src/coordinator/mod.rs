@@ -1,0 +1,827 @@
+//! The pipeline manager — the paper's coordination contribution.
+//!
+//! "A pipeline manager that handles registration of processes, scheduling
+//! of work and assembly of metadata" (§III-B). This is the L3 event loop:
+//! a discrete-event engine over virtual time driving smart task agents and
+//! smart link agents against the shared [`Platform`].
+//!
+//! Both trigger modes of §III-B live here:
+//!  * **reactive** — arrivals at the source end push computation
+//!    downstream ([`Coordinator::inject`] + [`Coordinator::run_until`]);
+//!  * **make** — a request for a target pulls a hierarchical rebuild
+//!    backwards through dependencies, reusing memoized intermediates
+//!    ([`Coordinator::demand`], in `make.rs`).
+//!
+//! Ghost batches (§III-K), software-update recomputation (§III-J), poll vs
+//! push wakeups (Principle 1) and scale-to-zero sweeps also dispatch here.
+
+pub mod make;
+
+use crate::av::{AnnotatedValue, DataClass, Payload};
+use crate::bus::NotifyMode;
+use crate::graph::PipelineGraph;
+use crate::link::{Delivery, LinkAgent};
+use crate::net::WanTopology;
+use crate::platform::{PlacementStrategy, Platform};
+use crate::policy::{InputBuffer, RateControl, Snapshot, SnapshotEngine};
+use crate::provenance::{CheckpointEvent, Relation};
+use crate::spec::PipelineSpec;
+use crate::storage::{PurgePolicy, StorageConfig};
+use crate::task::builtins::PassThrough;
+use crate::task::{RunOutcome, TaskAgent, UserCode};
+use crate::util::{AvId, LinkId, RegionId, SimDuration, SimTime, TaskId};
+use anyhow::{anyhow, bail, Result};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, HashSet};
+
+/// Sentinel source id for externally injected data (file drops, sensors).
+pub const EXTERNAL: TaskId = TaskId(u64::MAX);
+/// Sentinel link id for sink-wire emissions (no consumer).
+pub const SINK: LinkId = LinkId(u64::MAX);
+
+/// Deployment-time configuration.
+pub struct DeployConfig {
+    pub topology: WanTopology,
+    pub storage: StorageConfig,
+    pub seed: u64,
+    pub cache_policy: PurgePolicy,
+    /// Record provenance metadata (disable to measure its overhead, E6).
+    pub provenance: bool,
+    pub default_notify: NotifyMode,
+    pub placement: PlacementStrategy,
+    /// Baseline arm: ignore `@region` attrs, put everything in the nearest
+    /// datacentre ("push everything to the centre", E7 control).
+    pub force_central: bool,
+}
+
+impl Default for DeployConfig {
+    fn default() -> Self {
+        Self {
+            topology: crate::net::demo_topology(2),
+            storage: StorageConfig::default(),
+            seed: 1,
+            cache_policy: PurgePolicy::Never,
+            provenance: true,
+            default_notify: NotifyMode::Push,
+            placement: PlacementStrategy::NetworkAttached,
+            force_central: false,
+        }
+    }
+}
+
+#[derive(Debug)]
+enum EventKind {
+    // AV boxed so heap sift operations move 24 bytes, not 140 (§Perf:
+    // BinaryHeap::pop was 11% of the hot path with inline AVs).
+    Deliver { link: usize, av: Box<AnnotatedValue> },
+    Wake { task: TaskId },
+    Poll { task: TaskId },
+    ScaleSweep,
+}
+
+struct Ev {
+    at: SimTime,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+/// A value that reached a sink wire (pipeline output).
+#[derive(Clone, Debug)]
+pub struct Collected {
+    pub at: SimTime,
+    pub av: AnnotatedValue,
+    pub payload: Payload,
+}
+
+/// The deployed pipeline.
+pub struct Coordinator {
+    pub graph: PipelineGraph,
+    pub agents: Vec<TaskAgent>,
+    pub links: Vec<LinkAgent>,
+    pub plat: Platform,
+    queue: BinaryHeap<Reverse<Ev>>,
+    seq: u64,
+    /// Sink-wire captures, keyed by wire name.
+    pub collected: HashMap<String, Vec<Collected>>,
+    /// Latest AV seen per wire (make-mode inputs; ghost-routing audit).
+    pub latest_on_wire: HashMap<String, AnnotatedValue>,
+    /// Tasks with an outstanding Poll event (avoid duplicates).
+    polls_pending: HashSet<TaskId>,
+    /// Last arrival per polling task (to let idle polls wind down).
+    last_arrival: HashMap<TaskId, SimTime>,
+    pub events_processed: u64,
+    scale_sweep_every: Option<SimDuration>,
+    /// Make-mode flag: outputs update wires/sinks but schedule no reactive
+    /// deliveries (demand drives the ordering itself).
+    pub(crate) suppress_routing: bool,
+    // ---- hot-path adjacency (precomputed at deploy; see §Perf) ----
+    /// link indices delivering into each task
+    in_links: Vec<Vec<usize>>,
+    /// per task: (output wire, link indices carrying it)
+    out_links: Vec<Vec<(String, Vec<usize>)>>,
+    /// per link: position of the consumer's input buffer in its engine
+    link_buffer: Vec<usize>,
+}
+
+impl Coordinator {
+    /// Deploy a validated spec. Every task gets default pass-through code;
+    /// plug real logic with [`Coordinator::set_code`].
+    pub fn deploy(spec: &PipelineSpec, cfg: DeployConfig) -> Result<Self> {
+        spec.validate().map_err(|e| anyhow!("invalid spec: {e}"))?;
+        let graph = PipelineGraph::build(spec);
+        let mut plat = Platform::new(cfg.topology, cfg.storage, cfg.seed);
+        plat.placement = cfg.placement;
+        if !cfg.provenance {
+            plat.prov = crate::provenance::ProvenanceRegistry::disabled();
+        }
+
+        // Region assignment: @region attr, else nearest datacentre.
+        let default_region = plat
+            .net
+            .regions
+            .iter()
+            .find(|r| !r.is_edge)
+            .map(|r| r.id)
+            .unwrap_or(RegionId::new(0));
+        let mut agents = Vec::with_capacity(graph.n_tasks());
+        for (i, t) in graph.tasks.iter().enumerate() {
+            let id = TaskId::new(i as u64);
+            let region = if cfg.force_central {
+                default_region
+            } else {
+                match t.attr("region") {
+                    Some(name) => plat
+                        .net
+                        .by_name(name)
+                        .ok_or_else(|| anyhow!("task '{}': unknown region '{name}'", t.name))?,
+                    None => default_region,
+                }
+            };
+            plat.cluster.place(id, region, plat.now);
+
+            let notify = match t.attr("notify") {
+                Some("push") => NotifyMode::Push,
+                Some(s) if s.starts_with("poll:") => {
+                    let ms: u64 = s[5..]
+                        .trim_end_matches("ms")
+                        .parse()
+                        .map_err(|_| anyhow!("task '{}': bad notify '{s}'", t.name))?;
+                    NotifyMode::Poll(SimDuration::millis(ms))
+                }
+                _ => cfg.default_notify,
+            };
+
+            // one buffer per distinct stream-input port
+            let mut buffers: Vec<InputBuffer> = Vec::new();
+            for inp in t.stream_inputs() {
+                if !buffers.iter().any(|b| &*b.name == inp.wire.as_str()) {
+                    buffers.push(InputBuffer::new(&inp.wire, inp.buffer));
+                }
+            }
+            let rate = match t.attr("rate") {
+                Some(s) => RateControl::new(SimDuration::millis(
+                    s.trim_end_matches("ms")
+                        .parse()
+                        .map_err(|_| anyhow!("task '{}': bad rate '{s}'", t.name))?,
+                )),
+                None => RateControl::default(),
+            };
+            let engine = SnapshotEngine::new(t.policy(), buffers, rate);
+            let code: Box<dyn UserCode> = Box::new(PassThrough::new(
+                t.outputs.first().map(|s| s.as_str()).unwrap_or("void"),
+            ));
+            agents.push(TaskAgent::new(
+                id,
+                t.clone(),
+                region,
+                engine,
+                code,
+                notify,
+                cfg.cache_policy,
+            ));
+
+            // concept map: the long-term design story (§III-C story 3)
+            for inp in &t.inputs {
+                plat.prov.concept(&t.name, Relation::Consumes, &inp.wire);
+            }
+            for out in &t.outputs {
+                plat.prov.concept(&t.name, Relation::Produces, out);
+            }
+        }
+        // precedes edges between tasks
+        for l in &graph.links {
+            if let Some(from) = l.from {
+                plat.prov.concept(
+                    &graph.task(from).name,
+                    Relation::Precedes,
+                    &graph.task(l.to).name,
+                );
+            }
+        }
+
+        // link agents + bus topics
+        let mut links = Vec::with_capacity(graph.links.len());
+        for l in &graph.links {
+            let consumer = &agents[l.to.index()];
+            plat.bus.subscribe(l.id, l.to);
+            links.push(LinkAgent::new(l.clone(), consumer.region, consumer.notify));
+        }
+
+        // §Perf: precompute adjacency so the event loop never scans the
+        // global link list (was O(links) per delivery/pull/publish).
+        let mut in_links: Vec<Vec<usize>> = vec![vec![]; graph.n_tasks()];
+        let mut out_links: Vec<Vec<(String, Vec<usize>)>> = vec![vec![]; graph.n_tasks()];
+        let mut link_buffer = Vec::with_capacity(graph.links.len());
+        for (li, l) in graph.links.iter().enumerate() {
+            in_links[l.to.index()].push(li);
+            if let Some(from) = l.from {
+                let slots = &mut out_links[from.index()];
+                match slots.iter_mut().find(|(w, _)| *w == l.wire) {
+                    Some((_, v)) => v.push(li),
+                    None => slots.push((l.wire.clone(), vec![li])),
+                }
+            }
+            let buf_idx = agents[l.to.index()]
+                .engine
+                .buffers
+                .iter()
+                .position(|b| &*b.name == l.to_input.as_str())
+                .unwrap_or(0);
+            link_buffer.push(buf_idx);
+        }
+        // sink wires get an (empty) slot so route_output can distinguish
+        for (ti, t) in graph.tasks.iter().enumerate() {
+            for w in &t.outputs {
+                if !out_links[ti].iter().any(|(ww, _)| ww == w) {
+                    out_links[ti].push((w.clone(), vec![]));
+                }
+            }
+        }
+
+        Ok(Self {
+            graph,
+            agents,
+            links,
+            plat,
+            queue: BinaryHeap::new(),
+            seq: 0,
+            collected: HashMap::new(),
+            latest_on_wire: HashMap::new(),
+            polls_pending: HashSet::new(),
+            last_arrival: HashMap::new(),
+            events_processed: 0,
+            scale_sweep_every: None,
+            suppress_routing: false,
+            in_links,
+            out_links,
+            link_buffer,
+        })
+    }
+
+    /// Plug user code into a task.
+    pub fn set_code(&mut self, task: &str, code: Box<dyn UserCode>) -> Result<()> {
+        let id = self.task_id(task)?;
+        self.agents[id.index()].code = code;
+        Ok(())
+    }
+
+    pub fn task_id(&self, name: &str) -> Result<TaskId> {
+        self.graph.task_id(name).ok_or_else(|| anyhow!("no task '{name}'"))
+    }
+
+    pub fn agent(&self, name: &str) -> Result<&TaskAgent> {
+        Ok(&self.agents[self.task_id(name)?.index()])
+    }
+
+    /// Enable periodic scale-to-zero sweeps.
+    pub fn enable_scale_sweeps(&mut self, every: SimDuration) {
+        self.scale_sweep_every = Some(every);
+        self.push_event(self.plat.now + every, EventKind::ScaleSweep);
+    }
+
+    fn push_event(&mut self, at: SimTime, kind: EventKind) {
+        self.seq += 1;
+        self.queue.push(Reverse(Ev { at, seq: self.seq, kind }));
+    }
+
+    // ------------------------------------------------------------------
+    // Injection (the user-facing edge: file drops, sensors, samples)
+    // ------------------------------------------------------------------
+
+    /// Inject external data onto a wire at `at` (≥ now), in `region`.
+    /// Reactive mode: deliveries are scheduled and downstream computation
+    /// cascades on `run_until`.
+    pub fn inject_at(
+        &mut self,
+        wire: &str,
+        payload: Payload,
+        class: DataClass,
+        region: RegionId,
+        at: SimTime,
+    ) -> Result<AvId> {
+        let n_inj = self.graph.injection_links(wire).count();
+        if n_inj == 0 {
+            bail!("wire '{wire}' has no injection point (a task produces it)");
+        }
+        let born = at;
+        let saved_now = self.plat.now;
+        self.plat.now = at;
+        let run = self.plat.next_run_id();
+        let (av, _lat) =
+            self.plat.mint_av(payload, EXTERNAL, run, 0, SINK, region, class, 0, &[], born);
+        self.plat.now = saved_now;
+        // Only immediately-visible injections update wire currency now;
+        // future-dated arrivals become current when delivered (otherwise a
+        // schedule-driven consumer could see data "from the future").
+        if at <= self.plat.now {
+            self.latest_on_wire.insert(wire.to_string(), av.clone());
+        }
+        let link_idxs: Vec<usize> =
+            self.graph.injection_links(wire).map(|l| l.id.index()).collect();
+        for li in link_idxs {
+            self.push_event(at, EventKind::Deliver { link: li, av: Box::new(av.clone()) });
+        }
+        Ok(av.id)
+    }
+
+    /// Inject now, into the first region.
+    pub fn inject(&mut self, wire: &str, payload: Payload, class: DataClass) -> Result<AvId> {
+        self.inject_at(wire, payload, class, RegionId::new(0), self.plat.now)
+    }
+
+    /// Inject a ghost batch (§III-K): routes are exercised, payloads are
+    /// pretend-sized, compute is skipped.
+    pub fn inject_ghost(
+        &mut self,
+        wire: &str,
+        pretend_bytes: u64,
+        region: RegionId,
+    ) -> Result<AvId> {
+        self.inject_at(
+            wire,
+            Payload::Ghost { pretend_bytes },
+            DataClass::Ghost,
+            region,
+            self.plat.now,
+        )
+    }
+
+    // ------------------------------------------------------------------
+    // Event loop
+    // ------------------------------------------------------------------
+
+    /// Process events up to and including `horizon`. Returns events handled.
+    pub fn run_until(&mut self, horizon: SimTime) -> u64 {
+        let mut handled = 0;
+        while self.queue.peek().is_some_and(|Reverse(e)| e.at <= horizon) {
+            let Reverse(ev) = self.queue.pop().unwrap();
+            self.plat.now = ev.at;
+            self.dispatch(ev.kind);
+            handled += 1;
+        }
+        if self.plat.now < horizon {
+            self.plat.now = horizon;
+        }
+        self.events_processed += handled;
+        handled
+    }
+
+    /// Drain the queue completely (with a runaway guard).
+    pub fn run_until_idle(&mut self) -> u64 {
+        let mut handled = 0;
+        let cap = 10_000_000u64;
+        while let Some(Reverse(ev)) = self.queue.pop() {
+            self.plat.now = ev.at;
+            self.dispatch(ev.kind);
+            handled += 1;
+            if handled > cap {
+                panic!("run_until_idle: event storm (> {cap} events)");
+            }
+        }
+        self.events_processed += handled;
+        handled
+    }
+
+    pub fn pending_events(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn dispatch(&mut self, kind: EventKind) {
+        match kind {
+            EventKind::Deliver { link, av } => self.on_deliver(link, *av),
+            EventKind::Wake { task } => self.on_wake(task),
+            EventKind::Poll { task } => self.on_poll(task),
+            EventKind::ScaleSweep => {
+                self.plat.cluster.scale_to_zero_sweep(self.plat.now);
+                if let Some(iv) = self.scale_sweep_every {
+                    if !self.queue.is_empty() {
+                        self.push_event(self.plat.now + iv, EventKind::ScaleSweep);
+                    }
+                }
+            }
+        }
+    }
+
+    fn on_deliver(&mut self, link_idx: usize, av: AnnotatedValue) {
+        let task = self.links[link_idx].link.to;
+        let av_for_currency = av.clone();
+        let verdict = self.links[link_idx].deliver(&mut self.plat, av);
+        match verdict {
+            Delivery::Denied => {}
+            Delivery::NotifyNow => {
+                self.last_arrival.insert(task, self.plat.now);
+                self.push_event(self.plat.now, EventKind::Wake { task });
+            }
+            Delivery::Queued => {
+                self.last_arrival.insert(task, self.plat.now);
+                if let NotifyMode::Poll(iv) = self.agents[task.index()].notify {
+                    if self.polls_pending.insert(task) {
+                        self.push_event(self.plat.now + iv, EventKind::Poll { task });
+                    }
+                }
+            }
+        }
+        if verdict != Delivery::Denied {
+            // a successful delivery makes this AV the wire's current value
+            let wire = &self.links[link_idx].link.wire;
+            match self.latest_on_wire.get_mut(wire) {
+                Some(slot) => *slot = av_for_currency,
+                None => {
+                    let key = wire.clone();
+                    self.latest_on_wire.insert(key, av_for_currency);
+                }
+            }
+        }
+    }
+
+    /// Pull the single oldest queued AV (FCFS across this task's incoming
+    /// topics) into its snapshot buffers — the "tap or resample" pull of
+    /// §III-E's pub-sub handover.
+    fn pull_one(&mut self, task: TaskId) -> bool {
+        let mut best: Option<(usize, SimTime, u64)> = None;
+        for &li in &self.in_links[task.index()] {
+            let lid = self.links[li].link.id;
+            if let Some(head) = self.plat.bus.peek_head(lid) {
+                let key = (head.created, head.seq);
+                if best.as_ref().is_none_or(|b| key < (b.1, b.2)) {
+                    best = Some((li, head.created, head.seq));
+                }
+            }
+        }
+        match best {
+            Some((li, ..)) => {
+                let lid = self.links[li].link.id;
+                let av = self.plat.bus.consume(lid).expect("peeked head vanished");
+                self.agents[task.index()].engine.push_idx(self.link_buffer[li], av);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn on_wake(&mut self, task: TaskId) {
+        self.pump(task);
+    }
+
+    fn on_poll(&mut self, task: TaskId) {
+        self.polls_pending.remove(&task);
+        self.plat.metrics.polls_performed += 1;
+        let had_news = self.in_links[task.index()]
+            .iter()
+            .any(|&li| self.plat.bus.depth(self.links[li].link.id) > 0);
+        if !had_news {
+            self.plat.metrics.polls_empty += 1;
+        }
+        self.pump(task);
+        // Re-arm while the stream looks alive (recently active or backlog).
+        if let NotifyMode::Poll(iv) = self.agents[task.index()].notify {
+            let recently_active = self
+                .last_arrival
+                .get(&task)
+                .map(|t| self.plat.now.saturating_sub(*t) <= iv.scale(10.0))
+                .unwrap_or(false);
+            let backlog = self.agents[task.index()].engine.backlog() > 0;
+            if (recently_active || backlog) && self.polls_pending.insert(task) {
+                self.push_event(self.plat.now + iv, EventKind::Poll { task });
+            }
+        }
+    }
+
+    /// Interleave pulls and fires until neither makes progress: each
+    /// queued AV gets its chance at a snapshot before the next overwrites
+    /// a bounded buffer position.
+    fn pump(&mut self, task: TaskId) {
+        // autoscaling signal: how much work was waiting when we woke (the
+        // bounded snapshot buffers hide the burst; the topics don't)
+        let queued: usize = self.in_links[task.index()]
+            .iter()
+            .map(|&li| self.plat.bus.depth(self.links[li].link.id))
+            .sum();
+        loop {
+            loop {
+                let now = self.plat.now;
+                let snapshot = match self.agents[task.index()].engine.take(now) {
+                    Some(s) => s,
+                    None => break,
+                };
+                if let Err(e) = self.fire_snapshot(task, snapshot) {
+                    self.plat.metrics.bump("task_errors");
+                    let run = self.plat.next_run_id();
+                    self.plat.prov.checkpoint(
+                        task,
+                        run,
+                        self.plat.now,
+                        CheckpointEvent::Remark(format!("task error: {e}")),
+                    );
+                    break;
+                }
+            }
+            if !self.pull_one(task) {
+                break;
+            }
+        }
+        // Rate-suppressed but ready: re-arm a wake for when firing is allowed.
+        let eng = &self.agents[task.index()].engine;
+        if eng.ready() {
+            let next = eng.rate.next_allowed(self.plat.now);
+            if next > self.plat.now {
+                self.push_event(next, EventKind::Wake { task });
+            }
+        }
+        // autoscale on the burst size seen at wake (or remaining backlog)
+        let backlog = self.agents[task.index()].engine.backlog().max(queued);
+        self.plat.cluster.autoscale(task, backlog);
+    }
+
+    /// Execute one snapshot on a task and publish the results.
+    pub fn fire_snapshot(&mut self, task: TaskId, snapshot: Snapshot) -> Result<()> {
+        self.fire_snapshot_inner(task, snapshot, false)
+    }
+
+    /// Execute bypassing memoization — the schedule-driven baseline's
+    /// data-unaware behaviour (E8).
+    pub fn fire_snapshot_forced(&mut self, task: TaskId, snapshot: Snapshot) -> Result<()> {
+        self.fire_snapshot_inner(task, snapshot, true)
+    }
+
+    fn fire_snapshot_inner(&mut self, task: TaskId, snapshot: Snapshot, forced: bool) -> Result<()> {
+        let cold = self.plat.cluster.activate(task, self.plat.now);
+        let recipe = self.agents[task.index()].recipe(&snapshot);
+        let parents: Vec<AvId> = snapshot.all_avs().map(|a| a.id).collect();
+        let born = snapshot.born;
+        let outcome = if forced {
+            self.agents[task.index()].execute_forced(&mut self.plat, snapshot)?
+        } else {
+            self.agents[task.index()].execute(&mut self.plat, snapshot)?
+        };
+        match outcome {
+            RunOutcome::Ran { run, outputs, cost, ghost } => {
+                let publish_at = self.plat.now + cold + cost;
+                let mut memo_rec = Vec::new();
+                for out in outputs {
+                    let region = self.agents[task.index()].region;
+                    let version = self.agents[task.index()].version();
+                    let seq = self.agents[task.index()].out_seq;
+                    self.agents[task.index()].out_seq += 1;
+                    // sink outputs keep a payload copy for `collected`;
+                    // internal wires don't — consumers fetch from storage
+                    // (§Perf: saves one payload clone per internal hop)
+                    let is_sink = self.out_links[task.index()]
+                        .iter()
+                        .find(|(w, _)| w.as_str() == &*out.wire)
+                        .map(|(_, v)| v.is_empty())
+                        .unwrap_or(true);
+                    let sink_payload = if is_sink { Some(out.payload.clone()) } else { None };
+                    let saved = self.plat.now;
+                    self.plat.now = publish_at;
+                    let (av, _lat) = self.plat.mint_av(
+                        out.payload,
+                        task,
+                        run,
+                        version,
+                        SINK,
+                        region,
+                        out.class,
+                        seq,
+                        &parents,
+                        born,
+                    );
+                    self.plat.now = saved;
+                    self.plat.prov.checkpoint(
+                        task,
+                        run,
+                        publish_at,
+                        CheckpointEvent::Emit { av: av.id },
+                    );
+                    if !ghost {
+                        memo_rec.push((
+                            out.wire.to_string(),
+                            av.object,
+                            av.content,
+                            av.size_bytes,
+                            av.class,
+                        ));
+                    }
+                    self.route_output(&out.wire, av, sink_payload, publish_at);
+                }
+                if !ghost && !memo_rec.is_empty() {
+                    self.agents[task.index()].memoize(recipe, memo_rec);
+                }
+            }
+            RunOutcome::Memoized { outputs } => {
+                // Reuse cached objects: fresh AVs, no compute, no new bytes.
+                let publish_at = self.plat.now + cold + SimDuration::micros(30);
+                for (wire, object, content, size, class) in outputs {
+                    let region = self.agents[task.index()].region;
+                    let seq = self.agents[task.index()].out_seq;
+                    self.agents[task.index()].out_seq += 1;
+                    let run = self.plat.next_run_id();
+                    let id = self.plat.next_av_id();
+                    let av = AnnotatedValue {
+                        id,
+                        source_task: task,
+                        link: SINK,
+                        object,
+                        region,
+                        created: publish_at,
+                        seq,
+                        size_bytes: size,
+                        content,
+                        class,
+                        ghost: false,
+                        born,
+                    };
+                    self.plat.prov.birth(
+                        av.id,
+                        &parents,
+                        publish_at,
+                        crate::provenance::Stamp::Emitted {
+                            task,
+                            run,
+                            version: self.agents[task.index()].version(),
+                            region,
+                        },
+                    );
+                    self.route_output(&wire, av, None, publish_at);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Send one produced AV down every link of its wire; sink wires are
+    /// captured instead.
+    fn route_output(
+        &mut self,
+        wire: &str,
+        av: AnnotatedValue,
+        sink_payload: Option<Payload>,
+        at: SimTime,
+    ) {
+        // no-alloc steady state: only the first artifact per wire allocates
+        match self.latest_on_wire.get_mut(wire) {
+            Some(slot) => *slot = av.clone(),
+            None => {
+                self.latest_on_wire.insert(wire.to_string(), av.clone());
+            }
+        }
+        let from = av.source_task;
+        let empty: Vec<usize> = vec![];
+        let link_idxs: &Vec<usize> = if from == EXTERNAL {
+            &empty
+        } else {
+            self.out_links[from.index()]
+                .iter()
+                .find(|(w, _)| w == wire)
+                .map(|(_, v)| v)
+                .unwrap_or(&empty)
+        };
+        if link_idxs.is_empty() {
+            self.plat.metrics.e2e(av.born, at);
+            // memoized/ghost paths pass None; resolve from storage
+            let payload = sink_payload.unwrap_or_else(|| {
+                self.plat
+                    .store
+                    .peek(av.object)
+                    .map(|o| o.payload.clone())
+                    .unwrap_or(Payload::Ghost { pretend_bytes: av.size_bytes })
+            });
+            let rec = Collected { at, av, payload };
+            match self.collected.get_mut(wire) {
+                Some(v) => v.push(rec),
+                None => {
+                    self.collected.insert(wire.to_string(), vec![rec]);
+                }
+            }
+            return;
+        }
+        if self.suppress_routing {
+            // make mode: demand drives execution order; no reactive cascade
+            return;
+        }
+        let link_idxs = link_idxs.clone();
+        for li in link_idxs {
+            self.push_event(at, EventKind::Deliver { link: li, av: Box::new(av.clone()) });
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Software updates (§III-J)
+    // ------------------------------------------------------------------
+
+    /// Deploy new user code (a software update). Memoized results become
+    /// stale (version is part of the recipe); if the task has a last
+    /// snapshot, it is recomputed immediately and corrected results
+    /// propagate downstream — the paper's "roll back the feed".
+    pub fn software_update(
+        &mut self,
+        task: &str,
+        code: Box<dyn UserCode>,
+        recompute_last: bool,
+    ) -> Result<()> {
+        let id = self.task_id(task)?;
+        let old_v = self.agents[id.index()].version();
+        let new_v = code.version();
+        self.agents[id.index()].code = code;
+        self.agents[id.index()].invalidate_memo();
+        let run = self.plat.next_run_id();
+        self.plat.prov.checkpoint(
+            id,
+            run,
+            self.plat.now,
+            CheckpointEvent::VersionChange { from: old_v, to: new_v },
+        );
+        self.plat.metrics.bump("software_updates");
+        if recompute_last {
+            if let Some(snap) = self.agents[id.index()].last_snapshot.clone() {
+                self.fire_snapshot(id, snap)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Run a task that has no stream inputs (a pure source) once.
+    pub fn run_source(&mut self, task: &str) -> Result<()> {
+        let id = self.task_id(task)?;
+        let snap = Snapshot { inputs: vec![], born: self.plat.now, ghost: false };
+        self.fire_snapshot(id, snap)
+    }
+
+    /// Total values collected on a sink wire.
+    pub fn collected_count(&self, wire: &str) -> usize {
+        self.collected.get(wire).map_or(0, |v| v.len())
+    }
+
+    /// Workspace-checked read of a sink wire (§IV): `principal` must hold
+    /// a `Wire` grant through some workspace; denials are counted.
+    pub fn read_sink(&mut self, principal: &str, wire: &str) -> Option<&[Collected]> {
+        let resource = crate::workspace::Resource::Wire(wire.to_string());
+        if !self.plat.workspaces.check(principal, &resource) {
+            return None;
+        }
+        self.collected.get(wire).map(|v| v.as_slice())
+    }
+
+    /// Ghost-routing audit (§III-K "trust, but verify"): which tasks did a
+    /// ghost injection reach? Read from the traveller log.
+    pub fn ghost_route(&self, av: AvId) -> Vec<String> {
+        use crate::provenance::Stamp;
+        let q = crate::provenance::ProvenanceQuery::new(&self.plat.prov);
+        let mut names = Vec::new();
+        let mut avs = vec![av];
+        avs.extend(q.descendants(av));
+        for a in avs {
+            if let Some(p) = self.plat.prov.passport(a) {
+                for s in &p.stamps {
+                    if let Stamp::Consumed { task, .. } = s.stamp {
+                        let name = self.graph.task(task).name.clone();
+                        if !names.contains(&name) {
+                            names.push(name);
+                        }
+                    }
+                }
+            }
+        }
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,299 @@
+//! The deployed pipeline graph: tasks and the links between their ports.
+//!
+//! §III-F: "The connected graph of tasks forms a sparse square matrix
+//! D_ab". We materialize that sparse structure as one [`Link`] per
+//! (producer-output → consumer-input) pair sharing a wire name, plus
+//! injection links (`from == None`) for wires produced by nothing — the
+//! file-drop/sensor in-trays at the user-facing edge.
+//!
+//! Cycles are legal (DCG); [`PipelineGraph::cycles`] reports them, and the
+//! make-mode scheduler treats them with a visited set.
+
+use crate::spec::{PipelineSpec, TaskSpec};
+use crate::util::{LinkId, TaskId};
+use std::collections::{HashMap, HashSet};
+
+/// One wire segment between a producer port and a consumer port.
+#[derive(Clone, Debug)]
+pub struct Link {
+    pub id: LinkId,
+    /// Wire name (the label in the fig. 5 diagram).
+    pub wire: String,
+    /// Producing task, or None for external injection.
+    pub from: Option<TaskId>,
+    /// Consuming task.
+    pub to: TaskId,
+    /// Input-port name on the consumer (== wire in the fig. 5 language).
+    pub to_input: String,
+}
+
+/// The compiled topology.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineGraph {
+    pub name: String,
+    pub tasks: Vec<TaskSpec>,
+    pub links: Vec<Link>,
+    by_name: HashMap<String, TaskId>,
+}
+
+impl PipelineGraph {
+    /// Build the link set from a validated spec.
+    pub fn build(spec: &PipelineSpec) -> Self {
+        let by_name: HashMap<String, TaskId> = spec
+            .tasks
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.name.clone(), TaskId::new(i as u64)))
+            .collect();
+        // producers per wire
+        let mut producers: HashMap<&str, Vec<TaskId>> = HashMap::new();
+        for t in &spec.tasks {
+            for w in &t.outputs {
+                producers.entry(w.as_str()).or_default().push(by_name[&t.name]);
+            }
+        }
+        let mut links = Vec::new();
+        for t in &spec.tasks {
+            let to = by_name[&t.name];
+            for i in t.stream_inputs() {
+                match producers.get(i.wire.as_str()) {
+                    Some(ps) => {
+                        for &from in ps {
+                            links.push(Link {
+                                id: LinkId::new(links.len() as u64),
+                                wire: i.wire.clone(),
+                                from: Some(from),
+                                to,
+                                to_input: i.wire.clone(),
+                            });
+                        }
+                    }
+                    None => links.push(Link {
+                        id: LinkId::new(links.len() as u64),
+                        wire: i.wire.clone(),
+                        from: None,
+                        to,
+                        to_input: i.wire.clone(),
+                    }),
+                }
+            }
+        }
+        Self { name: spec.name.clone(), tasks: spec.tasks.clone(), links, by_name }
+    }
+
+    pub fn task_id(&self, name: &str) -> Option<TaskId> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn task(&self, id: TaskId) -> &TaskSpec {
+        &self.tasks[id.index()]
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Links delivering into `task`.
+    pub fn links_into(&self, task: TaskId) -> impl Iterator<Item = &Link> {
+        self.links.iter().filter(move |l| l.to == task)
+    }
+
+    /// Links carrying `task`'s outputs.
+    pub fn links_from(&self, task: TaskId) -> impl Iterator<Item = &Link> {
+        self.links.iter().filter(move |l| l.from == Some(task))
+    }
+
+    /// Links fed by external injection on `wire`.
+    pub fn injection_links<'a>(&'a self, wire: &'a str) -> impl Iterator<Item = &'a Link> + 'a {
+        self.links.iter().filter(move |l| l.from.is_none() && l.wire == wire)
+    }
+
+    /// Upstream task dependencies of `task` (producers of its inputs).
+    pub fn upstream(&self, task: TaskId) -> Vec<TaskId> {
+        let mut seen = HashSet::new();
+        self.links_into(task)
+            .filter_map(|l| l.from)
+            .filter(|t| seen.insert(*t))
+            .collect()
+    }
+
+    /// Downstream consumers of `task`'s outputs.
+    pub fn downstream(&self, task: TaskId) -> Vec<TaskId> {
+        let mut seen = HashSet::new();
+        self.links_from(task).map(|l| l.to).filter(|t| seen.insert(*t)).collect()
+    }
+
+    /// All tasks reachable downstream of `task` (for version-change
+    /// invalidation, §III-J).
+    pub fn reachable_downstream(&self, task: TaskId) -> Vec<TaskId> {
+        let mut seen = HashSet::new();
+        let mut stack = vec![task];
+        let mut out = Vec::new();
+        while let Some(t) = stack.pop() {
+            for d in self.downstream(t) {
+                if seen.insert(d) {
+                    out.push(d);
+                    stack.push(d);
+                }
+            }
+        }
+        out
+    }
+
+    /// Topological order over the acyclic part; tasks on cycles are
+    /// appended afterwards in id order (documented, deterministic).
+    pub fn topo_order(&self) -> Vec<TaskId> {
+        let n = self.n_tasks();
+        let mut indeg = vec![0usize; n];
+        for l in &self.links {
+            if l.from.is_some() {
+                indeg[l.to.index()] += 1;
+            }
+        }
+        let mut queue: Vec<TaskId> =
+            (0..n).filter(|&i| indeg[i] == 0).map(|i| TaskId::new(i as u64)).collect();
+        let mut order = Vec::with_capacity(n);
+        let mut qi = 0;
+        while qi < queue.len() {
+            let t = queue[qi];
+            qi += 1;
+            order.push(t);
+            for l in self.links_from(t) {
+                indeg[l.to.index()] -= 1;
+                if indeg[l.to.index()] == 0 {
+                    queue.push(l.to);
+                }
+            }
+        }
+        if order.len() < n {
+            for i in 0..n {
+                let id = TaskId::new(i as u64);
+                if !order.contains(&id) {
+                    order.push(id);
+                }
+            }
+        }
+        order
+    }
+
+    /// Task ids participating in at least one cycle (informational; the
+    /// platform supports DCGs, §I).
+    pub fn cyclic_tasks(&self) -> Vec<TaskId> {
+        // iteratively strip zero-indegree nodes; what remains is cyclic
+        let n = self.n_tasks();
+        let mut indeg = vec![0usize; n];
+        let mut alive = vec![true; n];
+        for l in &self.links {
+            if l.from.is_some() {
+                indeg[l.to.index()] += 1;
+            }
+        }
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for i in 0..n {
+                if alive[i] && indeg[i] == 0 {
+                    alive[i] = false;
+                    changed = true;
+                    for l in self.links_from(TaskId::new(i as u64)) {
+                        indeg[l.to.index()] -= 1;
+                    }
+                }
+            }
+        }
+        // also strip nodes with no alive successors (tails feeding cycles
+        // are not themselves cyclic) — iterate until fixpoint.
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for i in 0..n {
+                if alive[i] {
+                    let has_alive_succ =
+                        self.downstream(TaskId::new(i as u64)).iter().any(|d| alive[d.index()]);
+                    if !has_alive_succ {
+                        alive[i] = false;
+                        changed = true;
+                    }
+                }
+            }
+        }
+        (0..n).filter(|&i| alive[i]).map(|i| TaskId::new(i as u64)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::parse;
+
+    fn linear() -> PipelineGraph {
+        PipelineGraph::build(&parse("[lin]\n(raw) a (mid)\n(mid) b (out)\n").unwrap())
+    }
+
+    #[test]
+    fn builds_injection_and_internal_links() {
+        let g = linear();
+        assert_eq!(g.n_tasks(), 2);
+        assert_eq!(g.links.len(), 2);
+        let inj: Vec<_> = g.injection_links("raw").collect();
+        assert_eq!(inj.len(), 1);
+        assert_eq!(inj[0].to, g.task_id("a").unwrap());
+        let a = g.task_id("a").unwrap();
+        let b = g.task_id("b").unwrap();
+        assert_eq!(g.downstream(a), vec![b]);
+        assert_eq!(g.upstream(b), vec![a]);
+    }
+
+    #[test]
+    fn fanout_links_one_per_consumer() {
+        let g = PipelineGraph::build(
+            &parse("[f]\n(raw) src (x)\n(x) c1 (y1)\n(x) c2 (y2)\n").unwrap(),
+        );
+        let src = g.task_id("src").unwrap();
+        assert_eq!(g.links_from(src).count(), 2, "same wire to two consumers");
+    }
+
+    #[test]
+    fn fanin_merges_producers() {
+        let g = PipelineGraph::build(
+            &parse("[m]\n(a) p1 (x)\n(b) p2 (x)\n(x) sink ()\n").unwrap(),
+        );
+        let sink = g.task_id("sink").unwrap();
+        assert_eq!(g.links_into(sink).count(), 2, "two producers, one input port");
+        assert_eq!(g.upstream(sink).len(), 2);
+    }
+
+    #[test]
+    fn topo_order_respects_dependencies() {
+        let g = linear();
+        let order = g.topo_order();
+        let pos = |n: &str| order.iter().position(|t| *t == g.task_id(n).unwrap()).unwrap();
+        assert!(pos("a") < pos("b"));
+    }
+
+    #[test]
+    fn cycles_detected_but_not_fatal() {
+        let g = PipelineGraph::build(
+            &parse("[c]\n(seed, fb) gen (x)\n(x) refine (fb, out)\n").unwrap(),
+        );
+        let cyclic = g.cyclic_tasks();
+        assert_eq!(cyclic.len(), 2, "gen and refine form a loop");
+        assert_eq!(g.topo_order().len(), 2, "topo order still total");
+    }
+
+    #[test]
+    fn acyclic_graph_reports_no_cycles() {
+        assert!(linear().cyclic_tasks().is_empty());
+    }
+
+    #[test]
+    fn reachable_downstream_is_transitive() {
+        let g = PipelineGraph::build(
+            &parse("[r]\n(raw) a (x)\n(x) b (y)\n(y) c (z)\n").unwrap(),
+        );
+        let a = g.task_id("a").unwrap();
+        let mut r = g.reachable_downstream(a);
+        r.sort();
+        assert_eq!(r, vec![g.task_id("b").unwrap(), g.task_id("c").unwrap()]);
+    }
+}

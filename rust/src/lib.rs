@@ -1,0 +1,54 @@
+//! Koalja: smart data plumbing for the extended cloud.
+//!
+//! Reproduction of Burgess & Prangsma, "Koalja: from Data Plumbing to Smart
+//! Workspaces in the Extended Cloud" (CS.DC 2019), as a three-layer
+//! Rust + JAX + Pallas stack. See DESIGN.md for the system inventory.
+//!
+//! Quick tour:
+//! * [`spec`] — the fig. 5 wiring language (`(in[10/2]) task (out)`)
+//! * [`coordinator`] — the pipeline manager: reactive + make triggering
+//! * [`task`] / [`link`] — smart task & link agents
+//! * [`policy`] — snapshot policies (AllNew / SwapNewForOld / Merge / windows)
+//! * [`provenance`] — the three metadata stories (traveller / checkpoint / map)
+//! * [`runtime`] — PJRT loader for the AOT-compiled JAX+Pallas artifacts
+//! * [`storage`], [`bus`], [`net`], [`cluster`], [`workspace`] — substrates
+//! * [`baseline`] — cron-style and centralized comparators
+//! * [`benchkit`] — the in-tree benchmark harness used by `cargo bench`
+
+pub mod av;
+pub mod baseline;
+pub mod benchkit;
+pub mod bus;
+pub mod cluster;
+pub mod coordinator;
+pub mod graph;
+pub mod link;
+pub mod metrics;
+pub mod net;
+pub mod platform;
+pub mod policy;
+pub mod provenance;
+pub mod runtime;
+pub mod spec;
+pub mod storage;
+pub mod task;
+pub mod util;
+pub mod workload;
+pub mod workspace;
+
+/// Convenient imports for examples and downstream users.
+pub mod prelude {
+    pub use crate::av::{DataClass, Payload};
+    pub use crate::bus::NotifyMode;
+    pub use crate::coordinator::{Collected, Coordinator, DeployConfig};
+    pub use crate::net::{demo_topology, WanLink, WanTopology};
+    pub use crate::platform::{PlacementStrategy, Service};
+    pub use crate::policy::{BufferSpec, Snapshot, SnapshotPolicy};
+    pub use crate::provenance::ProvenanceQuery;
+    pub use crate::runtime::Runtime;
+    pub use crate::spec::parse;
+    pub use crate::storage::{PurgePolicy, StorageConfig};
+    pub use crate::task::builtins::*;
+    pub use crate::task::{Output, TaskCtx, UserCode};
+    pub use crate::util::{rng, RegionId, SimDuration, SimTime};
+}

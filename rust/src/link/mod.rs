@@ -1,0 +1,226 @@
+//! Smart link agents — §III-J.
+//!
+//! "Smart links marshal the data as files for the task code. The logical
+//! connection between the outputs from one task and the inputs of the next
+//! are handled by these link agents." A link agent:
+//!
+//!  * enforces sovereignty before an AV may travel toward its consumer
+//!    (delivery-time check; a denied AV never enters a snapshot),
+//!  * publishes AV metadata on the link's bus topic (payloads stay in
+//!    object storage — pub-sub moves pointers, §III-F),
+//!  * keeps a bounded replay history so the feed can be "rolled back" when
+//!    software/service updates force recomputation,
+//!  * stamps every passport on the way through.
+
+use crate::av::AnnotatedValue;
+use crate::bus::NotifyMode;
+use crate::graph::Link;
+use crate::platform::Platform;
+use crate::provenance::Stamp;
+use crate::util::RegionId;
+use std::collections::VecDeque;
+
+/// Outcome of attempting a delivery.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Delivery {
+    /// Published; consumer should be woken now (push notification).
+    NotifyNow,
+    /// Published; consumer polls on its own schedule.
+    Queued,
+    /// Sovereignty policy forbade the transfer (§IV).
+    Denied,
+}
+
+/// One deployed link.
+pub struct LinkAgent {
+    pub link: Link,
+    pub consumer_region: RegionId,
+    pub notify: NotifyMode,
+    /// Bounded replay history (newest last).
+    history: VecDeque<AnnotatedValue>,
+    pub history_cap: usize,
+    pub delivered: u64,
+    pub denied: u64,
+}
+
+impl LinkAgent {
+    pub fn new(link: Link, consumer_region: RegionId, notify: NotifyMode) -> Self {
+        Self {
+            link,
+            consumer_region,
+            notify,
+            history: VecDeque::new(),
+            history_cap: 64,
+            delivered: 0,
+            denied: 0,
+        }
+    }
+
+    /// Attempt to deliver an AV toward the consumer. The payload does not
+    /// move here — the consumer's fetch pays the transfer on first touch
+    /// (and its local cache absorbs repeats, Principle 2). What must be
+    /// decided *now* is legality: raw data may not cross zones.
+    pub fn deliver(&mut self, plat: &mut Platform, mut av: AnnotatedValue) -> Delivery {
+        use crate::net::TransferVerdict;
+        match plat.net.check(av.class, av.region, self.consumer_region) {
+            TransferVerdict::Denied => {
+                self.denied += 1;
+                plat.metrics.bump("sovereignty_denied");
+                plat.prov.stamp(
+                    av.id,
+                    plat.now,
+                    Stamp::SovereigntyDenied { from: av.region, to: self.consumer_region },
+                );
+                Delivery::Denied
+            }
+            _ => {
+                av.link = self.link.id;
+                plat.prov.stamp(av.id, plat.now, Stamp::Published { link: self.link.id });
+                plat.bus.publish(self.link.id, av.clone());
+                self.history.push_back(av);
+                while self.history.len() > self.history_cap {
+                    self.history.pop_front();
+                }
+                self.delivered += 1;
+                match self.notify {
+                    NotifyMode::Push => {
+                        plat.bus.record_notification();
+                        plat.metrics.notifications_sent += 1;
+                        Delivery::NotifyNow
+                    }
+                    NotifyMode::Poll(_) | NotifyMode::Manual => Delivery::Queued,
+                }
+            }
+        }
+    }
+
+    /// Re-publish the last `n` AVs ("roll back the feed", §III-J) — used
+    /// when a software or service update requires recomputation of results
+    /// that already flowed past.
+    pub fn replay_last(&mut self, plat: &mut Platform, n: usize) -> usize {
+        let start = self.history.len().saturating_sub(n);
+        let to_replay: Vec<AnnotatedValue> =
+            self.history.iter().skip(start).cloned().collect();
+        let count = to_replay.len();
+        for av in to_replay {
+            plat.metrics.bump("replays");
+            plat.prov.stamp(av.id, plat.now, Stamp::Published { link: self.link.id });
+            plat.bus.publish(self.link.id, av);
+        }
+        count
+    }
+
+    pub fn history_len(&self) -> usize {
+        self.history.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::av::{DataClass, Payload};
+    use crate::net::demo_topology;
+    use crate::storage::StorageConfig;
+    use crate::util::*;
+
+    fn plat() -> Platform {
+        Platform::new(demo_topology(2), StorageConfig::default(), 5)
+    }
+
+    fn agent(plat: &Platform, notify: NotifyMode, consumer_region: &str) -> LinkAgent {
+        LinkAgent::new(
+            Link {
+                id: LinkId::new(0),
+                wire: "x".into(),
+                from: Some(TaskId::new(0)),
+                to: TaskId::new(1),
+                to_input: "x".into(),
+            },
+            plat.net.by_name(consumer_region).unwrap(),
+            notify,
+        )
+    }
+
+    fn mint(plat: &mut Platform, class: DataClass, region: &str) -> AnnotatedValue {
+        let r = plat.net.by_name(region).unwrap();
+        let (av, _) = plat.mint_av(
+            Payload::scalar(1.0),
+            TaskId::new(0),
+            RunId::new(0),
+            1,
+            LinkId::new(0),
+            r,
+            class,
+            0,
+            &[],
+            plat.now,
+        );
+        av
+    }
+
+    #[test]
+    fn push_delivery_notifies() {
+        let mut p = plat();
+        let mut l = agent(&p, NotifyMode::Push, "central");
+        let av = mint(&mut p, DataClass::Summary, "central");
+        assert_eq!(l.deliver(&mut p, av), Delivery::NotifyNow);
+        assert_eq!(p.bus.depth(LinkId::new(0)), 1);
+        assert_eq!(p.metrics.notifications_sent, 1);
+        assert_eq!(l.history_len(), 1);
+    }
+
+    #[test]
+    fn poll_delivery_queues_silently() {
+        let mut p = plat();
+        let mut l = agent(&p, NotifyMode::Poll(SimDuration::millis(5)), "central");
+        let av = mint(&mut p, DataClass::Summary, "central");
+        assert_eq!(l.deliver(&mut p, av), Delivery::Queued);
+        assert_eq!(p.metrics.notifications_sent, 0);
+    }
+
+    #[test]
+    fn sovereignty_denial_blocks_and_stamps() {
+        let mut p = plat();
+        // edge-0 is in "us"; eu-dc is in "eu" — raw cannot cross.
+        let mut l = agent(&p, NotifyMode::Push, "eu-dc");
+        let av = mint(&mut p, DataClass::Raw, "edge-0");
+        let id = av.id;
+        assert_eq!(l.deliver(&mut p, av), Delivery::Denied);
+        assert_eq!(p.bus.depth(LinkId::new(0)), 0, "nothing published");
+        let pass = p.prov.passport(id).unwrap();
+        assert!(pass
+            .stamps
+            .iter()
+            .any(|s| matches!(s.stamp, Stamp::SovereigntyDenied { .. })));
+        // ...but a summary may travel
+        let av = mint(&mut p, DataClass::Summary, "edge-0");
+        assert_eq!(l.deliver(&mut p, av), Delivery::NotifyNow);
+    }
+
+    #[test]
+    fn replay_republishes_history() {
+        let mut p = plat();
+        let mut l = agent(&p, NotifyMode::Push, "central");
+        for _ in 0..3 {
+            let av = mint(&mut p, DataClass::Summary, "central");
+            l.deliver(&mut p, av);
+        }
+        // consume the originals
+        while p.bus.consume(LinkId::new(0)).is_some() {}
+        assert_eq!(l.replay_last(&mut p, 2), 2);
+        assert_eq!(p.bus.depth(LinkId::new(0)), 2);
+        assert_eq!(p.metrics.get("replays"), 2);
+    }
+
+    #[test]
+    fn history_is_bounded() {
+        let mut p = plat();
+        let mut l = agent(&p, NotifyMode::Push, "central");
+        l.history_cap = 4;
+        for _ in 0..10 {
+            let av = mint(&mut p, DataClass::Summary, "central");
+            l.deliver(&mut p, av);
+        }
+        assert_eq!(l.history_len(), 4);
+    }
+}

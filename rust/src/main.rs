@@ -1,0 +1,235 @@
+//! `koalja` — the leader binary: deploy wiring specs, run them on synthetic
+//! arrivals, inspect AOT artifacts, dump provenance.
+//!
+//! Arg parsing is hand-rolled (offline build: no clap); the surface is
+//! deliberately small — the library API is the real interface, see
+//! `examples/`.
+
+use anyhow::{anyhow, bail, Context, Result};
+use koalja::prelude::*;
+use koalja::provenance::ProvenanceQuery;
+
+const USAGE: &str = "\
+koalja — smart data plumbing for the extended cloud (Koalja reproduction)
+
+USAGE:
+  koalja run <spec.koalja> [--seconds N] [--rate-ms M] [--ghost]
+      Deploy a wiring spec; feed synthetic tensors into every external
+      wire for N virtual seconds (default 10) at one arrival per M ms
+      (default 200); print the metrics report. --ghost sends wireframe
+      batches instead (§III-K).
+
+  koalja check <spec.koalja>
+      Parse + validate a spec; print tasks, wires, in-trays and sinks.
+
+  koalja artifacts [dir]
+      List the AOT manifest and compile every artifact on the PJRT CPU
+      client (default dir: ./artifacts).
+
+  koalja trace <spec.koalja>
+      Run a short synthetic session, then dump the provenance registry
+      (traveller passports, checkpoint logs, concept map) as JSON.
+
+  koalja demo
+      The paper's fig. 5 'tfmodel' wiring on synthetic data.
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> Result<()> {
+    match args.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&args[1..]),
+        Some("check") => cmd_check(&args[1..]),
+        Some("artifacts") => cmd_artifacts(&args[1..]),
+        Some("trace") => cmd_trace(&args[1..]),
+        Some("demo") => cmd_demo(),
+        Some("--help") | Some("-h") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+}
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
+fn load_spec(path: &str) -> Result<koalja::spec::PipelineSpec> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let spec = parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+    spec.validate().map_err(|e| anyhow!("{path}: {e}"))?;
+    Ok(spec)
+}
+
+fn cmd_check(args: &[String]) -> Result<()> {
+    let path = args.first().ok_or_else(|| anyhow!("check: missing spec path"))?;
+    let spec = load_spec(path)?;
+    println!("pipeline [{}]: {} tasks", spec.name, spec.tasks.len());
+    for t in &spec.tasks {
+        let ins: Vec<&str> = t.inputs.iter().map(|i| i.wire.as_str()).collect();
+        println!("  {} <- ({}) -> ({})", t.name, ins.join(", "), t.outputs.join(", "));
+    }
+    println!("in-trays (external wires): {:?}", spec.external_wires());
+    println!("sinks: {:?}", spec.sink_wires());
+    let graph = koalja::graph::PipelineGraph::build(&spec);
+    let cyclic = graph.cyclic_tasks();
+    if cyclic.is_empty() {
+        println!("acyclic (pure DAG)");
+    } else {
+        println!("contains cycles through {} task(s) — legal DCG", cyclic.len());
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let path = args.first().ok_or_else(|| anyhow!("run: missing spec path"))?;
+    let spec = load_spec(path)?;
+    let seconds: u64 = flag_value(args, "--seconds").map(|v| v.parse()).transpose()?.unwrap_or(10);
+    let rate_ms: u64 = flag_value(args, "--rate-ms").map(|v| v.parse()).transpose()?.unwrap_or(200);
+    let ghost = args.iter().any(|a| a == "--ghost");
+
+    let mut coord = Coordinator::deploy(&spec, DeployConfig::default())?;
+    let wires = spec.external_wires();
+    if wires.is_empty() {
+        bail!("spec has no external wires to feed");
+    }
+    let mut r = rng(7);
+    let horizon = SimTime::secs(seconds);
+    for wire in &wires {
+        let mut t = SimTime::ZERO;
+        loop {
+            t += SimDuration::millis(rate_ms).scale(r.exp1());
+            if t > horizon {
+                break;
+            }
+            if ghost {
+                coord.inject_at(
+                    wire,
+                    Payload::Ghost { pretend_bytes: 1 << 20 },
+                    DataClass::Ghost,
+                    RegionId::new(0),
+                    t,
+                )?;
+            } else {
+                let data: Vec<f32> = (0..8).map(|_| r.normal() as f32).collect();
+                coord.inject_at(
+                    wire,
+                    Payload::tensor(&[1, 8], data),
+                    DataClass::Summary,
+                    RegionId::new(0),
+                    t,
+                )?;
+            }
+        }
+    }
+    coord.run_until(horizon);
+    coord.run_until_idle();
+    println!("[{}] {} virtual seconds, ghost={}", spec.name, seconds, ghost);
+    println!("{}", coord.plat.metrics.report());
+    for (wire, got) in &coord.collected {
+        println!("sink '{}': {} artifacts", wire, got.len());
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &[String]) -> Result<()> {
+    let dir = args
+        .first()
+        .cloned()
+        .unwrap_or_else(|| Runtime::default_dir().display().to_string());
+    let mut rt = Runtime::open(&dir)?;
+    println!("platform: {}", rt.platform());
+    let names: Vec<String> = rt.manifest().iter().map(|m| m.name.clone()).collect();
+    for name in names {
+        let exe = rt.load(&name)?;
+        let m = &exe.meta;
+        let ins: Vec<String> = m.inputs.iter().map(|t| format!("{:?}", t.shape)).collect();
+        let outs: Vec<String> = m.outputs.iter().map(|t| format!("{:?}", t.shape)).collect();
+        println!("  {:16} {} -> {}  ({})", m.name, ins.join(","), outs.join(","), m.doc);
+    }
+    println!("all artifacts compiled OK");
+    Ok(())
+}
+
+fn cmd_trace(args: &[String]) -> Result<()> {
+    let path = args.first().ok_or_else(|| anyhow!("trace: missing spec path"))?;
+    let spec = load_spec(path)?;
+    let mut coord = Coordinator::deploy(&spec, DeployConfig::default())?;
+    let mut r = rng(11);
+    for wire in spec.external_wires() {
+        for i in 0..3u64 {
+            let data: Vec<f32> = (0..4).map(|_| r.normal() as f32).collect();
+            coord.inject_at(
+                &wire,
+                Payload::tensor(&[1, 4], data),
+                DataClass::Summary,
+                RegionId::new(0),
+                SimTime::millis(i * 50),
+            )?;
+        }
+    }
+    coord.run_until_idle();
+    println!("{}", coord.plat.prov.dump_json().to_string());
+    Ok(())
+}
+
+fn cmd_demo() -> Result<()> {
+    // fig. 5, verbatim wiring
+    let spec = parse(
+        "[tfmodel]\n\
+         (in) learn-tf (model)\n\
+         (in[10/2]) convert (json)\n\
+         (json, lookup?) predict (result)\n",
+    )
+    .map_err(|e| anyhow!("{e}"))?;
+    let mut coord = Coordinator::deploy(&spec, DeployConfig::default())?;
+    coord.plat.services.register(
+        "lookup",
+        Box::new(koalja::platform::service::KvService::new(&[("class", "cat")])),
+    );
+    coord.set_code(
+        "predict",
+        Box::new(FnTask::new(|ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
+            let label = ctx.lookup("lookup", &Payload::Text("class".into()))?;
+            let n = snap.all_avs().count() as f32;
+            ctx.remark(&format!("classified {n} windows as {label:?}"));
+            Ok(vec![Output::summary("result", Payload::scalar(n))])
+        })),
+    )?;
+    let mut r = rng(3);
+    for i in 0..24u64 {
+        let data: Vec<f32> = (0..4).map(|_| r.normal() as f32).collect();
+        coord.inject_at(
+            "in",
+            Payload::tensor(&[1, 4], data),
+            DataClass::Summary,
+            RegionId::new(0),
+            SimTime::millis(i * 100),
+        )?;
+    }
+    coord.run_until_idle();
+    println!("fig. 5 'tfmodel' on 24 synthetic arrivals:");
+    println!("{}", coord.plat.metrics.report());
+    println!("results collected: {}", coord.collected_count("result"));
+    let q = ProvenanceQuery::new(&coord.plat.prov);
+    if let Some(col) = coord.collected.get("result").and_then(|v| v.last()) {
+        println!(
+            "last result {} derives from {} ancestor artifacts through versions {:?}",
+            col.av.id,
+            q.ancestors(col.av.id).len(),
+            q.versions_touching(col.av.id)
+        );
+    }
+    Ok(())
+}

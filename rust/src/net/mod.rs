@@ -1,0 +1,232 @@
+//! Regions, WAN links and sovereignty zones — §IV, figs. 11–12.
+//!
+//! "Tasks should be freely locatable in any region, with transparent
+//! interconnection between Kubernetes deployments" (§III-B) — but crossing
+//! regions costs latency/bandwidth/energy, and sovereignty policy may
+//! forbid raw data from leaving its zone at all ("US data cannot leave the
+//! virtual boundary of the US", §III-L). This module is the substrate both
+//! constraints live in.
+
+use crate::av::DataClass;
+use crate::metrics::NetTier;
+use crate::util::{RegionId, SimDuration};
+
+use std::collections::HashMap;
+
+/// One cloud region / edge site.
+#[derive(Clone, Debug)]
+pub struct Region {
+    pub id: RegionId,
+    pub name: String,
+    /// Sovereignty zone tag ("eu", "us", "af-east", ...). Raw data may not
+    /// cross zone boundaries; summaries may.
+    pub zone: String,
+    /// Edge sites have little compute; datacentres have a lot. Used by the
+    /// placement policy in `cluster`.
+    pub is_edge: bool,
+}
+
+/// Point-to-point WAN link model.
+#[derive(Clone, Copy, Debug)]
+pub struct WanLink {
+    pub rtt: SimDuration,
+    pub gbps: f64,
+    /// $/GB — for the cost accounting of E7.
+    pub dollars_per_gb: f64,
+}
+
+impl WanLink {
+    pub fn transfer_time(&self, bytes: u64) -> SimDuration {
+        let serialize_us = (bytes as f64 * 8.0) / (self.gbps * 1e3); // bits / (Gb/s) -> us
+        SimDuration::micros(self.rtt.as_micros() + serialize_us.round() as u64)
+    }
+}
+
+/// What a sovereignty check decides.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransferVerdict {
+    /// In-region move (no WAN involved).
+    LocalOk,
+    /// Cross-region, allowed.
+    WanOk,
+    /// Cross-region, forbidden by sovereignty policy.
+    Denied,
+}
+
+/// The region graph.
+#[derive(Clone, Debug, Default)]
+pub struct WanTopology {
+    pub regions: Vec<Region>,
+    links: HashMap<(RegionId, RegionId), WanLink>,
+    /// Default link used between regions with no explicit entry.
+    pub default_link: Option<WanLink>,
+}
+
+impl WanTopology {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_region(&mut self, name: &str, zone: &str, is_edge: bool) -> RegionId {
+        let id = RegionId::new(self.regions.len() as u64);
+        self.regions.push(Region { id, name: name.to_string(), zone: zone.to_string(), is_edge });
+        id
+    }
+
+    pub fn region(&self, id: RegionId) -> &Region {
+        &self.regions[id.index()]
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<RegionId> {
+        self.regions.iter().find(|r| r.name == name).map(|r| r.id)
+    }
+
+    /// Symmetric link registration.
+    pub fn connect(&mut self, a: RegionId, b: RegionId, link: WanLink) {
+        self.links.insert((a, b), link);
+        self.links.insert((b, a), link);
+    }
+
+    pub fn link(&self, a: RegionId, b: RegionId) -> Option<WanLink> {
+        if a == b {
+            return None;
+        }
+        self.links.get(&(a, b)).copied().or(self.default_link)
+    }
+
+    /// Sovereignty verdict for moving `class` data from `a` to `b`
+    /// (fig. 11: monthly aggregates may leave, raw records may not).
+    pub fn check(&self, class: DataClass, a: RegionId, b: RegionId) -> TransferVerdict {
+        if a == b {
+            return TransferVerdict::LocalOk;
+        }
+        let (za, zb) = (&self.region(a).zone, &self.region(b).zone);
+        match class {
+            DataClass::Raw if za != zb => TransferVerdict::Denied,
+            _ => TransferVerdict::WanOk,
+        }
+    }
+
+    /// Latency + tier for a transfer of `bytes` from `a` to `b`, or None if
+    /// denied. In-region transfers ride the LAN storage network.
+    pub fn plan_transfer(
+        &self,
+        class: DataClass,
+        a: RegionId,
+        b: RegionId,
+        bytes: u64,
+    ) -> Option<(SimDuration, NetTier)> {
+        match self.check(class, a, b) {
+            TransferVerdict::LocalOk => Some((SimDuration::ZERO, NetTier::Lan)),
+            TransferVerdict::Denied => None,
+            TransferVerdict::WanOk => {
+                let link = self.link(a, b).unwrap_or(WanLink {
+                    rtt: SimDuration::millis(80),
+                    gbps: 1.0,
+                    dollars_per_gb: 0.08,
+                });
+                Some((link.transfer_time(bytes), NetTier::Wan))
+            }
+        }
+    }
+
+    /// The non-edge region closest (by rtt) to `from` — used by the
+    /// centralized baseline and by summary-aggregation placement.
+    pub fn nearest_datacentre(&self, from: RegionId) -> Option<RegionId> {
+        self.regions
+            .iter()
+            .filter(|r| !r.is_edge)
+            .min_by_key(|r| {
+                if r.id == from {
+                    SimDuration::ZERO
+                } else {
+                    self.link(from, r.id).map(|l| l.rtt).unwrap_or(SimDuration::secs(10))
+                }
+            })
+            .map(|r| r.id)
+    }
+}
+
+/// A ready-made topology for the examples/benches: one central datacentre
+/// ("central/us"), one EU datacentre, plus `n_edge` edge sites split
+/// between the two zones.
+pub fn demo_topology(n_edge: usize) -> WanTopology {
+    let mut t = WanTopology::new();
+    let central = t.add_region("central", "us", false);
+    let eu = t.add_region("eu-dc", "eu", false);
+    t.connect(
+        central,
+        eu,
+        WanLink { rtt: SimDuration::millis(90), gbps: 10.0, dollars_per_gb: 0.05 },
+    );
+    for i in 0..n_edge {
+        let zone = if i % 2 == 0 { "us" } else { "eu" };
+        let e = t.add_region(&format!("edge-{i}"), zone, true);
+        let dc = if i % 2 == 0 { central } else { eu };
+        t.connect(
+            e,
+            dc,
+            WanLink { rtt: SimDuration::millis(25), gbps: 0.2, dollars_per_gb: 0.09 },
+        );
+        t.connect(
+            e,
+            if dc == central { eu } else { central },
+            WanLink { rtt: SimDuration::millis(120), gbps: 0.1, dollars_per_gb: 0.12 },
+        );
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_includes_rtt_and_serialization() {
+        let l = WanLink { rtt: SimDuration::millis(10), gbps: 1.0, dollars_per_gb: 0.1 };
+        // 1 MB over 1 Gbps = 8 ms serialization + 10 ms rtt
+        let t = l.transfer_time(1_000_000);
+        assert_eq!(t.as_micros(), 10_000 + 8_000);
+    }
+
+    #[test]
+    fn raw_data_cannot_cross_zones() {
+        let t = demo_topology(2);
+        let us_edge = t.by_name("edge-0").unwrap();
+        let eu_dc = t.by_name("eu-dc").unwrap();
+        let central = t.by_name("central").unwrap();
+        assert_eq!(t.check(DataClass::Raw, us_edge, eu_dc), TransferVerdict::Denied);
+        assert_eq!(t.check(DataClass::Raw, us_edge, central), TransferVerdict::WanOk);
+        assert_eq!(t.check(DataClass::Summary, us_edge, eu_dc), TransferVerdict::WanOk);
+        assert_eq!(t.check(DataClass::Ghost, us_edge, eu_dc), TransferVerdict::WanOk);
+    }
+
+    #[test]
+    fn in_region_is_lan() {
+        let t = demo_topology(1);
+        let c = t.by_name("central").unwrap();
+        let (lat, tier) = t.plan_transfer(DataClass::Raw, c, c, 1 << 20).unwrap();
+        assert_eq!(tier, NetTier::Lan);
+        assert_eq!(lat, SimDuration::ZERO);
+    }
+
+    #[test]
+    fn denied_transfer_plans_to_none() {
+        let t = demo_topology(2);
+        let us_edge = t.by_name("edge-0").unwrap();
+        let eu_dc = t.by_name("eu-dc").unwrap();
+        assert!(t.plan_transfer(DataClass::Raw, us_edge, eu_dc, 1024).is_none());
+    }
+
+    #[test]
+    fn nearest_datacentre_prefers_same_zone() {
+        let t = demo_topology(4);
+        let us_edge = t.by_name("edge-0").unwrap();
+        let eu_edge = t.by_name("edge-1").unwrap();
+        assert_eq!(t.nearest_datacentre(us_edge), t.by_name("central"));
+        assert_eq!(t.nearest_datacentre(eu_edge), t.by_name("eu-dc"));
+        // a datacentre is its own nearest
+        let c = t.by_name("central").unwrap();
+        assert_eq!(t.nearest_datacentre(c), Some(c));
+    }
+}

@@ -1,0 +1,193 @@
+//! The shared platform state every agent operates against: storage, bus,
+//! provenance, metrics, cluster, WAN topology, workspaces, services, clock.
+//!
+//! One `Platform` per deployment. Agents receive `&mut Platform`; the
+//! coordinator owns it alongside the agent vectors (split borrows).
+
+pub mod service;
+
+pub use service::{RecordedLookup, Service, ServiceDirectory};
+
+use crate::av::{AnnotatedValue, DataClass, Payload};
+use crate::bus::Bus;
+use crate::cluster::{Cluster, ScalePolicy};
+use crate::metrics::Metrics;
+use crate::net::WanTopology;
+use crate::provenance::{ProvenanceRegistry, Stamp};
+use crate::storage::{ObjectStore, StorageConfig, StorageTier};
+use crate::util::{AvId, ContentHash, IdGen, LinkId, RegionId, Rng, RunId, SimTime, TaskId};
+use crate::workspace::WorkspaceRegistry;
+
+/// Where payloads are put by default (the paper bets on network-attached
+/// storage, §III-F — "we choose to place our money on the network attached
+/// storage"). `HostLocal` is the contrarian strategy the ρ sweep compares.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementStrategy {
+    NetworkAttached,
+    HostLocal,
+}
+
+/// The assembled world.
+pub struct Platform {
+    pub now: SimTime,
+    pub store: ObjectStore,
+    pub bus: Bus,
+    pub prov: ProvenanceRegistry,
+    pub metrics: Metrics,
+    pub cluster: Cluster,
+    pub net: WanTopology,
+    pub workspaces: WorkspaceRegistry,
+    pub services: ServiceDirectory,
+    pub rng: Rng,
+    pub placement: PlacementStrategy,
+    av_ids: IdGen,
+    run_ids: IdGen,
+}
+
+impl Platform {
+    pub fn new(net: WanTopology, storage: StorageConfig, seed: u64) -> Self {
+        Self {
+            now: SimTime::ZERO,
+            store: ObjectStore::new(storage),
+            bus: Bus::new(),
+            prov: ProvenanceRegistry::new(),
+            metrics: Metrics::new(),
+            cluster: Cluster::new(ScalePolicy::default()),
+            net,
+            workspaces: WorkspaceRegistry::new(),
+            services: ServiceDirectory::new(),
+            rng: Rng::seed_from_u64(seed),
+            placement: PlacementStrategy::NetworkAttached,
+            av_ids: IdGen::new(),
+            run_ids: IdGen::new(),
+        }
+    }
+
+    pub fn next_av_id(&mut self) -> AvId {
+        AvId::new(self.av_ids.next_raw())
+    }
+
+    pub fn next_run_id(&mut self) -> RunId {
+        RunId::new(self.run_ids.next_raw())
+    }
+
+    pub fn storage_tier(&self) -> StorageTier {
+        match self.placement {
+            PlacementStrategy::NetworkAttached => StorageTier::ObjectStore,
+            PlacementStrategy::HostLocal => StorageTier::HostLocal,
+        }
+    }
+
+    /// Store a payload and mint the AV that points at it — the "annotated
+    /// value" handover of §III-I. Returns (av, storage latency charged).
+    #[allow(clippy::too_many_arguments)]
+    pub fn mint_av(
+        &mut self,
+        payload: Payload,
+        source_task: TaskId,
+        run: RunId,
+        version: u32,
+        link: LinkId,
+        region: RegionId,
+        class: DataClass,
+        seq: u64,
+        parents: &[AvId],
+        born: SimTime,
+    ) -> (AnnotatedValue, crate::util::SimDuration) {
+        let ghost = payload.is_ghost();
+        let size_bytes = payload.size_bytes();
+        let content = payload.content_hash();
+        let tier = self.storage_tier();
+        let (object, lat) = self.store.put(payload, region, tier, class, self.now);
+        let av = AnnotatedValue {
+            id: self.next_av_id(),
+            source_task,
+            link,
+            object,
+            region,
+            created: self.now,
+            seq,
+            size_bytes,
+            content,
+            class,
+            ghost,
+            born,
+        };
+        self.prov.birth(
+            av.id,
+            parents,
+            self.now,
+            Stamp::Emitted { task: source_task, run, version, region },
+        );
+        (av, lat)
+    }
+
+    /// Recipe hash for memoization: fold input content hashes (port order)
+    /// with the software version — the Makefile staleness rule of §III-B/J.
+    pub fn recipe_hash(inputs: &[ContentHash], version: u32) -> ContentHash {
+        let mut h = ContentHash(version as u64 ^ 0x9E37_79B9_7F4A_7C15);
+        for i in inputs {
+            h = h.combine(*i);
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::demo_topology;
+
+    fn plat() -> Platform {
+        Platform::new(demo_topology(2), StorageConfig::default(), 1)
+    }
+
+    #[test]
+    fn mint_av_stores_and_stamps() {
+        let mut p = plat();
+        let (av, lat) = p.mint_av(
+            Payload::scalar(1.0),
+            TaskId::new(0),
+            RunId::new(0),
+            1,
+            LinkId::new(0),
+            RegionId::new(0),
+            DataClass::Summary,
+            0,
+            &[],
+            SimTime::ZERO,
+        );
+        assert!(lat.as_micros() > 0);
+        assert!(p.store.contains(av.object));
+        let passport = p.prov.passport(av.id).unwrap();
+        assert_eq!(passport.stamps.len(), 1);
+        assert_eq!(av.size_bytes, 4);
+    }
+
+    #[test]
+    fn ids_are_unique() {
+        let mut p = plat();
+        let a = p.next_av_id();
+        let b = p.next_av_id();
+        assert_ne!(a, b);
+        assert_ne!(p.next_run_id(), p.next_run_id());
+    }
+
+    #[test]
+    fn recipe_hash_sensitive_to_version_and_inputs() {
+        let i1 = ContentHash::of_str("x");
+        let i2 = ContentHash::of_str("y");
+        let base = Platform::recipe_hash(&[i1, i2], 1);
+        assert_ne!(base, Platform::recipe_hash(&[i1, i2], 2), "version matters");
+        assert_ne!(base, Platform::recipe_hash(&[i2, i1], 1), "order matters");
+        assert_eq!(base, Platform::recipe_hash(&[i1, i2], 1), "deterministic");
+    }
+
+    #[test]
+    fn placement_picks_tier() {
+        let mut p = plat();
+        assert_eq!(p.storage_tier(), StorageTier::ObjectStore);
+        p.placement = PlacementStrategy::HostLocal;
+        assert_eq!(p.storage_tier(), StorageTier::HostLocal);
+    }
+}

@@ -1,0 +1,506 @@
+//! Data-arrival and snapshot policies — §III-E, §III-I, fig. 7.
+//!
+//! A smart task's inputs arrive as streams of Annotated Values on separate
+//! links, at unrelated rates. The task agent's wrapper assembles *snapshots*
+//! (execution sets) from them according to policy, so user code never deals
+//! with rate mismatch itself. The paper names three aggregation policies:
+//!
+//!  * **All new** — no reuse; each snapshot is a non-overlapping set of
+//!    completely fresh data ("what usually happens in a stream").
+//!  * **Swap new for old** — fresh values where available, previous values
+//!    where not ("like the aggregations in a Makefile").
+//!  * **Merge** — multiple links folded FCFS into a single scalar stream
+//!    (same type required).
+//!
+//! plus buffers `input[N]` (minimum count) and sliding windows `input[N/S]`
+//! (window of N advancing S at a time), and a rate control to stop
+//! "needless unintended recomputation, and the possibility of Denial of
+//! Service attacks on the inputs".
+
+use crate::av::AnnotatedValue;
+use crate::util::{SimDuration, SimTime};
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+/// Task-level aggregation policy across inputs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SnapshotPolicy {
+    /// Fire only on fully fresh tuples.
+    #[default]
+    AllNew,
+    /// Fire when anything is fresh; reuse old values elsewhere.
+    SwapNewForOld,
+    /// Fold all inputs into one FCFS stream.
+    Merge,
+}
+
+impl SnapshotPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "allnew" | "all-new" | "all_new" => Some(Self::AllNew),
+            "swap" | "swapnewforold" | "swap-new-for-old" => Some(Self::SwapNewForOld),
+            "merge" => Some(Self::Merge),
+            _ => None,
+        }
+    }
+}
+
+/// Per-input buffer/window spec — the `name[N]` / `name[N/S]` annotations of
+/// the wiring language (fig. 5: `(in[10/2]) convert (json)`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BufferSpec {
+    /// Values per snapshot (window size). 1 = plain streaming input.
+    pub count: usize,
+    /// Slide: how many fresh values advance the window per snapshot.
+    /// `slide == count` means non-overlapping (plain buffer `[N]`);
+    /// `slide < count` is the sliding window `[N/S]`.
+    pub slide: usize,
+}
+
+impl Default for BufferSpec {
+    fn default() -> Self {
+        Self { count: 1, slide: 1 }
+    }
+}
+
+impl BufferSpec {
+    pub fn buffer(n: usize) -> Self {
+        Self { count: n.max(1), slide: n.max(1) }
+    }
+
+    pub fn window(n: usize, s: usize) -> Self {
+        Self { count: n.max(1), slide: s.clamp(1, n.max(1)) }
+    }
+
+    pub fn is_window(&self) -> bool {
+        self.slide < self.count
+    }
+}
+
+/// One input port's arrival buffer.
+#[derive(Clone, Debug)]
+pub struct InputBuffer {
+    /// Port name; refcounted so snapshot assembly is allocation-free (§Perf).
+    pub name: Rc<str>,
+    pub spec: BufferSpec,
+    /// Last `spec.count` values (the window), oldest first.
+    window: VecDeque<AnnotatedValue>,
+    /// Arrivals not yet consumed by a snapshot.
+    fresh: usize,
+    /// Total ever received.
+    pub received: u64,
+}
+
+impl InputBuffer {
+    pub fn new(name: &str, spec: BufferSpec) -> Self {
+        Self { name: Rc::from(name), spec, window: VecDeque::new(), fresh: 0, received: 0 }
+    }
+
+    pub fn push(&mut self, av: AnnotatedValue) {
+        self.window.push_back(av);
+        while self.window.len() > self.spec.count {
+            self.window.pop_front();
+        }
+        self.fresh = (self.fresh + 1).min(self.spec.count);
+        self.received += 1;
+    }
+
+    pub fn fresh(&self) -> usize {
+        self.fresh
+    }
+
+    pub fn window_full(&self) -> bool {
+        self.window.len() >= self.spec.count
+    }
+
+    pub fn has_any(&self) -> bool {
+        !self.window.is_empty()
+    }
+
+    fn snapshot_values(&self) -> Vec<AnnotatedValue> {
+        self.window.iter().cloned().collect()
+    }
+
+    /// Oldest unconsumed AV (for Merge draining).
+    fn pop_fresh_front(&mut self) -> Option<AnnotatedValue> {
+        if self.fresh == 0 {
+            return None;
+        }
+        // fresh values are the tail of the window; the oldest fresh one is
+        // at len - fresh.
+        let idx = self.window.len() - self.fresh;
+        let av = self.window.get(idx).cloned();
+        if av.is_some() {
+            self.fresh -= 1;
+        }
+        av
+    }
+}
+
+/// A ready execution set: per input, the AVs to feed user code.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    /// (input name, values oldest-first). For Merge there is one synthetic
+    /// input named `merged`.
+    pub inputs: Vec<(Rc<str>, Vec<AnnotatedValue>)>,
+    /// Earliest born timestamp among members (e2e latency tracking).
+    pub born: SimTime,
+    /// True if any member is a ghost (the whole run becomes a ghost run).
+    pub ghost: bool,
+}
+
+impl Snapshot {
+    pub fn all_avs(&self) -> impl Iterator<Item = &AnnotatedValue> {
+        self.inputs.iter().flat_map(|(_, avs)| avs.iter())
+    }
+
+    pub fn input(&self, name: &str) -> Option<&[AnnotatedValue]> {
+        self.inputs.iter().find(|(n, _)| &**n == name).map(|(_, v)| v.as_slice())
+    }
+
+    /// Assemble a snapshot from parts; `born` is the oldest member's birth
+    /// time (or `fallback_born` for an empty/source snapshot).
+    pub fn new(inputs: Vec<(Rc<str>, Vec<AnnotatedValue>)>, fallback_born: SimTime) -> Self {
+        let born = inputs
+            .iter()
+            .flat_map(|(_, avs)| avs.iter().map(|a| a.born))
+            .min()
+            .unwrap_or(fallback_born);
+        let ghost = inputs.iter().any(|(_, avs)| avs.iter().any(|a| a.ghost));
+        Self { inputs, born, ghost }
+    }
+
+    fn from_parts(inputs: Vec<(Rc<str>, Vec<AnnotatedValue>)>) -> Self {
+        Self::new(inputs, SimTime::ZERO)
+    }
+}
+
+/// Rate control: a minimum interval between snapshots (DoS guard, §III-I).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RateControl {
+    pub min_interval: SimDuration,
+    last_fire: Option<SimTime>,
+}
+
+impl RateControl {
+    pub fn new(min_interval: SimDuration) -> Self {
+        Self { min_interval, last_fire: None }
+    }
+
+    pub fn allow(&self, now: SimTime) -> bool {
+        match self.last_fire {
+            None => true,
+            Some(t) => now.saturating_sub(t) >= self.min_interval,
+        }
+    }
+
+    pub fn fired(&mut self, now: SimTime) {
+        self.last_fire = Some(now);
+    }
+
+    /// When the next snapshot may fire (for poll scheduling).
+    pub fn next_allowed(&self, now: SimTime) -> SimTime {
+        match self.last_fire {
+            None => now,
+            Some(t) => {
+                let next = t + self.min_interval;
+                if next > now {
+                    next
+                } else {
+                    now
+                }
+            }
+        }
+    }
+}
+
+/// The snapshot assembly engine for one task: buffers + policy + rate.
+#[derive(Clone, Debug)]
+pub struct SnapshotEngine {
+    pub policy: SnapshotPolicy,
+    pub buffers: Vec<InputBuffer>,
+    pub rate: RateControl,
+    pub snapshots_built: u64,
+    pub suppressed_by_rate: u64,
+}
+
+impl SnapshotEngine {
+    pub fn new(policy: SnapshotPolicy, buffers: Vec<InputBuffer>, rate: RateControl) -> Self {
+        Self { policy, buffers, rate, snapshots_built: 0, suppressed_by_rate: 0 }
+    }
+
+    pub fn buffer_mut(&mut self, name: &str) -> Option<&mut InputBuffer> {
+        self.buffers.iter_mut().find(|b| &*b.name == name)
+    }
+
+    pub fn push(&mut self, input: &str, av: AnnotatedValue) -> bool {
+        match self.buffer_mut(input) {
+            Some(b) => {
+                b.push(av);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Hot-path variant: push by precomputed buffer position (§Perf).
+    pub fn push_idx(&mut self, idx: usize, av: AnnotatedValue) {
+        self.buffers[idx].push(av);
+    }
+
+    /// Total fresh values across inputs (autoscaling signal).
+    pub fn backlog(&self) -> usize {
+        self.buffers.iter().map(|b| b.fresh()).sum()
+    }
+
+    /// Is a snapshot ready under the policy (ignoring rate control)?
+    pub fn ready(&self) -> bool {
+        if self.buffers.is_empty() {
+            return false;
+        }
+        match self.policy {
+            SnapshotPolicy::AllNew => self
+                .buffers
+                .iter()
+                .all(|b| b.window_full() && b.fresh() >= b.spec.slide),
+            SnapshotPolicy::SwapNewForOld => {
+                self.buffers.iter().all(|b| b.has_any())
+                    && self.buffers.iter().any(|b| b.fresh() > 0)
+            }
+            SnapshotPolicy::Merge => {
+                let need: usize = self.buffers.first().map(|b| b.spec.count).unwrap_or(1);
+                self.backlog() >= need
+            }
+        }
+    }
+
+    /// Try to assemble a snapshot at `now`. Respects rate control.
+    pub fn take(&mut self, now: SimTime) -> Option<Snapshot> {
+        if !self.ready() {
+            return None;
+        }
+        if !self.rate.allow(now) {
+            self.suppressed_by_rate += 1;
+            return None;
+        }
+        let snap = match self.policy {
+            SnapshotPolicy::AllNew => {
+                let inputs = self
+                    .buffers
+                    .iter_mut()
+                    .map(|b| {
+                        let vals = b.snapshot_values();
+                        // The emitted snapshot covers everything currently
+                        // in the window; the next one needs `slide` new
+                        // arrivals. (Bounded buffer: a burst larger than
+                        // the window drops the oldest positions — the
+                        // window always covers the *latest* N values.)
+                        b.fresh = 0;
+                        (b.name.clone(), vals)
+                    })
+                    .collect();
+                Snapshot::from_parts(inputs)
+            }
+            SnapshotPolicy::SwapNewForOld => {
+                let inputs = self
+                    .buffers
+                    .iter_mut()
+                    .map(|b| {
+                        let vals = b.snapshot_values();
+                        b.fresh = 0; // everything current is now "old"
+                        (b.name.clone(), vals)
+                    })
+                    .collect();
+                Snapshot::from_parts(inputs)
+            }
+            SnapshotPolicy::Merge => {
+                let need: usize = self.buffers.first().map(|b| b.spec.count).unwrap_or(1);
+                // FCFS across inputs by (created, seq): repeatedly take the
+                // oldest fresh head.
+                let mut merged: Vec<AnnotatedValue> = Vec::with_capacity(need);
+                for _ in 0..need {
+                    let next = self
+                        .buffers
+                        .iter_mut()
+                        .filter(|b| b.fresh() > 0)
+                        .min_by_key(|b| {
+                            let idx = b.window.len() - b.fresh;
+                            b.window.get(idx).map(|a| (a.created, a.seq)).unwrap()
+                        })
+                        .and_then(|b| b.pop_fresh_front());
+                    match next {
+                        Some(av) => merged.push(av),
+                        None => break,
+                    }
+                }
+                Snapshot::from_parts(vec![(Rc::from("merged"), merged)])
+            }
+        };
+        self.rate.fired(now);
+        self.snapshots_built += 1;
+        Some(snap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::av::DataClass;
+    use crate::util::*;
+
+    fn av(seq: u64, t_us: u64) -> AnnotatedValue {
+        AnnotatedValue {
+            id: AvId::new(seq),
+            source_task: TaskId::new(0),
+            link: LinkId::new(0),
+            object: ObjectId::new(seq),
+            region: RegionId::new(0),
+            created: SimTime::micros(t_us),
+            seq,
+            size_bytes: 4,
+            content: ContentHash::of_str("v"),
+            class: DataClass::Summary,
+            ghost: false,
+            born: SimTime::micros(t_us),
+        }
+    }
+
+    fn engine(policy: SnapshotPolicy, specs: &[(&str, BufferSpec)]) -> SnapshotEngine {
+        SnapshotEngine::new(
+            policy,
+            specs.iter().map(|(n, s)| InputBuffer::new(n, *s)).collect(),
+            RateControl::default(),
+        )
+    }
+
+    #[test]
+    fn allnew_waits_for_full_fresh_tuple() {
+        let mut e = engine(
+            SnapshotPolicy::AllNew,
+            &[("a", BufferSpec::default()), ("b", BufferSpec::default())],
+        );
+        e.push("a", av(0, 10));
+        assert!(!e.ready(), "b still empty");
+        e.push("b", av(1, 20));
+        assert!(e.ready());
+        let snap = e.take(SimTime::micros(30)).unwrap();
+        assert_eq!(snap.inputs.len(), 2);
+        assert_eq!(snap.born, SimTime::micros(10));
+        // consumed: not ready again until BOTH receive fresh data
+        assert!(!e.ready());
+        e.push("a", av(2, 40));
+        assert!(!e.ready());
+        e.push("b", av(3, 50));
+        assert!(e.ready());
+    }
+
+    #[test]
+    fn allnew_buffer_needs_count() {
+        let mut e = engine(SnapshotPolicy::AllNew, &[("a", BufferSpec::buffer(3))]);
+        e.push("a", av(0, 1));
+        e.push("a", av(1, 2));
+        assert!(!e.ready());
+        e.push("a", av(2, 3));
+        let snap = e.take(SimTime::micros(4)).unwrap();
+        assert_eq!(snap.input("a").unwrap().len(), 3);
+        assert!(!e.ready(), "non-overlapping: all consumed");
+    }
+
+    #[test]
+    fn sliding_window_advances_by_slide() {
+        // the paper's input[10/2]: window 10, two refreshed per snapshot
+        let mut e = engine(SnapshotPolicy::AllNew, &[("in", BufferSpec::window(10, 2))]);
+        for i in 0..10 {
+            e.push("in", av(i, i));
+        }
+        let s1 = e.take(SimTime::micros(100)).unwrap();
+        assert_eq!(s1.input("in").unwrap().len(), 10);
+        assert!(!e.ready(), "needs 2 fresh to slide");
+        e.push("in", av(10, 110));
+        assert!(!e.ready());
+        e.push("in", av(11, 120));
+        let s2 = e.take(SimTime::micros(130)).unwrap();
+        let seqs: Vec<u64> = s2.input("in").unwrap().iter().map(|a| a.seq).collect();
+        assert_eq!(seqs, (2..12).collect::<Vec<u64>>(), "slid by 2");
+    }
+
+    #[test]
+    fn swap_new_for_old_reuses_stale_inputs() {
+        let mut e = engine(
+            SnapshotPolicy::SwapNewForOld,
+            &[("src", BufferSpec::default()), ("cfg", BufferSpec::default())],
+        );
+        e.push("src", av(0, 1));
+        assert!(!e.ready(), "cfg never seen: cannot run");
+        e.push("cfg", av(1, 2));
+        let s1 = e.take(SimTime::micros(3)).unwrap();
+        assert_eq!(s1.all_avs().count(), 2);
+        // only src updates; cfg value is reused
+        e.push("src", av(2, 10));
+        assert!(e.ready());
+        let s2 = e.take(SimTime::micros(11)).unwrap();
+        assert_eq!(s2.input("src").unwrap()[0].seq, 2);
+        assert_eq!(s2.input("cfg").unwrap()[0].seq, 1, "old cfg reused");
+        assert!(!e.ready(), "nothing fresh now");
+    }
+
+    #[test]
+    fn merge_is_fcfs_across_inputs() {
+        let mut e = engine(
+            SnapshotPolicy::Merge,
+            &[("x", BufferSpec::buffer(4)), ("y", BufferSpec::buffer(4))],
+        );
+        e.push("x", av(0, 10));
+        e.push("y", av(1, 5));
+        e.push("x", av(2, 20));
+        e.push("y", av(3, 15));
+        let s = e.take(SimTime::micros(100)).unwrap();
+        let merged = s.input("merged").unwrap();
+        let times: Vec<u64> = merged.iter().map(|a| a.created.as_micros()).collect();
+        assert_eq!(times, vec![5, 10, 15, 20], "FCFS by creation time");
+    }
+
+    #[test]
+    fn rate_control_suppresses_then_allows() {
+        let mut e = SnapshotEngine::new(
+            SnapshotPolicy::AllNew,
+            vec![InputBuffer::new("a", BufferSpec::default())],
+            RateControl::new(SimDuration::millis(10)),
+        );
+        e.push("a", av(0, 0));
+        assert!(e.take(SimTime::micros(1)).is_some());
+        e.push("a", av(1, 2));
+        assert!(e.take(SimTime::micros(3)).is_none(), "too soon");
+        assert_eq!(e.suppressed_by_rate, 1);
+        assert!(e.take(SimTime::millis(11)).is_some());
+        assert_eq!(e.snapshots_built, 2);
+    }
+
+    #[test]
+    fn ghost_marker_propagates() {
+        let mut e = engine(SnapshotPolicy::AllNew, &[("a", BufferSpec::default())]);
+        let mut g = av(0, 1);
+        g.ghost = true;
+        e.push("a", g);
+        let s = e.take(SimTime::micros(2)).unwrap();
+        assert!(s.ghost);
+    }
+
+    #[test]
+    fn backlog_counts_fresh() {
+        let mut e = engine(
+            SnapshotPolicy::AllNew,
+            &[("a", BufferSpec::buffer(2)), ("b", BufferSpec::default())],
+        );
+        e.push("a", av(0, 1));
+        e.push("b", av(1, 2));
+        e.push("b", av(2, 3)); // b window cap 1: fresh saturates at count
+        assert_eq!(e.backlog(), 2);
+    }
+
+    #[test]
+    fn unknown_input_rejected() {
+        let mut e = engine(SnapshotPolicy::AllNew, &[("a", BufferSpec::default())]);
+        assert!(!e.push("zzz", av(0, 1)));
+    }
+}

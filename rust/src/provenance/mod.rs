@@ -1,0 +1,402 @@
+//! Enterprise-grade metadata: the three stories of §III-C, §III-L.
+//!
+//! 1. **Traveller log** — "every data packet's travel documents get stamped
+//!    according to the journey taken"; per-AV passports kept by the
+//!    pipeline manager in a secure registry.
+//! 2. **Checkpoint log** — per-task visitor log: which AVs/events passed
+//!    through, when, and what was done to them (fig. 9).
+//! 3. **Concept map** — the long-term design map of invariant
+//!    relationships: topology, promises, semantics (fig. 10).
+//!
+//! Also recorded: out-of-band service lookups (§III-D — "if data were read
+//! from a mutable external source, say DNS, cache the response for forensic
+//! traceability") and software versions involved in every recomputation.
+//!
+//! The registry supports the "mashed potato" accounting of §III-L: metadata
+//! kept per packet is tiny versus the combinatoric cost of reconstructing
+//! journeys by inference later (experiment E6).
+
+pub mod query;
+
+pub use query::ProvenanceQuery;
+
+use crate::util::hash::FastMap;
+use crate::util::{AvId, ContentHash, LinkId, RegionId, RunId, SimTime, TaskId};
+
+
+/// One passport stamp in an AV's traveller log.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Stamp {
+    /// Born at a source or emitted by a task run.
+    Emitted { task: TaskId, run: RunId, version: u32, region: RegionId },
+    /// Published onto a link topic.
+    Published { link: LinkId },
+    /// Transferred across regions (WAN hop).
+    Transferred { from: RegionId, to: RegionId, bytes: u64 },
+    /// Served from a dependent-local cache (Principle 2 in action).
+    CacheServed { region: RegionId },
+    /// Entered a task's snapshot (consumed).
+    Consumed { task: TaskId, run: RunId, version: u32 },
+    /// Denied a transfer by sovereignty policy.
+    SovereigntyDenied { from: RegionId, to: RegionId },
+}
+
+/// A stamped entry: when + what.
+#[derive(Clone, Debug)]
+pub struct StampedEntry {
+    pub time: SimTime,
+    pub stamp: Stamp,
+}
+
+/// The passport of one AV: stamps plus lineage (which AVs it derives from).
+#[derive(Clone, Debug, Default)]
+pub struct Passport {
+    pub stamps: Vec<StampedEntry>,
+    pub parents: Vec<AvId>,
+}
+
+/// Checkpoint-log event kinds (fig. 9's vocabulary).
+#[derive(Clone, Debug, PartialEq)]
+pub enum CheckpointEvent {
+    Start,
+    ReadInput { av: AvId },
+    /// §III-D: out-of-band lookup, response cached for forensics.
+    ServiceLookup {
+        service: String,
+        service_version: u32,
+        query: ContentHash,
+        response: ContentHash,
+    },
+    Emit { av: AvId },
+    Remark(String),
+    Anomaly(String),
+    /// Software version changed (triggers recompute downstream).
+    VersionChange { from: u32, to: u32 },
+    End { outputs: u32 },
+}
+
+#[derive(Clone, Debug)]
+pub struct CheckpointEntry {
+    pub time: SimTime,
+    pub run: RunId,
+    pub event: CheckpointEvent,
+}
+
+/// Concept-map relations (fig. 10: "precedes", "may determine", ...).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Relation {
+    Precedes,
+    MayDetermine,
+    Produces,
+    Consumes,
+    ExpressesAs,
+}
+
+/// One invariant edge in the concept map. Deduplicated: the map records
+/// what is *always* true of the design, not per-event occurrences.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ConceptEdge {
+    pub from: String,
+    pub rel: Relation,
+    pub to: String,
+}
+
+/// The pipeline manager's secure metadata registry.
+#[derive(Clone, Debug, Default)]
+pub struct ProvenanceRegistry {
+    passports: FastMap<AvId, Passport>,
+    checkpoints: FastMap<TaskId, Vec<CheckpointEntry>>,
+    concept_edges: Vec<ConceptEdge>,
+    concept_seen: std::collections::HashSet<ConceptEdge>,
+    /// children index for forward tracing (descendants)
+    children: FastMap<AvId, Vec<AvId>>,
+    /// total stamps recorded (for the E6 overhead accounting)
+    pub stamp_count: u64,
+    pub enabled: bool,
+}
+
+impl ProvenanceRegistry {
+    pub fn new() -> Self {
+        Self { enabled: true, ..Default::default() }
+    }
+
+    /// Metadata can be disabled to measure its overhead (E6 control arm).
+    pub fn disabled() -> Self {
+        Self { enabled: false, ..Default::default() }
+    }
+
+    // ---- traveller log ----------------------------------------------------
+
+    pub fn birth(&mut self, av: AvId, parents: &[AvId], time: SimTime, stamp: Stamp) {
+        if !self.enabled {
+            return;
+        }
+        let p = self.passports.entry(av).or_default();
+        p.parents = parents.to_vec();
+        if p.stamps.capacity() == 0 {
+            p.stamps.reserve(4); // typical journey: emit/publish/consume(+1)
+        }
+        p.stamps.push(StampedEntry { time, stamp });
+        self.stamp_count += 1;
+        for &parent in parents {
+            self.children.entry(parent).or_default().push(av);
+        }
+    }
+
+    pub fn stamp(&mut self, av: AvId, time: SimTime, stamp: Stamp) {
+        if !self.enabled {
+            return;
+        }
+        self.passports.entry(av).or_default().stamps.push(StampedEntry { time, stamp });
+        self.stamp_count += 1;
+    }
+
+    pub fn passport(&self, av: AvId) -> Option<&Passport> {
+        self.passports.get(&av)
+    }
+
+    // ---- checkpoint log ---------------------------------------------------
+
+    pub fn checkpoint(&mut self, task: TaskId, run: RunId, time: SimTime, event: CheckpointEvent) {
+        if !self.enabled {
+            return;
+        }
+        self.checkpoints.entry(task).or_default().push(CheckpointEntry { time, run, event });
+    }
+
+    /// Batched checkpoint append — one map lookup for a whole run's
+    /// events (§Perf; the hot path logs Start + N reads + End together).
+    pub fn checkpoint_batch(
+        &mut self,
+        task: TaskId,
+        run: RunId,
+        time: SimTime,
+        events: impl IntoIterator<Item = CheckpointEvent>,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        let log = self.checkpoints.entry(task).or_default();
+        for event in events {
+            log.push(CheckpointEntry { time, run, event });
+        }
+    }
+
+    pub fn checkpoint_log(&self, task: TaskId) -> &[CheckpointEntry] {
+        self.checkpoints.get(&task).map_or(&[], |v| v.as_slice())
+    }
+
+    // ---- concept map ------------------------------------------------------
+
+    pub fn concept(&mut self, from: &str, rel: Relation, to: &str) {
+        if !self.enabled {
+            return;
+        }
+        let edge = ConceptEdge { from: from.to_string(), rel, to: to.to_string() };
+        if self.concept_seen.insert(edge.clone()) {
+            self.concept_edges.push(edge);
+        }
+    }
+
+    pub fn concept_map(&self) -> &[ConceptEdge] {
+        &self.concept_edges
+    }
+
+    // ---- accounting ---------------------------------------------------------
+
+    /// Approximate bytes of metadata held (for E6's overhead-vs-payload
+    /// comparison). Stamps are small fixed records; concept map is O(design).
+    pub fn metadata_bytes(&self) -> u64 {
+        // ~40 B per stamp record, ~48 B per checkpoint entry, ~96 B per edge
+        let cp: usize = self.checkpoints.values().map(|v| v.len()).sum();
+        (self.stamp_count * 40) + (cp as u64 * 48) + (self.concept_edges.len() as u64 * 96)
+    }
+
+    pub fn passports_held(&self) -> usize {
+        self.passports.len()
+    }
+
+    pub(crate) fn children_of(&self, av: AvId) -> &[AvId] {
+        self.children.get(&av).map_or(&[], |v| v.as_slice())
+    }
+
+    /// Dump everything as JSON (the "special tools ... for querying these
+    /// logs" of §III-L start from a strict format).
+    pub fn dump_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        let passports = self
+            .passports
+            .iter()
+            .map(|(id, p)| {
+                Json::obj(vec![
+                    ("av", Json::str(id.to_string())),
+                    (
+                        "parents",
+                        Json::Arr(p.parents.iter().map(|a| Json::str(a.to_string())).collect()),
+                    ),
+                    (
+                        "stamps",
+                        Json::Arr(
+                            p.stamps
+                                .iter()
+                                .map(|s| {
+                                    Json::obj(vec![
+                                        ("t_us", Json::num(s.time.as_micros() as f64)),
+                                        ("stamp", Json::str(format!("{:?}", s.stamp))),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        let checkpoints = self
+            .checkpoints
+            .iter()
+            .map(|(t, es)| {
+                Json::obj(vec![
+                    ("task", Json::str(t.to_string())),
+                    ("entries", Json::num(es.len() as f64)),
+                ])
+            })
+            .collect();
+        let concept = self
+            .concept_edges
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("from", Json::str(e.from.clone())),
+                    ("rel", Json::str(format!("{:?}", e.rel))),
+                    ("to", Json::str(e.to.clone())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("passports", Json::Arr(passports)),
+            ("checkpoint_logs", Json::Arr(checkpoints)),
+            ("concept_map", Json::Arr(concept)),
+            ("stamp_count", Json::num(self.stamp_count as f64)),
+            ("metadata_bytes", Json::num(self.metadata_bytes() as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(n: u64) -> (AvId, TaskId, RunId) {
+        (AvId::new(n), TaskId::new(n), RunId::new(n))
+    }
+
+    #[test]
+    fn passport_records_journey_in_order() {
+        let mut reg = ProvenanceRegistry::new();
+        let (av, task, run) = ids(0);
+        reg.birth(
+            av,
+            &[],
+            SimTime::micros(1),
+            Stamp::Emitted { task, run, version: 1, region: RegionId::new(0) },
+        );
+        reg.stamp(av, SimTime::micros(2), Stamp::Published { link: LinkId::new(0) });
+        reg.stamp(
+            av,
+            SimTime::micros(9),
+            Stamp::Consumed { task: TaskId::new(1), run: RunId::new(1), version: 3 },
+        );
+        let p = reg.passport(av).unwrap();
+        assert_eq!(p.stamps.len(), 3);
+        assert!(p.stamps.windows(2).all(|w| w[0].time <= w[1].time));
+        // which software versions touched it is readable from the passport:
+        let versions: Vec<u32> = p
+            .stamps
+            .iter()
+            .filter_map(|s| match s.stamp {
+                Stamp::Emitted { version, .. } | Stamp::Consumed { version, .. } => Some(version),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(versions, vec![1, 3]);
+    }
+
+    #[test]
+    fn lineage_builds_children_index() {
+        let mut reg = ProvenanceRegistry::new();
+        let parent = AvId::new(0);
+        reg.birth(
+            parent,
+            &[],
+            SimTime::ZERO,
+            Stamp::Emitted {
+                task: TaskId::new(0),
+                run: RunId::new(0),
+                version: 1,
+                region: RegionId::new(0),
+            },
+        );
+        for i in 1..=2 {
+            reg.birth(
+                AvId::new(i),
+                &[parent],
+                SimTime::micros(i),
+                Stamp::Emitted {
+                    task: TaskId::new(1),
+                    run: RunId::new(i),
+                    version: 1,
+                    region: RegionId::new(0),
+                },
+            );
+        }
+        assert_eq!(reg.children_of(parent), &[AvId::new(1), AvId::new(2)]);
+    }
+
+    #[test]
+    fn concept_map_deduplicates() {
+        let mut reg = ProvenanceRegistry::new();
+        reg.concept("convert", Relation::Precedes, "predict");
+        reg.concept("convert", Relation::Precedes, "predict");
+        reg.concept("predict", Relation::Consumes, "json");
+        assert_eq!(reg.concept_map().len(), 2);
+    }
+
+    #[test]
+    fn disabled_registry_records_nothing() {
+        let mut reg = ProvenanceRegistry::disabled();
+        let (av, task, run) = ids(0);
+        reg.birth(
+            av,
+            &[],
+            SimTime::ZERO,
+            Stamp::Emitted { task, run, version: 1, region: RegionId::new(0) },
+        );
+        reg.checkpoint(task, run, SimTime::ZERO, CheckpointEvent::Start);
+        reg.concept("a", Relation::Precedes, "b");
+        assert!(reg.passport(av).is_none());
+        assert_eq!(reg.metadata_bytes(), 0);
+    }
+
+    #[test]
+    fn metadata_bytes_grow_linearly() {
+        let mut reg = ProvenanceRegistry::new();
+        let before = reg.metadata_bytes();
+        for i in 0..100 {
+            reg.stamp(AvId::new(i), SimTime::ZERO, Stamp::Published { link: LinkId::new(0) });
+        }
+        let after = reg.metadata_bytes();
+        assert_eq!(after - before, 100 * 40);
+    }
+
+    #[test]
+    fn dump_json_is_well_formed() {
+        let mut reg = ProvenanceRegistry::new();
+        reg.concept("a", Relation::MayDetermine, "b");
+        let v = reg.dump_json();
+        assert_eq!(v.get("concept_map").unwrap().as_arr().unwrap().len(), 1);
+        assert!(v.get("metadata_bytes").unwrap().as_u64().unwrap() > 0);
+        // emitted text reparses
+        let text = v.to_string();
+        assert_eq!(crate::util::Json::parse(&text).unwrap(), v);
+    }
+}

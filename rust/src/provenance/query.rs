@@ -1,0 +1,225 @@
+//! Query tools over the metadata registry — §III-L.
+//!
+//! "Thanks to a strict data format, special tools can be provided for
+//! querying these logs, so that users don't need to rely on matching text
+//! against expensive regular expressions and hoping for the best."
+//!
+//! Includes the E6 "mashed potato" estimator: how many candidate journeys
+//! would an investigator have to consider to reconstruct a packet's path
+//! *without* the traveller log, versus just reading the passport with it.
+
+use super::{ProvenanceRegistry, Stamp};
+use crate::util::{AvId, RunId, TaskId};
+use std::collections::{HashSet, VecDeque};
+
+/// Read-only query facade over a registry.
+pub struct ProvenanceQuery<'a> {
+    reg: &'a ProvenanceRegistry,
+}
+
+impl<'a> ProvenanceQuery<'a> {
+    pub fn new(reg: &'a ProvenanceRegistry) -> Self {
+        Self { reg }
+    }
+
+    /// Full ancestry (transitive parents) of an AV — the forensic
+    /// "which inputs led to this outcome" question.
+    pub fn ancestors(&self, av: AvId) -> Vec<AvId> {
+        let mut seen = HashSet::new();
+        let mut queue = VecDeque::from([av]);
+        let mut out = Vec::new();
+        while let Some(cur) = queue.pop_front() {
+            if let Some(p) = self.reg.passport(cur) {
+                for &parent in &p.parents {
+                    if seen.insert(parent) {
+                        out.push(parent);
+                        queue.push_back(parent);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Transitive descendants — "which outcomes must be recomputed if this
+    /// input (or the software that read it) was wrong" (§III-J rollback).
+    pub fn descendants(&self, av: AvId) -> Vec<AvId> {
+        let mut seen = HashSet::new();
+        let mut queue = VecDeque::from([av]);
+        let mut out = Vec::new();
+        while let Some(cur) = queue.pop_front() {
+            for &child in self.reg.children_of(cur) {
+                if seen.insert(child) {
+                    out.push(child);
+                    queue.push_back(child);
+                }
+            }
+        }
+        out
+    }
+
+    /// The software versions that touched an AV, in stamp order — "which
+    /// software version processed it and in what order?" (§III-C).
+    pub fn versions_touching(&self, av: AvId) -> Vec<(TaskId, u32)> {
+        self.reg
+            .passport(av)
+            .map(|p| {
+                p.stamps
+                    .iter()
+                    .filter_map(|s| match s.stamp {
+                        Stamp::Emitted { task, version, .. } => Some((task, version)),
+                        Stamp::Consumed { task, version, .. } => Some((task, version)),
+                        _ => None,
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// The task runs involved in producing an AV (itself + ancestors) —
+    /// the forensic reconstruction of a transactional process.
+    pub fn contributing_runs(&self, av: AvId) -> Vec<RunId> {
+        let mut avs = vec![av];
+        avs.extend(self.ancestors(av));
+        let mut runs = Vec::new();
+        let mut seen = HashSet::new();
+        for a in avs {
+            if let Some(p) = self.reg.passport(a) {
+                for s in &p.stamps {
+                    if let Stamp::Emitted { run, .. } = s.stamp {
+                        if seen.insert(run) {
+                            runs.push(run);
+                        }
+                    }
+                }
+            }
+        }
+        runs
+    }
+
+    /// Did the AV ever cross a region boundary, and how many bytes moved?
+    pub fn wan_hops(&self, av: AvId) -> Vec<(u64, String)> {
+        self.reg
+            .passport(av)
+            .map(|p| {
+                p.stamps
+                    .iter()
+                    .filter_map(|s| match &s.stamp {
+                        Stamp::Transferred { from, to, bytes } => {
+                            Some((*bytes, format!("{from}->{to}")))
+                        }
+                        _ => None,
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// E6 estimator. With the passport, reconstructing a journey costs
+    /// O(stamps). Without it, an investigator must consider every
+    /// combination of candidate producer runs along the pipeline: given
+    /// `runs_per_stage` observed runs at each of `depth` stages, that is
+    /// runs_per_stage^depth candidate paths (capped to avoid overflow).
+    /// Returns (with_metadata_steps, without_metadata_paths).
+    pub fn reconstruction_cost(&self, av: AvId, runs_per_stage: u64) -> (u64, u64) {
+        let with = self.reg.passport(av).map_or(0, |p| p.stamps.len() as u64)
+            + self.ancestors(av).len() as u64;
+        let depth = 1 + self
+            .ancestors(av)
+            .iter()
+            .filter(|a| {
+                self.reg
+                    .passport(**a)
+                    .map(|p| p.stamps.iter().any(|s| matches!(s.stamp, Stamp::Emitted { .. })))
+                    .unwrap_or(false)
+            })
+            .count() as u32;
+        let without = runs_per_stage.saturating_pow(depth.min(20));
+        (with.max(1), without)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::provenance::Stamp;
+    use crate::util::{RegionId, SimTime};
+
+    fn emitted(task: u64, run: u64) -> Stamp {
+        Stamp::Emitted {
+            task: TaskId::new(task),
+            run: RunId::new(run),
+            version: 1,
+            region: RegionId::new(0),
+        }
+    }
+
+    /// Build a 3-stage chain a -> b -> c with a side parent d -> c.
+    fn chain() -> ProvenanceRegistry {
+        let mut reg = ProvenanceRegistry::new();
+        reg.birth(AvId::new(0), &[], SimTime::micros(0), emitted(0, 0)); // a
+        reg.birth(AvId::new(3), &[], SimTime::micros(0), emitted(3, 3)); // d
+        reg.birth(AvId::new(1), &[AvId::new(0)], SimTime::micros(1), emitted(1, 1)); // b
+        reg.birth(
+            AvId::new(2),
+            &[AvId::new(1), AvId::new(3)],
+            SimTime::micros(2),
+            emitted(2, 2),
+        ); // c
+        reg
+    }
+
+    #[test]
+    fn ancestors_are_transitive() {
+        let reg = chain();
+        let q = ProvenanceQuery::new(&reg);
+        let mut anc = q.ancestors(AvId::new(2));
+        anc.sort();
+        assert_eq!(anc, vec![AvId::new(0), AvId::new(1), AvId::new(3)]);
+    }
+
+    #[test]
+    fn descendants_are_transitive() {
+        let reg = chain();
+        let q = ProvenanceQuery::new(&reg);
+        let mut desc = q.descendants(AvId::new(0));
+        desc.sort();
+        assert_eq!(desc, vec![AvId::new(1), AvId::new(2)]);
+        assert_eq!(q.descendants(AvId::new(2)), vec![]);
+    }
+
+    #[test]
+    fn contributing_runs_cover_lineage() {
+        let reg = chain();
+        let q = ProvenanceQuery::new(&reg);
+        let mut runs = q.contributing_runs(AvId::new(2));
+        runs.sort();
+        assert_eq!(runs, vec![RunId::new(0), RunId::new(1), RunId::new(2), RunId::new(3)]);
+    }
+
+    #[test]
+    fn wan_hops_read_from_stamps() {
+        let mut reg = chain();
+        reg.stamp(
+            AvId::new(1),
+            SimTime::micros(5),
+            Stamp::Transferred { from: RegionId::new(0), to: RegionId::new(1), bytes: 512 },
+        );
+        let q = ProvenanceQuery::new(&reg);
+        let hops = q.wan_hops(AvId::new(1));
+        assert_eq!(hops.len(), 1);
+        assert_eq!(hops[0].0, 512);
+        assert!(q.wan_hops(AvId::new(0)).is_empty());
+    }
+
+    #[test]
+    fn reconstruction_cost_explodes_without_metadata() {
+        let reg = chain();
+        let q = ProvenanceQuery::new(&reg);
+        let (with, without) = q.reconstruction_cost(AvId::new(2), 10);
+        // passport walk is linear; inference is exponential in depth
+        assert!(with < 20);
+        assert!(without >= 10u64.pow(3));
+        assert!(without / with.max(1) > 50);
+    }
+}

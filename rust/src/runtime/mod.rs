@@ -1,0 +1,232 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
+//! rust hot path. Python never runs here — `make artifacts` ran once at
+//! build time (L2/L1), emitting `artifacts/*.hlo.txt` + `manifest.json`.
+//!
+//! HLO *text* is the interchange format (not serialized protos): jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids. Modules are lowered with `return_tuple=True`, so
+//! every execution returns a tuple literal we decompose.
+
+use crate::av::Payload;
+use crate::util::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// Shape+dtype of one executable input/output, from the manifest.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Manifest entry for one artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub doc: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+fn tensor_specs(v: &Json) -> Result<Vec<TensorSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected array of tensor specs"))?
+        .iter()
+        .map(|t| {
+            let shape = t
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = t
+                .get("dtype")
+                .and_then(Json::as_str)
+                .unwrap_or("float32")
+                .to_string();
+            Ok(TensorSpec { shape, dtype })
+        })
+        .collect()
+}
+
+/// Parse `manifest.json` text.
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactMeta>> {
+    let v = Json::parse(text).context("manifest.json parse")?;
+    let arts = v
+        .get("artifacts")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+    arts.iter()
+        .map(|a| {
+            Ok(ArtifactMeta {
+                name: a
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact missing name"))?
+                    .to_string(),
+                file: a
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact missing file"))?
+                    .to_string(),
+                doc: a.get("doc").and_then(Json::as_str).unwrap_or("").to_string(),
+                inputs: tensor_specs(a.get("inputs").ok_or_else(|| anyhow!("no inputs"))?)?,
+                outputs: tensor_specs(a.get("outputs").ok_or_else(|| anyhow!("no outputs"))?)?,
+            })
+        })
+        .collect()
+}
+
+/// One compiled executable. Compilation happens once at load; `run` is the
+/// request-path operation.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+    /// executions performed (metrics)
+    pub runs: std::cell::Cell<u64>,
+}
+
+impl Executable {
+    /// Execute with f32 tensor payloads; shapes are validated against the
+    /// manifest. Returns one `Payload::Tensor` per manifest output.
+    pub fn run(&self, inputs: &[&Payload]) -> Result<Vec<Payload>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (p, spec)) in inputs.iter().zip(&self.meta.inputs).enumerate() {
+            let (shape, data) = p
+                .as_tensor()
+                .ok_or_else(|| anyhow!("{}: input {i} is not a tensor", self.meta.name))?;
+            if shape != spec.shape.as_slice() {
+                bail!(
+                    "{}: input {i} shape {:?} != manifest {:?}",
+                    self.meta.name,
+                    shape,
+                    spec.shape
+                );
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.meta.name,
+                parts.len(),
+                self.meta.outputs.len()
+            );
+        }
+        self.runs.set(self.runs.get() + 1);
+        parts
+            .into_iter()
+            .zip(&self.meta.outputs)
+            .map(|(lit, spec)| {
+                let data = lit.to_vec::<f32>()?;
+                if data.len() != spec.elements() {
+                    bail!("{}: output size mismatch", self.meta.name);
+                }
+                Ok(Payload::tensor(&spec.shape, data))
+            })
+            .collect()
+    }
+}
+
+/// The artifact registry: PJRT CPU client + compiled executables by name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Vec<ArtifactMeta>,
+    compiled: HashMap<String, Rc<Executable>>,
+}
+
+impl Runtime {
+    /// Open `dir` (containing manifest.json + *.hlo.txt). Executables are
+    /// compiled lazily on first `load`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).with_context(|| {
+            format!("reading {}/manifest.json (run `make artifacts`)", dir.display())
+        })?;
+        let manifest = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, dir, manifest, compiled: HashMap::new() })
+    }
+
+    /// Default artifacts directory (workspace-relative).
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+    }
+
+    pub fn manifest(&self) -> &[ArtifactMeta] {
+        &self.manifest
+    }
+
+    /// Load (compile-once) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.compiled.get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .manifest
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        let proto = xla::HloModuleProto::from_text_file(self.dir.join(&meta.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let rc = Rc::new(Executable { meta, exe, runs: std::cell::Cell::new(0) });
+        self.compiled.insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let text = r#"{"format":"hlo-text/return-tuple","artifacts":[
+            {"name":"m","file":"m.hlo.txt","doc":"d",
+             "inputs":[{"shape":[2,3],"dtype":"float32"}],
+             "outputs":[{"shape":[3],"dtype":"float32"}]}]}"#;
+        let m = parse_manifest(text).unwrap();
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].name, "m");
+        assert_eq!(m[0].inputs[0].shape, vec![2, 3]);
+        assert_eq!(m[0].outputs[0].elements(), 3);
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(parse_manifest("{}").is_err());
+        assert!(parse_manifest(r#"{"artifacts":[{"file":"x"}]}"#).is_err());
+        assert!(parse_manifest("not json").is_err());
+    }
+
+    // Execution-path tests (real PJRT + real artifacts) live in
+    // rust/tests/runtime_e2e.rs — they need `make artifacts` to have run.
+}

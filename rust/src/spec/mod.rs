@@ -1,0 +1,279 @@
+//! The wiring language — fig. 5.
+//!
+//! ```text
+//! [tfmodel]
+//! (in) learn-tf (model)
+//! (in[10/2]) convert (json)
+//! (json, lookup?) predict (result)
+//! ```
+//!
+//! Each line wires `(inputs) task (outputs)`. Inputs may carry buffer
+//! specs `name[N]`, sliding windows `name[N/S]` (§III-I) or a `?` suffix
+//! marking an *implicit service lookup* (§III-D — the client-server call
+//! recorded for forensics rather than wired as a stream). Wires connect by
+//! name: any task producing wire `x` feeds every task consuming `x`.
+//! Cycles are legal (DCGs, §I). Wires nobody produces are pipeline inputs
+//! (file-drop/sensor in-trays); wires nobody consumes are pipeline outputs.
+//!
+//! Per-task attributes extend the fig. 5 syntax after the output list:
+//! `@policy=swap @region=edge-0 @notify=poll:100ms @rate=50ms @cache=risk`.
+//! Kubernetes never appears — platform transparency is promise #1 (§III-B).
+
+pub mod parse;
+
+pub use parse::{parse, ParseError};
+
+use crate::policy::{BufferSpec, SnapshotPolicy};
+use std::collections::BTreeMap;
+
+/// One input port reference.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct InputSpec {
+    /// Wire name this port consumes.
+    pub wire: String,
+    pub buffer: BufferSpec,
+    /// `name?` — an implicit out-of-band service lookup, not a stream.
+    pub service: bool,
+}
+
+/// One task line of the wiring diagram.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskSpec {
+    pub name: String,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<String>,
+    /// Raw `@key=value` attributes.
+    pub attrs: BTreeMap<String, String>,
+}
+
+impl TaskSpec {
+    pub fn attr(&self, key: &str) -> Option<&str> {
+        self.attrs.get(key).map(|s| s.as_str())
+    }
+
+    /// Parsed snapshot policy (default AllNew).
+    pub fn policy(&self) -> SnapshotPolicy {
+        self.attr("policy").and_then(SnapshotPolicy::parse).unwrap_or_default()
+    }
+
+    pub fn is_source(&self) -> bool {
+        self.inputs.iter().all(|i| i.service)
+    }
+
+    pub fn stream_inputs(&self) -> impl Iterator<Item = &InputSpec> {
+        self.inputs.iter().filter(|i| !i.service)
+    }
+
+    pub fn service_inputs(&self) -> impl Iterator<Item = &InputSpec> {
+        self.inputs.iter().filter(|i| i.service)
+    }
+}
+
+/// A parsed pipeline description.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PipelineSpec {
+    pub name: String,
+    pub tasks: Vec<TaskSpec>,
+}
+
+/// Validation failure, with the task at fault where applicable.
+#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+pub enum SpecError {
+    #[error("duplicate task name '{0}'")]
+    DuplicateTask(String),
+    #[error("task '{task}': window slide {slide} exceeds window size {count}")]
+    BadWindow { task: String, count: usize, slide: usize },
+    #[error("task '{task}': unknown attribute value '@{key}={value}'")]
+    BadAttr { task: String, key: String, value: String },
+    #[error("task '{task}' consumes its own output '{wire}' directly (degenerate 1-cycle)")]
+    SelfLoop { task: String, wire: String },
+    #[error("pipeline has no tasks")]
+    Empty,
+}
+
+impl PipelineSpec {
+    /// Static validation: structural sanity before deployment. Cycles are
+    /// *not* errors (the paper's DCGs), but self-loops through the same
+    /// wire are (a task re-triggering itself on every output is a bug).
+    pub fn validate(&self) -> Result<(), SpecError> {
+        if self.tasks.is_empty() {
+            return Err(SpecError::Empty);
+        }
+        let mut names = std::collections::HashSet::new();
+        for t in &self.tasks {
+            if !names.insert(&t.name) {
+                return Err(SpecError::DuplicateTask(t.name.clone()));
+            }
+            for i in &t.inputs {
+                if i.buffer.slide > i.buffer.count {
+                    return Err(SpecError::BadWindow {
+                        task: t.name.clone(),
+                        count: i.buffer.count,
+                        slide: i.buffer.slide,
+                    });
+                }
+                if !i.service && t.outputs.contains(&i.wire) {
+                    return Err(SpecError::SelfLoop { task: t.name.clone(), wire: i.wire.clone() });
+                }
+            }
+            if let Some(p) = t.attr("policy") {
+                if SnapshotPolicy::parse(p).is_none() {
+                    return Err(SpecError::BadAttr {
+                        task: t.name.clone(),
+                        key: "policy".into(),
+                        value: p.into(),
+                    });
+                }
+            }
+            if let Some(n) = t.attr("notify") {
+                if n != "push" && !n.starts_with("poll:") {
+                    return Err(SpecError::BadAttr {
+                        task: t.name.clone(),
+                        key: "notify".into(),
+                        value: n.into(),
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn task(&self, name: &str) -> Option<&TaskSpec> {
+        self.tasks.iter().find(|t| t.name == name)
+    }
+
+    /// Wires nobody produces — the pipeline's external in-trays.
+    pub fn external_wires(&self) -> Vec<String> {
+        let produced: std::collections::HashSet<&str> =
+            self.tasks.iter().flat_map(|t| t.outputs.iter().map(|s| s.as_str())).collect();
+        let mut seen = std::collections::HashSet::new();
+        let mut out = Vec::new();
+        for t in &self.tasks {
+            for i in t.stream_inputs() {
+                if !produced.contains(i.wire.as_str()) && seen.insert(i.wire.clone()) {
+                    out.push(i.wire.clone());
+                }
+            }
+        }
+        out
+    }
+
+    /// Wires nobody consumes — the pipeline's outputs.
+    pub fn sink_wires(&self) -> Vec<String> {
+        let consumed: std::collections::HashSet<&str> = self
+            .tasks
+            .iter()
+            .flat_map(|t| t.stream_inputs().map(|i| i.wire.as_str()))
+            .collect();
+        let mut seen = std::collections::HashSet::new();
+        let mut out = Vec::new();
+        for t in &self.tasks {
+            for w in &t.outputs {
+                if !consumed.contains(w.as_str()) && seen.insert(w.clone()) {
+                    out.push(w.clone());
+                }
+            }
+        }
+        out
+    }
+
+    /// Pretty-print back to the fig. 5 syntax (round-trip tested).
+    pub fn to_text(&self) -> String {
+        let mut s = format!("[{}]\n", self.name);
+        for t in &self.tasks {
+            let ins: Vec<String> = t
+                .inputs
+                .iter()
+                .map(|i| {
+                    let mut x = i.wire.clone();
+                    if i.buffer.is_window() {
+                        x.push_str(&format!("[{}/{}]", i.buffer.count, i.buffer.slide));
+                    } else if i.buffer.count > 1 {
+                        x.push_str(&format!("[{}]", i.buffer.count));
+                    }
+                    if i.service {
+                        x.push('?');
+                    }
+                    x
+                })
+                .collect();
+            s.push_str(&format!("({}) {} ({})", ins.join(", "), t.name, t.outputs.join(", ")));
+            for (k, v) in &t.attrs {
+                s.push_str(&format!(" @{k}={v}"));
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tfmodel() -> PipelineSpec {
+        parse(
+            "[tfmodel]\n\
+             # fig. 5 of the paper\n\
+             (in) learn-tf (model)\n\
+             (in[10/2]) convert (json)\n\
+             (json, lookup?) predict (result)\n",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn fig5_parses_and_validates() {
+        let p = tfmodel();
+        assert_eq!(p.name, "tfmodel");
+        assert_eq!(p.tasks.len(), 3);
+        p.validate().unwrap();
+        let convert = p.task("convert").unwrap();
+        assert_eq!(convert.inputs[0].buffer, BufferSpec::window(10, 2));
+        let predict = p.task("predict").unwrap();
+        assert!(predict.inputs[1].service, "lookup? is a service input");
+    }
+
+    #[test]
+    fn external_and_sink_wires() {
+        let p = tfmodel();
+        assert_eq!(p.external_wires(), vec!["in".to_string()]);
+        let sinks = p.sink_wires();
+        assert!(sinks.contains(&"result".to_string()));
+        assert!(sinks.contains(&"model".to_string()), "model feeds a service, not a wire");
+    }
+
+    #[test]
+    fn roundtrip_to_text() {
+        let p = tfmodel();
+        let p2 = parse(&p.to_text()).unwrap();
+        assert_eq!(p, p2);
+    }
+
+    #[test]
+    fn duplicate_task_rejected() {
+        let p = parse("[x]\n(a) t (b)\n(b) t (c)\n").unwrap();
+        assert_eq!(p.validate(), Err(SpecError::DuplicateTask("t".into())));
+    }
+
+    #[test]
+    fn self_loop_rejected_but_long_cycles_allowed() {
+        let p = parse("[x]\n(a) t (a)\n").unwrap();
+        assert!(matches!(p.validate(), Err(SpecError::SelfLoop { .. })));
+        // two-task feedback loop is a legal DCG
+        let p = parse("[x]\n(a, fb) t (b)\n(b) u (fb)\n").unwrap();
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn bad_policy_attr_rejected() {
+        let p = parse("[x]\n(a) t (b) @policy=frobnicate\n").unwrap();
+        assert!(matches!(p.validate(), Err(SpecError::BadAttr { .. })));
+    }
+
+    #[test]
+    fn policy_attr_parsed() {
+        let p = parse("[x]\n(a, c) t (b) @policy=swap\n").unwrap();
+        assert_eq!(p.task("t").unwrap().policy(), SnapshotPolicy::SwapNewForOld);
+    }
+}

@@ -1,0 +1,221 @@
+//! Parser for the fig. 5 wiring language. Hand-rolled recursive descent —
+//! the grammar is line-oriented and tiny:
+//!
+//! ```text
+//! pipeline := header? line*
+//! header   := '[' name ']'
+//! line     := '(' inputs? ')' taskname '(' outputs? ')' attr*
+//! inputs   := input (',' input)*
+//! input    := wire ('[' N ('/' S)? ']')? '?'?
+//! attr     := '@' key '=' value
+//! ```
+//! `#` starts a comment; blank lines are ignored.
+
+use super::{InputSpec, PipelineSpec, TaskSpec};
+use crate::policy::BufferSpec;
+use std::collections::BTreeMap;
+
+/// Parse failure with line context.
+#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+#[error("parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+fn err(line: usize, msg: impl Into<String>) -> ParseError {
+    ParseError { line, msg: msg.into() }
+}
+
+/// Parse a full pipeline description.
+pub fn parse(src: &str) -> Result<PipelineSpec, ParseError> {
+    let mut spec = PipelineSpec { name: "pipeline".to_string(), tasks: Vec::new() };
+    for (idx, raw) in src.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated [pipeline-name]"))?;
+            if name.is_empty() {
+                return Err(err(lineno, "empty pipeline name"));
+            }
+            spec.name = name.trim().to_string();
+            continue;
+        }
+        spec.tasks.push(parse_task_line(line, lineno)?);
+    }
+    Ok(spec)
+}
+
+fn strip_comment(line: &str) -> &str {
+    match line.find('#') {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+fn parse_task_line(line: &str, lineno: usize) -> Result<TaskSpec, ParseError> {
+    let (inputs_src, rest) = take_parens(line, lineno)?;
+    let rest = rest.trim_start();
+    let name_end = rest
+        .find('(')
+        .ok_or_else(|| err(lineno, "expected '(' starting output list"))?;
+    let name = rest[..name_end].trim();
+    if name.is_empty() {
+        return Err(err(lineno, "missing task name between input and output lists"));
+    }
+    if !name.chars().all(|c| c.is_alphanumeric() || matches!(c, '-' | '_' | '.')) {
+        return Err(err(lineno, format!("bad task name '{name}'")));
+    }
+    let (outputs_src, tail) = take_parens(&rest[name_end..], lineno)?;
+
+    let inputs = split_list(inputs_src)
+        .into_iter()
+        .map(|item| parse_input(&item, lineno))
+        .collect::<Result<Vec<_>, _>>()?;
+    let outputs: Vec<String> = split_list(outputs_src)
+        .into_iter()
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+
+    let mut attrs = BTreeMap::new();
+    for tok in tail.split_whitespace() {
+        let tok = tok
+            .strip_prefix('@')
+            .ok_or_else(|| err(lineno, format!("unexpected trailing token '{tok}'")))?;
+        let (k, v) = tok
+            .split_once('=')
+            .ok_or_else(|| err(lineno, format!("attribute '@{tok}' missing '=value'")))?;
+        attrs.insert(k.to_string(), v.to_string());
+    }
+
+    Ok(TaskSpec { name: name.to_string(), inputs, outputs, attrs })
+}
+
+/// Extract `(...)` from the front; return (contents, remainder).
+fn take_parens<'a>(src: &'a str, lineno: usize) -> Result<(&'a str, &'a str), ParseError> {
+    let src = src.trim_start();
+    let inner = src
+        .strip_prefix('(')
+        .ok_or_else(|| err(lineno, "expected '('"))?;
+    let close = inner
+        .find(')')
+        .ok_or_else(|| err(lineno, "unterminated '('"))?;
+    Ok((&inner[..close], &inner[close + 1..]))
+}
+
+fn split_list(src: &str) -> Vec<String> {
+    src.split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+/// `wire`, `wire[N]`, `wire[N/S]`, each optionally suffixed `?`.
+fn parse_input(item: &str, lineno: usize) -> Result<InputSpec, ParseError> {
+    let mut item = item.trim();
+    let service = item.ends_with('?');
+    if service {
+        item = item[..item.len() - 1].trim_end();
+    }
+    let (wire, buffer) = match item.find('[') {
+        None => (item, BufferSpec::default()),
+        Some(i) => {
+            let wire = &item[..i];
+            let spec = item[i + 1..]
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, format!("unterminated '[' in '{item}'")))?;
+            let buffer = match spec.split_once('/') {
+                None => BufferSpec::buffer(
+                    spec.parse()
+                        .map_err(|_| err(lineno, format!("bad buffer size '{spec}'")))?,
+                ),
+                Some((n, s)) => {
+                    let n: usize =
+                        n.parse().map_err(|_| err(lineno, format!("bad window size '{n}'")))?;
+                    let s: usize =
+                        s.parse().map_err(|_| err(lineno, format!("bad slide '{s}'")))?;
+                    if s > n || s == 0 || n == 0 {
+                        return Err(err(lineno, format!("bad window [{n}/{s}]")));
+                    }
+                    BufferSpec::window(n, s)
+                }
+            };
+            (wire, buffer)
+        }
+    };
+    if wire.is_empty() || !wire.chars().all(|c| c.is_alphanumeric() || matches!(c, '-' | '_' | '.'))
+    {
+        return Err(err(lineno, format!("bad wire name '{wire}'")));
+    }
+    Ok(InputSpec { wire: wire.to_string(), buffer, service })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimal_source_task() {
+        let p = parse("() ingest (raw)").unwrap();
+        assert_eq!(p.tasks.len(), 1);
+        assert!(p.tasks[0].inputs.is_empty());
+        assert_eq!(p.tasks[0].outputs, vec!["raw"]);
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let p = parse("# hello\n\n[p] # trailing\n() s (x) # more\n").unwrap();
+        assert_eq!(p.name, "p");
+        assert_eq!(p.tasks.len(), 1);
+    }
+
+    #[test]
+    fn buffer_and_window_specs() {
+        let p = parse("(a[5], b[10/2], c) t (o)").unwrap();
+        let t = &p.tasks[0];
+        assert_eq!(t.inputs[0].buffer, BufferSpec::buffer(5));
+        assert_eq!(t.inputs[1].buffer, BufferSpec::window(10, 2));
+        assert_eq!(t.inputs[2].buffer, BufferSpec::default());
+    }
+
+    #[test]
+    fn service_suffix() {
+        let p = parse("(x, dns?) t (o)").unwrap();
+        assert!(!p.tasks[0].inputs[0].service);
+        assert!(p.tasks[0].inputs[1].service);
+        assert_eq!(p.tasks[0].inputs[1].wire, "dns");
+    }
+
+    #[test]
+    fn attributes_parse() {
+        let p = parse("(a) t (b) @policy=merge @region=edge-1 @notify=poll:50ms").unwrap();
+        let t = &p.tasks[0];
+        assert_eq!(t.attr("policy"), Some("merge"));
+        assert_eq!(t.attr("region"), Some("edge-1"));
+        assert_eq!(t.attr("notify"), Some("poll:50ms"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("[ok]\n(a t (b)\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("(a) t (b) garbage").unwrap_err();
+        assert!(e.msg.contains("garbage"));
+        let e = parse("(a[3/9]) t (b)").unwrap_err();
+        assert!(e.msg.contains("window"));
+        let e = parse("(a) bad name (b)").unwrap_err();
+        assert!(e.msg.contains("bad task name"));
+    }
+
+    #[test]
+    fn empty_window_bracket_rejected() {
+        assert!(parse("(a[]) t (b)").is_err());
+        assert!(parse("(a[0/0]) t (b)").is_err());
+    }
+}

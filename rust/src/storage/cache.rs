@@ -1,0 +1,256 @@
+//! Local caching close to dependents — Principle 2 (§III-F) and §III-J.
+//!
+//! "Data that are chosen to be passed down the line to the next dependent
+//! task, will be cached local to the dependent task, for a policy
+//! determined length of time, if the intermediate result is combined with
+//! others." And: "a suitable default behaviour could be to cache
+//! everything, but to purge the caches at different rates depending on the
+//! risk of recomputation."
+//!
+//! The cache holds *copies* of object payload bytes near a consumer, so a
+//! hit avoids both the storage read and any WAN transfer. Purge policy is
+//! per-cache, including the paper's risk-weighted variant that keeps
+//! combined intermediates longer than pass-through ones.
+
+use crate::util::hash::FastMap;
+use crate::util::{ObjectId, SimDuration, SimTime};
+
+
+/// When entries are evicted.
+#[derive(Clone, Copy, Debug)]
+pub enum PurgePolicy {
+    /// Keep everything (the paper's suggested default for big-data reuse).
+    Never,
+    /// Time-to-live from last touch.
+    Ttl(SimDuration),
+    /// Byte-capacity LRU.
+    LruBytes(u64),
+    /// Risk-weighted TTL (Principle 2): intermediates that were *combined*
+    /// with other inputs are costlier to recompute, so they live longer.
+    RiskWeighted {
+        combined_ttl: SimDuration,
+        passthrough_ttl: SimDuration,
+    },
+}
+
+#[derive(Clone, Debug)]
+struct Entry {
+    bytes: u64,
+    last_used: SimTime,
+    inserted: SimTime,
+    /// Was this intermediate combined with other inputs downstream?
+    combined: bool,
+    /// LRU tiebreaker.
+    touch_seq: u64,
+}
+
+/// One cache instance (the platform creates one per task agent location).
+#[derive(Clone, Debug)]
+pub struct CacheManager {
+    policy: PurgePolicy,
+    entries: FastMap<ObjectId, Entry>,
+    pub bytes: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    seq: u64,
+}
+
+impl CacheManager {
+    pub fn new(policy: PurgePolicy) -> Self {
+        Self {
+            policy,
+            entries: FastMap::default(),
+            bytes: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            seq: 0,
+        }
+    }
+
+    pub fn policy(&self) -> PurgePolicy {
+        self.policy
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Record an object as cached here.
+    pub fn insert(&mut self, id: ObjectId, bytes: u64, combined: bool, now: SimTime) {
+        self.seq += 1;
+        let prev = self.entries.insert(
+            id,
+            Entry { bytes, last_used: now, inserted: now, combined, touch_seq: self.seq },
+        );
+        self.bytes += bytes;
+        if let Some(p) = prev {
+            self.bytes -= p.bytes;
+        }
+        self.enforce_capacity();
+    }
+
+    /// Look up; a hit refreshes recency. Callers charge zero/local latency
+    /// on hit, full storage+WAN latency on miss.
+    pub fn lookup(&mut self, id: ObjectId, now: SimTime) -> bool {
+        self.purge(now);
+        self.seq += 1;
+        match self.entries.get_mut(&id) {
+            Some(e) => {
+                e.last_used = now;
+                e.touch_seq = self.seq;
+                self.hits += 1;
+                true
+            }
+            None => {
+                self.misses += 1;
+                false
+            }
+        }
+    }
+
+    pub fn contains(&self, id: ObjectId) -> bool {
+        self.entries.contains_key(&id)
+    }
+
+    pub fn invalidate(&mut self, id: ObjectId) {
+        if let Some(e) = self.entries.remove(&id) {
+            self.bytes -= e.bytes;
+            self.evictions += 1;
+        }
+    }
+
+    /// Apply the purge policy at virtual time `now`.
+    pub fn purge(&mut self, now: SimTime) {
+        let expired: Vec<ObjectId> = match self.policy {
+            PurgePolicy::Never | PurgePolicy::LruBytes(_) => vec![],
+            PurgePolicy::Ttl(ttl) => self
+                .entries
+                .iter()
+                .filter(|(_, e)| now.saturating_sub(e.last_used) > ttl)
+                .map(|(id, _)| *id)
+                .collect(),
+            PurgePolicy::RiskWeighted { combined_ttl, passthrough_ttl } => self
+                .entries
+                .iter()
+                .filter(|(_, e)| {
+                    let ttl = if e.combined { combined_ttl } else { passthrough_ttl };
+                    now.saturating_sub(e.last_used) > ttl
+                })
+                .map(|(id, _)| *id)
+                .collect(),
+        };
+        for id in expired {
+            self.invalidate(id);
+        }
+    }
+
+    fn enforce_capacity(&mut self) {
+        if let PurgePolicy::LruBytes(cap) = self.policy {
+            while self.bytes > cap && !self.entries.is_empty() {
+                // evict least-recently-used (oldest touch_seq)
+                let victim = self
+                    .entries
+                    .iter()
+                    .min_by_key(|(_, e)| e.touch_seq)
+                    .map(|(id, _)| *id)
+                    .unwrap();
+                self.invalidate(victim);
+            }
+        }
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Age of an entry (for tests and the provenance "cache kept" stamps).
+    pub fn age(&self, id: ObjectId, now: SimTime) -> Option<SimDuration> {
+        self.entries.get(&id).map(|e| now.saturating_sub(e.inserted))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn oid(n: u64) -> ObjectId {
+        ObjectId::new(n)
+    }
+
+    #[test]
+    fn hit_and_miss_accounting() {
+        let mut c = CacheManager::new(PurgePolicy::Never);
+        c.insert(oid(1), 100, false, SimTime::ZERO);
+        assert!(c.lookup(oid(1), SimTime::millis(1)));
+        assert!(!c.lookup(oid(2), SimTime::millis(1)));
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ttl_purges_idle_entries() {
+        let mut c = CacheManager::new(PurgePolicy::Ttl(SimDuration::millis(10)));
+        c.insert(oid(1), 10, false, SimTime::ZERO);
+        assert!(c.lookup(oid(1), SimTime::millis(5))); // refreshed at 5ms
+        assert!(c.lookup(oid(1), SimTime::millis(14))); // within ttl of touch
+        assert!(!c.lookup(oid(1), SimTime::millis(30))); // expired
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn lru_capacity_evicts_oldest() {
+        let mut c = CacheManager::new(PurgePolicy::LruBytes(250));
+        c.insert(oid(1), 100, false, SimTime::micros(1));
+        c.insert(oid(2), 100, false, SimTime::micros(2));
+        assert!(c.lookup(oid(1), SimTime::micros(3))); // 1 is now most recent
+        c.insert(oid(3), 100, false, SimTime::micros(4)); // over cap: evict 2
+        assert!(c.contains(oid(1)));
+        assert!(!c.contains(oid(2)));
+        assert!(c.contains(oid(3)));
+        assert!(c.bytes <= 250);
+    }
+
+    #[test]
+    fn risk_weighted_keeps_combined_longer() {
+        let mut c = CacheManager::new(PurgePolicy::RiskWeighted {
+            combined_ttl: SimDuration::secs(10),
+            passthrough_ttl: SimDuration::millis(1),
+        });
+        c.insert(oid(1), 10, true, SimTime::ZERO); // combined
+        c.insert(oid(2), 10, false, SimTime::ZERO); // passthrough
+        c.purge(SimTime::secs(1));
+        assert!(c.contains(oid(1)));
+        assert!(!c.contains(oid(2)));
+    }
+
+    #[test]
+    fn reinsert_replaces_bytes() {
+        let mut c = CacheManager::new(PurgePolicy::Never);
+        c.insert(oid(1), 100, false, SimTime::ZERO);
+        c.insert(oid(1), 40, false, SimTime::millis(1));
+        assert_eq!(c.bytes, 40);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn never_policy_keeps_everything() {
+        let mut c = CacheManager::new(PurgePolicy::Never);
+        for i in 0..100 {
+            c.insert(oid(i), 1 << 20, false, SimTime::ZERO);
+        }
+        c.purge(SimTime::secs(3600));
+        assert_eq!(c.len(), 100);
+    }
+}

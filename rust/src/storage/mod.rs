@@ -1,0 +1,306 @@
+//! Object storage, near and far — §III-G.
+//!
+//! Intermediate data live in an object store ("S3, MinIO, etc") under the
+//! pipeline manager's control; AVs carry URIs, not bytes. Two in-region
+//! tiers are modelled — host-local media and the network-attached object
+//! store — each with a (base + per-KiB) latency model, so eq. 1's
+//!
+//! ```text
+//! ρ = avg latency of internal storage / avg latency of network storage
+//! ```
+//!
+//! is a directly sweepable parameter (experiment E2). Cross-region reads
+//! are charged by the WAN topology at the link-agent layer, not here.
+
+pub mod cache;
+
+pub use cache::{CacheManager, PurgePolicy};
+
+use crate::av::{DataClass, Payload};
+use crate::util::hash::FastMap;
+use crate::util::{ContentHash, IdGen, ObjectId, RegionId, SimDuration, SimTime};
+
+use std::collections::HashMap;
+
+/// Where, within a region, an object physically lives.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum StorageTier {
+    /// Host-local media ("interior processor bus").
+    HostLocal,
+    /// In-region network object storage (S3/MinIO-like).
+    ObjectStore,
+}
+
+/// Affine latency model for one tier: `base + per_kib * ceil(size/1KiB)`.
+#[derive(Clone, Copy, Debug)]
+pub struct TierLatency {
+    pub base: SimDuration,
+    pub per_kib: SimDuration,
+}
+
+impl TierLatency {
+    pub fn charge(&self, bytes: u64) -> SimDuration {
+        let kib = bytes.div_ceil(1024);
+        SimDuration::micros(self.base.as_micros() + self.per_kib.as_micros() * kib)
+    }
+}
+
+/// Storage latency configuration. Defaults model a 2019-era cloud node:
+/// local NVMe ~100us base, object store ~2ms base but wider pipes.
+#[derive(Clone, Copy, Debug)]
+pub struct StorageConfig {
+    pub host_local: TierLatency,
+    pub object_store: TierLatency,
+}
+
+impl Default for StorageConfig {
+    fn default() -> Self {
+        Self {
+            host_local: TierLatency {
+                base: SimDuration::micros(100),
+                per_kib: SimDuration::micros(8),
+            },
+            object_store: TierLatency {
+                base: SimDuration::micros(2_000),
+                per_kib: SimDuration::micros(4),
+            },
+        }
+    }
+}
+
+impl StorageConfig {
+    /// Build a config with a given ρ (eq. 1) at a reference object size,
+    /// holding the network tier fixed and scaling the local tier.
+    pub fn with_rho(rho: f64, ref_bytes: u64) -> Self {
+        let base = Self::default();
+        let net_us = base.object_store.charge(ref_bytes).as_micros() as f64;
+        let local_us = (net_us * rho).max(1.0).round() as u64;
+        // Split ~half into the per-KiB term, and put the exact remainder in
+        // the base so `charge(ref_bytes)` hits local_us precisely.
+        let kib = ref_bytes.div_ceil(1024).max(1);
+        let per_kib = (local_us / 2) / kib;
+        let base_us = local_us - per_kib * kib;
+        Self {
+            host_local: TierLatency {
+                base: SimDuration::micros(base_us),
+                per_kib: SimDuration::micros(per_kib),
+            },
+            object_store: base.object_store,
+        }
+    }
+
+    pub fn latency(&self, tier: StorageTier, bytes: u64) -> SimDuration {
+        match tier {
+            StorageTier::HostLocal => self.host_local.charge(bytes),
+            StorageTier::ObjectStore => self.object_store.charge(bytes),
+        }
+    }
+
+    /// Measured ρ at a reference size — what eq. 1 calls the critical ratio.
+    pub fn rho(&self, ref_bytes: u64) -> f64 {
+        self.host_local.charge(ref_bytes).as_micros() as f64
+            / self.object_store.charge(ref_bytes).as_micros() as f64
+    }
+}
+
+/// One stored payload and its bookkeeping.
+#[derive(Clone, Debug)]
+pub struct StoredObject {
+    pub payload: Payload,
+    pub region: RegionId,
+    pub tier: StorageTier,
+    pub class: DataClass,
+    pub created: SimTime,
+    pub content: ContentHash,
+    pub reads: u64,
+}
+
+/// The (simulated) object store: one logical namespace, objects pinned to a
+/// (region, tier). Put/get return the virtual latency the caller must charge.
+#[derive(Debug, Default)]
+pub struct ObjectStore {
+    objects: FastMap<ObjectId, StoredObject>,
+    ids: IdGen,
+    pub cfg_by_region: HashMap<RegionId, StorageConfig>,
+    default_cfg: StorageConfig,
+    pub total_bytes: u64,
+    pub puts: u64,
+    pub gets: u64,
+}
+
+impl ObjectStore {
+    pub fn new(default_cfg: StorageConfig) -> Self {
+        Self { default_cfg, ..Default::default() }
+    }
+
+    pub fn set_region_config(&mut self, region: RegionId, cfg: StorageConfig) {
+        self.cfg_by_region.insert(region, cfg);
+    }
+
+    fn cfg(&self, region: RegionId) -> &StorageConfig {
+        self.cfg_by_region.get(&region).unwrap_or(&self.default_cfg)
+    }
+
+    /// Store a payload; returns (id, charged latency). Ghost payloads are
+    /// registered (so URIs resolve) but charge no bytes and base latency
+    /// only — wireframe runs exercise routing, not plumbing capacity.
+    pub fn put(
+        &mut self,
+        payload: Payload,
+        region: RegionId,
+        tier: StorageTier,
+        class: DataClass,
+        now: SimTime,
+    ) -> (ObjectId, SimDuration) {
+        let id = ObjectId::new(self.ids.next_raw());
+        let bytes = payload.transfer_bytes(); // ghosts: 0 — no storage accounting
+        let lat = self.cfg(region).latency(tier, bytes);
+        self.total_bytes += bytes;
+        let content = payload.content_hash();
+        self.objects.insert(
+            id,
+            StoredObject { payload, region, tier, class, created: now, content, reads: 0 },
+        );
+        self.puts += 1;
+        (id, lat)
+    }
+
+    /// Read an object from within its own region. Cross-region access is a
+    /// WAN transfer and must be planned by the link agent (see `net`).
+    pub fn get(&mut self, id: ObjectId) -> Option<(&StoredObject, SimDuration)> {
+        self.gets += 1;
+        // borrow dance: compute latency before handing out the reference
+        let (region, tier, bytes) = {
+            let o = self.objects.get(&id)?;
+            (o.region, o.tier, o.payload.transfer_bytes())
+        };
+        let lat = self.cfg(region).latency(tier, bytes);
+        let o = self.objects.get_mut(&id)?;
+        o.reads += 1;
+        Some((&*o, lat))
+    }
+
+    /// Metadata-only peek (no latency charged, no read recorded).
+    pub fn peek(&self, id: ObjectId) -> Option<&StoredObject> {
+        self.objects.get(&id)
+    }
+
+    pub fn contains(&self, id: ObjectId) -> bool {
+        self.objects.contains_key(&id)
+    }
+
+    pub fn delete(&mut self, id: ObjectId) -> bool {
+        self.objects.remove(&id).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.objects.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.objects.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> ObjectStore {
+        ObjectStore::new(StorageConfig::default())
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut s = store();
+        let p = Payload::tensor(&[4], vec![1.0, 2.0, 3.0, 4.0]);
+        let (id, put_lat) = s.put(
+            p.clone(),
+            RegionId::new(0),
+            StorageTier::HostLocal,
+            DataClass::Raw,
+            SimTime::ZERO,
+        );
+        assert!(put_lat.as_micros() > 0);
+        let (obj, get_lat) = s.get(id).unwrap();
+        assert_eq!(obj.payload, p);
+        assert_eq!(obj.reads, 1);
+        assert!(get_lat.as_micros() > 0);
+    }
+
+    #[test]
+    fn latency_scales_with_size_and_tier() {
+        let cfg = StorageConfig::default();
+        let small = cfg.latency(StorageTier::HostLocal, 1024);
+        let big = cfg.latency(StorageTier::HostLocal, 1024 * 1024);
+        assert!(big > small);
+        // object store has higher base latency ...
+        assert!(
+            cfg.latency(StorageTier::ObjectStore, 1024) > cfg.latency(StorageTier::HostLocal, 1024)
+        );
+        // ... but lower marginal cost: crossover at large sizes.
+        assert!(
+            cfg.latency(StorageTier::ObjectStore, 8 << 20)
+                < cfg.latency(StorageTier::HostLocal, 8 << 20)
+        );
+    }
+
+    #[test]
+    fn with_rho_hits_requested_ratio() {
+        for rho in [0.1, 0.5, 1.0, 2.0, 8.0] {
+            let cfg = StorageConfig::with_rho(rho, 64 * 1024);
+            let got = cfg.rho(64 * 1024);
+            assert!((got - rho).abs() / rho < 0.05, "rho {rho} got {got}");
+        }
+    }
+
+    #[test]
+    fn ghost_payloads_charge_base_latency_only() {
+        let mut s = store();
+        let (_, lat_ghost) = s.put(
+            Payload::Ghost { pretend_bytes: 100 << 20 },
+            RegionId::new(0),
+            StorageTier::ObjectStore,
+            DataClass::Ghost,
+            SimTime::ZERO,
+        );
+        let (_, lat_real) = s.put(
+            Payload::Bytes(vec![0u8; 1 << 20]),
+            RegionId::new(0),
+            StorageTier::ObjectStore,
+            DataClass::Raw,
+            SimTime::ZERO,
+        );
+        assert!(lat_ghost < lat_real);
+    }
+
+    #[test]
+    fn missing_object_is_none() {
+        let mut s = store();
+        assert!(s.get(ObjectId::new(42)).is_none());
+        assert!(!s.delete(ObjectId::new(42)));
+    }
+
+    #[test]
+    fn per_region_config_override() {
+        let mut s = store();
+        let slow = StorageConfig {
+            host_local: TierLatency {
+                base: SimDuration::millis(50),
+                per_kib: SimDuration::micros(1),
+            },
+            object_store: StorageConfig::default().object_store,
+        };
+        s.set_region_config(RegionId::new(7), slow);
+        let (id, lat) = s.put(
+            Payload::Bytes(vec![0; 10]),
+            RegionId::new(7),
+            StorageTier::HostLocal,
+            DataClass::Raw,
+            SimTime::ZERO,
+        );
+        assert!(lat >= SimDuration::millis(50));
+        let (_, lat2) = s.get(id).unwrap();
+        assert!(lat2 >= SimDuration::millis(50));
+    }
+}

@@ -1,0 +1,239 @@
+//! Built-in user-code plugins — the "major organs" a user grafts into the
+//! skeleton (§III-A) without writing containers: pass-through replication,
+//! pure-rust summarization (CPU fallback for the Pallas kernel), scaling,
+//! thresholds, and a closure wrapper for ad-hoc logic.
+
+use super::{Output, TaskCtx, UserCode};
+use crate::av::Payload;
+use crate::policy::Snapshot;
+use crate::util::SimDuration;
+use anyhow::{anyhow, Result};
+
+/// Replicate every input AV to one output wire (the paper's "trivial"
+/// data replication/distribution case).
+pub struct PassThrough {
+    pub out: std::rc::Rc<str>,
+    pub version: u32,
+}
+
+impl PassThrough {
+    pub fn new(out: &str) -> Self {
+        Self { out: std::rc::Rc::from(out), version: 1 }
+    }
+}
+
+impl UserCode for PassThrough {
+    fn version(&self) -> u32 {
+        self.version
+    }
+
+    fn run(&mut self, ctx: &mut TaskCtx<'_>, snapshot: &Snapshot) -> Result<Vec<Output>> {
+        let mut outs = Vec::new();
+        for av in snapshot.all_avs() {
+            let p = ctx.fetch(av)?;
+            outs.push(Output::new(self.out.clone(), p, av.class));
+        }
+        Ok(outs)
+    }
+
+    fn compute_cost(&self, bytes: u64) -> SimDuration {
+        SimDuration::micros(20 + bytes / 4096)
+    }
+}
+
+/// Pure-rust (N, D) → (4, D) moment sketch — same contract as the Pallas
+/// `edge_summarize` artifact; used where no Runtime is wired (and as the
+/// oracle in integration tests).
+pub struct SummarizeRs {
+    pub out: std::rc::Rc<str>,
+}
+
+impl SummarizeRs {
+    pub fn new(out: &str) -> Self {
+        Self { out: std::rc::Rc::from(out) }
+    }
+
+    /// The sketch function itself (shared with tests/benches).
+    pub fn sketch(shape: &[usize], data: &[f32]) -> Result<Payload> {
+        if shape.len() != 2 {
+            return Err(anyhow!("summarize expects (N, D), got {shape:?}"));
+        }
+        let (n, d) = (shape[0], shape[1]);
+        let mut out = vec![0.0f32; 4 * d];
+        let (sum, sumsq, mn, mx) = (0, d, 2 * d, 3 * d);
+        out[mn..mn + d].fill(f32::INFINITY);
+        out[mx..mx + d].fill(f32::NEG_INFINITY);
+        for row in 0..n {
+            for col in 0..d {
+                let x = data[row * d + col];
+                out[sum + col] += x;
+                out[sumsq + col] += x * x;
+                out[mn + col] = out[mn + col].min(x);
+                out[mx + col] = out[mx + col].max(x);
+            }
+        }
+        Ok(Payload::tensor(&[4, d], out))
+    }
+}
+
+impl UserCode for SummarizeRs {
+    fn run(&mut self, ctx: &mut TaskCtx<'_>, snapshot: &Snapshot) -> Result<Vec<Output>> {
+        let mut outs = Vec::new();
+        for av in snapshot.all_avs() {
+            let p = ctx.fetch(av)?;
+            let (shape, data) =
+                p.as_tensor().ok_or_else(|| anyhow!("summarize: non-tensor input"))?;
+            outs.push(Output::new(self.out.clone(), Self::sketch(shape, data)?, crate::av::DataClass::Summary));
+        }
+        Ok(outs)
+    }
+
+    fn compute_cost(&self, bytes: u64) -> SimDuration {
+        // streaming reduction: ~1 cycle/elem at 1 GHz → 1us per 4KB
+        SimDuration::micros(50 + bytes / 4096)
+    }
+}
+
+/// Scale every tensor element by a constant (the "matrix operations" user
+/// case in miniature).
+pub struct ScaleBy {
+    pub out: std::rc::Rc<str>,
+    pub factor: f32,
+}
+
+impl UserCode for ScaleBy {
+    fn run(&mut self, ctx: &mut TaskCtx<'_>, snapshot: &Snapshot) -> Result<Vec<Output>> {
+        let mut outs = Vec::new();
+        for av in snapshot.all_avs() {
+            let p = ctx.fetch(av)?;
+            let (shape, data) = p.as_tensor().ok_or_else(|| anyhow!("scale: non-tensor"))?;
+            let scaled: Vec<f32> = data.iter().map(|x| x * self.factor).collect();
+            outs.push(Output::new(self.out.clone(), Payload::tensor(shape, scaled), av.class));
+        }
+        Ok(outs)
+    }
+}
+
+/// Emit only when a scalar statistic crosses a threshold (edge screening:
+/// "most of which are junk and thus have no business travelling").
+pub struct ThresholdGate {
+    pub out: std::rc::Rc<str>,
+    pub threshold: f32,
+    pub passed: u64,
+    pub dropped: u64,
+}
+
+impl ThresholdGate {
+    pub fn new(out: &str, threshold: f32) -> Self {
+        Self { out: std::rc::Rc::from(out), threshold, passed: 0, dropped: 0 }
+    }
+}
+
+impl UserCode for ThresholdGate {
+    fn run(&mut self, ctx: &mut TaskCtx<'_>, snapshot: &Snapshot) -> Result<Vec<Output>> {
+        let mut outs = Vec::new();
+        for av in snapshot.all_avs() {
+            let p = ctx.fetch(av)?;
+            let (_, data) = p.as_tensor().ok_or_else(|| anyhow!("gate: non-tensor"))?;
+            let peak = data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+            if peak > self.threshold {
+                self.passed += 1;
+                outs.push(Output::new(self.out.clone(), p, crate::av::DataClass::Summary));
+            } else {
+                self.dropped += 1;
+                ctx.remark(&format!("screened out chunk (peak {peak:.2} <= {})", self.threshold));
+            }
+        }
+        Ok(outs)
+    }
+}
+
+/// Wrap a closure as user code — the breadboarding path for examples/tests.
+pub struct FnTask<F> {
+    pub f: F,
+    pub version: u32,
+}
+
+impl<F> FnTask<F>
+where
+    F: FnMut(&mut TaskCtx<'_>, &Snapshot) -> Result<Vec<Output>>,
+{
+    pub fn new(f: F) -> Self {
+        Self { f, version: 1 }
+    }
+
+    pub fn versioned(f: F, version: u32) -> Self {
+        Self { f, version }
+    }
+}
+
+impl<F> UserCode for FnTask<F>
+where
+    F: FnMut(&mut TaskCtx<'_>, &Snapshot) -> Result<Vec<Output>>,
+{
+    fn version(&self) -> u32 {
+        self.version
+    }
+
+    fn run(&mut self, ctx: &mut TaskCtx<'_>, snapshot: &Snapshot) -> Result<Vec<Output>> {
+        (self.f)(ctx, snapshot)
+    }
+}
+
+/// Merge sketches from multiple regions: sum of (4, D) moment sketches is
+/// the sketch of the union — the aggregation step of fig. 11's telco case.
+pub struct SketchMerge {
+    pub out: std::rc::Rc<str>,
+}
+
+impl UserCode for SketchMerge {
+    fn run(&mut self, ctx: &mut TaskCtx<'_>, snapshot: &Snapshot) -> Result<Vec<Output>> {
+        let mut acc: Option<(Vec<usize>, Vec<f32>)> = None;
+        for av in snapshot.all_avs() {
+            let p = ctx.fetch(av)?;
+            let (shape, data) = p.as_tensor().ok_or_else(|| anyhow!("merge: non-tensor"))?;
+            if shape.len() != 2 || shape[0] != 4 {
+                return Err(anyhow!("merge expects (4, D) sketches, got {shape:?}"));
+            }
+            match &mut acc {
+                None => acc = Some((shape.to_vec(), data.to_vec())),
+                Some((s, a)) => {
+                    if s != shape {
+                        return Err(anyhow!("sketch shape mismatch"));
+                    }
+                    let d = shape[1];
+                    for c in 0..d {
+                        a[c] += data[c]; // sum
+                        a[d + c] += data[d + c]; // sumsq
+                        a[2 * d + c] = a[2 * d + c].min(data[2 * d + c]); // min
+                        a[3 * d + c] = a[3 * d + c].max(data[3 * d + c]); // max
+                    }
+                }
+            }
+        }
+        let (shape, data) = acc.ok_or_else(|| anyhow!("merge: empty snapshot"))?;
+        Ok(vec![Output::new(self.out.clone(), Payload::tensor(&shape, data), crate::av::DataClass::Summary)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sketch_matches_manual_moments() {
+        let data = vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0]; // (3, 2)
+        let p = SummarizeRs::sketch(&[3, 2], &data).unwrap();
+        let (shape, out) = p.as_tensor().unwrap();
+        assert_eq!(shape, &[4, 2]);
+        assert_eq!(&out[0..2], &[6.0, 60.0]); // sums
+        assert_eq!(&out[2..4], &[14.0, 1400.0]); // sumsq
+        assert_eq!(&out[4..6], &[1.0, 10.0]); // min
+        assert_eq!(&out[6..8], &[3.0, 30.0]); // max
+    }
+
+    #[test]
+    fn sketch_rejects_non_2d() {
+        assert!(SummarizeRs::sketch(&[6], &[0.0; 6]).is_err());
+    }
+}

@@ -1,0 +1,320 @@
+//! PJRT-backed compute tasks: user code whose body is an AOT-compiled
+//! XLA executable (L2 JAX graph + L1 Pallas kernels lowered at build time).
+//!
+//! Assembly contract: manifest inputs are filled left-to-right from
+//! (optional) held state payloads, then from the snapshot's input ports in
+//! declared order. A port holding several `(1, D)` AVs (a buffer/window of
+//! stream samples) is stacked into an `(n, D)` tensor; a port holding one
+//! AV is passed through. Shapes are validated against the manifest.
+
+use super::{Output, TaskCtx, UserCode};
+use crate::av::{DataClass, Payload};
+use crate::platform::Service;
+use crate::policy::Snapshot;
+use crate::runtime::Executable;
+use crate::util::SimDuration;
+use anyhow::{anyhow, bail, Result};
+use std::rc::Rc;
+
+/// Stack a port's fetched payloads into one tensor: one AV passes through;
+/// k AVs of shape (1, D) (or (D,)) stack to (k, D).
+pub fn stack_port(payloads: &[Payload]) -> Result<Payload> {
+    match payloads {
+        [] => bail!("empty input port"),
+        [one] => Ok(one.clone()),
+        many => {
+            let (first_shape, _) =
+                many[0].as_tensor().ok_or_else(|| anyhow!("stack: non-tensor"))?;
+            let d: usize = first_shape.iter().product();
+            let mut data = Vec::with_capacity(many.len() * d);
+            for p in many {
+                let (s, v) = p.as_tensor().ok_or_else(|| anyhow!("stack: non-tensor"))?;
+                if s.iter().product::<usize>() != d {
+                    bail!("stack: ragged payloads ({s:?} vs {first_shape:?})");
+                }
+                data.extend_from_slice(v);
+            }
+            Ok(Payload::tensor(&[many.len(), d], data))
+        }
+    }
+}
+
+/// Generic executable-backed task.
+///
+/// `state` payloads fill the first manifest inputs (e.g. model parameters);
+/// snapshot ports fill the rest. `emit` maps executable output indices to
+/// wires; `absorb` (if set) writes output indices back into `state`
+/// (e.g. a train step's updated parameters).
+pub struct PjrtTask {
+    pub exe: Rc<Executable>,
+    pub state: Vec<Payload>,
+    /// (output index, wire, class)
+    pub emit: Vec<(usize, String, DataClass)>,
+    /// (output index, state slot)
+    pub absorb: Vec<(usize, usize)>,
+    pub version: u32,
+    /// Estimated FLOPs per execution (drives the virtual-time cost model;
+    /// interpret-mode wallclock is not a TPU proxy — see DESIGN.md §Perf).
+    pub flops: u64,
+}
+
+impl PjrtTask {
+    pub fn new(exe: Rc<Executable>, out_wire: &str) -> Self {
+        let n_out = exe.meta.outputs.len();
+        let mut emit: Vec<(usize, String, DataClass)> =
+            vec![(0, out_wire.to_string(), DataClass::Summary)];
+        emit.truncate(n_out.max(1).min(1));
+        Self { exe, state: vec![], emit, absorb: vec![], version: 1, flops: 0 }
+    }
+
+    pub fn with_emit(mut self, emit: Vec<(usize, String, DataClass)>) -> Self {
+        self.emit = emit;
+        self
+    }
+
+    pub fn with_state(mut self, state: Vec<Payload>) -> Self {
+        self.state = state;
+        self
+    }
+
+    pub fn with_absorb(mut self, absorb: Vec<(usize, usize)>) -> Self {
+        self.absorb = absorb;
+        self
+    }
+
+    pub fn with_flops(mut self, flops: u64) -> Self {
+        self.flops = flops;
+        self
+    }
+
+    fn assemble(&self, ctx: &mut TaskCtx<'_>, snapshot: &Snapshot) -> Result<Vec<Payload>> {
+        let want = self.exe.meta.inputs.len();
+        let mut inputs: Vec<Payload> = self.state.clone();
+        for (port, avs) in &snapshot.inputs {
+            if inputs.len() >= want {
+                bail!("too many inputs for {} (port '{port}' unused)", self.exe.meta.name);
+            }
+            let fetched: Vec<Payload> =
+                avs.iter().map(|av| ctx.fetch(av)).collect::<Result<_>>()?;
+            inputs.push(stack_port(&fetched)?);
+        }
+        if inputs.len() != want {
+            bail!("{}: assembled {} inputs, manifest wants {want}", self.exe.meta.name, inputs.len());
+        }
+        Ok(inputs)
+    }
+}
+
+impl UserCode for PjrtTask {
+    fn version(&self) -> u32 {
+        self.version
+    }
+
+    fn run(&mut self, ctx: &mut TaskCtx<'_>, snapshot: &Snapshot) -> Result<Vec<Output>> {
+        let inputs = self.assemble(ctx, snapshot)?;
+        let refs: Vec<&Payload> = inputs.iter().collect();
+        let outputs = self.exe.run(&refs)?;
+        for &(oi, si) in &self.absorb {
+            self.state[si] = outputs
+                .get(oi)
+                .ok_or_else(|| anyhow!("absorb index {oi} out of range"))?
+                .clone();
+        }
+        self.emit
+            .iter()
+            .map(|(oi, wire, class)| {
+                Ok(Output::new(
+                    wire.as_str(),
+                    outputs
+                        .get(*oi)
+                        .ok_or_else(|| anyhow!("emit index {oi} out of range"))?
+                        .clone(),
+                    *class,
+                ))
+            })
+            .collect()
+    }
+
+    fn compute_cost(&self, input_bytes: u64) -> SimDuration {
+        // 1 GFLOP/s effective edge-node rate + streaming the inputs.
+        SimDuration::micros(50 + self.flops / 1_000 + input_bytes / 4096)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MLP parameter plumbing (fig. 6 twin pipeline)
+// ---------------------------------------------------------------------------
+
+/// Dimensions of the AOT-compiled MLP (must match python/compile/aot.py).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MlpDims {
+    pub input: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub batch: usize,
+}
+
+impl Default for MlpDims {
+    fn default() -> Self {
+        Self { input: 64, hidden: 128, classes: 4, batch: 32 }
+    }
+}
+
+impl MlpDims {
+    pub fn param_shapes(&self) -> [Vec<usize>; 4] {
+        [
+            vec![self.input, self.hidden],
+            vec![self.hidden],
+            vec![self.hidden, self.classes],
+            vec![self.classes],
+        ]
+    }
+
+    /// FLOPs of one forward pass (2·B·(IN·H + H·C)).
+    pub fn fwd_flops(&self) -> u64 {
+        (2 * self.batch * (self.input * self.hidden + self.hidden * self.classes)) as u64
+    }
+
+    /// He-style deterministic init (rust-side; training will move it).
+    pub fn init_params(&self, rng: &mut crate::util::Rng) -> Vec<Payload> {
+        self.param_shapes()
+            .iter()
+            .enumerate()
+            .map(|(i, shape)| {
+                let n: usize = shape.iter().product();
+                let fan_in = shape[0] as f64;
+                let scale = if shape.len() == 2 { (2.0 / fan_in).sqrt() } else { 0.0 };
+                let data: Vec<f32> =
+                    (0..n).map(|_| (rng.normal() * scale) as f32).collect();
+                let _ = i;
+                Payload::tensor(shape, data)
+            })
+            .collect()
+    }
+}
+
+/// Flatten params into one transportable tensor (for the `model` wire).
+pub fn pack_params(params: &[Payload]) -> Result<Payload> {
+    let mut data = Vec::new();
+    for p in params {
+        let (_, d) = p.as_tensor().ok_or_else(|| anyhow!("pack: non-tensor param"))?;
+        data.extend_from_slice(d);
+    }
+    let n = data.len();
+    Ok(Payload::tensor(&[n], data))
+}
+
+/// Inverse of [`pack_params`] given the dims.
+pub fn unpack_params(dims: &MlpDims, packed: &Payload) -> Result<Vec<Payload>> {
+    let (_, data) = packed.as_tensor().ok_or_else(|| anyhow!("unpack: non-tensor"))?;
+    let mut out = Vec::new();
+    let mut off = 0;
+    for shape in dims.param_shapes() {
+        let n: usize = shape.iter().product();
+        if off + n > data.len() {
+            bail!("packed params too short");
+        }
+        out.push(Payload::tensor(&shape, data[off..off + n].to_vec()));
+        off += n;
+    }
+    if off != data.len() {
+        bail!("packed params too long ({} extra)", data.len() - off);
+    }
+    Ok(out)
+}
+
+/// The deployed model server of fig. 6: a *service* (implicit link)
+/// consulted by the lower pipeline, updated by the upper one. Each
+/// parameter deployment bumps the service version — provenance then shows
+/// exactly which model classified which image.
+pub struct ModelServer {
+    pub exe: Rc<Executable>,
+    pub dims: MlpDims,
+    params: Vec<Payload>,
+    version: u32,
+}
+
+impl ModelServer {
+    pub fn new(exe: Rc<Executable>, dims: MlpDims, params: Vec<Payload>) -> Self {
+        Self { exe, dims, params, version: 1 }
+    }
+}
+
+impl Service for ModelServer {
+    fn version(&self) -> u32 {
+        self.version
+    }
+
+    fn call(&mut self, query: &Payload) -> Payload {
+        let mut inputs: Vec<&Payload> = self.params.iter().collect();
+        inputs.push(query);
+        match self.exe.run(&inputs) {
+            Ok(mut outs) => outs.remove(0),
+            Err(e) => Payload::Text(format!("ERR:{e}")),
+        }
+    }
+
+    fn latency(&self) -> SimDuration {
+        SimDuration::micros(200 + self.dims.fwd_flops() / 1_000)
+    }
+
+    fn update_payload(&mut self, p: &Payload) -> bool {
+        match unpack_params(&self.dims, p) {
+            Ok(params) => {
+                self.params = params;
+                self.version += 1;
+                true
+            }
+            Err(_) => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stack_port_single_passthrough() {
+        let p = Payload::tensor(&[2, 3], vec![0.0; 6]);
+        assert_eq!(stack_port(&[p.clone()]).unwrap(), p);
+    }
+
+    #[test]
+    fn stack_port_stacks_rows() {
+        let rows: Vec<Payload> =
+            (0..4).map(|i| Payload::tensor(&[1, 2], vec![i as f32, -(i as f32)])).collect();
+        let s = stack_port(&rows).unwrap();
+        let (shape, data) = s.as_tensor().unwrap();
+        assert_eq!(shape, &[4, 2]);
+        assert_eq!(data[..2], [0.0, 0.0]);
+        assert_eq!(data[6..], [3.0, -3.0]);
+    }
+
+    #[test]
+    fn stack_port_rejects_ragged() {
+        let a = Payload::tensor(&[1, 2], vec![0.0; 2]);
+        let b = Payload::tensor(&[1, 3], vec![0.0; 3]);
+        assert!(stack_port(&[a, b]).is_err());
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let dims = MlpDims::default();
+        let mut rng = crate::util::rng(1);
+        let params = dims.init_params(&mut rng);
+        let packed = pack_params(&params).unwrap();
+        let back = unpack_params(&dims, &packed).unwrap();
+        assert_eq!(params, back);
+        // corrupted length fails
+        let (_, d) = packed.as_tensor().unwrap();
+        let short = Payload::tensor(&[d.len() - 1], d[..d.len() - 1].to_vec());
+        assert!(unpack_params(&dims, &short).is_err());
+    }
+
+    #[test]
+    fn fwd_flops_sane() {
+        let dims = MlpDims::default();
+        assert_eq!(dims.fwd_flops(), (2 * 32 * (64 * 128 + 128 * 4)) as u64);
+    }
+}

@@ -1,0 +1,586 @@
+//! Smart task agents — §III-I.
+//!
+//! "It makes sense to wrap container execution in some basic policy-guided
+//! reasoning ... The task agent has the responsibility to wait for data
+//! from its incoming links and assemble execution sets of annotated values
+//! to construct the arguments for a single execution."
+//!
+//! [`UserCode`] is the plugin-container boundary: user logic sees only a
+//! [`TaskCtx`] (fetch inputs, call services, log) and the [`Snapshot`] —
+//! never Kubernetes, storage tiers, or regions (platform transparency,
+//! §III-B). The agent wraps it with snapshot policy, memoization
+//! (make-style staleness), the dependent-local cache (Principle 2), ghost
+//! handling (§III-K) and provenance stamping.
+
+pub mod builtins;
+pub mod compute;
+
+use crate::av::{AnnotatedValue, DataClass, Payload};
+use crate::bus::NotifyMode;
+use crate::platform::Platform;
+use crate::policy::{Snapshot, SnapshotEngine};
+use crate::provenance::{CheckpointEvent, Stamp};
+use crate::spec::TaskSpec;
+use crate::storage::{CacheManager, PurgePolicy};
+use crate::util::hash::FastMap;
+use crate::util::{ContentHash, ObjectId, RegionId, RunId, SimDuration, TaskId};
+use anyhow::{anyhow, Result};
+
+/// One produced output: wire name, payload, sovereignty class.
+#[derive(Clone, Debug)]
+pub struct Output {
+    /// Refcounted so long-lived user code cloning a held name is free (§Perf).
+    pub wire: std::rc::Rc<str>,
+    pub payload: Payload,
+    pub class: DataClass,
+}
+
+impl Output {
+    pub fn new(wire: impl Into<std::rc::Rc<str>>, payload: Payload, class: DataClass) -> Self {
+        Self { wire: wire.into(), payload, class }
+    }
+
+    pub fn summary(wire: &str, payload: Payload) -> Self {
+        Self { wire: std::rc::Rc::from(wire), payload, class: DataClass::Summary }
+    }
+
+    pub fn raw(wire: &str, payload: Payload) -> Self {
+        Self { wire: std::rc::Rc::from(wire), payload, class: DataClass::Raw }
+    }
+}
+
+/// The plugin-container boundary. Implementations are "user code".
+pub trait UserCode {
+    /// Software version — provenance records it on every artifact; bumping
+    /// it invalidates memoized results (§III-J "Software Updates").
+    fn version(&self) -> u32 {
+        1
+    }
+
+    /// Process one snapshot. Fetch payloads via `ctx.fetch(av)`; call
+    /// exterior services via `ctx.lookup(name, query)`.
+    fn run(&mut self, ctx: &mut TaskCtx<'_>, snapshot: &Snapshot) -> Result<Vec<Output>>;
+
+    /// Simulated compute cost for a snapshot of `input_bytes` (charged to
+    /// virtual time on top of real fetch/storage latencies).
+    fn compute_cost(&self, input_bytes: u64) -> SimDuration {
+        SimDuration::micros(200 + input_bytes / 512)
+    }
+}
+
+/// What user code sees of the platform.
+pub struct TaskCtx<'a> {
+    pub plat: &'a mut Platform,
+    pub cache: &'a mut CacheManager,
+    pub task: TaskId,
+    pub task_name: &'a str,
+    pub run: RunId,
+    pub region: RegionId,
+    pub version: u32,
+    /// Wireframe run: route, don't compute (§III-K).
+    pub ghost: bool,
+    /// Does this snapshot combine multiple inputs? (Principle 2 risk tag.)
+    pub combined: bool,
+    /// Accumulated virtual cost of this run (fetches, lookups, compute).
+    pub cost: SimDuration,
+}
+
+impl<'a> TaskCtx<'a> {
+    /// Fetch the payload an AV points to, through the dependent-local
+    /// cache. Charges storage + (if remote) WAN latency on miss; stamps
+    /// the passport either way.
+    pub fn fetch(&mut self, av: &AnnotatedValue) -> Result<Payload> {
+        if self.cache.lookup(av.object, self.plat.now) {
+            self.plat.metrics.cache_hits += 1;
+            self.plat.prov.stamp(av.id, self.plat.now, Stamp::CacheServed { region: self.region });
+            // served from local media: base local latency only
+            self.cost += SimDuration::micros(20);
+            let obj = self
+                .plat
+                .store
+                .peek(av.object)
+                .ok_or_else(|| anyhow!("cached object {} vanished", av.object))?;
+            return Ok(obj.payload.clone());
+        }
+        self.plat.metrics.cache_misses += 1;
+        let (payload, bytes) = {
+            let (obj, lat) = self
+                .plat
+                .store
+                .get(av.object)
+                .ok_or_else(|| anyhow!("object {} not in store", av.object))?;
+            let p = obj.payload.clone();
+            self.cost += lat;
+            self.plat.metrics.storage_latency.record(lat);
+            (p, obj.payload.transfer_bytes())
+        };
+        if av.region != self.region {
+            let (wan_lat, tier) = self
+                .plat
+                .net
+                .plan_transfer(av.class, av.region, self.region, bytes)
+                .ok_or_else(|| {
+                    anyhow!("sovereignty violation fetching {} into {}", av.id, self.region)
+                })?;
+            self.cost += wan_lat;
+            self.plat.metrics.moved(tier, bytes);
+            self.plat.prov.stamp(
+                av.id,
+                self.plat.now,
+                Stamp::Transferred { from: av.region, to: self.region, bytes },
+            );
+        } else {
+            self.plat.metrics.moved(crate::metrics::NetTier::Lan, bytes);
+        }
+        self.cache.insert(av.object, bytes, self.combined, self.plat.now);
+        Ok(payload)
+    }
+
+    /// Out-of-band service lookup (§III-D), recorded for forensics.
+    pub fn lookup(&mut self, service: &str, query: &Payload) -> Result<Payload> {
+        let (resp, lat, version) = self
+            .plat
+            .services
+            .lookup(service, query, self.plat.now)
+            .ok_or_else(|| anyhow!("no service '{service}' registered"))?;
+        self.cost += lat;
+        self.plat.prov.checkpoint(
+            self.task,
+            self.run,
+            self.plat.now,
+            CheckpointEvent::ServiceLookup {
+                service: service.to_string(),
+                service_version: version,
+                query: query.content_hash(),
+                response: resp.content_hash(),
+            },
+        );
+        Ok(resp)
+    }
+
+    /// Free-text checkpoint remark (fig. 9's `[remarked: ...]`).
+    pub fn remark(&mut self, msg: &str) {
+        self.plat.prov.checkpoint(
+            self.task,
+            self.run,
+            self.plat.now,
+            CheckpointEvent::Remark(msg.to_string()),
+        );
+    }
+
+    /// Anomaly note (fig. 9's `[anomalous CPU spike ...]`).
+    pub fn anomaly(&mut self, msg: &str) {
+        self.plat.metrics.bump("anomalies");
+        self.plat.prov.checkpoint(
+            self.task,
+            self.run,
+            self.plat.now,
+            CheckpointEvent::Anomaly(msg.to_string()),
+        );
+    }
+
+    /// Charge extra simulated compute time.
+    pub fn charge(&mut self, d: SimDuration) {
+        self.cost += d;
+    }
+}
+
+/// Result of asking an agent to execute a snapshot.
+#[derive(Debug)]
+pub enum RunOutcome {
+    /// Executed user code (or routed a ghost batch).
+    Ran { run: RunId, outputs: Vec<Output>, cost: SimDuration, ghost: bool },
+    /// Memoized: identical recipe (inputs × version) already computed;
+    /// cached output objects are reused without running anything.
+    Memoized { outputs: Vec<(String, ObjectId, ContentHash, u64, DataClass)> },
+}
+
+/// A memo entry: what a past run produced.
+#[derive(Clone, Debug)]
+struct MemoEntry {
+    outputs: Vec<(String, ObjectId, ContentHash, u64, DataClass)>,
+}
+
+/// The deployed smart task: spec + policy engine + user code + caches.
+pub struct TaskAgent {
+    pub id: TaskId,
+    pub spec: TaskSpec,
+    pub region: RegionId,
+    pub engine: SnapshotEngine,
+    pub code: Box<dyn UserCode>,
+    pub notify: NotifyMode,
+    pub cache: CacheManager,
+    memo: FastMap<ContentHash, MemoEntry>,
+    pub out_seq: u64,
+    /// Last snapshot run (kept so a software update can selectively
+    /// recompute — §III-J rollback).
+    pub last_snapshot: Option<Snapshot>,
+    pub runs: u64,
+}
+
+impl TaskAgent {
+    pub fn new(
+        id: TaskId,
+        spec: TaskSpec,
+        region: RegionId,
+        engine: SnapshotEngine,
+        code: Box<dyn UserCode>,
+        notify: NotifyMode,
+        cache_policy: PurgePolicy,
+    ) -> Self {
+        Self {
+            id,
+            spec,
+            region,
+            engine,
+            code,
+            notify,
+            cache: CacheManager::new(cache_policy),
+            memo: FastMap::default(),
+            out_seq: 0,
+            last_snapshot: None,
+            runs: 0,
+        }
+    }
+
+    pub fn version(&self) -> u32 {
+        self.code.version()
+    }
+
+    /// The memoization key for a snapshot under the current code version.
+    pub fn recipe(&self, snapshot: &Snapshot) -> ContentHash {
+        let hashes: Vec<ContentHash> = snapshot.all_avs().map(|a| a.content).collect();
+        Platform::recipe_hash(&hashes, self.code.version())
+    }
+
+    /// Forget memoized results (software update invalidation).
+    pub fn invalidate_memo(&mut self) {
+        self.memo.clear();
+    }
+
+    pub fn memo_len(&self) -> usize {
+        self.memo.len()
+    }
+
+    /// Would this snapshot be served from the memo (no execution needed)?
+    pub fn would_memoize(&self, plat: &Platform, snapshot: &Snapshot) -> bool {
+        !snapshot.ghost
+            && self
+                .memo
+                .get(&self.recipe(snapshot))
+                .is_some_and(|hit| hit.outputs.iter().all(|(_, obj, ..)| plat.store.contains(*obj)))
+    }
+
+    /// Execute a snapshot (or reuse the memoized result). The coordinator
+    /// publishes whatever comes back.
+    pub fn execute(&mut self, plat: &mut Platform, snapshot: Snapshot) -> Result<RunOutcome> {
+        self.execute_inner(plat, snapshot, true)
+    }
+
+    /// Execute ignoring the memo — what a schedule-driven, data-unaware
+    /// runner (cron/Airflow baseline, E8) does: recompute regardless.
+    pub fn execute_forced(&mut self, plat: &mut Platform, snapshot: Snapshot) -> Result<RunOutcome> {
+        self.execute_inner(plat, snapshot, false)
+    }
+
+    fn execute_inner(
+        &mut self,
+        plat: &mut Platform,
+        snapshot: Snapshot,
+        use_memo: bool,
+    ) -> Result<RunOutcome> {
+        let recipe = self.recipe(&snapshot);
+        if use_memo && !snapshot.ghost {
+            if let Some(hit) = self.memo.get(&recipe) {
+                if hit.outputs.iter().all(|(_, obj, ..)| plat.store.contains(*obj)) {
+                    plat.metrics.bump("memo_hits");
+                    self.last_snapshot = Some(snapshot);
+                    return Ok(RunOutcome::Memoized { outputs: hit.outputs.clone() });
+                }
+            }
+        }
+
+        let run = plat.next_run_id();
+        let ghost = snapshot.ghost;
+        let mut consumed_bytes = 0u64;
+        let version = self.code.version();
+        for av in snapshot.all_avs() {
+            plat.prov.stamp(
+                av.id,
+                plat.now,
+                Stamp::Consumed { task: self.id, run, version },
+            );
+            consumed_bytes += av.size_bytes;
+        }
+        plat.prov.checkpoint_batch(
+            self.id,
+            run,
+            plat.now,
+            std::iter::once(CheckpointEvent::Start)
+                .chain(snapshot.all_avs().map(|av| CheckpointEvent::ReadInput { av: av.id })),
+        );
+
+        let combined = snapshot.inputs.len() > 1;
+        let (outputs, cost) = if ghost {
+            // Wireframe batch: expose routing, skip compute (§III-K). One
+            // ghost output per declared wire, pretending the usual size.
+            let pretend = consumed_bytes.max(1);
+            let outs = self
+                .spec
+                .outputs
+                .iter()
+                .map(|w| Output {
+                    wire: std::rc::Rc::from(w.as_str()),
+                    payload: Payload::Ghost { pretend_bytes: pretend },
+                    class: DataClass::Ghost,
+                })
+                .collect();
+            (outs, SimDuration::micros(10))
+        } else {
+            let mut ctx = TaskCtx {
+                plat,
+                cache: &mut self.cache,
+                task: self.id,
+                task_name: &self.spec.name,
+                run,
+                region: self.region,
+                version: self.code.version(),
+                ghost: false,
+                combined,
+                cost: SimDuration::ZERO,
+            };
+            let outs = self.code.run(&mut ctx, &snapshot)?;
+            let mut cost = ctx.cost;
+            cost += self.code.compute_cost(consumed_bytes);
+            (outs, cost)
+        };
+
+        plat.prov.checkpoint(
+            self.id,
+            run,
+            plat.now,
+            CheckpointEvent::End { outputs: outputs.len() as u32 },
+        );
+        plat.metrics.ran_task(ghost);
+        self.runs += 1;
+        self.last_snapshot = Some(snapshot);
+        Ok(RunOutcome::Ran { run, outputs, cost, ghost })
+    }
+
+    /// Record what a run produced so identical future recipes can skip it.
+    /// The memo is bounded (streams never repeat, so an unbounded map is
+    /// pure leak, §Perf): when full it is flushed — a cold rebuild costs
+    /// one generation, like any cache restart.
+    pub fn memoize(
+        &mut self,
+        recipe: ContentHash,
+        outputs: Vec<(String, ObjectId, ContentHash, u64, DataClass)>,
+    ) {
+        const MEMO_CAP: usize = 1024;
+        if self.memo.len() >= MEMO_CAP {
+            self.memo.clear();
+        }
+        self.memo.insert(recipe, MemoEntry { outputs });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::builtins::PassThrough;
+    use super::*;
+    use crate::net::demo_topology;
+    use crate::policy::{BufferSpec, InputBuffer, RateControl, SnapshotPolicy};
+    use crate::storage::StorageConfig;
+    use crate::util::LinkId;
+
+    fn plat() -> Platform {
+        Platform::new(demo_topology(1), StorageConfig::default(), 3)
+    }
+
+    fn agent(plat: &mut Platform) -> TaskAgent {
+        let spec = crate::spec::parse("(x) t (y)").unwrap().tasks[0].clone();
+        let engine = SnapshotEngine::new(
+            SnapshotPolicy::AllNew,
+            vec![InputBuffer::new("x", BufferSpec::default())],
+            RateControl::default(),
+        );
+        let _ = plat;
+        TaskAgent::new(
+            TaskId::new(0),
+            spec,
+            RegionId::new(0),
+            engine,
+            Box::new(PassThrough::new("y")),
+            NotifyMode::Push,
+            PurgePolicy::Never,
+        )
+    }
+
+    fn feed(plat: &mut Platform, agent: &mut TaskAgent, value: f32) -> Snapshot {
+        let (av, _) = plat.mint_av(
+            Payload::scalar(value),
+            TaskId::new(9),
+            RunId::new(99),
+            1,
+            LinkId::new(0),
+            RegionId::new(0),
+            DataClass::Summary,
+            0,
+            &[],
+            plat.now,
+        );
+        agent.engine.push("x", av);
+        agent.engine.take(plat.now).unwrap()
+    }
+
+    #[test]
+    fn execute_runs_user_code_and_stamps() {
+        let mut p = plat();
+        let mut a = agent(&mut p);
+        let snap = feed(&mut p, &mut a, 5.0);
+        let outcome = a.execute(&mut p, snap).unwrap();
+        match outcome {
+            RunOutcome::Ran { outputs, cost, ghost, .. } => {
+                assert_eq!(outputs.len(), 1);
+                assert_eq!(&*outputs[0].wire, "y");
+                assert!(!ghost);
+                assert!(cost.as_micros() > 0);
+            }
+            _ => panic!("expected Ran"),
+        }
+        assert_eq!(p.metrics.task_runs, 1);
+        let log = p.prov.checkpoint_log(TaskId::new(0));
+        assert!(log.iter().any(|e| matches!(e.event, CheckpointEvent::Start)));
+        assert!(log.iter().any(|e| matches!(e.event, CheckpointEvent::ReadInput { .. })));
+        assert!(log.iter().any(|e| matches!(e.event, CheckpointEvent::End { .. })));
+    }
+
+    #[test]
+    fn memoization_skips_identical_recipes() {
+        let mut p = plat();
+        let mut a = agent(&mut p);
+        let s1 = feed(&mut p, &mut a, 5.0);
+        let recipe = a.recipe(&s1);
+        match a.execute(&mut p, s1).unwrap() {
+            RunOutcome::Ran { outputs, .. } => {
+                // pretend the coordinator stored outputs and memoized
+                let (av, _) = p.mint_av(
+                    outputs[0].payload.clone(),
+                    TaskId::new(0),
+                    RunId::new(0),
+                    1,
+                    LinkId::new(1),
+                    RegionId::new(0),
+                    outputs[0].class,
+                    0,
+                    &[],
+                    p.now,
+                );
+                a.memoize(
+                    recipe,
+                    vec![("y".into(), av.object, av.content, av.size_bytes, av.class)],
+                );
+            }
+            _ => panic!(),
+        }
+        // identical content again -> memoized, no new task run
+        let s2 = feed(&mut p, &mut a, 5.0);
+        let runs_before = p.metrics.task_runs;
+        match a.execute(&mut p, s2).unwrap() {
+            RunOutcome::Memoized { outputs } => assert_eq!(outputs[0].0, "y"),
+            _ => panic!("expected memo hit"),
+        }
+        assert_eq!(p.metrics.task_runs, runs_before);
+        assert_eq!(p.metrics.get("memo_hits"), 1);
+        // different content -> fresh run
+        let s3 = feed(&mut p, &mut a, 6.0);
+        assert!(matches!(a.execute(&mut p, s3).unwrap(), RunOutcome::Ran { .. }));
+    }
+
+    #[test]
+    fn version_bump_changes_recipe() {
+        let mut p = plat();
+        let mut a = agent(&mut p);
+        let s = feed(&mut p, &mut a, 5.0);
+        let r1 = a.recipe(&s);
+        struct V2(PassThrough);
+        impl UserCode for V2 {
+            fn version(&self) -> u32 {
+                2
+            }
+            fn run(&mut self, ctx: &mut TaskCtx<'_>, s: &Snapshot) -> Result<Vec<Output>> {
+                self.0.run(ctx, s)
+            }
+        }
+        a.code = Box::new(V2(PassThrough::new("y")));
+        assert_ne!(a.recipe(&s), r1, "new software version => stale recipe");
+    }
+
+    #[test]
+    fn ghost_snapshot_routes_without_compute() {
+        let mut p = plat();
+        let mut a = agent(&mut p);
+        let (mut av, _) = p.mint_av(
+            Payload::Ghost { pretend_bytes: 1 << 20 },
+            TaskId::new(9),
+            RunId::new(99),
+            1,
+            LinkId::new(0),
+            RegionId::new(0),
+            DataClass::Ghost,
+            0,
+            &[],
+            p.now,
+        );
+        av.ghost = true;
+        a.engine.push("x", av);
+        let snap = a.engine.take(p.now).unwrap();
+        match a.execute(&mut p, snap).unwrap() {
+            RunOutcome::Ran { outputs, ghost, .. } => {
+                assert!(ghost);
+                assert!(outputs[0].payload.is_ghost());
+            }
+            _ => panic!(),
+        }
+        assert_eq!(p.metrics.ghost_runs, 1);
+        assert_eq!(p.metrics.task_runs, 0, "no real run happened");
+    }
+
+    #[test]
+    fn fetch_uses_cache_on_second_read() {
+        let mut p = plat();
+        let mut a = agent(&mut p);
+        let (av, _) = p.mint_av(
+            Payload::tensor(&[4], vec![1.0; 4]),
+            TaskId::new(9),
+            RunId::new(99),
+            1,
+            LinkId::new(0),
+            RegionId::new(0),
+            DataClass::Summary,
+            0,
+            &[],
+            p.now,
+        );
+        let mut ctx = TaskCtx {
+            plat: &mut p,
+            cache: &mut a.cache,
+            task: TaskId::new(0),
+            task_name: "t",
+            run: RunId::new(1),
+            region: RegionId::new(0),
+            version: 1,
+            ghost: false,
+            combined: false,
+            cost: SimDuration::ZERO,
+        };
+        let p1 = ctx.fetch(&av).unwrap();
+        let cost_after_miss = ctx.cost;
+        let p2 = ctx.fetch(&av).unwrap();
+        assert_eq!(p1, p2);
+        let hit_cost = ctx.cost.as_micros() - cost_after_miss.as_micros();
+        assert!(hit_cost < cost_after_miss.as_micros(), "hit far cheaper than miss");
+        assert_eq!(ctx.plat.metrics.cache_hits, 1);
+        assert_eq!(ctx.plat.metrics.cache_misses, 1);
+    }
+}

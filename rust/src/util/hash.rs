@@ -1,0 +1,179 @@
+//! Content hashing for the make-style staleness checks and content-addressed
+//! object storage. FNV-1a 64-bit: not cryptographic, but deterministic,
+//! dependency-free and fast — collisions are irrelevant to the simulation's
+//! claims (we hash to *detect change*, not to authenticate).
+
+
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// FNV-1a over a byte slice.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// A content hash: of a payload, of a snapshot's inputs, of a software
+/// version string. Combinable, so a task's "recipe hash" folds input
+/// hashes + code version into one change detector (the Makefile semantics
+/// of §III-B/§III-J).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct ContentHash(pub u64);
+
+impl ContentHash {
+    pub const EMPTY: ContentHash = ContentHash(FNV_OFFSET);
+
+    pub fn of_bytes(bytes: &[u8]) -> Self {
+        Self(fnv1a(bytes))
+    }
+
+    pub fn of_str(s: &str) -> Self {
+        Self::of_bytes(s.as_bytes())
+    }
+
+    pub fn of_f32s(xs: &[f32]) -> Self {
+        let mut h = FNV_OFFSET;
+        for x in xs {
+            for b in x.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        }
+        Self(h)
+    }
+
+    /// Order-sensitive combination (recipe hashes care about input order).
+    pub fn combine(self, other: ContentHash) -> Self {
+        let mut h = self.0;
+        for b in other.0.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        Self(h)
+    }
+}
+
+impl std::fmt::Display for ContentHash {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vector() {
+        // FNV-1a("a") = 0xaf63dc4c8601ec8c
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+    }
+
+    #[test]
+    fn distinct_inputs_distinct_hashes() {
+        assert_ne!(ContentHash::of_str("x"), ContentHash::of_str("y"));
+        assert_ne!(
+            ContentHash::of_f32s(&[1.0, 2.0]),
+            ContentHash::of_f32s(&[2.0, 1.0])
+        );
+    }
+
+    #[test]
+    fn combine_is_order_sensitive() {
+        let a = ContentHash::of_str("a");
+        let b = ContentHash::of_str("b");
+        assert_ne!(a.combine(b), b.combine(a));
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        assert_eq!(
+            ContentHash::of_f32s(&[3.25, -1.0]),
+            ContentHash::of_f32s(&[3.25, -1.0])
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fast hashing for id-keyed maps (§Perf): the default SipHash defends
+// against adversarial keys; our ids are sequential u64s minted in-process,
+// so an FNV-mix hasher is safe and ~3x faster per map op.
+// ---------------------------------------------------------------------------
+
+/// Hasher for small fixed keys (u64 ids, ContentHash).
+#[derive(Default, Clone)]
+pub struct FastHasher(u64);
+
+impl std::hash::Hasher for FastHasher {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        let mut h = if self.0 == 0 { FNV_OFFSET } else { self.0 };
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        self.0 = h;
+    }
+
+    fn write_u64(&mut self, v: u64) {
+        // splitmix-style avalanche: sequential ids spread across buckets
+        let mut z = self.0.wrapping_add(v).wrapping_add(0x9E3779B97F4A7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        self.0 = z ^ (z >> 31);
+    }
+}
+
+/// BuildHasher for [`FastHasher`].
+#[derive(Default, Clone)]
+pub struct FastHash;
+
+impl std::hash::BuildHasher for FastHash {
+    type Hasher = FastHasher;
+    fn build_hasher(&self) -> FastHasher {
+        FastHasher::default()
+    }
+}
+
+/// A HashMap with the fast id hasher.
+pub type FastMap<K, V> = std::collections::HashMap<K, V, FastHash>;
+
+#[cfg(test)]
+mod fast_tests {
+    use super::*;
+
+    #[test]
+    fn fastmap_works_like_hashmap() {
+        let mut m: FastMap<u64, u32> = FastMap::default();
+        for i in 0..1000u64 {
+            m.insert(i, (i * 2) as u32);
+        }
+        assert_eq!(m.len(), 1000);
+        assert_eq!(m.get(&500), Some(&1000));
+        assert!(m.remove(&999).is_some());
+        assert_eq!(m.len(), 999);
+    }
+
+    #[test]
+    fn sequential_ids_spread() {
+        // bucket-collision sanity: 1024 sequential ids should produce many
+        // distinct hashes
+        use std::hash::{BuildHasher, Hasher};
+        let b = FastHash;
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..1024u64 {
+            let mut h = b.build_hasher();
+            h.write_u64(i);
+            seen.insert(h.finish() & 0x3FF);
+        }
+        assert!(seen.len() > 500, "only {} distinct low-10-bit hashes", seen.len());
+    }
+}

@@ -1,0 +1,22 @@
+//! Small shared utilities: ids, virtual time, hashing, deterministic rng,
+//! and a minimal JSON implementation (the build environment is offline —
+//! no serde/rand; see Cargo.toml).
+
+pub mod hash;
+pub mod ids;
+pub mod json;
+pub mod rng;
+pub mod time;
+
+pub use hash::{fnv1a, ContentHash};
+pub use ids::{AvId, IdGen, LinkId, ObjectId, RegionId, RunId, TaskId, WorkspaceId};
+pub use json::Json;
+pub use rng::Rng;
+pub use time::{SimDuration, SimTime};
+
+/// Deterministic RNG for all simulation randomness. Every run with the same
+/// seed reproduces byte-identical traces — a prerequisite for the paper's
+/// forensic-reconstruction claims to be testable.
+pub fn rng(seed: u64) -> Rng {
+    Rng::seed_from_u64(seed)
+}

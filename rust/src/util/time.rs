@@ -1,0 +1,152 @@
+//! Virtual time for the discrete-event platform.
+//!
+//! The paper's policies are all *timescale* policies (Principle 1: "a
+//! separate message notification channel ... for updates that are slow in
+//! arrival time compared to the service time"). A virtual microsecond clock
+//! makes those timescales explicit, deterministic, and cheap to sweep in
+//! benchmarks, while the coordinator code itself stays identical to what a
+//! wallclock deployment would run.
+
+
+use std::ops::{Add, AddAssign, Sub};
+
+/// Absolute virtual time, in microseconds since simulation start.
+#[derive(
+    Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug, Default,
+)]
+pub struct SimTime(pub u64);
+
+/// A span of virtual time, in microseconds.
+#[derive(
+    Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug, Default,
+)]
+pub struct SimDuration(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+    pub fn micros(us: u64) -> Self {
+        Self(us)
+    }
+    pub fn millis(ms: u64) -> Self {
+        Self(ms * 1_000)
+    }
+    pub fn secs(s: u64) -> Self {
+        Self(s * 1_000_000)
+    }
+    pub fn as_micros(self) -> u64 {
+        self.0
+    }
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+    pub fn saturating_sub(self, rhs: SimTime) -> SimDuration {
+        SimDuration(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl SimDuration {
+    pub const ZERO: SimDuration = SimDuration(0);
+    pub fn micros(us: u64) -> Self {
+        Self(us)
+    }
+    pub fn millis(ms: u64) -> Self {
+        Self(ms * 1_000)
+    }
+    pub fn secs(s: u64) -> Self {
+        Self(s * 1_000_000)
+    }
+    pub fn as_micros(self) -> u64 {
+        self.0
+    }
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+    /// Scale by a dimensionless factor (for ρ sweeps and jitter).
+    pub fn scale(self, f: f64) -> Self {
+        Self((self.0 as f64 * f).round().max(0.0) as u64)
+    }
+}
+
+impl Add<SimDuration> for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimDuration) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign<SimDuration> for SimTime {
+    fn add_assign(&mut self, rhs: SimDuration) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Add for SimDuration {
+    type Output = SimDuration;
+    fn add(self, rhs: SimDuration) -> SimDuration {
+        SimDuration(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for SimDuration {
+    fn add_assign(&mut self, rhs: SimDuration) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for SimTime {
+    type Output = SimDuration;
+    fn sub(self, rhs: SimTime) -> SimDuration {
+        SimDuration(self.0 - rhs.0)
+    }
+}
+
+impl std::fmt::Display for SimTime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "t+{:.6}s", self.as_secs_f64())
+    }
+}
+
+impl std::fmt::Display for SimDuration {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.0 >= 1_000_000 {
+            write!(f, "{:.3}s", self.as_secs_f64())
+        } else if self.0 >= 1_000 {
+            write!(f, "{:.3}ms", self.0 as f64 / 1e3)
+        } else {
+            write!(f, "{}us", self.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let t = SimTime::millis(2) + SimDuration::micros(500);
+        assert_eq!(t.as_micros(), 2_500);
+        assert_eq!((t - SimTime::millis(1)).as_micros(), 1_500);
+    }
+
+    #[test]
+    fn scale_rounds_and_clamps() {
+        assert_eq!(SimDuration::micros(100).scale(2.5).as_micros(), 250);
+        assert_eq!(SimDuration::micros(100).scale(0.0).as_micros(), 0);
+    }
+
+    #[test]
+    fn display_picks_unit() {
+        assert_eq!(SimDuration::micros(12).to_string(), "12us");
+        assert_eq!(SimDuration::micros(1_200).to_string(), "1.200ms");
+        assert_eq!(SimDuration::secs(2).to_string(), "2.000s");
+    }
+
+    #[test]
+    fn saturating_sub_does_not_underflow() {
+        let a = SimTime::micros(5);
+        let b = SimTime::micros(9);
+        assert_eq!(a.saturating_sub(b).as_micros(), 0);
+        assert_eq!(b.saturating_sub(a).as_micros(), 4);
+    }
+}

@@ -1,0 +1,361 @@
+//! Synthetic workload generators.
+//!
+//! The paper's user cases (§III-A): data replication/distribution,
+//! aggregation from multiple sources at different rates, matrix operations,
+//! and continuous-delivery builds. Each generator here feeds one of those
+//! cases with a deterministic, seedable trace (DESIGN.md substitution for
+//! the production traces we do not have).
+
+use crate::av::Payload;
+use crate::util::{Rng, SimDuration, SimTime};
+
+/// Standard-normal sample (Box–Muller lives on the in-tree Rng).
+pub fn normal(rng: &mut Rng) -> f64 {
+    rng.normal()
+}
+
+/// Exponential inter-arrival sample with the given mean.
+pub fn exponential(rng: &mut Rng, mean: SimDuration) -> SimDuration {
+    mean.scale(rng.exp1())
+}
+
+// ---------------------------------------------------------------------------
+// Sensor streams (fig. 7: weather sensors at mismatched rates)
+// ---------------------------------------------------------------------------
+
+/// One sensor emitting (1, dims) tensor samples with exponential
+/// inter-arrival times around `mean_period`.
+#[derive(Clone, Debug)]
+pub struct SensorStream {
+    pub name: String,
+    pub mean_period: SimDuration,
+    pub dims: usize,
+    /// Channel offset so different sensors have distinct signatures.
+    pub bias: f32,
+    next_at: SimTime,
+    pub emitted: u64,
+}
+
+impl SensorStream {
+    pub fn new(name: &str, mean_period: SimDuration, dims: usize, bias: f32) -> Self {
+        Self {
+            name: name.to_string(),
+            mean_period,
+            dims,
+            bias,
+            next_at: SimTime::ZERO,
+            emitted: 0,
+        }
+    }
+
+    /// Next (arrival_time, payload) at or after the stream's own clock.
+    pub fn next(&mut self, rng: &mut Rng) -> (SimTime, Payload) {
+        self.next_at += exponential(rng, self.mean_period);
+        self.emitted += 1;
+        let data: Vec<f32> =
+            (0..self.dims).map(|i| self.bias + i as f32 * 0.1 + normal(rng) as f32).collect();
+        (self.next_at, Payload::tensor(&[1, self.dims], data))
+    }
+
+    /// Generate all arrivals up to `horizon`.
+    pub fn arrivals_until(
+        &mut self,
+        rng: &mut Rng,
+        horizon: SimTime,
+    ) -> Vec<(SimTime, Payload)> {
+        let mut out = Vec::new();
+        loop {
+            let (t, p) = self.next(rng);
+            if t > horizon {
+                // put the overshoot back by rewinding our clock
+                self.next_at = t;
+                break;
+            }
+            out.push((t, p));
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Vehicle trace (§IV: "a modern 'smart' vehicle may produce terabytes ...
+// most of which is transitory, and not worth keeping after screening")
+// ---------------------------------------------------------------------------
+
+/// A fleet of vehicles, each producing fixed-size raw sample chunks at its
+/// edge region while "driving", to be screened/summarized before any WAN hop.
+#[derive(Clone, Debug)]
+pub struct VehicleTrace {
+    pub n_vehicles: usize,
+    pub chunks_per_vehicle: usize,
+    /// Samples per chunk (rows of the (N, D) tensor the kernel reduces).
+    pub chunk_rows: usize,
+    pub dims: usize,
+    pub chunk_period: SimDuration,
+    /// Fraction of channels carrying junk (local-only relevance).
+    pub junk_fraction: f64,
+}
+
+impl Default for VehicleTrace {
+    fn default() -> Self {
+        Self {
+            n_vehicles: 4,
+            chunks_per_vehicle: 16,
+            chunk_rows: 1024,
+            dims: 8,
+            chunk_period: SimDuration::secs(2),
+            junk_fraction: 0.5,
+        }
+    }
+}
+
+/// One emitted chunk of a vehicle journey.
+#[derive(Clone, Debug)]
+pub struct VehicleChunk {
+    pub vehicle: usize,
+    pub seq: usize,
+    pub time: SimTime,
+    pub payload: Payload,
+    /// Ground-truth anomaly rows planted in this chunk (for recall checks).
+    pub planted_anomalies: usize,
+}
+
+impl VehicleTrace {
+    /// Generate the full fleet trace, interleaved by time.
+    pub fn generate(&self, rng: &mut Rng) -> Vec<VehicleChunk> {
+        let mut chunks = Vec::new();
+        for v in 0..self.n_vehicles {
+            let jitter = SimDuration::micros(rng.range_u64(0, self.chunk_period.as_micros().max(1)));
+            for s in 0..self.chunks_per_vehicle {
+                let time = SimTime::ZERO + self.chunk_period.scale(s as f64) + jitter;
+                let mut data = Vec::with_capacity(self.chunk_rows * self.dims);
+                for _ in 0..self.chunk_rows {
+                    for d in 0..self.dims {
+                        let base = if (d as f64) < self.junk_fraction * self.dims as f64 {
+                            // junk channels: pure noise
+                            normal(rng) as f32
+                        } else {
+                            // signal channels: vehicle-specific drift
+                            v as f32 * 0.5 + s as f32 * 0.01 + 0.3 * normal(rng) as f32
+                        };
+                        data.push(base);
+                    }
+                }
+                // plant a few gross anomalies (possible road defects)
+                let planted = rng.range(0, 4);
+                for _ in 0..planted {
+                    let row = rng.range(0, self.chunk_rows);
+                    let col = rng.range(0, self.dims);
+                    data[row * self.dims + col] = 40.0 + normal(rng).abs() as f32 * 5.0;
+                }
+                chunks.push(VehicleChunk {
+                    vehicle: v,
+                    seq: s,
+                    time,
+                    payload: Payload::tensor(&[self.chunk_rows, self.dims], data),
+                    planted_anomalies: planted,
+                });
+            }
+        }
+        chunks.sort_by_key(|c| c.time);
+        chunks
+    }
+
+    pub fn raw_bytes(&self) -> u64 {
+        (self.n_vehicles * self.chunks_per_vehicle * self.chunk_rows * self.dims * 4) as u64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Build tree (the make-model workload, §III-B / fig. 1)
+// ---------------------------------------------------------------------------
+
+/// A synthetic software build: a tree of source files feeding object files
+/// feeding a final link target. Drives the E1/E4 make-mode experiments.
+#[derive(Clone, Debug)]
+pub struct BuildTree {
+    /// Number of leaf source files.
+    pub leaves: usize,
+    /// Sources per object file (fan-in of intermediate nodes).
+    pub fanin: usize,
+    /// Bytes per source payload.
+    pub source_bytes: usize,
+}
+
+impl Default for BuildTree {
+    fn default() -> Self {
+        Self { leaves: 32, fanin: 4, source_bytes: 4096 }
+    }
+}
+
+impl BuildTree {
+    pub fn n_objects(&self) -> usize {
+        self.leaves.div_ceil(self.fanin)
+    }
+
+    /// Source payload for leaf `i` at edit-generation `gen` (the content
+    /// changes when the file is edited — content hash then differs).
+    pub fn source_payload(&self, i: usize, generation: u64) -> Payload {
+        let mut bytes = vec![0u8; self.source_bytes];
+        let tag = (i as u64) << 32 | generation;
+        bytes[..8].copy_from_slice(&tag.to_le_bytes());
+        // deterministic body so equal generations hash equal
+        for (j, b) in bytes[8..].iter_mut().enumerate() {
+            *b = ((i * 31 + j * 7) % 251) as u8;
+        }
+        Payload::Bytes(bytes)
+    }
+
+    /// Pick a deterministic dirty set of `k` leaves for an incremental edit.
+    pub fn dirty_set(&self, rng: &mut Rng, k: usize) -> Vec<usize> {
+        let mut picks: Vec<usize> = (0..self.leaves).collect();
+        rng.shuffle(&mut picks);
+        picks.truncate(k.min(self.leaves));
+        picks.sort_unstable();
+        picks
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Image stream for the fig. 6 twin pipeline (E9)
+// ---------------------------------------------------------------------------
+
+/// Synthetic classed "images": class prototype + noise, matching
+/// python/compile/model.py's `synth_classes` recipe so the rust-served
+/// model sees in-distribution data.
+#[derive(Clone, Debug)]
+pub struct ImageStream {
+    pub classes: usize,
+    pub dim: usize,
+    pub noise: f32,
+    protos: Vec<Vec<f32>>,
+}
+
+impl ImageStream {
+    pub fn new(rng: &mut Rng, classes: usize, dim: usize, noise: f32) -> Self {
+        let protos = (0..classes)
+            .map(|_| (0..dim).map(|_| 2.0 * normal(rng) as f32).collect())
+            .collect();
+        Self { classes, dim, noise, protos }
+    }
+
+    /// One labelled sample.
+    pub fn sample(&self, rng: &mut Rng) -> (Vec<f32>, usize) {
+        let label = rng.range(0, self.classes);
+        let x = self.protos[label]
+            .iter()
+            .map(|p| p + self.noise * normal(rng) as f32)
+            .collect();
+        (x, label)
+    }
+
+    /// A (batch, dim) tensor payload plus labels.
+    pub fn batch(&self, rng: &mut Rng, batch: usize) -> (Payload, Vec<usize>) {
+        let mut data = Vec::with_capacity(batch * self.dim);
+        let mut labels = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let (x, y) = self.sample(rng);
+            data.extend(x);
+            labels.push(y);
+        }
+        (Payload::tensor(&[batch, self.dim], data), labels)
+    }
+
+    /// One-hot labels as a (batch, classes) tensor payload.
+    pub fn one_hot(&self, labels: &[usize]) -> Payload {
+        let mut data = vec![0.0f32; labels.len() * self.classes];
+        for (i, &l) in labels.iter().enumerate() {
+            data[i * self.classes + l] = 1.0;
+        }
+        Payload::tensor(&[labels.len(), self.classes], data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng;
+
+    #[test]
+    fn normal_has_sane_moments() {
+        let mut r = rng(7);
+        let n = 20_000;
+        let samples: Vec<f64> = (0..n).map(|_| normal(&mut r)).collect();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn exponential_mean_close() {
+        let mut r = rng(8);
+        let mean = SimDuration::millis(10);
+        let n = 20_000;
+        let total: u64 = (0..n).map(|_| exponential(&mut r, mean).as_micros()).sum();
+        let got = total as f64 / n as f64;
+        assert!((got - 10_000.0).abs() < 500.0, "mean {got}us");
+    }
+
+    #[test]
+    fn sensor_stream_is_monotone_and_seeded() {
+        let mut r1 = rng(42);
+        let mut r2 = rng(42);
+        let mut s1 = SensorStream::new("wind", SimDuration::millis(100), 3, 0.0);
+        let mut s2 = SensorStream::new("wind", SimDuration::millis(100), 3, 0.0);
+        let a1 = s1.arrivals_until(&mut r1, SimTime::secs(2));
+        let a2 = s2.arrivals_until(&mut r2, SimTime::secs(2));
+        assert_eq!(a1.len(), a2.len());
+        assert!(!a1.is_empty());
+        assert!(a1.windows(2).all(|w| w[0].0 <= w[1].0));
+        assert_eq!(a1[0].1, a2[0].1, "determinism");
+    }
+
+    #[test]
+    fn vehicle_trace_shape_and_order() {
+        let mut r = rng(1);
+        let trace = VehicleTrace { n_vehicles: 2, chunks_per_vehicle: 3, ..Default::default() };
+        let chunks = trace.generate(&mut r);
+        assert_eq!(chunks.len(), 6);
+        assert!(chunks.windows(2).all(|w| w[0].time <= w[1].time));
+        let (shape, data) = chunks[0].payload.as_tensor().unwrap();
+        assert_eq!(shape, &[trace.chunk_rows, trace.dims]);
+        assert_eq!(data.len(), trace.chunk_rows * trace.dims);
+        assert_eq!(trace.raw_bytes(), (2 * 3 * trace.chunk_rows * trace.dims * 4) as u64);
+    }
+
+    #[test]
+    fn build_tree_payload_changes_with_generation_only() {
+        let t = BuildTree::default();
+        let a = t.source_payload(3, 0);
+        let b = t.source_payload(3, 0);
+        let c = t.source_payload(3, 1);
+        assert_eq!(a.content_hash(), b.content_hash());
+        assert_ne!(a.content_hash(), c.content_hash());
+    }
+
+    #[test]
+    fn dirty_set_is_bounded_and_sorted() {
+        let t = BuildTree { leaves: 10, ..Default::default() };
+        let mut r = rng(3);
+        let d = t.dirty_set(&mut r, 4);
+        assert_eq!(d.len(), 4);
+        assert!(d.windows(2).all(|w| w[0] < w[1]));
+        let all = t.dirty_set(&mut r, 99);
+        assert_eq!(all.len(), 10);
+    }
+
+    #[test]
+    fn image_stream_batches() {
+        let mut r = rng(5);
+        let s = ImageStream::new(&mut r, 4, 16, 0.1);
+        let (p, labels) = s.batch(&mut r, 8);
+        let (shape, _) = p.as_tensor().unwrap();
+        assert_eq!(shape, &[8, 16]);
+        assert_eq!(labels.len(), 8);
+        let oh = s.one_hot(&labels);
+        let (sh, data) = oh.as_tensor().unwrap();
+        assert_eq!(sh, &[8, 4]);
+        assert_eq!(data.iter().sum::<f32>(), 8.0);
+    }
+}

@@ -1,0 +1,172 @@
+//! Workspaces — §IV.
+//!
+//! "users would be able to access shared data, but simultaneously protect
+//! it from wider release, regardless of geographical constraints ...
+//! workspaces could also be made to overlap as 'friends', through a form
+//! of Role Based Access Control — thus avoiding the limitations of a
+//! hierarchy of mutual exclusion zones. Koalja's design ... follows
+//! CFEngine's overlapping-set-based model of inclusion."
+//!
+//! A workspace is a *set* of principals and a *set* of granted resources.
+//! Sets overlap freely: a principal may belong to many workspaces, a
+//! resource may be granted to many. Access = ∃ workspace containing both.
+
+use crate::util::WorkspaceId;
+
+use std::collections::BTreeSet;
+
+/// What can be granted to a workspace.
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub enum Resource {
+    /// A whole pipeline by name.
+    Pipeline(String),
+    /// A wire (link name) — e.g. grant the summary stream but not the raw.
+    Wire(String),
+    /// Provenance records of a pipeline.
+    Provenance(String),
+}
+
+#[derive(Clone, Debug)]
+pub struct Workspace {
+    pub id: WorkspaceId,
+    pub name: String,
+    pub members: BTreeSet<String>,
+    pub grants: BTreeSet<Resource>,
+}
+
+/// The overlapping-set registry.
+#[derive(Clone, Debug, Default)]
+pub struct WorkspaceRegistry {
+    spaces: Vec<Workspace>,
+    pub denied: u64,
+    pub allowed: u64,
+}
+
+impl WorkspaceRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn create(&mut self, name: &str) -> WorkspaceId {
+        let id = WorkspaceId::new(self.spaces.len() as u64);
+        self.spaces.push(Workspace {
+            id,
+            name: name.to_string(),
+            members: BTreeSet::new(),
+            grants: BTreeSet::new(),
+        });
+        id
+    }
+
+    pub fn add_member(&mut self, ws: WorkspaceId, principal: &str) {
+        self.spaces[ws.index()].members.insert(principal.to_string());
+    }
+
+    pub fn grant(&mut self, ws: WorkspaceId, r: Resource) {
+        self.spaces[ws.index()].grants.insert(r);
+    }
+
+    pub fn revoke(&mut self, ws: WorkspaceId, r: &Resource) {
+        self.spaces[ws.index()].grants.remove(r);
+    }
+
+    /// Friend overlap: share everything `from` grants into `to` as well.
+    /// (The paper's workspaces "overlap as 'friends'".)
+    pub fn befriend(&mut self, from: WorkspaceId, to: WorkspaceId) {
+        let grants: Vec<Resource> = self.spaces[from.index()].grants.iter().cloned().collect();
+        for g in grants {
+            self.spaces[to.index()].grants.insert(g);
+        }
+    }
+
+    /// Access check: any workspace that contains the principal and the grant.
+    pub fn check(&mut self, principal: &str, r: &Resource) -> bool {
+        let ok = self
+            .spaces
+            .iter()
+            .any(|w| w.members.contains(principal) && w.grants.contains(r));
+        if ok {
+            self.allowed += 1;
+        } else {
+            self.denied += 1;
+        }
+        ok
+    }
+
+    /// All resources visible to a principal (union over its workspaces) —
+    /// the "map" view an end user gets of the plumbing they may touch.
+    pub fn visible(&self, principal: &str) -> BTreeSet<Resource> {
+        self.spaces
+            .iter()
+            .filter(|w| w.members.contains(principal))
+            .flat_map(|w| w.grants.iter().cloned())
+            .collect()
+    }
+
+    pub fn workspaces_of(&self, principal: &str) -> Vec<WorkspaceId> {
+        self.spaces
+            .iter()
+            .filter(|w| w.members.contains(principal))
+            .map(|w| w.id)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wire(n: &str) -> Resource {
+        Resource::Wire(n.to_string())
+    }
+
+    #[test]
+    fn membership_grants_access() {
+        let mut reg = WorkspaceRegistry::new();
+        let ws = reg.create("telco-hq");
+        reg.add_member(ws, "alice");
+        reg.grant(ws, wire("monthly-summary"));
+        assert!(reg.check("alice", &wire("monthly-summary")));
+        assert!(!reg.check("bob", &wire("monthly-summary")));
+        assert!(!reg.check("alice", &wire("raw-records")));
+        assert_eq!((reg.allowed, reg.denied), (1, 2));
+    }
+
+    #[test]
+    fn overlapping_sets_not_hierarchy() {
+        let mut reg = WorkspaceRegistry::new();
+        let af = reg.create("africa-ops");
+        let hq = reg.create("hq");
+        reg.add_member(af, "amara");
+        reg.add_member(hq, "amara"); // one principal, two overlapping sets
+        reg.grant(af, wire("raw-records"));
+        reg.grant(hq, wire("monthly-summary"));
+        let vis = reg.visible("amara");
+        assert!(vis.contains(&wire("raw-records")));
+        assert!(vis.contains(&wire("monthly-summary")));
+        assert_eq!(reg.workspaces_of("amara").len(), 2);
+    }
+
+    #[test]
+    fn friendship_shares_grants() {
+        let mut reg = WorkspaceRegistry::new();
+        let a = reg.create("a");
+        let b = reg.create("b");
+        reg.add_member(b, "bea");
+        reg.grant(a, wire("model"));
+        assert!(!reg.check("bea", &wire("model")));
+        reg.befriend(a, b);
+        assert!(reg.check("bea", &wire("model")));
+    }
+
+    #[test]
+    fn revoke_removes_access() {
+        let mut reg = WorkspaceRegistry::new();
+        let ws = reg.create("x");
+        reg.add_member(ws, "p");
+        reg.grant(ws, wire("w"));
+        assert!(reg.check("p", &wire("w")));
+        reg.revoke(ws, &wire("w"));
+        assert!(!reg.check("p", &wire("w")));
+    }
+}

@@ -1,0 +1,354 @@
+//! Cross-module integration tests: whole pipelines over the full platform
+//! (coordinator + agents + storage + bus + net + provenance + workspaces),
+//! no PJRT required (pure-rust task bodies) so they run before artifacts.
+
+use koalja::baseline::ScheduledRunner;
+use koalja::metrics::NetTier;
+use koalja::prelude::*;
+use koalja::provenance::ProvenanceQuery;
+use koalja::workspace::Resource;
+
+fn deploy(src: &str) -> Coordinator {
+    let spec = parse(src).unwrap();
+    Coordinator::deploy(&spec, DeployConfig::default()).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// fig. 5 wiring end to end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fig5_tfmodel_with_service_and_windows() {
+    let mut c = deploy(
+        "[tfmodel]\n\
+         (in) learn-tf (model)\n\
+         (in[10/2]) convert (json)\n\
+         (json, lookup?) predict (result)\n",
+    );
+    c.plat
+        .services
+        .register("lookup", Box::new(koalja::platform::service::KvService::new(&[("k", "v")])));
+    c.set_code(
+        "predict",
+        Box::new(FnTask::new(|ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
+            let _ = ctx.lookup("lookup", &Payload::Text("k".into()))?;
+            Ok(vec![Output::summary("result", Payload::scalar(snap.all_avs().count() as f32))])
+        })),
+    )
+    .unwrap();
+    let mut r = rng(1);
+    for i in 0..30u64 {
+        let data: Vec<f32> = (0..4).map(|_| r.normal() as f32).collect();
+        c.inject_at(
+            "in",
+            Payload::tensor(&[1, 4], data),
+            DataClass::Summary,
+            RegionId::new(0),
+            SimTime::millis(i * 20),
+        )
+        .unwrap();
+    }
+    c.run_until_idle();
+    // 30 arrivals -> windows [10/2]: first at 10, then every 2 -> 11 convert runs
+    let convert_runs = c.agent("convert").unwrap().runs;
+    assert_eq!(convert_runs, 11);
+    assert!(c.collected_count("result") > 0);
+    assert_eq!(c.collected_count("model"), 30, "learn-tf passthrough");
+    // every service lookup left a forensic record
+    assert_eq!(c.plat.services.lookups.len() as u64, c.agent("predict").unwrap().runs);
+}
+
+// ---------------------------------------------------------------------------
+// sovereignty + edge reduction (mini E7, no PJRT)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn edge_reduction_beats_central_on_wan_bytes() {
+    let run = |central: bool| -> (u64, u64) {
+        let spec = parse(
+            "[m]\n(raw) summarize (sketch) @region=edge-0\n(sketch) hq (report) @region=central\n",
+        )
+        .unwrap();
+        let cfg = DeployConfig {
+            topology: demo_topology(2),
+            force_central: central,
+            ..Default::default()
+        };
+        let mut c = Coordinator::deploy(&spec, cfg).unwrap();
+        c.set_code("summarize", Box::new(SummarizeRs::new("sketch"))).unwrap();
+        let edge = c.plat.net.by_name("edge-0").unwrap();
+        let mut r = rng(4);
+        for i in 0..10u64 {
+            let data: Vec<f32> = (0..2048).map(|_| r.normal() as f32).collect();
+            c.inject_at(
+                "raw",
+                Payload::tensor(&[256, 8], data),
+                DataClass::Raw,
+                edge,
+                SimTime::millis(i * 100),
+            )
+            .unwrap();
+        }
+        c.run_until_idle();
+        (c.plat.metrics.bytes(NetTier::Wan), c.plat.metrics.get("sovereignty_denied"))
+    };
+    let (edge_wan, edge_denied) = run(false);
+    let (central_wan, _) = run(true);
+    assert_eq!(edge_denied, 0);
+    assert!(
+        edge_wan * 10 < central_wan,
+        "edge {edge_wan} B vs central {central_wan} B"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// caching policies end to end (Principle 2)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cache_policy_changes_fetch_costs() {
+    // same pipeline; user code touches its input object twice per run;
+    // Never-purge caches pay the miss once, zero-TTL pays every time.
+    let run = |policy: PurgePolicy| -> (u64, u64) {
+        let spec = parse("[c]\n(x) reader (out)\n").unwrap();
+        let cfg = DeployConfig { cache_policy: policy, ..Default::default() };
+        let mut c = Coordinator::deploy(&spec, cfg).unwrap();
+        c.set_code(
+            "reader",
+            Box::new(FnTask::new(|ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
+                for av in snap.all_avs() {
+                    ctx.fetch(av)?;
+                    ctx.fetch(av)?; // second touch: hit iff cached
+                }
+                Ok(vec![Output::summary("out", Payload::scalar(0.0))])
+            })),
+        )
+        .unwrap();
+        for i in 0..5u64 {
+            // distinct content each time, else memoization (correctly)
+            // skips the user code entirely
+            c.inject_at(
+                "x",
+                Payload::tensor(&[64], vec![i as f32 + 1.0; 64]),
+                DataClass::Summary,
+                RegionId::new(0),
+                SimTime::secs(i * 10),
+            )
+            .unwrap();
+        }
+        c.run_until_idle();
+        (c.plat.metrics.cache_hits, c.plat.metrics.cache_misses)
+    };
+    let (hits_never, misses_never) = run(PurgePolicy::Never);
+    assert_eq!(hits_never, 5, "second touch always hits");
+    assert_eq!(misses_never, 5);
+    let (hits_ttl, _) = run(PurgePolicy::Ttl(SimDuration::micros(0)));
+    assert!(hits_ttl <= hits_never);
+}
+
+// ---------------------------------------------------------------------------
+// ρ placement strategies (eq. 1)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rho_decides_storage_strategy() {
+    let run = |rho: f64, placement: PlacementStrategy| -> u64 {
+        let spec = parse("[r]\n(x) work (out)\n").unwrap();
+        let cfg = DeployConfig {
+            storage: StorageConfig::with_rho(rho, 64 * 1024),
+            placement,
+            cache_policy: PurgePolicy::Ttl(SimDuration::micros(0)), // no cache help
+            ..Default::default()
+        };
+        let mut c = Coordinator::deploy(&spec, cfg).unwrap();
+        for i in 0..20u64 {
+            c.inject_at(
+                "x",
+                Payload::Bytes(vec![0; 64 * 1024]),
+                DataClass::Summary,
+                RegionId::new(0),
+                SimTime::millis(i * 10),
+            )
+            .unwrap();
+        }
+        c.run_until_idle();
+        c.plat.metrics.e2e_latency.mean().as_micros()
+    };
+    // local storage much faster (rho = 0.1): HostLocal should win
+    assert!(run(0.1, PlacementStrategy::HostLocal) < run(0.1, PlacementStrategy::NetworkAttached));
+    // local storage much slower (rho = 8): NetworkAttached should win
+    assert!(run(8.0, PlacementStrategy::NetworkAttached) < run(8.0, PlacementStrategy::HostLocal));
+}
+
+// ---------------------------------------------------------------------------
+// workspaces guard pipeline outputs (§IV)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn workspace_grants_gate_sink_reads() {
+    let mut c = deploy("[w]\n(raw) monthly (summary)\n");
+    c.inject("raw", Payload::scalar(5.0), DataClass::Summary).unwrap();
+    c.run_until_idle();
+    assert_eq!(c.collected_count("summary"), 1);
+
+    let hq = c.plat.workspaces.create("hq");
+    c.plat.workspaces.add_member(hq, "alice");
+    c.plat.workspaces.grant(hq, Resource::Wire("summary".into()));
+
+    assert!(c.read_sink("alice", "summary").is_some());
+    assert!(c.read_sink("mallory", "summary").is_none());
+    assert!(c.read_sink("alice", "raw").is_none(), "no grant for raw");
+    assert_eq!(c.plat.workspaces.denied, 2);
+
+    // friend overlap extends access (the paper's overlapping sets)
+    let partner = c.plat.workspaces.create("partner");
+    c.plat.workspaces.add_member(partner, "bob");
+    c.plat.workspaces.befriend(hq, partner);
+    assert!(c.read_sink("bob", "summary").is_some());
+}
+
+// ---------------------------------------------------------------------------
+// schedule-driven baseline wastes runs AND adds staleness (E8 mini)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn data_aware_vs_cron_on_bursty_arrivals() {
+    // bursty: 10 arrivals in the first second, then 9 seconds of silence
+    let inject = |c: &mut Coordinator| {
+        for i in 0..10u64 {
+            c.inject_at(
+                "raw",
+                Payload::scalar(i as f32),
+                DataClass::Summary,
+                RegionId::new(0),
+                SimTime::millis(i * 100),
+            )
+            .unwrap();
+        }
+    };
+    // reactive
+    let mut reactive = deploy("[b]\n(raw) work (out)\n");
+    inject(&mut reactive);
+    reactive.run_until(SimTime::secs(10));
+    assert_eq!(reactive.plat.metrics.task_runs, 10, "one run per arrival");
+    assert_eq!(reactive.plat.metrics.wasted_runs, 0);
+
+    // cron at 1 Hz (scheduled config: arrivals queue silently)
+    let spec = parse("[b]\n(raw) work (out)\n").unwrap();
+    let mut cron_c = Coordinator::deploy(&spec, koalja::baseline::scheduled_config()).unwrap();
+    inject(&mut cron_c);
+    let mut cron = ScheduledRunner::new(SimDuration::secs(1));
+    cron.run(&mut cron_c, SimTime::secs(10)).unwrap();
+    assert_eq!(cron.runs, 10, "one run per tick");
+    assert!(cron.wasted >= 8, "ticks after the burst recompute nothing new: {}", cron.wasted);
+}
+
+// ---------------------------------------------------------------------------
+// feedback cycle (DCG) with damping terminates
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cyclic_pipeline_with_damping_converges() {
+    // refine feeds back until the value stops changing (fixpoint): x' = floor(x/2)
+    // merge policy bootstraps the loop: gen fires on seed alone, then on
+    // each feedback value FCFS (swap would wait for fb to exist first)
+    let mut c = deploy("[loop]\n(seed, fb) gen (x) @policy=merge\n(x) refine (fb, out)\n");
+    c.set_code(
+        "gen",
+        Box::new(FnTask::new(|ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
+            // prefer the freshest input (fb over seed once looping)
+            let mut latest: Option<(SimTime, f32)> = None;
+            for av in snap.all_avs() {
+                let p = ctx.fetch(av)?;
+                let v = p.as_tensor().unwrap().1[0];
+                if latest.is_none() || av.created > latest.unwrap().0 {
+                    latest = Some((av.created, v));
+                }
+            }
+            Ok(vec![Output::summary("x", Payload::scalar(latest.unwrap().1))])
+        })),
+    )
+    .unwrap();
+    c.set_code(
+        "refine",
+        Box::new(FnTask::new(|ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
+            let mut outs = vec![];
+            for av in snap.all_avs() {
+                let v = ctx.fetch(av)?.as_tensor().unwrap().1[0];
+                let next = (v / 2.0).floor();
+                outs.push(Output::summary("out", Payload::scalar(v)));
+                if next != v {
+                    outs.push(Output::summary("fb", Payload::scalar(next))); // damping
+                }
+            }
+            Ok(outs)
+        })),
+    )
+    .unwrap();
+    c.inject("seed", Payload::scalar(37.0), DataClass::Summary).unwrap();
+    let events = c.run_until_idle();
+    assert!(events < 1000, "loop terminated (no event storm)");
+    let outs: Vec<f32> =
+        c.collected["out"].iter().map(|col| col.payload.as_tensor().unwrap().1[0]).collect();
+    assert_eq!(outs, vec![37.0, 18.0, 9.0, 4.0, 2.0, 1.0, 0.0]);
+}
+
+// ---------------------------------------------------------------------------
+// provenance end-to-end: the full forensic story across a diamond
+// ---------------------------------------------------------------------------
+
+#[test]
+fn diamond_pipeline_forensics() {
+    let mut c = deploy(
+        "[d]\n(raw) split (a, b)\n(a) left (l)\n(b) right (r)\n(l, r) join (out) @policy=swap\n",
+    );
+    c.set_code(
+        "split",
+        Box::new(FnTask::new(|ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
+            let mut outs = vec![];
+            for av in snap.all_avs() {
+                let p = ctx.fetch(av)?;
+                outs.push(Output::summary("a", p.clone()));
+                outs.push(Output::summary("b", p));
+            }
+            Ok(outs)
+        })),
+    )
+    .unwrap();
+    let injected = c.inject("raw", Payload::scalar(1.0), DataClass::Summary).unwrap();
+    c.run_until_idle();
+    assert!(c.collected_count("out") >= 1, "join produced output");
+    let out_av = c.collected["out"].last().unwrap().av.id;
+    let q = ProvenanceQuery::new(&c.plat.prov);
+    let anc = q.ancestors(out_av);
+    assert!(anc.contains(&injected), "ancestry crosses the diamond");
+    // reconstruction-cost estimator: passport walk linear, inference huge
+    let (with, without) = q.reconstruction_cost(out_av, 8);
+    assert!(without > with * 100);
+    // every contributing run is identifiable
+    assert!(q.contributing_runs(out_av).len() >= 3);
+}
+
+// ---------------------------------------------------------------------------
+// ghost pre-flight then real data (§III-K workflow)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ghost_preflight_then_real_run() {
+    let mut c = deploy("[g]\n(raw) a (x)\n(x) b (out)\n");
+    let ghost = c.inject_ghost("raw", 1 << 30, RegionId::new(0)).unwrap();
+    c.run_until_idle();
+    let route = c.ghost_route(ghost);
+    assert_eq!(route, vec!["a".to_string(), "b".to_string()]);
+    assert_eq!(c.plat.metrics.task_runs, 0);
+    // ghosts reach the sink but are marked
+    assert_eq!(c.collected_count("out"), 1);
+    assert!(c.collected["out"][0].av.ghost);
+
+    // now trust it with real data
+    c.inject("raw", Payload::scalar(1.0), DataClass::Summary).unwrap();
+    c.run_until_idle();
+    assert_eq!(c.plat.metrics.task_runs, 2);
+    assert_eq!(c.collected_count("out"), 2);
+    assert!(!c.collected["out"][1].av.ghost);
+}

@@ -1,0 +1,398 @@
+//! Property-based tests over coordinator/policy/substrate invariants.
+//!
+//! proptest is not vendored in this offline environment, so this file uses
+//! an in-tree harness: each property runs against many seeded-random cases
+//! (deterministic, reproducible by seed — failures print the seed).
+
+use koalja::av::{AnnotatedValue, DataClass, Payload};
+use koalja::policy::{BufferSpec, InputBuffer, RateControl, SnapshotEngine, SnapshotPolicy};
+use koalja::prelude::*;
+use koalja::provenance::ProvenanceQuery;
+use koalja::util::{AvId, ContentHash, Json, LinkId, ObjectId, Rng, TaskId};
+
+const CASES: u64 = 40;
+
+fn for_cases(name: &str, mut f: impl FnMut(&mut Rng)) {
+    for seed in 0..CASES {
+        let mut r = Rng::seed_from_u64(0xC0FFEE ^ seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut r)));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+fn mk_av(r: &mut Rng, seq: u64, t_us: u64) -> AnnotatedValue {
+    AnnotatedValue {
+        id: AvId::new(seq),
+        source_task: TaskId::new(0),
+        link: LinkId::new(0),
+        object: ObjectId::new(seq),
+        region: RegionId::new(0),
+        created: SimTime::micros(t_us),
+        seq,
+        size_bytes: r.range_u64(1, 4096),
+        content: ContentHash(r.next_u64()),
+        class: DataClass::Summary,
+        ghost: false,
+        born: SimTime::micros(t_us),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// snapshot-engine invariants (the heart of §III-I)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_allnew_buffer_snapshots_never_overlap() {
+    for_cases("allnew-no-overlap", |r| {
+        let n = r.range(1, 6);
+        let mut e = SnapshotEngine::new(
+            SnapshotPolicy::AllNew,
+            vec![InputBuffer::new("a", BufferSpec::buffer(n))],
+            RateControl::default(),
+        );
+        let mut seen = std::collections::HashSet::new();
+        let mut t = 0u64;
+        for seq in 0..60u64 {
+            t += r.range_u64(1, 50);
+            e.push("a", mk_av(r, seq, t));
+            while let Some(s) = e.take(SimTime::micros(t)) {
+                for av in s.all_avs() {
+                    assert!(seen.insert(av.id), "AV {} reused across AllNew buffers", av.id);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sliding_window_always_full_and_slides() {
+    for_cases("window-full", |r| {
+        let n = r.range(2, 10);
+        let s = r.range(1, n);
+        let mut e = SnapshotEngine::new(
+            SnapshotPolicy::AllNew,
+            vec![InputBuffer::new("w", BufferSpec::window(n, s))],
+            RateControl::default(),
+        );
+        let mut last: Option<Vec<u64>> = None;
+        let mut t = 0u64;
+        for seq in 0..80u64 {
+            t += 5;
+            e.push("w", mk_av(r, seq, t));
+            if let Some(snap) = e.take(SimTime::micros(t)) {
+                let seqs: Vec<u64> = snap.input("w").unwrap().iter().map(|a| a.seq).collect();
+                assert_eq!(seqs.len(), n, "window always exactly N");
+                assert!(seqs.windows(2).all(|w| w[1] == w[0] + 1), "window is contiguous");
+                if let Some(prev) = &last {
+                    // arrivals one at a time -> slides exactly s
+                    assert_eq!(seqs[0], prev[0] + s as u64, "slid by exactly S");
+                }
+                last = Some(seqs);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_swap_always_one_current_value_per_input() {
+    for_cases("swap-tuple-shape", |r| {
+        let k = r.range(2, 5);
+        let buffers: Vec<InputBuffer> = (0..k)
+            .map(|i| InputBuffer::new(&format!("in{i}"), BufferSpec::default()))
+            .collect();
+        let mut e = SnapshotEngine::new(SnapshotPolicy::SwapNewForOld, buffers, RateControl::default());
+        let mut t = 0u64;
+        let mut max_seq_seen = vec![0u64; k];
+        for seq in 0..100u64 {
+            t += r.range_u64(1, 30);
+            let which = r.range(0, k);
+            max_seq_seen[which] = seq;
+            e.push(&format!("in{which}"), mk_av(r, seq, t));
+            while let Some(snap) = e.take(SimTime::micros(t)) {
+                assert_eq!(snap.inputs.len(), k);
+                for (i, (_, avs)) in snap.inputs.iter().enumerate() {
+                    assert_eq!(avs.len(), 1, "exactly one current value per input");
+                    // it is the *latest* value that input ever received
+                    assert_eq!(avs[0].seq, max_seq_seen[i]);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_merge_is_fcfs_total_order() {
+    for_cases("merge-fcfs", |r| {
+        let k = r.range(2, 5);
+        let batch = r.range(1, 4);
+        let buffers: Vec<InputBuffer> = (0..k)
+            .map(|i| InputBuffer::new(&format!("in{i}"), BufferSpec::buffer(batch)))
+            .collect();
+        let mut e = SnapshotEngine::new(SnapshotPolicy::Merge, buffers, RateControl::default());
+        let mut t = 0u64;
+        let mut merged_times: Vec<u64> = vec![];
+        for seq in 0..60u64 {
+            t += r.range_u64(1, 20);
+            let which = r.range(0, k);
+            e.push(&format!("in{which}"), mk_av(r, seq, t));
+            while let Some(snap) = e.take(SimTime::micros(t)) {
+                for av in snap.input("merged").unwrap() {
+                    merged_times.push(av.created.as_micros());
+                }
+            }
+        }
+        assert!(
+            merged_times.windows(2).all(|w| w[0] <= w[1]),
+            "merged stream preserves causal (FCFS) order"
+        );
+    });
+}
+
+// ---------------------------------------------------------------------------
+// whole-pipeline invariants over random linear topologies
+// ---------------------------------------------------------------------------
+
+fn random_linear_pipeline(r: &mut Rng) -> (Coordinator, usize) {
+    let depth = r.range(1, 5);
+    let mut text = String::from("[prop]\n");
+    for d in 0..depth {
+        let from = if d == 0 { "w0".to_string() } else { format!("w{d}") };
+        text.push_str(&format!("({from}) t{d} (w{})\n", d + 1));
+    }
+    let spec = parse(&text).unwrap();
+    let cfg = DeployConfig { seed: r.next_u64(), ..Default::default() };
+    (Coordinator::deploy(&spec, cfg).unwrap(), depth)
+}
+
+#[test]
+fn prop_every_output_traces_back_to_an_injection() {
+    for_cases("lineage-closure", |r| {
+        let (mut c, depth) = random_linear_pipeline(r);
+        let n = r.range(1, 12);
+        let mut injected = std::collections::HashSet::new();
+        let mut t = 0u64;
+        for i in 0..n {
+            t += r.range_u64(1, 100_000);
+            let id = c
+                .inject_at(
+                    "w0",
+                    Payload::scalar(i as f32 + r.f32()),
+                    DataClass::Summary,
+                    RegionId::new(0),
+                    SimTime::micros(t),
+                )
+                .unwrap();
+            injected.insert(id);
+        }
+        c.run_until_idle();
+        let sink = format!("w{depth}");
+        assert_eq!(c.collected_count(&sink), n, "conservation: all arrivals emerge");
+        let q = ProvenanceQuery::new(&c.plat.prov);
+        for col in &c.collected[&sink] {
+            let anc = q.ancestors(col.av.id);
+            assert!(
+                anc.iter().any(|a| injected.contains(a)),
+                "output {} has no injected ancestor",
+                col.av.id
+            );
+            // passports are time-monotone
+            let p = c.plat.prov.passport(col.av.id).unwrap();
+            assert!(p.stamps.windows(2).all(|w| w[0].time <= w[1].time));
+            // e2e latency is non-negative by construction
+            assert!(col.at >= col.av.born);
+        }
+    });
+}
+
+#[test]
+fn prop_deterministic_across_identical_seeds() {
+    for_cases("determinism", |r| {
+        let seed = r.next_u64();
+        let run = |seed: u64| {
+            let spec = parse("[d]\n(a) x (b)\n(b) y (c)\n").unwrap();
+            let cfg = DeployConfig { seed, ..Default::default() };
+            let mut c = Coordinator::deploy(&spec, cfg).unwrap();
+            let mut rr = Rng::seed_from_u64(seed);
+            for i in 0..8u64 {
+                c.inject_at(
+                    "a",
+                    Payload::scalar(rr.f32()),
+                    DataClass::Summary,
+                    RegionId::new(0),
+                    SimTime::micros(i * 1000),
+                )
+                .unwrap();
+            }
+            c.run_until_idle();
+            (
+                c.plat.prov.stamp_count,
+                c.plat.metrics.task_runs,
+                c.collected["c"].iter().map(|x| x.av.content.0).collect::<Vec<_>>(),
+            )
+        };
+        assert_eq!(run(seed), run(seed));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// sovereignty invariant over random topologies
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_raw_data_never_crosses_zones() {
+    for_cases("sovereignty", |r| {
+        let mut t = koalja::net::WanTopology::new();
+        let zones = ["us", "eu", "ap"];
+        let n = r.range(2, 7);
+        for i in 0..n {
+            let zone = zones[r.range(0, zones.len())];
+            t.add_region(&format!("r{i}"), zone, r.bool(0.5));
+        }
+        for _ in 0..r.range(1, 10) {
+            let a = RegionId::new(r.range_u64(0, n as u64));
+            let b = RegionId::new(r.range_u64(0, n as u64));
+            if a != b {
+                t.connect(
+                    a,
+                    b,
+                    koalja::net::WanLink {
+                        rtt: SimDuration::millis(r.range_u64(1, 200)),
+                        gbps: 0.1 + r.f64() * 10.0,
+                        dollars_per_gb: r.f64(),
+                    },
+                );
+            }
+        }
+        for _ in 0..20 {
+            let a = RegionId::new(r.range_u64(0, n as u64));
+            let b = RegionId::new(r.range_u64(0, n as u64));
+            let class = match r.range(0, 3) {
+                0 => DataClass::Raw,
+                1 => DataClass::Summary,
+                _ => DataClass::Ghost,
+            };
+            let plan = t.plan_transfer(class, a, b, r.range_u64(1, 1 << 20));
+            let zones_differ = t.region(a).zone != t.region(b).zone;
+            match (class, zones_differ) {
+                (DataClass::Raw, true) => assert!(plan.is_none(), "raw crossed zones"),
+                _ => assert!(plan.is_some(), "legal transfer denied"),
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// substrate invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_storage_roundtrip_and_accounting() {
+    for_cases("storage", |r| {
+        let mut s = koalja::storage::ObjectStore::new(StorageConfig::default());
+        let mut live: Vec<(ObjectId, Payload)> = vec![];
+        let mut expected_bytes = 0u64;
+        for i in 0..50 {
+            if r.bool(0.7) || live.is_empty() {
+                let len = r.range(1, 2000);
+                let p = Payload::Bytes((0..len).map(|j| ((i * 7 + j) % 256) as u8).collect());
+                expected_bytes += p.size_bytes();
+                let (id, lat) = s.put(
+                    p.clone(),
+                    RegionId::new(0),
+                    koalja::storage::StorageTier::ObjectStore,
+                    DataClass::Summary,
+                    SimTime::ZERO,
+                );
+                assert!(lat.as_micros() > 0);
+                live.push((id, p));
+            } else {
+                let (id, p) = live[r.range(0, live.len())].clone();
+                let (obj, _) = s.get(id).unwrap();
+                assert_eq!(obj.payload, p, "roundtrip intact");
+            }
+        }
+        assert_eq!(s.total_bytes, expected_bytes);
+    });
+}
+
+#[test]
+fn prop_cache_hit_rate_bounded_and_consistent() {
+    for_cases("cache", |r| {
+        let policy = match r.range(0, 4) {
+            0 => PurgePolicy::Never,
+            1 => PurgePolicy::Ttl(SimDuration::micros(r.range_u64(1, 100_000))),
+            2 => PurgePolicy::LruBytes(r.range_u64(100, 100_000)),
+            _ => PurgePolicy::RiskWeighted {
+                combined_ttl: SimDuration::micros(r.range_u64(1, 100_000)),
+                passthrough_ttl: SimDuration::micros(r.range_u64(1, 100_000)),
+            },
+        };
+        let mut c = koalja::storage::CacheManager::new(policy);
+        let mut t = 0u64;
+        for i in 0..200u64 {
+            t += r.range_u64(1, 10_000);
+            let id = ObjectId::new(r.range_u64(0, 20));
+            if r.bool(0.5) {
+                c.insert(id, r.range_u64(1, 5000), r.bool(0.5), SimTime::micros(t));
+            } else {
+                let _ = c.lookup(id, SimTime::micros(t));
+            }
+            let _ = i;
+        }
+        let rate = c.hit_rate();
+        assert!((0.0..=1.0).contains(&rate));
+        if let PurgePolicy::LruBytes(cap) = policy {
+            assert!(c.bytes <= cap, "capacity respected: {} <= {cap}", c.bytes);
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_json(r: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { r.range(0, 4) } else { r.range(0, 6) } {
+            0 => Json::Null,
+            1 => Json::Bool(r.bool(0.5)),
+            2 => Json::Num((r.normal() * 1000.0).round()),
+            3 => {
+                let n = r.range(0, 12);
+                Json::Str((0..n).map(|_| "ax\"\\\n✓é"
+                    .chars()
+                    .nth(r.range(0, 7))
+                    .unwrap()).collect())
+            }
+            4 => Json::Arr((0..r.range(0, 5)).map(|_| random_json(r, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..r.range(0, 5))
+                    .map(|i| (format!("k{i}"), random_json(r, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for_cases("json-roundtrip", |r| {
+        let v = random_json(r, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("reparse {text:?}: {e}"));
+        assert_eq!(back, v);
+    });
+}
+
+#[test]
+fn prop_recipe_hash_injective_on_version_and_inputs() {
+    for_cases("recipe-hash", |r| {
+        let k = r.range(1, 6);
+        let inputs: Vec<ContentHash> = (0..k).map(|_| ContentHash(r.next_u64())).collect();
+        let v = r.range_u64(1, 100) as u32;
+        let base = koalja::platform::Platform::recipe_hash(&inputs, v);
+        // version change -> different recipe
+        assert_ne!(base, koalja::platform::Platform::recipe_hash(&inputs, v + 1));
+        // any single input change -> different recipe
+        for i in 0..k {
+            let mut changed = inputs.clone();
+            changed[i] = ContentHash(changed[i].0 ^ 0xDEAD_BEEF);
+            assert_ne!(base, koalja::platform::Platform::recipe_hash(&changed, v));
+        }
+    });
+}

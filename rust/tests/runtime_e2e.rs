@@ -1,0 +1,204 @@
+//! Cross-language integration: the AOT-compiled JAX+Pallas artifacts,
+//! loaded and executed from rust via PJRT, must agree with independent
+//! rust-side oracles. This is the proof that L1→L2→(HLO text)→L3 composes.
+//!
+//! Requires `make artifacts` (the Makefile runs it before cargo test).
+
+use koalja::av::Payload;
+use koalja::runtime::Runtime;
+use koalja::task::builtins::SummarizeRs;
+use koalja::task::compute::{pack_params, unpack_params, MlpDims};
+use koalja::util::rng;
+
+fn runtime() -> Runtime {
+    Runtime::open(Runtime::default_dir()).expect("artifacts missing — run `make artifacts` first")
+}
+
+fn randn(seed: u64, shape: &[usize]) -> Payload {
+    let mut r = rng(seed);
+    let n: usize = shape.iter().product();
+    Payload::tensor(shape, (0..n).map(|_| r.normal() as f32).collect())
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0 + x.abs().max(y.abs());
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "{what}[{i}]: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[test]
+fn manifest_lists_all_five_artifacts() {
+    let rt = runtime();
+    let names: Vec<&str> = rt.manifest().iter().map(|m| m.name.as_str()).collect();
+    for want in ["edge_summarize", "window_mean", "anomaly", "mlp_infer", "mlp_train_step"] {
+        assert!(names.contains(&want), "missing {want}");
+    }
+}
+
+#[test]
+fn edge_summarize_matches_rust_oracle() {
+    let mut rt = runtime();
+    let exe = rt.load("edge_summarize").unwrap();
+    let chunk = randn(1, &[1024, 8]);
+    let out = exe.run(&[&chunk]).unwrap();
+    assert_eq!(out.len(), 1);
+    let (shape, got) = out[0].as_tensor().unwrap();
+    assert_eq!(shape, &[4, 8]);
+    let (cshape, cdata) = chunk.as_tensor().unwrap();
+    let oracle = SummarizeRs::sketch(cshape, cdata).unwrap();
+    let (_, want) = oracle.as_tensor().unwrap();
+    assert_close(got, want, 2e-4, "edge_summarize");
+}
+
+#[test]
+fn window_mean_matches_manual_windows() {
+    let mut rt = runtime();
+    let exe = rt.load("window_mean").unwrap();
+    let stream = randn(2, &[256, 8]);
+    let out = exe.run(&[&stream]).unwrap();
+    let (shape, got) = out[0].as_tensor().unwrap();
+    assert_eq!(shape, &[29, 8]); // (256-32)/8+1 windows of [32/8]
+    let (_, data) = stream.as_tensor().unwrap();
+    // manual moving average for window 0 and window 28
+    for w in [0usize, 13, 28] {
+        for c in 0..8 {
+            let mut s = 0.0f32;
+            for r in 0..32 {
+                s += data[(w * 8 + r) * 8 + c];
+            }
+            let want = s / 32.0;
+            let g = got[w * 8 + c];
+            assert!((g - want).abs() < 1e-4, "window {w} ch {c}: {g} vs {want}");
+        }
+    }
+}
+
+#[test]
+fn anomaly_flags_planted_spike() {
+    let mut rt = runtime();
+    let exe = rt.load("anomaly").unwrap();
+    let mut x = randn(3, &[256, 8]);
+    if let Payload::Tensor { data, .. } = &mut x {
+        data[37 * 8 + 5] = 80.0; // gross spike
+    }
+    let (xs, xd) = x.as_tensor().unwrap();
+    let sketch = SummarizeRs::sketch(xs, xd).unwrap();
+    let out = exe.run(&[&x, &sketch]).unwrap();
+    assert_eq!(out.len(), 2);
+    let (_, mask) = out[0].as_tensor().unwrap();
+    let (_, count) = out[1].as_tensor().unwrap();
+    assert_eq!(mask[37 * 8 + 5], 1.0, "planted spike flagged");
+    let total: f32 = mask.iter().sum();
+    assert_eq!(total, count[0], "count output consistent with mask");
+    assert!(count[0] >= 1.0 && count[0] < 20.0, "few flags on gaussian noise: {}", count[0]);
+}
+
+#[test]
+fn mlp_infer_emits_normalized_probabilities() {
+    let mut rt = runtime();
+    let exe = rt.load("mlp_infer").unwrap();
+    let dims = MlpDims::default();
+    let mut r = rng(4);
+    let params = dims.init_params(&mut r);
+    let x = randn(5, &[dims.batch, dims.input]);
+    let mut inputs: Vec<&Payload> = params.iter().collect();
+    inputs.push(&x);
+    let out = exe.run(&inputs).unwrap();
+    let (shape, probs) = out[0].as_tensor().unwrap();
+    assert_eq!(shape, &[dims.batch, dims.classes]);
+    for b in 0..dims.batch {
+        let row = &probs[b * dims.classes..(b + 1) * dims.classes];
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "row {b} sums to {s}");
+        assert!(row.iter().all(|p| *p >= 0.0));
+    }
+}
+
+#[test]
+fn mlp_train_step_reduces_loss_and_learns() {
+    let mut rt = runtime();
+    let train = rt.load("mlp_train_step").unwrap();
+    let infer = rt.load("mlp_infer").unwrap();
+    let dims = MlpDims::default();
+    let mut r = rng(6);
+    let mut params = dims.init_params(&mut r);
+
+    // separable synthetic batch: class prototypes + small noise
+    let stream = koalja::workload::ImageStream::new(&mut r, dims.classes, dims.input, 0.3);
+    let (x, labels) = stream.batch(&mut r, dims.batch);
+    let y = stream.one_hot(&labels);
+
+    let mut losses = Vec::new();
+    for _ in 0..60 {
+        let mut inputs: Vec<&Payload> = params.iter().collect();
+        inputs.push(&x);
+        inputs.push(&y);
+        let out = train.run(&inputs).unwrap();
+        assert_eq!(out.len(), 5);
+        let (_, loss) = out[4].as_tensor().unwrap();
+        losses.push(loss[0]);
+        params = out[..4].to_vec();
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.5),
+        "loss did not halve: {:?} -> {:?}",
+        losses[0],
+        losses.last().unwrap()
+    );
+
+    // accuracy on the training batch after training
+    let mut inputs: Vec<&Payload> = params.iter().collect();
+    inputs.push(&x);
+    let out = infer.run(&inputs).unwrap();
+    let (_, probs) = out[0].as_tensor().unwrap();
+    let mut correct = 0;
+    for (b, label) in labels.iter().enumerate() {
+        let row = &probs[b * dims.classes..(b + 1) * dims.classes];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred == *label {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / dims.batch as f64;
+    assert!(acc > 0.8, "post-training accuracy {acc}");
+}
+
+#[test]
+fn params_pack_roundtrip_through_model_server() {
+    let mut rt = runtime();
+    let exe = rt.load("mlp_infer").unwrap();
+    let dims = MlpDims::default();
+    let mut r = rng(8);
+    let params = dims.init_params(&mut r);
+    let packed = pack_params(&params).unwrap();
+    let unpacked = unpack_params(&dims, &packed).unwrap();
+    let x = randn(9, &[dims.batch, dims.input]);
+
+    let mut in1: Vec<&Payload> = params.iter().collect();
+    in1.push(&x);
+    let mut in2: Vec<&Payload> = unpacked.iter().collect();
+    in2.push(&x);
+    let o1 = exe.run(&in1).unwrap();
+    let o2 = exe.run(&in2).unwrap();
+    assert_eq!(o1[0], o2[0], "identical outputs through pack/unpack");
+}
+
+#[test]
+fn executable_rejects_wrong_shapes() {
+    let mut rt = runtime();
+    let exe = rt.load("edge_summarize").unwrap();
+    let wrong = randn(1, &[100, 8]);
+    assert!(exe.run(&[&wrong]).is_err());
+    let not_enough: [&Payload; 0] = [];
+    assert!(exe.run(&not_enough).is_err());
+}
