@@ -1,0 +1,106 @@
+//! Tap-dispatch overhead (§III-H acceptance): an idle (no-tap) coordinator
+//! must pay nothing measurable for the breadboard hook, and even an
+//! attached tap must not tax wires it is not watching (the guard is
+//! wire-precise — `TapBoard::watches`).
+//!
+//! Arms (same two-stage pipeline, same arrival stream):
+//!   no-taps        — hook present, TapBoard empty (the production state)
+//!   detached       — a tap was attached then detached (back to empty)
+//!   tap-other-wire — one tap attached to a wire the traffic never touches
+//!   tap-metadata   — one metadata tap on the hot wire
+//!   tap-payloads   — payload-capturing tap on the hot wire (the priciest)
+//!
+//! Two readings matter:
+//!  * no-taps vs detached run identical code (the empty-board branch); the
+//!    spread between them is the measurement noise floor.
+//!  * tap-other-wire vs no-taps is the real regression detector: with the
+//!    wire-precise guard it must stay inside the noise floor — if the
+//!    guard ever starts allocating or enqueueing for untapped wires, this
+//!    arm blows past it and the bench reports FAIL.
+
+use koalja::benchkit::{bench_ns, f, row, table_header};
+use koalja::breadboard::TapSpec;
+use koalja::prelude::*;
+
+const ARRIVALS: u64 = 64;
+
+enum Arm {
+    NoTaps,
+    Detached,
+    TapOtherWire,
+    TapMetadata,
+    TapPayloads,
+}
+
+/// One full session: deploy, configure taps per arm, stream, drain.
+/// Returns ns/arrival (amortized over the cascade: 2 hops + sink).
+fn run_arm(arm: &Arm) -> f64 {
+    let ns_total = bench_ns(|| {
+        let spec = parse("[t]\n(w0) t0 (w1)\n(w1) t1 (w2)\n").unwrap();
+        let mut c = Coordinator::deploy(&spec, DeployConfig::default()).unwrap();
+        match arm {
+            Arm::NoTaps => {}
+            Arm::Detached => {
+                let id = c.taps.attach("w1", TapSpec::default());
+                c.taps.detach(id);
+            }
+            Arm::TapOtherWire => {
+                c.taps.attach("cold-wire", TapSpec::default());
+            }
+            Arm::TapMetadata => {
+                c.taps.attach("w1", TapSpec::default().with_capacity(32));
+            }
+            Arm::TapPayloads => {
+                c.taps.attach("w1", TapSpec::default().with_capacity(32).with_payloads());
+            }
+        }
+        for i in 0..ARRIVALS {
+            c.inject_at(
+                "w0",
+                Payload::scalar(i as f32),
+                DataClass::Summary,
+                RegionId::new(0),
+                SimTime::micros(i * 100),
+            )
+            .unwrap();
+        }
+        c.run_until_idle();
+        assert_eq!(c.collected_count("w2"), ARRIVALS as usize);
+    });
+    ns_total / ARRIVALS as f64
+}
+
+fn main() {
+    table_header(
+        "breadboard tap dispatch overhead (ns per end-to-end arrival, 2-hop pipeline)",
+        &["arm", "ns_per_arrival", "vs_no_taps"],
+    );
+    let base = run_arm(&Arm::NoTaps);
+    let arms = [
+        ("no-taps", base),
+        ("detached", run_arm(&Arm::Detached)),
+        ("tap-other-wire", run_arm(&Arm::TapOtherWire)),
+        ("tap-metadata", run_arm(&Arm::TapMetadata)),
+        ("tap-payloads", run_arm(&Arm::TapPayloads)),
+    ];
+    for (name, ns) in &arms {
+        row(&[name.to_string(), f(*ns), format!("{:+.1}%", (ns / base - 1.0) * 100.0)]);
+    }
+    let noise = ((arms[1].1 / base - 1.0) * 100.0).abs();
+    let cold_tap = ((arms[2].1 / base - 1.0) * 100.0).max(0.0);
+    println!(
+        "\nnoise floor (no-taps vs detached, identical code): {noise:.1}%\n\
+         untapped-wire cost with a tap attached elsewhere:   {cold_tap:.1}%"
+    );
+    // regression gate: untapped wires must not pay for someone else's tap
+    // beyond the measured noise (plus slack for the wire-name compare)
+    if cold_tap <= noise + 5.0 {
+        println!("PASS: wire-precise guard — untapped wires show no measurable tap cost");
+    } else {
+        println!(
+            "FAIL: publications on untapped wires slowed {cold_tap:.1}% with a cold tap \
+             attached (noise {noise:.1}%) — the dispatch guard regressed"
+        );
+        std::process::exit(1);
+    }
+}

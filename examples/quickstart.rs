@@ -6,6 +6,12 @@
 //! paper's platform-transparency promise.
 //!
 //! Run: `cargo run --release --example quickstart`
+//!
+//! Next steps — the interactive breadboard subsystem built on top of this:
+//!   cargo run --release --example breadboard_session   # taps/swap/replay API
+//!   cargo run --release -- bread specs/tfmodel.koalja  # scripted session
+//! (`koalja bread` attaches live wire taps, hot-swaps a task with a dry-run
+//! invalidation preview, and forensically replays the run — see DESIGN.md.)
 
 use anyhow::Result;
 use koalja::prelude::*;

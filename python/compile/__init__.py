@@ -1,0 +1,5 @@
+"""Koalja L1/L2 build-time package: Pallas kernels + JAX graphs + AOT lowering.
+
+Nothing here runs at request time — `compile.aot` lowers the graphs to HLO
+text once (`make artifacts`) and the rust runtime executes them via PJRT.
+"""

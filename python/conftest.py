@@ -1,0 +1,10 @@
+"""Pytest bootstrap: make `compile` importable from any invocation dir.
+
+Supports both `python -m pytest python/tests -q` (repo root, what ci.sh
+runs) and `cd python && python -m pytest tests -q`.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

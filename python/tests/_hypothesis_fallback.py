@@ -1,0 +1,80 @@
+"""Deterministic mini-harness standing in for `hypothesis` when it is not
+installed (the build image vendors no extra wheels).
+
+Implements just what test_kernels.py uses: ``given`` with keyword
+strategies, ``settings(max_examples=..., deadline=...)`` and
+``strategies.integers/floats``. Each ``@given`` test runs a fixed number of
+seeded-random cases; a failing case reports its draw so it can be replayed.
+This trades hypothesis's shrinking and coverage heuristics for zero
+dependencies — the dedicated edge-case tests in the same file keep the
+boundaries covered explicitly.
+"""
+
+from __future__ import annotations
+
+import inspect
+import random
+
+FALLBACK_EXAMPLES = 12
+
+
+class _Integers:
+    def __init__(self, lo, hi):
+        self.lo, self.hi = lo, hi
+
+    def draw(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+
+class _Floats:
+    def __init__(self, lo, hi):
+        self.lo, self.hi = lo, hi
+
+    def draw(self, rng):
+        return rng.uniform(self.lo, self.hi)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Floats(min_value, max_value)
+
+
+st = _Strategies()
+
+
+def settings(**_kw):
+    """Accepted and ignored (example count is fixed in the fallback)."""
+
+    def deco(f):
+        return f
+
+    return deco
+
+
+def given(**strategies):
+    def deco(f):
+        def wrapper(*args):
+            for case in range(FALLBACK_EXAMPLES):
+                rng = random.Random(0xBEEF ^ case)
+                draw = {name: s.draw(rng) for name, s in strategies.items()}
+                try:
+                    f(*args, **draw)
+                except Exception as e:  # noqa: BLE001 - re-raise with context
+                    raise AssertionError(
+                        f"{f.__name__} failed on fallback case {case}: {draw}"
+                    ) from e
+
+        wrapper.__name__ = f.__name__
+        wrapper.__doc__ = f.__doc__
+        # hide the strategy params from pytest's fixture resolution
+        params = list(inspect.signature(f).parameters.values())
+        keep = [p for p in params if p.name not in strategies]
+        wrapper.__signature__ = inspect.Signature(keep)
+        return wrapper
+
+    return deco

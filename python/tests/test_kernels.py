@@ -9,7 +9,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline image: deterministic fallback harness
+    from _hypothesis_fallback import given, settings, st
 
 from compile.kernels import (
     anomaly_pallas,

@@ -1,0 +1,566 @@
+//! Breadboard — the interactive smart-workspace layer (§III-H, §IV).
+//!
+//! The paper's pitch is that a pipeline should feel like an electronics
+//! breadboard: probe any wire while current flows, swap a component
+//! without tearing the board down, and replay the tape to see exactly how
+//! an outcome came to be. This subsystem wraps a deployed [`Coordinator`]
+//! in a [`Breadboard`] session offering precisely those three verbs:
+//!
+//!  * **wire taps** ([`tap`]) — attach/detach bounded probes on any wire at
+//!    runtime; sample AV metadata (optionally payloads) through predicates,
+//!    with per-tap overhead counters. The dispatch hook costs one branch
+//!    when no tap is attached (`benches/tap_overhead.rs`).
+//!  * **hot-swap** ([`swap`]) — replace a task's [`UserCode`] mid-run with
+//!    a version bump that flows into provenance stamps and drives the
+//!    §III-J recomputation path; a dry-run preview reports which cached
+//!    intermediates the swap would invalidate before committing.
+//!  * **forensic replay** ([`replay`]) — rebuild any past window from the
+//!    provenance injection ledger + deployment seed and diff the rebuilt
+//!    content hashes against the recorded ones to detect drift.
+//!
+//! Sessions are workspace-aware (§IV): give the session a principal with
+//! [`Breadboard::as_principal`] and every tap/swap/replay is gated through
+//! the overlapping-set grant check — probing a wire needs a `Wire` grant,
+//! swapping needs the `Pipeline` grant, replay needs `Provenance`.
+
+pub mod replay;
+pub mod swap;
+pub mod tap;
+
+pub use replay::{ReplayReport, ReplayRun, WireDiff, WINDOW_END};
+pub use swap::SwapPreview;
+pub use tap::{TapId, TapSample, TapSpec, TapStats};
+
+use crate::coordinator::{Coordinator, DeployConfig};
+use crate::provenance::InjectionRecord;
+use crate::spec::PipelineSpec;
+use crate::task::UserCode;
+use crate::util::{SimDuration, SimTime};
+use crate::workspace::Resource;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+/// Factory that builds (and rebuilds, for replay) a task's user code.
+pub type CodeFactory = Box<dyn Fn() -> Box<dyn UserCode>>;
+
+/// Outcome of a committed hot-swap.
+#[derive(Debug)]
+pub struct SwapOutcome {
+    pub preview: SwapPreview,
+    /// Dependent-local cache entries actually evicted downstream.
+    pub cache_objects_evicted: usize,
+    pub cache_bytes_evicted: u64,
+    /// Virtual time the swap was stamped.
+    pub at: SimTime,
+}
+
+/// Record of one swap performed in this session.
+#[derive(Debug)]
+pub struct SwapRecord {
+    pub task: String,
+    pub from_version: u32,
+    pub to_version: u32,
+    pub at: SimTime,
+}
+
+/// An interactive session over a deployed pipeline.
+///
+/// Derefs to [`Coordinator`], so the full platform API (inject, run_until,
+/// demand, collected, …) stays available on the session object.
+pub struct Breadboard {
+    coord: Coordinator,
+    spec: PipelineSpec,
+    cfg: DeployConfig,
+    /// Code factories per task — the session's record of what is plugged
+    /// in, reused to provision replay coordinators.
+    factories: HashMap<String, CodeFactory>,
+    /// Workspace principal performing this session (None = unrestricted
+    /// local bench).
+    principal: Option<String>,
+    /// Swaps committed through this session, oldest first.
+    pub swaps: Vec<SwapRecord>,
+}
+
+impl std::ops::Deref for Breadboard {
+    type Target = Coordinator;
+    fn deref(&self) -> &Coordinator {
+        &self.coord
+    }
+}
+
+impl std::ops::DerefMut for Breadboard {
+    fn deref_mut(&mut self) -> &mut Coordinator {
+        &mut self.coord
+    }
+}
+
+impl Breadboard {
+    /// Deploy a spec and wrap it in a session.
+    pub fn deploy(spec: &PipelineSpec, cfg: DeployConfig) -> Result<Self> {
+        let coord = Coordinator::deploy(spec, cfg.clone())?;
+        Ok(Self {
+            coord,
+            spec: spec.clone(),
+            cfg,
+            factories: HashMap::new(),
+            principal: None,
+            swaps: Vec::new(),
+        })
+    }
+
+    /// Wrap an already-deployed coordinator. Replay needs the spec and the
+    /// deploy config the coordinator was built with.
+    pub fn attach(coord: Coordinator, spec: PipelineSpec, cfg: DeployConfig) -> Self {
+        Self { coord, spec, cfg, factories: HashMap::new(), principal: None, swaps: Vec::new() }
+    }
+
+    /// Run the session as `who`: every tap/swap/replay is checked against
+    /// the platform's workspace registry (§IV overlapping sets).
+    pub fn as_principal(mut self, who: &str) -> Self {
+        self.principal = Some(who.to_string());
+        self
+    }
+
+    pub fn spec(&self) -> &PipelineSpec {
+        &self.spec
+    }
+
+    /// Unwrap back to the bare coordinator.
+    pub fn into_inner(self) -> Coordinator {
+        self.coord
+    }
+
+    fn authorize(&mut self, resource: Resource) -> Result<()> {
+        if let Some(p) = &self.principal {
+            if !self.coord.plat.workspaces.check(p, &resource) {
+                bail!("workspace denial: '{p}' holds no grant for {resource:?}");
+            }
+        }
+        Ok(())
+    }
+
+    /// A wire is tappable when something publishes on it: a task output
+    /// or an external in-tray (stream inputs). Out-of-band service inputs
+    /// (`name?`) are not wires — they never pass the publication probe
+    /// points — and are rejected with their own message in [`tap_with`].
+    fn wire_exists(&self, wire: &str) -> bool {
+        self.spec.tasks.iter().any(|t| {
+            t.outputs.iter().any(|o| o == wire) || t.stream_inputs().any(|i| i.wire == wire)
+        })
+    }
+
+    fn is_service_input(&self, wire: &str) -> bool {
+        self.spec.tasks.iter().any(|t| t.service_inputs().any(|i| i.wire == wire))
+    }
+
+    // ------------------------------------------------------------------
+    // Code plugging (records factories so replay can re-provision)
+    // ------------------------------------------------------------------
+
+    /// Plug user code into a task, keeping the factory so forensic replay
+    /// can rebuild an identical agent. Prefer this over raw
+    /// [`Coordinator::set_code`] inside sessions.
+    pub fn plug<F>(&mut self, task: &str, factory: F) -> Result<()>
+    where
+        F: Fn() -> Box<dyn UserCode> + 'static,
+    {
+        self.coord.set_code(task, factory())?;
+        self.factories.insert(task.to_string(), Box::new(factory));
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Wire taps
+    // ------------------------------------------------------------------
+
+    /// Attach a metadata tap (default spec) to a wire.
+    pub fn tap(&mut self, wire: &str) -> Result<TapId> {
+        self.tap_with(wire, TapSpec::default())
+    }
+
+    /// Attach a configured tap (capacity / payload capture / predicate).
+    pub fn tap_with(&mut self, wire: &str, spec: TapSpec) -> Result<TapId> {
+        self.authorize(Resource::Wire(wire.to_string()))?;
+        if !self.wire_exists(wire) {
+            if self.is_service_input(wire) {
+                bail!(
+                    "'{wire}' is an out-of-band service input (§III-D), not a stream \
+                     wire — nothing is ever published on it; probe the service \
+                     directory's forensic lookup log instead"
+                );
+            }
+            bail!("no wire '{wire}' in pipeline [{}]", self.spec.name);
+        }
+        Ok(self.coord.taps.attach(wire, spec))
+    }
+
+    /// Detach a tap; its ring is discarded. (Not gated: detaching only
+    /// reduces access.)
+    pub fn detach(&mut self, id: TapId) -> bool {
+        self.coord.taps.detach(id)
+    }
+
+    /// The wire a tap (still) watches, re-checked against the principal's
+    /// grants: revoking a Wire grant locks existing taps' rings too, not
+    /// just new attachments.
+    fn authorize_tap_read(&mut self, id: TapId) -> Result<bool> {
+        let wire = match self.coord.taps.wire_of(id) {
+            Some(w) => w.to_string(),
+            None => return Ok(false),
+        };
+        self.authorize(Resource::Wire(wire))?;
+        Ok(true)
+    }
+
+    /// Samples currently in a tap's ring (oldest first, virtual-time
+    /// order). Workspace-gated like attach; empty for unknown ids.
+    pub fn samples(&mut self, id: TapId) -> Result<Vec<TapSample>> {
+        if !self.authorize_tap_read(id)? {
+            return Ok(Vec::new());
+        }
+        Ok(self.coord.taps.samples_vec(id))
+    }
+
+    /// Read-and-clear a tap's ring. Workspace-gated like attach.
+    pub fn drain_samples(&mut self, id: TapId) -> Result<Vec<TapSample>> {
+        if !self.authorize_tap_read(id)? {
+            return Ok(Vec::new());
+        }
+        Ok(self.coord.taps.drain(id))
+    }
+
+    /// Per-tap overhead counters. Workspace-gated like the other reads
+    /// (live counters are a per-wire traffic side channel); `Ok(None)`
+    /// for unknown ids.
+    pub fn tap_stats(&mut self, id: TapId) -> Result<Option<TapStats>> {
+        if !self.authorize_tap_read(id)? {
+            return Ok(None);
+        }
+        Ok(self.coord.taps.stats(id))
+    }
+
+    // ------------------------------------------------------------------
+    // Virtual-time control (pause / step / resume)
+    // ------------------------------------------------------------------
+
+    /// Process exactly one pending event; returns its virtual time.
+    pub fn step(&mut self) -> Option<SimTime> {
+        self.coord.step_event()
+    }
+
+    /// Advance virtual time by `d`, processing everything due.
+    pub fn run_for(&mut self, d: SimDuration) -> u64 {
+        self.coord.run_for(d)
+    }
+
+    // ------------------------------------------------------------------
+    // Hot-swap
+    // ------------------------------------------------------------------
+
+    /// Dry-run a swap: report what moving `task` to `new_version` would
+    /// invalidate. Nothing mutates.
+    pub fn swap_preview(&mut self, task: &str, new_version: u32) -> Result<SwapPreview> {
+        self.authorize(Resource::Pipeline(self.spec.name.clone()))?;
+        let id = self.coord.task_id(task)?;
+        Ok(swap::preview(&self.coord, id, new_version))
+    }
+
+    /// Commit a hot-swap: install `factory()`'s code (which must carry a
+    /// new version), stamp the version change into provenance, invalidate
+    /// the task's memo plus downstream dependent-local caches, and — when
+    /// `recompute_last` — immediately re-run the last snapshot so corrected
+    /// results propagate (§III-J "roll back the feed").
+    pub fn hot_swap<F>(&mut self, task: &str, factory: F, recompute_last: bool) -> Result<SwapOutcome>
+    where
+        F: Fn() -> Box<dyn UserCode> + 'static,
+    {
+        self.authorize(Resource::Pipeline(self.spec.name.clone()))?;
+        let id = self.coord.task_id(task)?;
+        let code = factory();
+        let new_v = code.version();
+        let preview = swap::preview(&self.coord, id, new_v);
+        if new_v <= preview.old_version {
+            bail!(
+                "hot-swap of '{task}' needs a version bump (v{} -> v{new_v}); \
+                 versions must strictly increase so provenance stamps stay \
+                 unambiguous about which software produced what",
+                preview.old_version
+            );
+        }
+        let at = self.coord.plat.now;
+        // software_update performs the downstream cache eviction itself
+        // and reports what it actually evicted; the preview above is the
+        // dry-run report plus the version-bump guard.
+        let (cache_objects_evicted, cache_bytes_evicted) =
+            self.coord.software_update(task, code, recompute_last)?;
+        self.factories.insert(task.to_string(), Box::new(factory));
+        self.swaps.push(SwapRecord {
+            task: task.to_string(),
+            from_version: preview.old_version,
+            to_version: new_v,
+            at,
+        });
+        Ok(SwapOutcome { preview, cache_objects_evicted, cache_bytes_evicted, at })
+    }
+
+    // ------------------------------------------------------------------
+    // Forensic replay
+    // ------------------------------------------------------------------
+
+    /// Rebuild the whole run from the provenance ledger + seed: deploy a
+    /// fresh coordinator (same spec, same config, same seed), provision it
+    /// with this session's code factories, re-inject every recorded
+    /// arrival at its recorded virtual time, and drain.
+    pub fn forensic_replay(&mut self) -> Result<ReplayRun> {
+        self.authorize(Resource::Provenance(self.spec.name.clone()))?;
+        if !self.cfg.provenance {
+            bail!("provenance was disabled at deploy time: no ledger to replay from");
+        }
+        let mut fresh = Coordinator::deploy(&self.spec, self.cfg.clone())
+            .map_err(|e| anyhow!("replay deploy: {e}"))?;
+        for (task, factory) in &self.factories {
+            fresh.set_code(task, factory())?;
+        }
+        let ledger: Vec<InjectionRecord> = self.coord.plat.prov.injections().to_vec();
+        let mut injected = 0usize;
+        let mut missing = 0usize;
+        for rec in ledger {
+            match self.coord.plat.store.peek(rec.object) {
+                Some(obj) => {
+                    fresh.inject_at(&rec.wire, obj.payload.clone(), rec.class, rec.region, rec.at)?;
+                    injected += 1;
+                }
+                None => missing += 1,
+            }
+        }
+        let events = fresh.run_until_idle();
+        let collected = replay::hash_sequences(&fresh.collected);
+        Ok(ReplayRun { collected, injections_replayed: injected, missing_payloads: missing, events })
+    }
+
+    /// Diff a replay against the live record over the half-open window
+    /// `[from, to)`; pass [`WINDOW_END`] as `to` for the unbounded tail.
+    pub fn diff_replay(&self, run: &ReplayRun, from: SimTime, to: SimTime) -> ReplayReport {
+        let live = replay::hash_sequences(&self.coord.collected);
+        replay::diff_windows(&live, &run.collected, from, to)
+    }
+
+    /// Convenience: replay everything and diff one window.
+    pub fn replay_window(&mut self, from: SimTime, to: SimTime) -> Result<ReplayReport> {
+        let run = self.forensic_replay()?;
+        Ok(self.diff_replay(&run, from, to))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::av::{DataClass, Payload};
+    use crate::policy::Snapshot;
+    use crate::task::builtins::FnTask;
+    use crate::task::{Output, TaskCtx};
+    use crate::util::RegionId;
+
+    fn scale_factory(out: &'static str, factor: f32, version: u32) -> impl Fn() -> Box<dyn UserCode> {
+        move || {
+            Box::new(FnTask::versioned(
+                move |ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
+                    let mut outs = Vec::new();
+                    for av in snap.all_avs() {
+                        let p = ctx.fetch(av)?;
+                        let scaled = match p.as_tensor() {
+                            Some((shape, data)) => Payload::tensor(
+                                shape,
+                                data.iter().map(|x| x * factor).collect(),
+                            ),
+                            None => p,
+                        };
+                        outs.push(Output::summary(out, scaled));
+                    }
+                    Ok(outs)
+                },
+                version,
+            ))
+        }
+    }
+
+    fn session() -> Breadboard {
+        let spec = crate::spec::parse("[bb]\n(raw) work (out)\n").unwrap();
+        let mut b = Breadboard::deploy(&spec, DeployConfig::default()).unwrap();
+        b.plug("work", scale_factory("out", 1.0, 1)).unwrap();
+        b
+    }
+
+    fn inject_series(b: &mut Breadboard, values: &[f32], start_ms: u64) {
+        for (i, v) in values.iter().enumerate() {
+            b.inject_at(
+                "raw",
+                Payload::scalar(*v),
+                DataClass::Summary,
+                RegionId::new(0),
+                SimTime::millis(start_ms + i as u64 * 10),
+            )
+            .unwrap();
+        }
+    }
+
+    #[test]
+    fn tap_observes_live_traffic() {
+        let mut b = session();
+        let t = b.tap("raw").unwrap();
+        inject_series(&mut b, &[1.0, 2.0, 3.0], 0);
+        b.run_until_idle();
+        let stats = b.tap_stats(t).unwrap().unwrap();
+        assert_eq!(stats.seen, 3);
+        assert_eq!(stats.sampled, 3);
+        let samples = b.samples(t).unwrap();
+        assert_eq!(samples.len(), 3);
+        assert!(samples.windows(2).all(|w| w[0].at <= w[1].at));
+        // fan-out wires sample once per value, not once per consumer link
+        let spec = crate::spec::parse("[f]\n(raw) src (x)\n(x) left (l)\n(x) right (r)\n").unwrap();
+        let mut fb = Breadboard::deploy(&spec, DeployConfig::default()).unwrap();
+        let xt = fb.tap("x").unwrap();
+        fb.inject("raw", Payload::scalar(9.0), DataClass::Summary).unwrap();
+        fb.run_until_idle();
+        assert_eq!(fb.tap_stats(xt).unwrap().unwrap().seen, 1, "one value, two links, one sample");
+        assert_eq!(fb.collected_count("l"), 1);
+        assert_eq!(fb.collected_count("r"), 1);
+        // sink wires are tappable too
+        let s = b.tap("out").unwrap();
+        inject_series(&mut b, &[4.0], 100);
+        b.run_until_idle();
+        assert_eq!(b.tap_stats(s).unwrap().unwrap().sampled, 1);
+        // unknown wires are rejected
+        assert!(b.tap("nope").is_err());
+    }
+
+    #[test]
+    fn out_of_order_injections_observe_in_virtual_time_order() {
+        // observation rides the event queue, so future-dated injections
+        // issued out of order still land in the ring oldest-first
+        let mut b = session();
+        let t = b.tap("raw").unwrap();
+        b.inject_at("raw", Payload::scalar(1.0), DataClass::Summary, RegionId::new(0), SimTime::secs(10))
+            .unwrap();
+        b.inject_at("raw", Payload::scalar(2.0), DataClass::Summary, RegionId::new(0), SimTime::secs(1))
+            .unwrap();
+        b.run_until_idle();
+        let at: Vec<u64> = b.samples(t).unwrap().iter().map(|s| s.at.as_micros()).collect();
+        assert_eq!(at, vec![1_000_000, 10_000_000], "ring ordered by virtual time");
+    }
+
+    #[test]
+    fn detached_tap_stops_and_costs_nothing() {
+        let mut b = session();
+        let t = b.tap("raw").unwrap();
+        inject_series(&mut b, &[1.0], 0);
+        b.run_until_idle();
+        assert_eq!(b.tap_stats(t).unwrap().unwrap().seen, 1);
+        assert!(b.detach(t));
+        assert!(b.taps.is_empty(), "hook guard is back to the zero-cost branch");
+        inject_series(&mut b, &[2.0], 50);
+        b.run_until_idle();
+        assert!(b.tap_stats(t).unwrap().is_none());
+    }
+
+    #[test]
+    fn hot_swap_bumps_version_and_invalidates() {
+        let mut b = session();
+        inject_series(&mut b, &[3.0], 0);
+        b.run_until_idle();
+        let preview = b.swap_preview("work", 2).unwrap();
+        assert_eq!(preview.old_version, 1);
+        assert!(preview.memo_entries >= 1);
+
+        // same version: refused
+        assert!(b.hot_swap("work", scale_factory("out", 2.0, 1), false).is_err());
+
+        let outcome = b.hot_swap("work", scale_factory("out", 2.0, 2), false).unwrap();
+        // downgrades are refused too — version history must stay monotone
+        assert!(b.hot_swap("work", scale_factory("out", 3.0, 1), false).is_err());
+        assert_eq!(outcome.preview.new_version, 2);
+        let id = b.task_id("work").unwrap();
+        assert_eq!(b.agents[id.index()].version(), 2);
+        assert_eq!(b.agents[id.index()].memo_len(), 0, "memo flushed");
+        assert_eq!(b.swaps.len(), 1);
+
+        // the bump is visible in provenance: new outputs carry v2
+        inject_series(&mut b, &[5.0], 100);
+        b.run_until_idle();
+        let q = crate::provenance::ProvenanceQuery::new(&b.plat.prov);
+        let last = b.collected["out"].last().unwrap().av.id;
+        assert!(q.versions_touching(last).iter().any(|(_, v)| *v == 2));
+        let changes = q.version_changes(id);
+        assert_eq!(changes.len(), 1);
+        assert_eq!((changes[0].1, changes[0].2), (1, 2));
+        // and the swapped math actually ran
+        let v = b.collected["out"].last().unwrap().payload.as_tensor().unwrap().1[0];
+        assert_eq!(v, 10.0);
+    }
+
+    #[test]
+    fn replay_matches_when_software_unchanged() {
+        let mut b = session();
+        inject_series(&mut b, &[1.0, 2.0, 3.0, 4.0], 0);
+        b.run_until_idle();
+        let run = b.forensic_replay().unwrap();
+        assert_eq!(run.injections_replayed, 4);
+        assert_eq!(run.missing_payloads, 0);
+        let report = b.diff_replay(&run, SimTime::ZERO, WINDOW_END);
+        assert!(report.drift_free(), "{}", report.summary());
+        assert_eq!(report.total_matched(), 4);
+    }
+
+    #[test]
+    fn replay_detects_drift_from_a_swap() {
+        let mut b = session();
+        inject_series(&mut b, &[1.0, 2.0], 0); // pre-swap window
+        b.run_until_idle();
+        b.run_until(SimTime::millis(500));
+        let t_swap = b.plat.now;
+        b.hot_swap("work", scale_factory("out", 2.0, 2), false).unwrap();
+        inject_series(&mut b, &[3.0, 4.0], 600); // post-swap window
+        b.run_until_idle();
+
+        let run = b.forensic_replay().unwrap();
+        // pre-swap outputs were produced by v1; the replay runs v2 → drift
+        let pre = b.diff_replay(&run, SimTime::ZERO, t_swap);
+        assert!(!pre.drift_free(), "v1-era outputs must drift under v2");
+        // post-swap outputs match hash-for-hash
+        let post = b.diff_replay(&run, t_swap, WINDOW_END);
+        assert!(post.drift_free(), "{}", post.summary());
+        assert_eq!(post.total_matched(), 2);
+    }
+
+    #[test]
+    fn workspace_grants_gate_the_session() {
+        let spec = crate::spec::parse("[gated]\n(raw) work (out)\n").unwrap();
+        let mut b = Breadboard::deploy(&spec, DeployConfig::default())
+            .unwrap()
+            .as_principal("eve");
+        assert!(b.tap("raw").is_err(), "no grant, no probe");
+        assert!(b.swap_preview("work", 2).is_err());
+        assert!(b.forensic_replay().is_err());
+
+        let ws = b.plat.workspaces.create("lab");
+        b.plat.workspaces.add_member(ws, "eve");
+        b.plat.workspaces.grant(ws, Resource::Wire("raw".into()));
+        let tap = b.tap("raw").expect("wire grant unlocks the tap");
+        assert!(b.swap_preview("work", 2).is_err(), "pipeline grant still missing");
+        b.plat.workspaces.grant(ws, Resource::Pipeline("gated".into()));
+        assert!(b.swap_preview("work", 2).is_ok());
+        b.plat.workspaces.grant(ws, Resource::Provenance("gated".into()));
+        assert!(b.forensic_replay().is_ok());
+        assert!(b.plat.workspaces.denied >= 3);
+
+        // revoking the Wire grant locks the already-attached tap's ring:
+        // reading samples is gated the same way attaching was
+        b.inject("raw", Payload::scalar(1.0), DataClass::Summary).unwrap();
+        b.run_until_idle();
+        assert_eq!(b.samples(tap).unwrap().len(), 1);
+        b.plat.workspaces.revoke(ws, &Resource::Wire("raw".into()));
+        assert!(b.samples(tap).is_err(), "revocation is final for reads too");
+        assert!(b.drain_samples(tap).is_err());
+        assert!(b.tap_stats(tap).is_err(), "counters are gated like samples");
+    }
+}

@@ -1,0 +1,179 @@
+//! Forensic replay — deterministic re-execution from provenance + seed.
+//!
+//! "Users can ... reconstruct the history of changes, down to the versions
+//! of software that led to each outcome" (§III-J, §IV). The provenance
+//! registry's injection ledger records every external arrival (wire, time,
+//! region, class, object pointer); the object store still holds the
+//! payloads; the deployment seed pins all simulated randomness. Together
+//! those reconstruct the run: deploy a fresh coordinator from the same
+//! spec/config, re-inject the ledger at the recorded virtual times, and
+//! drain. Diffing the rebuilt sink content hashes against the recorded
+//! ones detects *drift* — any divergence between what happened and what
+//! the current software would produce. Matching hashes certify the record;
+//! drifting hashes localize exactly which window a software change (or a
+//! nondeterministic task) altered.
+
+use crate::coordinator::Collected;
+use crate::util::{ContentHash, SimTime};
+use std::collections::{BTreeMap, HashMap};
+
+/// Project sink captures into per-wire (time, content-hash) sequences —
+/// the canonical shape both the live record and a replay are diffed in.
+pub fn hash_sequences(
+    collected: &HashMap<String, Vec<Collected>>,
+) -> BTreeMap<String, Vec<(SimTime, ContentHash)>> {
+    collected
+        .iter()
+        .map(|(w, v)| (w.clone(), v.iter().map(|c| (c.at, c.av.content)).collect()))
+        .collect()
+}
+
+/// The rebuilt execution: per-wire (time, content-hash) sequences.
+#[derive(Clone, Debug)]
+pub struct ReplayRun {
+    /// Sink captures of the fresh coordinator, per wire, event order.
+    pub collected: BTreeMap<String, Vec<(SimTime, ContentHash)>>,
+    pub injections_replayed: usize,
+    /// Ledger entries whose payloads were no longer in the object store
+    /// (purged) — replay is partial if nonzero.
+    pub missing_payloads: usize,
+    pub events: u64,
+}
+
+/// Per-wire diff between recorded and replayed outputs inside a window.
+#[derive(Clone, Debug)]
+pub struct WireDiff {
+    pub wire: String,
+    pub recorded: usize,
+    pub replayed: usize,
+    /// Positions (in arrival order) whose content hashes are identical.
+    pub matched: usize,
+    /// Positions that differ, plus any length mismatch.
+    pub drifted: usize,
+}
+
+/// The drift report over one virtual-time window.
+#[derive(Clone, Debug)]
+pub struct ReplayReport {
+    pub from: SimTime,
+    pub to: SimTime,
+    pub wires: Vec<WireDiff>,
+}
+
+impl ReplayReport {
+    /// True when every recorded output in the window was rebuilt
+    /// hash-identical.
+    pub fn drift_free(&self) -> bool {
+        self.wires.iter().all(|w| w.drifted == 0)
+    }
+
+    pub fn total_matched(&self) -> usize {
+        self.wires.iter().map(|w| w.matched).sum()
+    }
+
+    pub fn total_drifted(&self) -> usize {
+        self.wires.iter().map(|w| w.drifted).sum()
+    }
+
+    pub fn summary(&self) -> String {
+        let status = if self.drift_free() { "MATCH" } else { "DRIFT" };
+        format!(
+            "replay [{} .. {}]: {} — {} hashes matched, {} drifted",
+            self.from,
+            self.to,
+            status,
+            self.total_matched(),
+            self.total_drifted(),
+        )
+    }
+}
+
+/// End-of-time sentinel for "everything from `from` onwards" windows.
+pub const WINDOW_END: SimTime = SimTime(u64::MAX);
+
+/// Diff two per-wire hash sequences over the half-open window
+/// `[from, to)` — half-open so adjacent windows split at a boundary
+/// (e.g. the swap instant) never double-count an output landing exactly
+/// on it. Use [`WINDOW_END`] as `to` for an unbounded tail.
+pub fn diff_windows(
+    live: &BTreeMap<String, Vec<(SimTime, ContentHash)>>,
+    replayed: &BTreeMap<String, Vec<(SimTime, ContentHash)>>,
+    from: SimTime,
+    to: SimTime,
+) -> ReplayReport {
+    let mut wires: Vec<&String> = live.keys().chain(replayed.keys()).collect();
+    wires.sort();
+    wires.dedup();
+    let window = |seq: Option<&Vec<(SimTime, ContentHash)>>| -> Vec<ContentHash> {
+        seq.map(|v| {
+            v.iter().filter(|(t, _)| *t >= from && *t < to).map(|(_, h)| *h).collect()
+        })
+        .unwrap_or_default()
+    };
+    let mut out = Vec::new();
+    for w in wires {
+        let a = window(live.get(w));
+        let b = window(replayed.get(w));
+        let matched = a.iter().zip(&b).filter(|(x, y)| x == y).count();
+        let drifted = a.len().max(b.len()) - matched;
+        out.push(WireDiff {
+            wire: w.clone(),
+            recorded: a.len(),
+            replayed: b.len(),
+            matched,
+            drifted,
+        });
+    }
+    ReplayReport { from, to, wires: out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(pairs: &[(u64, u64)]) -> Vec<(SimTime, ContentHash)> {
+        pairs.iter().map(|(t, h)| (SimTime::micros(*t), ContentHash(*h))).collect()
+    }
+
+    #[test]
+    fn identical_sequences_are_drift_free() {
+        let mut live = BTreeMap::new();
+        live.insert("out".to_string(), seq(&[(1, 10), (2, 20), (3, 30)]));
+        let rep = live.clone();
+        let r = diff_windows(&live, &rep, SimTime::ZERO, SimTime::secs(1));
+        assert!(r.drift_free());
+        assert_eq!(r.total_matched(), 3);
+    }
+
+    #[test]
+    fn windowing_isolates_drift() {
+        let mut live = BTreeMap::new();
+        live.insert("out".to_string(), seq(&[(1, 10), (100, 99)]));
+        let mut rep = BTreeMap::new();
+        rep.insert("out".to_string(), seq(&[(1, 10), (100, 77)]));
+        // early window matches...
+        let early = diff_windows(&live, &rep, SimTime::ZERO, SimTime::micros(50));
+        assert!(early.drift_free());
+        // ...late window shows the drift
+        let late = diff_windows(&live, &rep, SimTime::micros(51), SimTime::secs(1));
+        assert_eq!(late.total_drifted(), 1);
+        assert!(!late.drift_free());
+    }
+
+    #[test]
+    fn length_mismatch_counts_as_drift() {
+        let mut live = BTreeMap::new();
+        live.insert("out".to_string(), seq(&[(1, 10), (2, 20)]));
+        let mut rep = BTreeMap::new();
+        rep.insert("out".to_string(), seq(&[(1, 10)]));
+        let r = diff_windows(&live, &rep, SimTime::ZERO, SimTime::secs(1));
+        assert_eq!(r.total_matched(), 1);
+        assert_eq!(r.total_drifted(), 1);
+        // a wire present on one side only is all-drift
+        let mut rep2 = BTreeMap::new();
+        rep2.insert("other".to_string(), seq(&[(1, 1)]));
+        let r2 = diff_windows(&live, &rep2, SimTime::ZERO, SimTime::secs(1));
+        assert_eq!(r2.wires.len(), 2);
+        assert!(!r2.drift_free());
+    }
+}

@@ -1,0 +1,151 @@
+//! Hot-swap: replace a task's user code mid-run — §III-J made interactive.
+//!
+//! The mechanism lives in the coordinator (`Coordinator::software_update`
+//! stamps the version change, flushes the memo, and evicts downstream
+//! dependent-local cache copies via `stale_frontier_of` /
+//! `evict_stale_downstream`). What this module adds is the *breadboarding*
+//! half: a dry-run [`preview`] that reports, before anything mutates, what
+//! that mechanism is about to invalidate — memo entries, provenance-
+//! reachable artifacts, and the cached intermediates downstream tasks are
+//! holding (Principle 2). Preview and commit share the coordinator's
+//! stale-frontier computation, so they always agree.
+
+use crate::coordinator::Coordinator;
+use crate::util::{ObjectId, TaskId};
+
+/// What a code swap would (or did) invalidate.
+#[derive(Clone, Debug)]
+pub struct SwapPreview {
+    pub task: String,
+    pub old_version: u32,
+    pub new_version: u32,
+    /// Memoized recipes on the swapped task that become stale (version is
+    /// part of the recipe hash).
+    pub memo_entries: usize,
+    /// Tasks downstream of the swap (their inputs may be recomputed).
+    pub downstream_tasks: Vec<String>,
+    /// Artifacts (AVs) emitted by the task plus all their descendants —
+    /// everything §III-J's rollback would reconsider.
+    pub stale_avs: usize,
+    /// (object, bytes) pairs among the stale artifacts.
+    pub stale_objects: Vec<(ObjectId, u64)>,
+    /// Stale objects currently held in downstream dependent-local caches
+    /// — what committing will evict.
+    pub cached_stale_objects: usize,
+    pub cached_stale_bytes: u64,
+}
+
+impl SwapPreview {
+    /// One-line human summary (printed by `koalja bread`).
+    pub fn summary(&self) -> String {
+        format!(
+            "swap {} v{} -> v{}: {} memo entries, {} stale artifacts, \
+             {} cached downstream ({} B) across {:?}",
+            self.task,
+            self.old_version,
+            self.new_version,
+            self.memo_entries,
+            self.stale_avs,
+            self.cached_stale_objects,
+            self.cached_stale_bytes,
+            self.downstream_tasks,
+        )
+    }
+}
+
+/// Dry-run: compute the blast radius of swapping `task` to `new_version`.
+/// Pure read — nothing in the coordinator changes.
+pub fn preview(coord: &Coordinator, task: TaskId, new_version: u32) -> SwapPreview {
+    let agent = &coord.agents[task.index()];
+    let (stale_avs, stale_objects) = coord.stale_frontier_of(task);
+
+    let downstream = coord.graph.reachable_downstream(task);
+    let obj_ids: Vec<ObjectId> = stale_objects.iter().map(|(o, _)| *o).collect();
+    let mut cached = 0usize;
+    let mut cached_bytes = 0u64;
+    for t in &downstream {
+        let (n, b) = coord.agents[t.index()].cache.would_invalidate(&obj_ids);
+        cached += n;
+        cached_bytes += b;
+    }
+
+    SwapPreview {
+        task: agent.spec.name.clone(),
+        old_version: agent.version(),
+        new_version,
+        memo_entries: agent.memo_len(),
+        downstream_tasks: downstream.iter().map(|t| coord.graph.task(*t).name.clone()).collect(),
+        stale_avs,
+        stale_objects,
+        cached_stale_objects: cached,
+        cached_stale_bytes: cached_bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::av::{DataClass, Payload};
+    use crate::coordinator::DeployConfig;
+
+    #[test]
+    fn preview_reports_stale_state_without_mutating() {
+        let spec = crate::spec::parse("[p]\n(raw) stage1 (mid)\n(mid) stage2 (out)\n").unwrap();
+        let mut c = Coordinator::deploy(&spec, DeployConfig::default()).unwrap();
+        c.inject("raw", Payload::scalar(1.0), DataClass::Summary).unwrap();
+        c.run_until_idle();
+        let t1 = c.task_id("stage1").unwrap();
+
+        let p = preview(&c, t1, 2);
+        assert_eq!(p.old_version, 1);
+        assert_eq!(p.new_version, 2);
+        assert!(p.memo_entries >= 1, "stage1 memoized its run");
+        assert_eq!(p.downstream_tasks, vec!["stage2".to_string()]);
+        assert!(p.stale_avs >= 1, "stage1's emission is stale");
+        assert!(
+            p.cached_stale_objects >= 1,
+            "stage2 fetched stage1's output through its local cache"
+        );
+        // dry run: nothing changed
+        assert_eq!(c.agents[t1.index()].version(), 1);
+        assert!(c.agents[t1.index()].memo_len() >= 1);
+    }
+
+    #[test]
+    fn commit_eviction_matches_preview() {
+        let spec = crate::spec::parse("[p]\n(raw) stage1 (mid)\n(mid) stage2 (out)\n").unwrap();
+        let mut c = Coordinator::deploy(&spec, DeployConfig::default()).unwrap();
+        c.inject("raw", Payload::scalar(2.0), DataClass::Summary).unwrap();
+        c.run_until_idle();
+        let t1 = c.task_id("stage1").unwrap();
+        let t2 = c.task_id("stage2").unwrap();
+
+        let p = preview(&c, t1, 2);
+        let before = c.agents[t2.index()].cache.len();
+        assert!(before >= 1);
+        let (evicted, bytes) = c.evict_stale_downstream(t1, &p.stale_objects);
+        assert_eq!(evicted, p.cached_stale_objects, "preview matched reality");
+        assert_eq!(bytes, p.cached_stale_bytes);
+        assert_eq!(c.agents[t2.index()].cache.len(), before - evicted);
+    }
+
+    #[test]
+    fn software_update_evicts_downstream_caches_itself() {
+        // the plain §III-J path (no Breadboard wrapper) must not leave
+        // stale intermediates in downstream dependent-local caches
+        let spec = crate::spec::parse("[p]\n(raw) stage1 (mid)\n(mid) stage2 (out)\n").unwrap();
+        let mut c = Coordinator::deploy(&spec, DeployConfig::default()).unwrap();
+        c.inject("raw", Payload::scalar(3.0), DataClass::Summary).unwrap();
+        c.run_until_idle();
+        let t2 = c.task_id("stage2").unwrap();
+        let held = c.agents[t2.index()].cache.len();
+        assert!(held >= 1, "stage2 cached stage1's output");
+
+        let mut v2 = crate::task::builtins::PassThrough::new("mid");
+        v2.version = 2;
+        let (evicted, bytes) = c.software_update("stage1", Box::new(v2), false).unwrap();
+        assert_eq!(evicted, held, "update reported the eviction it performed");
+        assert!(bytes > 0);
+        assert_eq!(c.agents[t2.index()].cache.len(), 0, "stale copies evicted on update");
+    }
+}

@@ -1,0 +1,301 @@
+//! Wire taps — zero-copy probes on live links.
+//!
+//! A [`TapBoard`] lives inside the coordinator; the event loop calls
+//! [`TapBoard::observe`] from its publication points (task output routing
+//! and external injection), so each value is sampled exactly once per
+//! appearance on a wire no matter how many consumer links fan out from
+//! it. The hook is a single `is_empty()` branch when no tap is attached
+//! (measured in `benches/tap_overhead.rs`), so a production pipeline pays
+//! nothing for the breadboarding machinery it is not using.
+//!
+//! Each tap watches one wire, optionally filters with a predicate over AV
+//! metadata, and samples into a bounded ring buffer. Payload capture is
+//! opt-in: the default tap copies only the ~140-byte annotation (the AV is
+//! a pointer into object storage, §III-I), never the payload bytes.
+
+use crate::av::{AnnotatedValue, Payload};
+use crate::storage::ObjectStore;
+use crate::util::SimTime;
+use std::collections::VecDeque;
+
+/// Identifies one attached tap (unique for the coordinator's lifetime).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct TapId(pub u64);
+
+/// One sampled observation.
+#[derive(Clone, Debug)]
+pub struct TapSample {
+    /// Virtual time the AV passed the probe point.
+    pub at: SimTime,
+    /// The annotation itself (metadata only — the storage pointer).
+    pub av: AnnotatedValue,
+    /// Payload copy, present only on payload-capturing taps.
+    pub payload: Option<Payload>,
+}
+
+/// Configuration for one tap.
+pub struct TapSpec {
+    /// Ring-buffer capacity (oldest samples drop when full).
+    pub capacity: usize,
+    /// Copy payload bytes out of storage for each sample (costly; off by
+    /// default — metadata is usually what a breadboarder probes).
+    pub payloads: bool,
+    /// Sample only AVs the predicate accepts (None = everything).
+    pub predicate: Option<Box<dyn Fn(&AnnotatedValue) -> bool>>,
+}
+
+impl Default for TapSpec {
+    fn default() -> Self {
+        Self { capacity: 64, payloads: false, predicate: None }
+    }
+}
+
+impl TapSpec {
+    pub fn with_capacity(mut self, cap: usize) -> Self {
+        self.capacity = cap.max(1);
+        self
+    }
+
+    pub fn with_payloads(mut self) -> Self {
+        self.payloads = true;
+        self
+    }
+
+    pub fn with_predicate<F: Fn(&AnnotatedValue) -> bool + 'static>(mut self, f: F) -> Self {
+        self.predicate = Some(Box::new(f));
+        self
+    }
+}
+
+/// Overhead/throughput counters for one tap.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TapStats {
+    /// AVs that passed the probe point on this wire.
+    pub seen: u64,
+    /// AVs that entered the ring (passed the predicate).
+    pub sampled: u64,
+    /// Samples evicted because the ring was full.
+    pub dropped: u64,
+}
+
+struct TapState {
+    id: TapId,
+    wire: String,
+    spec: TapSpec,
+    ring: VecDeque<TapSample>,
+    stats: TapStats,
+    enabled: bool,
+}
+
+/// The set of live taps, owned by the coordinator.
+#[derive(Default)]
+pub struct TapBoard {
+    taps: Vec<TapState>,
+    next_id: u64,
+    /// Observe calls actually dispatched (any tap attached) — for the
+    /// overhead bench's sanity check.
+    pub observations: u64,
+}
+
+impl TapBoard {
+    /// True when no tap is attached — the hot-path guard: the event loop
+    /// skips [`TapBoard::observe`] entirely in that case.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.taps.is_empty()
+    }
+
+    /// Wire-precise guard: does any enabled tap watch `wire`? Costs one
+    /// branch when the board is empty and a short scan of the attached
+    /// taps otherwise, so publications on untapped wires never pay for
+    /// the observation event.
+    #[inline]
+    pub fn watches(&self, wire: &str) -> bool {
+        !self.taps.is_empty() && self.taps.iter().any(|t| t.enabled && t.wire == wire)
+    }
+
+    pub fn len(&self) -> usize {
+        self.taps.len()
+    }
+
+    /// Attach a probe to `wire`. Returns the handle used to read/detach.
+    pub fn attach(&mut self, wire: &str, spec: TapSpec) -> TapId {
+        let id = TapId(self.next_id);
+        self.next_id += 1;
+        self.taps.push(TapState {
+            id,
+            wire: wire.to_string(),
+            spec,
+            ring: VecDeque::new(),
+            stats: TapStats::default(),
+            enabled: true,
+        });
+        id
+    }
+
+    /// Remove a tap entirely; returns false if it was never attached.
+    pub fn detach(&mut self, id: TapId) -> bool {
+        let before = self.taps.len();
+        self.taps.retain(|t| t.id != id);
+        self.taps.len() != before
+    }
+
+    /// Pause/resume sampling without losing the ring.
+    pub fn set_enabled(&mut self, id: TapId, enabled: bool) -> bool {
+        match self.taps.iter_mut().find(|t| t.id == id) {
+            Some(t) => {
+                t.enabled = enabled;
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn state(&self, id: TapId) -> Option<&TapState> {
+        self.taps.iter().find(|t| t.id == id)
+    }
+
+    /// Ring contents, oldest first (owned copies — the ring may wrap).
+    pub fn samples_vec(&self, id: TapId) -> Vec<TapSample> {
+        self.state(id).map(|t| t.ring.iter().cloned().collect()).unwrap_or_default()
+    }
+
+    /// Drain the ring (read-and-clear).
+    pub fn drain(&mut self, id: TapId) -> Vec<TapSample> {
+        match self.taps.iter_mut().find(|t| t.id == id) {
+            Some(t) => t.ring.drain(..).collect(),
+            None => Vec::new(),
+        }
+    }
+
+    pub fn stats(&self, id: TapId) -> Option<TapStats> {
+        self.state(id).map(|t| t.stats)
+    }
+
+    pub fn wire_of(&self, id: TapId) -> Option<&str> {
+        self.state(id).map(|t| t.wire.as_str())
+    }
+
+    /// Dispatch point: called by the coordinator when an AV is published
+    /// on `wire` (once per value — consumer fan-out does not multiply
+    /// observations). The caller guards with [`TapBoard::is_empty`] so
+    /// this is never on the hot path of an untapped pipeline.
+    pub fn observe(&mut self, wire: &str, av: &AnnotatedValue, store: &ObjectStore, now: SimTime) {
+        self.observations += 1;
+        for t in self.taps.iter_mut() {
+            if !t.enabled || t.wire != wire {
+                continue;
+            }
+            t.stats.seen += 1;
+            if let Some(pred) = &t.spec.predicate {
+                if !pred(av) {
+                    continue;
+                }
+            }
+            let payload = if t.spec.payloads {
+                store.peek(av.object).map(|o| o.payload.clone())
+            } else {
+                None
+            };
+            if t.ring.len() >= t.spec.capacity {
+                t.ring.pop_front();
+                t.stats.dropped += 1;
+            }
+            t.ring.push_back(TapSample { at: now, av: av.clone(), payload });
+            t.stats.sampled += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::av::DataClass;
+    use crate::storage::{StorageConfig, StorageTier};
+    use crate::util::{AvId, ContentHash, LinkId, ObjectId, RegionId, TaskId};
+
+    fn av(seq: u64, object: ObjectId) -> AnnotatedValue {
+        AnnotatedValue {
+            id: AvId::new(seq),
+            source_task: TaskId::new(0),
+            link: LinkId::new(0),
+            object,
+            region: RegionId::new(0),
+            created: SimTime::micros(seq),
+            seq,
+            size_bytes: 4,
+            content: ContentHash::of_str("x"),
+            class: DataClass::Summary,
+            ghost: false,
+            born: SimTime::micros(seq),
+        }
+    }
+
+    fn store_with(payload: Payload) -> (ObjectStore, ObjectId) {
+        let mut s = ObjectStore::new(StorageConfig::default());
+        let (id, _) = s.put(
+            payload,
+            RegionId::new(0),
+            StorageTier::ObjectStore,
+            DataClass::Summary,
+            SimTime::ZERO,
+        );
+        (s, id)
+    }
+
+    #[test]
+    fn ring_bounds_and_counters() {
+        let (store, obj) = store_with(Payload::scalar(1.0));
+        let mut board = TapBoard::default();
+        let id = board.attach("w", TapSpec::default().with_capacity(3));
+        for i in 0..5 {
+            board.observe("w", &av(i, obj), &store, SimTime::micros(i));
+        }
+        let stats = board.stats(id).unwrap();
+        assert_eq!(stats.seen, 5);
+        assert_eq!(stats.sampled, 5);
+        assert_eq!(stats.dropped, 2);
+        let seqs: Vec<u64> = board.samples_vec(id).iter().map(|s| s.av.seq).collect();
+        assert_eq!(seqs, vec![2, 3, 4], "oldest evicted first");
+    }
+
+    #[test]
+    fn predicate_filters_and_wire_isolates() {
+        let (store, obj) = store_with(Payload::scalar(1.0));
+        let mut board = TapBoard::default();
+        let even = board.attach("w", TapSpec::default().with_predicate(|a| a.seq % 2 == 0));
+        let other = board.attach("v", TapSpec::default());
+        for i in 0..6 {
+            board.observe("w", &av(i, obj), &store, SimTime::micros(i));
+        }
+        assert_eq!(board.stats(even).unwrap().sampled, 3);
+        assert_eq!(board.stats(even).unwrap().seen, 6);
+        assert_eq!(board.stats(other).unwrap().seen, 0, "other wire untouched");
+    }
+
+    #[test]
+    fn payload_capture_copies_bytes() {
+        let p = Payload::tensor(&[2], vec![3.0, 4.0]);
+        let (store, obj) = store_with(p.clone());
+        let mut board = TapBoard::default();
+        let plain = board.attach("w", TapSpec::default());
+        let deep = board.attach("w", TapSpec::default().with_payloads());
+        board.observe("w", &av(0, obj), &store, SimTime::ZERO);
+        assert!(board.samples_vec(plain)[0].payload.is_none());
+        assert_eq!(board.samples_vec(deep)[0].payload, Some(p));
+    }
+
+    #[test]
+    fn detach_and_disable() {
+        let (store, obj) = store_with(Payload::scalar(0.0));
+        let mut board = TapBoard::default();
+        let id = board.attach("w", TapSpec::default());
+        board.observe("w", &av(0, obj), &store, SimTime::ZERO);
+        assert!(board.set_enabled(id, false));
+        board.observe("w", &av(1, obj), &store, SimTime::ZERO);
+        assert_eq!(board.stats(id).unwrap().sampled, 1, "paused tap sampled nothing");
+        assert!(board.detach(id));
+        assert!(!board.detach(id), "double detach is a no-op");
+        assert!(board.is_empty());
+    }
+}

@@ -18,6 +18,7 @@
 pub mod make;
 
 use crate::av::{AnnotatedValue, DataClass, Payload};
+use crate::breadboard::tap::TapBoard;
 use crate::bus::NotifyMode;
 use crate::graph::PipelineGraph;
 use crate::link::{Delivery, LinkAgent};
@@ -29,7 +30,7 @@ use crate::spec::PipelineSpec;
 use crate::storage::{PurgePolicy, StorageConfig};
 use crate::task::builtins::PassThrough;
 use crate::task::{RunOutcome, TaskAgent, UserCode};
-use crate::util::{AvId, LinkId, RegionId, SimDuration, SimTime, TaskId};
+use crate::util::{AvId, LinkId, ObjectId, RegionId, SimDuration, SimTime, TaskId};
 use anyhow::{anyhow, bail, Result};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, HashSet};
@@ -39,7 +40,9 @@ pub const EXTERNAL: TaskId = TaskId(u64::MAX);
 /// Sentinel link id for sink-wire emissions (no consumer).
 pub const SINK: LinkId = LinkId(u64::MAX);
 
-/// Deployment-time configuration.
+/// Deployment-time configuration. Clonable so a breadboard session can
+/// redeploy an identical twin for forensic replay.
+#[derive(Clone)]
 pub struct DeployConfig {
     pub topology: WanTopology,
     pub storage: StorageConfig,
@@ -77,6 +80,10 @@ enum EventKind {
     Wake { task: TaskId },
     Poll { task: TaskId },
     ScaleSweep,
+    /// Breadboard tap observation, routed through the queue so samples
+    /// land in virtual-time order even for future-dated publications.
+    /// Only ever pushed while at least one tap is attached.
+    TapObserve { wire: String, av: Box<AnnotatedValue> },
 }
 
 struct Ev {
@@ -138,6 +145,10 @@ pub struct Coordinator {
     out_links: Vec<Vec<(String, Vec<usize>)>>,
     /// per link: position of the consumer's input buffer in its engine
     link_buffer: Vec<usize>,
+    /// Breadboard wire taps (§III-H). Dispatch is guarded by a single
+    /// `is_empty()` branch, so an untapped pipeline pays nothing — see
+    /// benches/tap_overhead.rs.
+    pub taps: TapBoard,
 }
 
 impl Coordinator {
@@ -292,13 +303,16 @@ impl Coordinator {
             in_links,
             out_links,
             link_buffer,
+            taps: TapBoard::default(),
         })
     }
 
-    /// Plug user code into a task.
+    /// Plug user code into a task (recorded in the agent's versioned code
+    /// slot history).
     pub fn set_code(&mut self, task: &str, code: Box<dyn UserCode>) -> Result<()> {
         let id = self.task_id(task)?;
-        self.agents[id.index()].code = code;
+        let now = self.plat.now;
+        self.agents[id.index()].install_code(code, now, "plug");
         Ok(())
     }
 
@@ -347,6 +361,27 @@ impl Coordinator {
         let (av, _lat) =
             self.plat.mint_av(payload, EXTERNAL, run, 0, SINK, region, class, 0, &[], born);
         self.plat.now = saved_now;
+        // forensic ledger: the breadboard replays a window from exactly
+        // these records + the deployment seed (§III-J reconstruction)
+        self.plat.prov.record_injection(crate::provenance::InjectionRecord {
+            av: av.id,
+            wire: wire.to_string(),
+            at,
+            region,
+            class,
+            object: av.object,
+            content: av.content,
+        });
+        // breadboard probe point: injected values appear on the wire once
+        // (fan-out links would otherwise observe them per consumer), at
+        // their virtual arrival time (via the queue, not immediately).
+        // `watches` is wire-precise, so untapped wires never allocate.
+        if self.taps.watches(wire) {
+            self.push_event(
+                at,
+                EventKind::TapObserve { wire: wire.to_string(), av: Box::new(av.clone()) },
+            );
+        }
         // Only immediately-visible injections update wire currency now;
         // future-dated arrivals become current when delivered (otherwise a
         // schedule-driven consumer could see data "from the future").
@@ -423,6 +458,23 @@ impl Coordinator {
         self.queue.len()
     }
 
+    /// Single-step the event loop: process exactly one pending event and
+    /// return its virtual time (breadboard pause/step/resume, §III-H).
+    pub fn step_event(&mut self) -> Option<SimTime> {
+        let Reverse(ev) = self.queue.pop()?;
+        let at = ev.at;
+        self.plat.now = at;
+        self.dispatch(ev.kind);
+        self.events_processed += 1;
+        Some(at)
+    }
+
+    /// Resume: advance virtual time by `d`, processing everything due.
+    pub fn run_for(&mut self, d: SimDuration) -> u64 {
+        let horizon = self.plat.now + d;
+        self.run_until(horizon)
+    }
+
     fn dispatch(&mut self, kind: EventKind) {
         match kind {
             EventKind::Deliver { link, av } => self.on_deliver(link, *av),
@@ -435,6 +487,9 @@ impl Coordinator {
                         self.push_event(self.plat.now + iv, EventKind::ScaleSweep);
                     }
                 }
+            }
+            EventKind::TapObserve { wire, av } => {
+                self.taps.observe(&wire, &av, &self.plat.store, self.plat.now);
             }
         }
     }
@@ -679,6 +734,7 @@ impl Coordinator {
                             region,
                         },
                     );
+                    self.plat.prov.register_object(id, object, size);
                     self.route_output(&wire, av, None, publish_at);
                 }
             }
@@ -695,6 +751,17 @@ impl Coordinator {
         sink_payload: Option<Payload>,
         at: SimTime,
     ) {
+        // breadboard probe point: one observation per value published on
+        // the wire, regardless of consumer fan-out, stamped at publish
+        // time through the queue so rings stay time-ordered. `watches` is
+        // a single is_empty branch with no taps attached, and wire-precise
+        // with them — untapped wires never pay the event/clone (§Perf).
+        if self.taps.watches(wire) {
+            self.push_event(
+                at,
+                EventKind::TapObserve { wire: wire.to_string(), av: Box::new(av.clone()) },
+            );
+        }
         // no-alloc steady state: only the first artifact per wire allocates
         match self.latest_on_wire.get_mut(wire) {
             Some(slot) => *slot = av.clone(),
@@ -746,21 +813,69 @@ impl Coordinator {
     // Software updates (§III-J)
     // ------------------------------------------------------------------
 
+    /// §III-J staleness frontier: every AV `task` ever emitted plus all
+    /// provenance descendants, returned as (stale AV count, the storage
+    /// objects behind them). Shared by `software_update`'s commit-time
+    /// cache eviction and the breadboard's swap preview, so dry-run and
+    /// commit always agree.
+    pub fn stale_frontier_of(&self, task: TaskId) -> (usize, Vec<(ObjectId, u64)>) {
+        let q = crate::provenance::ProvenanceQuery::new(&self.plat.prov);
+        let emitted = q.emitted_by(task);
+        let mut stale: HashSet<AvId> = emitted.iter().copied().collect();
+        for av in &emitted {
+            for d in q.descendants(*av) {
+                stale.insert(d);
+            }
+        }
+        let mut objects: Vec<(ObjectId, u64)> =
+            stale.iter().filter_map(|a| self.plat.prov.object_of(*a)).collect();
+        objects.sort_unstable_by_key(|(o, _)| *o);
+        objects.dedup_by_key(|(o, _)| *o);
+        (stale.len(), objects)
+    }
+
+    /// Evict `objects` from every dependent-local cache downstream of
+    /// `task`; returns (entries evicted, bytes freed).
+    pub fn evict_stale_downstream(
+        &mut self,
+        task: TaskId,
+        objects: &[(ObjectId, u64)],
+    ) -> (usize, u64) {
+        let downstream = self.graph.reachable_downstream(task);
+        let obj_ids: Vec<ObjectId> = objects.iter().map(|(o, _)| *o).collect();
+        let mut evicted = 0usize;
+        let mut bytes = 0u64;
+        for t in downstream {
+            let (n, b) = self.agents[t.index()].cache.invalidate_many(&obj_ids);
+            evicted += n;
+            bytes += b;
+        }
+        (evicted, bytes)
+    }
+
     /// Deploy new user code (a software update). Memoized results become
-    /// stale (version is part of the recipe); if the task has a last
-    /// snapshot, it is recomputed immediately and corrected results
-    /// propagate downstream — the paper's "roll back the feed".
+    /// stale (version is part of the recipe) and downstream dependent-
+    /// local cache copies of this task's artifacts are evicted; if the
+    /// task has a last snapshot and `recompute_last` is set, it is
+    /// recomputed immediately and corrected results propagate downstream
+    /// — the paper's "roll back the feed". Returns the downstream cache
+    /// eviction as (entries, bytes).
     pub fn software_update(
         &mut self,
         task: &str,
         code: Box<dyn UserCode>,
         recompute_last: bool,
-    ) -> Result<()> {
+    ) -> Result<(usize, u64)> {
         let id = self.task_id(task)?;
-        let old_v = self.agents[id.index()].version();
         let new_v = code.version();
-        self.agents[id.index()].code = code;
+        let now = self.plat.now;
+        let old_v = self.agents[id.index()].install_code(code, now, "update");
         self.agents[id.index()].invalidate_memo();
+        // §III-J: everything this task produced (and its descendants) is
+        // now suspect — evict downstream dependent-local cache copies so
+        // stale intermediates cannot be served after the update
+        let (_, stale) = self.stale_frontier_of(id);
+        let evicted = self.evict_stale_downstream(id, &stale);
         let run = self.plat.next_run_id();
         self.plat.prov.checkpoint(
             id,
@@ -774,7 +889,7 @@ impl Coordinator {
                 self.fire_snapshot(id, snap)?;
             }
         }
-        Ok(())
+        Ok(evicted)
     }
 
     /// Run a task that has no stream inputs (a pure source) once.

@@ -7,6 +7,8 @@
 //! Quick tour:
 //! * [`spec`] — the fig. 5 wiring language (`(in[10/2]) task (out)`)
 //! * [`coordinator`] — the pipeline manager: reactive + make triggering
+//! * [`breadboard`] — the smart-workspace layer: live wire taps, hot code
+//!   swaps with invalidation previews, forensic replay (§III-H/J, §IV)
 //! * [`task`] / [`link`] — smart task & link agents
 //! * [`policy`] — snapshot policies (AllNew / SwapNewForOld / Merge / windows)
 //! * [`provenance`] — the three metadata stories (traveller / checkpoint / map)
@@ -18,6 +20,7 @@
 pub mod av;
 pub mod baseline;
 pub mod benchkit;
+pub mod breadboard;
 pub mod bus;
 pub mod cluster;
 pub mod coordinator;
@@ -39,6 +42,7 @@ pub mod workspace;
 /// Convenient imports for examples and downstream users.
 pub mod prelude {
     pub use crate::av::{DataClass, Payload};
+    pub use crate::breadboard::{Breadboard, TapSpec};
     pub use crate::bus::NotifyMode;
     pub use crate::coordinator::{Collected, Coordinator, DeployConfig};
     pub use crate::net::{demo_topology, WanLink, WanTopology};

@@ -30,6 +30,14 @@ USAGE:
       Run a short synthetic session, then dump the provenance registry
       (traveller passports, checkpoint logs, concept map) as JSON.
 
+  koalja bread <spec.koalja> [--swap TASK] [--seconds N]
+      Scripted breadboard session (§III-H): attach live wire taps to every
+      wire, stream synthetic data, hot-swap TASK (default: the producer of
+      the first sink) with a dry-run invalidation preview and a version
+      bump, then forensically replay the whole run from the provenance
+      ledger + seed — the pre-swap window shows hash drift (old software),
+      the post-swap window rebuilds hash-identical.
+
   koalja demo
       The paper's fig. 5 'tfmodel' wiring on synthetic data.
 ";
@@ -52,6 +60,7 @@ fn run(args: &[String]) -> Result<()> {
         Some("check") => cmd_check(&args[1..]),
         Some("artifacts") => cmd_artifacts(&args[1..]),
         Some("trace") => cmd_trace(&args[1..]),
+        Some("bread") => cmd_bread(&args[1..]),
         Some("demo") => cmd_demo(),
         Some("--help") | Some("-h") | None => {
             print!("{USAGE}");
@@ -181,6 +190,199 @@ fn cmd_trace(args: &[String]) -> Result<()> {
     }
     coord.run_until_idle();
     println!("{}", coord.plat.prov.dump_json().to_string());
+    Ok(())
+}
+
+/// Scripted breadboard session: tap → observe → hot-swap (dry-run first)
+/// → forensic replay with drift diff. Exercises the whole §III-H/J loop
+/// on any spec; exits nonzero if the post-swap window fails to rebuild
+/// hash-identical (the determinism self-check).
+fn cmd_bread(args: &[String]) -> Result<()> {
+    use koalja::breadboard::Breadboard;
+    use koalja::task::{Output, UserCode};
+
+    let path = args.first().ok_or_else(|| anyhow!("bread: missing spec path"))?;
+    let spec = load_spec(path)?;
+    let asked: u64 = flag_value(args, "--seconds").map(|v| v.parse()).transpose()?.unwrap_or(8);
+    // the script needs room for a pre-swap window AND a post-swap window;
+    // below 6 virtual seconds the second feed would be empty and the final
+    // certification vacuous
+    let seconds = asked.max(6);
+    if seconds != asked {
+        println!("note: --seconds raised {asked} -> {seconds} (two observation windows needed)");
+    }
+
+    // pick the swap target: --swap TASK, else the producer of the first sink
+    let swap_task = match flag_value(args, "--swap") {
+        Some(t) => t,
+        None => {
+            let sink = spec
+                .sink_wires()
+                .first()
+                .cloned()
+                .ok_or_else(|| anyhow!("bread: spec has no sink wire to demo on"))?;
+            spec.tasks
+                .iter()
+                .find(|t| t.outputs.contains(&sink))
+                .map(|t| t.name.clone())
+                .ok_or_else(|| anyhow!("bread: no producer of sink '{sink}'"))?
+        }
+    };
+    let wires_in = spec.external_wires();
+    if wires_in.is_empty() {
+        bail!("bread: spec has no external wires to feed");
+    }
+
+    // the session runs as a workspace principal with explicit grants (§IV)
+    let mut bread = Breadboard::deploy(&spec, DeployConfig::default())?.as_principal("operator");
+    let ws = bread.plat.workspaces.create("breadboard");
+    bread.plat.workspaces.add_member(ws, "operator");
+    bread.plat.workspaces.grant(ws, koalja::workspace::Resource::Pipeline(spec.name.clone()));
+    bread.plat.workspaces.grant(ws, koalja::workspace::Resource::Provenance(spec.name.clone()));
+
+    // 1. taps on every wire in the diagram
+    let mut all_wires: Vec<String> = Vec::new();
+    for t in &spec.tasks {
+        for i in t.stream_inputs() {
+            if !all_wires.contains(&i.wire) {
+                all_wires.push(i.wire.clone());
+            }
+        }
+        for o in &t.outputs {
+            if !all_wires.contains(o) {
+                all_wires.push(o.clone());
+            }
+        }
+    }
+    let mut taps = Vec::new();
+    for w in &all_wires {
+        bread.plat.workspaces.grant(ws, koalja::workspace::Resource::Wire(w.clone()));
+        taps.push((w.clone(), bread.tap(w)?));
+    }
+    println!("[{}] breadboard up: {} wires tapped, swap target '{swap_task}'", spec.name, taps.len());
+
+    // 2. first half: stream synthetic tensors under the original software
+    let half = SimTime::secs(seconds / 2 + 1);
+    let mut r = rng(23);
+    let feed = |bread: &mut Breadboard, from_ms: u64, to_ms: u64, r: &mut koalja::util::Rng| {
+        for wire in &wires_in {
+            let mut t = from_ms;
+            while t < to_ms {
+                let data: Vec<f32> = (0..8).map(|_| r.normal() as f32).collect();
+                let _ = bread.inject_at(
+                    wire,
+                    Payload::tensor(&[1, 8], data),
+                    DataClass::Summary,
+                    RegionId::new(0),
+                    SimTime::millis(t),
+                );
+                t += 250;
+            }
+        }
+    };
+    feed(&mut bread, 0, half.as_micros() / 1_000 - 500, &mut r);
+    bread.run_until_idle();
+    bread.run_until(half);
+    let t_swap = bread.plat.now;
+
+    println!("\n-- live taps after first window --");
+    for (wire, id) in &taps {
+        let stats = bread.tap_stats(*id)?.unwrap();
+        let last = bread.samples(*id)?.last().map(|s| s.av.uri());
+        println!(
+            "  tap {wire:16} seen={:4} sampled={:4} dropped={:3} last={}",
+            stats.seen,
+            stats.sampled,
+            stats.dropped,
+            last.unwrap_or_else(|| "-".into())
+        );
+    }
+
+    // 3. hot-swap: dry-run preview, then commit a v2 that doubles tensors
+    let outputs: Vec<String> =
+        spec.task(&swap_task).map(|t| t.outputs.clone()).unwrap_or_default();
+    let old_v = bread.agent(&swap_task)?.version();
+    let new_v = old_v + 1;
+    let preview = bread.swap_preview(&swap_task, new_v)?;
+    println!("\n-- dry-run -- {}", preview.summary());
+    let factory = move || -> Box<dyn UserCode> {
+        let outs = outputs.clone();
+        Box::new(FnTask::versioned(
+            move |ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
+                let mut emitted = Vec::new();
+                for av in snap.all_avs() {
+                    let p = ctx.fetch(av)?;
+                    let doubled = match p.as_tensor() {
+                        Some((shape, data)) => {
+                            Payload::tensor(shape, data.iter().map(|x| x * 2.0).collect())
+                        }
+                        None => p,
+                    };
+                    for w in &outs {
+                        emitted.push(Output::new(w.as_str(), doubled.clone(), av.class));
+                    }
+                }
+                Ok(emitted)
+            },
+            new_v,
+        ))
+    };
+    let outcome = bread.hot_swap(&swap_task, factory, false)?;
+    println!(
+        "committed at {}: cache evicted {} entries / {} B downstream",
+        outcome.at, outcome.cache_objects_evicted, outcome.cache_bytes_evicted
+    );
+
+    // 4. second half under the new software
+    feed(
+        &mut bread,
+        t_swap.as_micros() / 1_000 + 500,
+        seconds * 1_000,
+        &mut r,
+    );
+    bread.run_until_idle();
+    let t_end = bread.plat.now;
+
+    // 5. the version bump is visible in provenance
+    let q = ProvenanceQuery::new(&bread.plat.prov);
+    let task_id = bread.task_id(&swap_task)?;
+    for (at, from, to) in q.version_changes(task_id) {
+        println!("\nprovenance: '{swap_task}' version {from} -> {to} at {at}");
+    }
+    if let Some(col) = spec
+        .sink_wires()
+        .iter()
+        .filter_map(|w| bread.collected.get(w).and_then(|v| v.last()))
+        .next()
+    {
+        println!(
+            "latest sink artifact {} touched by versions {:?}",
+            col.av.id,
+            q.versions_touching(col.av.id)
+        );
+    }
+
+    // 6. forensic replay: rebuild everything from ledger + seed and diff
+    let run = bread.forensic_replay()?;
+    println!(
+        "\nreplayed {} injections ({} payloads missing) in {} events",
+        run.injections_replayed, run.missing_payloads, run.events
+    );
+    let pre = bread.diff_replay(&run, SimTime::ZERO, t_swap);
+    let post = bread.diff_replay(&run, t_swap, koalja::breadboard::WINDOW_END);
+    let _ = t_end;
+    println!("  pre-swap  {}", pre.summary());
+    println!("  post-swap {}", post.summary());
+    if post.total_matched() == 0 && post.total_drifted() == 0 {
+        bail!("post-swap window recorded no outputs — nothing to certify (pipeline produced nothing after the swap)");
+    }
+    if !post.drift_free() {
+        bail!("post-swap window failed to rebuild hash-identical (determinism broken)");
+    }
+    println!(
+        "post-swap window certified: {} rebuilt content hashes match the record",
+        post.total_matched()
+    );
     Ok(())
 }
 

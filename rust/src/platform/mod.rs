@@ -119,6 +119,9 @@ impl Platform {
             self.now,
             Stamp::Emitted { task: source_task, run, version, region },
         );
+        // av → object index: swap previews resolve stale artifacts to the
+        // cached intermediates they occupy (breadboard dry-run)
+        self.prov.register_object(av.id, object, size_bytes);
         (av, lat)
     }
 

@@ -20,8 +20,9 @@ pub mod query;
 
 pub use query::ProvenanceQuery;
 
+use crate::av::DataClass;
 use crate::util::hash::FastMap;
-use crate::util::{AvId, ContentHash, LinkId, RegionId, RunId, SimTime, TaskId};
+use crate::util::{AvId, ContentHash, LinkId, ObjectId, RegionId, RunId, SimTime, TaskId};
 
 
 /// One passport stamp in an AV's traveller log.
@@ -101,6 +102,21 @@ pub struct ConceptEdge {
     pub to: String,
 }
 
+/// One externally-injected arrival, as the forensic ledger records it.
+/// Together with the deployment seed this is sufficient to replay a run:
+/// the payload is still addressable through `object`, and `content` pins
+/// what the bytes were (drift detection if storage was tampered with).
+#[derive(Clone, Debug)]
+pub struct InjectionRecord {
+    pub av: AvId,
+    pub wire: String,
+    pub at: SimTime,
+    pub region: RegionId,
+    pub class: DataClass,
+    pub object: ObjectId,
+    pub content: ContentHash,
+}
+
 /// The pipeline manager's secure metadata registry.
 #[derive(Clone, Debug, Default)]
 pub struct ProvenanceRegistry {
@@ -110,6 +126,11 @@ pub struct ProvenanceRegistry {
     concept_seen: std::collections::HashSet<ConceptEdge>,
     /// children index for forward tracing (descendants)
     children: FastMap<AvId, Vec<AvId>>,
+    /// external-arrival ledger, injection order (breadboard replay source)
+    injections: Vec<InjectionRecord>,
+    /// AV → stored object (and size): lets swap previews find which cached
+    /// intermediates a version bump strands
+    objects: FastMap<AvId, (ObjectId, u64)>,
     /// total stamps recorded (for the E6 overhead accounting)
     pub stamp_count: u64,
     pub enabled: bool,
@@ -153,6 +174,41 @@ impl ProvenanceRegistry {
 
     pub fn passport(&self, av: AvId) -> Option<&Passport> {
         self.passports.get(&av)
+    }
+
+    /// Iterate every passport (order unspecified — sort by id for
+    /// deterministic output).
+    pub fn passports_iter(&self) -> impl Iterator<Item = (&AvId, &Passport)> {
+        self.passports.iter()
+    }
+
+    // ---- forensic ledger --------------------------------------------------
+
+    /// Record one external arrival (called by the coordinator at
+    /// injection time).
+    pub fn record_injection(&mut self, rec: InjectionRecord) {
+        if !self.enabled {
+            return;
+        }
+        self.injections.push(rec);
+    }
+
+    /// The external-arrival ledger, injection order.
+    pub fn injections(&self) -> &[InjectionRecord] {
+        &self.injections
+    }
+
+    /// Index an AV's storage location (called wherever AVs are minted).
+    pub fn register_object(&mut self, av: AvId, object: ObjectId, bytes: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.objects.insert(av, (object, bytes));
+    }
+
+    /// Storage object (and size) behind an AV, if indexed.
+    pub fn object_of(&self, av: AvId) -> Option<(ObjectId, u64)> {
+        self.objects.get(&av).copied()
     }
 
     // ---- checkpoint log ---------------------------------------------------
@@ -207,9 +263,14 @@ impl ProvenanceRegistry {
     /// Approximate bytes of metadata held (for E6's overhead-vs-payload
     /// comparison). Stamps are small fixed records; concept map is O(design).
     pub fn metadata_bytes(&self) -> u64 {
-        // ~40 B per stamp record, ~48 B per checkpoint entry, ~96 B per edge
+        // ~40 B per stamp record, ~48 B per checkpoint entry, ~96 B per
+        // edge, ~72 B per ledger entry, ~24 B per object index row
         let cp: usize = self.checkpoints.values().map(|v| v.len()).sum();
-        (self.stamp_count * 40) + (cp as u64 * 48) + (self.concept_edges.len() as u64 * 96)
+        (self.stamp_count * 40)
+            + (cp as u64 * 48)
+            + (self.concept_edges.len() as u64 * 96)
+            + (self.injections.len() as u64 * 72)
+            + (self.objects.len() as u64 * 24)
     }
 
     pub fn passports_held(&self) -> usize {
@@ -386,6 +447,31 @@ mod tests {
         }
         let after = reg.metadata_bytes();
         assert_eq!(after - before, 100 * 40);
+    }
+
+    #[test]
+    fn injection_ledger_and_object_index() {
+        let mut reg = ProvenanceRegistry::new();
+        reg.record_injection(InjectionRecord {
+            av: AvId::new(0),
+            wire: "raw".into(),
+            at: SimTime::millis(3),
+            region: RegionId::new(0),
+            class: crate::av::DataClass::Summary,
+            object: crate::util::ObjectId::new(9),
+            content: ContentHash::of_str("x"),
+        });
+        reg.register_object(AvId::new(0), crate::util::ObjectId::new(9), 128);
+        assert_eq!(reg.injections().len(), 1);
+        assert_eq!(reg.injections()[0].wire, "raw");
+        assert_eq!(reg.object_of(AvId::new(0)), Some((crate::util::ObjectId::new(9), 128)));
+        assert_eq!(reg.object_of(AvId::new(1)), None);
+        // disabled registries keep no ledger
+        let mut off = ProvenanceRegistry::disabled();
+        off.record_injection(reg.injections()[0].clone());
+        off.register_object(AvId::new(0), crate::util::ObjectId::new(9), 128);
+        assert!(off.injections().is_empty());
+        assert_eq!(off.object_of(AvId::new(0)), None);
     }
 
     #[test]

@@ -8,8 +8,8 @@
 //! would an investigator have to consider to reconstruct a packet's path
 //! *without* the traveller log, versus just reading the passport with it.
 
-use super::{ProvenanceRegistry, Stamp};
-use crate::util::{AvId, RunId, TaskId};
+use super::{CheckpointEvent, ProvenanceRegistry, Stamp};
+use crate::util::{AvId, RunId, SimTime, TaskId};
 use std::collections::{HashSet, VecDeque};
 
 /// Read-only query facade over a registry.
@@ -95,6 +95,37 @@ impl<'a> ProvenanceQuery<'a> {
             }
         }
         runs
+    }
+
+    /// Every AV a task ever emitted (ascending id — deterministic). The
+    /// swap preview seeds its stale set from this: a version bump makes
+    /// these and their descendants candidates for recomputation (§III-J).
+    pub fn emitted_by(&self, task: TaskId) -> Vec<AvId> {
+        let mut out: Vec<AvId> = self
+            .reg
+            .passports_iter()
+            .filter(|(_, p)| {
+                p.stamps
+                    .iter()
+                    .any(|s| matches!(s.stamp, Stamp::Emitted { task: t, .. } if t == task))
+            })
+            .map(|(id, _)| *id)
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Software-version changes stamped on a task's checkpoint log, in
+    /// time order: (when, from, to). Hot-swaps land here.
+    pub fn version_changes(&self, task: TaskId) -> Vec<(SimTime, u32, u32)> {
+        self.reg
+            .checkpoint_log(task)
+            .iter()
+            .filter_map(|e| match e.event {
+                CheckpointEvent::VersionChange { from, to } => Some((e.time, from, to)),
+                _ => None,
+            })
+            .collect()
     }
 
     /// Did the AV ever cross a region boundary, and how many bytes moved?
@@ -210,6 +241,26 @@ mod tests {
         assert_eq!(hops.len(), 1);
         assert_eq!(hops[0].0, 512);
         assert!(q.wan_hops(AvId::new(0)).is_empty());
+    }
+
+    #[test]
+    fn emitted_by_and_version_changes() {
+        let mut reg = chain();
+        let q = ProvenanceQuery::new(&reg);
+        assert_eq!(q.emitted_by(TaskId::new(1)), vec![AvId::new(1)]);
+        assert_eq!(q.emitted_by(TaskId::new(7)), Vec::<AvId>::new());
+        reg.checkpoint(
+            TaskId::new(1),
+            RunId::new(5),
+            crate::util::SimTime::millis(2),
+            crate::provenance::CheckpointEvent::VersionChange { from: 1, to: 2 },
+        );
+        let q = ProvenanceQuery::new(&reg);
+        assert_eq!(
+            q.version_changes(TaskId::new(1)),
+            vec![(crate::util::SimTime::millis(2), 1, 2)]
+        );
+        assert!(q.version_changes(TaskId::new(0)).is_empty());
     }
 
     #[test]

@@ -7,6 +7,10 @@
 //! parser reassigns ids. Modules are lowered with `return_tuple=True`, so
 //! every execution returns a tuple literal we decompose.
 
+// Offline builds resolve `xla::` to the in-tree stub (see xla.rs for how
+// to swap in the real PJRT bindings — call sites match the real API).
+mod xla;
+
 use crate::av::Payload;
 use crate::util::Json;
 use anyhow::{anyhow, bail, Context, Result};

@@ -1,0 +1,160 @@
+//! Offline stub for the `xla` crate (PJRT bindings).
+//!
+//! The real runtime links `xla-rs` + `xla_extension` (a multi-GB C++
+//! dependency) to compile and execute the AOT-lowered HLO text on a PJRT
+//! CPU client. This build environment vendors no native deps, so the same
+//! API surface is stubbed here: every type signature `runtime/mod.rs`
+//! needs exists and compiles, and [`PjRtClient::cpu`] reports — rather than
+//! segfaults — that no backend is present. Integration tests that need a
+//! live PJRT client (`rust/tests/runtime_e2e.rs`) detect the error and
+//! skip; everything else in the platform (coordinator, breadboard, pure-
+//! rust task bodies) is backend-free.
+//!
+//! To wire the real backend: delete this module, add `xla = "0.1"` (with
+//! `XLA_EXTENSION_DIR` set) to Cargo.toml, and remove the `mod xla;` line
+//! in `runtime/mod.rs` — the call sites are written against the real API.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type standing in for `xla::Error`.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable() -> XlaError {
+    XlaError(
+        "PJRT backend not vendored in this offline build; \
+         see DESIGN.md §Runtime for wiring the real `xla` crate"
+            .to_string(),
+    )
+}
+
+/// Host-side tensor literal (f32 only — all koalja artifacts are f32).
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+/// Element types extractable from a [`Literal`].
+pub trait Element: Sized {
+    fn extract(lit: &Literal) -> Vec<Self>;
+}
+
+impl Element for f32 {
+    fn extract(lit: &Literal) -> Vec<f32> {
+        lit.data.clone()
+    }
+}
+
+impl Literal {
+    pub fn vec1(v: &[f32]) -> Literal {
+        Literal { data: v.to_vec(), dims: vec![v.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, XlaError> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(XlaError(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>, XlaError> {
+        Ok(T::extract(self))
+    }
+}
+
+/// Parsed HLO module (text interchange format).
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto, XlaError> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| XlaError(format!("{}: {e}", path.as_ref().display())))?;
+        Ok(HloModuleProto { _text: text })
+    }
+}
+
+/// An XLA computation built from an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A compiled, device-loaded executable.
+pub struct PjRtLoadedExecutable;
+
+/// One device buffer holding an execution result.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(unavailable())
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// The PJRT client handle.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// In the real crate this boots the PJRT CPU plugin; here it reports
+    /// that no backend is vendored so callers can degrade gracefully.
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Err(unavailable())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-no-pjrt".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+    }
+
+    #[test]
+    fn literal_reshape_checks_element_count() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[2, 2]).is_ok());
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

@@ -77,19 +77,35 @@ pub struct PipelineSpec {
 }
 
 /// Validation failure, with the task at fault where applicable.
-#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum SpecError {
-    #[error("duplicate task name '{0}'")]
     DuplicateTask(String),
-    #[error("task '{task}': window slide {slide} exceeds window size {count}")]
     BadWindow { task: String, count: usize, slide: usize },
-    #[error("task '{task}': unknown attribute value '@{key}={value}'")]
     BadAttr { task: String, key: String, value: String },
-    #[error("task '{task}' consumes its own output '{wire}' directly (degenerate 1-cycle)")]
     SelfLoop { task: String, wire: String },
-    #[error("pipeline has no tasks")]
     Empty,
 }
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpecError::DuplicateTask(name) => write!(f, "duplicate task name '{name}'"),
+            SpecError::BadWindow { task, count, slide } => {
+                write!(f, "task '{task}': window slide {slide} exceeds window size {count}")
+            }
+            SpecError::BadAttr { task, key, value } => {
+                write!(f, "task '{task}': unknown attribute value '@{key}={value}'")
+            }
+            SpecError::SelfLoop { task, wire } => write!(
+                f,
+                "task '{task}' consumes its own output '{wire}' directly (degenerate 1-cycle)"
+            ),
+            SpecError::Empty => write!(f, "pipeline has no tasks"),
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
 
 impl PipelineSpec {
     /// Static validation: structural sanity before deployment. Cycles are

@@ -16,12 +16,19 @@ use crate::policy::BufferSpec;
 use std::collections::BTreeMap;
 
 /// Parse failure with line context.
-#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
-#[error("parse error at line {line}: {msg}")]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ParseError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 fn err(line: usize, msg: impl Into<String>) -> ParseError {
     ParseError { line, msg: msg.into() }

@@ -178,6 +178,35 @@ impl CacheManager {
     pub fn age(&self, id: ObjectId, now: SimTime) -> Option<SimDuration> {
         self.entries.get(&id).map(|e| now.saturating_sub(e.inserted))
     }
+
+    /// Invalidation preview (breadboard swap dry-run): how many of `ids`
+    /// are held here, and how many bytes they pin. Pure read.
+    pub fn would_invalidate(&self, ids: &[ObjectId]) -> (usize, u64) {
+        let mut count = 0;
+        let mut bytes = 0;
+        for id in ids {
+            if let Some(e) = self.entries.get(id) {
+                count += 1;
+                bytes += e.bytes;
+            }
+        }
+        (count, bytes)
+    }
+
+    /// Evict every listed entry that is present; returns (count, bytes) —
+    /// the commit half of [`CacheManager::would_invalidate`].
+    pub fn invalidate_many(&mut self, ids: &[ObjectId]) -> (usize, u64) {
+        let mut count = 0;
+        let mut bytes = 0;
+        for id in ids {
+            if let Some(e) = self.entries.get(id) {
+                count += 1;
+                bytes += e.bytes;
+                self.invalidate(*id);
+            }
+        }
+        (count, bytes)
+    }
 }
 
 #[cfg(test)]
@@ -242,6 +271,22 @@ mod tests {
         c.insert(oid(1), 40, false, SimTime::millis(1));
         assert_eq!(c.bytes, 40);
         assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn invalidation_preview_matches_commit() {
+        let mut c = CacheManager::new(PurgePolicy::Never);
+        c.insert(oid(1), 100, false, SimTime::ZERO);
+        c.insert(oid(2), 50, false, SimTime::ZERO);
+        c.insert(oid(3), 25, false, SimTime::ZERO);
+        let targets = [oid(1), oid(3), oid(99)];
+        let (n, b) = c.would_invalidate(&targets);
+        assert_eq!((n, b), (2, 125));
+        assert_eq!(c.len(), 3, "preview is pure");
+        let (n2, b2) = c.invalidate_many(&targets);
+        assert_eq!((n2, b2), (n, b), "commit matches preview");
+        assert_eq!(c.len(), 1);
+        assert!(c.contains(oid(2)));
     }
 
     #[test]

@@ -23,7 +23,7 @@ use crate::provenance::{CheckpointEvent, Stamp};
 use crate::spec::TaskSpec;
 use crate::storage::{CacheManager, PurgePolicy};
 use crate::util::hash::FastMap;
-use crate::util::{ContentHash, ObjectId, RegionId, RunId, SimDuration, TaskId};
+use crate::util::{ContentHash, ObjectId, RegionId, RunId, SimDuration, SimTime, TaskId};
 use anyhow::{anyhow, Result};
 
 /// One produced output: wire name, payload, sovereignty class.
@@ -201,6 +201,18 @@ struct MemoEntry {
     outputs: Vec<(String, ObjectId, ContentHash, u64, DataClass)>,
 }
 
+/// One entry in a task's versioned code-slot history (§III-J): which
+/// software version occupied the slot, since when, and why it got there.
+/// Provenance stamps carry the version number; this is the task-side index
+/// a breadboarder reads to correlate stamps with swaps.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CodeSlot {
+    pub version: u32,
+    pub installed_at: SimTime,
+    /// How the code arrived: "deploy" | "plug" | "update".
+    pub origin: String,
+}
+
 /// The deployed smart task: spec + policy engine + user code + caches.
 pub struct TaskAgent {
     pub id: TaskId,
@@ -216,6 +228,9 @@ pub struct TaskAgent {
     /// recompute — §III-J rollback).
     pub last_snapshot: Option<Snapshot>,
     pub runs: u64,
+    /// Versioned code slots, oldest first (the current code is the last
+    /// entry). Never empty after construction.
+    pub code_history: Vec<CodeSlot>,
 }
 
 impl TaskAgent {
@@ -228,6 +243,11 @@ impl TaskAgent {
         notify: NotifyMode,
         cache_policy: PurgePolicy,
     ) -> Self {
+        let initial = CodeSlot {
+            version: code.version(),
+            installed_at: SimTime::ZERO,
+            origin: "deploy".to_string(),
+        };
         Self {
             id,
             spec,
@@ -240,7 +260,21 @@ impl TaskAgent {
             out_seq: 0,
             last_snapshot: None,
             runs: 0,
+            code_history: vec![initial],
         }
+    }
+
+    /// Install new user code into the versioned slot; returns the version
+    /// it displaced. `origin` records how it arrived ("plug", "update").
+    pub fn install_code(&mut self, code: Box<dyn UserCode>, now: SimTime, origin: &str) -> u32 {
+        let old = self.code.version();
+        self.code_history.push(CodeSlot {
+            version: code.version(),
+            installed_at: now,
+            origin: origin.to_string(),
+        });
+        self.code = code;
+        old
     }
 
     pub fn version(&self) -> u32 {

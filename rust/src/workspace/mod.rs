@@ -169,4 +169,57 @@ mod tests {
         reg.revoke(ws, &wire("w"));
         assert!(!reg.check("p", &wire("w")));
     }
+
+    // ---- deny paths: overlap is not transitive access ---------------------
+
+    #[test]
+    fn overlapping_sets_deny_split_membership_and_grant() {
+        // access requires ONE workspace holding BOTH the principal and the
+        // grant — membership in A plus a grant in B (even when A and B
+        // overlap through another member) must deny.
+        let mut reg = WorkspaceRegistry::new();
+        let a = reg.create("a");
+        let b = reg.create("b");
+        reg.add_member(a, "carol");
+        reg.add_member(a, "shared");
+        reg.add_member(b, "shared"); // a and b overlap through 'shared'
+        reg.grant(b, wire("secret"));
+        assert!(!reg.check("carol", &wire("secret")), "split membership/grant");
+        assert!(reg.check("shared", &wire("secret")), "co-located pair allows");
+        assert!(reg.visible("carol").is_empty());
+        assert_eq!(reg.denied, 1);
+    }
+
+    #[test]
+    fn revoked_grant_stays_denied_across_overlaps() {
+        // revocation in one workspace must not be resurrected by another
+        // workspace that never held the grant.
+        let mut reg = WorkspaceRegistry::new();
+        let a = reg.create("a");
+        let b = reg.create("b");
+        reg.add_member(a, "dan");
+        reg.add_member(b, "dan");
+        reg.grant(a, wire("records"));
+        assert!(reg.check("dan", &wire("records")));
+        reg.revoke(a, &wire("records"));
+        assert!(!reg.check("dan", &wire("records")), "revocation is final");
+        assert!(!reg.visible("dan").contains(&wire("records")));
+        // ...but an independent grant elsewhere re-allows (set semantics,
+        // no deny-list): this is the documented overlapping-set model.
+        reg.grant(b, wire("records"));
+        assert!(reg.check("dan", &wire("records")));
+    }
+
+    #[test]
+    fn resource_variants_do_not_bleed_into_each_other() {
+        // a Pipeline grant is not a Wire grant on the same name, and vice
+        // versa — the breadboard relies on this separation (tap vs swap).
+        let mut reg = WorkspaceRegistry::new();
+        let ws = reg.create("ops");
+        reg.add_member(ws, "erin");
+        reg.grant(ws, Resource::Pipeline("p".into()));
+        assert!(reg.check("erin", &Resource::Pipeline("p".into())));
+        assert!(!reg.check("erin", &wire("p")));
+        assert!(!reg.check("erin", &Resource::Provenance("p".into())));
+    }
 }

@@ -1,0 +1,135 @@
+//! Breadboard integration: the full §III-H/§III-J session loop through the
+//! public API — taps while current flows, a workspace-gated hot-swap with
+//! dry-run preview, and a forensic replay certifying (or indicting) the
+//! record. Mirrors what `koalja bread <spec>` scripts.
+
+use koalja::breadboard::{Breadboard, TapSpec, WINDOW_END};
+use koalja::prelude::*;
+use koalja::provenance::ProvenanceQuery;
+use koalja::task::UserCode;
+use koalja::workspace::Resource;
+
+/// Scale-by-`factor` code at `version` — the swappable component.
+fn scale(factor: f32, version: u32) -> impl Fn() -> Box<dyn UserCode> {
+    move || {
+        Box::new(FnTask::versioned(
+            move |ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
+                let mut outs = Vec::new();
+                for av in snap.all_avs() {
+                    let p = ctx.fetch(av)?;
+                    let out = match p.as_tensor() {
+                        Some((shape, data)) => {
+                            Payload::tensor(shape, data.iter().map(|x| x * factor).collect())
+                        }
+                        None => p,
+                    };
+                    outs.push(Output::summary("mid", out));
+                }
+                Ok(outs)
+            },
+            version,
+        ))
+    }
+}
+
+fn feed(b: &mut Breadboard, values: &[f32], start_ms: u64) {
+    for (i, v) in values.iter().enumerate() {
+        b.inject_at(
+            "raw",
+            Payload::scalar(*v),
+            DataClass::Summary,
+            RegionId::new(0),
+            SimTime::millis(start_ms + i as u64 * 25),
+        )
+        .unwrap();
+    }
+}
+
+#[test]
+fn full_session_tap_swap_replay() {
+    let spec = parse("[session]\n(raw) scale (mid)\n(mid) relay (out)\n").unwrap();
+    let mut b = Breadboard::deploy(&spec, DeployConfig::default()).unwrap();
+    b.plug("scale", scale(1.0, 1)).unwrap();
+
+    // --- taps observe the live run -------------------------------------
+    let mid_tap = b
+        .tap_with("mid", TapSpec::default().with_capacity(8).with_payloads())
+        .unwrap();
+    let raw_tap = b.tap("raw").unwrap();
+    feed(&mut b, &[1.0, 2.0, 3.0], 0);
+    b.run_until_idle();
+    b.run_until(SimTime::millis(500));
+    let t_swap = b.plat.now;
+
+    assert_eq!(b.tap_stats(raw_tap).unwrap().unwrap().seen, 3);
+    let mid = b.samples(mid_tap).unwrap();
+    assert_eq!(mid.len(), 3);
+    assert!(mid.iter().all(|s| s.payload.is_some()), "payload tap captured bytes");
+    assert_eq!(mid[0].payload.as_ref().unwrap().as_tensor().unwrap().1[0], 1.0);
+
+    // --- hot-swap with preview -----------------------------------------
+    let preview = b.swap_preview("scale", 2).unwrap();
+    assert!(preview.memo_entries >= 1);
+    assert!(preview.cached_stale_objects >= 1, "relay cached scale's outputs");
+    let outcome = b.hot_swap("scale", scale(10.0, 2), false).unwrap();
+    assert_eq!(outcome.cache_objects_evicted, preview.cached_stale_objects);
+
+    feed(&mut b, &[4.0, 5.0], 600);
+    b.run_until_idle();
+    let t_end = b.plat.now;
+
+    // version bump visible through the provenance query
+    let q = ProvenanceQuery::new(&b.plat.prov);
+    let last = b.collected["out"].last().unwrap();
+    assert_eq!(last.payload.as_tensor().unwrap().1[0], 50.0, "v2 math live");
+    assert!(q.versions_touching(last.av.id).iter().any(|(_, v)| *v == 2));
+    let scale_id = b.task_id("scale").unwrap();
+    assert_eq!(q.version_changes(scale_id).len(), 1);
+    // versioned code slots recorded deploy -> plug -> update
+    let history = &b.agents[scale_id.index()].code_history;
+    assert_eq!(history.len(), 3);
+    assert_eq!(history.last().unwrap().version, 2);
+
+    // --- forensic replay -----------------------------------------------
+    let run = b.forensic_replay().unwrap();
+    assert_eq!(run.injections_replayed, 5);
+    assert_eq!(run.missing_payloads, 0);
+    let pre = b.diff_replay(&run, SimTime::ZERO, t_swap);
+    assert!(!pre.drift_free(), "v1-era outputs drift under today's v2 software");
+    let _ = t_end;
+    let post = b.diff_replay(&run, t_swap, WINDOW_END);
+    assert!(post.drift_free(), "post-swap window rebuilds hash-identical: {}", post.summary());
+    assert_eq!(post.total_matched(), 2);
+}
+
+#[test]
+fn gated_session_denies_then_allows() {
+    let spec = parse("[gated]\n(raw) work (out)\n").unwrap();
+    let mut b = Breadboard::deploy(&spec, DeployConfig::default())
+        .unwrap()
+        .as_principal("probe-user");
+
+    // no grants: every breadboard verb is denied (and counted)
+    assert!(b.tap("raw").is_err());
+    assert!(b.swap_preview("work", 2).is_err());
+    assert!(b.forensic_replay().is_err());
+    assert_eq!(b.plat.workspaces.denied, 3);
+
+    // grants arrive through an overlapping workspace
+    let ws = b.plat.workspaces.create("ops");
+    b.plat.workspaces.add_member(ws, "probe-user");
+    b.plat.workspaces.grant(ws, Resource::Wire("raw".into()));
+    b.plat.workspaces.grant(ws, Resource::Pipeline("gated".into()));
+    b.plat.workspaces.grant(ws, Resource::Provenance("gated".into()));
+
+    let tap = b.tap("raw").unwrap();
+    feed(&mut b, &[7.0], 0);
+    b.run_until_idle();
+    assert_eq!(b.tap_stats(tap).unwrap().unwrap().sampled, 1);
+    assert!(b.swap_preview("work", 2).is_ok());
+    assert!(b.forensic_replay().is_ok());
+
+    // a revoked pipeline grant re-locks the swap path
+    b.plat.workspaces.revoke(ws, &Resource::Pipeline("gated".into()));
+    assert!(b.swap_preview("work", 2).is_err());
+}
