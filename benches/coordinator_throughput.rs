@@ -1,48 +1,86 @@
 //! E11: the coordinator must not be the bottleneck (implicit platform
-//! claim). Wallclock micro-benchmarks of the L3 hot path: AV hops/s
-//! through pipelines of varying depth/fan-out, plus the substrate ops the
-//! hop is made of (bus publish/consume, store put/get, provenance stamp).
+//! claim). Wallclock micro-benchmarks of the L3 hot path: total events/s
+//! and AV hops/s through pipelines of varying depth and — the case the
+//! interned-WireId refactor targets — consumer fan-out, plus the substrate
+//! ops a hop is made of (bus publish/consume, store put/get, provenance
+//! stamp).
+//!
+//! §Perf context: publication and delivery route on dense `WireId`s; a
+//! value fanning out to N consumers mints ONE `Arc<AnnotatedValue>` shared
+//! by every Deliver event, the tap check is a per-wire mask load, and wire
+//! currency / sink capture are `Vec`-indexed. The string-keyed path this
+//! replaced paid, per publication: one `HashMap<String, _>` hash + AV deep
+//! clone for currency, a linear wire-name scan over the producer's output
+//! slots, a `Vec` clone of the consumer list, and one `Box` + AV deep
+//! clone per consumer (N+2 allocations); every delivery then paid another
+//! unconditional AV clone before the sovereignty verdict.
+//!
+//! Each run appends the measurements to `BENCH_coordinator_throughput.json`
+//! (schema in `benchkit::write_json`) — the machine-readable perf
+//! trajectory. `ci.sh` archives the file per run and fails if the bench
+//! does not produce it.
 
-use koalja::benchkit::{bench_ns, f, row, table_header};
+use koalja::benchkit::{bench_ns, f, row, table_header, write_json, Measurement};
 use koalja::prelude::*;
 
-fn hop_throughput(depth: usize, fanout: usize, provenance: bool, arrivals: u64) -> f64 {
-    let mut text = String::from("[t]\n");
-    if fanout == 1 {
-        for d in 0..depth {
-            text.push_str(&format!("(w{d}) t{d} (w{})\n", d + 1));
+const BENCH_JSON: &str = "BENCH_coordinator_throughput.json";
+const ARRIVALS: u64 = 5_000;
+
+enum Shape {
+    /// Linear pipeline of `depth` pass-through stages.
+    Chain { depth: usize },
+    /// One producer, one wire, `fanout` consumers (each with its own sink).
+    Fanout { fanout: usize },
+    /// External injections fanning straight out to `fanout` consumers.
+    InjectFanout { fanout: usize },
+}
+
+impl Shape {
+    fn spec_text(&self) -> String {
+        let mut text = String::from("[t]\n");
+        match *self {
+            Shape::Chain { depth } => {
+                for d in 0..depth {
+                    text.push_str(&format!("(w{d}) t{d} (w{})\n", d + 1));
+                }
+            }
+            Shape::Fanout { fanout } => {
+                text.push_str("(raw) src (x)\n");
+                for i in 0..fanout {
+                    text.push_str(&format!("(x) leaf{i} (s{i})\n"));
+                }
+            }
+            Shape::InjectFanout { fanout } => {
+                for i in 0..fanout {
+                    text.push_str(&format!("(x) leaf{i} (s{i})\n"));
+                }
+            }
         }
-    } else {
-        text.push_str("(w0) split (");
-        let outs: Vec<String> = (0..fanout).map(|i| format!("b{i}")).collect();
-        text.push_str(&outs.join(", "));
-        text.push_str(")\n");
-        for i in 0..fanout {
-            text.push_str(&format!("(b{i}) leaf{i} (s{i})\n"));
+        text
+    }
+
+    fn inject_wire(&self) -> &'static str {
+        match self {
+            Shape::Chain { .. } => "w0",
+            Shape::Fanout { .. } => "raw",
+            Shape::InjectFanout { .. } => "x",
         }
     }
-    let spec = parse(&text).unwrap();
+}
+
+struct Run {
+    events_per_sec: f64,
+    ns_per_event: f64,
+    hops_per_sec: f64,
+}
+
+fn run_shape(shape: &Shape, provenance: bool) -> Run {
+    let spec = parse(&shape.spec_text()).unwrap();
     let cfg = DeployConfig { provenance, ..Default::default() };
     let mut c = Coordinator::deploy(&spec, cfg).unwrap();
-    if fanout > 1 {
-        c.set_code(
-            "split",
-            Box::new(FnTask::new(move |ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
-                let mut outs = vec![];
-                for av in snap.all_avs() {
-                    let p = ctx.fetch(av)?;
-                    for i in 0..fanout {
-                        outs.push(Output::summary(&format!("b{i}"), p.clone()));
-                    }
-                }
-                Ok(outs)
-            })),
-        )
-        .unwrap();
-    }
-    for i in 0..arrivals {
+    for i in 0..ARRIVALS {
         c.inject_at(
-            "w0",
+            shape.inject_wire(),
             Payload::scalar(i as f32),
             DataClass::Summary,
             RegionId::new(0),
@@ -51,34 +89,73 @@ fn hop_throughput(depth: usize, fanout: usize, provenance: bool, arrivals: u64) 
         .unwrap();
     }
     let wall = std::time::Instant::now();
-    c.run_until_idle();
-    let secs = wall.elapsed().as_secs_f64();
-    // hops = deliveries processed
+    let events = c.run_until_idle();
+    let secs = wall.elapsed().as_secs_f64().max(1e-9);
     let hops: u64 = c.links.iter().map(|l| l.delivered).sum();
-    hops as f64 / secs
+    Run {
+        events_per_sec: events as f64 / secs,
+        ns_per_event: secs * 1e9 / events.max(1) as f64,
+        hops_per_sec: hops as f64 / secs,
+    }
+}
+
+/// Best-of-3 (the shared benchmark host is noisy).
+fn best_of_3(shape: &Shape, provenance: bool) -> Run {
+    let mut best = run_shape(shape, provenance);
+    for _ in 0..2 {
+        let r = run_shape(shape, provenance);
+        if r.events_per_sec > best.events_per_sec {
+            best = r;
+        }
+    }
+    best
 }
 
 fn main() {
+    let mut report: Vec<Measurement> = vec![Measurement::new("arrivals", ARRIVALS as f64, "count")];
+
     table_header(
-        "E11: coordinator hot path — AV hops/s (wallclock, single thread)",
-        &["shape", "provenance", "hops_per_s"],
+        "E11: coordinator hot path — events/s and AV hops/s (wallclock, single thread)",
+        &["shape", "provenance", "events_per_s", "ns_per_event", "hops_per_s"],
     );
-    for (label, depth, fanout) in
-        [("chain-1", 1usize, 1usize), ("chain-4", 4, 1), ("chain-16", 16, 1), ("fan-8", 1, 8)]
-    {
+    let shapes: [(&str, Shape); 6] = [
+        ("chain-4", Shape::Chain { depth: 4 }),
+        ("chain-16", Shape::Chain { depth: 16 }),
+        ("fanout-4", Shape::Fanout { fanout: 4 }),
+        ("fanout-8", Shape::Fanout { fanout: 8 }),
+        ("inject-fanout-4", Shape::InjectFanout { fanout: 4 }),
+        ("inject-fanout-8", Shape::InjectFanout { fanout: 8 }),
+    ];
+    for (label, shape) in &shapes {
         for prov in [true, false] {
-            // best-of-3: the shared benchmark host is noisy
-            let hps = (0..3)
-                .map(|_| hop_throughput(depth, fanout, prov, 5_000))
-                .fold(0.0f64, f64::max);
-            row(&[label.into(), format!("{prov}"), f(hps)]);
+            let r = best_of_3(shape, prov);
+            row(&[
+                label.to_string(),
+                format!("{prov}"),
+                f(r.events_per_sec),
+                f(r.ns_per_event),
+                f(r.hops_per_sec),
+            ]);
+            let tag = if prov { "prov" } else { "noprov" };
+            report.push(Measurement::new(
+                format!("{label}/{tag}/events_per_sec"),
+                r.events_per_sec,
+                "events/s",
+            ));
+            report.push(Measurement::new(
+                format!("{label}/{tag}/ns_per_event"),
+                r.ns_per_event,
+                "ns",
+            ));
+            report.push(Measurement::new(
+                format!("{label}/{tag}/hops_per_sec"),
+                r.hops_per_sec,
+                "hops/s",
+            ));
         }
     }
 
-    table_header(
-        "E11b: substrate op costs (ns/op, wallclock)",
-        &["op", "ns_per_op"],
-    );
+    table_header("E11b: substrate op costs (ns/op, wallclock)", &["op", "ns_per_op"]);
     {
         use koalja::av::{AnnotatedValue, DataClass};
         use koalja::util::*;
@@ -105,6 +182,7 @@ fn main() {
             i += 1;
         });
         row(&["bus publish+consume".into(), f(ns)]);
+        report.push(Measurement::new("substrate/bus_publish_consume", ns, "ns/op"));
 
         let mut store = koalja::storage::ObjectStore::new(StorageConfig::default());
         let ns = bench_ns(|| {
@@ -119,6 +197,7 @@ fn main() {
             store.delete(id);
         });
         row(&["store put+get+delete".into(), f(ns)]);
+        report.push(Measurement::new("substrate/store_put_get_delete", ns, "ns/op"));
 
         let mut prov = koalja::provenance::ProvenanceRegistry::new();
         let mut j = 0u64;
@@ -131,6 +210,7 @@ fn main() {
             j += 1;
         });
         row(&["provenance stamp".into(), f(ns)]);
+        report.push(Measurement::new("substrate/provenance_stamp", ns, "ns/op"));
 
         let mut c = koalja::storage::CacheManager::new(PurgePolicy::LruBytes(1 << 20));
         let mut k = 0u64;
@@ -140,9 +220,18 @@ fn main() {
             k += 1;
         });
         row(&["cache insert+lookup".into(), f(ns)]);
+        report.push(Measurement::new("substrate/cache_insert_lookup", ns, "ns/op"));
+    }
+
+    match write_json(BENCH_JSON, &report) {
+        Ok(()) => println!("\nperf trajectory recorded: {BENCH_JSON} ({} measurements)", report.len()),
+        Err(e) => {
+            eprintln!("FAIL: could not write {BENCH_JSON}: {e}");
+            std::process::exit(1);
+        }
     }
     println!(
-        "\nclaim check: a hop costs microseconds while simulated task compute costs hundreds — \
+        "claim check: a hop costs microseconds while simulated task compute costs hundreds — \
          the coordinator is not the bottleneck ✓"
     );
 }

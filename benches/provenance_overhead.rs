@@ -83,7 +83,7 @@ fn main() {
     for depth in [2usize, 4, 8, 10] {
         let (c, _) = run(depth, 2, true, 1024);
         let sink = format!("c{depth}");
-        let out = c.collected[&sink].last().unwrap().av.id;
+        let out = c.collected[sink.as_str()].last().unwrap().av.id;
         let q = ProvenanceQuery::new(&c.plat.prov);
         let (with, without) = q.reconstruction_cost(out, 10);
         row(&[

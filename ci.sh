@@ -30,6 +30,23 @@ if command -v cargo >/dev/null 2>&1; then
 
     step "tap overhead bench (breadboard acceptance evidence)"
     cargo bench --bench tap_overhead 2>/dev/null || echo "note: bench skipped"
+
+    step "coordinator throughput bench (perf trajectory: BENCH_coordinator_throughput.json)"
+    rm -f BENCH_coordinator_throughput.json
+    if cargo bench --bench coordinator_throughput; then
+        if [ -f BENCH_coordinator_throughput.json ]; then
+            mkdir -p artifacts/bench
+            cp BENCH_coordinator_throughput.json \
+               "artifacts/bench/coordinator_throughput-$(date -u +%Y%m%dT%H%M%SZ).json"
+            echo "archived BENCH_coordinator_throughput.json -> artifacts/bench/"
+        else
+            echo "ERROR: bench ran but emitted no BENCH_coordinator_throughput.json"
+            fail=1
+        fi
+    else
+        echo "ERROR: coordinator_throughput bench failed"
+        fail=1
+    fi
 else
     echo "note: cargo not found — rust tier skipped in this environment"
 fi

@@ -1,8 +1,11 @@
 //! In-tree micro-benchmark harness (criterion is not vendored in this
 //! offline environment). Good enough for the repo's needs: warmup,
-//! calibrated iteration counts, median-of-samples timing, and table-style
-//! output that EXPERIMENTS.md records verbatim.
+//! calibrated iteration counts, median-of-samples timing, table-style
+//! output that EXPERIMENTS.md records verbatim, and a machine-readable
+//! JSON report ([`write_json`]) so each bench run appends a point to the
+//! repo's perf trajectory (`BENCH_*.json`, archived by `ci.sh`).
 
+use crate::util::Json;
 use std::time::{Duration, Instant};
 
 /// One measured series entry.
@@ -11,6 +14,41 @@ pub struct Measurement {
     pub label: String,
     pub value: f64,
     pub unit: String,
+}
+
+impl Measurement {
+    pub fn new(label: impl Into<String>, value: f64, unit: impl Into<String>) -> Self {
+        Self { label: label.into(), value, unit: unit.into() }
+    }
+}
+
+/// Serialize measurements to `path` as the repo's bench-JSON schema:
+/// `{"schema": 1, "bench": <file stem>, "results": [{label, value, unit}]}`.
+/// The bench name is derived from the file stem (`BENCH_foo.json` → `foo`),
+/// so trajectory tooling can group reports without parsing labels.
+pub fn write_json(path: impl AsRef<std::path::Path>, measurements: &[Measurement]) -> std::io::Result<()> {
+    let path = path.as_ref();
+    let bench = path
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .map(|s| s.strip_prefix("BENCH_").unwrap_or(s))
+        .unwrap_or("unknown");
+    let results: Vec<Json> = measurements
+        .iter()
+        .map(|m| {
+            Json::obj(vec![
+                ("label", Json::str(m.label.clone())),
+                ("value", Json::num(m.value)),
+                ("unit", Json::str(m.unit.clone())),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("schema", Json::num(1.0)),
+        ("bench", Json::str(bench)),
+        ("results", Json::Arr(results)),
+    ]);
+    std::fs::write(path, doc.to_string() + "\n")
 }
 
 /// Time a closure: warm up, pick an iteration count targeting ~`budget`,
@@ -76,5 +114,28 @@ mod tests {
         assert_eq!(f(1234.5), "1234"); // ties-to-even
         assert_eq!(f(42.0), "42.0");
         assert_eq!(f(1.23456), "1.235");
+    }
+
+    #[test]
+    fn write_json_roundtrips_schema() {
+        let path = std::env::temp_dir().join("BENCH_benchkit_selftest.json");
+        let ms = vec![
+            Measurement::new("fanout4/events_per_sec", 1234.5, "events/s"),
+            Measurement::new("fanout4/ns_per_event", 810.0, "ns"),
+        ];
+        write_json(&path, &ms).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_u64(), Some(1));
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("benchkit_selftest"));
+        let results = doc.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(
+            results[0].get("label").unwrap().as_str(),
+            Some("fanout4/events_per_sec")
+        );
+        assert_eq!(results[1].get("value").unwrap().as_f64(), Some(810.0));
+        assert_eq!(results[0].get("unit").unwrap().as_str(), Some("events/s"));
+        let _ = std::fs::remove_file(&path);
     }
 }

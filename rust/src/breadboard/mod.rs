@@ -35,7 +35,7 @@ use crate::coordinator::{Coordinator, DeployConfig};
 use crate::provenance::InjectionRecord;
 use crate::spec::PipelineSpec;
 use crate::task::UserCode;
-use crate::util::{SimDuration, SimTime};
+use crate::util::{SimDuration, SimTime, WireId};
 use crate::workspace::Resource;
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
@@ -324,10 +324,22 @@ impl Breadboard {
         let ledger: Vec<InjectionRecord> = self.coord.plat.prov.injections().to_vec();
         let mut injected = 0usize;
         let mut missing = 0usize;
+        // resolve each distinct ledger wire name against the fresh
+        // deployment's intern table once; re-injection then runs entirely
+        // on ids (§Perf — ledgers repeat a handful of wires many times)
+        let mut resolved: HashMap<String, WireId> = HashMap::new();
         for rec in ledger {
             match self.coord.plat.store.peek(rec.object) {
                 Some(obj) => {
-                    fresh.inject_at(&rec.wire, obj.payload.clone(), rec.class, rec.region, rec.at)?;
+                    let wid = match resolved.get(&rec.wire) {
+                        Some(w) => *w,
+                        None => {
+                            let w = fresh.wire_id(&rec.wire)?;
+                            resolved.insert(rec.wire.clone(), w);
+                            w
+                        }
+                    };
+                    fresh.inject_at_id(wid, obj.payload.clone(), rec.class, rec.region, rec.at)?;
                     injected += 1;
                 }
                 None => missing += 1,

@@ -13,18 +13,20 @@
 //! drifting hashes localize exactly which window a software change (or a
 //! nondeterministic task) altered.
 
-use crate::coordinator::Collected;
+use crate::coordinator::SinkBook;
 use crate::util::{ContentHash, SimTime};
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 
 /// Project sink captures into per-wire (time, content-hash) sequences —
 /// the canonical shape both the live record and a replay are diffed in.
+/// (Wires that collected nothing are omitted, matching the former
+/// `HashMap` representation.)
 pub fn hash_sequences(
-    collected: &HashMap<String, Vec<Collected>>,
+    collected: &SinkBook,
 ) -> BTreeMap<String, Vec<(SimTime, ContentHash)>> {
     collected
         .iter()
-        .map(|(w, v)| (w.clone(), v.iter().map(|c| (c.at, c.av.content)).collect()))
+        .map(|(w, v)| (w.to_string(), v.iter().map(|c| (c.at, c.av.content)).collect()))
         .collect()
 }
 

@@ -15,8 +15,9 @@
 
 use crate::av::{AnnotatedValue, Payload};
 use crate::storage::ObjectStore;
-use crate::util::SimTime;
+use crate::util::{SimTime, WireId};
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 /// Identifies one attached tap (unique for the coordinator's lifetime).
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
@@ -80,7 +81,15 @@ pub struct TapStats {
 
 struct TapState {
     id: TapId,
-    wire: String,
+    /// Wire name as given at attach time (kept for display / re-checking
+    /// workspace grants).
+    wire_name: String,
+    /// Interned wire, or None when the name is not in the deploy-time
+    /// table — such a tap is inert: out-of-table publications (custom
+    /// user code emitting a name the spec never mentions) bypass the
+    /// dense probe points and land only in the sink overflow map. It is
+    /// harmless to attach, and costs untapped wires nothing.
+    wire: Option<WireId>,
     spec: TapSpec,
     ring: VecDeque<TapSample>,
     stats: TapStats,
@@ -88,16 +97,34 @@ struct TapState {
 }
 
 /// The set of live taps, owned by the coordinator.
+///
+/// §Perf: the board is *bound* to the pipeline's interned wire table at
+/// deploy time; the hot-path guard [`TapBoard::watches`] is then one
+/// `is_empty` branch plus one dense `Vec<bool>` load indexed by [`WireId`]
+/// — no name scan, no hashing — rebuilt only when taps attach/detach or
+/// pause/resume (cold operations).
 #[derive(Default)]
 pub struct TapBoard {
     taps: Vec<TapState>,
     next_id: u64,
+    /// Interned wire names, shared with the coordinator's wire table.
+    names: Arc<Vec<String>>,
+    /// Dense guard: `mask[w]` == some enabled tap watches wire `w`.
+    mask: Vec<bool>,
     /// Observe calls actually dispatched (any tap attached) — for the
     /// overhead bench's sanity check.
     pub observations: u64,
 }
 
 impl TapBoard {
+    /// A board bound to a pipeline's interned wire table (what
+    /// `Coordinator::deploy` constructs). The default (unbound) board
+    /// treats every attach as unknown-wire, so it only suits unit tests.
+    pub fn bound(names: Arc<Vec<String>>) -> Self {
+        let mask = vec![false; names.len()];
+        Self { taps: Vec::new(), next_id: 0, names, mask, observations: 0 }
+    }
+
     /// True when no tap is attached — the hot-path guard: the event loop
     /// skips [`TapBoard::observe`] entirely in that case.
     #[inline]
@@ -105,31 +132,50 @@ impl TapBoard {
         self.taps.is_empty()
     }
 
-    /// Wire-precise guard: does any enabled tap watch `wire`? Costs one
-    /// branch when the board is empty and a short scan of the attached
-    /// taps otherwise, so publications on untapped wires never pay for
-    /// the observation event.
+    /// Wire-precise guard: does any enabled tap watch `wire`? One branch
+    /// when the board is empty, one dense bool load otherwise — untapped
+    /// wires never pay for the observation event.
     #[inline]
-    pub fn watches(&self, wire: &str) -> bool {
-        !self.taps.is_empty() && self.taps.iter().any(|t| t.enabled && t.wire == wire)
+    pub fn watches(&self, wire: WireId) -> bool {
+        !self.taps.is_empty() && self.mask.get(wire.index()).copied().unwrap_or(false)
     }
 
     pub fn len(&self) -> usize {
         self.taps.len()
     }
 
+    fn rebuild_mask(&mut self) {
+        self.mask.clear();
+        self.mask.resize(self.names.len(), false);
+        for t in &self.taps {
+            if let (true, Some(w)) = (t.enabled, t.wire) {
+                self.mask[w.index()] = true;
+            }
+        }
+    }
+
     /// Attach a probe to `wire`. Returns the handle used to read/detach.
+    /// Unknown wire names attach an inert tap (see [`TapState::wire`]);
+    /// callers wanting a hard error go through `Breadboard::tap`, which
+    /// validates the name against the spec first.
     pub fn attach(&mut self, wire: &str, spec: TapSpec) -> TapId {
         let id = TapId(self.next_id);
         self.next_id += 1;
+        let wire_id = self
+            .names
+            .iter()
+            .position(|n| n == wire)
+            .map(|i| WireId::new(i as u32));
         self.taps.push(TapState {
             id,
-            wire: wire.to_string(),
+            wire_name: wire.to_string(),
+            wire: wire_id,
             spec,
             ring: VecDeque::new(),
             stats: TapStats::default(),
             enabled: true,
         });
+        self.rebuild_mask();
         id
     }
 
@@ -137,18 +183,26 @@ impl TapBoard {
     pub fn detach(&mut self, id: TapId) -> bool {
         let before = self.taps.len();
         self.taps.retain(|t| t.id != id);
-        self.taps.len() != before
+        let changed = self.taps.len() != before;
+        if changed {
+            self.rebuild_mask();
+        }
+        changed
     }
 
     /// Pause/resume sampling without losing the ring.
     pub fn set_enabled(&mut self, id: TapId, enabled: bool) -> bool {
-        match self.taps.iter_mut().find(|t| t.id == id) {
+        let found = match self.taps.iter_mut().find(|t| t.id == id) {
             Some(t) => {
                 t.enabled = enabled;
                 true
             }
             None => false,
+        };
+        if found {
+            self.rebuild_mask();
         }
+        found
     }
 
     fn state(&self, id: TapId) -> Option<&TapState> {
@@ -173,17 +227,17 @@ impl TapBoard {
     }
 
     pub fn wire_of(&self, id: TapId) -> Option<&str> {
-        self.state(id).map(|t| t.wire.as_str())
+        self.state(id).map(|t| t.wire_name.as_str())
     }
 
     /// Dispatch point: called by the coordinator when an AV is published
     /// on `wire` (once per value — consumer fan-out does not multiply
-    /// observations). The caller guards with [`TapBoard::is_empty`] so
+    /// observations). The caller guards with [`TapBoard::watches`] so
     /// this is never on the hot path of an untapped pipeline.
-    pub fn observe(&mut self, wire: &str, av: &AnnotatedValue, store: &ObjectStore, now: SimTime) {
+    pub fn observe(&mut self, wire: WireId, av: &AnnotatedValue, store: &ObjectStore, now: SimTime) {
         self.observations += 1;
         for t in self.taps.iter_mut() {
-            if !t.enabled || t.wire != wire {
+            if !t.enabled || t.wire != Some(wire) {
                 continue;
             }
             t.stats.seen += 1;
@@ -243,13 +297,21 @@ mod tests {
         (s, id)
     }
 
+    /// A board bound to two wires: "w" = WireId 0, "v" = WireId 1.
+    fn board() -> TapBoard {
+        TapBoard::bound(Arc::new(vec!["w".to_string(), "v".to_string()]))
+    }
+
+    const W: WireId = WireId::new(0);
+    const V: WireId = WireId::new(1);
+
     #[test]
     fn ring_bounds_and_counters() {
         let (store, obj) = store_with(Payload::scalar(1.0));
-        let mut board = TapBoard::default();
+        let mut board = board();
         let id = board.attach("w", TapSpec::default().with_capacity(3));
         for i in 0..5 {
-            board.observe("w", &av(i, obj), &store, SimTime::micros(i));
+            board.observe(W, &av(i, obj), &store, SimTime::micros(i));
         }
         let stats = board.stats(id).unwrap();
         assert_eq!(stats.seen, 5);
@@ -262,11 +324,11 @@ mod tests {
     #[test]
     fn predicate_filters_and_wire_isolates() {
         let (store, obj) = store_with(Payload::scalar(1.0));
-        let mut board = TapBoard::default();
+        let mut board = board();
         let even = board.attach("w", TapSpec::default().with_predicate(|a| a.seq % 2 == 0));
         let other = board.attach("v", TapSpec::default());
         for i in 0..6 {
-            board.observe("w", &av(i, obj), &store, SimTime::micros(i));
+            board.observe(W, &av(i, obj), &store, SimTime::micros(i));
         }
         assert_eq!(board.stats(even).unwrap().sampled, 3);
         assert_eq!(board.stats(even).unwrap().seen, 6);
@@ -274,13 +336,31 @@ mod tests {
     }
 
     #[test]
+    fn watch_mask_is_wire_precise() {
+        let mut board = board();
+        assert!(!board.watches(W), "empty board watches nothing");
+        let id = board.attach("w", TapSpec::default());
+        assert!(board.watches(W));
+        assert!(!board.watches(V), "other wires stay cold");
+        // unknown names attach inert: no wire lights up
+        board.attach("cold-wire", TapSpec::default());
+        assert!(!board.watches(V));
+        board.set_enabled(id, false);
+        assert!(!board.watches(W), "paused taps drop out of the mask");
+        board.set_enabled(id, true);
+        assert!(board.watches(W));
+        board.detach(id);
+        assert!(!board.watches(W), "detach clears the mask");
+    }
+
+    #[test]
     fn payload_capture_copies_bytes() {
         let p = Payload::tensor(&[2], vec![3.0, 4.0]);
         let (store, obj) = store_with(p.clone());
-        let mut board = TapBoard::default();
+        let mut board = board();
         let plain = board.attach("w", TapSpec::default());
         let deep = board.attach("w", TapSpec::default().with_payloads());
-        board.observe("w", &av(0, obj), &store, SimTime::ZERO);
+        board.observe(W, &av(0, obj), &store, SimTime::ZERO);
         assert!(board.samples_vec(plain)[0].payload.is_none());
         assert_eq!(board.samples_vec(deep)[0].payload, Some(p));
     }
@@ -288,11 +368,11 @@ mod tests {
     #[test]
     fn detach_and_disable() {
         let (store, obj) = store_with(Payload::scalar(0.0));
-        let mut board = TapBoard::default();
+        let mut board = board();
         let id = board.attach("w", TapSpec::default());
-        board.observe("w", &av(0, obj), &store, SimTime::ZERO);
+        board.observe(W, &av(0, obj), &store, SimTime::ZERO);
         assert!(board.set_enabled(id, false));
-        board.observe("w", &av(1, obj), &store, SimTime::ZERO);
+        board.observe(W, &av(1, obj), &store, SimTime::ZERO);
         assert_eq!(board.stats(id).unwrap().sampled, 1, "paused tap sampled nothing");
         assert!(board.detach(id));
         assert!(!board.detach(id), "double detach is a no-op");

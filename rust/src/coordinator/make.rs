@@ -15,17 +15,20 @@
 use super::Coordinator;
 use crate::av::AnnotatedValue;
 use crate::policy::Snapshot;
-use crate::util::TaskId;
+use crate::util::{TaskId, WireId};
 use anyhow::{anyhow, Result};
 use std::collections::HashSet;
 
 impl Coordinator {
     /// Bring `wire` up to date, rebuilding stale dependencies backwards.
-    /// Returns the (now current) AV on the wire.
+    /// Returns the (now current) AV on the wire. Thin name→id wrapper: the
+    /// recursive walk itself runs on interned [`WireId`]s against the
+    /// graph's precomputed per-wire producer lists (§Perf).
     pub fn demand(&mut self, wire: &str) -> Result<AnnotatedValue> {
+        let wid = self.wire_id(wire)?;
         let mut visited = HashSet::new();
         self.suppress_routing = true;
-        let r = self.demand_wire(wire, &mut visited);
+        let r = self.demand_wire(wid, &mut visited);
         self.suppress_routing = false;
         r
     }
@@ -33,32 +36,30 @@ impl Coordinator {
     /// Demand-build every producer of `wire`, then return its latest AV.
     fn demand_wire(
         &mut self,
-        wire: &str,
+        wire: WireId,
         visited: &mut HashSet<TaskId>,
     ) -> Result<AnnotatedValue> {
-        let producers: Vec<TaskId> = self
-            .graph
-            .tasks
-            .iter()
-            .enumerate()
-            .filter(|(_, t)| t.outputs.iter().any(|o| o == wire))
-            .map(|(i, _)| TaskId::new(i as u64))
-            .collect();
+        let producers: Vec<TaskId> = self.graph.wires.producers(wire).to_vec();
         if producers.is_empty() {
             // external in-tray: someone must have dropped a file
             return self
                 .latest_on_wire
-                .get(wire)
-                .cloned()
-                .ok_or_else(|| anyhow!("no data ever injected on external wire '{wire}'"));
+                .by_id(wire)
+                .map(|a| (**a).clone())
+                .ok_or_else(|| {
+                    anyhow!(
+                        "no data ever injected on external wire '{}'",
+                        self.graph.wires.name(wire)
+                    )
+                });
         }
         for p in producers {
             self.demand_task_inner(p, visited)?;
         }
         self.latest_on_wire
-            .get(wire)
-            .cloned()
-            .ok_or_else(|| anyhow!("producers of '{wire}' made no output"))
+            .by_id(wire)
+            .map(|a| (**a).clone())
+            .ok_or_else(|| anyhow!("producers of '{}' made no output", self.graph.wires.name(wire)))
     }
 
     /// Demand-build one task (dependencies first).
@@ -75,24 +76,33 @@ impl Coordinator {
         if !visited.insert(task) {
             return Ok(()); // diamond dependency or cycle: build once per demand
         }
-        let ports: Vec<String> = self
+        // ports resolve to interned ids once; the snapshot still carries
+        // names because input buffers are keyed by port name
+        let ports: Vec<(std::rc::Rc<str>, WireId)> = self
             .graph
             .task(task)
             .stream_inputs()
-            .map(|i| i.wire.clone())
+            .map(|i| {
+                let wid = self
+                    .graph
+                    .wires
+                    .id(&i.wire)
+                    .expect("spec stream inputs are interned at build");
+                (std::rc::Rc::from(i.wire.as_str()), wid)
+            })
             .collect();
-        for wire in &ports {
-            self.demand_wire(wire, visited)?;
+        for (_, wid) in &ports {
+            self.demand_wire(*wid, visited)?;
         }
         // assemble the Makefile-style snapshot: the latest value per port
         let mut inputs = Vec::with_capacity(ports.len());
-        for wire in &ports {
+        for (name, wid) in &ports {
             let av = self
                 .latest_on_wire
-                .get(wire)
-                .cloned()
-                .ok_or_else(|| anyhow!("input '{wire}' has no current value"))?;
-            inputs.push((std::rc::Rc::from(wire.as_str()), vec![av]));
+                .by_id(*wid)
+                .map(|a| (**a).clone())
+                .ok_or_else(|| anyhow!("input '{name}' has no current value"))?;
+            inputs.push((name.clone(), vec![av]));
         }
         let snapshot = Snapshot::new(inputs, self.plat.now);
         self.fire_snapshot(task, snapshot)

@@ -30,10 +30,11 @@ use crate::spec::PipelineSpec;
 use crate::storage::{PurgePolicy, StorageConfig};
 use crate::task::builtins::PassThrough;
 use crate::task::{RunOutcome, TaskAgent, UserCode};
-use crate::util::{AvId, LinkId, ObjectId, RegionId, SimDuration, SimTime, TaskId};
+use crate::util::{AvId, LinkId, ObjectId, RegionId, SimDuration, SimTime, TaskId, WireId};
 use anyhow::{anyhow, bail, Result};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::sync::Arc;
 
 /// Sentinel source id for externally injected data (file drops, sensors).
 pub const EXTERNAL: TaskId = TaskId(u64::MAX);
@@ -74,16 +75,19 @@ impl Default for DeployConfig {
 
 #[derive(Debug)]
 enum EventKind {
-    // AV boxed so heap sift operations move 24 bytes, not 140 (§Perf:
-    // BinaryHeap::pop was 11% of the hot path with inline AVs).
-    Deliver { link: usize, av: Box<AnnotatedValue> },
+    // AV behind an Arc so heap sift operations move 24 bytes, not 140
+    // (§Perf: BinaryHeap::pop was 11% of the hot path with inline AVs) —
+    // and, unlike the former Box, a publication fanning out to N consumers
+    // mints ONE allocation shared by every Deliver event, the tap
+    // observation and the wire-currency slot (N+2 deep clones before).
+    Deliver { link: u32, av: Arc<AnnotatedValue> },
     Wake { task: TaskId },
     Poll { task: TaskId },
     ScaleSweep,
     /// Breadboard tap observation, routed through the queue so samples
     /// land in virtual-time order even for future-dated publications.
-    /// Only ever pushed while at least one tap is attached.
-    TapObserve { wire: String, av: Box<AnnotatedValue> },
+    /// Only ever pushed while at least one tap watches this wire.
+    TapObserve { wire: WireId, av: Arc<AnnotatedValue> },
 }
 
 struct Ev {
@@ -117,6 +121,130 @@ pub struct Collected {
     pub payload: Payload,
 }
 
+/// Sink-wire captures, stored densely per interned [`WireId`] (§Perf) with
+/// the `HashMap<String, _>`-shaped read API (`get`, `[..]` indexing,
+/// `iter`) preserved for examples, tests and the CLI — name resolution
+/// happens only on those cold read paths, never when the event loop
+/// collects an artifact.
+#[derive(Default)]
+pub struct SinkBook {
+    names: Arc<Vec<String>>,
+    per_wire: Vec<Vec<Collected>>,
+    /// Captures published under names outside the deploy-time wire table
+    /// (user code emitting an undeclared wire, e.g. the default
+    /// pass-through's "void" on an output-less task). Cold path only.
+    extra: HashMap<String, Vec<Collected>>,
+}
+
+impl SinkBook {
+    fn bound(names: Arc<Vec<String>>) -> Self {
+        let per_wire = (0..names.len()).map(|_| Vec::new()).collect();
+        Self { names, per_wire, extra: HashMap::new() }
+    }
+
+    #[inline]
+    fn push(&mut self, wire: WireId, rec: Collected) {
+        self.per_wire[wire.index()].push(rec);
+    }
+
+    fn push_extra(&mut self, name: &str, rec: Collected) {
+        self.extra.entry(name.to_string()).or_default().push(rec);
+    }
+
+    /// Captures on `wire`, or None when nothing was collected there
+    /// (matching the former `HashMap::get` contract). Interned wires land
+    /// in the dense store; `extra` only ever holds names outside the wire
+    /// table, but fall through regardless so no record can hide.
+    pub fn get(&self, wire: &str) -> Option<&Vec<Collected>> {
+        match self.names.iter().position(|n| n == wire) {
+            Some(i) if !self.per_wire[i].is_empty() => Some(&self.per_wire[i]),
+            _ => self.extra.get(wire),
+        }
+    }
+
+    /// (wire name, captures) for every wire that collected something.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Vec<Collected>)> {
+        self.names
+            .iter()
+            .zip(&self.per_wire)
+            .filter(|(_, v)| !v.is_empty())
+            .map(|(n, v)| (n.as_str(), v))
+            .chain(self.extra.iter().map(|(n, v)| (n.as_str(), v)))
+    }
+}
+
+impl<'a> std::ops::Index<&'a str> for SinkBook {
+    type Output = Vec<Collected>;
+    fn index(&self, wire: &str) -> &Vec<Collected> {
+        match self.get(wire) {
+            Some(v) => v,
+            None => panic!("no collected artifacts on wire '{wire}'"),
+        }
+    }
+}
+
+/// Latest AV per wire (make-mode inputs; ghost-routing audit), stored as
+/// one dense `Arc` slot per interned wire: the hot path bumps a refcount
+/// instead of hashing a name and deep-cloning the AV (§Perf). The
+/// string-keyed `get` stays for the cold readers (baselines, demand entry).
+#[derive(Default)]
+pub struct WireCurrency {
+    names: Arc<Vec<String>>,
+    slots: Vec<Option<Arc<AnnotatedValue>>>,
+}
+
+impl WireCurrency {
+    fn bound(names: Arc<Vec<String>>) -> Self {
+        let slots = vec![None; names.len()];
+        Self { names, slots }
+    }
+
+    /// Name-resolving read (cold paths).
+    pub fn get(&self, wire: &str) -> Option<&AnnotatedValue> {
+        let i = self.names.iter().position(|n| n == wire)?;
+        self.slots[i].as_deref()
+    }
+
+    /// Dense read by interned id (hot paths). Out-of-range ids (from a
+    /// different coordinator's table) read as None rather than panicking.
+    #[inline]
+    pub fn by_id(&self, wire: WireId) -> Option<&Arc<AnnotatedValue>> {
+        self.slots.get(wire.index())?.as_ref()
+    }
+
+    #[inline]
+    fn set(&mut self, wire: WireId, av: Arc<AnnotatedValue>) {
+        self.slots[wire.index()] = Some(av);
+    }
+}
+
+/// Per-task output slot: one interned wire plus the consumer links fanning
+/// out from it. `links` empty ⇒ the wire is a sink for this producer.
+struct OutSlot {
+    /// Output name as spec'd — the resolution target for user-code
+    /// [`Output`]s (tasks emit names; everything downstream routes on id).
+    name: Box<str>,
+    wire: WireId,
+    links: Vec<u32>,
+}
+
+/// Where a published Output goes, resolved once per publication.
+#[derive(Clone, Copy)]
+enum RouteTarget<'a> {
+    /// One of the producer's declared output slots (the normal case).
+    Slot(usize),
+    /// A wire in the deploy-time table that this producer did not declare
+    /// (user code emitting another task's wire name): a phantom sink —
+    /// taps, currency and dense capture still apply; no consumer links.
+    Wire(WireId),
+    /// A name outside the wire table entirely (custom user code emitting
+    /// a name the spec never mentions; the "void" fallback of output-less
+    /// tasks IS interned at build). Captured in the sink book's overflow
+    /// map only — deliberately no wire currency, no taps, no memoization
+    /// (per-wire state is dense and sized at deploy): cold path.
+    Name(&'a str),
+}
+
 /// The deployed pipeline.
 pub struct Coordinator {
     pub graph: PipelineGraph,
@@ -125,10 +253,10 @@ pub struct Coordinator {
     pub plat: Platform,
     queue: BinaryHeap<Reverse<Ev>>,
     seq: u64,
-    /// Sink-wire captures, keyed by wire name.
-    pub collected: HashMap<String, Vec<Collected>>,
+    /// Sink-wire captures, dense per wire (string-keyed reads preserved).
+    pub collected: SinkBook,
     /// Latest AV seen per wire (make-mode inputs; ghost-routing audit).
-    pub latest_on_wire: HashMap<String, AnnotatedValue>,
+    pub latest_on_wire: WireCurrency,
     /// Tasks with an outstanding Poll event (avoid duplicates).
     polls_pending: HashSet<TaskId>,
     /// Last arrival per polling task (to let idle polls wind down).
@@ -141,13 +269,13 @@ pub struct Coordinator {
     // ---- hot-path adjacency (precomputed at deploy; see §Perf) ----
     /// link indices delivering into each task
     in_links: Vec<Vec<usize>>,
-    /// per task: (output wire, link indices carrying it)
-    out_links: Vec<Vec<(String, Vec<usize>)>>,
+    /// per task: output slots (interned wire → consumer link indices)
+    out_links: Vec<Vec<OutSlot>>,
     /// per link: position of the consumer's input buffer in its engine
     link_buffer: Vec<usize>,
     /// Breadboard wire taps (§III-H). Dispatch is guarded by a single
-    /// `is_empty()` branch, so an untapped pipeline pays nothing — see
-    /// benches/tap_overhead.rs.
+    /// `is_empty()` branch plus a dense per-wire mask, so an untapped
+    /// pipeline pays nothing — see benches/tap_overhead.rs.
     pub taps: TapBoard,
 }
 
@@ -257,16 +385,22 @@ impl Coordinator {
 
         // §Perf: precompute adjacency so the event loop never scans the
         // global link list (was O(links) per delivery/pull/publish).
+        // Output slots carry the interned WireId: one name resolution per
+        // published Output, dense id routing everywhere after.
         let mut in_links: Vec<Vec<usize>> = vec![vec![]; graph.n_tasks()];
-        let mut out_links: Vec<Vec<(String, Vec<usize>)>> = vec![vec![]; graph.n_tasks()];
+        let mut out_links: Vec<Vec<OutSlot>> = (0..graph.n_tasks()).map(|_| vec![]).collect();
         let mut link_buffer = Vec::with_capacity(graph.links.len());
         for (li, l) in graph.links.iter().enumerate() {
             in_links[l.to.index()].push(li);
             if let Some(from) = l.from {
                 let slots = &mut out_links[from.index()];
-                match slots.iter_mut().find(|(w, _)| *w == l.wire) {
-                    Some((_, v)) => v.push(li),
-                    None => slots.push((l.wire.clone(), vec![li])),
+                match slots.iter_mut().find(|s| s.wire == l.wire_id) {
+                    Some(s) => s.links.push(li as u32),
+                    None => slots.push(OutSlot {
+                        name: l.wire.clone().into_boxed_str(),
+                        wire: l.wire_id,
+                        links: vec![li as u32],
+                    }),
                 }
             }
             let buf_idx = agents[l.to.index()]
@@ -280,11 +414,20 @@ impl Coordinator {
         // sink wires get an (empty) slot so route_output can distinguish
         for (ti, t) in graph.tasks.iter().enumerate() {
             for w in &t.outputs {
-                if !out_links[ti].iter().any(|(ww, _)| ww == w) {
-                    out_links[ti].push((w.clone(), vec![]));
+                let wid = graph.wires.id(w).expect("task outputs are interned at build");
+                if !out_links[ti].iter().any(|s| s.wire == wid) {
+                    out_links[ti].push(OutSlot {
+                        name: w.clone().into_boxed_str(),
+                        wire: wid,
+                        links: vec![],
+                    });
                 }
             }
         }
+
+        // one shared copy of the interned names for every dense per-wire
+        // structure (sink book, wire currency, tap mask)
+        let wire_names: Arc<Vec<String>> = Arc::new(graph.wires.names().to_vec());
 
         Ok(Self {
             graph,
@@ -293,8 +436,8 @@ impl Coordinator {
             plat,
             queue: BinaryHeap::new(),
             seq: 0,
-            collected: HashMap::new(),
-            latest_on_wire: HashMap::new(),
+            collected: SinkBook::bound(Arc::clone(&wire_names)),
+            latest_on_wire: WireCurrency::bound(Arc::clone(&wire_names)),
             polls_pending: HashSet::new(),
             last_arrival: HashMap::new(),
             events_processed: 0,
@@ -303,7 +446,7 @@ impl Coordinator {
             in_links,
             out_links,
             link_buffer,
-            taps: TapBoard::default(),
+            taps: TapBoard::bound(wire_names),
         })
     }
 
@@ -341,7 +484,8 @@ impl Coordinator {
 
     /// Inject external data onto a wire at `at` (≥ now), in `region`.
     /// Reactive mode: deliveries are scheduled and downstream computation
-    /// cascades on `run_until`.
+    /// cascades on `run_until`. Thin name→id wrapper over
+    /// [`Coordinator::inject_at_id`]; unknown wire names error cleanly.
     pub fn inject_at(
         &mut self,
         wire: &str,
@@ -350,9 +494,43 @@ impl Coordinator {
         region: RegionId,
         at: SimTime,
     ) -> Result<AvId> {
-        let n_inj = self.graph.injection_links(wire).count();
-        if n_inj == 0 {
-            bail!("wire '{wire}' has no injection point (a task produces it)");
+        let wid = self.wire_id(wire)?;
+        self.inject_at_id(wid, payload, class, region, at)
+    }
+
+    /// Resolve a wire name against the deploy-time intern table.
+    pub fn wire_id(&self, wire: &str) -> Result<WireId> {
+        self.graph
+            .wires
+            .id(wire)
+            .ok_or_else(|| anyhow!("no wire '{wire}' in pipeline [{}]", self.graph.name))
+    }
+
+    /// Id-based injection — the hot path: no name hashing, no link-list
+    /// scan (injection fan-out is precomputed per wire), and one shared
+    /// `Arc` across every consumer delivery, the tap observation and the
+    /// wire-currency slot (§Perf).
+    pub fn inject_at_id(
+        &mut self,
+        wire: WireId,
+        payload: Payload,
+        class: DataClass,
+        region: RegionId,
+        at: SimTime,
+    ) -> Result<AvId> {
+        if wire.index() >= self.graph.wires.len() {
+            bail!(
+                "{wire} is out of range for pipeline [{}] ({} wires) — ids are only \
+                 valid for the coordinator whose wire table minted them",
+                self.graph.name,
+                self.graph.wires.len()
+            );
+        }
+        if self.graph.wires.injections(wire).is_empty() {
+            bail!(
+                "wire '{}' has no injection point (a task produces it)",
+                self.graph.wires.name(wire)
+            );
         }
         let born = at;
         let saved_now = self.plat.now;
@@ -365,33 +543,33 @@ impl Coordinator {
         // these records + the deployment seed (§III-J reconstruction)
         self.plat.prov.record_injection(crate::provenance::InjectionRecord {
             av: av.id,
-            wire: wire.to_string(),
+            wire: self.graph.wires.name(wire).to_string(),
             at,
             region,
             class,
             object: av.object,
             content: av.content,
         });
+        let av = Arc::new(av);
         // breadboard probe point: injected values appear on the wire once
         // (fan-out links would otherwise observe them per consumer), at
         // their virtual arrival time (via the queue, not immediately).
-        // `watches` is wire-precise, so untapped wires never allocate.
+        // `watches` is a dense mask, so untapped wires never allocate.
         if self.taps.watches(wire) {
-            self.push_event(
-                at,
-                EventKind::TapObserve { wire: wire.to_string(), av: Box::new(av.clone()) },
-            );
+            self.push_event(at, EventKind::TapObserve { wire, av: Arc::clone(&av) });
         }
         // Only immediately-visible injections update wire currency now;
         // future-dated arrivals become current when delivered (otherwise a
         // schedule-driven consumer could see data "from the future").
         if at <= self.plat.now {
-            self.latest_on_wire.insert(wire.to_string(), av.clone());
+            self.latest_on_wire.set(wire, Arc::clone(&av));
         }
-        let link_idxs: Vec<usize> =
-            self.graph.injection_links(wire).map(|l| l.id.index()).collect();
-        for li in link_idxs {
-            self.push_event(at, EventKind::Deliver { link: li, av: Box::new(av.clone()) });
+        for k in 0..self.graph.wires.injections(wire).len() {
+            let li = self.graph.wires.injections(wire)[k];
+            self.push_event(
+                at,
+                EventKind::Deliver { link: li.index() as u32, av: Arc::clone(&av) },
+            );
         }
         Ok(av.id)
     }
@@ -477,7 +655,7 @@ impl Coordinator {
 
     fn dispatch(&mut self, kind: EventKind) {
         match kind {
-            EventKind::Deliver { link, av } => self.on_deliver(link, *av),
+            EventKind::Deliver { link, av } => self.on_deliver(link as usize, av),
             EventKind::Wake { task } => self.on_wake(task),
             EventKind::Poll { task } => self.on_poll(task),
             EventKind::ScaleSweep => {
@@ -489,15 +667,17 @@ impl Coordinator {
                 }
             }
             EventKind::TapObserve { wire, av } => {
-                self.taps.observe(&wire, &av, &self.plat.store, self.plat.now);
+                self.taps.observe(wire, &av, &self.plat.store, self.plat.now);
             }
         }
     }
 
-    fn on_deliver(&mut self, link_idx: usize, av: AnnotatedValue) {
+    fn on_deliver(&mut self, link_idx: usize, av: Arc<AnnotatedValue>) {
         let task = self.links[link_idx].link.to;
-        let av_for_currency = av.clone();
-        let verdict = self.links[link_idx].deliver(&mut self.plat, av);
+        // the verdict is decided on the shared Arc; only a successful
+        // delivery pays clones (inside the link, for bus + history), and a
+        // denied one pays none at all (§Perf)
+        let verdict = self.links[link_idx].deliver(&mut self.plat, &av);
         match verdict {
             Delivery::Denied => {}
             Delivery::NotifyNow => {
@@ -514,15 +694,10 @@ impl Coordinator {
             }
         }
         if verdict != Delivery::Denied {
-            // a successful delivery makes this AV the wire's current value
-            let wire = &self.links[link_idx].link.wire;
-            match self.latest_on_wire.get_mut(wire) {
-                Some(slot) => *slot = av_for_currency,
-                None => {
-                    let key = wire.clone();
-                    self.latest_on_wire.insert(key, av_for_currency);
-                }
-            }
+            // a successful delivery makes this AV the wire's current value:
+            // move the event's Arc into the dense slot — no clone, no hash
+            let wire = self.links[link_idx].link.wire_id;
+            self.latest_on_wire.set(wire, av);
         }
     }
 
@@ -650,19 +825,37 @@ impl Coordinator {
             RunOutcome::Ran { run, outputs, cost, ghost } => {
                 let publish_at = self.plat.now + cold + cost;
                 let mut memo_rec = Vec::new();
+                // a run is memoizable only if every output resolves to an
+                // interned wire — a partial memo would silently drop the
+                // unresolved outputs on replay
+                let mut memoizable = true;
                 for out in outputs {
                     let region = self.agents[task.index()].region;
                     let version = self.agents[task.index()].version();
                     let seq = self.agents[task.index()].out_seq;
                     self.agents[task.index()].out_seq += 1;
+                    // the single name→id resolution for this publication:
+                    // user code emits names, everything downstream routes
+                    // on the target's interned WireId (§Perf)
+                    let slot = self.out_links[task.index()]
+                        .iter()
+                        .position(|s| *s.name == *out.wire);
+                    let target = match slot {
+                        Some(si) => RouteTarget::Slot(si),
+                        None => match self.graph.wires.id(&out.wire) {
+                            Some(w) => RouteTarget::Wire(w),
+                            None => RouteTarget::Name(&out.wire),
+                        },
+                    };
                     // sink outputs keep a payload copy for `collected`;
                     // internal wires don't — consumers fetch from storage
                     // (§Perf: saves one payload clone per internal hop)
-                    let is_sink = self.out_links[task.index()]
-                        .iter()
-                        .find(|(w, _)| w.as_str() == &*out.wire)
-                        .map(|(_, v)| v.is_empty())
-                        .unwrap_or(true);
+                    let is_sink = match target {
+                        RouteTarget::Slot(si) => {
+                            self.out_links[task.index()][si].links.is_empty()
+                        }
+                        _ => true,
+                    };
                     let sink_payload = if is_sink { Some(out.payload.clone()) } else { None };
                     let saved = self.plat.now;
                     self.plat.now = publish_at;
@@ -686,24 +879,46 @@ impl Coordinator {
                         CheckpointEvent::Emit { av: av.id },
                     );
                     if !ghost {
-                        memo_rec.push((
-                            out.wire.to_string(),
-                            av.object,
-                            av.content,
-                            av.size_bytes,
-                            av.class,
-                        ));
+                        match target {
+                            RouteTarget::Slot(si) => memo_rec.push((
+                                self.out_links[task.index()][si].wire,
+                                av.object,
+                                av.content,
+                                av.size_bytes,
+                                av.class,
+                            )),
+                            RouteTarget::Wire(w) => memo_rec.push((
+                                w,
+                                av.object,
+                                av.content,
+                                av.size_bytes,
+                                av.class,
+                            )),
+                            RouteTarget::Name(_) => memoizable = false,
+                        }
                     }
-                    self.route_output(&out.wire, av, sink_payload, publish_at);
+                    self.route_output(task, target, Arc::new(av), sink_payload, publish_at);
                 }
-                if !ghost && !memo_rec.is_empty() {
+                if !ghost && memoizable && !memo_rec.is_empty() {
                     self.agents[task.index()].memoize(recipe, memo_rec);
                 }
             }
             RunOutcome::Memoized { outputs } => {
                 // Reuse cached objects: fresh AVs, no compute, no new bytes.
+                // Memo entries carry interned WireIds, so replaying a hit
+                // never touches a wire name (§Perf).
                 let publish_at = self.plat.now + cold + SimDuration::micros(30);
                 for (wire, object, content, size, class) in outputs {
+                    // every memo entry carries an interned wire: either one
+                    // of this producer's slots or a phantom-sink wire
+                    let target = match self
+                        .out_links[task.index()]
+                        .iter()
+                        .position(|s| s.wire == wire)
+                    {
+                        Some(si) => RouteTarget::Slot(si),
+                        None => RouteTarget::Wire(wire),
+                    };
                     let region = self.agents[task.index()].region;
                     let seq = self.agents[task.index()].out_seq;
                     self.agents[task.index()].out_seq += 1;
@@ -735,77 +950,81 @@ impl Coordinator {
                         },
                     );
                     self.plat.prov.register_object(id, object, size);
-                    self.route_output(&wire, av, None, publish_at);
+                    self.route_output(task, target, Arc::new(av), None, publish_at);
                 }
             }
         }
         Ok(())
     }
 
-    /// Send one produced AV down every link of its wire; sink wires are
-    /// captured instead.
+    /// Resolve a sink payload: the caller's copy if provided, else fetch
+    /// from storage (memoized/ghost paths pass None).
+    fn sink_payload_for(&self, av: &AnnotatedValue, sink_payload: Option<Payload>) -> Payload {
+        sink_payload.unwrap_or_else(|| {
+            self.plat
+                .store
+                .peek(av.object)
+                .map(|o| o.payload.clone())
+                .unwrap_or(Payload::Ghost { pretend_bytes: av.size_bytes })
+        })
+    }
+
+    /// Send one produced AV down every link of its route target; sink
+    /// wires are captured instead. The publication's `Arc` is shared by
+    /// the tap observation, the wire-currency slot and every consumer
+    /// `Deliver` event: an N-consumer wire costs one allocation, not N+2
+    /// deep clones (§Perf). See [`RouteTarget`] for the three cases.
     fn route_output(
         &mut self,
-        wire: &str,
-        av: AnnotatedValue,
+        from: TaskId,
+        target: RouteTarget<'_>,
+        av: Arc<AnnotatedValue>,
         sink_payload: Option<Payload>,
         at: SimTime,
     ) {
+        let (wire, slot) = match target {
+            RouteTarget::Slot(si) => (self.out_links[from.index()][si].wire, Some(si)),
+            RouteTarget::Wire(w) => (w, None),
+            RouteTarget::Name(name) => {
+                // outside the wire table: capture in the overflow map
+                self.plat.metrics.e2e(av.born, at);
+                let payload = self.sink_payload_for(&av, sink_payload);
+                let rec = Collected { at, av: (*av).clone(), payload };
+                self.collected.push_extra(name, rec);
+                return;
+            }
+        };
         // breadboard probe point: one observation per value published on
         // the wire, regardless of consumer fan-out, stamped at publish
         // time through the queue so rings stay time-ordered. `watches` is
-        // a single is_empty branch with no taps attached, and wire-precise
-        // with them — untapped wires never pay the event/clone (§Perf).
+        // one branch plus a dense mask load — untapped wires never pay
+        // the event (§Perf).
         if self.taps.watches(wire) {
-            self.push_event(
-                at,
-                EventKind::TapObserve { wire: wire.to_string(), av: Box::new(av.clone()) },
-            );
+            self.push_event(at, EventKind::TapObserve { wire, av: Arc::clone(&av) });
         }
-        // no-alloc steady state: only the first artifact per wire allocates
-        match self.latest_on_wire.get_mut(wire) {
-            Some(slot) => *slot = av.clone(),
-            None => {
-                self.latest_on_wire.insert(wire.to_string(), av.clone());
-            }
-        }
-        let from = av.source_task;
-        let empty: Vec<usize> = vec![];
-        let link_idxs: &Vec<usize> = if from == EXTERNAL {
-            &empty
-        } else {
-            self.out_links[from.index()]
-                .iter()
-                .find(|(w, _)| w == wire)
-                .map(|(_, v)| v)
-                .unwrap_or(&empty)
+        // dense currency slot: refcount bump, no hash, no deep clone
+        self.latest_on_wire.set(wire, Arc::clone(&av));
+        let n_links = match slot {
+            Some(si) => self.out_links[from.index()][si].links.len(),
+            None => 0, // phantom sink: this producer declared no consumers
         };
-        if link_idxs.is_empty() {
+        if n_links == 0 {
             self.plat.metrics.e2e(av.born, at);
-            // memoized/ghost paths pass None; resolve from storage
-            let payload = sink_payload.unwrap_or_else(|| {
-                self.plat
-                    .store
-                    .peek(av.object)
-                    .map(|o| o.payload.clone())
-                    .unwrap_or(Payload::Ghost { pretend_bytes: av.size_bytes })
-            });
-            let rec = Collected { at, av, payload };
-            match self.collected.get_mut(wire) {
-                Some(v) => v.push(rec),
-                None => {
-                    self.collected.insert(wire.to_string(), vec![rec]);
-                }
-            }
+            let payload = self.sink_payload_for(&av, sink_payload);
+            let rec = Collected { at, av: (*av).clone(), payload };
+            self.collected.push(wire, rec);
             return;
         }
         if self.suppress_routing {
             // make mode: demand drives execution order; no reactive cascade
             return;
         }
-        let link_idxs = link_idxs.clone();
-        for li in link_idxs {
-            self.push_event(at, EventKind::Deliver { link: li, av: Box::new(av.clone()) });
+        let si = slot.expect("n_links > 0 only for slot targets");
+        // iterate by index: the steady state allocates nothing (the former
+        // `link_idxs.clone()` paid a Vec per publication)
+        for k in 0..n_links {
+            let li = self.out_links[from.index()][si].links[k];
+            self.push_event(at, EventKind::Deliver { link: li, av: Arc::clone(&av) });
         }
     }
 

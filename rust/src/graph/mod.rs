@@ -10,7 +10,7 @@
 //! make-mode scheduler treats them with a visited set.
 
 use crate::spec::{PipelineSpec, TaskSpec};
-use crate::util::{LinkId, TaskId};
+use crate::util::{LinkId, TaskId, WireId};
 use std::collections::{HashMap, HashSet};
 
 /// One wire segment between a producer port and a consumer port.
@@ -19,6 +19,8 @@ pub struct Link {
     pub id: LinkId,
     /// Wire name (the label in the fig. 5 diagram).
     pub wire: String,
+    /// Interned wire id (§Perf) — what the coordinator routes on.
+    pub wire_id: WireId,
     /// Producing task, or None for external injection.
     pub from: Option<TaskId>,
     /// Consuming task.
@@ -27,12 +29,73 @@ pub struct Link {
     pub to_input: String,
 }
 
+/// Deploy-time wire interner (§Perf): every wire name in the spec gets a
+/// dense [`WireId`] so per-wire state (currency, sink captures, tap masks,
+/// injection fan-out) lives in `Vec`s indexed by id instead of
+/// `HashMap<String, _>`s hashed per event. Built once in
+/// [`PipelineGraph::build`]; immutable afterwards.
+#[derive(Clone, Debug, Default)]
+pub struct WireTable {
+    names: Vec<String>,
+    by_name: HashMap<String, WireId>,
+    /// Tasks listing the wire among their outputs (make-mode demand walks).
+    producers: Vec<Vec<TaskId>>,
+    /// Injection links (`from == None`) carrying the wire — the external
+    /// in-tray fan-out, precomputed so `inject` never scans the link list.
+    injections: Vec<Vec<LinkId>>,
+}
+
+impl WireTable {
+    fn intern(&mut self, name: &str) -> WireId {
+        if let Some(&id) = self.by_name.get(name) {
+            return id;
+        }
+        let id = WireId::new(self.names.len() as u32);
+        self.names.push(name.to_string());
+        self.by_name.insert(name.to_string(), id);
+        self.producers.push(Vec::new());
+        self.injections.push(Vec::new());
+        id
+    }
+
+    /// Resolve a wire name (the one string hash on any public entry path).
+    pub fn id(&self, name: &str) -> Option<WireId> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn name(&self, id: WireId) -> &str {
+        &self.names[id.index()]
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    pub fn producers(&self, id: WireId) -> &[TaskId] {
+        &self.producers[id.index()]
+    }
+
+    pub fn injections(&self, id: WireId) -> &[LinkId] {
+        &self.injections[id.index()]
+    }
+}
+
 /// The compiled topology.
 #[derive(Clone, Debug, Default)]
 pub struct PipelineGraph {
     pub name: String,
     pub tasks: Vec<TaskSpec>,
     pub links: Vec<Link>,
+    /// Interned wire names + per-wire adjacency (§Perf).
+    pub wires: WireTable,
     by_name: HashMap<String, TaskId>,
 }
 
@@ -45,40 +108,64 @@ impl PipelineGraph {
             .enumerate()
             .map(|(i, t)| (t.name.clone(), TaskId::new(i as u64)))
             .collect();
-        // producers per wire
-        let mut producers: HashMap<&str, Vec<TaskId>> = HashMap::new();
+        // wire table: outputs then stream inputs, spec order (deterministic)
+        let mut wires = WireTable::default();
         for t in &spec.tasks {
             for w in &t.outputs {
-                producers.entry(w.as_str()).or_default().push(by_name[&t.name]);
+                let wid = wires.intern(w);
+                let tid = by_name[&t.name];
+                if !wires.producers[wid.index()].contains(&tid) {
+                    wires.producers[wid.index()].push(tid);
+                }
             }
+        }
+        for t in &spec.tasks {
+            for i in t.stream_inputs() {
+                wires.intern(&i.wire);
+            }
+        }
+        // output-less tasks run the default pass-through, which publishes
+        // under the "void" fallback name (coordinator deploy): intern it
+        // so those publications stay on the dense first-class path
+        // (currency, taps, memoization) instead of the overflow map
+        if spec.tasks.iter().any(|t| t.outputs.is_empty()) {
+            wires.intern("void");
         }
         let mut links = Vec::new();
         for t in &spec.tasks {
             let to = by_name[&t.name];
             for i in t.stream_inputs() {
-                match producers.get(i.wire.as_str()) {
-                    Some(ps) => {
-                        for &from in ps {
-                            links.push(Link {
-                                id: LinkId::new(links.len() as u64),
-                                wire: i.wire.clone(),
-                                from: Some(from),
-                                to,
-                                to_input: i.wire.clone(),
-                            });
-                        }
-                    }
-                    None => links.push(Link {
+                let wire_id = wires.id(&i.wire).expect("stream inputs are interned above");
+                let producers = wires.producers(wire_id);
+                if producers.is_empty() {
+                    links.push(Link {
                         id: LinkId::new(links.len() as u64),
                         wire: i.wire.clone(),
+                        wire_id,
                         from: None,
                         to,
                         to_input: i.wire.clone(),
-                    }),
+                    });
+                } else {
+                    for &from in producers {
+                        links.push(Link {
+                            id: LinkId::new(links.len() as u64),
+                            wire: i.wire.clone(),
+                            wire_id,
+                            from: Some(from),
+                            to,
+                            to_input: i.wire.clone(),
+                        });
+                    }
                 }
             }
         }
-        Self { name: spec.name.clone(), tasks: spec.tasks.clone(), links, by_name }
+        for l in &links {
+            if l.from.is_none() {
+                wires.injections[l.wire_id.index()].push(l.id);
+            }
+        }
+        Self { name: spec.name.clone(), tasks: spec.tasks.clone(), links, wires, by_name }
     }
 
     pub fn task_id(&self, name: &str) -> Option<TaskId> {
@@ -103,9 +190,12 @@ impl PipelineGraph {
         self.links.iter().filter(move |l| l.from == Some(task))
     }
 
-    /// Links fed by external injection on `wire`.
+    /// Links fed by external injection on `wire` (precomputed per wire —
+    /// no link-list scan).
     pub fn injection_links<'a>(&'a self, wire: &'a str) -> impl Iterator<Item = &'a Link> + 'a {
-        self.links.iter().filter(move |l| l.from.is_none() && l.wire == wire)
+        const NONE: &[LinkId] = &[];
+        let ids = self.wires.id(wire).map(|w| self.wires.injections(w)).unwrap_or(NONE);
+        ids.iter().map(move |l| &self.links[l.index()])
     }
 
     /// Upstream task dependencies of `task` (producers of its inputs).
@@ -284,6 +374,33 @@ mod tests {
     #[test]
     fn acyclic_graph_reports_no_cycles() {
         assert!(linear().cyclic_tasks().is_empty());
+    }
+
+    #[test]
+    fn wire_table_interns_every_wire_once() {
+        let g = PipelineGraph::build(
+            &parse("[w]\n(raw) src (x)\n(x) c1 (y1)\n(x) c2 (y2)\n").unwrap(),
+        );
+        // outputs x, y1, y2 + external input raw = 4 distinct wires
+        assert_eq!(g.wires.len(), 4);
+        for name in ["raw", "x", "y1", "y2"] {
+            let id = g.wires.id(name).unwrap();
+            assert_eq!(g.wires.name(id), name, "id↔name roundtrip");
+        }
+        assert!(g.wires.id("nope").is_none());
+        // every link carries the id its name interns to
+        for l in &g.links {
+            assert_eq!(g.wires.id(&l.wire), Some(l.wire_id));
+        }
+        // producers: src makes x; nothing makes raw (external in-tray)
+        let x = g.wires.id("x").unwrap();
+        assert_eq!(g.wires.producers(x), &[g.task_id("src").unwrap()]);
+        let raw = g.wires.id("raw").unwrap();
+        assert!(g.wires.producers(raw).is_empty());
+        // injection links precomputed per wire match the scan-free iterator
+        assert_eq!(g.wires.injections(raw).len(), 1);
+        assert_eq!(g.injection_links("raw").count(), 1);
+        assert!(g.wires.injections(x).is_empty());
     }
 
     #[test]

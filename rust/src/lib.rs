@@ -54,5 +54,5 @@ pub mod prelude {
     pub use crate::storage::{PurgePolicy, StorageConfig};
     pub use crate::task::builtins::*;
     pub use crate::task::{Output, TaskCtx, UserCode};
-    pub use crate::util::{rng, RegionId, SimDuration, SimTime};
+    pub use crate::util::{rng, RegionId, SimDuration, SimTime, WireId};
 }

@@ -60,7 +60,12 @@ impl LinkAgent {
     /// move here — the consumer's fetch pays the transfer on first touch
     /// (and its local cache absorbs repeats, Principle 2). What must be
     /// decided *now* is legality: raw data may not cross zones.
-    pub fn deliver(&mut self, plat: &mut Platform, mut av: AnnotatedValue) -> Delivery {
+    ///
+    /// Takes the AV by reference so the verdict is decided before any copy
+    /// is made: a denied delivery pays zero clones (§Perf), and the
+    /// publication's shared `Arc` in the event queue stays untouched — the
+    /// link stamps its id only on its own bus/history copies.
+    pub fn deliver(&mut self, plat: &mut Platform, av: &AnnotatedValue) -> Delivery {
         use crate::net::TransferVerdict;
         match plat.net.check(av.class, av.region, self.consumer_region) {
             TransferVerdict::Denied => {
@@ -74,6 +79,7 @@ impl LinkAgent {
                 Delivery::Denied
             }
             _ => {
+                let mut av = av.clone();
                 av.link = self.link.id;
                 plat.prov.stamp(av.id, plat.now, Stamp::Published { link: self.link.id });
                 plat.bus.publish(self.link.id, av.clone());
@@ -132,6 +138,7 @@ mod tests {
             Link {
                 id: LinkId::new(0),
                 wire: "x".into(),
+                wire_id: WireId::new(0),
                 from: Some(TaskId::new(0)),
                 to: TaskId::new(1),
                 to_input: "x".into(),
@@ -163,7 +170,7 @@ mod tests {
         let mut p = plat();
         let mut l = agent(&p, NotifyMode::Push, "central");
         let av = mint(&mut p, DataClass::Summary, "central");
-        assert_eq!(l.deliver(&mut p, av), Delivery::NotifyNow);
+        assert_eq!(l.deliver(&mut p, &av), Delivery::NotifyNow);
         assert_eq!(p.bus.depth(LinkId::new(0)), 1);
         assert_eq!(p.metrics.notifications_sent, 1);
         assert_eq!(l.history_len(), 1);
@@ -174,7 +181,7 @@ mod tests {
         let mut p = plat();
         let mut l = agent(&p, NotifyMode::Poll(SimDuration::millis(5)), "central");
         let av = mint(&mut p, DataClass::Summary, "central");
-        assert_eq!(l.deliver(&mut p, av), Delivery::Queued);
+        assert_eq!(l.deliver(&mut p, &av), Delivery::Queued);
         assert_eq!(p.metrics.notifications_sent, 0);
     }
 
@@ -185,7 +192,7 @@ mod tests {
         let mut l = agent(&p, NotifyMode::Push, "eu-dc");
         let av = mint(&mut p, DataClass::Raw, "edge-0");
         let id = av.id;
-        assert_eq!(l.deliver(&mut p, av), Delivery::Denied);
+        assert_eq!(l.deliver(&mut p, &av), Delivery::Denied);
         assert_eq!(p.bus.depth(LinkId::new(0)), 0, "nothing published");
         let pass = p.prov.passport(id).unwrap();
         assert!(pass
@@ -194,7 +201,7 @@ mod tests {
             .any(|s| matches!(s.stamp, Stamp::SovereigntyDenied { .. })));
         // ...but a summary may travel
         let av = mint(&mut p, DataClass::Summary, "edge-0");
-        assert_eq!(l.deliver(&mut p, av), Delivery::NotifyNow);
+        assert_eq!(l.deliver(&mut p, &av), Delivery::NotifyNow);
     }
 
     #[test]
@@ -203,7 +210,7 @@ mod tests {
         let mut l = agent(&p, NotifyMode::Push, "central");
         for _ in 0..3 {
             let av = mint(&mut p, DataClass::Summary, "central");
-            l.deliver(&mut p, av);
+            l.deliver(&mut p, &av);
         }
         // consume the originals
         while p.bus.consume(LinkId::new(0)).is_some() {}
@@ -219,7 +226,7 @@ mod tests {
         l.history_cap = 4;
         for _ in 0..10 {
             let av = mint(&mut p, DataClass::Summary, "central");
-            l.deliver(&mut p, av);
+            l.deliver(&mut p, &av);
         }
         assert_eq!(l.history_len(), 4);
     }

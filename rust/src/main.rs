@@ -146,7 +146,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
     coord.run_until_idle();
     println!("[{}] {} virtual seconds, ghost={}", spec.name, seconds, ghost);
     println!("{}", coord.plat.metrics.report());
-    for (wire, got) in &coord.collected {
+    for (wire, got) in coord.collected.iter() {
         println!("sink '{}': {} artifacts", wire, got.len());
     }
     Ok(())

@@ -23,7 +23,7 @@ use crate::provenance::{CheckpointEvent, Stamp};
 use crate::spec::TaskSpec;
 use crate::storage::{CacheManager, PurgePolicy};
 use crate::util::hash::FastMap;
-use crate::util::{ContentHash, ObjectId, RegionId, RunId, SimDuration, SimTime, TaskId};
+use crate::util::{ContentHash, ObjectId, RegionId, RunId, SimDuration, SimTime, TaskId, WireId};
 use anyhow::{anyhow, Result};
 
 /// One produced output: wire name, payload, sovereignty class.
@@ -191,14 +191,16 @@ pub enum RunOutcome {
     /// Executed user code (or routed a ghost batch).
     Ran { run: RunId, outputs: Vec<Output>, cost: SimDuration, ghost: bool },
     /// Memoized: identical recipe (inputs × version) already computed;
-    /// cached output objects are reused without running anything.
-    Memoized { outputs: Vec<(String, ObjectId, ContentHash, u64, DataClass)> },
+    /// cached output objects are reused without running anything. Outputs
+    /// carry the interned [`WireId`] (§Perf): replaying a memo hit routes
+    /// without touching a wire name at all.
+    Memoized { outputs: Vec<(WireId, ObjectId, ContentHash, u64, DataClass)> },
 }
 
-/// A memo entry: what a past run produced.
+/// A memo entry: what a past run produced, keyed by interned wire.
 #[derive(Clone, Debug)]
 struct MemoEntry {
-    outputs: Vec<(String, ObjectId, ContentHash, u64, DataClass)>,
+    outputs: Vec<(WireId, ObjectId, ContentHash, u64, DataClass)>,
 }
 
 /// One entry in a task's versioned code-slot history (§III-J): which
@@ -408,7 +410,7 @@ impl TaskAgent {
     pub fn memoize(
         &mut self,
         recipe: ContentHash,
-        outputs: Vec<(String, ObjectId, ContentHash, u64, DataClass)>,
+        outputs: Vec<(WireId, ObjectId, ContentHash, u64, DataClass)>,
     ) {
         const MEMO_CAP: usize = 1024;
         if self.memo.len() >= MEMO_CAP {
@@ -512,7 +514,7 @@ mod tests {
                 );
                 a.memoize(
                     recipe,
-                    vec![("y".into(), av.object, av.content, av.size_bytes, av.class)],
+                    vec![(WireId::new(0), av.object, av.content, av.size_bytes, av.class)],
                 );
             }
             _ => panic!(),
@@ -521,7 +523,7 @@ mod tests {
         let s2 = feed(&mut p, &mut a, 5.0);
         let runs_before = p.metrics.task_runs;
         match a.execute(&mut p, s2).unwrap() {
-            RunOutcome::Memoized { outputs } => assert_eq!(outputs[0].0, "y"),
+            RunOutcome::Memoized { outputs } => assert_eq!(outputs[0].0, WireId::new(0)),
             _ => panic!("expected memo hit"),
         }
         assert_eq!(p.metrics.task_runs, runs_before);

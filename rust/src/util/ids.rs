@@ -66,6 +66,30 @@ id_type!(
     "ws-"
 );
 
+/// An interned wire name: a dense `u32` index into the pipeline graph's
+/// wire table, assigned once at deploy time (`graph::PipelineGraph::build`).
+/// The coordinator's hot path — publication, delivery, tap checks, wire
+/// currency — routes on these instead of hashing/scanning `&str` names
+/// (§Perf). Deliberately `u32`, not `u64`: per-wire state is dense
+/// `Vec`-indexed, and a pipeline has at most a few thousand wires.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct WireId(pub u32);
+
+impl WireId {
+    pub const fn new(v: u32) -> Self {
+        Self(v)
+    }
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Display for WireId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "wire-{}", self.0)
+    }
+}
+
 /// Monotonic id dispenser, one per id space.
 #[derive(Debug, Default, Clone)]
 pub struct IdGen {

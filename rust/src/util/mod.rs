@@ -9,7 +9,7 @@ pub mod rng;
 pub mod time;
 
 pub use hash::{fnv1a, ContentHash};
-pub use ids::{AvId, IdGen, LinkId, ObjectId, RegionId, RunId, TaskId, WorkspaceId};
+pub use ids::{AvId, IdGen, LinkId, ObjectId, RegionId, RunId, TaskId, WireId, WorkspaceId};
 pub use json::Json;
 pub use rng::Rng;
 pub use time::{SimDuration, SimTime};

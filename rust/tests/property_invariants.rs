@@ -190,7 +190,7 @@ fn prop_every_output_traces_back_to_an_injection() {
         let sink = format!("w{depth}");
         assert_eq!(c.collected_count(&sink), n, "conservation: all arrivals emerge");
         let q = ProvenanceQuery::new(&c.plat.prov);
-        for col in &c.collected[&sink] {
+        for col in &c.collected[sink.as_str()] {
             let anc = q.ancestors(col.av.id);
             assert!(
                 anc.iter().any(|a| injected.contains(a)),
