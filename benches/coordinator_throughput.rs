@@ -15,6 +15,12 @@
 //! clone per consumer (N+2 allocations); every delivery then paid another
 //! unconditional AV clone before the sovereignty verdict.
 //!
+//! The inject-fanout / inject-batch pair measures the user-facing edge the
+//! handle API rides (`SourceHandle::inject` vs `::inject_batch`): both
+//! time injection + drain over the same arrivals, differing only in
+//! whether validation, tap checks, fan-out lookup and heap reservation are
+//! paid per event or per 64-payload batch.
+//!
 //! Each run appends the measurements to `BENCH_coordinator_throughput.json`
 //! (schema in `benchkit::write_json`) — the machine-readable perf
 //! trajectory. `ci.sh` archives the file per run and fails if the bench
@@ -31,8 +37,13 @@ enum Shape {
     Chain { depth: usize },
     /// One producer, one wire, `fanout` consumers (each with its own sink).
     Fanout { fanout: usize },
-    /// External injections fanning straight out to `fanout` consumers.
+    /// External injections fanning straight out to `fanout` consumers,
+    /// injected one event at a time (the unbatched comparator).
     InjectFanout { fanout: usize },
+    /// Same topology, injected through `inject_batch_at_id` in chunks of
+    /// `batch` — the amortized bulk edge the handle API's
+    /// `SourceHandle::inject_batch` rides.
+    InjectBatch { fanout: usize, batch: usize },
 }
 
 impl Shape {
@@ -50,7 +61,7 @@ impl Shape {
                     text.push_str(&format!("(x) leaf{i} (s{i})\n"));
                 }
             }
-            Shape::InjectFanout { fanout } => {
+            Shape::InjectFanout { fanout } | Shape::InjectBatch { fanout, .. } => {
                 for i in 0..fanout {
                     text.push_str(&format!("(x) leaf{i} (s{i})\n"));
                 }
@@ -63,8 +74,15 @@ impl Shape {
         match self {
             Shape::Chain { .. } => "w0",
             Shape::Fanout { .. } => "raw",
-            Shape::InjectFanout { .. } => "x",
+            Shape::InjectFanout { .. } | Shape::InjectBatch { .. } => "x",
         }
+    }
+
+    /// The injection shapes measure the user-facing edge, so their timed
+    /// window covers injection + drain; chain/fanout time the drain only
+    /// (their injections are setup, the compute cascade is the subject).
+    fn times_injection(&self) -> bool {
+        matches!(self, Shape::InjectFanout { .. } | Shape::InjectBatch { .. })
     }
 }
 
@@ -78,17 +96,40 @@ fn run_shape(shape: &Shape, provenance: bool) -> Run {
     let spec = parse(&shape.spec_text()).unwrap();
     let cfg = DeployConfig { provenance, ..Default::default() };
     let mut c = Coordinator::deploy(&spec, cfg).unwrap();
-    for i in 0..ARRIVALS {
-        c.inject_at(
-            shape.inject_wire(),
-            Payload::scalar(i as f32),
-            DataClass::Summary,
-            RegionId::new(0),
-            SimTime::micros(i),
-        )
-        .unwrap();
-    }
+    let wid = c.wire_id(shape.inject_wire()).unwrap();
+    let timed_injection = shape.times_injection();
     let wall = std::time::Instant::now();
+    match *shape {
+        Shape::InjectBatch { batch, .. } => {
+            let mut i = 0u64;
+            while i < ARRIVALS {
+                let n = batch.min((ARRIVALS - i) as usize);
+                let payloads = (i..i + n as u64).map(|k| Payload::scalar(k as f32));
+                c.inject_batch_at_id(
+                    wid,
+                    payloads,
+                    DataClass::Summary,
+                    RegionId::new(0),
+                    SimTime::micros(i),
+                )
+                .unwrap();
+                i += n as u64;
+            }
+        }
+        _ => {
+            for i in 0..ARRIVALS {
+                c.inject_at_id(
+                    wid,
+                    Payload::scalar(i as f32),
+                    DataClass::Summary,
+                    RegionId::new(0),
+                    SimTime::micros(i),
+                )
+                .unwrap();
+            }
+        }
+    }
+    let wall = if timed_injection { wall } else { std::time::Instant::now() };
     let events = c.run_until_idle();
     let secs = wall.elapsed().as_secs_f64().max(1e-9);
     let hops: u64 = c.links.iter().map(|l| l.delivered).sum();
@@ -118,13 +159,17 @@ fn main() {
         "E11: coordinator hot path — events/s and AV hops/s (wallclock, single thread)",
         &["shape", "provenance", "events_per_s", "ns_per_event", "hops_per_s"],
     );
-    let shapes: [(&str, Shape); 6] = [
+    let shapes: [(&str, Shape); 8] = [
         ("chain-4", Shape::Chain { depth: 4 }),
         ("chain-16", Shape::Chain { depth: 16 }),
         ("fanout-4", Shape::Fanout { fanout: 4 }),
         ("fanout-8", Shape::Fanout { fanout: 8 }),
         ("inject-fanout-4", Shape::InjectFanout { fanout: 4 }),
         ("inject-fanout-8", Shape::InjectFanout { fanout: 8 }),
+        // the batched injection edge vs its unbatched twin above: same
+        // topology and arrival count, minted 64 payloads per call
+        ("inject-batch64-4", Shape::InjectBatch { fanout: 4, batch: 64 }),
+        ("inject-batch64-8", Shape::InjectBatch { fanout: 8, batch: 64 }),
     ];
     for (label, shape) in &shapes {
         for prov in [true, false] {

@@ -16,6 +16,8 @@ fail=0
 
 step() { printf '\n== %s ==\n' "$*"; }
 
+PY="$(command -v python || command -v python3 || true)"
+
 if command -v cargo >/dev/null 2>&1; then
     step "cargo fmt --check (advisory)"
     if ! cargo fmt --check 2>/dev/null; then
@@ -32,6 +34,11 @@ if command -v cargo >/dev/null 2>&1; then
     cargo bench --bench tap_overhead 2>/dev/null || echo "note: bench skipped"
 
     step "coordinator throughput bench (perf trajectory: BENCH_coordinator_throughput.json)"
+    # snapshot the committed baseline before the bench overwrites the file
+    BASELINE="$(mktemp)"
+    if ! git show HEAD:BENCH_coordinator_throughput.json > "$BASELINE" 2>/dev/null; then
+        cp BENCH_coordinator_throughput.json "$BASELINE" 2>/dev/null || : > "$BASELINE"
+    fi
     rm -f BENCH_coordinator_throughput.json
     if cargo bench --bench coordinator_throughput; then
         if [ -f BENCH_coordinator_throughput.json ]; then
@@ -39,6 +46,12 @@ if command -v cargo >/dev/null 2>&1; then
             cp BENCH_coordinator_throughput.json \
                "artifacts/bench/coordinator_throughput-$(date -u +%Y%m%dT%H%M%SZ).json"
             echo "archived BENCH_coordinator_throughput.json -> artifacts/bench/"
+            if [ -n "$PY" ]; then
+                step "bench delta vs committed baseline (warn >10%, fail >35% ns/event regression)"
+                "$PY" tools/bench_delta.py "$BASELINE" BENCH_coordinator_throughput.json || fail=1
+            else
+                echo "note: python not found — bench delta gate skipped"
+            fi
         else
             echo "ERROR: bench ran but emitted no BENCH_coordinator_throughput.json"
             fail=1
@@ -47,11 +60,10 @@ if command -v cargo >/dev/null 2>&1; then
         echo "ERROR: coordinator_throughput bench failed"
         fail=1
     fi
+    rm -f "$BASELINE"
 else
     echo "note: cargo not found — rust tier skipped in this environment"
 fi
-
-PY="$(command -v python || command -v python3 || true)"
 if [ -n "$PY" ]; then
     step "$PY -m pytest python/tests -q"
     "$PY" -m pytest python/tests -q || fail=1

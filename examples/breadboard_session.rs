@@ -50,8 +50,13 @@ fn main() -> Result<()> {
          (kept) tally (report)\n",
     )?;
     let mut bread = Breadboard::deploy(&spec, DeployConfig::default())?;
-    bread.plug("screen", screen_factory(1.5, 1))?;
-    bread.plug("tally", || {
+    // typed handles, resolved once (the session derefs to the Pipeline
+    // facade): the in-tray for the feed loop, the tasks for plug/swap
+    let samples_in = bread.source("samples")?;
+    let screen = bread.task("screen")?;
+    let tally = bread.task("tally")?;
+    bread.plug_task(screen, screen_factory(1.5, 1));
+    bread.plug_task(tally, || {
         Box::new(FnTask::new(|ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
             let n = snap.all_avs().count() as f32;
             for av in snap.all_avs() {
@@ -59,7 +64,7 @@ fn main() -> Result<()> {
             }
             Ok(vec![Output::summary("report", Payload::scalar(n))])
         }))
-    })?;
+    });
 
     // 1. taps: a metadata tap on the in-tray, a payload tap on 'kept'
     //    filtered to big chunks only
@@ -77,14 +82,13 @@ fn main() -> Result<()> {
     let inject = |b: &mut Breadboard, from_ms: u64, n: u64, r: &mut koalja::util::Rng| {
         for i in 0..n {
             let data: Vec<f32> = (0..8).map(|_| (r.normal() * 1.2) as f32).collect();
-            b.inject_at(
-                "samples",
+            samples_in.inject_at(
+                b,
                 Payload::tensor(&[1, 8], data),
                 DataClass::Summary,
                 RegionId::new(0),
                 SimTime::millis(from_ms + i * 40),
-            )
-            .unwrap();
+            );
         }
     };
     inject(&mut bread, 0, 20, &mut r);
@@ -113,9 +117,9 @@ fn main() -> Result<()> {
 
     // 2. hot-swap: the screen is too strict — v2 lowers the threshold.
     //    Dry-run first: what would the swap strand?
-    let preview = bread.swap_preview("screen", 2)?;
+    let preview = bread.swap_preview_task(screen, 2)?;
     println!("\ndry-run: {}", preview.summary());
-    let outcome = bread.hot_swap("screen", screen_factory(0.5, 2), false)?;
+    let outcome = bread.hot_swap_task(screen, screen_factory(0.5, 2), false)?;
     println!(
         "committed at {}: evicted {} cached objects downstream",
         outcome.at, outcome.cache_objects_evicted
@@ -127,10 +131,9 @@ fn main() -> Result<()> {
     let t_end = bread.plat.now;
 
     // version bump is in the provenance stories
-    let q = ProvenanceQuery::new(&bread.plat.prov);
-    let screen_id = bread.task_id("screen")?;
-    println!("\nversion changes on 'screen': {:?}", q.version_changes(screen_id));
-    if let Some(col) = bread.collected.get("report").and_then(|v| v.last()) {
+    println!("\nversion changes on 'screen': {:?}", screen.version_changes(&bread));
+    if let Some(col) = bread.sink("report")?.latest(&bread) {
+        let q = ProvenanceQuery::new(&bread.plat.prov);
         println!("latest report touched by versions {:?}", q.versions_touching(col.av.id));
     }
 

@@ -79,27 +79,29 @@ fn run_arm(central: bool) -> Result<ArmReport> {
         force_central: central,
         ..Default::default()
     };
-    let mut koalja = Coordinator::deploy(&spec, cfg)?;
+    let mut pipe = Pipeline::deploy(&spec, cfg)?;
+    // handles resolved once per arm: per-edge in-trays, tasks, the sink
+    let raws: Vec<SourceHandle> = (0..N_EDGE)
+        .map(|i| pipe.source(&format!("raw-e{i}")))
+        .collect::<Result<_>>()?;
+    let fleet_report = pipe.sink("fleet-report")?;
     for i in 0..N_EDGE {
-        koalja.set_code(
-            &format!("summarize-e{i}"),
-            Box::new(
-                PjrtTask::new(summarize_exe.clone(), "sketch").with_flops(1024 * 8 * 4),
-            ),
-        )?;
+        let h = pipe.task(&format!("summarize-e{i}"))?;
+        h.plug(
+            &mut pipe,
+            Box::new(PjrtTask::new(summarize_exe.clone(), "sketch").with_flops(1024 * 8 * 4)),
+        );
     }
-    koalja.set_code("hq-aggregate", Box::new(SketchMerge { out: "fleet-report".into() }))?;
+    let hq = pipe.task("hq-aggregate")?;
+    hq.plug(&mut pipe, Box::new(SketchMerge { out: "fleet-report".into() }));
 
     // ghost pre-flight: verify routing with zero payload cost (§III-K)
-    let ghost = koalja.inject_ghost(
-        "raw-e0",
-        100 << 20,
-        koalja.plat.net.by_name("edge-0").unwrap(),
-    )?;
-    koalja.run_until_idle();
-    let ghost_wan = koalja.plat.metrics.bytes(NetTier::Wan);
+    let edge0 = pipe.plat.net.by_name("edge-0").unwrap();
+    let ghost = raws[0].inject_ghost(&mut pipe, 100 << 20, edge0);
+    pipe.run_until_idle();
+    let ghost_wan = pipe.plat.metrics.bytes(NetTier::Wan);
     assert_eq!(ghost_wan, 0, "ghost routing moved no payload bytes");
-    let route = koalja.ghost_route(ghost);
+    let route = pipe.ghost_route(ghost);
     assert!(route.iter().any(|t| t == "summarize-e0"), "ghost reached the edge task");
 
     // the real trace: one vehicle fleet per edge region
@@ -113,24 +115,24 @@ fn run_arm(central: bool) -> Result<ArmReport> {
     };
     let mut chunks = 0usize;
     for i in 0..N_EDGE {
-        let region = koalja.plat.net.by_name(&format!("edge-{i}")).unwrap();
+        let region = pipe.plat.net.by_name(&format!("edge-{i}")).unwrap();
         let mut r = rng(1000 + i as u64);
         for c in trace.generate(&mut r) {
-            koalja.inject_at(&format!("raw-e{i}"), c.payload, DataClass::Raw, region, c.time)?;
+            raws[i].inject_at(&mut pipe, c.payload, DataClass::Raw, region, c.time);
             chunks += 1;
         }
     }
     let wall = Instant::now();
-    koalja.run_until_idle();
+    pipe.run_until_idle();
     let wall_s = wall.elapsed().as_secs_f64();
 
     Ok(ArmReport {
-        wan_bytes: koalja.plat.metrics.bytes(NetTier::Wan),
-        lan_bytes: koalja.plat.metrics.bytes(NetTier::Lan),
-        joules: koalja.plat.metrics.joules,
-        denied: koalja.plat.metrics.get("sovereignty_denied"),
-        reports: koalja.collected_count("fleet-report"),
-        e2e_mean_s: koalja.plat.metrics.e2e_latency.mean().as_secs_f64(),
+        wan_bytes: pipe.plat.metrics.bytes(NetTier::Wan),
+        lan_bytes: pipe.plat.metrics.bytes(NetTier::Lan),
+        joules: pipe.plat.metrics.joules,
+        denied: pipe.plat.metrics.get("sovereignty_denied"),
+        reports: fleet_report.count(&pipe),
+        e2e_mean_s: pipe.plat.metrics.e2e_latency.mean().as_secs_f64(),
         kernel_runs: summarize_exe.runs.get() - runs_before,
         wall_s,
         chunks,

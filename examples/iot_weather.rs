@@ -19,10 +19,13 @@ use koalja::task::compute::PjrtTask;
 /// Feed the same three-sensor trace (temp fast, wind slow, humidity
 /// slowest) into a fuse task under `policy`; report what comes out.
 fn run_policy(policy: &str) -> Result<(usize, f64)> {
-    let spec = parse(&format!(
-        "[weather]\n(temp, wind, humidity) fuse (sample-set) @policy={policy}\n"
-    ))?;
-    let mut koalja = Coordinator::deploy(&spec, DeployConfig::default())?;
+    // the fuse task, built programmatically (the three sensor ports and
+    // the policy attr are data here, not spec text)
+    let mut pipe = PipelineBuilder::new("weather")
+        .task("fuse").reads("temp").reads("wind").reads("humidity")
+        .emits("sample-set").policy(policy)
+        .deploy(DeployConfig::default())?;
+    let sample_set = pipe.sink("sample-set")?;
     let mut r = rng(77);
     let mut sensors = [
         koalja::workload::SensorStream::new("temp", SimDuration::millis(100), 4, 20.0),
@@ -31,14 +34,15 @@ fn run_policy(policy: &str) -> Result<(usize, f64)> {
     ];
     let horizon = SimTime::secs(30);
     for s in &mut sensors {
-        let name = s.name.clone();
+        // one resolution per sensor; the arrival loop rides the handle
+        let src = pipe.source(&s.name)?;
         for (t, p) in s.arrivals_until(&mut r, horizon) {
-            koalja.inject_at(&name, p, DataClass::Summary, RegionId::new(0), t)?;
+            src.inject_at(&mut pipe, p, DataClass::Summary, RegionId::new(0), t);
         }
     }
-    koalja.run_until_idle();
-    let n = koalja.collected_count("sample-set");
-    let staleness = koalja.plat.metrics.e2e_latency.mean().as_secs_f64();
+    pipe.run_until_idle();
+    let n = sample_set.count(&pipe);
+    let staleness = pipe.plat.metrics.e2e_latency.mean().as_secs_f64();
     Ok((n, staleness))
 }
 
@@ -63,18 +67,20 @@ fn main() -> Result<()> {
     // stream[256]: collect 256 one-sample AVs, then the PJRT task stacks
     // them into the (256, 8) tensor the kernel was lowered for.
     let spec = parse("[windows]\n(stream[256]) window-stats (means)\n")?;
-    let mut koalja = Coordinator::deploy(&spec, DeployConfig::default())?;
-    koalja.set_code(
-        "window-stats",
+    let mut pipe = Pipeline::deploy(&spec, DeployConfig::default())?;
+    let stream = pipe.source("stream")?;
+    let means = pipe.sink("means")?;
+    pipe.task("window-stats")?.plug(
+        &mut pipe,
         Box::new(PjrtTask::new(window_exe.clone(), "means").with_flops(256 * 8 * 2)),
-    )?;
+    );
     let mut r = rng(99);
     let mut sensor = koalja::workload::SensorStream::new("chan", SimDuration::millis(20), 8, 15.0);
     for (t, p) in sensor.arrivals_until(&mut r, SimTime::secs(12)) {
-        koalja.inject_at("stream", p, DataClass::Summary, RegionId::new(0), t)?;
+        stream.inject_at(&mut pipe, p, DataClass::Summary, RegionId::new(0), t);
     }
-    koalja.run_until_idle();
-    let batches = koalja.collected.get("means").cloned().unwrap_or_default();
+    pipe.run_until_idle();
+    let batches = means.read(&pipe).to_vec();
     println!("window batches: {} (each (29, 8) = 29 windows of [32/8])", batches.len());
     if let Some(b) = batches.first() {
         let (_, data) = b.payload.as_tensor().unwrap();
@@ -87,6 +93,6 @@ fn main() -> Result<()> {
         assert!((data[0] - 15.0).abs() < 2.0, "window mean near sensor bias");
     }
     println!("kernel executions on the PJRT hot path: {}", window_exe.runs.get());
-    println!("\n{}", koalja.plat.metrics.report());
+    println!("\n{}", pipe.plat.metrics.report());
     Ok(())
 }

@@ -5,6 +5,10 @@
 //! edits (the common case, §III-J) cost a fraction of the full build —
 //! "tools like Make ha[ve] exploited [this] for decades".
 //!
+//! The wiring is *generated*, so this example uses `PipelineBuilder`
+//! directly — no spec text is ever rendered — and the edit/demand loop
+//! runs entirely on pre-resolved source/sink handles.
+//!
 //! Run: `cargo run --release --example make_build`
 
 use anyhow::Result;
@@ -15,16 +19,21 @@ fn main() -> Result<()> {
     let tree = BuildTree { leaves: 32, fanin: 4, source_bytes: 4096 };
     let n_obj = tree.n_objects();
 
-    // wiring: srcN -> compileM (4 sources each) -> link -> binary
-    let mut text = String::from("[build]\n");
+    // wiring: srcN -> compileM (4 sources each) -> link -> binary,
+    // constructed programmatically from the build tree
+    let mut builder = PipelineBuilder::new("build");
     for o in 0..n_obj {
-        let ins: Vec<String> = (0..tree.fanin).map(|k| format!("src{}", o * tree.fanin + k)).collect();
-        text.push_str(&format!("({}) compile{} (obj{})\n", ins.join(", "), o, o));
+        let mut t = builder.task(&format!("compile{o}"));
+        for k in 0..tree.fanin {
+            t = t.reads(&format!("src{}", o * tree.fanin + k));
+        }
+        builder = t.emits(&format!("obj{o}")).done();
     }
-    let objs: Vec<String> = (0..n_obj).map(|o| format!("obj{o}")).collect();
-    text.push_str(&format!("({}) link-all (binary) @policy=swap\n", objs.join(", ")));
-    let spec = parse(&text)?;
-    let mut koalja = Coordinator::deploy(&spec, DeployConfig::default())?;
+    let mut link = builder.task("link-all");
+    for o in 0..n_obj {
+        link = link.reads(&format!("obj{o}"));
+    }
+    let mut pipe = link.emits("binary").policy("swap").deploy(DeployConfig::default())?;
 
     // a "compiler": one artifact derived from ALL inputs (content-coupled,
     // so any changed source changes the object file)
@@ -41,28 +50,37 @@ fn main() -> Result<()> {
         })
     };
     for o in 0..n_obj {
-        koalja.set_code(&format!("compile{o}"), Box::new(compiler(format!("obj{o}"))))?;
+        let h = pipe.task(&format!("compile{o}"))?;
+        h.plug(&mut pipe, Box::new(compiler(format!("obj{o}"))));
     }
-    koalja.set_code("link-all", Box::new(compiler("binary".to_string())))?;
+    let link_all = pipe.task("link-all")?;
+    link_all.plug(&mut pipe, Box::new(compiler("binary".to_string())));
+
+    // resolve every source in-tray and the binary sink once; the whole
+    // edit/rebuild loop below is string-free
+    let srcs: Vec<SourceHandle> = (0..tree.leaves)
+        .map(|i| pipe.source(&format!("src{i}")))
+        .collect::<Result<_>>()?;
+    let binary = pipe.sink("binary")?;
 
     // drop generation-0 of every source into the in-trays
-    for i in 0..tree.leaves {
-        koalja.inject(&format!("src{i}"), tree.source_payload(i, 0), DataClass::Summary)?;
+    for (i, src) in srcs.iter().enumerate() {
+        src.inject(&mut pipe, tree.source_payload(i, 0), DataClass::Summary);
     }
 
     // full build
-    let before = koalja.plat.metrics.task_runs;
-    let bin0 = koalja.demand("binary")?;
-    let full_build_runs = koalja.plat.metrics.task_runs - before;
+    let before = pipe.plat.metrics.task_runs;
+    let bin0 = binary.demand(&mut pipe)?;
+    let full_build_runs = pipe.plat.metrics.task_runs - before;
     println!("full build:        {full_build_runs} task runs -> {}", bin0.content);
 
     // no-op rebuild: everything cached
-    let before = koalja.plat.metrics.task_runs;
-    koalja.demand("binary")?;
+    let before = pipe.plat.metrics.task_runs;
+    binary.demand(&mut pipe)?;
     println!(
         "no-op rebuild:     {} task runs ({} memo hits)",
-        koalja.plat.metrics.task_runs - before,
-        koalja.plat.metrics.get("memo_hits")
+        pipe.plat.metrics.task_runs - before,
+        pipe.plat.metrics.get("memo_hits")
     );
 
     // sparse edit: 2 of 32 files change (one object file affected each)
@@ -70,13 +88,13 @@ fn main() -> Result<()> {
     for gen in 1..=3u64 {
         let dirty = tree.dirty_set(&mut r, 2);
         for &i in &dirty {
-            koalja.inject(&format!("src{i}"), tree.source_payload(i, gen), DataClass::Summary)?;
+            srcs[i].inject(&mut pipe, tree.source_payload(i, gen), DataClass::Summary);
         }
-        let before = koalja.plat.metrics.task_runs;
-        let bin = koalja.demand("binary")?;
+        let before = pipe.plat.metrics.task_runs;
+        let bin = binary.demand(&mut pipe)?;
         println!(
             "edit {dirty:?}: {} task runs (of {} total tasks) -> {}",
-            koalja.plat.metrics.task_runs - before,
+            pipe.plat.metrics.task_runs - before,
             n_obj + 1,
             bin.content
         );
@@ -89,6 +107,6 @@ fn main() -> Result<()> {
          demand rebuilt only the stale suffix.",
         n_obj + 1
     );
-    println!("\n{}", koalja.plat.metrics.report());
+    println!("\n{}", pipe.plat.metrics.report());
     Ok(())
 }

@@ -1,4 +1,8 @@
 use koalja::prelude::*;
+
+/// Steady-state hop-rate probe over a 4-stage chain. The injection loop
+/// rides a pre-resolved `SourceHandle` — zero name resolutions after
+/// deploy, like any production feeder should.
 fn main() {
     let mut args = std::env::args().skip(1);
     let prov: bool = args.next().unwrap().parse().unwrap();
@@ -6,19 +10,20 @@ fn main() {
     for _ in 0..5 {
         let spec = parse(text).unwrap();
         let cfg = DeployConfig { provenance: prov, ..Default::default() };
-        let mut c = Coordinator::deploy(&spec, cfg).unwrap();
+        let mut pipe = Pipeline::deploy(&spec, cfg).unwrap();
+        let w0 = pipe.source("w0").unwrap();
         // steady-state: inject in small batches like a live stream (the
         // pre-load-everything variant measured heap churn, not the loop)
         let wall = std::time::Instant::now();
         for batch in 0..500u64 {
             for i in 0..100u64 {
                 let t = batch * 100 + i;
-                c.inject_at("w0", Payload::scalar(t as f32), DataClass::Summary, RegionId::new(0), SimTime::micros(t)).unwrap();
+                w0.inject_at(&mut pipe, Payload::scalar(t as f32), DataClass::Summary, RegionId::new(0), SimTime::micros(t));
             }
-            c.run_until_idle();
+            pipe.run_until_idle();
         }
         let secs = wall.elapsed().as_secs_f64();
-        let hops: u64 = c.links.iter().map(|l| l.delivered).sum();
+        let hops: u64 = pipe.links.iter().map(|l| l.delivered).sum();
         println!("prov={prov} {:.0} hops/s", hops as f64 / secs);
     }
 }

@@ -1,38 +1,55 @@
-//! Quickstart: the breadboard experience (§III-H).
+//! Quickstart: the handle-based client API — the canonical walkthrough.
 //!
-//! Wire a three-stage pipeline in the fig. 5 language, plug in user code,
-//! drop data into the in-tray, and read the three provenance stories.
-//! No Kubernetes, ports, or storage knowledge anywhere — that is the
-//! paper's platform-transparency promise.
+//! The paper's "serverless experience" (§III) means you talk to a
+//! pipeline, not to its plumbing: no Kubernetes, ports, or storage
+//! knowledge anywhere. This walkthrough adds the repo's typed spin on
+//! that promise — you also never re-resolve a name after deployment:
+//!
+//!  1. wire the pipeline (programmatic `PipelineBuilder`, or `parse()`d
+//!     fig. 5 text — both lower to the same validated spec),
+//!  2. resolve typed handles ONCE: a `SourceHandle` is the only thing
+//!     that can inject, a `SinkHandle` the only thing that can read,
+//!     a `TaskHandle` plugs code and answers provenance queries,
+//!  3. drop data into the in-tray (single and batched) and let the
+//!     reactive platform work,
+//!  4. read results and the three provenance stories of §III-C.
 //!
 //! Run: `cargo run --release --example quickstart`
 //!
-//! Next steps — the interactive breadboard subsystem built on top of this:
+//! Next steps — the interactive breadboard subsystem built on top:
 //!   cargo run --release --example breadboard_session   # taps/swap/replay API
 //!   cargo run --release -- bread specs/tfmodel.koalja  # scripted session
-//! (`koalja bread` attaches live wire taps, hot-swaps a task with a dry-run
-//! invalidation preview, and forensically replays the run — see DESIGN.md.)
 
 use anyhow::Result;
 use koalja::prelude::*;
-use koalja::provenance::ProvenanceQuery;
 
 fn main() -> Result<()> {
-    // 1. Describe the wiring — the paper's breadboard. `samples` is the
-    //    in-tray; `report` is the sink; `clean[4]` buffers four values.
-    let spec = parse(
-        "[quickstart]\n\
-         # screen raw samples, keep only interesting ones\n\
-         (samples) screen (clean)\n\
-         # aggregate four clean chunks into one stats report\n\
-         (clean[4]) aggregate (report)\n",
-    )?;
-    let mut koalja = Coordinator::deploy(&spec, DeployConfig::default())?;
+    // 1. Describe the wiring — programmatically. `samples` is the in-tray;
+    //    `report` is the sink; `clean[4]` buffers four values. The same
+    //    pipeline in the fig. 5 text language would be
+    //        [quickstart]
+    //        (samples) screen (clean)
+    //        (clean[4]) aggregate (report)
+    //    and parse() of that text lowers to an identical spec (the test
+    //    suite property-checks builder/parser equivalence).
+    let mut pipe = PipelineBuilder::new("quickstart")
+        .task("screen").reads("samples").emits("clean")
+        .task("aggregate").reads("clean[4]").emits("report")
+        .deploy(DeployConfig::default())?;
 
-    // 2. Plug in user code. The plugin sees only ctx + snapshot.
-    koalja.set_code("screen", Box::new(ThresholdGate::new("clean", 0.5)))?;
-    koalja.set_code(
-        "aggregate",
+    // 2. Resolve typed handles once. Unknown names fail here — with
+    //    near-miss suggestions — and never again: the handles carry their
+    //    dense interned ids, so the steady-state loop below touches no
+    //    strings and no resolution Results.
+    let samples: SourceHandle = pipe.source("samples")?;
+    let report: SinkHandle = pipe.sink("report")?;
+    let screen: TaskHandle = pipe.task("screen")?;
+    let aggregate: TaskHandle = pipe.task("aggregate")?;
+
+    // Plug in user code. The plugin sees only ctx + snapshot.
+    screen.plug(&mut pipe, Box::new(ThresholdGate::new("clean", 0.5)));
+    aggregate.plug(
+        &mut pipe,
         Box::new(FnTask::new(|ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
             let mut peak = f32::MIN;
             let mut total = 0.0f32;
@@ -52,34 +69,36 @@ fn main() -> Result<()> {
                 Payload::tensor(&[2], vec![peak, total / n as f32]),
             )])
         })),
-    )?;
+    );
 
-    // 3. Drop data into the in-tray at irregular times.
+    // 3. Drop data into the in-tray at irregular times…
     let mut r = rng(2024);
     let mut t = SimTime::ZERO;
-    for _ in 0..40 {
+    for _ in 0..24 {
         t += SimDuration::millis(50).scale(r.exp1());
         let data: Vec<f32> = (0..16).map(|_| r.normal() as f32).collect();
-        koalja.inject_at(
-            "samples",
-            Payload::tensor(&[1, 16], data),
-            DataClass::Raw,
-            RegionId::new(0),
-            t,
-        )?;
+        samples.inject_at(&mut pipe, Payload::tensor(&[1, 16], data), DataClass::Raw, RegionId::new(0), t);
     }
+    // …and a burst all at once: batched injection mints the AVs and heap
+    // events in one pass (one validation, one tap check, one heap
+    // reservation for the whole batch — see benches/coordinator_throughput).
+    let burst: Vec<Payload> = (0..16)
+        .map(|_| Payload::tensor(&[1, 16], (0..16).map(|_| r.normal() as f32).collect()))
+        .collect();
+    let ids = samples.inject_batch(&mut pipe, &burst, DataClass::Raw);
+    println!("burst of {} chunks injected as one batch", ids.len());
 
     // 4. Let the reactive platform work.
-    koalja.run_until_idle();
+    pipe.run_until_idle();
 
-    // 5. Read the results + the three stories of §III-C.
-    println!("reports produced: {}", koalja.collected_count("report"));
-    println!("\n-- metrics --\n{}", koalja.plat.metrics.report());
+    // 5. Read the results + the three stories of §III-C — all off handles.
+    println!("reports produced: {}", report.count(&pipe));
+    println!("\n-- metrics --\n{}", pipe.plat.metrics.report());
 
-    let q = ProvenanceQuery::new(&koalja.plat.prov);
-    if let Some(last) = koalja.collected.get("report").and_then(|v| v.last()) {
+    let q = ProvenanceQuery::new(&pipe.plat.prov);
+    if let Some(last) = report.latest(&pipe) {
         println!("-- story 1: traveller log of {} --", last.av.id);
-        for s in &koalja.plat.prov.passport(last.av.id).unwrap().stamps {
+        for s in &pipe.plat.prov.passport(last.av.id).unwrap().stamps {
             println!("  {}  {:?}", s.time, s.stamp);
         }
         println!(
@@ -88,14 +107,13 @@ fn main() -> Result<()> {
         );
     }
 
-    let screen = koalja.task_id("screen")?;
     println!("\n-- story 2: checkpoint log of 'screen' (first 6 entries) --");
-    for e in koalja.plat.prov.checkpoint_log(screen).iter().take(6) {
+    for e in screen.checkpoint_log(&pipe).iter().take(6) {
         println!("  {} {} {:?}", e.time, e.run, e.event);
     }
 
     println!("\n-- story 3: concept map (the invariant design) --");
-    for edge in koalja.plat.prov.concept_map() {
+    for edge in pipe.plat.prov.concept_map() {
         println!("  ({}) --{:?}--> ({})", edge.from, edge.rel, edge.to);
     }
     Ok(())

@@ -18,7 +18,6 @@
 use anyhow::Result;
 use koalja::prelude::*;
 use koalja::task::compute::{pack_params, MlpDims, ModelServer, PjrtTask};
-use koalja::util::TaskId;
 
 /// Trainer: PJRT train-step with param state; deploys the packed model on
 /// the `model` wire every `deploy_every` steps.
@@ -62,26 +61,33 @@ fn main() -> Result<()> {
     let mut r = rng(1234);
     let init_params = dims.init_params(&mut r);
 
-    // the twin circuit of fig. 6, in the fig. 5 wiring language
-    let spec = parse(
-        "[twin]\n\
-         # upper pipeline: slow timescale — learning\n\
-         (batch-x, batch-y) learn (loss, model)\n\
-         (model) deploy (deployed)\n\
-         # lower pipeline: fast timescale — recognition via the implicit\n\
-         # client-server link to the deployed model\n\
-         (images, classifier?) predict (classification)\n",
-    )?;
-    let mut koalja = Coordinator::deploy(&spec, DeployConfig::default())?;
+    // the twin circuit of fig. 6 — built programmatically this time; the
+    // equivalent fig. 5 text is in the module docs of `spec`
+    let mut pipe = PipelineBuilder::new("twin")
+        // upper pipeline: slow timescale — learning
+        .task("learn").reads("batch-x").reads("batch-y").emits("loss").emits("model")
+        .task("deploy").reads("model").emits("deployed")
+        // lower pipeline: fast timescale — recognition via the implicit
+        // client-server link to the deployed model
+        .task("predict").reads("images").looks_up("classifier").emits("classification")
+        .deploy(DeployConfig::default())?;
+
+    // typed entry points, resolved once
+    let batch_x = pipe.source("batch-x")?;
+    let batch_y = pipe.source("batch-y")?;
+    let images = pipe.source("images")?;
+    let loss_sink = pipe.sink("loss")?;
+    let classification = pipe.sink("classification")?;
+    let deployed = pipe.sink("deployed")?;
 
     // the deployed model service (starts untrained)
-    koalja.plat.services.register(
+    pipe.plat.services.register(
         "classifier",
         Box::new(ModelServer::new(infer_exe.clone(), dims, init_params.clone())),
     );
 
-    koalja.set_code(
-        "learn",
+    pipe.task("learn")?.plug(
+        &mut pipe,
         Box::new(Trainer {
             inner: PjrtTask::new(train_exe, "loss")
                 .with_state(init_params)
@@ -92,11 +98,11 @@ fn main() -> Result<()> {
             deploy_every: 50,
             losses: vec![],
         }),
-    )?;
+    );
 
     // deploy: push packed params into the running service
-    koalja.set_code(
-        "deploy",
+    pipe.task("deploy")?.plug(
+        &mut pipe,
         Box::new(FnTask::new(move |ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
             let mut outs = vec![];
             for av in snap.all_avs() {
@@ -109,11 +115,12 @@ fn main() -> Result<()> {
             }
             Ok(outs)
         })),
-    )?;
+    );
 
     // predict: consult the service (out-of-band lookup, recorded)
-    koalja.set_code(
-        "predict",
+    let predict = pipe.task("predict")?;
+    predict.plug(
+        &mut pipe,
         Box::new(FnTask::new(|ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
             let mut outs = vec![];
             for av in snap.all_avs() {
@@ -138,7 +145,7 @@ fn main() -> Result<()> {
             }
             Ok(outs)
         })),
-    )?;
+    );
 
     // ---- drive both timescales ----
     let stream = koalja::workload::ImageStream::new(&mut r, dims.classes, dims.input, 0.4);
@@ -151,8 +158,8 @@ fn main() -> Result<()> {
         let (x, labels) = stream.batch(&mut r, dims.batch);
         let y = stream.one_hot(&labels);
         let t = SimTime::ZERO + train_period.scale(i as f64);
-        koalja.inject_at("batch-x", x, DataClass::Summary, RegionId::new(0), t)?;
-        koalja.inject_at("batch-y", y, DataClass::Summary, RegionId::new(0), t)?;
+        batch_x.inject_at(&mut pipe, x, DataClass::Summary, RegionId::new(0), t);
+        batch_y.inject_at(&mut pipe, y, DataClass::Summary, RegionId::new(0), t);
     }
     let mut truth: Vec<Vec<usize>> = Vec::new();
     let mut t = SimTime::ZERO;
@@ -163,22 +170,20 @@ fn main() -> Result<()> {
         }
         let (x, labels) = stream.batch(&mut r, dims.batch);
         truth.push(labels);
-        koalja.inject_at("images", x, DataClass::Summary, RegionId::new(0), t)?;
+        images.inject_at(&mut pipe, x, DataClass::Summary, RegionId::new(0), t);
     }
 
-    koalja.run_until_idle();
+    pipe.run_until_idle();
 
     // ---- results ----
-    let learn_id = koalja.task_id("learn")?;
-    let _ = learn_id;
     println!("== twin pipeline run: {steps} train steps, {} image batches ==", truth.len());
 
     // loss curve from the collected sink
-    let losses: Vec<f32> = koalja
-        .collected
-        .get("loss")
-        .map(|v| v.iter().map(|c| c.payload.as_tensor().unwrap().1[0]).collect())
-        .unwrap_or_default();
+    let losses: Vec<f32> = loss_sink
+        .read(&pipe)
+        .iter()
+        .map(|c| c.payload.as_tensor().unwrap().1[0])
+        .collect();
     println!("\nloss curve (every 25 steps):");
     for (i, chunk) in losses.chunks(25).enumerate() {
         println!("  step {:>4}: loss {:.4}", i * 25, chunk[0]);
@@ -191,7 +196,7 @@ fn main() -> Result<()> {
     );
 
     // accuracy per classification batch, split before/after first deploy
-    let classifications = koalja.collected.get("classification").cloned().unwrap_or_default();
+    let classifications = classification.read(&pipe);
     let mut early_correct = 0usize;
     let mut early_total = 0usize;
     let mut late_correct = 0usize;
@@ -218,14 +223,11 @@ fn main() -> Result<()> {
     assert!(late_acc > 0.85, "trained accuracy {late_acc}");
 
     // provenance: model versions visible on the serving path
-    let deploys = koalja.collected_count("deployed");
-    let version = koalja.plat.services.version("classifier").unwrap();
+    let deploys = deployed.count(&pipe);
+    let version = pipe.plat.services.version("classifier").unwrap();
     println!("model deployments: {deploys}; serving version now v{version}");
-    let predict_id = koalja.task_id("predict")?;
-    let lookups = koalja
-        .plat
-        .prov
-        .checkpoint_log(predict_id)
+    let lookups = predict
+        .checkpoint_log(&pipe)
         .iter()
         .filter(|e| {
             matches!(
@@ -235,7 +237,6 @@ fn main() -> Result<()> {
         })
         .count();
     println!("recorded service lookups on the predict path: {lookups}");
-    let _ = TaskId::new(0);
-    println!("\n{}", koalja.plat.metrics.report());
+    println!("\n{}", pipe.plat.metrics.report());
     Ok(())
 }

@@ -1,0 +1,317 @@
+//! Programmatic pipeline construction — the fig. 5 language without the
+//! text.
+//!
+//! Koji-style result-oriented wirings (PAPERS.md) are often *generated* —
+//! a build tree, a per-region fan-out, a parameter sweep — and generating
+//! spec text only to re-parse it is both clumsy and a second grammar to
+//! get wrong. [`PipelineBuilder`] constructs the same [`PipelineSpec`] the
+//! parser produces, sharing the parser's port-token grammar
+//! ([`parse_input_token`]) and name rule ([`valid_name`]) so the two front
+//! ends are equivalent by construction (and property-tested to stay so:
+//! `rust/tests/api_handles.rs`).
+//!
+//! The fluent chain defers errors: malformed ports/names accumulate and
+//! surface together at the lowering step ([`build`](PipelineBuilder::build)
+//! / [`deploy`](PipelineBuilder::deploy)), which also runs
+//! [`PipelineSpec::validate`] — exactly the checks a parsed spec gets.
+//!
+//! ```text
+//! let mut pipe = PipelineBuilder::new("vision")
+//!     .task("detect").reads("frames[3]").emits("alerts").policy("swap")
+//!     .task("render").reads("alerts").emits("overlay")
+//!     .deploy(DeployConfig::default())?;
+//! ```
+
+use super::Pipeline;
+use crate::coordinator::DeployConfig;
+use crate::policy::BufferSpec;
+use crate::spec::{parse_input_token, valid_name, InputSpec, PipelineSpec, TaskSpec};
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// Fluent constructor for a [`PipelineSpec`]. Start tasks with
+/// [`task`](PipelineBuilder::task); finish with
+/// [`build`](PipelineBuilder::build) (a validated spec) or
+/// [`deploy`](PipelineBuilder::deploy) (a running [`Pipeline`]).
+///
+/// Deliberately no `Default`: construction goes through
+/// [`PipelineBuilder::new`], whose name check is part of the
+/// builder/parser equivalence contract (the parser rejects `[]` too).
+#[derive(Clone, Debug)]
+pub struct PipelineBuilder {
+    name: String,
+    tasks: Vec<TaskSpec>,
+    /// Deferred construction errors, reported together at lowering.
+    errors: Vec<String>,
+}
+
+impl PipelineBuilder {
+    pub fn new(name: &str) -> Self {
+        let mut b = Self { name: name.to_string(), tasks: Vec::new(), errors: Vec::new() };
+        if !valid_name(name) {
+            b.errors.push(format!("bad pipeline name '{name}'"));
+        }
+        b
+    }
+
+    /// Open a task; wire its ports on the returned [`TaskBuilder`].
+    pub fn task(self, name: &str) -> TaskBuilder {
+        let mut pb = self;
+        if !valid_name(name) {
+            pb.errors.push(format!("bad task name '{name}'"));
+        }
+        TaskBuilder {
+            pb,
+            task: TaskSpec {
+                name: name.to_string(),
+                inputs: Vec::new(),
+                outputs: Vec::new(),
+                attrs: BTreeMap::new(),
+            },
+        }
+    }
+
+    /// Lower to the spec without validating — the escape hatch for tests
+    /// that want to inspect (or deliberately break) structure.
+    pub fn into_spec_unchecked(self) -> PipelineSpec {
+        PipelineSpec { name: self.name, tasks: self.tasks }
+    }
+
+    /// Lower to a validated [`PipelineSpec`]: deferred construction errors
+    /// first, then the same [`PipelineSpec::validate`] a parsed spec gets.
+    pub fn build(self) -> Result<PipelineSpec> {
+        if !self.errors.is_empty() {
+            return Err(anyhow!(
+                "pipeline builder [{}]: {}",
+                self.name,
+                self.errors.join("; ")
+            ));
+        }
+        let spec = PipelineSpec { name: self.name, tasks: self.tasks };
+        spec.validate().map_err(|e| anyhow!("invalid spec [{}]: {e}", spec.name))?;
+        Ok(spec)
+    }
+
+    /// Build, validate and deploy in one step.
+    pub fn deploy(self, cfg: DeployConfig) -> Result<Pipeline> {
+        let spec = self.build()?;
+        Pipeline::deploy(&spec, cfg)
+    }
+}
+
+/// One task under construction. Every method returns `self`, so ports and
+/// attributes chain; opening the next [`task`](TaskBuilder::task) (or
+/// lowering) seals this one.
+#[derive(Clone, Debug)]
+pub struct TaskBuilder {
+    pb: PipelineBuilder,
+    task: TaskSpec,
+}
+
+impl TaskBuilder {
+    /// Add an input port in the parser's token grammar: `wire`,
+    /// `wire[N]` (buffer), `wire[N/S]` (sliding window), with an optional
+    /// `?` suffix for an implicit service lookup.
+    pub fn reads(mut self, port: &str) -> Self {
+        match parse_input_token(port) {
+            Ok(input) => self.task.inputs.push(input),
+            Err(msg) => self.pb.errors.push(format!("task '{}': {msg}", self.task.name)),
+        }
+        self
+    }
+
+    /// Add a buffered input port (`wire[n]`) without going through the
+    /// token grammar.
+    pub fn reads_buffered(mut self, wire: &str, n: usize) -> Self {
+        if !valid_name(wire) {
+            self.pb.errors.push(format!("task '{}': bad wire name '{wire}'", self.task.name));
+            return self;
+        }
+        self.task.inputs.push(InputSpec {
+            wire: wire.to_string(),
+            buffer: BufferSpec::buffer(n),
+            service: false,
+        });
+        self
+    }
+
+    /// Add a sliding-window input port (`wire[n/slide]`, §III-I).
+    pub fn reads_window(mut self, wire: &str, n: usize, slide: usize) -> Self {
+        if !valid_name(wire) {
+            self.pb.errors.push(format!("task '{}': bad wire name '{wire}'", self.task.name));
+            return self;
+        }
+        if slide > n || slide == 0 || n == 0 {
+            self.pb
+                .errors
+                .push(format!("task '{}': bad window [{n}/{slide}]", self.task.name));
+            return self;
+        }
+        self.task.inputs.push(InputSpec {
+            wire: wire.to_string(),
+            buffer: BufferSpec::window(n, slide),
+            service: false,
+        });
+        self
+    }
+
+    /// Add an implicit service-lookup input (`name?`, §III-D) — an
+    /// out-of-band client-server call recorded for forensics, not a
+    /// stream wire.
+    pub fn looks_up(mut self, service: &str) -> Self {
+        if !valid_name(service) {
+            self.pb
+                .errors
+                .push(format!("task '{}': bad service name '{service}'", self.task.name));
+            return self;
+        }
+        self.task.inputs.push(InputSpec {
+            wire: service.to_string(),
+            buffer: BufferSpec::default(),
+            service: true,
+        });
+        self
+    }
+
+    /// Add an output wire.
+    pub fn emits(mut self, wire: &str) -> Self {
+        if !valid_name(wire) {
+            self.pb.errors.push(format!("task '{}': bad wire name '{wire}'", self.task.name));
+            return self;
+        }
+        self.task.outputs.push(wire.to_string());
+        self
+    }
+
+    /// Set a raw `@key=value` attribute.
+    pub fn attr(mut self, key: &str, value: &str) -> Self {
+        self.task.attrs.insert(key.to_string(), value.to_string());
+        self
+    }
+
+    /// Sugar for `@policy=…` (allnew / swap / merge).
+    pub fn policy(self, policy: &str) -> Self {
+        self.attr("policy", policy)
+    }
+
+    /// Sugar for `@region=…` (placement, §IV).
+    pub fn region(self, region: &str) -> Self {
+        self.attr("region", region)
+    }
+
+    /// Sugar for `@notify=…` (`push` or `poll:Nms`, Principle 1).
+    pub fn notify(self, notify: &str) -> Self {
+        self.attr("notify", notify)
+    }
+
+    /// Seal this task and return to the pipeline level (for loops that
+    /// add tasks programmatically).
+    pub fn done(self) -> PipelineBuilder {
+        let mut pb = self.pb;
+        pb.tasks.push(self.task);
+        pb
+    }
+
+    /// Seal this task and open the next.
+    pub fn task(self, name: &str) -> TaskBuilder {
+        self.done().task(name)
+    }
+
+    /// Seal this task and lower to a validated [`PipelineSpec`].
+    pub fn build(self) -> Result<PipelineSpec> {
+        self.done().build()
+    }
+
+    /// Seal this task, then build, validate and deploy.
+    pub fn deploy(self, cfg: DeployConfig) -> Result<Pipeline> {
+        self.done().deploy(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::parse;
+
+    #[test]
+    fn builder_matches_parser_on_the_fig5_wiring() {
+        let built = PipelineBuilder::new("tfmodel")
+            .task("learn-tf").reads("in").emits("model")
+            .task("convert").reads("in[10/2]").emits("json")
+            .task("predict").reads("json").looks_up("lookup").emits("result")
+            .build()
+            .unwrap();
+        let parsed = parse(
+            "[tfmodel]\n\
+             (in) learn-tf (model)\n\
+             (in[10/2]) convert (json)\n\
+             (json, lookup?) predict (result)\n",
+        )
+        .unwrap();
+        assert_eq!(built, parsed, "builder and parser lower to the same spec");
+    }
+
+    #[test]
+    fn sugar_methods_equal_token_grammar() {
+        let a = PipelineBuilder::new("p")
+            .task("t").reads("w[4]").reads("v[10/2]").reads("s?").emits("o")
+            .build()
+            .unwrap();
+        let b = PipelineBuilder::new("p")
+            .task("t")
+            .reads_buffered("w", 4)
+            .reads_window("v", 10, 2)
+            .looks_up("s")
+            .emits("o")
+            .build()
+            .unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn attrs_round_trip_through_text() {
+        let built = PipelineBuilder::new("p")
+            .task("t").reads("a").emits("b").policy("swap").region("edge-0").notify("poll:50ms")
+            .build()
+            .unwrap();
+        let reparsed = parse(&built.to_text()).unwrap();
+        assert_eq!(built, reparsed);
+    }
+
+    #[test]
+    fn deferred_errors_surface_at_build() {
+        let e = PipelineBuilder::new("p")
+            .task("t").reads("a[").emits("b")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("task 't'"), "{e}");
+        assert!(e.contains("unterminated"), "{e}");
+
+        let e = PipelineBuilder::new("p")
+            .task("bad name").reads("a").emits("b")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("bad task name"), "{e}");
+
+        // window violations are caught both at the port grammar…
+        assert!(PipelineBuilder::new("p").task("t").reads("a[3/9]").emits("b").build().is_err());
+        // …and by the shared spec validation for the typed variant
+        assert!(PipelineBuilder::new("p")
+            .task("t")
+            .reads_window("a", 3, 9)
+            .emits("b")
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn validation_matches_parsed_specs() {
+        // self-loop: rejected exactly like a parsed spec
+        let e = PipelineBuilder::new("p").task("t").reads("a").emits("a").build();
+        assert!(e.is_err());
+        // empty pipeline rejected
+        assert!(PipelineBuilder::new("p").build().is_err());
+    }
+}

@@ -1,0 +1,554 @@
+//! The handle-based client API — the documented entry point.
+//!
+//! The paper's "serverless experience" (§III) means users talk to a
+//! *pipeline*, not to its plumbing: no Kubernetes, no topics, no storage
+//! tiers — and, this module adds, no stringly-typed re-resolution on every
+//! call either. A [`Pipeline`] wraps a deployed
+//! [`Coordinator`](crate::coordinator::Coordinator) and hands back three
+//! kinds of typed, pre-resolved handles:
+//!
+//!  * [`SourceHandle`] — an external in-tray wire (nobody produces it).
+//!    The only handle that can [`inject`](SourceHandle::inject),
+//!    [`inject_batch`](SourceHandle::inject_batch) and
+//!    [`inject_ghost`](SourceHandle::inject_ghost).
+//!  * [`SinkHandle`] — a pipeline output wire (nobody consumes it). The
+//!    only handle that can [`read`](SinkHandle::read),
+//!    [`count`](SinkHandle::count), [`drain`](SinkHandle::drain) and
+//!    [`demand`](SinkHandle::demand).
+//!  * [`TaskHandle`] — a task agent: [`plug`](TaskHandle::plug),
+//!    [`hot_swap`](TaskHandle::hot_swap), [`fire`](TaskHandle::fire) and
+//!    the provenance queries.
+//!
+//! Each handle carries its dense interned [`WireId`]/[`TaskId`], so
+//! steady-state calls ride PR 2's id-routed fast path by construction —
+//! no name hashing, and no `Result` for resolution failures that can no
+//! longer happen (resolution happened once, at [`Pipeline::source`] &
+//! friends, where unknown names fail with near-miss candidates).
+//!
+//! Handles are `Copy` tokens bound to the deployment that minted them; a
+//! handle used against a different `Pipeline` panics with a clear message
+//! rather than silently aliasing another pipeline's dense state.
+//!
+//! Pipelines are wired either from fig. 5 spec text
+//! ([`spec::parse`](crate::spec::parse)) or programmatically with
+//! [`PipelineBuilder`] — both lower to the same validated
+//! [`PipelineSpec`], a property the test suite checks.
+//!
+//! ```text
+//! let mut pipe = PipelineBuilder::new("vision")
+//!     .task("detect").reads("frames[3]").emits("alerts")
+//!     .deploy(DeployConfig::default())?;
+//! let frames = pipe.source("frames")?;   // resolve once…
+//! let alerts = pipe.sink("alerts")?;
+//! frames.inject_batch(&mut pipe, &batch, DataClass::Raw); // …route on ids forever
+//! pipe.run_until_idle();
+//! println!("{} alerts", alerts.count(&pipe));
+//! ```
+
+pub mod builder;
+
+pub use builder::{PipelineBuilder, TaskBuilder};
+
+use crate::av::{AnnotatedValue, DataClass, Payload};
+use crate::coordinator::{Collected, Coordinator, DeployConfig};
+use crate::provenance::{CheckpointEntry, ProvenanceQuery};
+use crate::spec::PipelineSpec;
+use crate::task::UserCode;
+use crate::util::{suggest, AvId, ObjectId, RegionId, SimTime, TaskId, WireId};
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic deployment tokens: every `Pipeline` gets a fresh one, and
+/// every handle carries its pipeline's, so cross-pipeline handle misuse is
+/// caught instead of silently indexing another deployment's dense state.
+static NEXT_TOKEN: AtomicU64 = AtomicU64::new(1);
+
+/// A deployed pipeline plus its typed entry points. Derefs to
+/// [`Coordinator`], so the full platform surface (run control, metrics,
+/// provenance registry, the string-keyed compatibility wrappers) remains
+/// reachable; the handles are the steady-state API.
+pub struct Pipeline {
+    coord: Coordinator,
+    spec: PipelineSpec,
+    cfg: DeployConfig,
+    token: u64,
+    sources: Vec<SourceHandle>,
+    sinks: Vec<SinkHandle>,
+    tasks: Vec<TaskHandle>,
+}
+
+impl std::ops::Deref for Pipeline {
+    type Target = Coordinator;
+    fn deref(&self) -> &Coordinator {
+        &self.coord
+    }
+}
+
+impl std::ops::DerefMut for Pipeline {
+    fn deref_mut(&mut self) -> &mut Coordinator {
+        &mut self.coord
+    }
+}
+
+impl Pipeline {
+    /// Deploy a validated spec and mint handles for every source wire,
+    /// sink wire and task.
+    pub fn deploy(spec: &PipelineSpec, cfg: DeployConfig) -> Result<Self> {
+        let coord = Coordinator::deploy(spec, cfg.clone())?;
+        Self::attach(coord, spec.clone(), cfg)
+    }
+
+    /// Wrap an already-deployed coordinator. `spec` must be the spec the
+    /// coordinator was deployed from (its wires/tasks are resolved against
+    /// the coordinator's intern tables here, once).
+    pub fn attach(coord: Coordinator, spec: PipelineSpec, cfg: DeployConfig) -> Result<Self> {
+        let token = NEXT_TOKEN.fetch_add(1, Ordering::Relaxed);
+        let resolve = |wire: &str| -> Result<WireId> {
+            coord.graph.wires.id(wire).ok_or_else(|| {
+                anyhow!("spec/coordinator mismatch: wire '{wire}' is not in the deployed wire table")
+            })
+        };
+        let mut sources = Vec::new();
+        for w in spec.external_wires() {
+            sources.push(SourceHandle { token, wire: resolve(&w)? });
+        }
+        let mut sinks = Vec::new();
+        for w in spec.sink_wires() {
+            sinks.push(SinkHandle { token, wire: resolve(&w)? });
+        }
+        let tasks = (0..coord.graph.n_tasks())
+            .map(|i| TaskHandle { token, task: TaskId::new(i as u64) })
+            .collect();
+        Ok(Self { coord, spec, cfg, token, sources, sinks, tasks })
+    }
+
+    /// The wiring this pipeline was deployed from.
+    pub fn spec(&self) -> &PipelineSpec {
+        &self.spec
+    }
+
+    /// The deploy-time configuration (forensic replay redeploys from it).
+    pub fn config(&self) -> &DeployConfig {
+        &self.cfg
+    }
+
+    /// Unwrap back to the bare coordinator.
+    pub fn into_inner(self) -> Coordinator {
+        self.coord
+    }
+
+    // ------------------------------------------------------------------
+    // Handle resolution — the one place names are looked up
+    // ------------------------------------------------------------------
+
+    /// Resolve a source (external in-tray) wire. Fails with near-miss
+    /// candidates for unknown names, and explains when the wire exists
+    /// but is task-produced (so injection is illegal on it).
+    pub fn source(&self, wire: &str) -> Result<SourceHandle> {
+        if let Some(w) = self.coord.graph.wires.id(wire) {
+            if let Some(h) = self.sources.iter().find(|s| s.wire == w) {
+                return Ok(*h);
+            }
+            let producers: Vec<&str> = self
+                .coord
+                .graph
+                .wires
+                .producers(w)
+                .iter()
+                .map(|t| self.coord.graph.task(*t).name.as_str())
+                .collect();
+            if !producers.is_empty() {
+                return Err(anyhow!(
+                    "wire '{wire}' is produced by task(s) {} — not an external in-tray; \
+                     inject upstream of it instead",
+                    producers.join(", ")
+                ));
+            }
+        }
+        Err(anyhow!(
+            "no source wire '{wire}' in pipeline [{}]{}",
+            self.spec.name,
+            suggest(wire, "source wire", self.sources.iter().map(|h| self.wire_name(h.wire)))
+        ))
+    }
+
+    /// Resolve a sink (pipeline output) wire. Fails with near-miss
+    /// candidates, and explains when the wire exists but has consumers
+    /// (so it never collects — probe it with a breadboard tap instead).
+    pub fn sink(&self, wire: &str) -> Result<SinkHandle> {
+        if let Some(w) = self.coord.graph.wires.id(wire) {
+            if let Some(h) = self.sinks.iter().find(|s| s.wire == w) {
+                return Ok(*h);
+            }
+            return Err(anyhow!(
+                "wire '{wire}' is consumed inside pipeline [{}] — not a sink; \
+                 probe it with a breadboard tap instead",
+                self.spec.name
+            ));
+        }
+        Err(anyhow!(
+            "no sink wire '{wire}' in pipeline [{}]{}",
+            self.spec.name,
+            suggest(wire, "sink wire", self.sinks.iter().map(|h| self.wire_name(h.wire)))
+        ))
+    }
+
+    /// Resolve a task by name; unknown names list near-miss candidates.
+    pub fn task(&self, name: &str) -> Result<TaskHandle> {
+        match self.coord.graph.task_id(name) {
+            Some(id) => Ok(self.tasks[id.index()]),
+            None => Err(anyhow!(
+                "no task '{name}' in pipeline [{}]{}",
+                self.spec.name,
+                suggest(name, "task", self.coord.graph.tasks.iter().map(|t| t.name.as_str()))
+            )),
+        }
+    }
+
+    /// Every external in-tray, in spec order.
+    pub fn sources(&self) -> &[SourceHandle] {
+        &self.sources
+    }
+
+    /// Every pipeline output, in spec order.
+    pub fn sinks(&self) -> &[SinkHandle] {
+        &self.sinks
+    }
+
+    /// Every task, in spec order (index = dense [`TaskId`]).
+    pub fn tasks(&self) -> &[TaskHandle] {
+        &self.tasks
+    }
+
+    fn wire_name(&self, wire: WireId) -> &str {
+        self.coord.graph.wires.name(wire)
+    }
+
+    /// Crate-internal guard for sibling modules (e.g. breadboard session
+    /// verbs) that index on a handle's raw id: panics unless `task` was
+    /// minted by this deployment, like every handle method does.
+    #[track_caller]
+    pub(crate) fn check_task(&self, task: TaskHandle) {
+        self.check(task.token);
+    }
+
+    #[track_caller]
+    fn check(&self, token: u64) {
+        assert!(
+            token == self.token,
+            "handle belongs to a different Pipeline deployment — handles are minted \
+             per deployment (pipeline [{}]) and cannot be shared across instances",
+            self.spec.name
+        );
+    }
+}
+
+/// An external in-tray wire: the only handle that can put data into the
+/// pipeline. Pre-validated at mint time — every call routes on the dense
+/// [`WireId`] with no name resolution and no resolution `Result`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct SourceHandle {
+    token: u64,
+    wire: WireId,
+}
+
+impl SourceHandle {
+    /// The interned wire id this handle routes on.
+    pub fn wire_id(self) -> WireId {
+        self.wire
+    }
+
+    /// The wire's spec name (cold path — display/logging only).
+    pub fn name(self, pipe: &Pipeline) -> &str {
+        pipe.check(self.token);
+        pipe.wire_name(self.wire)
+    }
+
+    /// Inject one payload now, into the first region.
+    pub fn inject(self, pipe: &mut Pipeline, payload: Payload, class: DataClass) -> AvId {
+        let at = pipe.coord.plat.now;
+        self.inject_at(pipe, payload, class, RegionId::new(0), at)
+    }
+
+    /// Inject one payload at `at` (≥ now) in `region`.
+    pub fn inject_at(
+        self,
+        pipe: &mut Pipeline,
+        payload: Payload,
+        class: DataClass,
+        region: RegionId,
+        at: SimTime,
+    ) -> AvId {
+        pipe.check(self.token);
+        pipe.coord
+            .inject_at_id(self.wire, payload, class, region, at)
+            .expect("source handles are pre-validated against the wire table")
+    }
+
+    /// Batched injection now, into the first region: N payloads, zero name
+    /// resolutions, per-batch (not per-event) validation and heap
+    /// reservation — see `Coordinator::inject_batch_at_id`.
+    pub fn inject_batch(
+        self,
+        pipe: &mut Pipeline,
+        payloads: &[Payload],
+        class: DataClass,
+    ) -> Vec<AvId> {
+        let at = pipe.coord.plat.now;
+        self.inject_batch_at(pipe, payloads, class, RegionId::new(0), at)
+    }
+
+    /// Batched injection at `at` (≥ now) in `region`.
+    pub fn inject_batch_at(
+        self,
+        pipe: &mut Pipeline,
+        payloads: &[Payload],
+        class: DataClass,
+        region: RegionId,
+        at: SimTime,
+    ) -> Vec<AvId> {
+        pipe.check(self.token);
+        pipe.coord
+            .inject_batch_at_id(self.wire, payloads.iter().cloned(), class, region, at)
+            .expect("source handles are pre-validated against the wire table")
+    }
+
+    /// Inject a ghost batch (§III-K): routes are exercised, payloads are
+    /// pretend-sized, compute is skipped.
+    pub fn inject_ghost(self, pipe: &mut Pipeline, pretend_bytes: u64, region: RegionId) -> AvId {
+        let at = pipe.coord.plat.now;
+        self.inject_at(
+            pipe,
+            Payload::Ghost { pretend_bytes },
+            DataClass::Ghost,
+            region,
+            at,
+        )
+    }
+}
+
+/// A pipeline output wire: the only handle that can read what the
+/// pipeline produced. Reads are dense [`WireId`]-indexed slices.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct SinkHandle {
+    token: u64,
+    wire: WireId,
+}
+
+impl SinkHandle {
+    /// The interned wire id this handle routes on.
+    pub fn wire_id(self) -> WireId {
+        self.wire
+    }
+
+    /// The wire's spec name (cold path — display/logging only).
+    pub fn name(self, pipe: &Pipeline) -> &str {
+        pipe.check(self.token);
+        pipe.wire_name(self.wire)
+    }
+
+    /// Everything collected on this sink so far (oldest first).
+    pub fn read(self, pipe: &Pipeline) -> &[Collected] {
+        pipe.check(self.token);
+        pipe.coord.collected.by_id(self.wire)
+    }
+
+    /// Number of artifacts collected on this sink.
+    pub fn count(self, pipe: &Pipeline) -> usize {
+        self.read(pipe).len()
+    }
+
+    /// The most recent artifact, if any.
+    pub fn latest(self, pipe: &Pipeline) -> Option<&Collected> {
+        self.read(pipe).last()
+    }
+
+    /// Take everything collected so far, leaving the sink empty — the
+    /// consuming read for long-running sessions.
+    pub fn drain(self, pipe: &mut Pipeline) -> Vec<Collected> {
+        pipe.check(self.token);
+        pipe.coord.collected.drain_id(self.wire)
+    }
+
+    /// Make-mode pull (§III-B's first trigger case): bring this output up
+    /// to date, rebuilding exactly the stale dependency suffix, and return
+    /// the now-current AV. Fallible — upstream user code can fail, and an
+    /// external dependency may never have been fed.
+    pub fn demand(self, pipe: &mut Pipeline) -> Result<AnnotatedValue> {
+        pipe.check(self.token);
+        pipe.coord.demand_id(self.wire)
+    }
+}
+
+/// A task agent: plug/replace code, fire sources, query provenance.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct TaskHandle {
+    token: u64,
+    task: TaskId,
+}
+
+impl TaskHandle {
+    /// The dense task id this handle routes on.
+    pub fn task_id(self) -> TaskId {
+        self.task
+    }
+
+    /// The task's spec name (cold path — display/logging only).
+    pub fn name(self, pipe: &Pipeline) -> &str {
+        pipe.check(self.token);
+        &pipe.coord.graph.task(self.task).name
+    }
+
+    /// Plug user code into this task (recorded in the agent's versioned
+    /// code slot history). Infallible: the handle cannot dangle.
+    pub fn plug(self, pipe: &mut Pipeline, code: Box<dyn UserCode>) {
+        pipe.check(self.token);
+        pipe.coord.set_code_id(self.task, code);
+    }
+
+    /// Run this task once with an empty snapshot (a pure source "fires").
+    /// Fallible — the user code itself can error.
+    pub fn fire(self, pipe: &mut Pipeline) -> Result<()> {
+        pipe.check(self.token);
+        pipe.coord.run_source_id(self.task)
+    }
+
+    /// Deploy new user code (§III-J software update): memo invalidation +
+    /// downstream cache eviction + optional recompute of the last
+    /// snapshot. Returns the eviction as (entries, bytes). For the
+    /// session-recorded, dry-run-previewed variant use
+    /// [`Breadboard::hot_swap`](crate::breadboard::Breadboard::hot_swap).
+    pub fn hot_swap(
+        self,
+        pipe: &mut Pipeline,
+        code: Box<dyn UserCode>,
+        recompute_last: bool,
+    ) -> Result<(usize, u64)> {
+        pipe.check(self.token);
+        pipe.coord.software_update_id(self.task, code, recompute_last)
+    }
+
+    /// Current software version of the plugged code.
+    pub fn version(self, pipe: &Pipeline) -> u32 {
+        pipe.check(self.token);
+        pipe.coord.agents[self.task.index()].version()
+    }
+
+    /// §III-C story 2: this task's checkpoint log, oldest first.
+    pub fn checkpoint_log(self, pipe: &Pipeline) -> &[CheckpointEntry] {
+        pipe.check(self.token);
+        pipe.coord.plat.prov.checkpoint_log(self.task)
+    }
+
+    /// §III-J: every (time, from, to) software version change recorded
+    /// for this task.
+    pub fn version_changes(self, pipe: &Pipeline) -> Vec<(SimTime, u32, u32)> {
+        pipe.check(self.token);
+        ProvenanceQuery::new(&pipe.coord.plat.prov).version_changes(self.task)
+    }
+
+    /// §III-J staleness frontier: (stale AV count, storage objects behind
+    /// them) if this task's code were replaced now.
+    pub fn stale_frontier(self, pipe: &Pipeline) -> (usize, Vec<(ObjectId, u64)>) {
+        pipe.check(self.token);
+        pipe.coord.stale_frontier_of(self.task)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::parse;
+
+    fn pipe() -> Pipeline {
+        let spec = parse("[h]\n(raw) work (mid)\n(mid) finish (out)\n").unwrap();
+        Pipeline::deploy(&spec, DeployConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn handles_resolve_and_classify() {
+        let p = pipe();
+        assert_eq!(p.sources().len(), 1);
+        assert_eq!(p.sinks().len(), 1);
+        assert_eq!(p.tasks().len(), 2);
+        let raw = p.source("raw").unwrap();
+        assert_eq!(raw.name(&p), "raw");
+        let out = p.sink("out").unwrap();
+        assert_eq!(out.name(&p), "out");
+        assert_eq!(p.task("work").unwrap().name(&p), "work");
+
+        // wrong-kind resolutions explain themselves
+        let e = p.source("mid").unwrap_err().to_string();
+        assert!(e.contains("produced by task(s) work"), "{e}");
+        let e = p.sink("mid").unwrap_err().to_string();
+        assert!(e.contains("consumed inside"), "{e}");
+        // unknown names get near-miss candidates
+        let e = p.source("rew").unwrap_err().to_string();
+        assert!(e.contains("did you mean 'raw'?"), "{e}");
+        let e = p.task("wrok").unwrap_err().to_string();
+        assert!(e.contains("did you mean 'work'?"), "{e}");
+    }
+
+    #[test]
+    fn inject_and_read_through_handles() {
+        let mut p = pipe();
+        let raw = p.source("raw").unwrap();
+        let out = p.sink("out").unwrap();
+        let id = raw.inject(&mut p, Payload::scalar(1.0), DataClass::Summary);
+        let _ = id;
+        p.run_until_idle();
+        assert_eq!(out.count(&p), 1);
+        assert!(out.latest(&p).is_some());
+        // drain empties the dense store
+        let drained = out.drain(&mut p);
+        assert_eq!(drained.len(), 1);
+        assert_eq!(out.count(&p), 0);
+    }
+
+    #[test]
+    fn batch_inject_fans_out_per_payload() {
+        let mut p = pipe();
+        let raw = p.source("raw").unwrap();
+        let out = p.sink("out").unwrap();
+        let batch: Vec<Payload> = (0..8).map(|i| Payload::scalar(i as f32)).collect();
+        let ids = raw.inject_batch(&mut p, &batch, DataClass::Summary);
+        assert_eq!(ids.len(), 8);
+        p.run_until_idle();
+        assert_eq!(out.count(&p), 8, "every batched payload traversed the pipeline");
+        // the forensic ledger recorded each payload individually
+        assert_eq!(p.plat.prov.injections().len(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "different Pipeline deployment")]
+    fn cross_pipeline_handles_panic() {
+        let p1 = pipe();
+        let mut p2 = pipe();
+        let alien = p1.source("raw").unwrap();
+        alien.inject(&mut p2, Payload::scalar(1.0), DataClass::Summary);
+    }
+
+    #[test]
+    fn task_handle_verbs() {
+        let mut p = pipe();
+        let work = p.task("work").unwrap();
+        assert_eq!(work.version(&p), 1);
+        work.plug(
+            &mut p,
+            Box::new(crate::task::builtins::PassThrough::new("mid")),
+        );
+        let (evicted, _bytes) = work
+            .hot_swap(
+                &mut p,
+                Box::new(crate::task::builtins::FnTask::versioned(
+                    |_ctx: &mut crate::task::TaskCtx<'_>, _s: &crate::policy::Snapshot| Ok(vec![]),
+                    2,
+                )),
+                false,
+            )
+            .unwrap();
+        let _ = evicted;
+        assert_eq!(work.version(&p), 2);
+        assert_eq!(work.version_changes(&p).len(), 1);
+    }
+}

@@ -31,6 +31,7 @@ pub use replay::{ReplayReport, ReplayRun, WireDiff, WINDOW_END};
 pub use swap::SwapPreview;
 pub use tap::{TapId, TapSample, TapSpec, TapStats};
 
+use crate::api::{Pipeline, TaskHandle};
 use crate::coordinator::{Coordinator, DeployConfig};
 use crate::provenance::InjectionRecord;
 use crate::spec::PipelineSpec;
@@ -65,12 +66,12 @@ pub struct SwapRecord {
 
 /// An interactive session over a deployed pipeline.
 ///
-/// Derefs to [`Coordinator`], so the full platform API (inject, run_until,
-/// demand, collected, …) stays available on the session object.
+/// Derefs to [`Pipeline`] (which derefs on to [`Coordinator`]), so both
+/// the handle API (source/sink/task resolution, handle verbs) and the
+/// full platform surface (run control, collected, …) stay available on
+/// the session object.
 pub struct Breadboard {
-    coord: Coordinator,
-    spec: PipelineSpec,
-    cfg: DeployConfig,
+    pipe: Pipeline,
     /// Code factories per task — the session's record of what is plugged
     /// in, reused to provision replay coordinators.
     factories: HashMap<String, CodeFactory>,
@@ -82,36 +83,33 @@ pub struct Breadboard {
 }
 
 impl std::ops::Deref for Breadboard {
-    type Target = Coordinator;
-    fn deref(&self) -> &Coordinator {
-        &self.coord
+    type Target = Pipeline;
+    fn deref(&self) -> &Pipeline {
+        &self.pipe
     }
 }
 
 impl std::ops::DerefMut for Breadboard {
-    fn deref_mut(&mut self) -> &mut Coordinator {
-        &mut self.coord
+    fn deref_mut(&mut self) -> &mut Pipeline {
+        &mut self.pipe
     }
 }
 
 impl Breadboard {
     /// Deploy a spec and wrap it in a session.
     pub fn deploy(spec: &PipelineSpec, cfg: DeployConfig) -> Result<Self> {
-        let coord = Coordinator::deploy(spec, cfg.clone())?;
-        Ok(Self {
-            coord,
-            spec: spec.clone(),
-            cfg,
-            factories: HashMap::new(),
-            principal: None,
-            swaps: Vec::new(),
-        })
+        Ok(Self::around(Pipeline::deploy(spec, cfg)?))
     }
 
     /// Wrap an already-deployed coordinator. Replay needs the spec and the
     /// deploy config the coordinator was built with.
-    pub fn attach(coord: Coordinator, spec: PipelineSpec, cfg: DeployConfig) -> Self {
-        Self { coord, spec, cfg, factories: HashMap::new(), principal: None, swaps: Vec::new() }
+    pub fn attach(coord: Coordinator, spec: PipelineSpec, cfg: DeployConfig) -> Result<Self> {
+        Ok(Self::around(Pipeline::attach(coord, spec, cfg)?))
+    }
+
+    /// Wrap a [`Pipeline`] facade in a session.
+    pub fn around(pipe: Pipeline) -> Self {
+        Self { pipe, factories: HashMap::new(), principal: None, swaps: Vec::new() }
     }
 
     /// Run the session as `who`: every tap/swap/replay is checked against
@@ -121,18 +119,14 @@ impl Breadboard {
         self
     }
 
-    pub fn spec(&self) -> &PipelineSpec {
-        &self.spec
-    }
-
     /// Unwrap back to the bare coordinator.
     pub fn into_inner(self) -> Coordinator {
-        self.coord
+        self.pipe.into_inner()
     }
 
-    fn authorize(&mut self, resource: Resource) -> Result<()> {
+    fn authorize(&self, resource: Resource) -> Result<()> {
         if let Some(p) = &self.principal {
-            if !self.coord.plat.workspaces.check(p, &resource) {
+            if !self.pipe.plat.workspaces.check(p, &resource) {
                 bail!("workspace denial: '{p}' holds no grant for {resource:?}");
             }
         }
@@ -144,28 +138,40 @@ impl Breadboard {
     /// (`name?`) are not wires — they never pass the publication probe
     /// points — and are rejected with their own message in [`tap_with`].
     fn wire_exists(&self, wire: &str) -> bool {
-        self.spec.tasks.iter().any(|t| {
+        self.pipe.spec().tasks.iter().any(|t| {
             t.outputs.iter().any(|o| o == wire) || t.stream_inputs().any(|i| i.wire == wire)
         })
     }
 
     fn is_service_input(&self, wire: &str) -> bool {
-        self.spec.tasks.iter().any(|t| t.service_inputs().any(|i| i.wire == wire))
+        self.pipe.spec().tasks.iter().any(|t| t.service_inputs().any(|i| i.wire == wire))
     }
 
     // ------------------------------------------------------------------
     // Code plugging (records factories so replay can re-provision)
     // ------------------------------------------------------------------
 
-    /// Plug user code into a task, keeping the factory so forensic replay
-    /// can rebuild an identical agent. Prefer this over raw
+    /// Plug user code into a task handle, keeping the factory so forensic
+    /// replay can rebuild an identical agent. Prefer this (or the
+    /// string-keyed [`Breadboard::plug`] wrapper) over raw
     /// [`Coordinator::set_code`] inside sessions.
+    pub fn plug_task<F>(&mut self, task: TaskHandle, factory: F)
+    where
+        F: Fn() -> Box<dyn UserCode> + 'static,
+    {
+        let name = task.name(&self.pipe).to_string();
+        task.plug(&mut self.pipe, factory());
+        self.factories.insert(name, Box::new(factory));
+    }
+
+    /// Name-resolving wrapper over [`Breadboard::plug_task`], kept for
+    /// spec-text-driven scripts; the handle form is the steady-state API.
     pub fn plug<F>(&mut self, task: &str, factory: F) -> Result<()>
     where
         F: Fn() -> Box<dyn UserCode> + 'static,
     {
-        self.coord.set_code(task, factory())?;
-        self.factories.insert(task.to_string(), Box::new(factory));
+        let h = self.pipe.task(task)?;
+        self.plug_task(h, factory);
         Ok(())
     }
 
@@ -189,22 +195,22 @@ impl Breadboard {
                      directory's forensic lookup log instead"
                 );
             }
-            bail!("no wire '{wire}' in pipeline [{}]", self.spec.name);
+            bail!("no wire '{wire}' in pipeline [{}]", self.pipe.spec().name);
         }
-        Ok(self.coord.taps.attach(wire, spec))
+        Ok(self.pipe.taps.attach(wire, spec))
     }
 
     /// Detach a tap; its ring is discarded. (Not gated: detaching only
     /// reduces access.)
     pub fn detach(&mut self, id: TapId) -> bool {
-        self.coord.taps.detach(id)
+        self.pipe.taps.detach(id)
     }
 
     /// The wire a tap (still) watches, re-checked against the principal's
     /// grants: revoking a Wire grant locks existing taps' rings too, not
     /// just new attachments.
     fn authorize_tap_read(&mut self, id: TapId) -> Result<bool> {
-        let wire = match self.coord.taps.wire_of(id) {
+        let wire = match self.pipe.taps.wire_of(id) {
             Some(w) => w.to_string(),
             None => return Ok(false),
         };
@@ -218,7 +224,7 @@ impl Breadboard {
         if !self.authorize_tap_read(id)? {
             return Ok(Vec::new());
         }
-        Ok(self.coord.taps.samples_vec(id))
+        Ok(self.pipe.taps.samples_vec(id))
     }
 
     /// Read-and-clear a tap's ring. Workspace-gated like attach.
@@ -226,7 +232,7 @@ impl Breadboard {
         if !self.authorize_tap_read(id)? {
             return Ok(Vec::new());
         }
-        Ok(self.coord.taps.drain(id))
+        Ok(self.pipe.taps.drain(id))
     }
 
     /// Per-tap overhead counters. Workspace-gated like the other reads
@@ -236,7 +242,7 @@ impl Breadboard {
         if !self.authorize_tap_read(id)? {
             return Ok(None);
         }
-        Ok(self.coord.taps.stats(id))
+        Ok(self.pipe.taps.stats(id))
     }
 
     // ------------------------------------------------------------------
@@ -245,62 +251,83 @@ impl Breadboard {
 
     /// Process exactly one pending event; returns its virtual time.
     pub fn step(&mut self) -> Option<SimTime> {
-        self.coord.step_event()
+        self.pipe.step_event()
     }
 
     /// Advance virtual time by `d`, processing everything due.
     pub fn run_for(&mut self, d: SimDuration) -> u64 {
-        self.coord.run_for(d)
+        self.pipe.run_for(d)
     }
 
     // ------------------------------------------------------------------
     // Hot-swap
     // ------------------------------------------------------------------
 
-    /// Dry-run a swap: report what moving `task` to `new_version` would
-    /// invalidate. Nothing mutates.
-    pub fn swap_preview(&mut self, task: &str, new_version: u32) -> Result<SwapPreview> {
-        self.authorize(Resource::Pipeline(self.spec.name.clone()))?;
-        let id = self.coord.task_id(task)?;
-        Ok(swap::preview(&self.coord, id, new_version))
+    /// Dry-run a swap on a task handle: report what moving it to
+    /// `new_version` would invalidate. Nothing mutates.
+    pub fn swap_preview_task(&mut self, task: TaskHandle, new_version: u32) -> Result<SwapPreview> {
+        self.pipe.check_task(task);
+        self.authorize(Resource::Pipeline(self.pipe.spec().name.clone()))?;
+        Ok(swap::preview(&self.pipe, task.task_id(), new_version))
     }
 
-    /// Commit a hot-swap: install `factory()`'s code (which must carry a
-    /// new version), stamp the version change into provenance, invalidate
-    /// the task's memo plus downstream dependent-local caches, and — when
-    /// `recompute_last` — immediately re-run the last snapshot so corrected
-    /// results propagate (§III-J "roll back the feed").
-    pub fn hot_swap<F>(&mut self, task: &str, factory: F, recompute_last: bool) -> Result<SwapOutcome>
+    /// Name-resolving wrapper over [`Breadboard::swap_preview_task`].
+    pub fn swap_preview(&mut self, task: &str, new_version: u32) -> Result<SwapPreview> {
+        let h = self.pipe.task(task)?;
+        self.swap_preview_task(h, new_version)
+    }
+
+    /// Commit a hot-swap on a task handle: install `factory()`'s code
+    /// (which must carry a version bump), stamp the version change into
+    /// provenance, invalidate the task's memo plus downstream
+    /// dependent-local caches, and — when `recompute_last` — immediately
+    /// re-run the last snapshot so corrected results propagate (§III-J
+    /// "roll back the feed").
+    pub fn hot_swap_task<F>(
+        &mut self,
+        task: TaskHandle,
+        factory: F,
+        recompute_last: bool,
+    ) -> Result<SwapOutcome>
     where
         F: Fn() -> Box<dyn UserCode> + 'static,
     {
-        self.authorize(Resource::Pipeline(self.spec.name.clone()))?;
-        let id = self.coord.task_id(task)?;
+        self.authorize(Resource::Pipeline(self.pipe.spec().name.clone()))?;
+        let name = task.name(&self.pipe).to_string();
         let code = factory();
         let new_v = code.version();
-        let preview = swap::preview(&self.coord, id, new_v);
+        let preview = swap::preview(&self.pipe, task.task_id(), new_v);
         if new_v <= preview.old_version {
             bail!(
-                "hot-swap of '{task}' needs a version bump (v{} -> v{new_v}); \
+                "hot-swap of '{name}' needs a version bump (v{} -> v{new_v}); \
                  versions must strictly increase so provenance stamps stay \
                  unambiguous about which software produced what",
                 preview.old_version
             );
         }
-        let at = self.coord.plat.now;
-        // software_update performs the downstream cache eviction itself
+        let at = self.pipe.plat.now;
+        // software update performs the downstream cache eviction itself
         // and reports what it actually evicted; the preview above is the
         // dry-run report plus the version-bump guard.
         let (cache_objects_evicted, cache_bytes_evicted) =
-            self.coord.software_update(task, code, recompute_last)?;
-        self.factories.insert(task.to_string(), Box::new(factory));
+            task.hot_swap(&mut self.pipe, code, recompute_last)?;
+        self.factories.insert(name.clone(), Box::new(factory));
         self.swaps.push(SwapRecord {
-            task: task.to_string(),
+            task: name,
             from_version: preview.old_version,
             to_version: new_v,
             at,
         });
         Ok(SwapOutcome { preview, cache_objects_evicted, cache_bytes_evicted, at })
+    }
+
+    /// Name-resolving wrapper over [`Breadboard::hot_swap_task`].
+    pub fn hot_swap<F>(&mut self, task: &str, factory: F, recompute_last: bool) -> Result<SwapOutcome>
+    where
+        F: Fn() -> Box<dyn UserCode> + 'static,
+    {
+        let h = self.pipe.task(task)?;
+        self.hot_swap_task(h, factory, recompute_last)
     }
 
     // ------------------------------------------------------------------
@@ -312,16 +339,16 @@ impl Breadboard {
     /// with this session's code factories, re-inject every recorded
     /// arrival at its recorded virtual time, and drain.
     pub fn forensic_replay(&mut self) -> Result<ReplayRun> {
-        self.authorize(Resource::Provenance(self.spec.name.clone()))?;
-        if !self.cfg.provenance {
+        self.authorize(Resource::Provenance(self.pipe.spec().name.clone()))?;
+        if !self.pipe.config().provenance {
             bail!("provenance was disabled at deploy time: no ledger to replay from");
         }
-        let mut fresh = Coordinator::deploy(&self.spec, self.cfg.clone())
+        let mut fresh = Coordinator::deploy(self.pipe.spec(), self.pipe.config().clone())
             .map_err(|e| anyhow!("replay deploy: {e}"))?;
         for (task, factory) in &self.factories {
             fresh.set_code(task, factory())?;
         }
-        let ledger: Vec<InjectionRecord> = self.coord.plat.prov.injections().to_vec();
+        let ledger: Vec<InjectionRecord> = self.pipe.plat.prov.injections().to_vec();
         let mut injected = 0usize;
         let mut missing = 0usize;
         // resolve each distinct ledger wire name against the fresh
@@ -329,7 +356,7 @@ impl Breadboard {
         // on ids (§Perf — ledgers repeat a handful of wires many times)
         let mut resolved: HashMap<String, WireId> = HashMap::new();
         for rec in ledger {
-            match self.coord.plat.store.peek(rec.object) {
+            match self.pipe.plat.store.peek(rec.object) {
                 Some(obj) => {
                     let wid = match resolved.get(&rec.wire) {
                         Some(w) => *w,
@@ -353,7 +380,7 @@ impl Breadboard {
     /// Diff a replay against the live record over the half-open window
     /// `[from, to)`; pass [`WINDOW_END`] as `to` for the unbounded tail.
     pub fn diff_replay(&self, run: &ReplayRun, from: SimTime, to: SimTime) -> ReplayReport {
-        let live = replay::hash_sequences(&self.coord.collected);
+        let live = replay::hash_sequences(&self.pipe.collected);
         replay::diff_windows(&live, &run.collected, from, to)
     }
 
@@ -563,7 +590,7 @@ mod tests {
         assert!(b.swap_preview("work", 2).is_ok());
         b.plat.workspaces.grant(ws, Resource::Provenance("gated".into()));
         assert!(b.forensic_replay().is_ok());
-        assert!(b.plat.workspaces.denied >= 3);
+        assert!(b.plat.workspaces.denied() >= 3);
 
         // revoking the Wire grant locks the already-attached tap's ring:
         // reading samples is gated the same way attaching was

@@ -26,9 +26,14 @@ impl Coordinator {
     /// graph's precomputed per-wire producer lists (§Perf).
     pub fn demand(&mut self, wire: &str) -> Result<AnnotatedValue> {
         let wid = self.wire_id(wire)?;
+        self.demand_id(wid)
+    }
+
+    /// Id-based demand (the handle API's path — `SinkHandle::demand`).
+    pub fn demand_id(&mut self, wire: WireId) -> Result<AnnotatedValue> {
         let mut visited = HashSet::new();
         self.suppress_routing = true;
-        let r = self.demand_wire(wid, &mut visited);
+        let r = self.demand_wire(wire, &mut visited);
         self.suppress_routing = false;
         r
     }

@@ -163,13 +163,29 @@ impl SinkBook {
     }
 
     /// (wire name, captures) for every wire that collected something.
-    pub fn iter(&self) -> impl Iterator<Item = (&str, &Vec<Collected>)> {
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &[Collected])> {
         self.names
             .iter()
             .zip(&self.per_wire)
             .filter(|(_, v)| !v.is_empty())
-            .map(|(n, v)| (n.as_str(), v))
-            .chain(self.extra.iter().map(|(n, v)| (n.as_str(), v)))
+            .map(|(n, v)| (n.as_str(), v.as_slice()))
+            .chain(self.extra.iter().map(|(n, v)| (n.as_str(), v.as_slice())))
+    }
+
+    /// Dense read by interned id (the handle API's path) — empty slice
+    /// when nothing was collected or the id is out of range.
+    pub fn by_id(&self, wire: WireId) -> &[Collected] {
+        self.per_wire.get(wire.index()).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Take everything collected on `wire` so far, leaving it empty —
+    /// a consuming read for long-running sessions that would otherwise
+    /// accumulate sink captures without bound.
+    pub fn drain_id(&mut self, wire: WireId) -> Vec<Collected> {
+        match self.per_wire.get_mut(wire.index()) {
+            Some(v) => std::mem::take(v),
+            None => Vec::new(),
+        }
     }
 }
 
@@ -451,16 +467,30 @@ impl Coordinator {
     }
 
     /// Plug user code into a task (recorded in the agent's versioned code
-    /// slot history).
+    /// slot history). Thin name→id wrapper over
+    /// [`Coordinator::set_code_id`]; unknown names error with candidates.
     pub fn set_code(&mut self, task: &str, code: Box<dyn UserCode>) -> Result<()> {
         let id = self.task_id(task)?;
-        let now = self.plat.now;
-        self.agents[id.index()].install_code(code, now, "plug");
+        self.set_code_id(id, code);
         Ok(())
     }
 
+    /// Id-based code install (the handle API's path — no name resolution,
+    /// no `Result`: a deploy-time [`TaskId`] cannot fail to resolve).
+    pub fn set_code_id(&mut self, task: TaskId, code: Box<dyn UserCode>) {
+        let now = self.plat.now;
+        self.agents[task.index()].install_code(code, now, "plug");
+    }
+
+    /// Resolve a task name; unknown names list near-miss candidates.
     pub fn task_id(&self, name: &str) -> Result<TaskId> {
-        self.graph.task_id(name).ok_or_else(|| anyhow!("no task '{name}'"))
+        self.graph.task_id(name).ok_or_else(|| {
+            anyhow!(
+                "no task '{name}' in pipeline [{}]{}",
+                self.graph.name,
+                crate::util::suggest(name, "task", self.graph.tasks.iter().map(|t| t.name.as_str()))
+            )
+        })
     }
 
     pub fn agent(&self, name: &str) -> Result<&TaskAgent> {
@@ -498,12 +528,16 @@ impl Coordinator {
         self.inject_at_id(wid, payload, class, region, at)
     }
 
-    /// Resolve a wire name against the deploy-time intern table.
+    /// Resolve a wire name against the deploy-time intern table; unknown
+    /// names list near-miss candidates.
     pub fn wire_id(&self, wire: &str) -> Result<WireId> {
-        self.graph
-            .wires
-            .id(wire)
-            .ok_or_else(|| anyhow!("no wire '{wire}' in pipeline [{}]", self.graph.name))
+        self.graph.wires.id(wire).ok_or_else(|| {
+            anyhow!(
+                "no wire '{wire}' in pipeline [{}]{}",
+                self.graph.name,
+                crate::util::suggest(wire, "wire", self.graph.wires.names().iter().map(|n| n.as_str()))
+            )
+        })
     }
 
     /// Id-based injection — the hot path: no name hashing, no link-list
@@ -526,24 +560,50 @@ impl Coordinator {
                 self.graph.wires.len()
             );
         }
-        if self.graph.wires.injections(wire).is_empty() {
+        let fanout = self.graph.wires.injections(wire).len();
+        if fanout == 0 {
             bail!(
                 "wire '{}' has no injection point (a task produces it)",
                 self.graph.wires.name(wire)
             );
         }
-        let born = at;
+        let watched = self.taps.watches(wire);
+        let current = at <= self.plat.now;
+        let wire_name = self.graph.wires.name(wire).to_string();
+        Ok(self.inject_prepared(wire, &wire_name, payload, class, region, at, watched, current, fanout))
+    }
+
+    /// One payload's mint → ledger → tap → currency → fan-out sequence,
+    /// shared verbatim by [`Coordinator::inject_at_id`] and
+    /// [`Coordinator::inject_batch_at_id`] so the single and batched
+    /// paths can never drift behaviorally. Validation and the per-batch
+    /// hoisting (`watched`, `current`, `fanout`, resolved wire name) live
+    /// in the callers.
+    #[allow(clippy::too_many_arguments)]
+    fn inject_prepared(
+        &mut self,
+        wire: WireId,
+        wire_name: &str,
+        payload: Payload,
+        class: DataClass,
+        region: RegionId,
+        at: SimTime,
+        watched: bool,
+        current: bool,
+        fanout: usize,
+    ) -> AvId {
+        // mint under the arrival clock
         let saved_now = self.plat.now;
         self.plat.now = at;
         let run = self.plat.next_run_id();
         let (av, _lat) =
-            self.plat.mint_av(payload, EXTERNAL, run, 0, SINK, region, class, 0, &[], born);
+            self.plat.mint_av(payload, EXTERNAL, run, 0, SINK, region, class, 0, &[], at);
         self.plat.now = saved_now;
         // forensic ledger: the breadboard replays a window from exactly
         // these records + the deployment seed (§III-J reconstruction)
         self.plat.prov.record_injection(crate::provenance::InjectionRecord {
             av: av.id,
-            wire: self.graph.wires.name(wire).to_string(),
+            wire: wire_name.to_string(),
             at,
             region,
             class,
@@ -555,28 +615,89 @@ impl Coordinator {
         // (fan-out links would otherwise observe them per consumer), at
         // their virtual arrival time (via the queue, not immediately).
         // `watches` is a dense mask, so untapped wires never allocate.
-        if self.taps.watches(wire) {
+        if watched {
             self.push_event(at, EventKind::TapObserve { wire, av: Arc::clone(&av) });
         }
         // Only immediately-visible injections update wire currency now;
         // future-dated arrivals become current when delivered (otherwise a
         // schedule-driven consumer could see data "from the future").
-        if at <= self.plat.now {
+        if current {
             self.latest_on_wire.set(wire, Arc::clone(&av));
         }
-        for k in 0..self.graph.wires.injections(wire).len() {
+        for k in 0..fanout {
             let li = self.graph.wires.injections(wire)[k];
             self.push_event(
                 at,
                 EventKind::Deliver { link: li.index() as u32, av: Arc::clone(&av) },
             );
         }
-        Ok(av.id)
+        av.id
     }
 
     /// Inject now, into the first region.
     pub fn inject(&mut self, wire: &str, payload: Payload, class: DataClass) -> Result<AvId> {
         self.inject_at(wire, payload, class, RegionId::new(0), self.plat.now)
+    }
+
+    /// Batched injection: drop `payloads` onto `wire` now, in the first
+    /// region. One name resolution for the whole batch; see
+    /// [`Coordinator::inject_batch_at_id`] for what else is amortized.
+    pub fn inject_batch(
+        &mut self,
+        wire: &str,
+        payloads: impl IntoIterator<Item = Payload>,
+        class: DataClass,
+    ) -> Result<Vec<AvId>> {
+        let wid = self.wire_id(wire)?; // the batch's single name resolution
+        self.inject_batch_at_id(wid, payloads, class, RegionId::new(0), self.plat.now)
+    }
+
+    /// Id-based batched injection — the bulk edge of the hot path. All
+    /// payloads arrive on `wire` at the same virtual instant `at`, in
+    /// iterator order (heap ties break on sequence number, so deliveries
+    /// stay FIFO). Per-batch rather than per-event costs (§Perf):
+    /// wire validation, the tap watch check, the injection fan-out lookup,
+    /// the ledger's wire-name resolution, and one up-front heap
+    /// reservation for every event the batch will enqueue. Each payload
+    /// still mints its own `Arc`'d AV, ledger record and per-consumer
+    /// `Deliver` events — batching amortizes bookkeeping, it never
+    /// coalesces data.
+    pub fn inject_batch_at_id(
+        &mut self,
+        wire: WireId,
+        payloads: impl IntoIterator<Item = Payload>,
+        class: DataClass,
+        region: RegionId,
+        at: SimTime,
+    ) -> Result<Vec<AvId>> {
+        if wire.index() >= self.graph.wires.len() {
+            bail!(
+                "{wire} is out of range for pipeline [{}] ({} wires) — ids are only \
+                 valid for the coordinator whose wire table minted them",
+                self.graph.name,
+                self.graph.wires.len()
+            );
+        }
+        let fanout = self.graph.wires.injections(wire).len();
+        if fanout == 0 {
+            bail!(
+                "wire '{}' has no injection point (a task produces it)",
+                self.graph.wires.name(wire)
+            );
+        }
+        let watched = self.taps.watches(wire);
+        let current = at <= self.plat.now;
+        let wire_name = self.graph.wires.name(wire).to_string();
+        let payloads = payloads.into_iter();
+        let (size_lo, _) = payloads.size_hint();
+        self.queue.reserve(size_lo * (fanout + usize::from(watched)));
+        let mut ids = Vec::with_capacity(size_lo);
+        for payload in payloads {
+            ids.push(self.inject_prepared(
+                wire, &wire_name, payload, class, region, at, watched, current, fanout,
+            ));
+        }
+        Ok(ids)
     }
 
     /// Inject a ghost batch (§III-K): routes are exercised, payloads are
@@ -1086,6 +1207,17 @@ impl Coordinator {
         recompute_last: bool,
     ) -> Result<(usize, u64)> {
         let id = self.task_id(task)?;
+        self.software_update_id(id, code, recompute_last)
+    }
+
+    /// Id-based software update (the handle API's path); same contract as
+    /// [`Coordinator::software_update`] minus the name resolution.
+    pub fn software_update_id(
+        &mut self,
+        id: TaskId,
+        code: Box<dyn UserCode>,
+        recompute_last: bool,
+    ) -> Result<(usize, u64)> {
         let new_v = code.version();
         let now = self.plat.now;
         let old_v = self.agents[id.index()].install_code(code, now, "update");
@@ -1114,8 +1246,13 @@ impl Coordinator {
     /// Run a task that has no stream inputs (a pure source) once.
     pub fn run_source(&mut self, task: &str) -> Result<()> {
         let id = self.task_id(task)?;
+        self.run_source_id(id)
+    }
+
+    /// Id-based [`Coordinator::run_source`] (the handle API's `fire`).
+    pub fn run_source_id(&mut self, task: TaskId) -> Result<()> {
         let snap = Snapshot { inputs: vec![], born: self.plat.now, ghost: false };
-        self.fire_snapshot(id, snap)
+        self.fire_snapshot(task, snap)
     }
 
     /// Total values collected on a sink wire.
@@ -1124,8 +1261,10 @@ impl Coordinator {
     }
 
     /// Workspace-checked read of a sink wire (§IV): `principal` must hold
-    /// a `Wire` grant through some workspace; denials are counted.
-    pub fn read_sink(&mut self, principal: &str, wire: &str) -> Option<&[Collected]> {
+    /// a `Wire` grant through some workspace; denials are counted. Takes
+    /// `&self` — reading an output is not an exclusive operation (the
+    /// audit counters behind the gate are interior-mutable).
+    pub fn read_sink(&self, principal: &str, wire: &str) -> Option<&[Collected]> {
         let resource = crate::workspace::Resource::Wire(wire.to_string());
         if !self.plat.workspaces.check(principal, &resource) {
             return None;

@@ -5,6 +5,9 @@
 //! Rust + JAX + Pallas stack. See DESIGN.md for the system inventory.
 //!
 //! Quick tour:
+//! * [`api`] — **the documented entry point**: the [`api::Pipeline`]
+//!   facade with typed source/sink/task handles, and the programmatic
+//!   [`api::PipelineBuilder`] (see `examples/quickstart.rs`)
 //! * [`spec`] — the fig. 5 wiring language (`(in[10/2]) task (out)`)
 //! * [`coordinator`] — the pipeline manager: reactive + make triggering
 //! * [`breadboard`] — the smart-workspace layer: live wire taps, hot code
@@ -17,6 +20,7 @@
 //! * [`baseline`] — cron-style and centralized comparators
 //! * [`benchkit`] — the in-tree benchmark harness used by `cargo bench`
 
+pub mod api;
 pub mod av;
 pub mod baseline;
 pub mod benchkit;
@@ -41,6 +45,7 @@ pub mod workspace;
 
 /// Convenient imports for examples and downstream users.
 pub mod prelude {
+    pub use crate::api::{Pipeline, PipelineBuilder, SinkHandle, SourceHandle, TaskHandle};
     pub use crate::av::{DataClass, Payload};
     pub use crate::breadboard::{Breadboard, TapSpec};
     pub use crate::bus::NotifyMode;

@@ -108,14 +108,15 @@ fn cmd_run(args: &[String]) -> Result<()> {
     let rate_ms: u64 = flag_value(args, "--rate-ms").map(|v| v.parse()).transpose()?.unwrap_or(200);
     let ghost = args.iter().any(|a| a == "--ghost");
 
-    let mut coord = Coordinator::deploy(&spec, DeployConfig::default())?;
-    let wires = spec.external_wires();
-    if wires.is_empty() {
+    let mut pipe = Pipeline::deploy(&spec, DeployConfig::default())?;
+    // resolve every in-tray once; the feed loop below runs purely on handles
+    let sources: Vec<SourceHandle> = pipe.sources().to_vec();
+    if sources.is_empty() {
         bail!("spec has no external wires to feed");
     }
     let mut r = rng(7);
     let horizon = SimTime::secs(seconds);
-    for wire in &wires {
+    for src in &sources {
         let mut t = SimTime::ZERO;
         loop {
             t += SimDuration::millis(rate_ms).scale(r.exp1());
@@ -123,31 +124,31 @@ fn cmd_run(args: &[String]) -> Result<()> {
                 break;
             }
             if ghost {
-                coord.inject_at(
-                    wire,
+                src.inject_at(
+                    &mut pipe,
                     Payload::Ghost { pretend_bytes: 1 << 20 },
                     DataClass::Ghost,
                     RegionId::new(0),
                     t,
-                )?;
+                );
             } else {
                 let data: Vec<f32> = (0..8).map(|_| r.normal() as f32).collect();
-                coord.inject_at(
-                    wire,
+                src.inject_at(
+                    &mut pipe,
                     Payload::tensor(&[1, 8], data),
                     DataClass::Summary,
                     RegionId::new(0),
                     t,
-                )?;
+                );
             }
         }
     }
-    coord.run_until(horizon);
-    coord.run_until_idle();
+    pipe.run_until(horizon);
+    pipe.run_until_idle();
     println!("[{}] {} virtual seconds, ghost={}", spec.name, seconds, ghost);
-    println!("{}", coord.plat.metrics.report());
-    for (wire, got) in coord.collected.iter() {
-        println!("sink '{}': {} artifacts", wire, got.len());
+    println!("{}", pipe.plat.metrics.report());
+    for sink in pipe.sinks() {
+        println!("sink '{}': {} artifacts", sink.name(&pipe), sink.count(&pipe));
     }
     Ok(())
 }
@@ -174,22 +175,22 @@ fn cmd_artifacts(args: &[String]) -> Result<()> {
 fn cmd_trace(args: &[String]) -> Result<()> {
     let path = args.first().ok_or_else(|| anyhow!("trace: missing spec path"))?;
     let spec = load_spec(path)?;
-    let mut coord = Coordinator::deploy(&spec, DeployConfig::default())?;
+    let mut pipe = Pipeline::deploy(&spec, DeployConfig::default())?;
     let mut r = rng(11);
-    for wire in spec.external_wires() {
+    for src in pipe.sources().to_vec() {
         for i in 0..3u64 {
             let data: Vec<f32> = (0..4).map(|_| r.normal() as f32).collect();
-            coord.inject_at(
-                &wire,
+            src.inject_at(
+                &mut pipe,
                 Payload::tensor(&[1, 4], data),
                 DataClass::Summary,
                 RegionId::new(0),
                 SimTime::millis(i * 50),
-            )?;
+            );
         }
     }
-    coord.run_until_idle();
-    println!("{}", coord.plat.prov.dump_json().to_string());
+    pipe.run_until_idle();
+    println!("{}", pipe.plat.prov.dump_json().to_string());
     Ok(())
 }
 
@@ -239,6 +240,9 @@ fn cmd_bread(args: &[String]) -> Result<()> {
     bread.plat.workspaces.add_member(ws, "operator");
     bread.plat.workspaces.grant(ws, koalja::workspace::Resource::Pipeline(spec.name.clone()));
     bread.plat.workspaces.grant(ws, koalja::workspace::Resource::Provenance(spec.name.clone()));
+    // typed handles, resolved once: in-trays for the feed loop, the swap target
+    let sources: Vec<SourceHandle> = bread.sources().to_vec();
+    let swap_handle = bread.task(&swap_task)?;
 
     // 1. taps on every wire in the diagram
     let mut all_wires: Vec<String> = Vec::new();
@@ -265,12 +269,12 @@ fn cmd_bread(args: &[String]) -> Result<()> {
     let half = SimTime::secs(seconds / 2 + 1);
     let mut r = rng(23);
     let feed = |bread: &mut Breadboard, from_ms: u64, to_ms: u64, r: &mut koalja::util::Rng| {
-        for wire in &wires_in {
+        for src in &sources {
             let mut t = from_ms;
             while t < to_ms {
                 let data: Vec<f32> = (0..8).map(|_| r.normal() as f32).collect();
-                let _ = bread.inject_at(
-                    wire,
+                src.inject_at(
+                    bread,
                     Payload::tensor(&[1, 8], data),
                     DataClass::Summary,
                     RegionId::new(0),
@@ -301,9 +305,9 @@ fn cmd_bread(args: &[String]) -> Result<()> {
     // 3. hot-swap: dry-run preview, then commit a v2 that doubles tensors
     let outputs: Vec<String> =
         spec.task(&swap_task).map(|t| t.outputs.clone()).unwrap_or_default();
-    let old_v = bread.agent(&swap_task)?.version();
+    let old_v = swap_handle.version(&bread);
     let new_v = old_v + 1;
-    let preview = bread.swap_preview(&swap_task, new_v)?;
+    let preview = bread.swap_preview_task(swap_handle, new_v)?;
     println!("\n-- dry-run -- {}", preview.summary());
     let factory = move || -> Box<dyn UserCode> {
         let outs = outputs.clone();
@@ -327,7 +331,7 @@ fn cmd_bread(args: &[String]) -> Result<()> {
             new_v,
         ))
     };
-    let outcome = bread.hot_swap(&swap_task, factory, false)?;
+    let outcome = bread.hot_swap_task(swap_handle, factory, false)?;
     println!(
         "committed at {}: cache evicted {} entries / {} B downstream",
         outcome.at, outcome.cache_objects_evicted, outcome.cache_bytes_evicted
@@ -343,18 +347,12 @@ fn cmd_bread(args: &[String]) -> Result<()> {
     bread.run_until_idle();
     let t_end = bread.plat.now;
 
-    // 5. the version bump is visible in provenance
-    let q = ProvenanceQuery::new(&bread.plat.prov);
-    let task_id = bread.task_id(&swap_task)?;
-    for (at, from, to) in q.version_changes(task_id) {
+    // 5. the version bump is visible in provenance, straight off the handle
+    for (at, from, to) in swap_handle.version_changes(&bread) {
         println!("\nprovenance: '{swap_task}' version {from} -> {to} at {at}");
     }
-    if let Some(col) = spec
-        .sink_wires()
-        .iter()
-        .filter_map(|w| bread.collected.get(w).and_then(|v| v.last()))
-        .next()
-    {
+    if let Some(col) = bread.sinks().iter().filter_map(|s| s.latest(&bread)).next() {
+        let q = ProvenanceQuery::new(&bread.plat.prov);
         println!(
             "latest sink artifact {} touched by versions {:?}",
             col.av.id,
@@ -387,45 +385,47 @@ fn cmd_bread(args: &[String]) -> Result<()> {
 }
 
 fn cmd_demo() -> Result<()> {
-    // fig. 5, verbatim wiring
-    let spec = parse(
-        "[tfmodel]\n\
-         (in) learn-tf (model)\n\
-         (in[10/2]) convert (json)\n\
-         (json, lookup?) predict (result)\n",
-    )
-    .map_err(|e| anyhow!("{e}"))?;
-    let mut coord = Coordinator::deploy(&spec, DeployConfig::default())?;
-    coord.plat.services.register(
+    // fig. 5, wired programmatically — the builder lowers to exactly the
+    // spec the parser would produce from the paper's text
+    let mut pipe = PipelineBuilder::new("tfmodel")
+        .task("learn-tf").reads("in").emits("model")
+        .task("convert").reads("in[10/2]").emits("json")
+        .task("predict").reads("json").looks_up("lookup").emits("result")
+        .deploy(DeployConfig::default())?;
+    pipe.plat.services.register(
         "lookup",
         Box::new(koalja::platform::service::KvService::new(&[("class", "cat")])),
     );
-    coord.set_code(
-        "predict",
+    // resolve handles once; everything after runs on dense ids
+    let in_tray = pipe.source("in")?;
+    let result = pipe.sink("result")?;
+    let predict = pipe.task("predict")?;
+    predict.plug(
+        &mut pipe,
         Box::new(FnTask::new(|ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
             let label = ctx.lookup("lookup", &Payload::Text("class".into()))?;
             let n = snap.all_avs().count() as f32;
             ctx.remark(&format!("classified {n} windows as {label:?}"));
             Ok(vec![Output::summary("result", Payload::scalar(n))])
         })),
-    )?;
+    );
     let mut r = rng(3);
     for i in 0..24u64 {
         let data: Vec<f32> = (0..4).map(|_| r.normal() as f32).collect();
-        coord.inject_at(
-            "in",
+        in_tray.inject_at(
+            &mut pipe,
             Payload::tensor(&[1, 4], data),
             DataClass::Summary,
             RegionId::new(0),
             SimTime::millis(i * 100),
-        )?;
+        );
     }
-    coord.run_until_idle();
+    pipe.run_until_idle();
     println!("fig. 5 'tfmodel' on 24 synthetic arrivals:");
-    println!("{}", coord.plat.metrics.report());
-    println!("results collected: {}", coord.collected_count("result"));
-    let q = ProvenanceQuery::new(&coord.plat.prov);
-    if let Some(col) = coord.collected.get("result").and_then(|v| v.last()) {
+    println!("{}", pipe.plat.metrics.report());
+    println!("results collected: {}", result.count(&pipe));
+    let q = ProvenanceQuery::new(&pipe.plat.prov);
+    if let Some(col) = result.latest(&pipe) {
         println!(
             "last result {} derives from {} ancestor artifacts through versions {:?}",
             col.av.id,

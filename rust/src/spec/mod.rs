@@ -21,7 +21,7 @@
 
 pub mod parse;
 
-pub use parse::{parse, ParseError};
+pub use parse::{parse, parse_input_token, valid_name, ParseError};
 
 use crate::policy::{BufferSpec, SnapshotPolicy};
 use std::collections::BTreeMap;

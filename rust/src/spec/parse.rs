@@ -75,7 +75,7 @@ fn parse_task_line(line: &str, lineno: usize) -> Result<TaskSpec, ParseError> {
     if name.is_empty() {
         return Err(err(lineno, "missing task name between input and output lists"));
     }
-    if !name.chars().all(|c| c.is_alphanumeric() || matches!(c, '-' | '_' | '.')) {
+    if !valid_name(name) {
         return Err(err(lineno, format!("bad task name '{name}'")));
     }
     let (outputs_src, tail) = take_parens(&rest[name_end..], lineno)?;
@@ -123,8 +123,22 @@ fn split_list(src: &str) -> Vec<String> {
         .collect()
 }
 
-/// `wire`, `wire[N]`, `wire[N/S]`, each optionally suffixed `?`.
 fn parse_input(item: &str, lineno: usize) -> Result<InputSpec, ParseError> {
+    parse_input_token(item).map_err(|msg| err(lineno, msg))
+}
+
+/// Legal wire/task name: alphanumerics plus `-`, `_`, `.` — one rule for
+/// both front ends (the text parser and `api::PipelineBuilder`).
+pub fn valid_name(name: &str) -> bool {
+    !name.is_empty() && name.chars().all(|c| c.is_alphanumeric() || matches!(c, '-' | '_' | '.'))
+}
+
+/// One input-port token: `wire`, `wire[N]`, `wire[N/S]`, each optionally
+/// suffixed `?` (implicit service lookup). This is THE port grammar —
+/// `api::PipelineBuilder::reads` calls it too, so a port spelled in a
+/// `.koalja` file and the same string handed to the builder can never
+/// diverge in meaning.
+pub fn parse_input_token(item: &str) -> Result<InputSpec, String> {
     let mut item = item.trim();
     let service = item.ends_with('?');
     if service {
@@ -136,19 +150,17 @@ fn parse_input(item: &str, lineno: usize) -> Result<InputSpec, ParseError> {
             let wire = &item[..i];
             let spec = item[i + 1..]
                 .strip_suffix(']')
-                .ok_or_else(|| err(lineno, format!("unterminated '[' in '{item}'")))?;
+                .ok_or_else(|| format!("unterminated '[' in '{item}'"))?;
             let buffer = match spec.split_once('/') {
                 None => BufferSpec::buffer(
-                    spec.parse()
-                        .map_err(|_| err(lineno, format!("bad buffer size '{spec}'")))?,
+                    spec.parse().map_err(|_| format!("bad buffer size '{spec}'"))?,
                 ),
                 Some((n, s)) => {
                     let n: usize =
-                        n.parse().map_err(|_| err(lineno, format!("bad window size '{n}'")))?;
-                    let s: usize =
-                        s.parse().map_err(|_| err(lineno, format!("bad slide '{s}'")))?;
+                        n.parse().map_err(|_| format!("bad window size '{n}'"))?;
+                    let s: usize = s.parse().map_err(|_| format!("bad slide '{s}'"))?;
                     if s > n || s == 0 || n == 0 {
-                        return Err(err(lineno, format!("bad window [{n}/{s}]")));
+                        return Err(format!("bad window [{n}/{s}]"));
                     }
                     BufferSpec::window(n, s)
                 }
@@ -156,9 +168,8 @@ fn parse_input(item: &str, lineno: usize) -> Result<InputSpec, ParseError> {
             (wire, buffer)
         }
     };
-    if wire.is_empty() || !wire.chars().all(|c| c.is_alphanumeric() || matches!(c, '-' | '_' | '.'))
-    {
-        return Err(err(lineno, format!("bad wire name '{wire}'")));
+    if !valid_name(wire) {
+        return Err(format!("bad wire name '{wire}'"));
     }
     Ok(InputSpec { wire: wire.to_string(), buffer, service })
 }

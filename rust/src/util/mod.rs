@@ -6,12 +6,14 @@ pub mod hash;
 pub mod ids;
 pub mod json;
 pub mod rng;
+pub mod suggest;
 pub mod time;
 
 pub use hash::{fnv1a, ContentHash};
 pub use ids::{AvId, IdGen, LinkId, ObjectId, RegionId, RunId, TaskId, WireId, WorkspaceId};
 pub use json::Json;
 pub use rng::Rng;
+pub use suggest::suggest;
 pub use time::{SimDuration, SimTime};
 
 /// Deterministic RNG for all simulation randomness. Every run with the same

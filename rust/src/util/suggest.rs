@@ -1,0 +1,110 @@
+//! Near-miss suggestions for name-resolution errors.
+//!
+//! Every public string-keyed entry point (wire/task/handle resolution)
+//! resolves a user-typed name against a small closed set minted at deploy
+//! time. When resolution fails, the error should teach: name the nearest
+//! candidate (a typo is the common case) and list what actually exists,
+//! matching the breadboard's explain-don't-just-refuse error style.
+
+/// Levenshtein edit distance, early-exited once it must exceed `cap`.
+/// Candidate sets are tiny (a pipeline has dozens of wires, not millions),
+/// so the simple O(a·b) DP is plenty.
+fn edit_distance(a: &str, b: &str, cap: usize) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    if a.len().abs_diff(b.len()) > cap {
+        return cap + 1;
+    }
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        let mut row_min = cur[0];
+        for (j, cb) in b.iter().enumerate() {
+            let cost = usize::from(ca != cb);
+            cur[j + 1] = (prev[j] + cost).min(prev[j + 1] + 1).min(cur[j] + 1);
+            row_min = row_min.min(cur[j + 1]);
+        }
+        if row_min > cap {
+            return cap + 1;
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// The candidate closest to `target`, if close enough to plausibly be a
+/// typo (distance ≤ max(2, target.len()/3) — 2 admits the classic
+/// transposition, which costs two single-char edits). Ties keep the first.
+pub fn nearest<'a>(target: &str, candidates: &[&'a str]) -> Option<&'a str> {
+    let cap = (target.chars().count() / 3).max(2);
+    let mut best: Option<(&str, usize)> = None;
+    for &c in candidates {
+        let d = edit_distance(target, c, cap);
+        if d <= cap && best.map_or(true, |(_, bd)| d < bd) {
+            best = Some((c, d));
+        }
+    }
+    best.map(|(c, _)| c)
+}
+
+/// How many candidates an error message spells out before eliding.
+const LIST_CAP: usize = 12;
+
+/// Error-message suffix for a failed name resolution: a did-you-mean for
+/// the nearest candidate plus the (capped) list of known names.
+/// `kind` is the singular noun ("wire", "task", "source wire", …).
+/// Empty when there are no candidates at all.
+pub fn suggest<'a, I: IntoIterator<Item = &'a str>>(target: &str, kind: &str, candidates: I) -> String {
+    let cands: Vec<&str> = candidates.into_iter().collect();
+    if cands.is_empty() {
+        return String::new();
+    }
+    let mut s = String::new();
+    if let Some(best) = nearest(target, &cands) {
+        s.push_str(&format!(" — did you mean '{best}'?"));
+    }
+    let shown = cands.len().min(LIST_CAP);
+    let elided = cands.len() - shown;
+    s.push_str(&format!(" (known {kind}s: {}", cands[..shown].join(", ")));
+    if elided > 0 {
+        s.push_str(&format!(", … {elided} more"));
+    }
+    s.push(')');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distance_basics() {
+        assert_eq!(edit_distance("abc", "abc", 3), 0);
+        assert_eq!(edit_distance("abc", "abd", 3), 1);
+        assert_eq!(edit_distance("abc", "ab", 3), 1);
+        assert_eq!(edit_distance("kitten", "sitting", 7), 3);
+        assert!(edit_distance("short", "muchlongername", 2) > 2, "cap early-exit");
+    }
+
+    #[test]
+    fn nearest_finds_typos_only() {
+        let cands = ["frames", "alerts", "report"];
+        assert_eq!(nearest("frames", &cands), Some("frames"));
+        assert_eq!(nearest("frmes", &cands), Some("frames"));
+        assert_eq!(nearest("alert", &cands), Some("alerts"));
+        assert_eq!(nearest("framse", &cands), Some("frames"), "transposition");
+        assert_eq!(nearest("zzzzzz", &cands), None, "nothing plausible");
+    }
+
+    #[test]
+    fn suggest_formats_and_caps() {
+        let s = suggest("frmes", "wire", ["frames", "alerts"]);
+        assert!(s.contains("did you mean 'frames'?"), "{s}");
+        assert!(s.contains("known wires: frames, alerts"), "{s}");
+        assert_eq!(suggest("x", "wire", []), "");
+        let many: Vec<String> = (0..20).map(|i| format!("wire-{i}")).collect();
+        let s = suggest("nope", "wire", many.iter().map(|s| s.as_str()));
+        assert!(s.contains("… 8 more"), "{s}");
+    }
+}

@@ -13,6 +13,7 @@
 
 use crate::util::WorkspaceId;
 
+use std::cell::Cell;
 use std::collections::BTreeSet;
 
 /// What can be granted to a workspace.
@@ -35,11 +36,16 @@ pub struct Workspace {
 }
 
 /// The overlapping-set registry.
+///
+/// The allow/deny tallies are `Cell`s so [`WorkspaceRegistry::check`] takes
+/// `&self`: access checks are logically reads, and read paths (e.g.
+/// `Coordinator::read_sink`) must not demand exclusive access to the whole
+/// platform just to bump an audit counter.
 #[derive(Clone, Debug, Default)]
 pub struct WorkspaceRegistry {
     spaces: Vec<Workspace>,
-    pub denied: u64,
-    pub allowed: u64,
+    denied: Cell<u64>,
+    allowed: Cell<u64>,
 }
 
 impl WorkspaceRegistry {
@@ -79,18 +85,30 @@ impl WorkspaceRegistry {
         }
     }
 
-    /// Access check: any workspace that contains the principal and the grant.
-    pub fn check(&mut self, principal: &str, r: &Resource) -> bool {
+    /// Access check: any workspace that contains the principal and the
+    /// grant. Takes `&self` (counters are interior-mutable) so shared-
+    /// reference read paths can be gated too.
+    pub fn check(&self, principal: &str, r: &Resource) -> bool {
         let ok = self
             .spaces
             .iter()
             .any(|w| w.members.contains(principal) && w.grants.contains(r));
         if ok {
-            self.allowed += 1;
+            self.allowed.set(self.allowed.get() + 1);
         } else {
-            self.denied += 1;
+            self.denied.set(self.denied.get() + 1);
         }
         ok
+    }
+
+    /// Checks that found no workspace holding both principal and grant.
+    pub fn denied(&self) -> u64 {
+        self.denied.get()
+    }
+
+    /// Checks that succeeded.
+    pub fn allowed(&self) -> u64 {
+        self.allowed.get()
     }
 
     /// All resources visible to a principal (union over its workspaces) —
@@ -129,7 +147,7 @@ mod tests {
         assert!(reg.check("alice", &wire("monthly-summary")));
         assert!(!reg.check("bob", &wire("monthly-summary")));
         assert!(!reg.check("alice", &wire("raw-records")));
-        assert_eq!((reg.allowed, reg.denied), (1, 2));
+        assert_eq!((reg.allowed(), reg.denied()), (1, 2));
     }
 
     #[test]
@@ -187,7 +205,7 @@ mod tests {
         assert!(!reg.check("carol", &wire("secret")), "split membership/grant");
         assert!(reg.check("shared", &wire("secret")), "co-located pair allows");
         assert!(reg.visible("carol").is_empty());
-        assert_eq!(reg.denied, 1);
+        assert_eq!(reg.denied(), 1);
     }
 
     #[test]

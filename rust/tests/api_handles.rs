@@ -1,0 +1,308 @@
+//! Handle-API integration tests + the builder/parser equivalence property.
+//!
+//! The equivalence property is the satellite contract of the api
+//! redesign: a wiring constructed with `PipelineBuilder` and the same
+//! wiring parsed from fig. 5 text must lower to identical `PipelineSpec`s
+//! AND compile to identical `WireTable`s and link topologies — so the two
+//! front ends can never drift apart in meaning.
+
+use koalja::graph::PipelineGraph;
+use koalja::prelude::*;
+use koalja::spec::PipelineSpec;
+use koalja::util::Rng;
+
+// ---------------------------------------------------------------------
+// builder/parser equivalence (property test over random wirings)
+// ---------------------------------------------------------------------
+
+/// One randomly generated task line: (name, input tokens, outputs, attrs).
+struct TaskDesc {
+    name: String,
+    inputs: Vec<String>,
+    outputs: Vec<String>,
+    attrs: Vec<(String, String)>,
+}
+
+/// Generate a structurally valid random wiring: every task emits fresh
+/// wires and may consume earlier tasks' wires or external pool wires
+/// (never its own outputs — self-loops are rejected by validation, which
+/// both front ends share).
+fn random_pipeline(r: &mut Rng) -> Vec<TaskDesc> {
+    let n_tasks = 1 + r.range(0, 5);
+    let mut produced: Vec<String> = Vec::new();
+    let mut tasks = Vec::new();
+    for ti in 0..n_tasks {
+        let name = format!("task-{ti}");
+        let n_out = 1 + r.range(0, 2);
+        let outputs: Vec<String> = (0..n_out).map(|k| format!("t{ti}o{k}")).collect();
+        let mut inputs = Vec::new();
+        for k in 0..r.range(0, 4) {
+            let wire = if !produced.is_empty() && r.bool(0.5) {
+                produced[r.range(0, produced.len())].clone()
+            } else {
+                format!("ext{}", r.range(0, 4))
+            };
+            // decorate with the full port grammar
+            let token = match r.range(0, 4) {
+                0 => wire,
+                1 => format!("{wire}[{}]", 2 + r.range(0, 6)),
+                2 => {
+                    let n = 2 + r.range(0, 8);
+                    let s = 1 + r.range(0, n - 1);
+                    format!("{wire}[{n}/{s}]")
+                }
+                // service lookups get their own namespace so a name never
+                // doubles as both stream and service input
+                _ => format!("svc{}?", k),
+            };
+            inputs.push(token);
+        }
+        let mut attrs = Vec::new();
+        if r.bool(0.4) {
+            let p = ["allnew", "swap", "merge"][r.range(0, 3)];
+            attrs.push(("policy".to_string(), p.to_string()));
+        }
+        if r.bool(0.3) {
+            attrs.push(("notify".to_string(), format!("poll:{}ms", 50 + r.range(0, 200))));
+        }
+        if r.bool(0.3) {
+            attrs.push(("region".to_string(), format!("edge-{}", r.range(0, 3))));
+        }
+        produced.extend(outputs.iter().cloned());
+        tasks.push(TaskDesc { name, inputs, outputs, attrs });
+    }
+    tasks
+}
+
+fn render_text(name: &str, tasks: &[TaskDesc]) -> String {
+    let mut s = format!("[{name}]\n");
+    for t in tasks {
+        s.push_str(&format!(
+            "({}) {} ({})",
+            t.inputs.join(", "),
+            t.name,
+            t.outputs.join(", ")
+        ));
+        for (k, v) in &t.attrs {
+            s.push_str(&format!(" @{k}={v}"));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+fn drive_builder(name: &str, tasks: &[TaskDesc]) -> PipelineSpec {
+    let mut b = PipelineBuilder::new(name);
+    for t in tasks {
+        let mut tb = b.task(&t.name);
+        for port in &t.inputs {
+            tb = tb.reads(port);
+        }
+        for out in &t.outputs {
+            tb = tb.emits(out);
+        }
+        for (k, v) in &t.attrs {
+            tb = tb.attr(k, v);
+        }
+        b = tb.done();
+    }
+    b.build().expect("generated wirings are valid by construction")
+}
+
+fn assert_graphs_identical(a: &PipelineGraph, b: &PipelineGraph) {
+    // wire tables: same names in the same dense order, same adjacency
+    assert_eq!(a.wires.names(), b.wires.names(), "interned wire order");
+    assert_eq!(a.wires.len(), b.wires.len());
+    for name in a.wires.names() {
+        let wa = a.wires.id(name).unwrap();
+        let wb = b.wires.id(name).unwrap();
+        assert_eq!(wa, wb, "wire '{name}' interned to different ids");
+        assert_eq!(a.wires.producers(wa), b.wires.producers(wb), "producers of '{name}'");
+        assert_eq!(a.wires.injections(wa), b.wires.injections(wb), "injections of '{name}'");
+    }
+    // link topology: same segments in the same order
+    assert_eq!(a.links.len(), b.links.len(), "link count");
+    for (la, lb) in a.links.iter().zip(&b.links) {
+        assert_eq!(la.id, lb.id);
+        assert_eq!(la.wire, lb.wire);
+        assert_eq!(la.wire_id, lb.wire_id);
+        assert_eq!(la.from, lb.from);
+        assert_eq!(la.to, lb.to);
+        assert_eq!(la.to_input, lb.to_input);
+    }
+}
+
+#[test]
+fn builder_and_parser_lower_identically_over_random_wirings() {
+    let mut r = rng(0xB111D);
+    for case in 0..200 {
+        let tasks = random_pipeline(&mut r);
+        let name = format!("prop{case}");
+        let text = render_text(&name, &tasks);
+        let parsed = parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        parsed.validate().unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        let built = drive_builder(&name, &tasks);
+        assert_eq!(built, parsed, "case {case}: specs diverged\n{text}");
+        assert_graphs_identical(&PipelineGraph::build(&built), &PipelineGraph::build(&parsed));
+        // and the builder's spec round-trips through the pretty-printer
+        assert_eq!(parse(&built.to_text()).unwrap(), built, "case {case}: to_text round trip");
+    }
+}
+
+// ---------------------------------------------------------------------
+// batched injection
+// ---------------------------------------------------------------------
+
+#[test]
+fn inject_batch_equals_n_single_injections() {
+    let spec = parse("[b]\n(x) left (l)\n(x) right (r)\n").unwrap();
+    // arm 1: singles
+    let mut one = Coordinator::deploy(&spec, DeployConfig::default()).unwrap();
+    for i in 0..10 {
+        one.inject("x", Payload::scalar(i as f32), DataClass::Summary).unwrap();
+    }
+    one.run_until_idle();
+    // arm 2: one batch (a single name resolution inside inject_batch)
+    let mut batch = Coordinator::deploy(&spec, DeployConfig::default()).unwrap();
+    let payloads: Vec<Payload> = (0..10).map(|i| Payload::scalar(i as f32)).collect();
+    let ids = batch.inject_batch("x", payloads, DataClass::Summary).unwrap();
+    assert_eq!(ids.len(), 10, "one AvId per payload");
+    batch.run_until_idle();
+
+    for sink in ["l", "r"] {
+        assert_eq!(one.collected_count(sink), 10);
+        assert_eq!(batch.collected_count(sink), 10, "batch fanned out per payload");
+        // same payload sequence arrives, in order, under both arms
+        let a: Vec<_> = one.collected[sink].iter().map(|c| c.av.content).collect();
+        let b: Vec<_> = batch.collected[sink].iter().map(|c| c.av.content).collect();
+        assert_eq!(a, b, "content hashes match on '{sink}'");
+    }
+    // the forensic ledger has one record per batched payload
+    assert_eq!(batch.plat.prov.injections().len(), 10);
+    // and batched arrivals are replayable like any others
+    let wid = batch.wire_id("x").unwrap();
+    assert_eq!(
+        batch.latest_on_wire.by_id(wid).map(|a| a.seq),
+        one.latest_on_wire.by_id(wid).map(|a| a.seq),
+        "wire currency agrees"
+    );
+}
+
+#[test]
+fn inject_batch_rejects_unknown_and_produced_wires() {
+    let spec = parse("[b]\n(raw) work (out)\n").unwrap();
+    let mut c = Coordinator::deploy(&spec, DeployConfig::default()).unwrap();
+    let err = c
+        .inject_batch("rw", vec![Payload::scalar(1.0)], DataClass::Summary)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("no wire 'rw'"), "{err}");
+    assert!(err.contains("did you mean 'raw'?"), "near-miss candidates: {err}");
+    let err = c
+        .inject_batch("out", vec![Payload::scalar(1.0)], DataClass::Summary)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("no injection point"), "{err}");
+}
+
+// ---------------------------------------------------------------------
+// near-miss resolution errors
+// ---------------------------------------------------------------------
+
+#[test]
+fn resolution_errors_list_candidates() {
+    let spec = parse("[n]\n(frames) detect (alerts)\n").unwrap();
+    let mut c = Coordinator::deploy(&spec, DeployConfig::default()).unwrap();
+    let e = c.wire_id("frmes").unwrap_err().to_string();
+    assert!(e.contains("did you mean 'frames'?"), "{e}");
+    assert!(e.contains("known wires:"), "{e}");
+    let e = c.task_id("detct").unwrap_err().to_string();
+    assert!(e.contains("did you mean 'detect'?"), "{e}");
+    let e = c
+        .set_code("detcet", Box::new(PassThrough::new("alerts")))
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("did you mean 'detect'?"), "set_code inherits: {e}");
+}
+
+// ---------------------------------------------------------------------
+// handle API end-to-end (facade + breadboard session verbs)
+// ---------------------------------------------------------------------
+
+#[test]
+fn handle_roundtrip_with_demand_and_drain() {
+    let mut pipe = PipelineBuilder::new("roundtrip")
+        .task("compile").reads("src").emits("obj")
+        .task("link").reads("obj").emits("binary")
+        .deploy(DeployConfig::default())
+        .unwrap();
+    let src = pipe.source("src").unwrap();
+    let binary = pipe.sink("binary").unwrap();
+
+    src.inject(&mut pipe, Payload::scalar(7.0), DataClass::Summary);
+    // make-mode: pull the output through the sink handle
+    let av = binary.demand(&mut pipe).unwrap();
+    assert!(av.size_bytes > 0);
+    // reactive leftovers + demand results land in the same dense store
+    pipe.run_until_idle();
+    assert!(binary.count(&pipe) >= 1);
+    let drained = binary.drain(&mut pipe);
+    assert!(!drained.is_empty());
+    assert_eq!(binary.count(&pipe), 0, "drain is consuming");
+}
+
+#[test]
+fn read_sink_works_through_a_shared_reference() {
+    let spec = parse("[ws]\n(raw) work (out)\n").unwrap();
+    let mut c = Coordinator::deploy(&spec, DeployConfig::default()).unwrap();
+    let ws = c.plat.workspaces.create("lab");
+    c.plat.workspaces.add_member(ws, "alice");
+    c.plat.workspaces.grant(ws, koalja::workspace::Resource::Wire("out".into()));
+    c.inject("raw", Payload::scalar(1.0), DataClass::Summary).unwrap();
+    c.run_until_idle();
+    // the whole point of the &self split: two simultaneous gated readers
+    let shared: &Coordinator = &c;
+    let a = shared.read_sink("alice", "out");
+    let b = shared.read_sink("alice", "out");
+    assert!(a.is_some() && b.is_some());
+    assert!(shared.read_sink("mallory", "out").is_none());
+    assert_eq!(shared.plat.workspaces.denied(), 1, "denials still audited via &self");
+}
+
+#[test]
+fn breadboard_session_runs_on_handles() {
+    let spec = parse("[sess]\n(raw) work (out)\n").unwrap();
+    let mut b = koalja::breadboard::Breadboard::deploy(&spec, DeployConfig::default()).unwrap();
+    let raw = b.source("raw").unwrap();
+    let out = b.sink("out").unwrap();
+    let work = b.task("work").unwrap();
+    b.plug_task(work, || Box::new(PassThrough::new("out")));
+    raw.inject(&mut b, Payload::scalar(2.0), DataClass::Summary);
+    b.run_until_idle();
+    assert_eq!(out.count(&b), 1);
+
+    // handle-based swap with the version-bump guard
+    assert!(b.hot_swap_task(work, || Box::new(PassThrough::new("out")), false).is_err());
+    let outcome = b
+        .hot_swap_task(
+            work,
+            || {
+                Box::new(FnTask::versioned(
+                    |_ctx: &mut TaskCtx<'_>, _s: &Snapshot| {
+                        Ok(vec![Output::summary("out", Payload::scalar(9.0))])
+                    },
+                    2,
+                ))
+            },
+            false,
+        )
+        .unwrap();
+    assert_eq!(outcome.preview.new_version, 2);
+    assert_eq!(work.version(&b), 2);
+    assert_eq!(work.version_changes(&b).len(), 1);
+    // the session recorded the swap under the task's name
+    assert_eq!(b.swaps[0].task, "work");
+    // and replay still works from the handle-fed ledger
+    let run = b.forensic_replay().unwrap();
+    assert_eq!(run.injections_replayed, 1);
+}

@@ -113,7 +113,7 @@ fn gated_session_denies_then_allows() {
     assert!(b.tap("raw").is_err());
     assert!(b.swap_preview("work", 2).is_err());
     assert!(b.forensic_replay().is_err());
-    assert_eq!(b.plat.workspaces.denied, 3);
+    assert_eq!(b.plat.workspaces.denied(), 3);
 
     // grants arrive through an overlapping workspace
     let ws = b.plat.workspaces.create("ops");

@@ -198,7 +198,7 @@ fn workspace_grants_gate_sink_reads() {
     assert!(c.read_sink("alice", "summary").is_some());
     assert!(c.read_sink("mallory", "summary").is_none());
     assert!(c.read_sink("alice", "raw").is_none(), "no grant for raw");
-    assert_eq!(c.plat.workspaces.denied, 2);
+    assert_eq!(c.plat.workspaces.denied(), 2);
 
     // friend overlap extends access (the paper's overlapping sets)
     let partner = c.plat.workspaces.create("partner");

@@ -1,0 +1,100 @@
+#!/usr/bin/env python3
+"""Diff a fresh benchkit JSON report against a committed baseline.
+
+Usage: bench_delta.py BASELINE.json FRESH.json
+
+Reads two schema-1 bench reports ({"schema":1,"bench":...,"results":
+[{label,value,unit}]}) and prints a per-metric delta table. Direction
+matters: for ns/op-style metrics (unit contains "ns") an increase is a
+regression; for rate metrics (events/s, hops/s, ...) a decrease is.
+
+Exit code 1 only when an ns/event metric regresses by more than
+FAIL_PCT; other regressions above WARN_PCT warn. Labels present in only
+one file are reported informationally (new shapes appear, old ones
+retire — that is trajectory, not failure). An empty baseline (the seed
+commit before any measured run) compares clean by definition.
+"""
+
+import json
+import sys
+
+WARN_PCT = 10.0
+FAIL_PCT = 35.0
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench_delta: cannot read {path}: {e}")
+        return None
+    if doc.get("schema") != 1:
+        print(f"bench_delta: {path}: unexpected schema {doc.get('schema')!r}")
+        return None
+    return {r["label"]: (float(r["value"]), r.get("unit", "")) for r in doc.get("results", [])}
+
+
+def lower_is_better(label, unit):
+    return "ns" in unit or "ns_per" in label
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    base, fresh = load(sys.argv[1]), load(sys.argv[2])
+    if fresh is None:
+        return 2
+    if base is None or not base:
+        print("bench_delta: no baseline measurements to compare against "
+              "(seed commit or unreadable baseline) — recording first trajectory point")
+        return 0
+
+    common = sorted(set(base) & set(fresh))
+    only_base = sorted(set(base) - set(fresh))
+    only_fresh = sorted(set(fresh) - set(base))
+    worst_fail = None
+    warnings = 0
+
+    print(f"{'metric':44} {'baseline':>12} {'fresh':>12} {'delta':>8}  verdict")
+    for label in common:
+        bv, unit = base[label]
+        fv, _ = fresh[label]
+        if bv == 0:
+            print(f"{label:44} {bv:12.1f} {fv:12.1f} {'n/a':>8}  (zero baseline)")
+            continue
+        pct = (fv - bv) / bv * 100.0
+        regression = pct if lower_is_better(label, unit) else -pct
+        verdict = "ok"
+        if regression > FAIL_PCT and "ns_per_event" in label:
+            verdict = f"FAIL (> {FAIL_PCT:.0f}% regression)"
+            if worst_fail is None or regression > worst_fail[1]:
+                worst_fail = (label, regression)
+        elif regression > WARN_PCT:
+            verdict = f"warn (> {WARN_PCT:.0f}% regression)"
+            warnings += 1
+        elif regression < -WARN_PCT:
+            verdict = "improved"
+        print(f"{label:44} {bv:12.1f} {fv:12.1f} {pct:+7.1f}%  {verdict}")
+
+    for label in only_fresh:
+        fv, unit = fresh[label]
+        print(f"{label:44} {'-':>12} {fv:12.1f} {'new':>8}  (no baseline)")
+    for label in only_base:
+        print(f"{label:44} {base[label][0]:12.1f} {'-':>12} {'gone':>8}  (retired)")
+
+    if worst_fail:
+        label, pct = worst_fail
+        print(f"\nbench_delta: FAIL — {label} regressed {pct:.1f}% "
+              f"(limit {FAIL_PCT:.0f}%) vs the committed baseline")
+        return 1
+    if warnings:
+        print(f"\nbench_delta: {warnings} metric(s) regressed > {WARN_PCT:.0f}% (warning only)")
+    else:
+        print("\nbench_delta: within tolerance of the committed baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
