@@ -21,6 +21,13 @@
 //! whether validation, tap checks, fan-out lookup and heap reservation are
 //! paid per event or per 64-payload batch.
 //!
+//! fanout-emit4 exercises the task-side emitter: one task publishing on 4
+//! output ports per input. Emissions carry pre-resolved `WireId`s minted
+//! by the typed-port runtime (`TaskCode` + `Emitter`), so the coordinator
+//! routes each one with an integer slot scan — the per-publication
+//! wire-name comparison of the `Vec<Output>` era is gone, as is the
+//! per-run output `Vec` (the emission buffer is recycled).
+//!
 //! Each run appends the measurements to `BENCH_coordinator_throughput.json`
 //! (schema in `benchkit::write_json`) — the machine-readable perf
 //! trajectory. `ci.sh` archives the file per run and fails if the bench
@@ -37,6 +44,11 @@ enum Shape {
     Chain { depth: usize },
     /// One producer, one wire, `fanout` consumers (each with its own sink).
     Fanout { fanout: usize },
+    /// One task emitting on `outs` output ports per input — the
+    /// multi-output emitter path the typed-port task API targets (each
+    /// emission used to pay a wire-name scan over the producer's slots;
+    /// now it carries a pre-resolved WireId).
+    FanoutEmit { outs: usize },
     /// External injections fanning straight out to `fanout` consumers,
     /// injected one event at a time (the unbatched comparator).
     InjectFanout { fanout: usize },
@@ -61,6 +73,10 @@ impl Shape {
                     text.push_str(&format!("(x) leaf{i} (s{i})\n"));
                 }
             }
+            Shape::FanoutEmit { outs } => {
+                let ports: Vec<String> = (0..outs).map(|i| format!("o{i}")).collect();
+                text.push_str(&format!("(x) split ({})\n", ports.join(", ")));
+            }
             Shape::InjectFanout { fanout } | Shape::InjectBatch { fanout, .. } => {
                 for i in 0..fanout {
                     text.push_str(&format!("(x) leaf{i} (s{i})\n"));
@@ -74,7 +90,9 @@ impl Shape {
         match self {
             Shape::Chain { .. } => "w0",
             Shape::Fanout { .. } => "raw",
-            Shape::InjectFanout { .. } | Shape::InjectBatch { .. } => "x",
+            Shape::FanoutEmit { .. } | Shape::InjectFanout { .. } | Shape::InjectBatch { .. } => {
+                "x"
+            }
         }
     }
 
@@ -96,6 +114,26 @@ fn run_shape(shape: &Shape, provenance: bool) -> Run {
     let spec = parse(&shape.spec_text()).unwrap();
     let cfg = DeployConfig { provenance, ..Default::default() };
     let mut c = Coordinator::deploy(&spec, cfg).unwrap();
+    if let Shape::FanoutEmit { outs } = *shape {
+        // the port-API emitter under test: fetch once, emit on every
+        // declared port — ports resolved by index, classes defaulted
+        c.set_code(
+            "split",
+            Box::new(PortFn::new(move |ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
+                let mut fetched = None;
+                for av in io.inputs.all() {
+                    fetched = Some(ctx.fetch(av)?);
+                }
+                let p = fetched.expect("snapshot has one input");
+                for i in 0..outs {
+                    let port = io.out(i)?;
+                    io.emitter.emit(port, p.clone());
+                }
+                Ok(())
+            })),
+        )
+        .unwrap();
+    }
     let wid = c.wire_id(shape.inject_wire()).unwrap();
     let timed_injection = shape.times_injection();
     let wall = std::time::Instant::now();
@@ -159,11 +197,13 @@ fn main() {
         "E11: coordinator hot path — events/s and AV hops/s (wallclock, single thread)",
         &["shape", "provenance", "events_per_s", "ns_per_event", "hops_per_s"],
     );
-    let shapes: [(&str, Shape); 8] = [
+    let shapes: [(&str, Shape); 9] = [
         ("chain-4", Shape::Chain { depth: 4 }),
         ("chain-16", Shape::Chain { depth: 16 }),
         ("fanout-4", Shape::Fanout { fanout: 4 }),
         ("fanout-8", Shape::Fanout { fanout: 8 }),
+        // one task, four output ports: the emitter path (typed-port API)
+        ("fanout-emit4", Shape::FanoutEmit { outs: 4 }),
         ("inject-fanout-4", Shape::InjectFanout { fanout: 4 }),
         ("inject-fanout-8", Shape::InjectFanout { fanout: 8 }),
         // the batched injection edge vs its unbatched twin above: same

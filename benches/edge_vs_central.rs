@@ -34,7 +34,7 @@ fn run(n_edge: usize, chunk_rows: usize, central: bool) -> Arm {
     for i in 0..n_edge {
         c.set_code(&format!("sum-e{i}"), Box::new(SummarizeRs::new("sketch"))).unwrap();
     }
-    c.set_code("hq", Box::new(SketchMerge { out: "report".into() })).unwrap();
+    c.set_code("hq", Box::new(SketchMerge::new("report"))).unwrap();
     let trace = VehicleTrace {
         n_vehicles: 2,
         chunks_per_vehicle: 8,

@@ -27,6 +27,11 @@ if command -v cargo >/dev/null 2>&1; then
     step "cargo build --release"
     cargo build --release || fail=1
 
+    step "cargo build --release --examples"
+    # every example must keep compiling: handle/port API migrations rot
+    # silently otherwise (examples are the documented client surface)
+    cargo build --release --examples || fail=1
+
     step "cargo test -q"
     cargo test -q || fail=1
 

@@ -14,28 +14,27 @@ use anyhow::Result;
 use koalja::breadboard::{Breadboard, TapSpec, WINDOW_END};
 use koalja::prelude::*;
 use koalja::provenance::ProvenanceQuery;
-use koalja::task::UserCode;
 
 /// v`version` screening code: drop chunks whose peak is under `threshold`,
-/// forward the rest. Bumping the version (with a new threshold) is the
-/// hot-swap payload below.
-fn screen_factory(threshold: f32, version: u32) -> impl Fn() -> Box<dyn UserCode> {
+/// forward the rest on the task's single output port. Bumping the version
+/// (with a new threshold) is the hot-swap payload below.
+fn screen_factory(threshold: f32, version: u32) -> impl Fn() -> Box<dyn TaskCode> {
     move || {
-        Box::new(FnTask::versioned(
-            move |ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
-                let mut outs = Vec::new();
-                for av in snap.all_avs() {
+        Box::new(PortFn::versioned(
+            move |ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
+                let kept = io.out(0)?;
+                for av in io.inputs.all() {
                     let p = ctx.fetch(av)?;
                     if let Some((_, data)) = p.as_tensor() {
                         let peak = data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
                         if peak > threshold {
-                            outs.push(Output::summary("kept", p.clone()));
+                            io.emitter.emit(kept, p.clone());
                         } else {
                             ctx.remark(&format!("screened (peak {peak:.2} <= {threshold})"));
                         }
                     }
                 }
-                Ok(outs)
+                Ok(())
             },
             version,
         ))
@@ -55,16 +54,18 @@ fn main() -> Result<()> {
     let samples_in = bread.source("samples")?;
     let screen = bread.task("screen")?;
     let tally = bread.task("tally")?;
-    bread.plug_task(screen, screen_factory(1.5, 1));
+    bread.plug_task(screen, screen_factory(1.5, 1))?;
     bread.plug_task(tally, || {
-        Box::new(FnTask::new(|ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
-            let n = snap.all_avs().count() as f32;
-            for av in snap.all_avs() {
+        Box::new(PortFn::new(|ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
+            let n = io.inputs.all().count() as f32;
+            for av in io.inputs.all() {
                 ctx.fetch(av)?;
             }
-            Ok(vec![Output::summary("report", Payload::scalar(n))])
+            let report = io.out(0)?;
+            io.emitter.emit(report, Payload::scalar(n));
+            Ok(())
         }))
-    });
+    })?;
 
     // 1. taps: a metadata tap on the in-tray, a payload tap on 'kept'
     //    filtered to big chunks only

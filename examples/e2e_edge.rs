@@ -90,10 +90,10 @@ fn run_arm(central: bool) -> Result<ArmReport> {
         h.plug(
             &mut pipe,
             Box::new(PjrtTask::new(summarize_exe.clone(), "sketch").with_flops(1024 * 8 * 4)),
-        );
+        )?;
     }
     let hq = pipe.task("hq-aggregate")?;
-    hq.plug(&mut pipe, Box::new(SketchMerge { out: "fleet-report".into() }));
+    hq.plug(&mut pipe, Box::new(SketchMerge::new("fleet-report")))?;
 
     // ghost pre-flight: verify routing with zero payload cost (§III-K)
     let edge0 = pipe.plat.net.by_name("edge-0").unwrap();

@@ -73,7 +73,7 @@ fn main() -> Result<()> {
     pipe.task("window-stats")?.plug(
         &mut pipe,
         Box::new(PjrtTask::new(window_exe.clone(), "means").with_flops(256 * 8 * 2)),
-    );
+    )?;
     let mut r = rng(99);
     let mut sensor = koalja::workload::SensorStream::new("chan", SimDuration::millis(20), 8, 15.0);
     for (t, p) in sensor.arrivals_until(&mut r, SimTime::secs(12)) {

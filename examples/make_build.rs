@@ -36,25 +36,29 @@ fn main() -> Result<()> {
     let mut pipe = link.emits("binary").policy("swap").deploy(DeployConfig::default())?;
 
     // a "compiler": one artifact derived from ALL inputs (content-coupled,
-    // so any changed source changes the object file)
-    let compiler = |out: String| {
-        FnTask::new(move |ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
+    // so any changed source changes the object file). Port-native: every
+    // compiler emits on its task's single declared output port — no wire
+    // names, so ONE closure serves all 9 tasks.
+    let compiler = || {
+        PortFn::new(move |ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
             let mut blob: Vec<u8> = Vec::new();
-            for av in snap.all_avs() {
+            for av in io.inputs.all() {
                 if let Payload::Bytes(b) = ctx.fetch(av)? {
                     blob.extend_from_slice(&b[..b.len().min(64)]);
                     blob.extend_from_slice(&av.content.0.to_le_bytes());
                 }
             }
-            Ok(vec![Output::summary(&out, Payload::Bytes(blob))])
+            let out = io.out(0)?;
+            io.emitter.emit(out, Payload::Bytes(blob));
+            Ok(())
         })
     };
     for o in 0..n_obj {
         let h = pipe.task(&format!("compile{o}"))?;
-        h.plug(&mut pipe, Box::new(compiler(format!("obj{o}"))));
+        h.plug(&mut pipe, Box::new(compiler()))?;
     }
     let link_all = pipe.task("link-all")?;
-    link_all.plug(&mut pipe, Box::new(compiler("binary".to_string())));
+    link_all.plug(&mut pipe, Box::new(compiler()))?;
 
     // resolve every source in-tray and the binary sink once; the whole
     // edit/rebuild loop below is string-free

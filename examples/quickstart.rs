@@ -46,15 +46,18 @@ fn main() -> Result<()> {
     let screen: TaskHandle = pipe.task("screen")?;
     let aggregate: TaskHandle = pipe.task("aggregate")?;
 
-    // Plug in user code. The plugin sees only ctx + snapshot.
-    screen.plug(&mut pipe, Box::new(ThresholdGate::new("clean", 0.5)));
+    // Plug in task code. The plugin sees only ctx + ports: builtins
+    // resolve their output port once at plug time (a typo'd wire name
+    // fails HERE with did-you-mean, like any handle resolution), and
+    // closure plugins emit on `io.out(..)` — no wire names in the loop.
+    screen.plug(&mut pipe, Box::new(ThresholdGate::new("clean", 0.5)))?;
     aggregate.plug(
         &mut pipe,
-        Box::new(FnTask::new(|ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
+        Box::new(PortFn::new(|ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
             let mut peak = f32::MIN;
             let mut total = 0.0f32;
             let mut n = 0usize;
-            for av in snap.all_avs() {
+            for av in io.inputs.all() {
                 let p = ctx.fetch(av)?;
                 let (_, data) = p.as_tensor().unwrap();
                 for x in data {
@@ -64,12 +67,11 @@ fn main() -> Result<()> {
                 }
             }
             ctx.remark(&format!("aggregated {n} samples"));
-            Ok(vec![Output::summary(
-                "report",
-                Payload::tensor(&[2], vec![peak, total / n as f32]),
-            )])
+            let report = io.out(0)?;
+            io.emitter.emit(report, Payload::tensor(&[2], vec![peak, total / n as f32]));
+            Ok(())
         })),
-    );
+    )?;
 
     // 3. Drop data into the in-tray at irregular times…
     let mut r = rng(2024);

@@ -20,31 +20,42 @@ use koalja::prelude::*;
 use koalja::task::compute::{pack_params, MlpDims, ModelServer, PjrtTask};
 
 /// Trainer: PJRT train-step with param state; deploys the packed model on
-/// the `model` wire every `deploy_every` steps.
+/// the `model` port every `deploy_every` steps. Port-native: the model
+/// port is resolved once at bind, the loss is read off the inner task's
+/// emission — no wire names in the run loop.
 struct Trainer {
     inner: PjrtTask,
+    model_port: Option<OutPort>,
     dims: MlpDims,
     steps: u64,
     deploy_every: u64,
     losses: Vec<f32>,
 }
 
-impl UserCode for Trainer {
+impl TaskCode for Trainer {
     fn version(&self) -> u32 {
         1
     }
 
-    fn run(&mut self, ctx: &mut TaskCtx<'_>, snap: &Snapshot) -> Result<Vec<Output>> {
-        let mut outs = self.inner.run(ctx, snap)?;
+    fn bind(&mut self, ports: &Ports<'_>) -> Result<()> {
+        self.inner.bind(ports)?;
+        self.model_port = Some(ports.out("model")?);
+        Ok(())
+    }
+
+    fn run(&mut self, ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>) -> Result<()> {
+        let before = io.emitter.count();
+        self.inner.run(ctx, io)?;
         self.steps += 1;
-        if let Some((_, loss)) = outs[0].payload.as_tensor() {
+        if let Some((_, loss)) = io.emitter.emissions()[before].payload.as_tensor() {
             self.losses.push(loss[0]);
         }
         if self.steps % self.deploy_every == 0 {
-            outs.push(Output::summary("model", pack_params(&self.inner.state)?));
+            let model = self.model_port.expect("bound at install");
+            io.emitter.emit(model, pack_params(&self.inner.state)?);
         }
         let _ = self.dims;
-        Ok(outs)
+        Ok(())
     }
 
     fn compute_cost(&self, bytes: u64) -> SimDuration {
@@ -93,37 +104,38 @@ fn main() -> Result<()> {
                 .with_state(init_params)
                 .with_emit(vec![(4, "loss".into(), DataClass::Summary)])
                 .with_absorb(vec![(0, 0), (1, 1), (2, 2), (3, 3)]),
+            model_port: None,
             dims,
             steps: 0,
             deploy_every: 50,
             losses: vec![],
         }),
-    );
+    )?;
 
     // deploy: push packed params into the running service
     pipe.task("deploy")?.plug(
         &mut pipe,
-        Box::new(FnTask::new(move |ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
-            let mut outs = vec![];
-            for av in snap.all_avs() {
+        Box::new(PortFn::new(move |ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
+            let deployed = io.out(0)?;
+            for av in io.inputs.all() {
                 let packed = ctx.fetch(av)?;
                 let ok = ctx.plat.services.update("classifier", |s| {
                     s.update_payload(&packed);
                 });
                 ctx.remark(&format!("deployed model {} (ok={ok})", av.content));
-                outs.push(Output::summary("deployed", Payload::scalar(1.0)));
+                io.emitter.emit(deployed, Payload::scalar(1.0));
             }
-            Ok(outs)
+            Ok(())
         })),
-    );
+    )?;
 
     // predict: consult the service (out-of-band lookup, recorded)
     let predict = pipe.task("predict")?;
     predict.plug(
         &mut pipe,
-        Box::new(FnTask::new(|ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
-            let mut outs = vec![];
-            for av in snap.all_avs() {
+        Box::new(PortFn::new(|ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
+            let classification = io.out(0)?;
+            for av in io.inputs.all() {
                 let batch = ctx.fetch(av)?;
                 let probs = ctx.lookup("classifier", &batch)?;
                 let (shape, p) = probs
@@ -141,11 +153,11 @@ fn main() -> Result<()> {
                     })
                     .collect();
                 let n = preds.len();
-                outs.push(Output::summary("classification", Payload::tensor(&[n], preds)));
+                io.emitter.emit(classification, Payload::tensor(&[n], preds));
             }
-            Ok(outs)
+            Ok(())
         })),
-    );
+    )?;
 
     // ---- drive both timescales ----
     let stream = koalja::workload::ImageStream::new(&mut r, dims.classes, dims.input, 0.4);

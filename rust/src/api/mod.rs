@@ -53,7 +53,7 @@ use crate::av::{AnnotatedValue, DataClass, Payload};
 use crate::coordinator::{Collected, Coordinator, DeployConfig};
 use crate::provenance::{CheckpointEntry, ProvenanceQuery};
 use crate::spec::PipelineSpec;
-use crate::task::UserCode;
+use crate::task::TaskCode;
 use crate::util::{suggest, AvId, ObjectId, RegionId, SimTime, TaskId, WireId};
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -399,11 +399,13 @@ impl TaskHandle {
         &pipe.coord.graph.task(self.task).name
     }
 
-    /// Plug user code into this task (recorded in the agent's versioned
-    /// code slot history). Infallible: the handle cannot dangle.
-    pub fn plug(self, pipe: &mut Pipeline, code: Box<dyn UserCode>) {
+    /// Plug task code into this task (recorded in the agent's versioned
+    /// code slot history). The handle cannot dangle, but the code's
+    /// `bind` resolves its output ports here — unknown port names fail
+    /// with did-you-mean candidates and leave the previous code running.
+    pub fn plug(self, pipe: &mut Pipeline, code: Box<dyn TaskCode>) -> Result<()> {
         pipe.check(self.token);
-        pipe.coord.set_code_id(self.task, code);
+        pipe.coord.set_code_id(self.task, code)
     }
 
     /// Run this task once with an empty snapshot (a pure source "fires").
@@ -421,7 +423,7 @@ impl TaskHandle {
     pub fn hot_swap(
         self,
         pipe: &mut Pipeline,
-        code: Box<dyn UserCode>,
+        code: Box<dyn TaskCode>,
         recompute_last: bool,
     ) -> Result<(usize, u64)> {
         pipe.check(self.token);
@@ -536,7 +538,14 @@ mod tests {
         work.plug(
             &mut p,
             Box::new(crate::task::builtins::PassThrough::new("mid")),
-        );
+        )
+        .unwrap();
+        // bind failures surface at plug time, with suggestions
+        let e = work
+            .plug(&mut p, Box::new(crate::task::builtins::PassThrough::new("mdi")))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("did you mean 'mid'?"), "{e}");
         let (evicted, _bytes) = work
             .hot_swap(
                 &mut p,

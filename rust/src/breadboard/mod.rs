@@ -10,7 +10,7 @@
 //!    runtime; sample AV metadata (optionally payloads) through predicates,
 //!    with per-tap overhead counters. The dispatch hook costs one branch
 //!    when no tap is attached (`benches/tap_overhead.rs`).
-//!  * **hot-swap** ([`swap`]) — replace a task's [`UserCode`] mid-run with
+//!  * **hot-swap** ([`swap`]) — replace a task's [`TaskCode`] mid-run with
 //!    a version bump that flows into provenance stamps and drives the
 //!    §III-J recomputation path; a dry-run preview reports which cached
 //!    intermediates the swap would invalidate before committing.
@@ -35,14 +35,14 @@ use crate::api::{Pipeline, TaskHandle};
 use crate::coordinator::{Coordinator, DeployConfig};
 use crate::provenance::InjectionRecord;
 use crate::spec::PipelineSpec;
-use crate::task::UserCode;
+use crate::task::TaskCode;
 use crate::util::{SimDuration, SimTime, WireId};
 use crate::workspace::Resource;
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 
-/// Factory that builds (and rebuilds, for replay) a task's user code.
-pub type CodeFactory = Box<dyn Fn() -> Box<dyn UserCode>>;
+/// Factory that builds (and rebuilds, for replay) a task's code.
+pub type CodeFactory = Box<dyn Fn() -> Box<dyn TaskCode>>;
 
 /// Outcome of a committed hot-swap.
 #[derive(Debug)]
@@ -151,28 +151,29 @@ impl Breadboard {
     // Code plugging (records factories so replay can re-provision)
     // ------------------------------------------------------------------
 
-    /// Plug user code into a task handle, keeping the factory so forensic
+    /// Plug task code into a task handle, keeping the factory so forensic
     /// replay can rebuild an identical agent. Prefer this (or the
     /// string-keyed [`Breadboard::plug`] wrapper) over raw
-    /// [`Coordinator::set_code`] inside sessions.
-    pub fn plug_task<F>(&mut self, task: TaskHandle, factory: F)
+    /// [`Coordinator::set_code`] inside sessions. Fails (and records no
+    /// factory) when the code's port bind fails.
+    pub fn plug_task<F>(&mut self, task: TaskHandle, factory: F) -> Result<()>
     where
-        F: Fn() -> Box<dyn UserCode> + 'static,
+        F: Fn() -> Box<dyn TaskCode> + 'static,
     {
         let name = task.name(&self.pipe).to_string();
-        task.plug(&mut self.pipe, factory());
+        task.plug(&mut self.pipe, factory())?;
         self.factories.insert(name, Box::new(factory));
+        Ok(())
     }
 
     /// Name-resolving wrapper over [`Breadboard::plug_task`], kept for
     /// spec-text-driven scripts; the handle form is the steady-state API.
     pub fn plug<F>(&mut self, task: &str, factory: F) -> Result<()>
     where
-        F: Fn() -> Box<dyn UserCode> + 'static,
+        F: Fn() -> Box<dyn TaskCode> + 'static,
     {
         let h = self.pipe.task(task)?;
-        self.plug_task(h, factory);
-        Ok(())
+        self.plug_task(h, factory)
     }
 
     // ------------------------------------------------------------------
@@ -290,7 +291,7 @@ impl Breadboard {
         recompute_last: bool,
     ) -> Result<SwapOutcome>
     where
-        F: Fn() -> Box<dyn UserCode> + 'static,
+        F: Fn() -> Box<dyn TaskCode> + 'static,
     {
         self.authorize(Resource::Pipeline(self.pipe.spec().name.clone()))?;
         let name = task.name(&self.pipe).to_string();
@@ -324,7 +325,7 @@ impl Breadboard {
     /// Name-resolving wrapper over [`Breadboard::hot_swap_task`].
     pub fn hot_swap<F>(&mut self, task: &str, factory: F, recompute_last: bool) -> Result<SwapOutcome>
     where
-        F: Fn() -> Box<dyn UserCode> + 'static,
+        F: Fn() -> Box<dyn TaskCode> + 'static,
     {
         let h = self.pipe.task(task)?;
         self.hot_swap_task(h, factory, recompute_last)
@@ -395,17 +396,16 @@ impl Breadboard {
 mod tests {
     use super::*;
     use crate::av::{DataClass, Payload};
-    use crate::policy::Snapshot;
-    use crate::task::builtins::FnTask;
-    use crate::task::{Output, TaskCtx};
+    use crate::task::builtins::PortFn;
+    use crate::task::{PortIo, TaskCtx};
     use crate::util::RegionId;
 
-    fn scale_factory(out: &'static str, factor: f32, version: u32) -> impl Fn() -> Box<dyn UserCode> {
+    fn scale_factory(factor: f32, version: u32) -> impl Fn() -> Box<dyn TaskCode> {
         move || {
-            Box::new(FnTask::versioned(
-                move |ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
-                    let mut outs = Vec::new();
-                    for av in snap.all_avs() {
+            Box::new(PortFn::versioned(
+                move |ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
+                    let port = io.out(0)?;
+                    for av in io.inputs.snapshot().all_avs() {
                         let p = ctx.fetch(av)?;
                         let scaled = match p.as_tensor() {
                             Some((shape, data)) => Payload::tensor(
@@ -414,9 +414,9 @@ mod tests {
                             ),
                             None => p,
                         };
-                        outs.push(Output::summary(out, scaled));
+                        io.emitter.emit(port, scaled);
                     }
-                    Ok(outs)
+                    Ok(())
                 },
                 version,
             ))
@@ -426,7 +426,7 @@ mod tests {
     fn session() -> Breadboard {
         let spec = crate::spec::parse("[bb]\n(raw) work (out)\n").unwrap();
         let mut b = Breadboard::deploy(&spec, DeployConfig::default()).unwrap();
-        b.plug("work", scale_factory("out", 1.0, 1)).unwrap();
+        b.plug("work", scale_factory(1.0, 1)).unwrap();
         b
     }
 
@@ -512,11 +512,11 @@ mod tests {
         assert!(preview.memo_entries >= 1);
 
         // same version: refused
-        assert!(b.hot_swap("work", scale_factory("out", 2.0, 1), false).is_err());
+        assert!(b.hot_swap("work", scale_factory(2.0, 1), false).is_err());
 
-        let outcome = b.hot_swap("work", scale_factory("out", 2.0, 2), false).unwrap();
+        let outcome = b.hot_swap("work", scale_factory(2.0, 2), false).unwrap();
         // downgrades are refused too — version history must stay monotone
-        assert!(b.hot_swap("work", scale_factory("out", 3.0, 1), false).is_err());
+        assert!(b.hot_swap("work", scale_factory(3.0, 1), false).is_err());
         assert_eq!(outcome.preview.new_version, 2);
         let id = b.task_id("work").unwrap();
         assert_eq!(b.agents[id.index()].version(), 2);
@@ -557,7 +557,7 @@ mod tests {
         b.run_until_idle();
         b.run_until(SimTime::millis(500));
         let t_swap = b.plat.now;
-        b.hot_swap("work", scale_factory("out", 2.0, 2), false).unwrap();
+        b.hot_swap("work", scale_factory(2.0, 2), false).unwrap();
         inject_series(&mut b, &[3.0, 4.0], 600); // post-swap window
         b.run_until_idle();
 

@@ -29,7 +29,7 @@ use crate::provenance::{CheckpointEvent, Relation};
 use crate::spec::PipelineSpec;
 use crate::storage::{PurgePolicy, StorageConfig};
 use crate::task::builtins::PassThrough;
-use crate::task::{RunOutcome, TaskAgent, UserCode};
+use crate::task::{RunOutcome, TaskAgent, TaskCode};
 use crate::util::{AvId, LinkId, ObjectId, RegionId, SimDuration, SimTime, TaskId, WireId};
 use anyhow::{anyhow, bail, Result};
 use std::cmp::Reverse;
@@ -125,21 +125,20 @@ pub struct Collected {
 /// the `HashMap<String, _>`-shaped read API (`get`, `[..]` indexing,
 /// `iter`) preserved for examples, tests and the CLI — name resolution
 /// happens only on those cold read paths, never when the event loop
-/// collects an artifact.
+/// collects an artifact. Every capture sits in the dense per-wire store:
+/// since the port runtime pre-resolves emissions, nothing can be published
+/// under a name outside the deploy-time wire table (unknown wires error at
+/// bind/emit with did-you-mean instead of leaking into an overflow map).
 #[derive(Default)]
 pub struct SinkBook {
     names: Arc<Vec<String>>,
     per_wire: Vec<Vec<Collected>>,
-    /// Captures published under names outside the deploy-time wire table
-    /// (user code emitting an undeclared wire, e.g. the default
-    /// pass-through's "void" on an output-less task). Cold path only.
-    extra: HashMap<String, Vec<Collected>>,
 }
 
 impl SinkBook {
     fn bound(names: Arc<Vec<String>>) -> Self {
         let per_wire = (0..names.len()).map(|_| Vec::new()).collect();
-        Self { names, per_wire, extra: HashMap::new() }
+        Self { names, per_wire }
     }
 
     #[inline]
@@ -147,18 +146,12 @@ impl SinkBook {
         self.per_wire[wire.index()].push(rec);
     }
 
-    fn push_extra(&mut self, name: &str, rec: Collected) {
-        self.extra.entry(name.to_string()).or_default().push(rec);
-    }
-
     /// Captures on `wire`, or None when nothing was collected there
-    /// (matching the former `HashMap::get` contract). Interned wires land
-    /// in the dense store; `extra` only ever holds names outside the wire
-    /// table, but fall through regardless so no record can hide.
+    /// (matching the former `HashMap::get` contract).
     pub fn get(&self, wire: &str) -> Option<&Vec<Collected>> {
         match self.names.iter().position(|n| n == wire) {
             Some(i) if !self.per_wire[i].is_empty() => Some(&self.per_wire[i]),
-            _ => self.extra.get(wire),
+            _ => None,
         }
     }
 
@@ -169,7 +162,6 @@ impl SinkBook {
             .zip(&self.per_wire)
             .filter(|(_, v)| !v.is_empty())
             .map(|(n, v)| (n.as_str(), v.as_slice()))
-            .chain(self.extra.iter().map(|(n, v)| (n.as_str(), v.as_slice())))
     }
 
     /// Dense read by interned id (the handle API's path) — empty slice
@@ -237,28 +229,22 @@ impl WireCurrency {
 /// Per-task output slot: one interned wire plus the consumer links fanning
 /// out from it. `links` empty ⇒ the wire is a sink for this producer.
 struct OutSlot {
-    /// Output name as spec'd — the resolution target for user-code
-    /// [`Output`]s (tasks emit names; everything downstream routes on id).
-    name: Box<str>,
     wire: WireId,
     links: Vec<u32>,
 }
 
-/// Where a published Output goes, resolved once per publication.
+/// Where a published emission goes, resolved once per publication — by an
+/// integer scan over the producer's (tiny) slot list, since emissions
+/// already carry their interned [`WireId`] (§Perf: the string scan the
+/// old `Vec<Output>` return paid per publication is gone).
 #[derive(Clone, Copy)]
-enum RouteTarget<'a> {
+enum RouteTarget {
     /// One of the producer's declared output slots (the normal case).
     Slot(usize),
     /// A wire in the deploy-time table that this producer did not declare
     /// (user code emitting another task's wire name): a phantom sink —
     /// taps, currency and dense capture still apply; no consumer links.
     Wire(WireId),
-    /// A name outside the wire table entirely (custom user code emitting
-    /// a name the spec never mentions; the "void" fallback of output-less
-    /// tasks IS interned at build). Captured in the sink book's overflow
-    /// map only — deliberately no wire currency, no taps, no memoization
-    /// (per-wire state is dense and sized at deploy): cold path.
-    Name(&'a str),
 }
 
 /// The deployed pipeline.
@@ -359,7 +345,9 @@ impl Coordinator {
                 None => RateControl::default(),
             };
             let engine = SnapshotEngine::new(t.policy(), buffers, rate);
-            let code: Box<dyn UserCode> = Box::new(PassThrough::new(
+            // default code: pass inputs through on the first declared port
+            // (or the interned "void" fallback for output-less tasks)
+            let code: Box<dyn TaskCode> = Box::new(PassThrough::new(
                 t.outputs.first().map(|s| s.as_str()).unwrap_or("void"),
             ));
             agents.push(TaskAgent::new(
@@ -370,7 +358,8 @@ impl Coordinator {
                 code,
                 notify,
                 cfg.cache_policy,
-            ));
+                &graph.wires,
+            )?);
 
             // concept map: the long-term design story (§III-C story 3)
             for inp in &t.inputs {
@@ -412,11 +401,7 @@ impl Coordinator {
                 let slots = &mut out_links[from.index()];
                 match slots.iter_mut().find(|s| s.wire == l.wire_id) {
                     Some(s) => s.links.push(li as u32),
-                    None => slots.push(OutSlot {
-                        name: l.wire.clone().into_boxed_str(),
-                        wire: l.wire_id,
-                        links: vec![li as u32],
-                    }),
+                    None => slots.push(OutSlot { wire: l.wire_id, links: vec![li as u32] }),
                 }
             }
             let buf_idx = agents[l.to.index()]
@@ -432,11 +417,7 @@ impl Coordinator {
             for w in &t.outputs {
                 let wid = graph.wires.id(w).expect("task outputs are interned at build");
                 if !out_links[ti].iter().any(|s| s.wire == wid) {
-                    out_links[ti].push(OutSlot {
-                        name: w.clone().into_boxed_str(),
-                        wire: wid,
-                        links: vec![],
-                    });
+                    out_links[ti].push(OutSlot { wire: wid, links: vec![] });
                 }
             }
         }
@@ -466,20 +447,24 @@ impl Coordinator {
         })
     }
 
-    /// Plug user code into a task (recorded in the agent's versioned code
+    /// Plug task code into a task (recorded in the agent's versioned code
     /// slot history). Thin name→id wrapper over
     /// [`Coordinator::set_code_id`]; unknown names error with candidates.
-    pub fn set_code(&mut self, task: &str, code: Box<dyn UserCode>) -> Result<()> {
+    /// Legacy [`UserCode`](crate::task::UserCode) plugins install through
+    /// [`crate::task::legacy`].
+    pub fn set_code(&mut self, task: &str, code: Box<dyn TaskCode>) -> Result<()> {
         let id = self.task_id(task)?;
-        self.set_code_id(id, code);
-        Ok(())
+        self.set_code_id(id, code)
     }
 
-    /// Id-based code install (the handle API's path — no name resolution,
-    /// no `Result`: a deploy-time [`TaskId`] cannot fail to resolve).
-    pub fn set_code_id(&mut self, task: TaskId, code: Box<dyn UserCode>) {
+    /// Id-based code install (the handle API's path — no name resolution
+    /// for the *task*; the code's `bind` resolves its ports here, and a
+    /// bind failure — an unknown output port, with did-you-mean — rejects
+    /// the install leaving the previous code running).
+    pub fn set_code_id(&mut self, task: TaskId, code: Box<dyn TaskCode>) -> Result<()> {
         let now = self.plat.now;
-        self.agents[task.index()].install_code(code, now, "plug");
+        self.agents[task.index()].install_code(code, &self.graph.wires, now, "plug")?;
+        Ok(())
     }
 
     /// Resolve a task name; unknown names list near-miss candidates.
@@ -938,36 +923,33 @@ impl Coordinator {
         let parents: Vec<AvId> = snapshot.all_avs().map(|a| a.id).collect();
         let born = snapshot.born;
         let outcome = if forced {
-            self.agents[task.index()].execute_forced(&mut self.plat, snapshot)?
+            self.agents[task.index()].execute_forced(&mut self.plat, &self.graph.wires, snapshot)?
         } else {
-            self.agents[task.index()].execute(&mut self.plat, snapshot)?
+            self.agents[task.index()].execute(&mut self.plat, &self.graph.wires, snapshot)?
         };
         match outcome {
-            RunOutcome::Ran { run, outputs, cost, ghost } => {
-                let publish_at = self.plat.now + cold + cost;
+            RunOutcome::Ran { run, mut emissions, cost, ghost } => {
+                let publish_base = self.plat.now + cold + cost;
                 let mut memo_rec = Vec::new();
-                // a run is memoizable only if every output resolves to an
-                // interned wire — a partial memo would silently drop the
-                // unresolved outputs on replay
-                let mut memoizable = true;
-                for out in outputs {
+                for em in emissions.drain(..) {
                     let region = self.agents[task.index()].region;
                     let version = self.agents[task.index()].version();
                     let seq = self.agents[task.index()].out_seq;
                     self.agents[task.index()].out_seq += 1;
-                    // the single name→id resolution for this publication:
-                    // user code emits names, everything downstream routes
-                    // on the target's interned WireId (§Perf)
-                    let slot = self.out_links[task.index()]
+                    // emissions arrive pre-resolved (the port runtime
+                    // minted the WireId at bind time, or the legacy
+                    // adapter's per-agent cache did): routing is a tiny
+                    // integer scan over the producer's slots — no string
+                    // comparison anywhere on this path (§Perf)
+                    let target = match self
+                        .out_links[task.index()]
                         .iter()
-                        .position(|s| *s.name == *out.wire);
-                    let target = match slot {
+                        .position(|s| s.wire == em.wire)
+                    {
                         Some(si) => RouteTarget::Slot(si),
-                        None => match self.graph.wires.id(&out.wire) {
-                            Some(w) => RouteTarget::Wire(w),
-                            None => RouteTarget::Name(&out.wire),
-                        },
+                        None => RouteTarget::Wire(em.wire),
                     };
+                    let publish_at = publish_base + em.defer;
                     // sink outputs keep a payload copy for `collected`;
                     // internal wires don't — consumers fetch from storage
                     // (§Perf: saves one payload clone per internal hop)
@@ -975,19 +957,19 @@ impl Coordinator {
                         RouteTarget::Slot(si) => {
                             self.out_links[task.index()][si].links.is_empty()
                         }
-                        _ => true,
+                        RouteTarget::Wire(_) => true,
                     };
-                    let sink_payload = if is_sink { Some(out.payload.clone()) } else { None };
+                    let sink_payload = if is_sink { Some(em.payload.clone()) } else { None };
                     let saved = self.plat.now;
                     self.plat.now = publish_at;
                     let (av, _lat) = self.plat.mint_av(
-                        out.payload,
+                        em.payload,
                         task,
                         run,
                         version,
                         SINK,
                         region,
-                        out.class,
+                        em.class,
                         seq,
                         &parents,
                         born,
@@ -1000,36 +982,37 @@ impl Coordinator {
                         CheckpointEvent::Emit { av: av.id },
                     );
                     if !ghost {
-                        match target {
-                            RouteTarget::Slot(si) => memo_rec.push((
-                                self.out_links[task.index()][si].wire,
-                                av.object,
-                                av.content,
-                                av.size_bytes,
-                                av.class,
-                            )),
-                            RouteTarget::Wire(w) => memo_rec.push((
-                                w,
-                                av.object,
-                                av.content,
-                                av.size_bytes,
-                                av.class,
-                            )),
-                            RouteTarget::Name(_) => memoizable = false,
-                        }
+                        // every emission carries an interned wire, so a run
+                        // is always fully memoizable (the port runtime has
+                        // no unresolved-name escape hatch); the defer is
+                        // recorded so a memo replay keeps the same timing
+                        memo_rec.push((
+                            em.wire,
+                            av.object,
+                            av.content,
+                            av.size_bytes,
+                            av.class,
+                            em.defer,
+                        ));
                     }
                     self.route_output(task, target, Arc::new(av), sink_payload, publish_at);
                 }
-                if !ghost && memoizable && !memo_rec.is_empty() {
+                // hand the drained buffer back: the steady state reuses
+                // one allocation run after run (§Perf)
+                self.agents[task.index()].recycle_emissions(emissions);
+                if !ghost && !memo_rec.is_empty() {
                     self.agents[task.index()].memoize(recipe, memo_rec);
                 }
             }
             RunOutcome::Memoized { outputs } => {
                 // Reuse cached objects: fresh AVs, no compute, no new bytes.
                 // Memo entries carry interned WireIds, so replaying a hit
-                // never touches a wire name (§Perf).
-                let publish_at = self.plat.now + cold + SimDuration::micros(30);
-                for (wire, object, content, size, class) in outputs {
+                // never touches a wire name (§Perf); each entry's recorded
+                // defer keeps deferred emissions trailing the run exactly
+                // as they did when computed.
+                let publish_base = self.plat.now + cold + SimDuration::micros(30);
+                for (wire, object, content, size, class, defer) in outputs {
+                    let publish_at = publish_base + defer;
                     // every memo entry carries an interned wire: either one
                     // of this producer's slots or a phantom-sink wire
                     let target = match self
@@ -1094,11 +1077,11 @@ impl Coordinator {
     /// wires are captured instead. The publication's `Arc` is shared by
     /// the tap observation, the wire-currency slot and every consumer
     /// `Deliver` event: an N-consumer wire costs one allocation, not N+2
-    /// deep clones (§Perf). See [`RouteTarget`] for the three cases.
+    /// deep clones (§Perf). See [`RouteTarget`] for the two cases.
     fn route_output(
         &mut self,
         from: TaskId,
-        target: RouteTarget<'_>,
+        target: RouteTarget,
         av: Arc<AnnotatedValue>,
         sink_payload: Option<Payload>,
         at: SimTime,
@@ -1106,14 +1089,6 @@ impl Coordinator {
         let (wire, slot) = match target {
             RouteTarget::Slot(si) => (self.out_links[from.index()][si].wire, Some(si)),
             RouteTarget::Wire(w) => (w, None),
-            RouteTarget::Name(name) => {
-                // outside the wire table: capture in the overflow map
-                self.plat.metrics.e2e(av.born, at);
-                let payload = self.sink_payload_for(&av, sink_payload);
-                let rec = Collected { at, av: (*av).clone(), payload };
-                self.collected.push_extra(name, rec);
-                return;
-            }
         };
         // breadboard probe point: one observation per value published on
         // the wire, regardless of consumer fan-out, stamped at publish
@@ -1203,7 +1178,7 @@ impl Coordinator {
     pub fn software_update(
         &mut self,
         task: &str,
-        code: Box<dyn UserCode>,
+        code: Box<dyn TaskCode>,
         recompute_last: bool,
     ) -> Result<(usize, u64)> {
         let id = self.task_id(task)?;
@@ -1211,16 +1186,18 @@ impl Coordinator {
     }
 
     /// Id-based software update (the handle API's path); same contract as
-    /// [`Coordinator::software_update`] minus the name resolution.
+    /// [`Coordinator::software_update`] minus the name resolution. The new
+    /// code binds against the task's minted ports first — a bind failure
+    /// rejects the update before anything is invalidated.
     pub fn software_update_id(
         &mut self,
         id: TaskId,
-        code: Box<dyn UserCode>,
+        code: Box<dyn TaskCode>,
         recompute_last: bool,
     ) -> Result<(usize, u64)> {
         let new_v = code.version();
         let now = self.plat.now;
-        let old_v = self.agents[id.index()].install_code(code, now, "update");
+        let old_v = self.agents[id.index()].install_code(code, &self.graph.wires, now, "update")?;
         self.agents[id.index()].invalidate_memo();
         // §III-J: everything this task produced (and its descendants) is
         // now suspect — evict downstream dependent-local cache copies so

@@ -498,6 +498,125 @@ fn undeclared_output_on_interned_wire_collects_densely() {
     assert_eq!(c.collected_count("x"), 2, "memo replay still emits the phantom sink");
 }
 
+#[test]
+fn plug_time_bind_rejects_unknown_ports_with_suggestions() {
+    let mut c = deploy("[bp]\n(raw) screen (clean, alerts)\n");
+    // typo'd output port: rejected at plug time, previous code kept
+    let err = c
+        .set_code("screen", Box::new(crate::task::builtins::PassThrough::new("claen")))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown wire 'claen'"), "{err}");
+    assert!(err.contains("did you mean 'clean'?"), "{err}");
+    assert!(err.contains("known output ports: clean, alerts"), "{err}");
+    let id = c.task_id("screen").unwrap();
+    assert_eq!(c.agents[id.index()].version(), 1, "failed plug left old code");
+    assert_eq!(c.agents[id.index()].code_history.len(), 1, "no slot recorded");
+    // the pipeline still runs on the original pass-through
+    c.inject("raw", Payload::scalar(1.0), DataClass::Summary).unwrap();
+    c.run_until_idle();
+    assert_eq!(c.collected_count("clean"), 1);
+}
+
+#[test]
+fn runtime_unknown_wire_emission_errors_with_declared_ports() {
+    // a legacy closure emitting a name outside the wire table: the
+    // adapter's resolution fails with the task's declared ports listed
+    // (it no longer silently lands in an overflow map)
+    let mut c = deploy("[re]\n(raw) work (out)\n");
+    c.set_code(
+        "work",
+        Box::new(FnTask::new(|ctx, snap| {
+            let mut outs = vec![];
+            for av in snap.all_avs() {
+                outs.push(Output::summary("oot", ctx.fetch(av)?));
+            }
+            Ok(outs)
+        })),
+    )
+    .unwrap();
+    c.inject("raw", Payload::scalar(1.0), DataClass::Summary).unwrap();
+    // demand propagates the run error (reactive pump records it instead)
+    let err = c.demand("out").unwrap_err().to_string();
+    assert!(err.contains("unknown wire 'oot'"), "{err}");
+    assert!(err.contains("did you mean 'out'?"), "{err}");
+    assert!(err.contains("known output ports: out"), "{err}");
+    // the reactive path counts it as a task error, not a capture
+    c.run_until_idle();
+    assert!(c.plat.metrics.get("task_errors") >= 1);
+    assert_eq!(c.collected_count("oot"), 0, "nothing leaked into the sink book");
+}
+
+#[test]
+fn port_emissions_route_like_named_outputs() {
+    use crate::task::builtins::PortFn;
+    use crate::task::{PortIo, TaskCtx};
+    // one task fanning out on two declared ports, port-API style
+    let mut c = deploy("[pe]\n(raw) split (a, b)\n");
+    c.set_code(
+        "split",
+        Box::new(PortFn::new(|ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
+            let (a, b) = (io.out(0)?, io.out(1)?);
+            for av in io.inputs.snapshot().all_avs() {
+                let p = ctx.fetch(av)?;
+                io.emitter.emit(a, p.clone());
+                io.emitter.emit_class(b, p, DataClass::Raw);
+            }
+            Ok(())
+        })),
+    )
+    .unwrap();
+    c.inject("raw", Payload::scalar(4.0), DataClass::Summary).unwrap();
+    c.run_until_idle();
+    assert_eq!(c.collected_count("a"), 1);
+    assert_eq!(c.collected_count("b"), 1);
+    assert_eq!(c.collected["a"][0].av.class, DataClass::Summary);
+    assert_eq!(c.collected["b"][0].av.class, DataClass::Raw, "per-call class override");
+    // memo replay covers multi-port emissions
+    c.inject("raw", Payload::scalar(4.0), DataClass::Summary).unwrap();
+    c.run_until_idle();
+    assert!(c.plat.metrics.get("memo_hits") >= 1);
+    assert_eq!(c.collected_count("a"), 2);
+    assert_eq!(c.collected_count("b"), 2);
+}
+
+#[test]
+fn deferred_emissions_publish_later() {
+    use crate::task::builtins::PortFn;
+    use crate::task::{PortIo, TaskCtx};
+    let mut c = deploy("[df]\n(raw) stamp (now, later)\n");
+    c.set_code(
+        "stamp",
+        Box::new(PortFn::new(|ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
+            let (now, later) = (io.out(0)?, io.out(1)?);
+            for av in io.inputs.snapshot().all_avs() {
+                let p = ctx.fetch(av)?;
+                io.emitter.emit(now, p.clone());
+                io.emitter.emit_after(later, p, SimDuration::millis(5));
+            }
+            Ok(())
+        })),
+    )
+    .unwrap();
+    c.inject("raw", Payload::scalar(1.0), DataClass::Summary).unwrap();
+    c.run_until_idle();
+    let t_now = c.collected["now"][0].at;
+    let t_later = c.collected["later"][0].at;
+    assert_eq!(t_later.saturating_sub(t_now), SimDuration::millis(5));
+    // identical recipe -> memo hit: the recorded defer must survive the
+    // replay, so the deferred value still trails by the same interval
+    c.inject("raw", Payload::scalar(1.0), DataClass::Summary).unwrap();
+    c.run_until_idle();
+    assert!(c.plat.metrics.get("memo_hits") >= 1, "second run memoized");
+    let t_now2 = c.collected["now"][1].at;
+    let t_later2 = c.collected["later"][1].at;
+    assert_eq!(
+        t_later2.saturating_sub(t_now2),
+        SimDuration::millis(5),
+        "memo replay preserves the emission defer"
+    );
+}
+
 impl Coordinator {
     /// test helper: drop one pending event (used to isolate make mode)
     pub(crate) fn queue_clear_for_test(&mut self) {

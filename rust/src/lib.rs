@@ -58,6 +58,9 @@ pub mod prelude {
     pub use crate::spec::parse;
     pub use crate::storage::{PurgePolicy, StorageConfig};
     pub use crate::task::builtins::*;
-    pub use crate::task::{Output, TaskCtx, UserCode};
+    pub use crate::task::{
+        legacy, Emitter, InPort, Inputs, LegacyCode, OutPort, Output, PortIo, Ports, TaskCode,
+        TaskCtx, UserCode,
+    };
     pub use crate::util::{rng, RegionId, SimDuration, SimTime, WireId};
 }

@@ -200,7 +200,7 @@ fn cmd_trace(args: &[String]) -> Result<()> {
 /// hash-identical (the determinism self-check).
 fn cmd_bread(args: &[String]) -> Result<()> {
     use koalja::breadboard::Breadboard;
-    use koalja::task::{Output, UserCode};
+    use koalja::task::{PortIo, TaskCode};
 
     let path = args.first().ok_or_else(|| anyhow!("bread: missing spec path"))?;
     let spec = load_spec(path)?;
@@ -303,18 +303,16 @@ fn cmd_bread(args: &[String]) -> Result<()> {
     }
 
     // 3. hot-swap: dry-run preview, then commit a v2 that doubles tensors
-    let outputs: Vec<String> =
-        spec.task(&swap_task).map(|t| t.outputs.clone()).unwrap_or_default();
     let old_v = swap_handle.version(&bread);
     let new_v = old_v + 1;
     let preview = bread.swap_preview_task(swap_handle, new_v)?;
     println!("\n-- dry-run -- {}", preview.summary());
-    let factory = move || -> Box<dyn UserCode> {
-        let outs = outputs.clone();
-        Box::new(FnTask::versioned(
-            move |ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
-                let mut emitted = Vec::new();
-                for av in snap.all_avs() {
+    // port-native v2: emit the doubled tensor on every declared output
+    // port — resolved by index, no wire names anywhere in the loop
+    let factory = move || -> Box<dyn TaskCode> {
+        Box::new(PortFn::versioned(
+            move |ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
+                for av in io.inputs.snapshot().all_avs() {
                     let p = ctx.fetch(av)?;
                     let doubled = match p.as_tensor() {
                         Some((shape, data)) => {
@@ -322,11 +320,12 @@ fn cmd_bread(args: &[String]) -> Result<()> {
                         }
                         None => p,
                     };
-                    for w in &outs {
-                        emitted.push(Output::new(w.as_str(), doubled.clone(), av.class));
+                    for i in 0..io.outs().len() {
+                        let port = io.out(i)?;
+                        io.emitter.emit_class(port, doubled.clone(), av.class);
                     }
                 }
-                Ok(emitted)
+                Ok(())
             },
             new_v,
         ))
@@ -402,13 +401,15 @@ fn cmd_demo() -> Result<()> {
     let predict = pipe.task("predict")?;
     predict.plug(
         &mut pipe,
-        Box::new(FnTask::new(|ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
+        Box::new(PortFn::new(|ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
             let label = ctx.lookup("lookup", &Payload::Text("class".into()))?;
-            let n = snap.all_avs().count() as f32;
+            let n = io.inputs.all().count() as f32;
             ctx.remark(&format!("classified {n} windows as {label:?}"));
-            Ok(vec![Output::summary("result", Payload::scalar(n))])
+            let result = io.out(0)?;
+            io.emitter.emit(result, Payload::scalar(n));
+            Ok(())
         })),
-    );
+    )?;
     let mut r = rng(3);
     for i in 0..24u64 {
         let data: Vec<f32> = (0..4).map(|_| r.normal() as f32).collect();

@@ -64,6 +64,20 @@ impl TaskSpec {
         self.inputs.iter().filter(|i| !i.service)
     }
 
+    /// Distinct stream-input wires in declaration order — the task's
+    /// input *port table*. Snapshot-engine buffers and the task runtime's
+    /// `InPort` map are both built in exactly this order, so a port's
+    /// position here IS its dense slot index everywhere.
+    pub fn input_ports(&self) -> Vec<&str> {
+        let mut seen: Vec<&str> = Vec::new();
+        for i in self.stream_inputs() {
+            if !seen.contains(&i.wire.as_str()) {
+                seen.push(&i.wire);
+            }
+        }
+        seen
+    }
+
     pub fn service_inputs(&self) -> impl Iterator<Item = &InputSpec> {
         self.inputs.iter().filter(|i| i.service)
     }
@@ -248,6 +262,12 @@ mod tests {
         assert_eq!(convert.inputs[0].buffer, BufferSpec::window(10, 2));
         let predict = p.task("predict").unwrap();
         assert!(predict.inputs[1].service, "lookup? is a service input");
+    }
+
+    #[test]
+    fn input_ports_dedup_in_declaration_order() {
+        let p = parse("[ip]\n(a, b[3], a, svc?, c) t (o)\n").unwrap();
+        assert_eq!(p.tasks[0].input_ports(), vec!["a", "b", "c"], "deduped, ordered, no services");
     }
 
     #[test]

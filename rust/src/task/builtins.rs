@@ -1,39 +1,59 @@
-//! Built-in user-code plugins — the "major organs" a user grafts into the
+//! Built-in task plugins — the "major organs" a user grafts into the
 //! skeleton (§III-A) without writing containers: pass-through replication,
 //! pure-rust summarization (CPU fallback for the Pallas kernel), scaling,
-//! thresholds, and a closure wrapper for ad-hoc logic.
+//! thresholds, and closure wrappers for ad-hoc logic.
+//!
+//! All builtins run on the [`TaskCode`] port API: they are constructed
+//! with a wire *name* (ergonomic at the call site), resolve it to an
+//! [`OutPort`] exactly once in `bind` — where typos fail with the task's
+//! declared output ports listed — and emit id-resolved values forever
+//! after. [`FnTask`] is the legacy closure shape (`Vec<Output>` returns),
+//! kept for un-migrated scripts; [`PortFn`] is its port-native successor.
 
-use super::{Output, TaskCtx, UserCode};
+use super::{OutPort, Output, PortIo, Ports, TaskCode, TaskCtx};
 use crate::av::Payload;
 use crate::policy::Snapshot;
 use crate::util::SimDuration;
 use anyhow::{anyhow, Result};
 
 /// Replicate every input AV to one output wire (the paper's "trivial"
-/// data replication/distribution case).
+/// data replication/distribution case), preserving each value's class.
 pub struct PassThrough {
-    pub out: std::rc::Rc<str>,
+    out: std::rc::Rc<str>,
+    port: Option<OutPort>,
     pub version: u32,
 }
 
 impl PassThrough {
     pub fn new(out: &str) -> Self {
-        Self { out: std::rc::Rc::from(out), version: 1 }
+        Self { out: std::rc::Rc::from(out), port: None, version: 1 }
+    }
+
+    pub fn versioned(out: &str, version: u32) -> Self {
+        Self { out: std::rc::Rc::from(out), port: None, version }
     }
 }
 
-impl UserCode for PassThrough {
+impl TaskCode for PassThrough {
     fn version(&self) -> u32 {
         self.version
     }
 
-    fn run(&mut self, ctx: &mut TaskCtx<'_>, snapshot: &Snapshot) -> Result<Vec<Output>> {
-        let mut outs = Vec::new();
-        for av in snapshot.all_avs() {
+    fn bind(&mut self, ports: &Ports<'_>) -> Result<()> {
+        // `out_or_wire`: the coordinator's default code publishes on the
+        // interned "void" fallback when a task declares no outputs, and
+        // probe code may deliberately target another task's wire.
+        self.port = Some(ports.out_or_wire(&self.out)?);
+        Ok(())
+    }
+
+    fn run(&mut self, ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>) -> Result<()> {
+        let port = self.port.expect("bound at install");
+        for av in io.inputs.snapshot().all_avs() {
             let p = ctx.fetch(av)?;
-            outs.push(Output::new(self.out.clone(), p, av.class));
+            io.emitter.emit_class(port, p, av.class);
         }
-        Ok(outs)
+        Ok(())
     }
 
     fn compute_cost(&self, bytes: u64) -> SimDuration {
@@ -45,12 +65,13 @@ impl UserCode for PassThrough {
 /// `edge_summarize` artifact; used where no Runtime is wired (and as the
 /// oracle in integration tests).
 pub struct SummarizeRs {
-    pub out: std::rc::Rc<str>,
+    out: std::rc::Rc<str>,
+    port: Option<OutPort>,
 }
 
 impl SummarizeRs {
     pub fn new(out: &str) -> Self {
-        Self { out: std::rc::Rc::from(out) }
+        Self { out: std::rc::Rc::from(out), port: None }
     }
 
     /// The sketch function itself (shared with tests/benches).
@@ -76,16 +97,21 @@ impl SummarizeRs {
     }
 }
 
-impl UserCode for SummarizeRs {
-    fn run(&mut self, ctx: &mut TaskCtx<'_>, snapshot: &Snapshot) -> Result<Vec<Output>> {
-        let mut outs = Vec::new();
-        for av in snapshot.all_avs() {
+impl TaskCode for SummarizeRs {
+    fn bind(&mut self, ports: &Ports<'_>) -> Result<()> {
+        self.port = Some(ports.out(&self.out)?);
+        Ok(())
+    }
+
+    fn run(&mut self, ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>) -> Result<()> {
+        let port = self.port.expect("bound at install");
+        for av in io.inputs.snapshot().all_avs() {
             let p = ctx.fetch(av)?;
             let (shape, data) =
                 p.as_tensor().ok_or_else(|| anyhow!("summarize: non-tensor input"))?;
-            outs.push(Output::new(self.out.clone(), Self::sketch(shape, data)?, crate::av::DataClass::Summary));
+            io.emitter.emit(port, Self::sketch(shape, data)?);
         }
-        Ok(outs)
+        Ok(())
     }
 
     fn compute_cost(&self, bytes: u64) -> SimDuration {
@@ -95,29 +121,42 @@ impl UserCode for SummarizeRs {
 }
 
 /// Scale every tensor element by a constant (the "matrix operations" user
-/// case in miniature).
+/// case in miniature), preserving each value's class.
 pub struct ScaleBy {
-    pub out: std::rc::Rc<str>,
+    out: std::rc::Rc<str>,
+    port: Option<OutPort>,
     pub factor: f32,
 }
 
-impl UserCode for ScaleBy {
-    fn run(&mut self, ctx: &mut TaskCtx<'_>, snapshot: &Snapshot) -> Result<Vec<Output>> {
-        let mut outs = Vec::new();
-        for av in snapshot.all_avs() {
+impl ScaleBy {
+    pub fn new(out: &str, factor: f32) -> Self {
+        Self { out: std::rc::Rc::from(out), port: None, factor }
+    }
+}
+
+impl TaskCode for ScaleBy {
+    fn bind(&mut self, ports: &Ports<'_>) -> Result<()> {
+        self.port = Some(ports.out(&self.out)?);
+        Ok(())
+    }
+
+    fn run(&mut self, ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>) -> Result<()> {
+        let port = self.port.expect("bound at install");
+        for av in io.inputs.snapshot().all_avs() {
             let p = ctx.fetch(av)?;
             let (shape, data) = p.as_tensor().ok_or_else(|| anyhow!("scale: non-tensor"))?;
             let scaled: Vec<f32> = data.iter().map(|x| x * self.factor).collect();
-            outs.push(Output::new(self.out.clone(), Payload::tensor(shape, scaled), av.class));
+            io.emitter.emit_class(port, Payload::tensor(shape, scaled), av.class);
         }
-        Ok(outs)
+        Ok(())
     }
 }
 
 /// Emit only when a scalar statistic crosses a threshold (edge screening:
 /// "most of which are junk and thus have no business travelling").
 pub struct ThresholdGate {
-    pub out: std::rc::Rc<str>,
+    out: std::rc::Rc<str>,
+    port: Option<OutPort>,
     pub threshold: f32,
     pub passed: u64,
     pub dropped: u64,
@@ -125,30 +164,38 @@ pub struct ThresholdGate {
 
 impl ThresholdGate {
     pub fn new(out: &str, threshold: f32) -> Self {
-        Self { out: std::rc::Rc::from(out), threshold, passed: 0, dropped: 0 }
+        Self { out: std::rc::Rc::from(out), port: None, threshold, passed: 0, dropped: 0 }
     }
 }
 
-impl UserCode for ThresholdGate {
-    fn run(&mut self, ctx: &mut TaskCtx<'_>, snapshot: &Snapshot) -> Result<Vec<Output>> {
-        let mut outs = Vec::new();
-        for av in snapshot.all_avs() {
+impl TaskCode for ThresholdGate {
+    fn bind(&mut self, ports: &Ports<'_>) -> Result<()> {
+        self.port = Some(ports.out(&self.out)?);
+        Ok(())
+    }
+
+    fn run(&mut self, ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>) -> Result<()> {
+        let port = self.port.expect("bound at install");
+        for av in io.inputs.snapshot().all_avs() {
             let p = ctx.fetch(av)?;
             let (_, data) = p.as_tensor().ok_or_else(|| anyhow!("gate: non-tensor"))?;
             let peak = data.iter().fold(0.0f32, |m, x| m.max(x.abs()));
             if peak > self.threshold {
                 self.passed += 1;
-                outs.push(Output::new(self.out.clone(), p, crate::av::DataClass::Summary));
+                io.emitter.emit(port, p);
             } else {
                 self.dropped += 1;
                 ctx.remark(&format!("screened out chunk (peak {peak:.2} <= {})", self.threshold));
             }
         }
-        Ok(outs)
+        Ok(())
     }
 }
 
-/// Wrap a closure as user code — the breadboarding path for examples/tests.
+/// Wrap a legacy `Vec<Output>` closure as user code — the un-migrated
+/// breadboarding shape. Runs through the name-resolution adapter path
+/// (each distinct returned wire name resolved once per agent); new code
+/// should prefer [`PortFn`].
 pub struct FnTask<F> {
     pub f: F,
     pub version: u32,
@@ -167,7 +214,7 @@ where
     }
 }
 
-impl<F> UserCode for FnTask<F>
+impl<F> TaskCode for FnTask<F>
 where
     F: FnMut(&mut TaskCtx<'_>, &Snapshot) -> Result<Vec<Output>>,
 {
@@ -175,21 +222,69 @@ where
         self.version
     }
 
-    fn run(&mut self, ctx: &mut TaskCtx<'_>, snapshot: &Snapshot) -> Result<Vec<Output>> {
-        (self.f)(ctx, snapshot)
+    fn run(&mut self, ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>) -> Result<()> {
+        let outs = (self.f)(ctx, io.inputs.snapshot())?;
+        io.emitter.emit_outputs(outs)
+    }
+}
+
+/// Wrap a port-native closure as task code — the breadboarding path for
+/// examples/tests on the [`TaskCode`] API: read through `io.inputs`,
+/// write through `io.emitter`, resolve ports by index (`io.out(0)`).
+pub struct PortFn<F> {
+    pub f: F,
+    pub version: u32,
+}
+
+impl<F> PortFn<F>
+where
+    F: FnMut(&mut TaskCtx<'_>, &mut PortIo<'_>) -> Result<()>,
+{
+    pub fn new(f: F) -> Self {
+        Self { f, version: 1 }
+    }
+
+    pub fn versioned(f: F, version: u32) -> Self {
+        Self { f, version }
+    }
+}
+
+impl<F> TaskCode for PortFn<F>
+where
+    F: FnMut(&mut TaskCtx<'_>, &mut PortIo<'_>) -> Result<()>,
+{
+    fn version(&self) -> u32 {
+        self.version
+    }
+
+    fn run(&mut self, ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>) -> Result<()> {
+        (self.f)(ctx, io)
     }
 }
 
 /// Merge sketches from multiple regions: sum of (4, D) moment sketches is
 /// the sketch of the union — the aggregation step of fig. 11's telco case.
 pub struct SketchMerge {
-    pub out: std::rc::Rc<str>,
+    out: std::rc::Rc<str>,
+    port: Option<OutPort>,
 }
 
-impl UserCode for SketchMerge {
-    fn run(&mut self, ctx: &mut TaskCtx<'_>, snapshot: &Snapshot) -> Result<Vec<Output>> {
+impl SketchMerge {
+    pub fn new(out: &str) -> Self {
+        Self { out: std::rc::Rc::from(out), port: None }
+    }
+}
+
+impl TaskCode for SketchMerge {
+    fn bind(&mut self, ports: &Ports<'_>) -> Result<()> {
+        self.port = Some(ports.out(&self.out)?);
+        Ok(())
+    }
+
+    fn run(&mut self, ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>) -> Result<()> {
+        let port = self.port.expect("bound at install");
         let mut acc: Option<(Vec<usize>, Vec<f32>)> = None;
-        for av in snapshot.all_avs() {
+        for av in io.inputs.snapshot().all_avs() {
             let p = ctx.fetch(av)?;
             let (shape, data) = p.as_tensor().ok_or_else(|| anyhow!("merge: non-tensor"))?;
             if shape.len() != 2 || shape[0] != 4 {
@@ -212,7 +307,8 @@ impl UserCode for SketchMerge {
             }
         }
         let (shape, data) = acc.ok_or_else(|| anyhow!("merge: empty snapshot"))?;
-        Ok(vec![Output::new(self.out.clone(), Payload::tensor(&shape, data), crate::av::DataClass::Summary)])
+        io.emitter.emit(port, Payload::tensor(&shape, data));
+        Ok(())
     }
 }
 
@@ -235,5 +331,18 @@ mod tests {
     #[test]
     fn sketch_rejects_non_2d() {
         assert!(SummarizeRs::sketch(&[6], &[0.0; 6]).is_err());
+    }
+
+    #[test]
+    fn bind_rejects_typos_with_declared_ports() {
+        let spec = crate::spec::parse("[b]\n(raw) screen (clean)\n").unwrap();
+        let wires = crate::graph::PipelineGraph::build(&spec).wires;
+        let map = super::super::PortMap::mint(&spec.tasks[0], &wires);
+        let ports = Ports { map: &map, wires: &wires, task: "screen" };
+        let mut gate = ThresholdGate::new("claen", 0.5);
+        let e = gate.bind(&ports).unwrap_err().to_string();
+        assert!(e.contains("did you mean 'clean'?"), "{e}");
+        let mut ok = ThresholdGate::new("clean", 0.5);
+        ok.bind(&ports).unwrap();
     }
 }

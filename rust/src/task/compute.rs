@@ -7,7 +7,7 @@
 //! stream samples) is stacked into an `(n, D)` tensor; a port holding one
 //! AV is passed through. Shapes are validated against the manifest.
 
-use super::{Output, TaskCtx, UserCode};
+use super::{OutPort, PortIo, Ports, TaskCode, TaskCtx};
 use crate::av::{DataClass, Payload};
 use crate::platform::Service;
 use crate::policy::Snapshot;
@@ -43,13 +43,18 @@ pub fn stack_port(payloads: &[Payload]) -> Result<Payload> {
 ///
 /// `state` payloads fill the first manifest inputs (e.g. model parameters);
 /// snapshot ports fill the rest. `emit` maps executable output indices to
-/// wires; `absorb` (if set) writes output indices back into `state`
-/// (e.g. a train step's updated parameters).
+/// wires (names resolved to [`OutPort`]s once at bind time); `absorb` (if
+/// set) writes output indices back into `state` (e.g. a train step's
+/// updated parameters).
 pub struct PjrtTask {
     pub exe: Rc<Executable>,
     pub state: Vec<Payload>,
-    /// (output index, wire, class)
+    /// (output index, wire, class) — the configured mapping; resolved
+    /// into `bound` when the task is installed.
     pub emit: Vec<(usize, String, DataClass)>,
+    /// Port-resolved `emit`, minted at bind time (§Perf: the run loop
+    /// publishes on ids, never names).
+    bound: Vec<(usize, OutPort)>,
     /// (output index, state slot)
     pub absorb: Vec<(usize, usize)>,
     pub version: u32,
@@ -64,7 +69,7 @@ impl PjrtTask {
         let mut emit: Vec<(usize, String, DataClass)> =
             vec![(0, out_wire.to_string(), DataClass::Summary)];
         emit.truncate(n_out.max(1).min(1));
-        Self { exe, state: vec![], emit, absorb: vec![], version: 1, flops: 0 }
+        Self { exe, state: vec![], emit, bound: vec![], absorb: vec![], version: 1, flops: 0 }
     }
 
     pub fn with_emit(mut self, emit: Vec<(usize, String, DataClass)>) -> Self {
@@ -105,13 +110,25 @@ impl PjrtTask {
     }
 }
 
-impl UserCode for PjrtTask {
+impl TaskCode for PjrtTask {
     fn version(&self) -> u32 {
         self.version
     }
 
-    fn run(&mut self, ctx: &mut TaskCtx<'_>, snapshot: &Snapshot) -> Result<Vec<Output>> {
-        let inputs = self.assemble(ctx, snapshot)?;
+    fn bind(&mut self, ports: &Ports<'_>) -> Result<()> {
+        // the once-per-install name resolution: every configured emission
+        // wire becomes an OutPort carrying its class (phantom targets —
+        // another task's wire — are legal, like any probe emission)
+        self.bound = self
+            .emit
+            .iter()
+            .map(|(oi, wire, class)| Ok((*oi, ports.out_or_wire(wire)?.with_class(*class))))
+            .collect::<Result<_>>()?;
+        Ok(())
+    }
+
+    fn run(&mut self, ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>) -> Result<()> {
+        let inputs = self.assemble(ctx, io.snapshot())?;
         let refs: Vec<&Payload> = inputs.iter().collect();
         let outputs = self.exe.run(&refs)?;
         for &(oi, si) in &self.absorb {
@@ -120,19 +137,14 @@ impl UserCode for PjrtTask {
                 .ok_or_else(|| anyhow!("absorb index {oi} out of range"))?
                 .clone();
         }
-        self.emit
-            .iter()
-            .map(|(oi, wire, class)| {
-                Ok(Output::new(
-                    wire.as_str(),
-                    outputs
-                        .get(*oi)
-                        .ok_or_else(|| anyhow!("emit index {oi} out of range"))?
-                        .clone(),
-                    *class,
-                ))
-            })
-            .collect()
+        for &(oi, port) in &self.bound {
+            let payload = outputs
+                .get(oi)
+                .ok_or_else(|| anyhow!("emit index {oi} out of range"))?
+                .clone();
+            io.emitter.emit(port, payload);
+        }
+        Ok(())
     }
 
     fn compute_cost(&self, input_bytes: u64) -> SimDuration {

@@ -5,18 +5,28 @@
 //! from its incoming links and assemble execution sets of annotated values
 //! to construct the arguments for a single execution."
 //!
-//! [`UserCode`] is the plugin-container boundary: user logic sees only a
-//! [`TaskCtx`] (fetch inputs, call services, log) and the [`Snapshot`] —
-//! never Kubernetes, storage tiers, or regions (platform transparency,
-//! §III-B). The agent wraps it with snapshot policy, memoization
-//! (make-style staleness), the dependent-local cache (Principle 2), ghost
-//! handling (§III-K) and provenance stamping.
+//! [`TaskCode`] is the plugin-container boundary: user logic sees only a
+//! [`TaskCtx`] (fetch inputs, call services, log) and a [`PortIo`] — a
+//! port-indexed [`Inputs`] view over the snapshot plus an [`Emitter`]
+//! writing pre-resolved emissions — never Kubernetes, storage tiers, or
+//! regions (platform transparency, §III-B). Output ports are minted at
+//! deploy/plug time ([`PortMap`]) and resolved once in [`TaskCode::bind`],
+//! mirroring the client-side handle API: the steady-state `run` touches no
+//! wire names and allocates no intermediate `Vec<Output>` (§Perf). The
+//! legacy name-returning [`UserCode`] trait keeps working through the
+//! [`LegacyCode`] adapter. The agent wraps either with snapshot policy,
+//! memoization (make-style staleness), the dependent-local cache
+//! (Principle 2), ghost handling (§III-K) and provenance stamping.
 
 pub mod builtins;
 pub mod compute;
+pub mod ports;
+
+pub use ports::{Emission, Emitter, InPort, Inputs, NameCache, OutPort, PortIo, PortMap, Ports};
 
 use crate::av::{AnnotatedValue, DataClass, Payload};
 use crate::bus::NotifyMode;
+use crate::graph::WireTable;
 use crate::platform::Platform;
 use crate::policy::{Snapshot, SnapshotEngine};
 use crate::provenance::{CheckpointEvent, Stamp};
@@ -49,7 +59,43 @@ impl Output {
     }
 }
 
-/// The plugin-container boundary. Implementations are "user code".
+/// The plugin-container boundary — the primary plugin surface. Ports are
+/// resolved once in [`bind`](TaskCode::bind) (deploy/plug time, with
+/// did-you-mean errors like client handle resolution); the steady-state
+/// [`run`](TaskCode::run) reads through the port-indexed
+/// [`Inputs`] view and writes through the [`Emitter`], never touching a
+/// wire name and never allocating an output `Vec` (§Perf).
+pub trait TaskCode {
+    /// Software version — provenance records it on every artifact; bumping
+    /// it invalidates memoized results (§III-J "Software Updates").
+    fn version(&self) -> u32 {
+        1
+    }
+
+    /// Called once when this code is installed into a deployed task:
+    /// resolve output/input ports here and store them. Failing the bind
+    /// rejects the install and leaves the previous code in place.
+    fn bind(&mut self, ports: &Ports<'_>) -> Result<()> {
+        let _ = ports;
+        Ok(())
+    }
+
+    /// Process one snapshot: fetch via `io.inputs` / `ctx.fetch`, call
+    /// exterior services via `ctx.lookup`, emit via `io.emitter`.
+    fn run(&mut self, ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>) -> Result<()>;
+
+    /// Simulated compute cost for a snapshot of `input_bytes` (charged to
+    /// virtual time on top of real fetch/storage latencies).
+    fn compute_cost(&self, input_bytes: u64) -> SimDuration {
+        SimDuration::micros(200 + input_bytes / 512)
+    }
+}
+
+/// The legacy plugin trait: return wire *names*. Still supported — wrap
+/// implementations in [`LegacyCode`] to install them; the adapter resolves
+/// returned names once per distinct name (memoized per agent) instead of
+/// letting the coordinator re-resolve every publication. New code should
+/// implement [`TaskCode`] and emit on ports.
 pub trait UserCode {
     /// Software version — provenance records it on every artifact; bumping
     /// it invalidates memoized results (§III-J "Software Updates").
@@ -65,6 +111,53 @@ pub trait UserCode {
     /// virtual time on top of real fetch/storage latencies).
     fn compute_cost(&self, input_bytes: u64) -> SimDuration {
         SimDuration::micros(200 + input_bytes / 512)
+    }
+}
+
+impl UserCode for Box<dyn UserCode> {
+    fn version(&self) -> u32 {
+        (**self).version()
+    }
+
+    fn run(&mut self, ctx: &mut TaskCtx<'_>, snapshot: &Snapshot) -> Result<Vec<Output>> {
+        (**self).run(ctx, snapshot)
+    }
+
+    fn compute_cost(&self, input_bytes: u64) -> SimDuration {
+        (**self).compute_cost(input_bytes)
+    }
+}
+
+/// Adapter carrying any [`UserCode`] implementation onto the [`TaskCode`]
+/// port runtime: the returned `Vec<Output>` is drained into the emitter,
+/// each wire name resolved against the deploy-time table once and
+/// memoized. Unknown names error with the task's declared output ports
+/// listed via did-you-mean.
+pub struct LegacyCode<U>(pub U);
+
+impl<U: UserCode> LegacyCode<U> {
+    pub fn new(inner: U) -> Self {
+        Self(inner)
+    }
+}
+
+/// Convenience: box legacy user code straight into the port runtime.
+pub fn legacy<U: UserCode + 'static>(inner: U) -> Box<dyn TaskCode> {
+    Box::new(LegacyCode(inner))
+}
+
+impl<U: UserCode> TaskCode for LegacyCode<U> {
+    fn version(&self) -> u32 {
+        self.0.version()
+    }
+
+    fn run(&mut self, ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>) -> Result<()> {
+        let outs = self.0.run(ctx, io.inputs.snapshot())?;
+        io.emitter.emit_outputs(outs)
+    }
+
+    fn compute_cost(&self, input_bytes: u64) -> SimDuration {
+        self.0.compute_cost(input_bytes)
     }
 }
 
@@ -188,19 +281,28 @@ impl<'a> TaskCtx<'a> {
 /// Result of asking an agent to execute a snapshot.
 #[derive(Debug)]
 pub enum RunOutcome {
-    /// Executed user code (or routed a ghost batch).
-    Ran { run: RunId, outputs: Vec<Output>, cost: SimDuration, ghost: bool },
+    /// Executed user code (or routed a ghost batch). `emissions` carry
+    /// pre-resolved [`WireId`]s — the coordinator publishes them without
+    /// a single name lookup, then hands the buffer back to the agent for
+    /// reuse ([`TaskAgent::recycle_emissions`], §Perf).
+    Ran { run: RunId, emissions: Vec<Emission>, cost: SimDuration, ghost: bool },
     /// Memoized: identical recipe (inputs × version) already computed;
     /// cached output objects are reused without running anything. Outputs
     /// carry the interned [`WireId`] (§Perf): replaying a memo hit routes
-    /// without touching a wire name at all.
-    Memoized { outputs: Vec<(WireId, ObjectId, ContentHash, u64, DataClass)> },
+    /// without touching a wire name at all. The publication defer is
+    /// recorded too, so a replayed deferred emission trails the run
+    /// exactly like the original did.
+    Memoized { outputs: Vec<MemoOutput> },
 }
+
+/// One memoized output: interned wire, stored object identity, and the
+/// publication defer the original emission carried.
+pub type MemoOutput = (WireId, ObjectId, ContentHash, u64, DataClass, SimDuration);
 
 /// A memo entry: what a past run produced, keyed by interned wire.
 #[derive(Clone, Debug)]
 struct MemoEntry {
-    outputs: Vec<(WireId, ObjectId, ContentHash, u64, DataClass)>,
+    outputs: Vec<MemoOutput>,
 }
 
 /// One entry in a task's versioned code-slot history (§III-J): which
@@ -215,13 +317,14 @@ pub struct CodeSlot {
     pub origin: String,
 }
 
-/// The deployed smart task: spec + policy engine + user code + caches.
+/// The deployed smart task: spec + policy engine + user code + caches +
+/// the deploy-time-minted [`PortMap`] its code binds against.
 pub struct TaskAgent {
     pub id: TaskId,
     pub spec: TaskSpec,
     pub region: RegionId,
     pub engine: SnapshotEngine,
-    pub code: Box<dyn UserCode>,
+    pub code: Box<dyn TaskCode>,
     pub notify: NotifyMode,
     pub cache: CacheManager,
     memo: FastMap<ContentHash, MemoEntry>,
@@ -233,24 +336,40 @@ pub struct TaskAgent {
     /// Versioned code slots, oldest first (the current code is the last
     /// entry). Never empty after construction.
     pub code_history: Vec<CodeSlot>,
+    /// Ports minted from the spec at deploy time; every code install
+    /// binds against this table.
+    pub ports: PortMap,
+    /// Reusable emission buffer: taken for each run, drained by the
+    /// coordinator, handed back — the steady state allocates no output
+    /// Vec (§Perf).
+    emit_buf: Vec<Emission>,
+    /// Memoized legacy name→id resolutions (the [`LegacyCode`] path).
+    name_cache: NameCache,
 }
 
 impl TaskAgent {
+    /// Build the agent and install its initial code: ports are minted
+    /// from `spec` against `wires`, and the code binds against them —
+    /// a bind failure (unknown port name) rejects the deployment.
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         id: TaskId,
         spec: TaskSpec,
         region: RegionId,
         engine: SnapshotEngine,
-        code: Box<dyn UserCode>,
+        mut code: Box<dyn TaskCode>,
         notify: NotifyMode,
         cache_policy: PurgePolicy,
-    ) -> Self {
+        wires: &WireTable,
+    ) -> Result<Self> {
+        let ports = PortMap::mint(&spec, wires);
+        code.bind(&Ports { map: &ports, wires, task: &spec.name })?;
         let initial = CodeSlot {
             version: code.version(),
             installed_at: SimTime::ZERO,
             origin: "deploy".to_string(),
         };
-        Self {
+        Ok(Self {
             id,
             spec,
             region,
@@ -263,12 +382,24 @@ impl TaskAgent {
             last_snapshot: None,
             runs: 0,
             code_history: vec![initial],
-        }
+            ports,
+            emit_buf: Vec::new(),
+            name_cache: NameCache::default(),
+        })
     }
 
     /// Install new user code into the versioned slot; returns the version
     /// it displaced. `origin` records how it arrived ("plug", "update").
-    pub fn install_code(&mut self, code: Box<dyn UserCode>, now: SimTime, origin: &str) -> u32 {
+    /// The code binds against this task's minted ports first — on bind
+    /// failure nothing changes and the previous code keeps running.
+    pub fn install_code(
+        &mut self,
+        mut code: Box<dyn TaskCode>,
+        wires: &WireTable,
+        now: SimTime,
+        origin: &str,
+    ) -> Result<u32> {
+        code.bind(&Ports { map: &self.ports, wires, task: &self.spec.name })?;
         let old = self.code.version();
         self.code_history.push(CodeSlot {
             version: code.version(),
@@ -276,7 +407,16 @@ impl TaskAgent {
             origin: origin.to_string(),
         });
         self.code = code;
-        old
+        Ok(old)
+    }
+
+    /// Hand the drained emission buffer back after a publish cycle so the
+    /// next run reuses its capacity.
+    pub fn recycle_emissions(&mut self, mut buf: Vec<Emission>) {
+        buf.clear();
+        if buf.capacity() > self.emit_buf.capacity() {
+            self.emit_buf = buf;
+        }
     }
 
     pub fn version(&self) -> u32 {
@@ -308,20 +448,32 @@ impl TaskAgent {
     }
 
     /// Execute a snapshot (or reuse the memoized result). The coordinator
-    /// publishes whatever comes back.
-    pub fn execute(&mut self, plat: &mut Platform, snapshot: Snapshot) -> Result<RunOutcome> {
-        self.execute_inner(plat, snapshot, true)
+    /// publishes whatever comes back. `wires` is the pipeline's interner
+    /// (legacy name-keyed emissions resolve against it, once per name).
+    pub fn execute(
+        &mut self,
+        plat: &mut Platform,
+        wires: &WireTable,
+        snapshot: Snapshot,
+    ) -> Result<RunOutcome> {
+        self.execute_inner(plat, wires, snapshot, true)
     }
 
     /// Execute ignoring the memo — what a schedule-driven, data-unaware
     /// runner (cron/Airflow baseline, E8) does: recompute regardless.
-    pub fn execute_forced(&mut self, plat: &mut Platform, snapshot: Snapshot) -> Result<RunOutcome> {
-        self.execute_inner(plat, snapshot, false)
+    pub fn execute_forced(
+        &mut self,
+        plat: &mut Platform,
+        wires: &WireTable,
+        snapshot: Snapshot,
+    ) -> Result<RunOutcome> {
+        self.execute_inner(plat, wires, snapshot, false)
     }
 
     fn execute_inner(
         &mut self,
         plat: &mut Platform,
+        wires: &WireTable,
         snapshot: Snapshot,
         use_memo: bool,
     ) -> Result<RunOutcome> {
@@ -357,21 +509,21 @@ impl TaskAgent {
         );
 
         let combined = snapshot.inputs.len() > 1;
-        let (outputs, cost) = if ghost {
+        let mut buf = std::mem::take(&mut self.emit_buf);
+        let cost = if ghost {
             // Wireframe batch: expose routing, skip compute (§III-K). One
-            // ghost output per declared wire, pretending the usual size.
+            // ghost emission per declared port, pretending the usual size
+            // — already id-resolved, no wire names minted (§Perf).
             let pretend = consumed_bytes.max(1);
-            let outs = self
-                .spec
-                .outputs
-                .iter()
-                .map(|w| Output {
-                    wire: std::rc::Rc::from(w.as_str()),
+            for p in &self.ports.outs {
+                buf.push(Emission {
+                    wire: p.wire,
                     payload: Payload::Ghost { pretend_bytes: pretend },
                     class: DataClass::Ghost,
-                })
-                .collect();
-            (outs, SimDuration::micros(10))
+                    defer: SimDuration::ZERO,
+                });
+            }
+            SimDuration::micros(10)
         } else {
             let mut ctx = TaskCtx {
                 plat,
@@ -385,33 +537,44 @@ impl TaskAgent {
                 combined,
                 cost: SimDuration::ZERO,
             };
-            let outs = self.code.run(&mut ctx, &snapshot)?;
+            let mut io = PortIo {
+                inputs: Inputs { snapshot: &snapshot, map: &self.ports },
+                emitter: Emitter {
+                    buf: &mut buf,
+                    map: &self.ports,
+                    wires,
+                    cache: &mut self.name_cache,
+                    task: &self.spec.name,
+                },
+            };
+            if let Err(e) = self.code.run(&mut ctx, &mut io) {
+                drop(io);
+                buf.clear();
+                self.emit_buf = buf;
+                return Err(e);
+            }
             let mut cost = ctx.cost;
             cost += self.code.compute_cost(consumed_bytes);
-            (outs, cost)
+            cost
         };
 
         plat.prov.checkpoint(
             self.id,
             run,
             plat.now,
-            CheckpointEvent::End { outputs: outputs.len() as u32 },
+            CheckpointEvent::End { outputs: buf.len() as u32 },
         );
         plat.metrics.ran_task(ghost);
         self.runs += 1;
         self.last_snapshot = Some(snapshot);
-        Ok(RunOutcome::Ran { run, outputs, cost, ghost })
+        Ok(RunOutcome::Ran { run, emissions: buf, cost, ghost })
     }
 
     /// Record what a run produced so identical future recipes can skip it.
     /// The memo is bounded (streams never repeat, so an unbounded map is
     /// pure leak, §Perf): when full it is flushed — a cold rebuild costs
     /// one generation, like any cache restart.
-    pub fn memoize(
-        &mut self,
-        recipe: ContentHash,
-        outputs: Vec<(WireId, ObjectId, ContentHash, u64, DataClass)>,
-    ) {
+    pub fn memoize(&mut self, recipe: ContentHash, outputs: Vec<MemoOutput>) {
         const MEMO_CAP: usize = 1024;
         if self.memo.len() >= MEMO_CAP {
             self.memo.clear();
@@ -433,7 +596,12 @@ mod tests {
         Platform::new(demo_topology(1), StorageConfig::default(), 3)
     }
 
-    fn agent(plat: &mut Platform) -> TaskAgent {
+    fn wires() -> WireTable {
+        let spec = crate::spec::parse("(x) t (y)").unwrap();
+        crate::graph::PipelineGraph::build(&spec).wires
+    }
+
+    fn agent(plat: &mut Platform, wires: &WireTable) -> TaskAgent {
         let spec = crate::spec::parse("(x) t (y)").unwrap().tasks[0].clone();
         let engine = SnapshotEngine::new(
             SnapshotPolicy::AllNew,
@@ -449,7 +617,9 @@ mod tests {
             Box::new(PassThrough::new("y")),
             NotifyMode::Push,
             PurgePolicy::Never,
+            wires,
         )
+        .unwrap()
     }
 
     fn feed(plat: &mut Platform, agent: &mut TaskAgent, value: f32) -> Snapshot {
@@ -472,13 +642,14 @@ mod tests {
     #[test]
     fn execute_runs_user_code_and_stamps() {
         let mut p = plat();
-        let mut a = agent(&mut p);
+        let w = wires();
+        let mut a = agent(&mut p, &w);
         let snap = feed(&mut p, &mut a, 5.0);
-        let outcome = a.execute(&mut p, snap).unwrap();
+        let outcome = a.execute(&mut p, &w, snap).unwrap();
         match outcome {
-            RunOutcome::Ran { outputs, cost, ghost, .. } => {
-                assert_eq!(outputs.len(), 1);
-                assert_eq!(&*outputs[0].wire, "y");
+            RunOutcome::Ran { emissions, cost, ghost, .. } => {
+                assert_eq!(emissions.len(), 1);
+                assert_eq!(emissions[0].wire, w.id("y").unwrap(), "pre-resolved emission");
                 assert!(!ghost);
                 assert!(cost.as_micros() > 0);
             }
@@ -494,27 +665,35 @@ mod tests {
     #[test]
     fn memoization_skips_identical_recipes() {
         let mut p = plat();
-        let mut a = agent(&mut p);
+        let w = wires();
+        let mut a = agent(&mut p, &w);
         let s1 = feed(&mut p, &mut a, 5.0);
         let recipe = a.recipe(&s1);
-        match a.execute(&mut p, s1).unwrap() {
-            RunOutcome::Ran { outputs, .. } => {
+        match a.execute(&mut p, &w, s1).unwrap() {
+            RunOutcome::Ran { emissions, .. } => {
                 // pretend the coordinator stored outputs and memoized
                 let (av, _) = p.mint_av(
-                    outputs[0].payload.clone(),
+                    emissions[0].payload.clone(),
                     TaskId::new(0),
                     RunId::new(0),
                     1,
                     LinkId::new(1),
                     RegionId::new(0),
-                    outputs[0].class,
+                    emissions[0].class,
                     0,
                     &[],
                     p.now,
                 );
                 a.memoize(
                     recipe,
-                    vec![(WireId::new(0), av.object, av.content, av.size_bytes, av.class)],
+                    vec![(
+                        WireId::new(0),
+                        av.object,
+                        av.content,
+                        av.size_bytes,
+                        av.class,
+                        SimDuration::ZERO,
+                    )],
                 );
             }
             _ => panic!(),
@@ -522,7 +701,7 @@ mod tests {
         // identical content again -> memoized, no new task run
         let s2 = feed(&mut p, &mut a, 5.0);
         let runs_before = p.metrics.task_runs;
-        match a.execute(&mut p, s2).unwrap() {
+        match a.execute(&mut p, &w, s2).unwrap() {
             RunOutcome::Memoized { outputs } => assert_eq!(outputs[0].0, WireId::new(0)),
             _ => panic!("expected memo hit"),
         }
@@ -530,32 +709,39 @@ mod tests {
         assert_eq!(p.metrics.get("memo_hits"), 1);
         // different content -> fresh run
         let s3 = feed(&mut p, &mut a, 6.0);
-        assert!(matches!(a.execute(&mut p, s3).unwrap(), RunOutcome::Ran { .. }));
+        assert!(matches!(a.execute(&mut p, &w, s3).unwrap(), RunOutcome::Ran { .. }));
     }
 
     #[test]
     fn version_bump_changes_recipe() {
         let mut p = plat();
-        let mut a = agent(&mut p);
+        let w = wires();
+        let mut a = agent(&mut p, &w);
         let s = feed(&mut p, &mut a, 5.0);
         let r1 = a.recipe(&s);
-        struct V2(PassThrough);
+        // a legacy UserCode v2, installed through the adapter
+        struct V2;
         impl UserCode for V2 {
             fn version(&self) -> u32 {
                 2
             }
             fn run(&mut self, ctx: &mut TaskCtx<'_>, s: &Snapshot) -> Result<Vec<Output>> {
-                self.0.run(ctx, s)
+                let mut outs = Vec::new();
+                for av in s.all_avs() {
+                    outs.push(Output::new("y", ctx.fetch(av)?, av.class));
+                }
+                Ok(outs)
             }
         }
-        a.code = Box::new(V2(PassThrough::new("y")));
+        a.install_code(legacy(V2), &w, p.now, "update").unwrap();
         assert_ne!(a.recipe(&s), r1, "new software version => stale recipe");
     }
 
     #[test]
     fn ghost_snapshot_routes_without_compute() {
         let mut p = plat();
-        let mut a = agent(&mut p);
+        let w = wires();
+        let mut a = agent(&mut p, &w);
         let (mut av, _) = p.mint_av(
             Payload::Ghost { pretend_bytes: 1 << 20 },
             TaskId::new(9),
@@ -571,10 +757,11 @@ mod tests {
         av.ghost = true;
         a.engine.push("x", av);
         let snap = a.engine.take(p.now).unwrap();
-        match a.execute(&mut p, snap).unwrap() {
-            RunOutcome::Ran { outputs, ghost, .. } => {
+        match a.execute(&mut p, &w, snap).unwrap() {
+            RunOutcome::Ran { emissions, ghost, .. } => {
                 assert!(ghost);
-                assert!(outputs[0].payload.is_ghost());
+                assert!(emissions[0].payload.is_ghost());
+                assert_eq!(emissions[0].wire, w.id("y").unwrap(), "ghosts ride ports too");
             }
             _ => panic!(),
         }
@@ -585,7 +772,8 @@ mod tests {
     #[test]
     fn fetch_uses_cache_on_second_read() {
         let mut p = plat();
-        let mut a = agent(&mut p);
+        let w = wires();
+        let mut a = agent(&mut p, &w);
         let (av, _) = p.mint_av(
             Payload::tensor(&[4], vec![1.0; 4]),
             TaskId::new(9),

@@ -1,0 +1,508 @@
+//! Typed ports — the deploy-time-resolved half of the task runtime API.
+//!
+//! PR 3 gave *clients* handles: resolve a name once at the [`Pipeline`]
+//! facade, route on dense ids forever. This module gives *task authors*
+//! the same deal at the plugin-container boundary (§III-I). When a task is
+//! deployed (or code is plugged into it), a [`PortMap`] is minted from its
+//! spec against the pipeline's [`WireTable`]: one [`OutPort`] per declared
+//! output (dense [`WireId`] + default [`DataClass`]) and one [`InPort`]
+//! per distinct stream-input buffer. User code resolves ports once in
+//! [`TaskCode::bind`](super::TaskCode::bind) — where unknown names fail
+//! with did-you-mean candidates, exactly like client handle resolution —
+//! and the steady-state `run` never touches a wire name again:
+//!
+//!  * [`Emitter`] — write outputs straight into the agent's reusable
+//!    emission buffer: [`emit`](Emitter::emit) (port default class),
+//!    [`emit_class`](Emitter::emit_class), [`emit_ghost`](Emitter::emit_ghost)
+//!    (§III-K wireframes) and [`emit_after`](Emitter::emit_after)
+//!    (deferred publication). Every emission carries a pre-resolved
+//!    [`WireId`]; the coordinator routes it without a single string
+//!    comparison, and no intermediate `Vec<Output>` is allocated — the
+//!    buffer is recycled run after run (§Perf).
+//!  * [`Inputs`] — a port-indexed view over the [`Snapshot`]: the AVs
+//!    [`on`](Inputs::on) an [`InPort`], with lazy per-port
+//!    [`fetch`](Inputs::fetch) / [`fetch_stacked`](Inputs::fetch_stacked)
+//!    replacing ad-hoc `ctx.fetch(av)` scans.
+//!
+//! Legacy [`UserCode`](super::UserCode) plugins keep working through the
+//! [`LegacyCode`](super::LegacyCode) adapter: their returned wire *names*
+//! are resolved against the table once and memoized in a per-agent cache,
+//! so even un-migrated code stops paying per-publication re-resolution.
+//! Unknown names error with the task's declared output ports listed via
+//! [`util::suggest`](crate::util::suggest) instead of silently vanishing
+//! into an overflow map.
+
+use crate::av::{AnnotatedValue, DataClass, Payload};
+use crate::graph::WireTable;
+use crate::policy::Snapshot;
+use crate::spec::TaskSpec;
+use crate::util::hash::FastMap;
+use crate::util::{suggest, SimDuration, WireId};
+use anyhow::{anyhow, Result};
+use std::rc::Rc;
+
+use super::TaskCtx;
+
+/// A deploy-time-minted output port: the dense interned [`WireId`] user
+/// code emits on, plus the class an [`Emitter::emit`] defaults to.
+/// `Copy`, like the client-side handles it mirrors.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct OutPort {
+    pub(crate) wire: WireId,
+    pub(crate) class: DataClass,
+}
+
+impl OutPort {
+    /// The interned wire this port publishes on.
+    pub fn wire_id(self) -> WireId {
+        self.wire
+    }
+
+    /// The class [`Emitter::emit`] stamps by default.
+    pub fn default_class(self) -> DataClass {
+        self.class
+    }
+
+    /// A copy of this port with a different default class — resolve once
+    /// in `bind`, keep the Raw/Summary decision out of the run loop.
+    pub fn with_class(self, class: DataClass) -> Self {
+        Self { wire: self.wire, class }
+    }
+}
+
+/// A deploy-time-minted input port: one distinct stream-input buffer of
+/// the task, in declaration order (`slot` indexes the snapshot engine's
+/// buffers and the [`PortMap`]'s name table).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct InPort {
+    pub(crate) wire: WireId,
+    pub(crate) slot: u32,
+}
+
+impl InPort {
+    /// The interned wire this port consumes.
+    pub fn wire_id(self) -> WireId {
+        self.wire
+    }
+
+    /// Position among the task's distinct stream inputs (spec order).
+    pub fn slot(self) -> usize {
+        self.slot as usize
+    }
+}
+
+/// The port table minted for one task from its spec at deploy time —
+/// the task-side mirror of the client handle set. Owned by the
+/// [`TaskAgent`](super::TaskAgent); immutable after mint.
+#[derive(Clone, Debug, Default)]
+pub struct PortMap {
+    pub(crate) outs: Vec<OutPort>,
+    /// Parallel to `outs`: the spec names, kept for bind-time resolution
+    /// and did-you-mean error lists only.
+    pub(crate) out_names: Vec<Rc<str>>,
+    pub(crate) ins: Vec<InPort>,
+    /// Parallel to `ins`, in snapshot-buffer order.
+    pub(crate) in_names: Vec<Rc<str>>,
+}
+
+impl PortMap {
+    /// Mint the port table for `spec` against the deploy-time interner.
+    /// Output ports default to [`DataClass::Summary`] (override per call
+    /// with [`Emitter::emit_class`] or per port with
+    /// [`OutPort::with_class`]). Input ports dedup stream inputs by wire,
+    /// matching the snapshot engine's buffer order exactly.
+    pub fn mint(spec: &TaskSpec, wires: &WireTable) -> Self {
+        let mut outs = Vec::with_capacity(spec.outputs.len());
+        let mut out_names = Vec::with_capacity(spec.outputs.len());
+        for w in &spec.outputs {
+            let wire = wires.id(w).expect("task outputs are interned at build");
+            outs.push(OutPort { wire, class: DataClass::Summary });
+            out_names.push(Rc::from(w.as_str()));
+        }
+        let mut ins = Vec::new();
+        let mut in_names: Vec<Rc<str>> = Vec::new();
+        for name in spec.input_ports() {
+            let wire = wires.id(name).expect("stream inputs are interned at build");
+            ins.push(InPort { wire, slot: ins.len() as u32 });
+            in_names.push(Rc::from(name));
+        }
+        Self { outs, out_names, ins, in_names }
+    }
+
+    pub fn outs(&self) -> &[OutPort] {
+        &self.outs
+    }
+
+    pub fn ins(&self) -> &[InPort] {
+        &self.ins
+    }
+}
+
+/// The bind-time resolution view handed to [`TaskCode::bind`]: the task's
+/// own [`PortMap`] plus the pipeline's wire table for phantom targets.
+/// This is the one place task-side names are looked up — the port-API
+/// analogue of [`Pipeline::source`]/[`sink`]/[`task`].
+pub struct Ports<'a> {
+    pub(crate) map: &'a PortMap,
+    pub(crate) wires: &'a WireTable,
+    pub(crate) task: &'a str,
+}
+
+impl<'a> Ports<'a> {
+    /// Resolve one of this task's declared output ports by name. Unknown
+    /// names fail with the declared ports listed via did-you-mean — the
+    /// same treatment client handle resolution gets.
+    pub fn out(&self, name: &str) -> Result<OutPort> {
+        match self.map.out_names.iter().position(|n| &**n == name) {
+            Some(i) => Ok(self.map.outs[i]),
+            None => Err(anyhow!(
+                "task '{}' has no declared output port '{name}'{}",
+                self.task,
+                suggest(name, "output port", self.map.out_names.iter().map(|n| &**n))
+            )),
+        }
+    }
+
+    /// Resolve an emission target that may be *another* task's wire (a
+    /// phantom sink: taps, currency and dense capture still apply, no
+    /// consumer links). Declared outputs resolve to their port; any other
+    /// interned wire resolves to a Summary-classed port on that wire;
+    /// names outside the wire table fail with did-you-mean over the
+    /// declared output ports.
+    pub fn out_or_wire(&self, name: &str) -> Result<OutPort> {
+        if let Some(i) = self.map.out_names.iter().position(|n| &**n == name) {
+            return Ok(self.map.outs[i]);
+        }
+        match self.wires.id(name) {
+            Some(wire) => Ok(OutPort { wire, class: DataClass::Summary }),
+            None => Err(self.unknown_out(name)),
+        }
+    }
+
+    /// Declared output port by position (spec order).
+    pub fn out_at(&self, i: usize) -> Result<OutPort> {
+        self.map.outs.get(i).copied().ok_or_else(|| {
+            anyhow!(
+                "task '{}' has {} output port(s); no port #{i}",
+                self.task,
+                self.map.outs.len()
+            )
+        })
+    }
+
+    /// All declared output ports, spec order.
+    pub fn outs(&self) -> &'a [OutPort] {
+        &self.map.outs
+    }
+
+    /// Resolve one of this task's stream-input ports by wire name.
+    pub fn input(&self, name: &str) -> Result<InPort> {
+        match self.map.in_names.iter().position(|n| &**n == name) {
+            Some(i) => Ok(self.map.ins[i]),
+            None => Err(anyhow!(
+                "task '{}' has no stream input '{name}'{}",
+                self.task,
+                suggest(name, "input port", self.map.in_names.iter().map(|n| &**n))
+            )),
+        }
+    }
+
+    /// Stream-input port by position (spec order).
+    pub fn input_at(&self, i: usize) -> Result<InPort> {
+        self.map.ins.get(i).copied().ok_or_else(|| {
+            anyhow!(
+                "task '{}' has {} stream input(s); no port #{i}",
+                self.task,
+                self.map.ins.len()
+            )
+        })
+    }
+
+    /// All stream-input ports, spec order.
+    pub fn ins(&self) -> &'a [InPort] {
+        &self.map.ins
+    }
+
+    fn unknown_out(&self, name: &str) -> anyhow::Error {
+        anyhow!(
+            "task '{}' cannot emit on unknown wire '{name}'{}",
+            self.task,
+            suggest(name, "output port", self.map.out_names.iter().map(|n| &**n))
+        )
+    }
+}
+
+/// One pre-resolved emission: what the coordinator publishes. User code
+/// never constructs these directly — the [`Emitter`] does — and the
+/// coordinator consumes them without touching a wire name (§Perf).
+#[derive(Clone, Debug)]
+pub struct Emission {
+    pub wire: WireId,
+    pub payload: Payload,
+    pub class: DataClass,
+    /// Extra virtual time between the run's publish instant and this
+    /// emission becoming visible (deferred emission; ZERO = immediate).
+    pub defer: SimDuration,
+}
+
+/// Per-agent memo of legacy wire-name resolutions, so an un-migrated
+/// [`UserCode`](super::UserCode) plugin pays the string hash once per
+/// distinct name, not once per publication.
+pub type NameCache = FastMap<Rc<str>, WireId>;
+
+/// Where user code writes its outputs. Backed by the agent's reusable
+/// emission buffer: the steady state allocates nothing per run.
+pub struct Emitter<'a> {
+    pub(crate) buf: &'a mut Vec<Emission>,
+    pub(crate) map: &'a PortMap,
+    pub(crate) wires: &'a WireTable,
+    pub(crate) cache: &'a mut NameCache,
+    pub(crate) task: &'a str,
+}
+
+impl Emitter<'_> {
+    /// Emit `payload` on `port` with the port's default class.
+    #[inline]
+    pub fn emit(&mut self, port: OutPort, payload: Payload) {
+        self.buf.push(Emission {
+            wire: port.wire,
+            payload,
+            class: port.class,
+            defer: SimDuration::ZERO,
+        });
+    }
+
+    /// Emit with an explicit class (sovereignty decisions per value).
+    #[inline]
+    pub fn emit_class(&mut self, port: OutPort, payload: Payload, class: DataClass) {
+        self.buf.push(Emission { wire: port.wire, payload, class, defer: SimDuration::ZERO });
+    }
+
+    /// Ghost emission (§III-K): exercise the route, pretend the size.
+    pub fn emit_ghost(&mut self, port: OutPort, pretend_bytes: u64) {
+        self.buf.push(Emission {
+            wire: port.wire,
+            payload: Payload::Ghost { pretend_bytes },
+            class: DataClass::Ghost,
+            defer: SimDuration::ZERO,
+        });
+    }
+
+    /// Deferred emission: published `defer` after the run's other outputs
+    /// (e.g. a watchdog value that should trail its trigger).
+    pub fn emit_after(&mut self, port: OutPort, payload: Payload, defer: SimDuration) {
+        self.buf.push(Emission { wire: port.wire, payload, class: port.class, defer });
+    }
+
+    /// Legacy name-keyed emission — the adapter path for un-migrated
+    /// [`UserCode`](super::UserCode). Resolution is memoized per agent;
+    /// unknown wires error with the task's declared output ports listed
+    /// via did-you-mean (they no longer vanish into an overflow map).
+    pub fn emit_named(&mut self, name: &str, payload: Payload, class: DataClass) -> Result<()> {
+        let wire = match self.cache.get(name) {
+            Some(&w) => w,
+            None => {
+                let w = self.wires.id(name).ok_or_else(|| {
+                    anyhow!(
+                        "task '{}' emitted on unknown wire '{name}'{}",
+                        self.task,
+                        suggest(name, "output port", self.map.out_names.iter().map(|n| &**n))
+                    )
+                })?;
+                self.cache.insert(Rc::from(name), w);
+                w
+            }
+        };
+        self.buf.push(Emission { wire, payload, class, defer: SimDuration::ZERO });
+        Ok(())
+    }
+
+    /// Drain a legacy `Vec<Output>` return into pre-resolved emissions.
+    pub fn emit_outputs(&mut self, outs: Vec<super::Output>) -> Result<()> {
+        self.buf.reserve(outs.len());
+        for o in outs {
+            self.emit_named(&o.wire, o.payload, o.class)?;
+        }
+        Ok(())
+    }
+
+    /// Emissions recorded so far this run (e.g. for wrapper code that
+    /// inspects what an inner task produced before adding its own).
+    pub fn emissions(&self) -> &[Emission] {
+        self.buf
+    }
+
+    pub fn count(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+/// Port-indexed view over the run's [`Snapshot`]: which AVs arrived on
+/// which [`InPort`], with lazy per-port fetching.
+pub struct Inputs<'a> {
+    pub(crate) snapshot: &'a Snapshot,
+    pub(crate) map: &'a PortMap,
+}
+
+impl<'a> Inputs<'a> {
+    /// The raw snapshot (legacy plugins and Merge-policy code, whose one
+    /// synthetic `merged` input matches no declared port).
+    pub fn snapshot(&self) -> &'a Snapshot {
+        self.snapshot
+    }
+
+    /// Every AV in the snapshot, all ports, oldest-first per port.
+    pub fn all(&self) -> impl Iterator<Item = &'a AnnotatedValue> + 'a {
+        self.snapshot.all_avs()
+    }
+
+    /// The AVs that arrived on `port` (empty if the port contributed
+    /// nothing to this snapshot). Fast path: snapshot entries sit in
+    /// buffer order, so the port's slot usually indexes directly; the
+    /// name-checked fallback covers make-mode and Merge snapshots.
+    pub fn on(&self, port: InPort) -> &'a [AnnotatedValue] {
+        let name = match self.map.in_names.get(port.slot()) {
+            Some(n) => n,
+            None => return &[],
+        };
+        if let Some((n, avs)) = self.snapshot.inputs.get(port.slot()) {
+            if Rc::ptr_eq(n, name) || **n == **name {
+                return avs;
+            }
+        }
+        self.snapshot
+            .inputs
+            .iter()
+            .find(|(n, _)| **n == **name)
+            .map(|(_, v)| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Lazily fetch every payload on `port` through the dependent-local
+    /// cache (charging storage/WAN per §Perf rules), oldest first.
+    pub fn fetch(&self, ctx: &mut TaskCtx<'_>, port: InPort) -> Result<Vec<Payload>> {
+        self.on(port).iter().map(|av| ctx.fetch(av)).collect()
+    }
+
+    /// Fetch a port and stack its payloads into one tensor (one AV passes
+    /// through; k rows stack to `(k, D)`) — the window/buffer assembly
+    /// contract PJRT tasks use.
+    pub fn fetch_stacked(&self, ctx: &mut TaskCtx<'_>, port: InPort) -> Result<Payload> {
+        let payloads = self.fetch(ctx, port)?;
+        super::compute::stack_port(&payloads)
+    }
+
+    /// True when any member is a ghost (the run routes, §III-K).
+    pub fn is_ghost(&self) -> bool {
+        self.snapshot.ghost
+    }
+}
+
+/// What [`TaskCode::run`](super::TaskCode::run) sees besides the platform
+/// ctx: the port-indexed [`Inputs`] view and the [`Emitter`]. Split into
+/// two public fields so user code can read inputs while emitting.
+pub struct PortIo<'a> {
+    pub inputs: Inputs<'a>,
+    pub emitter: Emitter<'a>,
+}
+
+impl PortIo<'_> {
+    /// Declared output port by position — the string-free resolution for
+    /// closure-style plugins (`io.out(0)?`). An out-of-range index is a
+    /// task error (recorded like any other run failure), never a panic:
+    /// closures skip the bind step, so this is their resolution point.
+    pub fn out(&self, i: usize) -> Result<OutPort> {
+        self.inputs.map.outs.get(i).copied().ok_or_else(|| {
+            anyhow!(
+                "task '{}' has {} output port(s); no port #{i}",
+                self.emitter.task,
+                self.inputs.map.outs.len()
+            )
+        })
+    }
+
+    /// All declared output ports, spec order.
+    pub fn outs(&self) -> &[OutPort] {
+        &self.inputs.map.outs
+    }
+
+    /// Stream-input port by position (spec order). Errors like [`out`].
+    pub fn in_at(&self, i: usize) -> Result<InPort> {
+        self.inputs.map.ins.get(i).copied().ok_or_else(|| {
+            anyhow!(
+                "task '{}' has {} stream input(s); no port #{i}",
+                self.emitter.task,
+                self.inputs.map.ins.len()
+            )
+        })
+    }
+
+    /// The raw snapshot (shorthand for `io.inputs.snapshot()`).
+    pub fn snapshot(&self) -> &Snapshot {
+        self.inputs.snapshot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::PipelineGraph;
+
+    fn mint(spec_text: &str, task: usize) -> (PortMap, WireTable) {
+        let spec = crate::spec::parse(spec_text).unwrap();
+        let graph = PipelineGraph::build(&spec);
+        (PortMap::mint(&spec.tasks[task], &graph.wires), graph.wires)
+    }
+
+    #[test]
+    fn mint_orders_ports_by_spec() {
+        let (map, wires) = mint("[m]\n(a, b, a) t (x, y)\n", 0);
+        assert_eq!(map.outs().len(), 2);
+        assert_eq!(map.ins().len(), 2, "duplicate stream input 'a' dedups");
+        assert_eq!(map.outs()[0].wire_id(), wires.id("x").unwrap());
+        assert_eq!(map.outs()[1].wire_id(), wires.id("y").unwrap());
+        assert_eq!(map.ins()[0].wire_id(), wires.id("a").unwrap());
+        assert_eq!(map.ins()[1].wire_id(), wires.id("b").unwrap());
+        assert_eq!(map.ins()[1].slot(), 1);
+        assert_eq!(map.outs()[0].default_class(), DataClass::Summary);
+        assert_eq!(map.outs()[0].with_class(DataClass::Raw).default_class(), DataClass::Raw);
+    }
+
+    #[test]
+    fn binder_resolves_with_did_you_mean() {
+        let (map, wires) = mint("[b]\n(raw) screen (clean, alerts)\n", 0);
+        let ports = Ports { map: &map, wires: &wires, task: "screen" };
+        assert_eq!(ports.out("clean").unwrap(), ports.out_at(0).unwrap());
+        assert_eq!(ports.input("raw").unwrap(), ports.input_at(0).unwrap());
+        let e = ports.out("claen").unwrap_err().to_string();
+        assert!(e.contains("did you mean 'clean'?"), "{e}");
+        assert!(e.contains("known output ports: clean, alerts"), "{e}");
+        // phantom targets resolve through the wire table…
+        assert_eq!(ports.out_or_wire("raw").unwrap().wire_id(), wires.id("raw").unwrap());
+        // …but names outside it still fail with the declared-port list
+        let e = ports.out_or_wire("nowhere").unwrap_err().to_string();
+        assert!(e.contains("unknown wire 'nowhere'"), "{e}");
+        assert!(e.contains("known output ports"), "{e}");
+        assert!(ports.out_at(2).is_err());
+        assert!(ports.input("clean").is_err());
+    }
+
+    #[test]
+    fn emitter_resolves_legacy_names_once() {
+        let (map, wires) = mint("[e]\n(raw) t (x)\n", 0);
+        let mut buf = Vec::new();
+        let mut cache = NameCache::default();
+        let mut em = Emitter { buf: &mut buf, map: &map, wires: &wires, cache: &mut cache, task: "t" };
+        em.emit_named("x", Payload::scalar(1.0), DataClass::Summary).unwrap();
+        em.emit_named("x", Payload::scalar(2.0), DataClass::Summary).unwrap();
+        let err = em
+            .emit_named("xz", Payload::scalar(3.0), DataClass::Summary)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown wire 'xz'"), "{err}");
+        assert!(err.contains("did you mean 'x'?"), "{err}");
+        assert_eq!(em.count(), 2);
+        assert_eq!(cache.len(), 1, "one resolution for two emissions");
+        assert_eq!(buf[0].wire, wires.id("x").unwrap());
+    }
+}

@@ -276,7 +276,7 @@ fn breadboard_session_runs_on_handles() {
     let raw = b.source("raw").unwrap();
     let out = b.sink("out").unwrap();
     let work = b.task("work").unwrap();
-    b.plug_task(work, || Box::new(PassThrough::new("out")));
+    b.plug_task(work, || Box::new(PassThrough::new("out"))).unwrap();
     raw.inject(&mut b, Payload::scalar(2.0), DataClass::Summary);
     b.run_until_idle();
     assert_eq!(out.count(&b), 1);

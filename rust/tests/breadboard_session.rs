@@ -6,11 +6,14 @@
 use koalja::breadboard::{Breadboard, TapSpec, WINDOW_END};
 use koalja::prelude::*;
 use koalja::provenance::ProvenanceQuery;
-use koalja::task::UserCode;
+use koalja::task::TaskCode;
 use koalja::workspace::Resource;
 
-/// Scale-by-`factor` code at `version` — the swappable component.
-fn scale(factor: f32, version: u32) -> impl Fn() -> Box<dyn UserCode> {
+/// Scale-by-`factor` code at `version` — the swappable component. Kept on
+/// the legacy `Vec<Output>` closure shape deliberately: sessions must keep
+/// working for un-migrated plugins (the names resolve through the adapter
+/// cache).
+fn scale(factor: f32, version: u32) -> impl Fn() -> Box<dyn TaskCode> {
     move || {
         Box::new(FnTask::versioned(
             move |ctx: &mut TaskCtx<'_>, snap: &Snapshot| {

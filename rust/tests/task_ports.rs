@@ -1,0 +1,261 @@
+//! Typed-port task runtime: port-API vs legacy-adapter equivalence.
+//!
+//! The satellite contract of the task-API redesign: a [`TaskCode`] task
+//! emitting on deploy-time-minted ports and its legacy [`UserCode`]
+//! equivalent (same logic, wire-name returns through the [`LegacyCode`]
+//! adapter) must be *indistinguishable from outside* — byte-identical
+//! `SinkBook` contents (artifacts, payloads, ids, virtual times) and
+//! identical provenance stamp sequences — across randomly generated
+//! wirings and arrival traces. The port runtime is a faster spelling of
+//! the same semantics, never a different machine.
+
+use koalja::prelude::*;
+use koalja::util::Rng;
+
+// ---------------------------------------------------------------------
+// random wiring generator (chains, fan-out, multi-output tasks)
+// ---------------------------------------------------------------------
+
+struct Wiring {
+    text: String,
+    externals: Vec<String>,
+}
+
+/// Tasks consume either fresh external wires or earlier tasks' outputs
+/// (acyclic by construction; fan-out arises when two tasks pick the same
+/// wire) and emit 1–2 fresh wires each — so multi-output emission, the
+/// path this PR redesigns, occurs in roughly half the tasks.
+fn random_wiring(r: &mut Rng, case: usize) -> Wiring {
+    let n_tasks = 1 + r.range(0, 4);
+    let mut produced: Vec<String> = Vec::new();
+    let mut externals: Vec<String> = Vec::new();
+    let mut text = format!("[prop{case}]\n");
+    for ti in 0..n_tasks {
+        let mut inputs = Vec::new();
+        for k in 0..(1 + r.range(0, 2)) {
+            let wire = if !produced.is_empty() && r.bool(0.6) {
+                produced[r.range(0, produced.len())].clone()
+            } else {
+                let w = format!("ext{}", r.range(0, 3));
+                if !externals.contains(&w) {
+                    externals.push(w.clone());
+                }
+                w
+            };
+            if !inputs.contains(&wire) {
+                inputs.push(wire);
+            }
+            let _ = k;
+        }
+        let n_out = 1 + r.range(0, 2);
+        let outputs: Vec<String> = (0..n_out).map(|k| format!("t{ti}o{k}")).collect();
+        text.push_str(&format!(
+            "({}) task-{ti} ({})\n",
+            inputs.join(", "),
+            outputs.join(", ")
+        ));
+        produced.extend(outputs);
+    }
+    // external wires that ended up produced by nobody are the in-trays
+    externals.retain(|e| !produced.contains(e));
+    Wiring { text, externals }
+}
+
+fn scale_payload(p: &Payload, factor: f32) -> Payload {
+    match p.as_tensor() {
+        Some((shape, data)) => {
+            Payload::tensor(shape, data.iter().map(|x| x * factor).collect())
+        }
+        None => p.clone(),
+    }
+}
+
+/// Port-native arm: scale every input and emit it on every declared port,
+/// preserving the input's class. Ports resolved by index — no names.
+fn port_code(factor: f32) -> Box<dyn TaskCode> {
+    Box::new(PortFn::new(move |ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
+        for av in io.inputs.all() {
+            let p = ctx.fetch(av)?;
+            let scaled = scale_payload(&p, factor);
+            for i in 0..io.outs().len() {
+                let port = io.out(i)?;
+                io.emitter.emit_class(port, scaled.clone(), av.class);
+            }
+        }
+        Ok(())
+    }))
+}
+
+/// Legacy arm: the same logic as [`port_code`], but spelled as a
+/// `UserCode` implementation returning wire names, installed through the
+/// `LegacyCode` adapter.
+struct ScaleAllNames {
+    outs: Vec<String>,
+    factor: f32,
+}
+
+impl UserCode for ScaleAllNames {
+    fn run(
+        &mut self,
+        ctx: &mut TaskCtx<'_>,
+        snap: &Snapshot,
+    ) -> anyhow::Result<Vec<Output>> {
+        let mut res = Vec::new();
+        for av in snap.all_avs() {
+            let p = ctx.fetch(av)?;
+            let scaled = scale_payload(&p, self.factor);
+            for o in &self.outs {
+                res.push(Output::new(o.as_str(), scaled.clone(), av.class));
+            }
+        }
+        Ok(res)
+    }
+}
+
+/// Deploy one arm of the comparison and drive the shared arrival trace.
+fn run_arm(wiring: &Wiring, port_native: bool) -> Coordinator {
+    let spec = parse(&wiring.text).unwrap();
+    let mut c = Coordinator::deploy(&spec, DeployConfig::default()).unwrap();
+    for (ti, t) in spec.tasks.iter().enumerate() {
+        let factor = 1.0 + ti as f32 * 0.5;
+        let code: Box<dyn TaskCode> = if port_native {
+            port_code(factor)
+        } else {
+            legacy(ScaleAllNames { outs: t.outputs.clone(), factor })
+        };
+        c.set_code(&t.name, code).unwrap();
+    }
+    // identical arrival trace in both arms (fresh rng per arm, same seed)
+    let mut r = rng(0xF00D);
+    for (wi, w) in wiring.externals.iter().enumerate() {
+        for i in 0..5u64 {
+            c.inject_at(
+                w,
+                Payload::scalar(r.normal() as f32 + i as f32),
+                if i % 2 == 0 { DataClass::Summary } else { DataClass::Raw },
+                RegionId::new(0),
+                SimTime::millis(wi as u64 * 7 + i * 13),
+            )
+            .unwrap();
+        }
+    }
+    c.run_until_idle();
+    c
+}
+
+/// Full observable state of a run, rendered deterministically: per-wire
+/// sink captures (ids, times, payloads) and the stamp sequence on every
+/// collected artifact's passport.
+fn fingerprint(c: &Coordinator) -> String {
+    let mut s = String::new();
+    for name in c.graph.wires.names() {
+        if let Some(recs) = c.collected.get(name) {
+            s.push_str(&format!("== wire {name} ({}) ==\n", recs.len()));
+            for rec in recs {
+                s.push_str(&format!("{} {:?} {:?}\n", rec.at, rec.av, rec.payload));
+                if let Some(pass) = c.plat.prov.passport(rec.av.id) {
+                    for st in &pass.stamps {
+                        s.push_str(&format!("  stamp {} {:?}\n", st.time, st.stamp));
+                    }
+                }
+            }
+        }
+    }
+    s.push_str(&format!("stamps={} runs={}\n", c.plat.prov.stamp_count, c.plat.metrics.task_runs));
+    s
+}
+
+#[test]
+fn port_and_legacy_adapter_arms_are_byte_identical() {
+    let mut r = rng(0x9047);
+    let mut checked = 0;
+    for case in 0..30 {
+        let wiring = random_wiring(&mut r, case);
+        if wiring.externals.is_empty() {
+            continue; // nothing to inject; vacuous
+        }
+        let port_arm = run_arm(&wiring, true);
+        let legacy_arm = run_arm(&wiring, false);
+        let fp_port = fingerprint(&port_arm);
+        let fp_legacy = fingerprint(&legacy_arm);
+        assert_eq!(
+            fp_port, fp_legacy,
+            "case {case}: port-API and legacy-adapter runs diverged\n{}",
+            wiring.text
+        );
+        assert_eq!(
+            port_arm.plat.prov.stamp_count, legacy_arm.plat.prov.stamp_count,
+            "case {case}: stamp sequences diverged"
+        );
+        if port_arm.plat.metrics.task_runs > 0 {
+            checked += 1;
+        }
+    }
+    assert!(checked >= 10, "only {checked} non-trivial cases — generator degenerated");
+}
+
+// ---------------------------------------------------------------------
+// port runtime semantics: ghost + deferred emissions, Inputs view
+// ---------------------------------------------------------------------
+
+#[test]
+fn emit_ghost_routes_like_injected_ghosts() {
+    let spec = parse("[g]\n(raw) probe (trace)\n(trace) sinkward (out)\n").unwrap();
+    let mut c = Coordinator::deploy(&spec, DeployConfig::default()).unwrap();
+    c.set_code(
+        "probe",
+        Box::new(PortFn::new(|_ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
+            let trace = io.out(0)?;
+            io.emitter.emit_ghost(trace, 64 << 20);
+            Ok(())
+        })),
+    )
+    .unwrap();
+    c.inject("raw", Payload::scalar(1.0), DataClass::Summary).unwrap();
+    c.run_until_idle();
+    // the ghost cascaded downstream: sinkward ran as a ghost run
+    assert!(c.plat.metrics.ghost_runs >= 1, "downstream saw a wireframe batch");
+    assert_eq!(c.collected_count("out"), 1);
+    assert!(c.collected["out"][0].av.ghost, "ghost marking survives the port path");
+}
+
+#[test]
+fn inputs_view_is_port_indexed_with_lazy_fetch() {
+    let spec = parse("[iv]\n(left, right) join (out)\n").unwrap();
+    let mut c = Coordinator::deploy(&spec, DeployConfig::default()).unwrap();
+    c.set_code(
+        "join",
+        Box::new(PortFn::new(|ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
+            let (l, r) = (io.in_at(0)?, io.in_at(1)?);
+            // the port view separates the buffers without name scans…
+            let lv = io.inputs.fetch(ctx, l)?;
+            let rv = io.inputs.fetch(ctx, r)?;
+            let sum = |ps: &[Payload]| -> f32 {
+                ps.iter().map(|p| p.as_tensor().unwrap().1[0]).sum()
+            };
+            // …and only fetched ports pay fetch costs (lazy per port)
+            let out = io.out(0)?;
+            io.emitter.emit(out, Payload::tensor(&[2], vec![sum(&lv), sum(&rv)]));
+            Ok(())
+        })),
+    )
+    .unwrap();
+    c.inject("left", Payload::scalar(3.0), DataClass::Summary).unwrap();
+    c.inject("right", Payload::scalar(4.0), DataClass::Summary).unwrap();
+    c.run_until_idle();
+    let rec = &c.collected["out"][0];
+    assert_eq!(rec.payload.as_tensor().unwrap().1, &[3.0, 4.0], "per-port separation");
+}
+
+#[test]
+fn sink_book_has_no_overflow_names() {
+    // the dense sink book is total now: every collected record sits under
+    // an interned wire, and asking for unknown names is simply None
+    let spec = parse("[sb]\n(raw) work (out)\n").unwrap();
+    let mut c = Coordinator::deploy(&spec, DeployConfig::default()).unwrap();
+    c.inject("raw", Payload::scalar(1.0), DataClass::Summary).unwrap();
+    c.run_until_idle();
+    assert!(c.collected.get("not-a-wire").is_none());
+    let names: Vec<&str> = c.collected.iter().map(|(n, _)| n).collect();
+    assert_eq!(names, vec!["out"]);
+}

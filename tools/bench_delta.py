@@ -32,7 +32,15 @@ def load(path):
     if doc.get("schema") != 1:
         print(f"bench_delta: {path}: unexpected schema {doc.get('schema')!r}")
         return None
-    return {r["label"]: (float(r["value"]), r.get("unit", "")) for r in doc.get("results", [])}
+    out = {}
+    for r in doc.get("results", []):
+        # rows missing label/value (hand-edited or truncated reports) are
+        # skipped with a note, never a KeyError that kills the whole diff
+        try:
+            out[r["label"]] = (float(r["value"]), r.get("unit", ""))
+        except (KeyError, TypeError, ValueError):
+            print(f"bench_delta: {path}: skipping malformed row {r!r}")
+    return out
 
 
 def lower_is_better(label, unit):
@@ -83,6 +91,11 @@ def main():
         print(f"{label:44} {'-':>12} {fv:12.1f} {'new':>8}  (no baseline)")
     for label in only_base:
         print(f"{label:44} {base[label][0]:12.1f} {'-':>12} {'gone':>8}  (retired)")
+    if only_fresh:
+        # newly added bench shapes are trajectory, not failure: they gate
+        # nothing until a baseline containing them is committed
+        print(f"bench_delta: {len(only_fresh)} new shape(s) recorded informationally "
+              "(commit the fresh JSON to baseline them)")
 
     if worst_fail:
         label, pct = worst_fail
