@@ -35,9 +35,19 @@
 
 use koalja::benchkit::{bench_ns, f, row, table_header, write_json, Measurement};
 use koalja::prelude::*;
+use koalja::util::ContentHash;
 
 const BENCH_JSON: &str = "BENCH_coordinator_throughput.json";
 const ARRIVALS: u64 = 5_000;
+
+/// Arrivals for the compute-heavy parallel shapes (each arrival fires a
+/// full wavefront of ~300us CPU-bound tasks, so fewer suffice).
+const PAR_ARRIVALS: u64 = 150;
+/// Hash rounds per firing in the parallel shapes — enough real CPU work
+/// that the wavefront worker pool has something to win.
+const PAR_ROUNDS: usize = 300;
+/// Tensor elements per injected payload in the parallel shapes.
+const PAR_ELEMS: usize = 256;
 
 enum Shape {
     /// Linear pipeline of `depth` pass-through stages.
@@ -178,6 +188,80 @@ fn run_shape(shape: &Shape, provenance: bool) -> Run {
     }
 }
 
+/// Worker-pool width for the parallel arms: at least 4 (the CI matrix
+/// leg), capped at 8, honoring the machine where it has more cores.
+fn par_worker_count() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(4, 8)
+}
+
+/// One run of a compute-heavy parallel shape. Returns (wall seconds over
+/// inject+drain, total sink captures) — the capture count must match
+/// across `workers` arms (the determinism contract's cheap proxy here;
+/// the byte-level property lives in rust/tests/wavefront_determinism.rs).
+fn run_par_shape(chain: bool, width: usize, workers: usize) -> (f64, usize) {
+    let mut text = String::from("[par]\n");
+    if chain {
+        for d in 0..width {
+            text.push_str(&format!("(w{d}) t{d} (w{})\n", d + 1));
+        }
+    } else {
+        for i in 0..width {
+            text.push_str(&format!("(x) leaf{i} (s{i})\n"));
+        }
+    }
+    let spec = parse(&text).unwrap();
+    let cfg = DeployConfig { workers, ..Default::default() };
+    let mut c = Coordinator::deploy(&spec, cfg).unwrap();
+    // heavy body: fetch, burn PAR_ROUNDS of hashing, emit a digest —
+    // real CPU work the worker pool can absorb
+    let heavy = || {
+        Box::new(PortFn::new(move |ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
+            let port = io.out(0)?;
+            for av in io.inputs.all() {
+                let p = ctx.fetch(av)?;
+                let (_, data) =
+                    p.as_tensor().ok_or_else(|| anyhow::anyhow!("par bench: non-tensor"))?;
+                let mut h = ContentHash::of_f32s(data);
+                for _ in 0..PAR_ROUNDS {
+                    h = h.combine(ContentHash::of_f32s(data));
+                }
+                io.emitter.emit(port, Payload::tensor(&[2], vec![(h.0 % 997) as f32, data[0]]));
+            }
+            Ok(())
+        })) as Box<dyn TaskCode>
+    };
+    let task_names: Vec<String> = if chain {
+        (0..width).map(|d| format!("t{d}")).collect()
+    } else {
+        (0..width).map(|i| format!("leaf{i}")).collect()
+    };
+    for name in &task_names {
+        c.set_code(name, heavy()).unwrap();
+    }
+    let wid = c.wire_id(if chain { "w0" } else { "x" }).unwrap();
+    let wall = std::time::Instant::now();
+    for i in 0..PAR_ARRIVALS {
+        // distinct payloads per arrival: memoization never short-circuits
+        let data: Vec<f32> = (0..PAR_ELEMS).map(|k| (i * 31 + k as u64) as f32).collect();
+        c.inject_at_id(
+            wid,
+            Payload::tensor(&[PAR_ELEMS], data),
+            DataClass::Summary,
+            RegionId::new(0),
+            SimTime::millis(i),
+        )
+        .unwrap();
+    }
+    c.run_until_idle();
+    let secs = wall.elapsed().as_secs_f64().max(1e-9);
+    let collected: usize = if chain {
+        c.collected_count(&format!("w{width}"))
+    } else {
+        (0..width).map(|i| c.collected_count(&format!("s{i}"))).sum()
+    };
+    (secs, collected)
+}
+
 /// Best-of-3 (the shared benchmark host is noisy).
 fn best_of_3(shape: &Shape, provenance: bool) -> Run {
     let mut best = run_shape(shape, provenance);
@@ -238,6 +322,46 @@ fn main() {
                 "hops/s",
             ));
         }
+    }
+
+    // ---- parallel wavefront shapes: speedup vs the workers=1 twin ----
+    //
+    // par-fanout-N: one injection wire fanning to N compute-heavy leaf
+    // tasks — every arrival instant forms an N-wide wavefront, the case
+    // the scheduler parallelizes. par-chain-N: a linear pipeline of the
+    // same heavy stages — stages fire at *different* instants (each
+    // publication lands later in virtual time), so its wavefronts are
+    // 1-wide and the honest expectation is speedup ≈ 1.0; it is reported
+    // to keep the scheduler honest about where parallelism exists.
+    // tools/bench_delta.py warns when a ≥4-wide fan-out speeds up < 1.2x.
+    table_header(
+        "E11c: parallel wavefront scheduler — wallclock vs workers=1 (byte-identical books)",
+        &["shape", "workers", "seq_ms", "par_ms", "speedup"],
+    );
+    {
+        let par_workers = par_worker_count();
+        let shapes: [(&str, bool, usize); 3] = [
+            ("par-chain-8", true, 8),
+            ("par-fanout-4", false, 4),
+            ("par-fanout-8", false, 8),
+        ];
+        for (label, chain, width) in shapes {
+            let (seq_s, seq_out) = run_par_shape(chain, width, 1);
+            let (par_s, par_out) = run_par_shape(chain, width, par_workers);
+            assert_eq!(seq_out, par_out, "{label}: workers must not change the books");
+            let speedup = seq_s / par_s.max(1e-9);
+            row(&[
+                label.to_string(),
+                format!("{par_workers}"),
+                f(seq_s * 1e3),
+                f(par_s * 1e3),
+                f(speedup),
+            ]);
+            report.push(Measurement::new(format!("{label}/seq/wall_ms"), seq_s * 1e3, "ms"));
+            report.push(Measurement::new(format!("{label}/par/wall_ms"), par_s * 1e3, "ms"));
+            report.push(Measurement::new(format!("{label}/speedup"), speedup, "x"));
+        }
+        report.push(Measurement::new("par/workers", par_workers as f64, "count"));
     }
 
     table_header("E11b: substrate op costs (ns/op, wallclock)", &["op", "ns_per_op"]);

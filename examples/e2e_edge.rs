@@ -70,7 +70,7 @@ struct ArmReport {
 fn run_arm(central: bool) -> Result<ArmReport> {
     let mut rt = Runtime::open(Runtime::default_dir())?;
     let summarize_exe = rt.load("edge_summarize")?;
-    let runs_before = summarize_exe.runs.get();
+    let runs_before = summarize_exe.runs();
 
     let spec_text = if central { central_spec() } else { edge_spec() };
     let spec = parse(&spec_text)?;
@@ -133,7 +133,7 @@ fn run_arm(central: bool) -> Result<ArmReport> {
         denied: pipe.plat.metrics.get("sovereignty_denied"),
         reports: fleet_report.count(&pipe),
         e2e_mean_s: pipe.plat.metrics.e2e_latency.mean().as_secs_f64(),
-        kernel_runs: summarize_exe.runs.get() - runs_before,
+        kernel_runs: summarize_exe.runs() - runs_before,
         wall_s,
         chunks,
     })

@@ -92,7 +92,7 @@ fn main() -> Result<()> {
         // sanity: sensor bias is 15.0, so averages should hover nearby
         assert!((data[0] - 15.0).abs() < 2.0, "window mean near sensor bias");
     }
-    println!("kernel executions on the PJRT hot path: {}", window_exe.runs.get());
+    println!("kernel executions on the PJRT hot path: {}", window_exe.runs());
     println!("\n{}", pipe.plat.metrics.report());
     Ok(())
 }

@@ -112,24 +112,28 @@ fn main() -> Result<()> {
         }),
     )?;
 
-    // deploy: push packed params into the running service
+    // deploy: push packed params into the running service. Service
+    // mutation is live shared state, so this plugin declares itself
+    // sequential — it always runs in the deterministic commit phase.
     pipe.task("deploy")?.plug(
         &mut pipe,
-        Box::new(PortFn::new(move |ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
-            let deployed = io.out(0)?;
-            for av in io.inputs.all() {
-                let packed = ctx.fetch(av)?;
-                let ok = ctx.plat.services.update("classifier", |s| {
-                    s.update_payload(&packed);
-                });
-                ctx.remark(&format!("deployed model {} (ok={ok})", av.content));
-                io.emitter.emit(deployed, Payload::scalar(1.0));
-            }
-            Ok(())
-        })),
+        Box::new(
+            PortFn::new(move |ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
+                let deployed = io.out(0)?;
+                for av in io.inputs.all() {
+                    let packed = ctx.fetch(av)?;
+                    let ok = ctx.update_service("classifier", &packed)?;
+                    ctx.remark(&format!("deployed model {} (ok={ok})", av.content));
+                    io.emitter.emit(deployed, Payload::scalar(1.0));
+                }
+                Ok(())
+            })
+            .sequential(),
+        ),
     )?;
 
-    // predict: consult the service (out-of-band lookup, recorded)
+    // predict: consult the service (out-of-band lookup, recorded) —
+    // lookups need the live service directory, hence sequential too
     let predict = pipe.task("predict")?;
     predict.plug(
         &mut pipe,
@@ -156,7 +160,8 @@ fn main() -> Result<()> {
                 io.emitter.emit(classification, Payload::tensor(&[n], preds));
             }
             Ok(())
-        })),
+        })
+        .sequential()),
     )?;
 
     // ---- drive both timescales ----

@@ -1,0 +1,142 @@
+"""Exit-code and output contract of tools/bench_delta.py.
+
+The CI gate (ci.sh) relies on precise semantics: only ns_per_event
+regressions beyond the fail threshold return 1; warnings (including the
+parallel-speedup floor on >=4-wide fan-outs) return 0; malformed rows
+are skipped with a note; an empty seed baseline compares clean. These
+tests pin each of those behaviours by invoking the script exactly as
+ci.sh does.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import subprocess
+import sys
+
+TOOL = pathlib.Path(__file__).resolve().parents[2] / "tools" / "bench_delta.py"
+
+
+def doc(results):
+    return {"schema": 1, "bench": "coordinator_throughput", "results": results}
+
+
+def row(label, value, unit="ns"):
+    return {"label": label, "value": value, "unit": unit}
+
+
+def run_tool(tmp_path, base, fresh):
+    bp = tmp_path / "base.json"
+    fp = tmp_path / "fresh.json"
+    bp.write_text(json.dumps(base))
+    fp.write_text(json.dumps(fresh))
+    proc = subprocess.run(
+        [sys.executable, str(TOOL), str(bp), str(fp)],
+        capture_output=True,
+        text=True,
+        check=False,
+    )
+    return proc.returncode, proc.stdout + proc.stderr
+
+
+def test_clean_compare_exits_zero(tmp_path):
+    base = doc([row("chain-4/prov/ns_per_event", 800.0)])
+    fresh = doc([row("chain-4/prov/ns_per_event", 805.0)])
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 0, out
+    assert "within tolerance" in out
+
+
+def test_warn_regression_exits_zero(tmp_path):
+    # a rate metric dropping 20% is a warning, never a failure
+    base = doc([row("fanout-4/prov/events_per_sec", 1000.0, "events/s")])
+    fresh = doc([row("fanout-4/prov/events_per_sec", 800.0, "events/s")])
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 0, out
+    assert "warning only" in out
+
+
+def test_ns_per_event_fail_exits_one(tmp_path):
+    base = doc([row("chain-4/prov/ns_per_event", 800.0)])
+    fresh = doc([row("chain-4/prov/ns_per_event", 1200.0)])  # +50%
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 1, out
+    assert "FAIL" in out
+
+
+def test_malformed_row_is_skipped_not_fatal(tmp_path):
+    base = doc([row("chain-4/prov/ns_per_event", 800.0)])
+    fresh = doc(
+        [
+            {"label": "truncated-no-value"},
+            {"value": 3.0},
+            row("chain-4/prov/ns_per_event", 810.0),
+        ]
+    )
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 0, out
+    assert "skipping malformed row" in out
+    assert "within tolerance" in out
+
+
+def test_empty_seed_baseline_compares_clean(tmp_path):
+    # the committed seed baseline still has results: [] — first trajectory
+    base = doc([])
+    fresh = doc([row("chain-4/prov/ns_per_event", 800.0)])
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 0, out
+    assert "first trajectory point" in out
+
+
+def test_par_fanout_low_speedup_warns(tmp_path):
+    base = doc([])
+    fresh = doc(
+        [
+            row("par-fanout-4/speedup", 1.05, "x"),
+            row("par-fanout-8/speedup", 2.4, "x"),
+            # chains are 1-wide wavefronts: low speedup there is expected
+            row("par-chain-8/speedup", 0.98, "x"),
+        ]
+    )
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 0, out  # speedup floor warns, never gates
+    assert "par-fanout-4/speedup" in out
+    assert "below the 1.2x floor" in out
+    # exactly one warning: the healthy fan-out and the chain are exempt
+    assert out.count("below the 1.2x floor") == 1
+
+
+def test_wall_ms_polarity_is_lower_is_better(tmp_path):
+    # wallclock growing is a regression (warn), shrinking is an improvement
+    base = doc([row("par-fanout-8/par/wall_ms", 100.0, "ms")])
+    fresh = doc([row("par-fanout-8/par/wall_ms", 150.0, "ms")])
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 0, out
+    assert "warn" in out and "improved" not in out
+
+    base = doc([row("par-fanout-8/par/wall_ms", 100.0, "ms")])
+    fresh = doc([row("par-fanout-8/par/wall_ms", 60.0, "ms")])
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 0, out
+    assert "improved" in out
+
+
+def test_par_fanout_healthy_speedup_is_quiet(tmp_path):
+    base = doc([row("par-fanout-4/speedup", 2.0, "x")])
+    fresh = doc([row("par-fanout-4/speedup", 2.1, "x")])
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 0, out
+    assert "below the 1.2x floor" not in out
+    assert "within tolerance" in out
+
+
+def test_environment_metadata_is_not_compared(tmp_path):
+    # par/workers is the runner's core count: an 8-core baseline vs a
+    # 4-core runner must not read as a 50% regression
+    base = doc([row("par/workers", 8.0, "count"), row("chain-4/prov/ns_per_event", 800.0)])
+    fresh = doc([row("par/workers", 4.0, "count"), row("chain-4/prov/ns_per_event", 805.0)])
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 0, out
+    assert "warn" not in out
+    assert "within tolerance" in out

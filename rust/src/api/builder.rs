@@ -43,15 +43,32 @@ pub struct PipelineBuilder {
     tasks: Vec<TaskSpec>,
     /// Deferred construction errors, reported together at lowering.
     errors: Vec<String>,
+    /// Deploy-time override of [`DeployConfig::workers`] (wavefront
+    /// worker-pool width); `None` = whatever the passed config says.
+    workers: Option<usize>,
 }
 
 impl PipelineBuilder {
     pub fn new(name: &str) -> Self {
-        let mut b = Self { name: name.to_string(), tasks: Vec::new(), errors: Vec::new() };
+        let mut b = Self {
+            name: name.to_string(),
+            tasks: Vec::new(),
+            errors: Vec::new(),
+            workers: None,
+        };
         if !valid_name(name) {
             b.errors.push(format!("bad pipeline name '{name}'"));
         }
         b
+    }
+
+    /// Set the wavefront worker-pool width the deployment runs with
+    /// (`1` = fully sequential; results are byte-identical either way —
+    /// see DESIGN.md §Perf notes). A deploy-time knob, not part of the
+    /// wiring: `build()`'s spec is unaffected.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = Some(n.max(1));
+        self
     }
 
     /// Open a task; wire its ports on the returned [`TaskBuilder`].
@@ -93,7 +110,10 @@ impl PipelineBuilder {
     }
 
     /// Build, validate and deploy in one step.
-    pub fn deploy(self, cfg: DeployConfig) -> Result<Pipeline> {
+    pub fn deploy(self, mut cfg: DeployConfig) -> Result<Pipeline> {
+        if let Some(w) = self.workers {
+            cfg.workers = w;
+        }
         let spec = self.build()?;
         Pipeline::deploy(&spec, cfg)
     }
@@ -202,6 +222,13 @@ impl TaskBuilder {
     /// Sugar for `@notify=…` (`push` or `poll:Nms`, Principle 1).
     pub fn notify(self, notify: &str) -> Self {
         self.attr("notify", notify)
+    }
+
+    /// Set the deployment's wavefront worker-pool width mid-chain (see
+    /// [`PipelineBuilder::workers`]).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.pb.workers = Some(n.max(1));
+        self
     }
 
     /// Seal this task and return to the pipeline level (for loops that

@@ -65,7 +65,7 @@ impl ScheduledRunner {
         let mut inputs = Vec::with_capacity(ports.len());
         for wire in &ports {
             match coord.latest_on_wire.get(wire) {
-                Some(av) => inputs.push((std::rc::Rc::from(wire.as_str()), vec![av.clone()])),
+                Some(av) => inputs.push((std::sync::Arc::from(wire.as_str()), vec![av.clone()])),
                 None => {
                     self.skipped_no_input += 1;
                     return Ok(()); // nothing ever arrived; cron skips

@@ -374,14 +374,18 @@ impl Breadboard {
             }
         }
         let events = fresh.run_until_idle();
-        let collected = replay::hash_sequences(&fresh.collected);
+        // the rebuilt record comes from the twin's deterministic commit
+        // log — identical under any `workers` setting on either side
+        let collected = fresh.sink_hash_sequences();
         Ok(ReplayRun { collected, injections_replayed: injected, missing_payloads: missing, events })
     }
 
     /// Diff a replay against the live record over the half-open window
     /// `[from, to)`; pass [`WINDOW_END`] as `to` for the unbounded tail.
+    /// Both sides are commit-log projections, so the diff is unaffected
+    /// by drained sinks or by how many wavefront workers either run used.
     pub fn diff_replay(&self, run: &ReplayRun, from: SimTime, to: SimTime) -> ReplayReport {
-        let live = replay::hash_sequences(&self.pipe.collected);
+        let live = self.pipe.sink_hash_sequences();
         replay::diff_windows(&live, &run.collected, from, to)
     }
 

@@ -13,27 +13,25 @@
 //! drifting hashes localize exactly which window a software change (or a
 //! nondeterministic task) altered.
 
-use crate::coordinator::SinkBook;
 use crate::util::{ContentHash, SimTime};
 use std::collections::BTreeMap;
 
-/// Project sink captures into per-wire (time, content-hash) sequences —
-/// the canonical shape both the live record and a replay are diffed in.
-/// (Wires that collected nothing are omitted, matching the former
-/// `HashMap` representation.)
-pub fn hash_sequences(
-    collected: &SinkBook,
-) -> BTreeMap<String, Vec<(SimTime, ContentHash)>> {
-    collected
-        .iter()
-        .map(|(w, v)| (w.to_string(), v.iter().map(|c| (c.at, c.av.content)).collect()))
-        .collect()
-}
+// The per-wire (time, content-hash) sequences both the live record and a
+// replay are diffed in come from the coordinator's *deterministic commit
+// log* ([`Coordinator::sink_hash_sequences`]) — NOT from the `SinkBook`
+// (drainable by sessions) and NOT from event-heap pop order (which the
+// wavefront scheduler decouples from commit order). Within one virtual
+// instant, commits land in task-index order for every `workers` setting,
+// so live-vs-replay diffs are stable under any parallelism on either
+// side.
+//
+// [`Coordinator::sink_hash_sequences`]: crate::coordinator::Coordinator::sink_hash_sequences
 
 /// The rebuilt execution: per-wire (time, content-hash) sequences.
 #[derive(Clone, Debug)]
 pub struct ReplayRun {
-    /// Sink captures of the fresh coordinator, per wire, event order.
+    /// Sink captures of the fresh coordinator, per wire, deterministic
+    /// commit order.
     pub collected: BTreeMap<String, Vec<(SimTime, ContentHash)>>,
     pub injections_replayed: usize,
     /// Ledger entries whose payloads were no longer in the object store

@@ -83,7 +83,7 @@ impl Coordinator {
         }
         // ports resolve to interned ids once; the snapshot still carries
         // names because input buffers are keyed by port name
-        let ports: Vec<(std::rc::Rc<str>, WireId)> = self
+        let ports: Vec<(std::sync::Arc<str>, WireId)> = self
             .graph
             .task(task)
             .stream_inputs()
@@ -93,7 +93,7 @@ impl Coordinator {
                     .wires
                     .id(&i.wire)
                     .expect("spec stream inputs are interned at build");
-                (std::rc::Rc::from(i.wire.as_str()), wid)
+                (std::sync::Arc::from(i.wire.as_str()), wid)
             })
             .collect();
         for (_, wid) in &ports {

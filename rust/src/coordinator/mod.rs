@@ -16,6 +16,7 @@
 //! push wakeups (Principle 1) and scale-to-zero sweeps also dispatch here.
 
 pub mod make;
+mod wavefront;
 
 use crate::av::{AnnotatedValue, DataClass, Payload};
 use crate::breadboard::tap::TapBoard;
@@ -29,12 +30,17 @@ use crate::provenance::{CheckpointEvent, Relation};
 use crate::spec::PipelineSpec;
 use crate::storage::{PurgePolicy, StorageConfig};
 use crate::task::builtins::PassThrough;
+use crate::task::effects::{PreparedFiring, RecordedBody, RecordedRun};
 use crate::task::{RunOutcome, TaskAgent, TaskCode};
-use crate::util::{AvId, LinkId, ObjectId, RegionId, SimDuration, SimTime, TaskId, WireId};
+use crate::util::{
+    AvId, ContentHash, LinkId, ObjectId, RegionId, SimDuration, SimTime, TaskId, WireId,
+};
 use anyhow::{anyhow, bail, Result};
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::collections::{BTreeMap, BinaryHeap, HashMap, HashSet};
 use std::sync::Arc;
+
+pub(crate) use wavefront::WaveGroup;
 
 /// Sentinel source id for externally injected data (file drops, sensors).
 pub const EXTERNAL: TaskId = TaskId(u64::MAX);
@@ -56,6 +62,27 @@ pub struct DeployConfig {
     /// Baseline arm: ignore `@region` attrs, put everything in the nearest
     /// datacentre ("push everything to the centre", E7 control).
     pub force_central: bool,
+    /// Wavefront worker threads: at each virtual instant the ready,
+    /// mutually independent task firings execute on a
+    /// `std::thread::scope` pool this wide, then commit in task-index
+    /// order — sink books, provenance stamps, memo records and tap
+    /// captures are byte-identical to sequential execution for any
+    /// value. `1` = the fully sequential direct path (no worker threads,
+    /// no effect recording). Defaults to `KOALJA_WORKERS` when set, else
+    /// `std::thread::available_parallelism()`; clamped to ≥ 1 at deploy.
+    pub workers: usize,
+}
+
+/// The deploy-time default for [`DeployConfig::workers`]: the
+/// `KOALJA_WORKERS` env override (the CI determinism matrix sets it to 1
+/// and 4) or the machine's available parallelism.
+pub fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("KOALJA_WORKERS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 impl Default for DeployConfig {
@@ -69,6 +96,7 @@ impl Default for DeployConfig {
             default_notify: NotifyMode::Push,
             placement: PlacementStrategy::NetworkAttached,
             force_central: false,
+            workers: default_workers(),
         }
     }
 }
@@ -247,6 +275,27 @@ enum RouteTarget {
     Wire(WireId),
 }
 
+/// One sink capture in the deterministic commit log: the order sink
+/// artifacts were *committed*, which under the wavefront scheduler is
+/// canonical (task-index order within an instant) for every `workers`
+/// setting. Forensic replay diffs against this log — not against heap
+/// pop order, and not against the (drainable) [`SinkBook`] — so replays
+/// are identical regardless of parallelism or consumed sinks.
+#[derive(Clone, Copy, Debug)]
+pub struct SinkCommit {
+    pub wire: WireId,
+    pub at: SimTime,
+    pub content: ContentHash,
+}
+
+/// A task awaiting its pump in the current same-instant event batch
+/// (deduplicated; `via_poll` remembers whether the poll re-arm logic
+/// applies at the epilogue).
+struct PendingPump {
+    task: TaskId,
+    via_poll: bool,
+}
+
 /// The deployed pipeline.
 pub struct Coordinator {
     pub graph: PipelineGraph,
@@ -279,6 +328,13 @@ pub struct Coordinator {
     /// `is_empty()` branch plus a dense per-wire mask, so an untapped
     /// pipeline pays nothing — see benches/tap_overhead.rs.
     pub taps: TapBoard,
+    /// Wavefront worker-pool width (see [`DeployConfig::workers`]).
+    workers: usize,
+    /// Tasks woken during the current same-instant event batch, awaiting
+    /// the wavefront flush (dedup'd, flushed in task-index order).
+    pending_pumps: Vec<PendingPump>,
+    /// Deterministic commit log of sink captures (see [`SinkCommit`]).
+    commit_log: Vec<SinkCommit>,
 }
 
 impl Coordinator {
@@ -444,7 +500,16 @@ impl Coordinator {
             out_links,
             link_buffer,
             taps: TapBoard::bound(wire_names),
+            workers: cfg.workers.max(1),
+            pending_pumps: Vec::new(),
+            commit_log: Vec::new(),
         })
+    }
+
+    /// Wavefront worker-pool width this deployment runs with (`1` =
+    /// fully sequential).
+    pub fn workers(&self) -> usize {
+        self.workers
     }
 
     /// Plug task code into a task (recorded in the agent's versioned code
@@ -707,13 +772,21 @@ impl Coordinator {
     // ------------------------------------------------------------------
 
     /// Process events up to and including `horizon`. Returns events handled.
+    ///
+    /// The loop advances one virtual *instant* at a time: every event at
+    /// the next instant is dispatched in heap order (cheap bookkeeping —
+    /// deliveries, tap observations, sweeps; wakes and polls only enqueue
+    /// their task), then the resulting **wavefront** of ready, mutually
+    /// independent task firings executes — on the worker pool when
+    /// `workers > 1` — and commits deterministically in task-index order.
     pub fn run_until(&mut self, horizon: SimTime) -> u64 {
         let mut handled = 0;
-        while self.queue.peek().is_some_and(|Reverse(e)| e.at <= horizon) {
-            let Reverse(ev) = self.queue.pop().unwrap();
-            self.plat.now = ev.at;
-            self.dispatch(ev.kind);
-            handled += 1;
+        loop {
+            let at = match self.queue.peek() {
+                Some(Reverse(e)) if e.at <= horizon => e.at,
+                _ => break,
+            };
+            handled += self.drain_instant(at);
         }
         if self.plat.now < horizon {
             self.plat.now = horizon;
@@ -726,10 +799,12 @@ impl Coordinator {
     pub fn run_until_idle(&mut self) -> u64 {
         let mut handled = 0;
         let cap = 10_000_000u64;
-        while let Some(Reverse(ev)) = self.queue.pop() {
-            self.plat.now = ev.at;
-            self.dispatch(ev.kind);
-            handled += 1;
+        loop {
+            let at = match self.queue.peek() {
+                Some(Reverse(e)) => e.at,
+                None => break,
+            };
+            handled += self.drain_instant(at);
             if handled > cap {
                 panic!("run_until_idle: event storm (> {cap} events)");
             }
@@ -738,17 +813,34 @@ impl Coordinator {
         handled
     }
 
+    /// Pop and dispatch every event at virtual instant `at` — including
+    /// same-instant events pushed during the drain (wakes spawned by
+    /// deliveries) — then flush the wavefront of woken tasks.
+    fn drain_instant(&mut self, at: SimTime) -> u64 {
+        let mut handled = 0;
+        while self.queue.peek().is_some_and(|Reverse(e)| e.at == at) {
+            let Reverse(ev) = self.queue.pop().unwrap();
+            self.plat.now = at;
+            self.dispatch(ev.kind);
+            handled += 1;
+        }
+        self.flush_wavefront();
+        handled
+    }
+
     pub fn pending_events(&self) -> usize {
         self.queue.len()
     }
 
-    /// Single-step the event loop: process exactly one pending event and
-    /// return its virtual time (breadboard pause/step/resume, §III-H).
+    /// Single-step the event loop: process exactly one pending event
+    /// (flushing any task firing it triggers) and return its virtual
+    /// time (breadboard pause/step/resume, §III-H).
     pub fn step_event(&mut self) -> Option<SimTime> {
         let Reverse(ev) = self.queue.pop()?;
         let at = ev.at;
         self.plat.now = at;
         self.dispatch(ev.kind);
+        self.flush_wavefront();
         self.events_processed += 1;
         Some(at)
     }
@@ -762,7 +854,7 @@ impl Coordinator {
     fn dispatch(&mut self, kind: EventKind) {
         match kind {
             EventKind::Deliver { link, av } => self.on_deliver(link as usize, av),
-            EventKind::Wake { task } => self.on_wake(task),
+            EventKind::Wake { task } => self.enqueue_pump(task, false),
             EventKind::Poll { task } => self.on_poll(task),
             EventKind::ScaleSweep => {
                 self.plat.cluster.scale_to_zero_sweep(self.plat.now);
@@ -775,6 +867,17 @@ impl Coordinator {
             EventKind::TapObserve { wire, av } => {
                 self.taps.observe(wire, &av, &self.plat.store, self.plat.now);
             }
+        }
+    }
+
+    /// Mark `task` for the current batch's wavefront (deduplicated: a
+    /// task delivered to N times at one instant pumps once, seeing all N
+    /// arrivals — the pull/take loop consumes them in the same order the
+    /// per-event pumps would have).
+    fn enqueue_pump(&mut self, task: TaskId, via_poll: bool) {
+        match self.pending_pumps.iter_mut().find(|p| p.task == task) {
+            Some(p) => p.via_poll |= via_poll,
+            None => self.pending_pumps.push(PendingPump { task, via_poll }),
         }
     }
 
@@ -832,10 +935,6 @@ impl Coordinator {
         }
     }
 
-    fn on_wake(&mut self, task: TaskId) {
-        self.pump(task);
-    }
-
     fn on_poll(&mut self, task: TaskId) {
         self.polls_pending.remove(&task);
         self.plat.metrics.polls_performed += 1;
@@ -845,54 +944,109 @@ impl Coordinator {
         if !had_news {
             self.plat.metrics.polls_empty += 1;
         }
-        self.pump(task);
-        // Re-arm while the stream looks alive (recently active or backlog).
-        if let NotifyMode::Poll(iv) = self.agents[task.index()].notify {
-            let recently_active = self
-                .last_arrival
-                .get(&task)
-                .map(|t| self.plat.now.saturating_sub(*t) <= iv.scale(10.0))
-                .unwrap_or(false);
-            let backlog = self.agents[task.index()].engine.backlog() > 0;
-            if (recently_active || backlog) && self.polls_pending.insert(task) {
-                self.push_event(self.plat.now + iv, EventKind::Poll { task });
-            }
-        }
+        self.enqueue_pump(task, true);
     }
 
-    /// Interleave pulls and fires until neither makes progress: each
-    /// queued AV gets its chance at a snapshot before the next overwrites
-    /// a bounded buffer position.
-    fn pump(&mut self, task: TaskId) {
+    // ------------------------------------------------------------------
+    // Wavefront scheduler: extract → execute → deterministic commit
+    // ------------------------------------------------------------------
+
+    /// Flush the tasks woken during the current same-instant batch.
+    ///
+    /// Three phases, all in canonical task-index order so every
+    /// `workers` setting produces the same books:
+    ///  1. **extract** — interleave pulls and snapshot takes per task
+    ///     (each queued AV gets its chance at a snapshot before the next
+    ///     overwrites a bounded buffer position), yielding each task's
+    ///     ready firings;
+    ///  2. **execute** — with `workers > 1` and ≥ 2 busy tasks, firings
+    ///     run on a `std::thread::scope` worker pool, each worker owning
+    ///     its task's agent exclusively and recording platform effects
+    ///     (see `task::effects`); otherwise everything defers to phase 3;
+    ///  3. **commit** — per task, in index order: replay/execute each
+    ///     firing against the live platform (ids drawn here, so the
+    ///     dispensers allocate in canonical order), publish, then the
+    ///     pump epilogue (rate re-arm, poll re-arm, autoscale).
+    fn flush_wavefront(&mut self) {
+        if self.pending_pumps.is_empty() {
+            return;
+        }
+        let mut pumps = std::mem::take(&mut self.pending_pumps);
+        pumps.sort_by_key(|p| p.task);
+        // phase 1: extract each task's ready firings
+        let mut groups: Vec<WaveGroup> = Vec::with_capacity(pumps.len());
+        for p in &pumps {
+            let (snaps, queued) = self.collect_snapshots(p.task);
+            groups.push(WaveGroup { task: p.task, via_poll: p.via_poll, queued, snaps });
+        }
+        let busy = groups.iter().filter(|g| !g.snaps.is_empty()).count();
+        if self.workers > 1 && busy >= 2 {
+            // phases 2+3: execute on the worker pool, then commit in
+            // task-index order
+            let prepared = wavefront::execute_parallel(self, &mut groups);
+            for (g, items) in groups.iter().zip(prepared) {
+                for item in items {
+                    match item {
+                        PreparedFiring::Deferred(snap) => {
+                            if let Err(e) = self.fire_snapshot(g.task, snap) {
+                                self.record_task_error(g.task, e);
+                            }
+                        }
+                        PreparedFiring::Recorded(rec) => self.commit_recorded(g.task, rec),
+                    }
+                }
+                self.pump_epilogue(g.task, g.queued, g.via_poll);
+            }
+        } else {
+            // sequential wavefront (the 1-wide chain hot path): fire
+            // directly, moving each group's existing snapshot Vec — no
+            // PreparedFiring wrapping, no extra allocation (§Perf)
+            for gi in 0..groups.len() {
+                let task = groups[gi].task;
+                for snap in std::mem::take(&mut groups[gi].snaps) {
+                    if let Err(e) = self.fire_snapshot(task, snap) {
+                        self.record_task_error(task, e);
+                    }
+                }
+                self.pump_epilogue(task, groups[gi].queued, groups[gi].via_poll);
+            }
+        }
+        // hand the drained pump list back: steady state reuses its
+        // capacity instant after instant (§Perf)
+        pumps.clear();
+        self.pending_pumps = pumps;
+    }
+
+    /// Phase-1 extraction for one task: the pull/take interleave the old
+    /// sequential pump performed, minus the fires (which commit later).
+    /// Fires never feed the same instant back (publication costs are
+    /// strictly positive), so the snapshot sequence is identical to
+    /// firing inline.
+    fn collect_snapshots(&mut self, task: TaskId) -> (Vec<Snapshot>, usize) {
         // autoscaling signal: how much work was waiting when we woke (the
         // bounded snapshot buffers hide the burst; the topics don't)
         let queued: usize = self.in_links[task.index()]
             .iter()
             .map(|&li| self.plat.bus.depth(self.links[li].link.id))
             .sum();
+        let mut snaps = Vec::new();
         loop {
             loop {
                 let now = self.plat.now;
-                let snapshot = match self.agents[task.index()].engine.take(now) {
-                    Some(s) => s,
+                match self.agents[task.index()].engine.take(now) {
+                    Some(s) => snaps.push(s),
                     None => break,
-                };
-                if let Err(e) = self.fire_snapshot(task, snapshot) {
-                    self.plat.metrics.bump("task_errors");
-                    let run = self.plat.next_run_id();
-                    self.plat.prov.checkpoint(
-                        task,
-                        run,
-                        self.plat.now,
-                        CheckpointEvent::Remark(format!("task error: {e}")),
-                    );
-                    break;
                 }
             }
             if !self.pull_one(task) {
                 break;
             }
         }
+        (snaps, queued)
+    }
+
+    /// The tail of the old pump, run after a task's wavefront commits.
+    fn pump_epilogue(&mut self, task: TaskId, queued: usize, via_poll: bool) {
         // Rate-suppressed but ready: re-arm a wake for when firing is allowed.
         let eng = &self.agents[task.index()].engine;
         if eng.ready() {
@@ -901,9 +1055,54 @@ impl Coordinator {
                 self.push_event(next, EventKind::Wake { task });
             }
         }
+        // Poll links re-arm while the stream looks alive (recently active
+        // or backlog).
+        if via_poll {
+            if let NotifyMode::Poll(iv) = self.agents[task.index()].notify {
+                let recently_active = self
+                    .last_arrival
+                    .get(&task)
+                    .map(|t| self.plat.now.saturating_sub(*t) <= iv.scale(10.0))
+                    .unwrap_or(false);
+                let backlog = self.agents[task.index()].engine.backlog() > 0;
+                if (recently_active || backlog) && self.polls_pending.insert(task) {
+                    self.push_event(self.plat.now + iv, EventKind::Poll { task });
+                }
+            }
+        }
         // autoscale on the burst size seen at wake (or remaining backlog)
         let backlog = self.agents[task.index()].engine.backlog().max(queued);
         self.plat.cluster.autoscale(task, backlog);
+    }
+
+    /// Task-error bookkeeping (metrics + checkpoint remark) — shared by
+    /// the deferred and recorded commit paths.
+    fn record_task_error(&mut self, task: TaskId, e: anyhow::Error) {
+        self.plat.metrics.bump("task_errors");
+        let run = self.plat.next_run_id();
+        self.plat.prov.checkpoint(
+            task,
+            run,
+            self.plat.now,
+            CheckpointEvent::Remark(format!("task error: {e}")),
+        );
+    }
+
+    /// Commit one worker-executed firing: draw the run id (canonical
+    /// order), replay the effect tape, then publish — the exact mutation
+    /// sequence direct execution performs.
+    fn commit_recorded(&mut self, task: TaskId, rec: RecordedRun) {
+        let cold = self.plat.cluster.activate(task, self.plat.now);
+        let run = self.plat.next_run_id();
+        let RecordedRun { recipe, parents, born, version, region, fx, body } = rec;
+        fx.apply(&mut self.plat, task, run, version, region);
+        match body {
+            Ok(RecordedBody { emissions, hashes, cost, ghost }) => {
+                let outcome = RunOutcome::Ran { run, emissions, cost, ghost };
+                self.publish_outcome(task, recipe, &parents, born, cold, outcome, Some(&hashes));
+            }
+            Err(e) => self.record_task_error(task, e),
+        }
     }
 
     /// Execute one snapshot on a task and publish the results.
@@ -927,11 +1126,32 @@ impl Coordinator {
         } else {
             self.agents[task.index()].execute(&mut self.plat, &self.graph.wires, snapshot)?
         };
+        self.publish_outcome(task, recipe, &parents, born, cold, outcome, None);
+        Ok(())
+    }
+
+    /// Publish a run outcome: mint AVs, stamp provenance, route/collect,
+    /// memoize. Shared verbatim by direct execution
+    /// ([`fire_snapshot`](Self::fire_snapshot)) and the wavefront
+    /// scheduler's recorded commit, so the two paths cannot drift.
+    /// `prehashed` carries per-emission payload content hashes when a
+    /// worker already computed them (§Perf: the commit never hashes).
+    #[allow(clippy::too_many_arguments)]
+    fn publish_outcome(
+        &mut self,
+        task: TaskId,
+        recipe: ContentHash,
+        parents: &[AvId],
+        born: SimTime,
+        cold: SimDuration,
+        outcome: RunOutcome,
+        prehashed: Option<&[ContentHash]>,
+    ) {
         match outcome {
             RunOutcome::Ran { run, mut emissions, cost, ghost } => {
                 let publish_base = self.plat.now + cold + cost;
                 let mut memo_rec = Vec::new();
-                for em in emissions.drain(..) {
+                for (ei, em) in emissions.drain(..).enumerate() {
                     let region = self.agents[task.index()].region;
                     let version = self.agents[task.index()].version();
                     let seq = self.agents[task.index()].out_seq;
@@ -960,10 +1180,17 @@ impl Coordinator {
                         RouteTarget::Wire(_) => true,
                     };
                     let sink_payload = if is_sink { Some(em.payload.clone()) } else { None };
+                    // a wavefront worker already hashed this payload; the
+                    // direct path hashes here (identical value either way)
+                    let content = match prehashed {
+                        Some(h) => h[ei],
+                        None => em.payload.content_hash(),
+                    };
                     let saved = self.plat.now;
                     self.plat.now = publish_at;
-                    let (av, _lat) = self.plat.mint_av(
+                    let (av, _lat) = self.plat.mint_av_prehashed(
                         em.payload,
+                        content,
                         task,
                         run,
                         version,
@@ -971,7 +1198,7 @@ impl Coordinator {
                         region,
                         em.class,
                         seq,
-                        &parents,
+                        parents,
                         born,
                     );
                     self.plat.now = saved;
@@ -1044,7 +1271,7 @@ impl Coordinator {
                     };
                     self.plat.prov.birth(
                         av.id,
-                        &parents,
+                        parents,
                         publish_at,
                         crate::provenance::Stamp::Emitted {
                             task,
@@ -1058,7 +1285,6 @@ impl Coordinator {
                 }
             }
         }
-        Ok(())
     }
 
     /// Resolve a sink payload: the caller's copy if provided, else fetch
@@ -1107,6 +1333,14 @@ impl Coordinator {
         if n_links == 0 {
             self.plat.metrics.e2e(av.born, at);
             let payload = self.sink_payload_for(&av, sink_payload);
+            // deterministic commit log: the canonical sink order forensic
+            // replay diffs against (survives SinkBook drains, identical
+            // for every `workers` setting). Gated like the injection
+            // ledger: no provenance, no forensic record — and no
+            // unbounded growth on provenance-off deployments.
+            if self.plat.prov.enabled {
+                self.commit_log.push(SinkCommit { wire, at, content: av.content });
+            }
             let rec = Collected { at, av: (*av).clone(), payload };
             self.collected.push(wire, rec);
             return;
@@ -1247,6 +1481,30 @@ impl Coordinator {
             return None;
         }
         self.collected.get(wire).map(|v| v.as_slice())
+    }
+
+    /// The deterministic commit log of sink captures, commit order.
+    pub fn commit_log(&self) -> &[SinkCommit] {
+        &self.commit_log
+    }
+
+    /// Per-wire (commit time, content hash) sequences projected from the
+    /// deterministic commit log — the canonical shape forensic replay
+    /// diffs (see `breadboard::replay`). Unlike reading the
+    /// [`SinkBook`], this survives sink drains and is independent of
+    /// event-heap pop order: within an instant, entries follow the
+    /// wavefront's task-index commit order for every `workers` setting.
+    /// Empty when provenance was disabled at deploy — the log is gated
+    /// like the injection ledger, and forensic replay (the consumer)
+    /// already refuses to run without provenance.
+    pub fn sink_hash_sequences(&self) -> BTreeMap<String, Vec<(SimTime, ContentHash)>> {
+        let mut out: BTreeMap<String, Vec<(SimTime, ContentHash)>> = BTreeMap::new();
+        for c in &self.commit_log {
+            out.entry(self.graph.wires.name(c.wire).to_string())
+                .or_default()
+                .push((c.at, c.content));
+        }
+        out
     }
 
     /// Ghost-routing audit (§III-K "trust, but verify"): which tasks did a

@@ -290,11 +290,14 @@ fn service_lookup_recorded_for_forensics() {
     );
     c.set_code(
         "resolver",
-        Box::new(FnTask::new(|ctx, snap| {
-            let _ = snap;
-            let addr = ctx.lookup("dns", &Payload::Text("db".into()))?;
-            Ok(vec![Output::summary("out", addr)])
-        })),
+        Box::new(
+            FnTask::new(|ctx, snap| {
+                let _ = snap;
+                let addr = ctx.lookup("dns", &Payload::Text("db".into()))?;
+                Ok(vec![Output::summary("out", addr)])
+            })
+            .sequential(),
+        ),
     )
     .unwrap();
     c.inject("q", Payload::scalar(0.0), DataClass::Summary).unwrap();
@@ -615,6 +618,102 @@ fn deferred_emissions_publish_later() {
         SimDuration::millis(5),
         "memo replay preserves the emission defer"
     );
+}
+
+// ---------------------------------------------------------------------------
+// parallel wavefront scheduler invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn panicking_task_fails_only_its_firing() {
+    use crate::task::builtins::PortFn;
+    use crate::task::{PortIo, TaskCtx};
+    // two independent leaves share one wavefront; one panics every run.
+    // The panic is caught (on the worker when workers > 1), recorded as a
+    // task error, and the merged wavefront still commits the healthy
+    // firings — in both scheduler modes.
+    for workers in [1usize, 4] {
+        let spec = crate::spec::parse("[pk]\n(x) boom (bs)\n(x) fine (fs)\n").unwrap();
+        let cfg = DeployConfig { workers, ..Default::default() };
+        let mut c = Coordinator::deploy(&spec, cfg).unwrap();
+        c.set_code(
+            "boom",
+            Box::new(PortFn::new(|_ctx: &mut TaskCtx<'_>, _io: &mut PortIo<'_>| -> Result<()> {
+                panic!("kaboom")
+            })),
+        )
+        .unwrap();
+        for i in 0..3u64 {
+            c.inject_at(
+                "x",
+                Payload::scalar(i as f32),
+                DataClass::Summary,
+                RegionId::new(0),
+                SimTime::millis(i),
+            )
+            .unwrap();
+        }
+        c.run_until_idle();
+        assert_eq!(c.collected_count("fs"), 3, "healthy task unaffected (workers={workers})");
+        assert_eq!(c.collected_count("bs"), 0, "panicking task emitted nothing");
+        assert_eq!(c.plat.metrics.get("task_errors"), 3, "each firing failed alone");
+        let id = c.task_id("boom").unwrap();
+        assert!(
+            c.plat.prov.checkpoint_log(id).iter().any(|e| matches!(
+                &e.event,
+                CheckpointEvent::Remark(m) if m.contains("task panicked: kaboom")
+            )),
+            "panic surfaced as a task-error remark"
+        );
+        // the panicking agent can still run later firings (buffer reset)
+        assert_eq!(c.agent("fine").unwrap().runs, 3);
+    }
+}
+
+#[test]
+fn wavefront_commits_in_task_index_order() {
+    // one injection instant wakes three tasks; the commit log must list
+    // their sink captures in task-index order regardless of workers
+    for workers in [1usize, 4] {
+        let spec =
+            crate::spec::parse("[or]\n(x) alpha (sa)\n(x) beta (sb)\n(x) gamma (sc)\n").unwrap();
+        let cfg = DeployConfig { workers, ..Default::default() };
+        let mut c = Coordinator::deploy(&spec, cfg).unwrap();
+        c.inject("x", Payload::scalar(1.0), DataClass::Summary).unwrap();
+        c.run_until_idle();
+        let wires: Vec<&str> =
+            c.commit_log().iter().map(|sc| c.graph.wires.name(sc.wire)).collect();
+        assert_eq!(wires, vec!["sa", "sb", "sc"], "workers={workers}");
+    }
+}
+
+#[test]
+fn parallel_and_sequential_agree_on_ids_and_stamps() {
+    // the cheap in-tree twin of rust/tests/wavefront_determinism.rs: a
+    // fan-out wavefront must allocate identical AV ids and stamp counts
+    // under both schedulers
+    let run = |workers: usize| {
+        let spec = crate::spec::parse("[ag]\n(x) l0 (s0)\n(x) l1 (s1)\n(x) l2 (s2)\n").unwrap();
+        let cfg = DeployConfig { workers, ..Default::default() };
+        let mut c = Coordinator::deploy(&spec, cfg).unwrap();
+        for i in 0..5u64 {
+            c.inject_at(
+                "x",
+                Payload::scalar(i as f32),
+                DataClass::Summary,
+                RegionId::new(0),
+                SimTime::millis(i),
+            )
+            .unwrap();
+        }
+        c.run_until_idle();
+        let avs: Vec<String> = ["s0", "s1", "s2"]
+            .iter()
+            .flat_map(|w| c.collected[*w].iter().map(|r| format!("{:?}", r.av)))
+            .collect();
+        (avs, c.plat.prov.stamp_count, c.plat.metrics.task_runs)
+    };
+    assert_eq!(run(1), run(4));
 }
 
 impl Coordinator {

@@ -1,0 +1,134 @@
+//! The parallel half of the wavefront scheduler: execute one instant's
+//! ready, mutually independent task firings on a `std::thread::scope`
+//! worker pool.
+//!
+//! Safety/determinism model (see DESIGN.md §Perf notes):
+//!  * **Disjoint ownership** — each wavefront task's [`TaskAgent`] is
+//!    handed to exactly one worker as `&mut` (split out of the agent
+//!    vector), so agent-local state (snapshot engine aside — it was
+//!    drained in phase 1 — the dependent-local cache, memo, code state,
+//!    recycled emission buffer) mutates with no synchronization at all.
+//!  * **Frozen world** — workers read the platform through a `Sync`
+//!    [`WorldView`] (committed object store, WAN topology, the instant's
+//!    clock). Nothing a wavefront firing can read is written until the
+//!    commit phase: publications land strictly later in virtual time, so
+//!    same-instant firings are mutually independent by construction.
+//!  * **Recorded effects** — would-be platform mutations go to each
+//!    firing's [`EffectLog`](crate::task::effects::EffectLog); the
+//!    coordinator replays them in task-index order, drawing run/AV/object
+//!    ids from the shared dispensers there — which is why every
+//!    `workers` value allocates identical ids and stamps identical
+//!    provenance.
+//!  * **Memo interplay** — a firing whose recipe matches the agent's memo
+//!    (or an earlier firing of the same wavefront group) defers to the
+//!    commit phase, where the direct path resolves it exactly as
+//!    `workers = 1` would (the earlier firing's memoization must land
+//!    before the later one probes).
+//!
+//! Scheduling is work-stealing over an atomic cursor; it affects only
+//! *which thread* runs a group, never the committed order, so the pool
+//! needs no deterministic scheduler.
+
+use super::{Coordinator, TaskId};
+use crate::graph::WireTable;
+use crate::policy::Snapshot;
+use crate::task::effects::{PreparedFiring, WorldView};
+use crate::task::TaskAgent;
+use crate::util::ContentHash;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One wavefront member: a woken task, its extracted ready firings, and
+/// the pump-epilogue inputs (autoscale signal, poll re-arm flag).
+pub(crate) struct WaveGroup {
+    pub task: TaskId,
+    pub via_poll: bool,
+    pub queued: usize,
+    pub snaps: Vec<Snapshot>,
+}
+
+/// A unit of worker work: one group's agent (exclusively borrowed) plus
+/// its firings, tagged with the group's result slot.
+struct Job<'a> {
+    group_idx: usize,
+    agent: &'a mut TaskAgent,
+    snaps: Vec<Snapshot>,
+}
+
+/// Execute every busy group's firings on the worker pool. Returns one
+/// `Vec<PreparedFiring>` per group (empty for idle groups), indexed like
+/// `groups`; the caller commits them in group (= task-index) order.
+pub(super) fn execute_parallel(
+    coord: &mut Coordinator,
+    groups: &mut [WaveGroup],
+) -> Vec<Vec<PreparedFiring>> {
+    let Coordinator { agents, plat, graph, workers, .. } = coord;
+    let world = WorldView { store: &plat.store, net: &plat.net, now: plat.now };
+    let wires: &WireTable = &graph.wires;
+
+    // pluck each wavefront agent as a disjoint &mut out of the agent
+    // vector; iter_mut proves disjointness to the borrow checker
+    let mut slot_of: std::collections::HashMap<usize, usize> = groups
+        .iter()
+        .enumerate()
+        .filter(|(_, g)| !g.snaps.is_empty())
+        .map(|(gi, g)| (g.task.index(), gi))
+        .collect();
+    let mut jobs: Vec<Mutex<Option<Job<'_>>>> = Vec::with_capacity(slot_of.len());
+    for (i, agent) in agents.iter_mut().enumerate() {
+        if let Some(group_idx) = slot_of.remove(&i) {
+            let snaps = std::mem::take(&mut groups[group_idx].snaps);
+            jobs.push(Mutex::new(Some(Job { group_idx, agent, snaps })));
+        }
+    }
+    debug_assert!(slot_of.is_empty(), "every busy group maps to a deployed agent");
+
+    let results: Vec<Mutex<Vec<PreparedFiring>>> =
+        groups.iter().map(|_| Mutex::new(Vec::new())).collect();
+    let cursor = AtomicUsize::new(0);
+    let n_workers = (*workers).min(jobs.len()).max(1);
+    std::thread::scope(|s| {
+        for _ in 0..n_workers {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::SeqCst);
+                if i >= jobs.len() {
+                    break;
+                }
+                let Job { group_idx, agent, snaps } =
+                    jobs[i].lock().unwrap().take().expect("each job is taken once");
+                let out = prepare_group(agent, wires, &world, snaps);
+                *results[group_idx].lock().unwrap() = out;
+            });
+        }
+    });
+    results.into_iter().map(|m| m.into_inner().unwrap()).collect()
+}
+
+/// Run one task's wavefront firings in order on this worker. Memo hits,
+/// recipes already attempted earlier in the group, and
+/// declared-sequential code defer to the commit phase (always
+/// behavior-preserving: deferral *is* the `workers = 1` path).
+fn prepare_group(
+    agent: &mut TaskAgent,
+    wires: &WireTable,
+    world: &WorldView<'_>,
+    snaps: Vec<Snapshot>,
+) -> Vec<PreparedFiring> {
+    let mut out = Vec::with_capacity(snaps.len());
+    if !agent.code.parallel_safe() {
+        out.extend(snaps.into_iter().map(PreparedFiring::Deferred));
+        return out;
+    }
+    let mut attempted: Vec<ContentHash> = Vec::new();
+    for snap in snaps {
+        let recipe = agent.recipe(&snap);
+        let dup = attempted.contains(&recipe);
+        attempted.push(recipe);
+        if !snap.ghost && (dup || agent.memo_valid_in(world.store, recipe)) {
+            out.push(PreparedFiring::Deferred(snap));
+            continue;
+        }
+        out.push(agent.execute_recorded(world, wires, snap, recipe));
+    }
+    out
+}

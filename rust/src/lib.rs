@@ -49,7 +49,7 @@ pub mod prelude {
     pub use crate::av::{DataClass, Payload};
     pub use crate::breadboard::{Breadboard, TapSpec};
     pub use crate::bus::NotifyMode;
-    pub use crate::coordinator::{Collected, Coordinator, DeployConfig};
+    pub use crate::coordinator::{default_workers, Collected, Coordinator, DeployConfig, SinkCommit};
     pub use crate::net::{demo_topology, WanLink, WanTopology};
     pub use crate::platform::{PlacementStrategy, Service};
     pub use crate::policy::{BufferSpec, Snapshot, SnapshotPolicy};

@@ -401,14 +401,18 @@ fn cmd_demo() -> Result<()> {
     let predict = pipe.task("predict")?;
     predict.plug(
         &mut pipe,
-        Box::new(PortFn::new(|ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
-            let label = ctx.lookup("lookup", &Payload::Text("class".into()))?;
-            let n = io.inputs.all().count() as f32;
-            ctx.remark(&format!("classified {n} windows as {label:?}"));
-            let result = io.out(0)?;
-            io.emitter.emit(result, Payload::scalar(n));
-            Ok(())
-        })),
+        Box::new(
+            // service lookups need the live directory: sequential-only
+            PortFn::new(|ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
+                let label = ctx.lookup("lookup", &Payload::Text("class".into()))?;
+                let n = io.inputs.all().count() as f32;
+                ctx.remark(&format!("classified {n} windows as {label:?}"));
+                let result = io.out(0)?;
+                io.emitter.emit(result, Payload::scalar(n));
+                Ok(())
+            })
+            .sequential(),
+        ),
     )?;
     let mut r = rng(3);
     for i in 0..24u64 {

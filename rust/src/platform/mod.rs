@@ -94,11 +94,36 @@ impl Platform {
         parents: &[AvId],
         born: SimTime,
     ) -> (AnnotatedValue, crate::util::SimDuration) {
+        let content = payload.content_hash();
+        self.mint_av_prehashed(
+            payload, content, source_task, run, version, link, region, class, seq, parents, born,
+        )
+    }
+
+    /// [`mint_av`](Self::mint_av) with the payload's content hash already
+    /// computed — wavefront workers hash emissions off the commit path,
+    /// so the sequential commit only stores and stamps (§Perf). `content`
+    /// must be `payload.content_hash()`; passing anything else corrupts
+    /// make-style staleness detection.
+    #[allow(clippy::too_many_arguments)]
+    pub fn mint_av_prehashed(
+        &mut self,
+        payload: Payload,
+        content: crate::util::ContentHash,
+        source_task: TaskId,
+        run: RunId,
+        version: u32,
+        link: LinkId,
+        region: RegionId,
+        class: DataClass,
+        seq: u64,
+        parents: &[AvId],
+        born: SimTime,
+    ) -> (AnnotatedValue, crate::util::SimDuration) {
         let ghost = payload.is_ghost();
         let size_bytes = payload.size_bytes();
-        let content = payload.content_hash();
         let tier = self.storage_tier();
-        let (object, lat) = self.store.put(payload, region, tier, class, self.now);
+        let (object, lat) = self.store.put_prehashed(payload, content, region, tier, class, self.now);
         let av = AnnotatedValue {
             id: self.next_av_id(),
             source_task,

@@ -20,7 +20,7 @@
 use crate::av::AnnotatedValue;
 use crate::util::{SimDuration, SimTime};
 use std::collections::VecDeque;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Task-level aggregation policy across inputs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -81,7 +81,7 @@ impl BufferSpec {
 #[derive(Clone, Debug)]
 pub struct InputBuffer {
     /// Port name; refcounted so snapshot assembly is allocation-free (§Perf).
-    pub name: Rc<str>,
+    pub name: Arc<str>,
     pub spec: BufferSpec,
     /// Last `spec.count` values (the window), oldest first.
     window: VecDeque<AnnotatedValue>,
@@ -93,7 +93,7 @@ pub struct InputBuffer {
 
 impl InputBuffer {
     pub fn new(name: &str, spec: BufferSpec) -> Self {
-        Self { name: Rc::from(name), spec, window: VecDeque::new(), fresh: 0, received: 0 }
+        Self { name: Arc::from(name), spec, window: VecDeque::new(), fresh: 0, received: 0 }
     }
 
     pub fn push(&mut self, av: AnnotatedValue) {
@@ -142,7 +142,7 @@ impl InputBuffer {
 pub struct Snapshot {
     /// (input name, values oldest-first). For Merge there is one synthetic
     /// input named `merged`.
-    pub inputs: Vec<(Rc<str>, Vec<AnnotatedValue>)>,
+    pub inputs: Vec<(Arc<str>, Vec<AnnotatedValue>)>,
     /// Earliest born timestamp among members (e2e latency tracking).
     pub born: SimTime,
     /// True if any member is a ghost (the whole run becomes a ghost run).
@@ -160,7 +160,7 @@ impl Snapshot {
 
     /// Assemble a snapshot from parts; `born` is the oldest member's birth
     /// time (or `fallback_born` for an empty/source snapshot).
-    pub fn new(inputs: Vec<(Rc<str>, Vec<AnnotatedValue>)>, fallback_born: SimTime) -> Self {
+    pub fn new(inputs: Vec<(Arc<str>, Vec<AnnotatedValue>)>, fallback_born: SimTime) -> Self {
         let born = inputs
             .iter()
             .flat_map(|(_, avs)| avs.iter().map(|a| a.born))
@@ -170,7 +170,7 @@ impl Snapshot {
         Self { inputs, born, ghost }
     }
 
-    fn from_parts(inputs: Vec<(Rc<str>, Vec<AnnotatedValue>)>) -> Self {
+    fn from_parts(inputs: Vec<(Arc<str>, Vec<AnnotatedValue>)>) -> Self {
         Self::new(inputs, SimTime::ZERO)
     }
 }
@@ -333,7 +333,7 @@ impl SnapshotEngine {
                         None => break,
                     }
                 }
-                Snapshot::from_parts(vec![(Rc::from("merged"), merged)])
+                Snapshot::from_parts(vec![(Arc::from("merged"), merged)])
             }
         };
         self.rate.fired(now);

@@ -16,7 +16,8 @@ use crate::util::Json;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Shape+dtype of one executable input/output, from the manifest.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -96,8 +97,17 @@ pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactMeta>> {
 pub struct Executable {
     pub meta: ArtifactMeta,
     exe: xla::PjRtLoadedExecutable,
-    /// executions performed (metrics)
-    pub runs: std::cell::Cell<u64>,
+    /// executions performed (metrics). Atomic (not `Cell`) so executables
+    /// can be shared across the wavefront scheduler's worker threads —
+    /// `Arc<Executable>` must be `Send`, which needs `Executable: Sync`.
+    pub runs: AtomicU64,
+}
+
+impl Executable {
+    /// Executions performed so far (metrics read).
+    pub fn runs(&self) -> u64 {
+        self.runs.load(Ordering::Relaxed)
+    }
 }
 
 impl Executable {
@@ -138,7 +148,7 @@ impl Executable {
                 self.meta.outputs.len()
             );
         }
-        self.runs.set(self.runs.get() + 1);
+        self.runs.fetch_add(1, Ordering::Relaxed);
         parts
             .into_iter()
             .zip(&self.meta.outputs)
@@ -158,7 +168,7 @@ pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Vec<ArtifactMeta>,
-    compiled: HashMap<String, Rc<Executable>>,
+    compiled: HashMap<String, Arc<Executable>>,
 }
 
 impl Runtime {
@@ -184,7 +194,7 @@ impl Runtime {
     }
 
     /// Load (compile-once) an artifact by name.
-    pub fn load(&mut self, name: &str) -> Result<Rc<Executable>> {
+    pub fn load(&mut self, name: &str) -> Result<Arc<Executable>> {
         if let Some(e) = self.compiled.get(name) {
             return Ok(e.clone());
         }
@@ -197,7 +207,7 @@ impl Runtime {
         let proto = xla::HloModuleProto::from_text_file(self.dir.join(&meta.file))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp)?;
-        let rc = Rc::new(Executable { meta, exe, runs: std::cell::Cell::new(0) });
+        let rc = Arc::new(Executable { meta, exe, runs: AtomicU64::new(0) });
         self.compiled.insert(name.to_string(), rc.clone());
         Ok(rc)
     }

@@ -152,11 +152,26 @@ impl ObjectStore {
         class: DataClass,
         now: SimTime,
     ) -> (ObjectId, SimDuration) {
+        let content = payload.content_hash();
+        self.put_prehashed(payload, content, region, tier, class, now)
+    }
+
+    /// [`put`](Self::put) with the content hash already computed (the
+    /// wavefront workers hash emissions off the commit path, §Perf).
+    /// `content` must be `payload.content_hash()`.
+    pub fn put_prehashed(
+        &mut self,
+        payload: Payload,
+        content: ContentHash,
+        region: RegionId,
+        tier: StorageTier,
+        class: DataClass,
+        now: SimTime,
+    ) -> (ObjectId, SimDuration) {
         let id = ObjectId::new(self.ids.next_raw());
         let bytes = payload.transfer_bytes(); // ghosts: 0 — no storage accounting
         let lat = self.cfg(region).latency(tier, bytes);
         self.total_bytes += bytes;
-        let content = payload.content_hash();
         self.objects.insert(
             id,
             StoredObject { payload, region, tier, class, created: now, content, reads: 0 },
@@ -178,6 +193,28 @@ impl ObjectStore {
         let o = self.objects.get_mut(&id)?;
         o.reads += 1;
         Some((&*o, lat))
+    }
+
+    /// Plan a read without performing it: the object plus the latency a
+    /// [`get`](Self::get) would charge, moving no counters. The wavefront
+    /// workers' read path — accounting is applied at commit through
+    /// [`record_get`](Self::record_get) so `workers = N` moves the same
+    /// counters in the same order as `workers = 1`.
+    pub fn plan_get(&self, id: ObjectId) -> Option<(&StoredObject, SimDuration)> {
+        let o = self.objects.get(&id)?;
+        let lat = self.cfg(o.region).latency(o.tier, o.payload.transfer_bytes());
+        Some((o, lat))
+    }
+
+    /// Commit-side accounting for a read planned with
+    /// [`plan_get`](Self::plan_get). Mirrors [`get`](Self::get): the
+    /// `gets` counter always moves (even for a missing object), the
+    /// per-object read count only when the object exists.
+    pub fn record_get(&mut self, id: ObjectId) {
+        self.gets += 1;
+        if let Some(o) = self.objects.get_mut(&id) {
+            o.reads += 1;
+        }
     }
 
     /// Metadata-only peek (no latency charged, no read recorded).

@@ -19,18 +19,18 @@ use anyhow::{anyhow, Result};
 /// Replicate every input AV to one output wire (the paper's "trivial"
 /// data replication/distribution case), preserving each value's class.
 pub struct PassThrough {
-    out: std::rc::Rc<str>,
+    out: std::sync::Arc<str>,
     port: Option<OutPort>,
     pub version: u32,
 }
 
 impl PassThrough {
     pub fn new(out: &str) -> Self {
-        Self { out: std::rc::Rc::from(out), port: None, version: 1 }
+        Self { out: std::sync::Arc::from(out), port: None, version: 1 }
     }
 
     pub fn versioned(out: &str, version: u32) -> Self {
-        Self { out: std::rc::Rc::from(out), port: None, version }
+        Self { out: std::sync::Arc::from(out), port: None, version }
     }
 }
 
@@ -65,13 +65,13 @@ impl TaskCode for PassThrough {
 /// `edge_summarize` artifact; used where no Runtime is wired (and as the
 /// oracle in integration tests).
 pub struct SummarizeRs {
-    out: std::rc::Rc<str>,
+    out: std::sync::Arc<str>,
     port: Option<OutPort>,
 }
 
 impl SummarizeRs {
     pub fn new(out: &str) -> Self {
-        Self { out: std::rc::Rc::from(out), port: None }
+        Self { out: std::sync::Arc::from(out), port: None }
     }
 
     /// The sketch function itself (shared with tests/benches).
@@ -123,14 +123,14 @@ impl TaskCode for SummarizeRs {
 /// Scale every tensor element by a constant (the "matrix operations" user
 /// case in miniature), preserving each value's class.
 pub struct ScaleBy {
-    out: std::rc::Rc<str>,
+    out: std::sync::Arc<str>,
     port: Option<OutPort>,
     pub factor: f32,
 }
 
 impl ScaleBy {
     pub fn new(out: &str, factor: f32) -> Self {
-        Self { out: std::rc::Rc::from(out), port: None, factor }
+        Self { out: std::sync::Arc::from(out), port: None, factor }
     }
 }
 
@@ -155,7 +155,7 @@ impl TaskCode for ScaleBy {
 /// Emit only when a scalar statistic crosses a threshold (edge screening:
 /// "most of which are junk and thus have no business travelling").
 pub struct ThresholdGate {
-    out: std::rc::Rc<str>,
+    out: std::sync::Arc<str>,
     port: Option<OutPort>,
     pub threshold: f32,
     pub passed: u64,
@@ -164,7 +164,7 @@ pub struct ThresholdGate {
 
 impl ThresholdGate {
     pub fn new(out: &str, threshold: f32) -> Self {
-        Self { out: std::rc::Rc::from(out), port: None, threshold, passed: 0, dropped: 0 }
+        Self { out: std::sync::Arc::from(out), port: None, threshold, passed: 0, dropped: 0 }
     }
 }
 
@@ -195,28 +195,39 @@ impl TaskCode for ThresholdGate {
 /// Wrap a legacy `Vec<Output>` closure as user code — the un-migrated
 /// breadboarding shape. Runs through the name-resolution adapter path
 /// (each distinct returned wire name resolved once per agent); new code
-/// should prefer [`PortFn`].
+/// should prefer [`PortFn`]. Closures must be `Send` (wavefront workers
+/// may execute them); mark closures that need the live platform —
+/// `ctx.lookup`, `ctx.platform` — with [`FnTask::sequential`] so they
+/// skip the parallel attempt and run in the deterministic commit phase.
 pub struct FnTask<F> {
     pub f: F,
     pub version: u32,
+    parallel_safe: bool,
 }
 
 impl<F> FnTask<F>
 where
-    F: FnMut(&mut TaskCtx<'_>, &Snapshot) -> Result<Vec<Output>>,
+    F: FnMut(&mut TaskCtx<'_>, &Snapshot) -> Result<Vec<Output>> + Send,
 {
     pub fn new(f: F) -> Self {
-        Self { f, version: 1 }
+        Self { f, version: 1, parallel_safe: true }
     }
 
     pub fn versioned(f: F, version: u32) -> Self {
-        Self { f, version }
+        Self { f, version, parallel_safe: true }
+    }
+
+    /// Declare this closure sequential-only (service lookups, platform
+    /// access, or restart-sensitive captured state).
+    pub fn sequential(mut self) -> Self {
+        self.parallel_safe = false;
+        self
     }
 }
 
 impl<F> TaskCode for FnTask<F>
 where
-    F: FnMut(&mut TaskCtx<'_>, &Snapshot) -> Result<Vec<Output>>,
+    F: FnMut(&mut TaskCtx<'_>, &Snapshot) -> Result<Vec<Output>> + Send,
 {
     fn version(&self) -> u32 {
         self.version
@@ -226,32 +237,46 @@ where
         let outs = (self.f)(ctx, io.inputs.snapshot())?;
         io.emitter.emit_outputs(outs)
     }
+
+    fn parallel_safe(&self) -> bool {
+        self.parallel_safe
+    }
 }
 
 /// Wrap a port-native closure as task code — the breadboarding path for
 /// examples/tests on the [`TaskCode`] API: read through `io.inputs`,
 /// write through `io.emitter`, resolve ports by index (`io.out(0)`).
+/// Closures must be `Send`; see [`PortFn::sequential`] for code that
+/// needs the live platform.
 pub struct PortFn<F> {
     pub f: F,
     pub version: u32,
+    parallel_safe: bool,
 }
 
 impl<F> PortFn<F>
 where
-    F: FnMut(&mut TaskCtx<'_>, &mut PortIo<'_>) -> Result<()>,
+    F: FnMut(&mut TaskCtx<'_>, &mut PortIo<'_>) -> Result<()> + Send,
 {
     pub fn new(f: F) -> Self {
-        Self { f, version: 1 }
+        Self { f, version: 1, parallel_safe: true }
     }
 
     pub fn versioned(f: F, version: u32) -> Self {
-        Self { f, version }
+        Self { f, version, parallel_safe: true }
+    }
+
+    /// Declare this closure sequential-only (service lookups, platform
+    /// access, or restart-sensitive captured state).
+    pub fn sequential(mut self) -> Self {
+        self.parallel_safe = false;
+        self
     }
 }
 
 impl<F> TaskCode for PortFn<F>
 where
-    F: FnMut(&mut TaskCtx<'_>, &mut PortIo<'_>) -> Result<()>,
+    F: FnMut(&mut TaskCtx<'_>, &mut PortIo<'_>) -> Result<()> + Send,
 {
     fn version(&self) -> u32 {
         self.version
@@ -260,18 +285,22 @@ where
     fn run(&mut self, ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>) -> Result<()> {
         (self.f)(ctx, io)
     }
+
+    fn parallel_safe(&self) -> bool {
+        self.parallel_safe
+    }
 }
 
 /// Merge sketches from multiple regions: sum of (4, D) moment sketches is
 /// the sketch of the union — the aggregation step of fig. 11's telco case.
 pub struct SketchMerge {
-    out: std::rc::Rc<str>,
+    out: std::sync::Arc<str>,
     port: Option<OutPort>,
 }
 
 impl SketchMerge {
     pub fn new(out: &str) -> Self {
-        Self { out: std::rc::Rc::from(out), port: None }
+        Self { out: std::sync::Arc::from(out), port: None }
     }
 }
 

@@ -14,7 +14,7 @@ use crate::policy::Snapshot;
 use crate::runtime::Executable;
 use crate::util::SimDuration;
 use anyhow::{anyhow, bail, Result};
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Stack a port's fetched payloads into one tensor: one AV passes through;
 /// k AVs of shape (1, D) (or (D,)) stack to (k, D).
@@ -47,7 +47,7 @@ pub fn stack_port(payloads: &[Payload]) -> Result<Payload> {
 /// set) writes output indices back into `state` (e.g. a train step's
 /// updated parameters).
 pub struct PjrtTask {
-    pub exe: Rc<Executable>,
+    pub exe: Arc<Executable>,
     pub state: Vec<Payload>,
     /// (output index, wire, class) — the configured mapping; resolved
     /// into `bound` when the task is installed.
@@ -64,7 +64,7 @@ pub struct PjrtTask {
 }
 
 impl PjrtTask {
-    pub fn new(exe: Rc<Executable>, out_wire: &str) -> Self {
+    pub fn new(exe: Arc<Executable>, out_wire: &str) -> Self {
         let n_out = exe.meta.outputs.len();
         let mut emit: Vec<(usize, String, DataClass)> =
             vec![(0, out_wire.to_string(), DataClass::Summary)];
@@ -240,14 +240,14 @@ pub fn unpack_params(dims: &MlpDims, packed: &Payload) -> Result<Vec<Payload>> {
 /// parameter deployment bumps the service version — provenance then shows
 /// exactly which model classified which image.
 pub struct ModelServer {
-    pub exe: Rc<Executable>,
+    pub exe: Arc<Executable>,
     pub dims: MlpDims,
     params: Vec<Payload>,
     version: u32,
 }
 
 impl ModelServer {
-    pub fn new(exe: Rc<Executable>, dims: MlpDims, params: Vec<Payload>) -> Self {
+    pub fn new(exe: Arc<Executable>, dims: MlpDims, params: Vec<Payload>) -> Self {
         Self { exe, dims, params, version: 1 }
     }
 }

@@ -1,0 +1,198 @@
+//! Recorded platform effects — the worker-side half of the parallel
+//! wavefront scheduler (DESIGN.md §Perf notes).
+//!
+//! When task firings execute on wavefront worker threads, they must not
+//! touch the shared [`Platform`]: the provenance registry, metrics sink
+//! and storage counters are single-writer state whose *mutation order*
+//! the byte-identical-provenance contract pins to sequential execution.
+//! Instead, the recording [`TaskCtx`](super::TaskCtx) writes every
+//! would-be mutation into an [`EffectLog`] — in exactly the order the
+//! direct (`workers = 1`) path would have performed it — and the
+//! coordinator's deterministic commit replays the log with full platform
+//! access, in canonical task-index order. Per-registry mutation order is
+//! therefore identical to sequential execution; the seq-vs-par property
+//! test (`rust/tests/wavefront_determinism.rs`) checks the mirror.
+//!
+//! Run ids are *not* known on the worker (they are drawn from the shared
+//! dispenser at commit, in canonical order, so `workers = 4` allocates
+//! the same ids as `workers = 1`); effects that reference the run carry
+//! only their payload here and are stamped with the real id at
+//! [`EffectLog::apply`] time.
+
+use crate::av::Payload;
+use crate::metrics::NetTier;
+use crate::net::WanTopology;
+use crate::platform::Platform;
+use crate::provenance::{CheckpointEvent, Stamp};
+use crate::storage::ObjectStore;
+use crate::task::Emission;
+use crate::policy::Snapshot;
+use crate::util::{AvId, ContentHash, ObjectId, RegionId, RunId, SimDuration, SimTime, TaskId};
+use anyhow::Result;
+
+/// The read-only world a wavefront worker executes against: committed
+/// storage, the WAN topology, and the frozen virtual instant. Everything
+/// here is `Sync` by construction — no interior mutability crosses the
+/// thread boundary.
+pub(crate) struct WorldView<'a> {
+    pub store: &'a ObjectStore,
+    pub net: &'a WanTopology,
+    pub now: SimTime,
+}
+
+/// One deferred platform mutation, recorded in execution order.
+pub(crate) enum Effect {
+    /// `Stamp::Consumed` on an input AV (run id filled at commit).
+    Consumed { av: AvId },
+    /// Checkpoint-log entry (run id filled at commit).
+    Checkpoint(CheckpointEvent),
+    /// `Stamp::CacheServed` after a dependent-local cache hit.
+    CacheServed { av: AvId },
+    /// Bytes-moved accounting for a fetch (LAN or WAN tier).
+    MovedBytes { tier: NetTier, bytes: u64 },
+    /// `Stamp::Transferred` after a cross-region fetch.
+    Transferred { av: AvId, from: RegionId, to: RegionId, bytes: u64 },
+    /// Storage read accounting: the `gets` counter always moves (the
+    /// direct path bumps it before discovering a missing object); the
+    /// latency histogram records only on a successful read.
+    StoreGet { object: ObjectId, lat: Option<SimDuration> },
+    CacheHit,
+    CacheMiss,
+    /// Named metrics counter bump (`anomalies`, …).
+    Bump(&'static str),
+    /// `Metrics::ran_task` at the end of a successful run.
+    RanTask { ghost: bool },
+}
+
+/// The ordered mutation tape of one recorded firing.
+#[derive(Default)]
+pub(crate) struct EffectLog {
+    effects: Vec<Effect>,
+    /// Set the moment a recording context refuses a direct-only API
+    /// (lookup / platform / update_service). Checked *after* the run
+    /// returns, independently of the run's Result: user code that
+    /// catches the needs-sequential error and carries on (e.g.
+    /// `ctx.lookup(..).unwrap_or(default)`) would otherwise commit a
+    /// divergent recorded result — the poison guarantees the firing is
+    /// rolled back and re-run sequentially instead.
+    needs_direct: bool,
+}
+
+impl EffectLog {
+    #[inline]
+    pub(crate) fn push(&mut self, e: Effect) {
+        self.effects.push(e);
+    }
+
+    /// Mark this recording as requiring direct execution (see field doc).
+    pub(crate) fn poison(&mut self) {
+        self.needs_direct = true;
+    }
+
+    pub(crate) fn needs_direct(&self) -> bool {
+        self.needs_direct
+    }
+
+    /// Replay the tape against the live platform — the commit half.
+    /// `run` is the id the commit drew for this firing; `version` and
+    /// `region` were captured when the worker executed.
+    pub(crate) fn apply(
+        self,
+        plat: &mut Platform,
+        task: TaskId,
+        run: RunId,
+        version: u32,
+        region: RegionId,
+    ) {
+        let now = plat.now;
+        for e in self.effects {
+            match e {
+                Effect::Consumed { av } => {
+                    plat.prov.stamp(av, now, Stamp::Consumed { task, run, version });
+                }
+                Effect::Checkpoint(event) => plat.prov.checkpoint(task, run, now, event),
+                Effect::CacheServed { av } => {
+                    plat.prov.stamp(av, now, Stamp::CacheServed { region });
+                }
+                Effect::MovedBytes { tier, bytes } => plat.metrics.moved(tier, bytes),
+                Effect::Transferred { av, from, to, bytes } => {
+                    plat.prov.stamp(av, now, Stamp::Transferred { from, to, bytes });
+                }
+                Effect::StoreGet { object, lat } => {
+                    plat.store.record_get(object);
+                    if let Some(lat) = lat {
+                        plat.metrics.storage_latency.record(lat);
+                    }
+                }
+                Effect::CacheHit => plat.metrics.cache_hits += 1,
+                Effect::CacheMiss => plat.metrics.cache_misses += 1,
+                Effect::Bump(key) => plat.metrics.bump(key),
+                Effect::RanTask { ghost } => plat.metrics.ran_task(ghost),
+            }
+        }
+    }
+}
+
+/// What the wavefront scheduler gets back for one firing.
+pub(crate) enum PreparedFiring {
+    /// Execute at commit with direct platform access: memo hits,
+    /// duplicate recipes within the wavefront (the earlier firing's
+    /// memoization must land first), code declared `parallel_safe() ==
+    /// false`, and sentinel fallbacks all take this path — it is exactly
+    /// the `workers = 1` path, so deferral is always behavior-preserving.
+    Deferred(Snapshot),
+    /// Executed on a worker: commit replays the effect tape, then
+    /// publishes the emissions.
+    Recorded(RecordedRun),
+}
+
+/// A worker-executed firing, ready to commit.
+pub(crate) struct RecordedRun {
+    pub recipe: ContentHash,
+    pub parents: Vec<AvId>,
+    pub born: SimTime,
+    pub version: u32,
+    pub region: RegionId,
+    pub fx: EffectLog,
+    /// `Err` is a task error (including caught panics): commit replays
+    /// the partial tape — the direct path records those effects before
+    /// erroring too — then runs the standard error bookkeeping.
+    pub body: Result<RecordedBody>,
+}
+
+/// The successful half of a recorded run.
+pub(crate) struct RecordedBody {
+    pub emissions: Vec<Emission>,
+    /// Payload content hashes, one per emission, computed on the worker
+    /// so the sequential commit never hashes a payload (§Perf).
+    pub hashes: Vec<ContentHash>,
+    pub cost: SimDuration,
+    pub ghost: bool,
+}
+
+/// Marker embedded in the error a recording context returns for
+/// operations that need the live platform (service lookups, service
+/// updates, raw platform access). The scheduler detects it, rolls the
+/// agent back, and re-runs the firing in the deterministic commit phase
+/// with direct access. Detection is by message (the vendored `anyhow`
+/// shim flattens errors to strings), so context-wrapping the error does
+/// not defeat the fallback.
+pub(crate) const NEEDS_SEQUENTIAL: &str = "koalja::needs-sequential";
+
+pub(crate) fn needs_sequential(op: &str) -> anyhow::Error {
+    anyhow::anyhow!(
+        "{NEEDS_SEQUENTIAL}: {op} requires direct platform access; the firing will be \
+         re-run in the deterministic commit phase (implement parallel_safe() = false on \
+         the task code to skip the parallel attempt entirely)"
+    )
+}
+
+pub(crate) fn is_needs_sequential(e: &anyhow::Error) -> bool {
+    e.to_string().contains(NEEDS_SEQUENTIAL)
+}
+
+/// The ghost-emission payload helper shared by the direct and recorded
+/// ghost paths (one pretend-sized emission per declared output port).
+pub(crate) fn ghost_payload(consumed_bytes: u64) -> Payload {
+    Payload::Ghost { pretend_bytes: consumed_bytes.max(1) }
+}

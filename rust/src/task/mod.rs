@@ -20,42 +20,49 @@
 
 pub mod builtins;
 pub mod compute;
+pub(crate) mod effects;
 pub mod ports;
 
 pub use ports::{Emission, Emitter, InPort, Inputs, NameCache, OutPort, PortIo, PortMap, Ports};
 
+use effects::{
+    ghost_payload, is_needs_sequential, needs_sequential, Effect, EffectLog, PreparedFiring,
+    RecordedBody, RecordedRun, WorldView,
+};
+
 use crate::av::{AnnotatedValue, DataClass, Payload};
 use crate::bus::NotifyMode;
 use crate::graph::WireTable;
+use crate::metrics::NetTier;
 use crate::platform::Platform;
 use crate::policy::{Snapshot, SnapshotEngine};
 use crate::provenance::{CheckpointEvent, Stamp};
 use crate::spec::TaskSpec;
-use crate::storage::{CacheManager, PurgePolicy};
+use crate::storage::{CacheManager, ObjectStore, PurgePolicy};
 use crate::util::hash::FastMap;
-use crate::util::{ContentHash, ObjectId, RegionId, RunId, SimDuration, SimTime, TaskId, WireId};
+use crate::util::{AvId, ContentHash, ObjectId, RegionId, RunId, SimDuration, SimTime, TaskId, WireId};
 use anyhow::{anyhow, Result};
 
 /// One produced output: wire name, payload, sovereignty class.
 #[derive(Clone, Debug)]
 pub struct Output {
     /// Refcounted so long-lived user code cloning a held name is free (§Perf).
-    pub wire: std::rc::Rc<str>,
+    pub wire: std::sync::Arc<str>,
     pub payload: Payload,
     pub class: DataClass,
 }
 
 impl Output {
-    pub fn new(wire: impl Into<std::rc::Rc<str>>, payload: Payload, class: DataClass) -> Self {
+    pub fn new(wire: impl Into<std::sync::Arc<str>>, payload: Payload, class: DataClass) -> Self {
         Self { wire: wire.into(), payload, class }
     }
 
     pub fn summary(wire: &str, payload: Payload) -> Self {
-        Self { wire: std::rc::Rc::from(wire), payload, class: DataClass::Summary }
+        Self { wire: std::sync::Arc::from(wire), payload, class: DataClass::Summary }
     }
 
     pub fn raw(wire: &str, payload: Payload) -> Self {
-        Self { wire: std::rc::Rc::from(wire), payload, class: DataClass::Raw }
+        Self { wire: std::sync::Arc::from(wire), payload, class: DataClass::Raw }
     }
 }
 
@@ -65,7 +72,11 @@ impl Output {
 /// [`run`](TaskCode::run) reads through the port-indexed
 /// [`Inputs`] view and writes through the [`Emitter`], never touching a
 /// wire name and never allocating an output `Vec` (§Perf).
-pub trait TaskCode {
+///
+/// `Send` is a supertrait: the parallel wavefront scheduler executes
+/// mutually independent firings on worker threads, each worker owning
+/// its task's agent (code included) exclusively for the wavefront.
+pub trait TaskCode: Send {
     /// Software version — provenance records it on every artifact; bumping
     /// it invalidates memoized results (§III-J "Software Updates").
     fn version(&self) -> u32 {
@@ -89,14 +100,31 @@ pub trait TaskCode {
     fn compute_cost(&self, input_bytes: u64) -> SimDuration {
         SimDuration::micros(200 + input_bytes / 512)
     }
+
+    /// May this code execute on a wavefront worker thread? Default yes.
+    /// Return `false` when `run` needs the live platform — service
+    /// lookups ([`TaskCtx::lookup`]), service updates, or
+    /// [`TaskCtx::platform`] — or keeps internal mutable state that a
+    /// restarted run would double-apply. Declared-sequential code always
+    /// executes in the deterministic commit phase with direct platform
+    /// access, exactly like `workers = 1`. (Undeclared code that touches
+    /// those APIs on a worker is rolled back and re-run sequentially —
+    /// agent state is restored, but any internal `&mut self` state the
+    /// aborted attempt mutated is not, so stateful service users MUST
+    /// declare themselves sequential rather than rely on the fallback.)
+    fn parallel_safe(&self) -> bool {
+        true
+    }
 }
 
 /// The legacy plugin trait: return wire *names*. Still supported — wrap
 /// implementations in [`LegacyCode`] to install them; the adapter resolves
 /// returned names once per distinct name (memoized per agent) instead of
 /// letting the coordinator re-resolve every publication. New code should
-/// implement [`TaskCode`] and emit on ports.
-pub trait UserCode {
+/// implement [`TaskCode`] and emit on ports. `Send` for the same reason
+/// as [`TaskCode`]: the adapter carries implementations onto worker
+/// threads.
+pub trait UserCode: Send {
     /// Software version — provenance records it on every artifact; bumping
     /// it invalidates memoized results (§III-J "Software Updates").
     fn version(&self) -> u32 {
@@ -112,6 +140,11 @@ pub trait UserCode {
     fn compute_cost(&self, input_bytes: u64) -> SimDuration {
         SimDuration::micros(200 + input_bytes / 512)
     }
+
+    /// See [`TaskCode::parallel_safe`]; forwarded by the adapter.
+    fn parallel_safe(&self) -> bool {
+        true
+    }
 }
 
 impl UserCode for Box<dyn UserCode> {
@@ -125,6 +158,10 @@ impl UserCode for Box<dyn UserCode> {
 
     fn compute_cost(&self, input_bytes: u64) -> SimDuration {
         (**self).compute_cost(input_bytes)
+    }
+
+    fn parallel_safe(&self) -> bool {
+        (**self).parallel_safe()
     }
 }
 
@@ -159,15 +196,36 @@ impl<U: UserCode> TaskCode for LegacyCode<U> {
     fn compute_cost(&self, input_bytes: u64) -> SimDuration {
         self.0.compute_cost(input_bytes)
     }
+
+    fn parallel_safe(&self) -> bool {
+        self.0.parallel_safe()
+    }
 }
 
-/// What user code sees of the platform.
+/// How a [`TaskCtx`] reaches the world: the direct `&mut Platform` of
+/// sequential execution (`workers = 1`, make-mode demand, the commit
+/// phase), or the recording mode a wavefront worker runs under — a
+/// read-only [`WorldView`] plus the [`EffectLog`] the deterministic
+/// commit replays.
+enum CtxAccess<'a> {
+    Direct(&'a mut Platform),
+    Recorded { world: &'a WorldView<'a>, fx: &'a mut EffectLog },
+}
+
+/// What user code sees of the platform. The platform itself is behind
+/// [`TaskCtx::platform`] (direct execution only) so the same `run` body
+/// works unchanged on a wavefront worker thread, where its platform
+/// mutations are recorded and replayed in deterministic commit order.
 pub struct TaskCtx<'a> {
-    pub plat: &'a mut Platform,
+    access: CtxAccess<'a>,
     pub cache: &'a mut CacheManager,
     pub task: TaskId,
     pub task_name: &'a str,
-    pub run: RunId,
+    /// Run id of this execution — private: on a wavefront worker it
+    /// holds a placeholder (real ids are drawn at commit so dispenser
+    /// order matches sequential execution byte-for-byte), so reads go
+    /// through [`TaskCtx::run_id`], which poisons a recording.
+    run: RunId,
     pub region: RegionId,
     pub version: u32,
     /// Wireframe run: route, don't compute (§III-K).
@@ -179,68 +237,181 @@ pub struct TaskCtx<'a> {
 }
 
 impl<'a> TaskCtx<'a> {
+    /// The current virtual time.
+    pub fn now(&self) -> SimTime {
+        match &self.access {
+            CtxAccess::Direct(plat) => plat.now,
+            CtxAccess::Recorded { world, .. } => world.now,
+        }
+    }
+
+    /// The run id of this execution. On a wavefront worker the real id
+    /// is not known yet (it is drawn at commit, in canonical order), so
+    /// reading it poisons the recording: the firing rolls back and
+    /// re-runs sequentially, where the id is real — code embedding run
+    /// ids in remarks or outputs stays byte-identical across `workers`
+    /// settings.
+    pub fn run_id(&mut self) -> RunId {
+        if let CtxAccess::Recorded { fx, .. } = &mut self.access {
+            fx.poison();
+        }
+        self.run
+    }
+
+    /// Full platform access — service registration/updates, ad-hoc
+    /// metrics, raw provenance queries. Only available under direct
+    /// execution; on a wavefront worker this returns the
+    /// needs-sequential error, which rolls the firing back and re-runs
+    /// it in the deterministic commit phase. Code that calls this should
+    /// declare [`TaskCode::parallel_safe`] `= false`.
+    pub fn platform(&mut self) -> Result<&mut Platform> {
+        match &mut self.access {
+            CtxAccess::Direct(plat) => Ok(plat),
+            CtxAccess::Recorded { fx, .. } => {
+                // poison the recording even if the caller swallows this
+                // error: the firing must re-run with direct access
+                fx.poison();
+                Err(needs_sequential("TaskCtx::platform"))
+            }
+        }
+    }
+
+    /// Push new state into a registered service (e.g. deploy fresh model
+    /// parameters) — sugar over `platform()?.services.update(..)` with
+    /// [`Service::update_payload`](crate::platform::Service::update_payload).
+    /// Returns whether the service exists *and* accepted the payload.
+    /// Direct execution only (a service mutation is ordered, shared
+    /// state); falls back to sequential commit on a worker.
+    pub fn update_service(&mut self, service: &str, payload: &Payload) -> Result<bool> {
+        let plat = self.platform()?;
+        let mut accepted = false;
+        let found = plat.services.update(service, |s| accepted = s.update_payload(payload));
+        Ok(found && accepted)
+    }
+
     /// Fetch the payload an AV points to, through the dependent-local
     /// cache. Charges storage + (if remote) WAN latency on miss; stamps
-    /// the passport either way.
+    /// the passport either way. Identical observable behavior in both
+    /// access modes — the recorded arm pushes the exact mutation
+    /// sequence the direct arm performs, which the commit replays.
     pub fn fetch(&mut self, av: &AnnotatedValue) -> Result<Payload> {
-        if self.cache.lookup(av.object, self.plat.now) {
-            self.plat.metrics.cache_hits += 1;
-            self.plat.prov.stamp(av.id, self.plat.now, Stamp::CacheServed { region: self.region });
+        let now = self.now();
+        if self.cache.lookup(av.object, now) {
+            match &mut self.access {
+                CtxAccess::Direct(plat) => {
+                    plat.metrics.cache_hits += 1;
+                    plat.prov.stamp(av.id, now, Stamp::CacheServed { region: self.region });
+                }
+                CtxAccess::Recorded { fx, .. } => {
+                    fx.push(Effect::CacheHit);
+                    fx.push(Effect::CacheServed { av: av.id });
+                }
+            }
             // served from local media: base local latency only
             self.cost += SimDuration::micros(20);
-            let obj = self
-                .plat
-                .store
-                .peek(av.object)
-                .ok_or_else(|| anyhow!("cached object {} vanished", av.object))?;
+            let obj = match &self.access {
+                CtxAccess::Direct(plat) => plat.store.peek(av.object),
+                CtxAccess::Recorded { world, .. } => world.store.peek(av.object),
+            }
+            .ok_or_else(|| anyhow!("cached object {} vanished", av.object))?;
             return Ok(obj.payload.clone());
         }
-        self.plat.metrics.cache_misses += 1;
-        let (payload, bytes) = {
-            let (obj, lat) = self
-                .plat
-                .store
-                .get(av.object)
-                .ok_or_else(|| anyhow!("object {} not in store", av.object))?;
-            let p = obj.payload.clone();
-            self.cost += lat;
-            self.plat.metrics.storage_latency.record(lat);
-            (p, obj.payload.transfer_bytes())
+        let (payload, bytes, lat) = match &mut self.access {
+            CtxAccess::Direct(plat) => {
+                plat.metrics.cache_misses += 1;
+                let (obj, lat) = plat
+                    .store
+                    .get(av.object)
+                    .ok_or_else(|| anyhow!("object {} not in store", av.object))?;
+                let p = obj.payload.clone();
+                let b = obj.payload.transfer_bytes();
+                plat.metrics.storage_latency.record(lat);
+                (p, b, lat)
+            }
+            CtxAccess::Recorded { world, fx } => {
+                fx.push(Effect::CacheMiss);
+                match world.store.plan_get(av.object) {
+                    Some((obj, lat)) => {
+                        fx.push(Effect::StoreGet { object: av.object, lat: Some(lat) });
+                        (obj.payload.clone(), obj.payload.transfer_bytes(), lat)
+                    }
+                    None => {
+                        // the direct path bumps `gets` before discovering
+                        // the miss; mirror that, then error identically
+                        fx.push(Effect::StoreGet { object: av.object, lat: None });
+                        return Err(anyhow!("object {} not in store", av.object));
+                    }
+                }
+            }
         };
+        self.cost += lat;
         if av.region != self.region {
-            let (wan_lat, tier) = self
-                .plat
-                .net
-                .plan_transfer(av.class, av.region, self.region, bytes)
-                .ok_or_else(|| {
-                    anyhow!("sovereignty violation fetching {} into {}", av.id, self.region)
-                })?;
+            let (wan_lat, tier) = match &self.access {
+                CtxAccess::Direct(plat) => {
+                    plat.net.plan_transfer(av.class, av.region, self.region, bytes)
+                }
+                CtxAccess::Recorded { world, .. } => {
+                    world.net.plan_transfer(av.class, av.region, self.region, bytes)
+                }
+            }
+            .ok_or_else(|| {
+                anyhow!("sovereignty violation fetching {} into {}", av.id, self.region)
+            })?;
             self.cost += wan_lat;
-            self.plat.metrics.moved(tier, bytes);
-            self.plat.prov.stamp(
-                av.id,
-                self.plat.now,
-                Stamp::Transferred { from: av.region, to: self.region, bytes },
-            );
+            match &mut self.access {
+                CtxAccess::Direct(plat) => {
+                    plat.metrics.moved(tier, bytes);
+                    plat.prov.stamp(
+                        av.id,
+                        now,
+                        Stamp::Transferred { from: av.region, to: self.region, bytes },
+                    );
+                }
+                CtxAccess::Recorded { fx, .. } => {
+                    fx.push(Effect::MovedBytes { tier, bytes });
+                    fx.push(Effect::Transferred {
+                        av: av.id,
+                        from: av.region,
+                        to: self.region,
+                        bytes,
+                    });
+                }
+            }
         } else {
-            self.plat.metrics.moved(crate::metrics::NetTier::Lan, bytes);
+            match &mut self.access {
+                CtxAccess::Direct(plat) => plat.metrics.moved(NetTier::Lan, bytes),
+                CtxAccess::Recorded { fx, .. } => {
+                    fx.push(Effect::MovedBytes { tier: NetTier::Lan, bytes })
+                }
+            }
         }
-        self.cache.insert(av.object, bytes, self.combined, self.plat.now);
+        self.cache.insert(av.object, bytes, self.combined, now);
         Ok(payload)
     }
 
     /// Out-of-band service lookup (§III-D), recorded for forensics.
+    /// Services are live mutable state, so lookups require direct
+    /// execution — on a worker this triggers the sequential fallback.
+    /// Code that performs lookups should declare
+    /// [`TaskCode::parallel_safe`] `= false`.
     pub fn lookup(&mut self, service: &str, query: &Payload) -> Result<Payload> {
-        let (resp, lat, version) = self
-            .plat
+        let plat = match &mut self.access {
+            CtxAccess::Direct(plat) => plat,
+            CtxAccess::Recorded { fx, .. } => {
+                // poison survives a caught error (see EffectLog::poison)
+                fx.poison();
+                return Err(needs_sequential("TaskCtx::lookup"));
+            }
+        };
+        let (resp, lat, version) = plat
             .services
-            .lookup(service, query, self.plat.now)
+            .lookup(service, query, plat.now)
             .ok_or_else(|| anyhow!("no service '{service}' registered"))?;
         self.cost += lat;
-        self.plat.prov.checkpoint(
+        plat.prov.checkpoint(
             self.task,
             self.run,
-            self.plat.now,
+            plat.now,
             CheckpointEvent::ServiceLookup {
                 service: service.to_string(),
                 service_version: version,
@@ -253,23 +424,36 @@ impl<'a> TaskCtx<'a> {
 
     /// Free-text checkpoint remark (fig. 9's `[remarked: ...]`).
     pub fn remark(&mut self, msg: &str) {
-        self.plat.prov.checkpoint(
-            self.task,
-            self.run,
-            self.plat.now,
-            CheckpointEvent::Remark(msg.to_string()),
-        );
+        match &mut self.access {
+            CtxAccess::Direct(plat) => plat.prov.checkpoint(
+                self.task,
+                self.run,
+                plat.now,
+                CheckpointEvent::Remark(msg.to_string()),
+            ),
+            CtxAccess::Recorded { fx, .. } => {
+                fx.push(Effect::Checkpoint(CheckpointEvent::Remark(msg.to_string())))
+            }
+        }
     }
 
     /// Anomaly note (fig. 9's `[anomalous CPU spike ...]`).
     pub fn anomaly(&mut self, msg: &str) {
-        self.plat.metrics.bump("anomalies");
-        self.plat.prov.checkpoint(
-            self.task,
-            self.run,
-            self.plat.now,
-            CheckpointEvent::Anomaly(msg.to_string()),
-        );
+        match &mut self.access {
+            CtxAccess::Direct(plat) => {
+                plat.metrics.bump("anomalies");
+                plat.prov.checkpoint(
+                    self.task,
+                    self.run,
+                    plat.now,
+                    CheckpointEvent::Anomaly(msg.to_string()),
+                );
+            }
+            CtxAccess::Recorded { fx, .. } => {
+                fx.push(Effect::Bump("anomalies"));
+                fx.push(Effect::Checkpoint(CheckpointEvent::Anomaly(msg.to_string())));
+            }
+        }
     }
 
     /// Charge extra simulated compute time.
@@ -440,11 +624,16 @@ impl TaskAgent {
 
     /// Would this snapshot be served from the memo (no execution needed)?
     pub fn would_memoize(&self, plat: &Platform, snapshot: &Snapshot) -> bool {
-        !snapshot.ghost
-            && self
-                .memo
-                .get(&self.recipe(snapshot))
-                .is_some_and(|hit| hit.outputs.iter().all(|(_, obj, ..)| plat.store.contains(*obj)))
+        !snapshot.ghost && self.memo_valid_in(&plat.store, self.recipe(snapshot))
+    }
+
+    /// Is `recipe` memoized with every cached output object still in
+    /// `store`? Store-parameterized so wavefront workers can probe
+    /// against the frozen read-only view.
+    pub(crate) fn memo_valid_in(&self, store: &ObjectStore, recipe: ContentHash) -> bool {
+        self.memo
+            .get(&recipe)
+            .is_some_and(|hit| hit.outputs.iter().all(|(_, obj, ..)| store.contains(*obj)))
     }
 
     /// Execute a snapshot (or reuse the memoized result). The coordinator
@@ -514,11 +703,11 @@ impl TaskAgent {
             // Wireframe batch: expose routing, skip compute (§III-K). One
             // ghost emission per declared port, pretending the usual size
             // — already id-resolved, no wire names minted (§Perf).
-            let pretend = consumed_bytes.max(1);
+            let pretend = ghost_payload(consumed_bytes);
             for p in &self.ports.outs {
                 buf.push(Emission {
                     wire: p.wire,
-                    payload: Payload::Ghost { pretend_bytes: pretend },
+                    payload: pretend.clone(),
                     class: DataClass::Ghost,
                     defer: SimDuration::ZERO,
                 });
@@ -526,7 +715,9 @@ impl TaskAgent {
             SimDuration::micros(10)
         } else {
             let mut ctx = TaskCtx {
-                plat,
+                // explicit reborrow: `plat` is needed again after the run
+                // for the End checkpoint and run accounting below
+                access: CtxAccess::Direct(&mut *plat),
                 cache: &mut self.cache,
                 task: self.id,
                 task_name: &self.spec.name,
@@ -547,7 +738,10 @@ impl TaskAgent {
                     task: &self.spec.name,
                 },
             };
-            if let Err(e) = self.code.run(&mut ctx, &mut io) {
+            // a panicking plugin fails its own firing (recorded like any
+            // task error), never the coordinator — identical treatment on
+            // wavefront workers, so workers=1 and workers=N agree
+            if let Err(e) = run_code_guarded(&mut self.code, &mut ctx, &mut io) {
                 drop(io);
                 buf.clear();
                 self.emit_buf = buf;
@@ -580,6 +774,167 @@ impl TaskAgent {
             self.memo.clear();
         }
         self.memo.insert(recipe, MemoEntry { outputs });
+    }
+
+    /// Execute one snapshot on a wavefront worker thread: platform
+    /// mutations go to an [`EffectLog`] (replayed at commit, in canonical
+    /// order), agent-local state mutates live (this worker owns the agent
+    /// exclusively for the wavefront). Line-for-line mirror of
+    /// [`execute_inner`](Self::execute_inner)'s run path — the memo probe
+    /// happened in the caller, which routes hits (and duplicate recipes)
+    /// to the deferred/direct path instead.
+    ///
+    /// If the code touches a direct-only API (`lookup`, `platform`, …),
+    /// the agent's caches are rolled back and the untouched snapshot is
+    /// returned as [`PreparedFiring::Deferred`] for sequential re-run.
+    pub(crate) fn execute_recorded(
+        &mut self,
+        world: &WorldView<'_>,
+        wires: &WireTable,
+        snapshot: Snapshot,
+        recipe: ContentHash,
+    ) -> PreparedFiring {
+        let mut fx = EffectLog::default();
+        let ghost = snapshot.ghost;
+        let version = self.code.version();
+        let region = self.region;
+        let born = snapshot.born;
+        let parents: Vec<AvId> = snapshot.all_avs().map(|a| a.id).collect();
+        let mut consumed_bytes = 0u64;
+        for av in snapshot.all_avs() {
+            fx.push(Effect::Consumed { av: av.id });
+            consumed_bytes += av.size_bytes;
+        }
+        fx.push(Effect::Checkpoint(CheckpointEvent::Start));
+        for av in snapshot.all_avs() {
+            fx.push(Effect::Checkpoint(CheckpointEvent::ReadInput { av: av.id }));
+        }
+
+        let combined = snapshot.inputs.len() > 1;
+        let mut buf = std::mem::take(&mut self.emit_buf);
+        let cost = if ghost {
+            let pretend = ghost_payload(consumed_bytes);
+            for p in &self.ports.outs {
+                buf.push(Emission {
+                    wire: p.wire,
+                    payload: pretend.clone(),
+                    class: DataClass::Ghost,
+                    defer: SimDuration::ZERO,
+                });
+            }
+            SimDuration::micros(10)
+        } else {
+            // snapshot the agent caches: a needs-sequential fallback must
+            // leave the agent exactly as the deferred re-run expects it
+            let cache_save = self.cache.clone();
+            let names_save = self.name_cache.clone();
+            let run_result = {
+                let mut ctx = TaskCtx {
+                    access: CtxAccess::Recorded { world, fx: &mut fx },
+                    cache: &mut self.cache,
+                    task: self.id,
+                    task_name: &self.spec.name,
+                    run: RunId::new(u64::MAX), // drawn at commit
+                    region,
+                    version,
+                    ghost: false,
+                    combined,
+                    cost: SimDuration::ZERO,
+                };
+                let mut io = PortIo {
+                    inputs: Inputs { snapshot: &snapshot, map: &self.ports },
+                    emitter: Emitter {
+                        buf: &mut buf,
+                        map: &self.ports,
+                        wires,
+                        cache: &mut self.name_cache,
+                        task: &self.spec.name,
+                    },
+                };
+                run_code_guarded(&mut self.code, &mut ctx, &mut io).map(|()| ctx.cost)
+            };
+            // a direct-only API was touched: roll back and defer, even if
+            // the plugin caught the error and returned Ok — committing
+            // the recorded result would diverge from workers=1
+            if fx.needs_direct() {
+                buf.clear();
+                self.emit_buf = buf;
+                self.cache = cache_save;
+                self.name_cache = names_save;
+                return PreparedFiring::Deferred(snapshot);
+            }
+            match run_result {
+                Ok(run_cost) => run_cost + self.code.compute_cost(consumed_bytes),
+                // Defensive only: every in-ctx producer of the
+                // needs-sequential error poisons the log first, so the
+                // needs_direct() check above already deferred. This arm
+                // catches the error arriving from OUTSIDE this ctx (a
+                // plugin propagating one it stored from another run, or
+                // manufacturing the marker) — defer rather than commit a
+                // result the author flagged as direct-only.
+                Err(e) if is_needs_sequential(&e) => {
+                    buf.clear();
+                    self.emit_buf = buf;
+                    self.cache = cache_save;
+                    self.name_cache = names_save;
+                    return PreparedFiring::Deferred(snapshot);
+                }
+                Err(e) => {
+                    buf.clear();
+                    self.emit_buf = buf;
+                    return PreparedFiring::Recorded(RecordedRun {
+                        recipe,
+                        parents,
+                        born,
+                        version,
+                        region,
+                        fx,
+                        body: Err(e),
+                    });
+                }
+            }
+        };
+
+        fx.push(Effect::Checkpoint(CheckpointEvent::End { outputs: buf.len() as u32 }));
+        fx.push(Effect::RanTask { ghost });
+        self.runs += 1;
+        self.last_snapshot = Some(snapshot);
+        // absorb the publish-side payload hashing here, off the
+        // sequential commit path (§Perf)
+        let hashes: Vec<ContentHash> = buf.iter().map(|e| e.payload.content_hash()).collect();
+        PreparedFiring::Recorded(RecordedRun {
+            recipe,
+            parents,
+            born,
+            version,
+            region,
+            fx,
+            body: Ok(RecordedBody { emissions: buf, hashes, cost, ghost }),
+        })
+    }
+}
+
+/// Run plugin code, converting a panic into a task error so one firing's
+/// crash never takes down the coordinator (or a wavefront worker). Both
+/// execution modes route through here, so panic handling cannot diverge
+/// between `workers = 1` and `workers = N`.
+fn run_code_guarded(
+    code: &mut Box<dyn TaskCode>,
+    ctx: &mut TaskCtx<'_>,
+    io: &mut PortIo<'_>,
+) -> Result<()> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| code.run(ctx, io))) {
+        Ok(r) => r,
+        Err(payload) => {
+            let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+                (*s).to_string()
+            } else if let Some(s) = payload.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "non-string panic payload".to_string()
+            };
+            Err(anyhow!("task panicked: {msg}"))
+        }
     }
 }
 
@@ -787,7 +1142,7 @@ mod tests {
             p.now,
         );
         let mut ctx = TaskCtx {
-            plat: &mut p,
+            access: CtxAccess::Direct(&mut p),
             cache: &mut a.cache,
             task: TaskId::new(0),
             task_name: "t",
@@ -804,7 +1159,86 @@ mod tests {
         assert_eq!(p1, p2);
         let hit_cost = ctx.cost.as_micros() - cost_after_miss.as_micros();
         assert!(hit_cost < cost_after_miss.as_micros(), "hit far cheaper than miss");
-        assert_eq!(ctx.plat.metrics.cache_hits, 1);
-        assert_eq!(ctx.plat.metrics.cache_misses, 1);
+        let plat = ctx.platform().unwrap();
+        assert_eq!(plat.metrics.cache_hits, 1);
+        assert_eq!(plat.metrics.cache_misses, 1);
+    }
+
+    #[test]
+    fn recorded_fetch_mirrors_direct_fetch() {
+        // same object fetched under a direct ctx and a recording ctx:
+        // payload, cost and cache movement must agree, and applying the
+        // recorded log must land the identical platform deltas
+        let mk_av = |p: &mut Platform| {
+            let (av, _) = p.mint_av(
+                Payload::tensor(&[8], vec![2.0; 8]),
+                TaskId::new(9),
+                RunId::new(99),
+                1,
+                LinkId::new(0),
+                RegionId::new(0),
+                DataClass::Summary,
+                0,
+                &[],
+                p.now,
+            );
+            av
+        };
+        // direct arm
+        let mut pd = plat();
+        let avd = mk_av(&mut pd);
+        let mut cache_d = CacheManager::new(PurgePolicy::Never);
+        let mut ctx = TaskCtx {
+            access: CtxAccess::Direct(&mut pd),
+            cache: &mut cache_d,
+            task: TaskId::new(0),
+            task_name: "t",
+            run: RunId::new(1),
+            region: RegionId::new(0),
+            version: 1,
+            ghost: false,
+            combined: false,
+            cost: SimDuration::ZERO,
+        };
+        let pay_d = ctx.fetch(&avd).unwrap();
+        let cost_d = ctx.cost;
+        drop(ctx);
+        // recorded arm (fresh platform, identical history)
+        let mut pr = plat();
+        let avr = mk_av(&mut pr);
+        let mut cache_r = CacheManager::new(PurgePolicy::Never);
+        let mut fx = EffectLog::default();
+        {
+            let world = WorldView { store: &pr.store, net: &pr.net, now: pr.now };
+            let mut ctx = TaskCtx {
+                access: CtxAccess::Recorded { world: &world, fx: &mut fx },
+                cache: &mut cache_r,
+                task: TaskId::new(0),
+                task_name: "t",
+                run: RunId::new(u64::MAX),
+                region: RegionId::new(0),
+                version: 1,
+                ghost: false,
+                combined: false,
+                cost: SimDuration::ZERO,
+            };
+            let pay_r = ctx.fetch(&avr).unwrap();
+            assert_eq!(pay_r, pay_d, "identical payload either way");
+            assert_eq!(ctx.cost, cost_d, "identical virtual cost either way");
+            // direct-only APIs signal the sequential fallback
+            let e = ctx.lookup("dns", &Payload::scalar(0.0)).unwrap_err();
+            assert!(is_needs_sequential(&e), "{e}");
+            assert!(ctx.platform().is_err());
+        }
+        fx.apply(&mut pr, TaskId::new(0), RunId::new(1), 1, RegionId::new(0));
+        assert_eq!(pr.metrics.cache_misses, pd.metrics.cache_misses);
+        assert_eq!(pr.metrics.cache_hits, pd.metrics.cache_hits);
+        assert_eq!(pr.store.gets, pd.store.gets, "storage read accounting replayed");
+        assert_eq!(
+            pr.metrics.bytes(NetTier::Lan),
+            pd.metrics.bytes(NetTier::Lan),
+            "bytes-moved accounting replayed"
+        );
+        assert_eq!(cache_r.len(), cache_d.len(), "dependent-local cache state agrees");
     }
 }

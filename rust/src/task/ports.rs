@@ -39,7 +39,7 @@ use crate::spec::TaskSpec;
 use crate::util::hash::FastMap;
 use crate::util::{suggest, SimDuration, WireId};
 use anyhow::{anyhow, Result};
-use std::rc::Rc;
+use std::sync::Arc;
 
 use super::TaskCtx;
 
@@ -99,10 +99,10 @@ pub struct PortMap {
     pub(crate) outs: Vec<OutPort>,
     /// Parallel to `outs`: the spec names, kept for bind-time resolution
     /// and did-you-mean error lists only.
-    pub(crate) out_names: Vec<Rc<str>>,
+    pub(crate) out_names: Vec<Arc<str>>,
     pub(crate) ins: Vec<InPort>,
     /// Parallel to `ins`, in snapshot-buffer order.
-    pub(crate) in_names: Vec<Rc<str>>,
+    pub(crate) in_names: Vec<Arc<str>>,
 }
 
 impl PortMap {
@@ -117,14 +117,14 @@ impl PortMap {
         for w in &spec.outputs {
             let wire = wires.id(w).expect("task outputs are interned at build");
             outs.push(OutPort { wire, class: DataClass::Summary });
-            out_names.push(Rc::from(w.as_str()));
+            out_names.push(Arc::from(w.as_str()));
         }
         let mut ins = Vec::new();
-        let mut in_names: Vec<Rc<str>> = Vec::new();
+        let mut in_names: Vec<Arc<str>> = Vec::new();
         for name in spec.input_ports() {
             let wire = wires.id(name).expect("stream inputs are interned at build");
             ins.push(InPort { wire, slot: ins.len() as u32 });
-            in_names.push(Rc::from(name));
+            in_names.push(Arc::from(name));
         }
         Self { outs, out_names, ins, in_names }
     }
@@ -248,7 +248,7 @@ pub struct Emission {
 /// Per-agent memo of legacy wire-name resolutions, so an un-migrated
 /// [`UserCode`](super::UserCode) plugin pays the string hash once per
 /// distinct name, not once per publication.
-pub type NameCache = FastMap<Rc<str>, WireId>;
+pub type NameCache = FastMap<Arc<str>, WireId>;
 
 /// Where user code writes its outputs. Backed by the agent's reusable
 /// emission buffer: the steady state allocates nothing per run.
@@ -309,7 +309,7 @@ impl Emitter<'_> {
                         suggest(name, "output port", self.map.out_names.iter().map(|n| &**n))
                     )
                 })?;
-                self.cache.insert(Rc::from(name), w);
+                self.cache.insert(Arc::from(name), w);
                 w
             }
         };
@@ -366,7 +366,7 @@ impl<'a> Inputs<'a> {
             None => return &[],
         };
         if let Some((n, avs)) = self.snapshot.inputs.get(port.slot()) {
-            if Rc::ptr_eq(n, name) || **n == **name {
+            if Arc::ptr_eq(n, name) || **n == **name {
                 return avs;
             }
         }

@@ -30,10 +30,14 @@ fn fig5_tfmodel_with_service_and_windows() {
         .register("lookup", Box::new(koalja::platform::service::KvService::new(&[("k", "v")])));
     c.set_code(
         "predict",
-        Box::new(FnTask::new(|ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
-            let _ = ctx.lookup("lookup", &Payload::Text("k".into()))?;
-            Ok(vec![Output::summary("result", Payload::scalar(snap.all_avs().count() as f32))])
-        })),
+        Box::new(
+            // service lookups run sequentially (deterministic commit phase)
+            FnTask::new(|ctx: &mut TaskCtx<'_>, snap: &Snapshot| {
+                let _ = ctx.lookup("lookup", &Payload::Text("k".into()))?;
+                Ok(vec![Output::summary("result", Payload::scalar(snap.all_avs().count() as f32))])
+            })
+            .sequential(),
+        ),
     )
     .unwrap();
     let mut r = rng(1);

@@ -1,0 +1,373 @@
+//! Seq-vs-par equivalence: the wavefront scheduler's byte-identical
+//! provenance contract.
+//!
+//! The same random pipeline, the same random injection plan, run once at
+//! `workers = 1` (the fully sequential direct path) and once on the
+//! worker pool — then every book is compared *byte-for-byte* through a
+//! canonical dump: sink captures (values, AV ids, object ids, content
+//! hashes, publish times), the deterministic commit log, wire currency,
+//! every provenance passport (stamps in order, parents, run/version
+//! numbers), every per-task checkpoint log, tap rings, and the headline
+//! counters. Run ids, AV ids and object ids come from shared dispensers,
+//! so this only holds if the parallel path draws them in exactly the
+//! sequential order — which is the whole design (commit in task-index
+//! order, effects recorded on workers and replayed at commit).
+//!
+//! The CI matrix runs this file under `KOALJA_WORKERS={1,4}`; the env
+//! var sets the parallel arm's pool width (1 makes the test a
+//! sequential-vs-sequential control).
+
+use koalja::prelude::*;
+use koalja::util::{Rng, TaskId};
+
+/// Pool width for the parallel arm: `KOALJA_WORKERS` (the CI matrix
+/// leg) or 4.
+fn par_workers() -> usize {
+    std::env::var("KOALJA_WORKERS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .unwrap_or(4)
+        .max(1)
+}
+
+// ---------------------------------------------------------------------
+// random pipeline + injection-plan generator
+// ---------------------------------------------------------------------
+
+struct Case {
+    text: String,
+    /// (external wire, at_ms, tensor data) — applied identically to both arms.
+    plan: Vec<(String, u64, Vec<f32>)>,
+}
+
+fn random_case(r: &mut Rng) -> Case {
+    let n_tasks = 2 + r.range(0, 6);
+    let mut produced: Vec<String> = Vec::new();
+    let mut externals: Vec<String> = Vec::new();
+    let mut text = String::from("[wavecase]\n");
+    for ti in 0..n_tasks {
+        let n_in = 1 + r.range(0, 2);
+        let mut inputs: Vec<String> = Vec::new();
+        for _ in 0..n_in {
+            let wire = if !produced.is_empty() && r.bool(0.55) {
+                produced[r.range(0, produced.len())].clone()
+            } else {
+                let w = format!("ext{}", r.range(0, 3));
+                if !externals.contains(&w) {
+                    externals.push(w.clone());
+                }
+                w
+            };
+            if inputs.contains(&wire) {
+                continue; // duplicate port tokens add nothing here
+            }
+            let token = match r.range(0, 5) {
+                0 => format!("{wire}[{}]", 2 + r.range(0, 3)),
+                1 => format!("{wire}[4/2]"),
+                _ => wire.clone(),
+            };
+            inputs.push(token);
+        }
+        let n_out = 1 + r.range(0, 2);
+        let outputs: Vec<String> = (0..n_out).map(|k| format!("t{ti}o{k}")).collect();
+        produced.extend(outputs.iter().cloned());
+        text.push_str(&format!("({}) task{ti} ({})", inputs.join(", "), outputs.join(", ")));
+        if r.bool(0.25) {
+            text.push_str(" @policy=swap");
+        }
+        if r.bool(0.2) {
+            text.push_str(&format!(" @rate={}ms", 2 + r.range(0, 8)));
+        }
+        if r.bool(0.2) {
+            text.push_str(&format!(" @notify=poll:{}ms", 3 + r.range(0, 9)));
+        }
+        text.push('\n');
+    }
+    // injection plan: several payloads per external wire at random
+    // instants — identical values repeat sometimes, exercising the memo
+    // path inside (and across) wavefronts
+    let mut plan = Vec::new();
+    for w in &externals {
+        let k = 3 + r.range(0, 6);
+        for _ in 0..k {
+            let at_ms = r.range(0, 40) as u64;
+            let data: Vec<f32> = if r.bool(0.3) {
+                vec![1.0, 2.0, 3.0, 4.0] // repeated content → memo hits
+            } else {
+                (0..4).map(|_| (r.range(0, 1000) as f32) / 10.0).collect()
+            };
+            plan.push((w.clone(), at_ms, data));
+        }
+    }
+    Case { text, plan }
+}
+
+/// Deterministic multi-port task body: scale per port, defer the second
+/// port's publication — covers multi-emission routing, per-port classes
+/// and deferred publish under both schedulers.
+fn case_code() -> Box<dyn TaskCode> {
+    Box::new(PortFn::new(|ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
+        let n_ports = io.outs().len();
+        for av in io.inputs.snapshot().all_avs() {
+            let p = ctx.fetch(av)?;
+            for pi in 0..n_ports {
+                let port = io.out(pi)?;
+                let out = match p.as_tensor() {
+                    Some((shape, data)) => Payload::tensor(
+                        shape,
+                        data.iter().map(|x| x * (pi as f32 + 2.0) + 1.0).collect(),
+                    ),
+                    None => p.clone(),
+                };
+                if pi % 2 == 1 {
+                    io.emitter.emit_after(port, out, SimDuration::micros(150));
+                } else {
+                    io.emitter.emit(port, out);
+                }
+            }
+        }
+        Ok(())
+    }))
+}
+
+// ---------------------------------------------------------------------
+// canonical byte dump of every determinism-relevant book
+// ---------------------------------------------------------------------
+
+fn run_arm(case: &Case, workers: usize) -> String {
+    use std::fmt::Write as _;
+    let spec = parse(&case.text).expect("generated wirings parse");
+    let cfg = DeployConfig { workers, ..Default::default() };
+    let mut c = Coordinator::deploy(&spec, cfg).unwrap();
+    for t in 0..c.graph.n_tasks() {
+        let name = c.graph.task(TaskId::new(t as u64)).name.clone();
+        c.set_code(&name, case_code()).unwrap();
+    }
+    // tap every wire (deterministic attach order: interned order)
+    let wire_names: Vec<String> = c.graph.wires.names().to_vec();
+    let taps: Vec<(String, koalja::breadboard::TapId)> = wire_names
+        .iter()
+        .map(|w| (w.clone(), c.taps.attach(w, TapSpec::default())))
+        .collect();
+    for (wire, at_ms, data) in &case.plan {
+        c.inject_at(
+            wire,
+            Payload::tensor(&[4], data.clone()),
+            DataClass::Summary,
+            RegionId::new(0),
+            SimTime::millis(*at_ms),
+        )
+        .unwrap();
+    }
+    c.run_until_idle();
+
+    let mut s = String::new();
+    writeln!(s, "== sink book ==").unwrap();
+    for (w, recs) in c.collected.iter() {
+        for rec in recs {
+            writeln!(s, "{w} @{:?} av={:?} payload={:?}", rec.at, rec.av, rec.payload).unwrap();
+        }
+    }
+    writeln!(s, "== commit log ==").unwrap();
+    for sc in c.commit_log() {
+        writeln!(s, "{sc:?}").unwrap();
+    }
+    writeln!(s, "== wire currency ==").unwrap();
+    for w in &wire_names {
+        writeln!(s, "{w}: {:?}", c.latest_on_wire.get(w)).unwrap();
+    }
+    writeln!(s, "== passports ==").unwrap();
+    let mut av_ids: Vec<_> = c.plat.prov.passports_iter().map(|(id, _)| *id).collect();
+    av_ids.sort();
+    for id in av_ids {
+        let p = c.plat.prov.passport(id).unwrap();
+        writeln!(s, "{id}: parents={:?} stamps={:?}", p.parents, p.stamps).unwrap();
+    }
+    writeln!(s, "== checkpoint logs ==").unwrap();
+    for t in 0..c.graph.n_tasks() {
+        let id = TaskId::new(t as u64);
+        writeln!(s, "task{t}: {:?}", c.plat.prov.checkpoint_log(id)).unwrap();
+    }
+    writeln!(s, "== taps ==").unwrap();
+    for (w, id) in &taps {
+        writeln!(s, "{w}: stats={:?} samples={:?}", c.taps.stats(*id), c.taps.samples_vec(*id))
+            .unwrap();
+    }
+    writeln!(s, "== counters ==").unwrap();
+    writeln!(
+        s,
+        "task_runs={} memo_hits={} task_errors={} cache={}h/{}m stamps={} puts={} gets={} \
+         events={} joules={:.9}",
+        c.plat.metrics.task_runs,
+        c.plat.metrics.get("memo_hits"),
+        c.plat.metrics.get("task_errors"),
+        c.plat.metrics.cache_hits,
+        c.plat.metrics.cache_misses,
+        c.plat.prov.stamp_count,
+        c.plat.store.puts,
+        c.plat.store.gets,
+        c.events_processed,
+        c.plat.metrics.joules,
+    )
+    .unwrap();
+    s
+}
+
+// ---------------------------------------------------------------------
+// the property
+// ---------------------------------------------------------------------
+
+#[test]
+fn workers_one_and_n_produce_byte_identical_books() {
+    let w = par_workers();
+    let mut r = rng(0xA7E_F807);
+    for case_idx in 0..40 {
+        let case = random_case(&mut r);
+        let seq = run_arm(&case, 1);
+        let par = run_arm(&case, w);
+        if seq != par {
+            // locate the first divergent line for a readable failure
+            for (ls, lp) in seq.lines().zip(par.lines()) {
+                assert_eq!(
+                    ls, lp,
+                    "case {case_idx} (workers 1 vs {w}) diverged\nspec:\n{}",
+                    case.text
+                );
+            }
+            panic!(
+                "case {case_idx}: books differ in length only (workers 1 vs {w})\nspec:\n{}",
+                case.text
+            );
+        }
+    }
+}
+
+#[test]
+fn wide_fanout_wavefront_is_deterministic() {
+    // a directed worst case: one injection instant wakes 8 independent
+    // tasks at once — the widest wavefront shape the benches measure
+    let mut text = String::from("[wide]\n");
+    for i in 0..8 {
+        text.push_str(&format!("(x) leaf{i} (s{i})\n"));
+    }
+    let case = Case {
+        text,
+        plan: (0..12u64)
+            .map(|i| ("x".to_string(), i * 3, vec![i as f32, 1.0, 2.0, 3.0]))
+            .collect(),
+    };
+    let seq = run_arm(&case, 1);
+    let par = run_arm(&case, par_workers().max(4));
+    assert_eq!(seq, par, "wide fan-out books must be byte-identical");
+}
+
+#[test]
+fn swallowed_direct_only_error_still_defers() {
+    // an UNDECLARED service user that catches the lookup error and
+    // carries on: on a worker the recording is poisoned the moment
+    // lookup refuses, so the firing rolls back and re-runs sequentially
+    // with the real service — workers=1 and workers=N must agree even
+    // though the plugin never propagates the needs-sequential error
+    let arm = |workers: usize| -> String {
+        let spec = parse("[sw]\n(x) sneaky (a)\n(x) honest (b)\n").unwrap();
+        let cfg = DeployConfig { workers, ..Default::default() };
+        let mut c = Coordinator::deploy(&spec, cfg).unwrap();
+        c.plat.services.register(
+            "dns",
+            Box::new(koalja::platform::service::KvService::new(&[("k", "42")])),
+        );
+        // note: deliberately NOT .sequential() — the poison must save us
+        c.set_code(
+            "sneaky",
+            Box::new(PortFn::new(|ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
+                let port = io.out(0)?;
+                let v = match ctx.lookup("dns", &Payload::Text("k".into())) {
+                    Ok(Payload::Text(s)) => s.parse::<f32>().unwrap_or(-1.0),
+                    _ => 0.0, // swallows the worker-side refusal
+                };
+                for av in io.inputs.all() {
+                    let _ = ctx.fetch(av)?;
+                    io.emitter.emit(port, Payload::scalar(v));
+                }
+                Ok(())
+            })),
+        )
+        .unwrap();
+        for i in 0..6u64 {
+            c.inject_at(
+                "x",
+                Payload::scalar(i as f32),
+                DataClass::Summary,
+                RegionId::new(0),
+                SimTime::millis(i),
+            )
+            .unwrap();
+        }
+        c.run_until_idle();
+        let mut s = String::new();
+        for (w, recs) in c.collected.iter() {
+            for rec in recs {
+                use std::fmt::Write as _;
+                writeln!(s, "{w} {:?} {:?} {:?}", rec.at, rec.av, rec.payload).unwrap();
+            }
+        }
+        s
+    };
+    let seq = arm(1);
+    let par = arm(par_workers().max(2));
+    assert!(seq.contains("42"), "direct arm saw the real service value:\n{seq}");
+    assert_eq!(seq, par, "swallowed refusals must not leak divergent results");
+}
+
+#[test]
+fn sequential_fallback_code_keeps_determinism() {
+    // a wavefront mixing parallel-safe and declared-sequential code:
+    // the sequential member commits in its canonical slot either way
+    let text = "[mix]\n(x) fast (a)\n(x) slow (b)\n(x) other (c)\n".to_string();
+    let case = Case {
+        text,
+        plan: (0..10u64).map(|i| ("x".to_string(), i * 2, vec![i as f32; 4])).collect(),
+    };
+    let arm = |workers: usize| -> String {
+        let spec = parse(&case.text).unwrap();
+        let cfg = DeployConfig { workers, ..Default::default() };
+        let mut c = Coordinator::deploy(&spec, cfg).unwrap();
+        c.set_code("fast", case_code()).unwrap();
+        c.set_code(
+            "slow",
+            Box::new(
+                PortFn::new(|ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
+                    let port = io.out(0)?;
+                    for av in io.inputs.all() {
+                        let p = ctx.fetch(av)?;
+                        io.emitter.emit(port, p);
+                    }
+                    Ok(())
+                })
+                .sequential(),
+            ),
+        )
+        .unwrap();
+        c.set_code("other", case_code()).unwrap();
+        for (wire, at_ms, data) in &case.plan {
+            c.inject_at(
+                wire,
+                Payload::tensor(&[4], data.clone()),
+                DataClass::Summary,
+                RegionId::new(0),
+                SimTime::millis(*at_ms),
+            )
+            .unwrap();
+        }
+        c.run_until_idle();
+        let mut s = String::new();
+        for (w, recs) in c.collected.iter() {
+            for rec in recs {
+                use std::fmt::Write as _;
+                writeln!(s, "{w} {:?} {:?} {:?}", rec.at, rec.av, rec.payload).unwrap();
+            }
+        }
+        s
+    };
+    assert_eq!(arm(1), arm(par_workers().max(2)));
+}

@@ -13,13 +13,28 @@ FAIL_PCT; other regressions above WARN_PCT warn. Labels present in only
 one file are reported informationally (new shapes appear, old ones
 retire — that is trajectory, not failure). An empty baseline (the seed
 commit before any measured run) compares clean by definition.
+
+The parallel wavefront shapes (par-chain-N / par-fanout-N) additionally
+carry a `<shape>/speedup` metric: fresh wallclock at workers=1 divided
+by the worker-pool arm. Fan-outs >= 4 wide are expected to actually
+parallelize; a speedup below PAR_MIN_SPEEDUP there warns (never fails —
+CI runners can be 1-core). Chains are 1-wide wavefronts and are exempt:
+their honest expectation is ~1.0x.
 """
 
 import json
+import re
 import sys
 
 WARN_PCT = 10.0
 FAIL_PCT = 35.0
+PAR_MIN_SPEEDUP = 1.2
+
+# Environment/config metadata recorded in the report for context, not
+# performance measurements — excluded from the regression comparison
+# (e.g. par/workers is the runner's core count; a 8-core baseline vs a
+# 4-core runner is not a regression).
+METADATA_LABELS = {"arrivals", "par/workers"}
 
 
 def load(path):
@@ -44,7 +59,34 @@ def load(path):
 
 
 def lower_is_better(label, unit):
-    return "ns" in unit or "ns_per" in label
+    # latencies and wallclock shrink when things improve; rates and
+    # speedups grow. The par-* wall_ms metrics are wallclock.
+    return "ns" in unit or "ns_per" in label or unit == "ms" or "wall_ms" in label
+
+
+def parallel_speedup_check(fresh):
+    """Warn when a >=4-wide par-fanout shape parallelizes < PAR_MIN_SPEEDUP.
+
+    Reads the fresh report only (the speedup is already a same-run
+    seq-vs-par comparison; the committed baseline is not involved).
+    Returns the number of warnings raised.
+    """
+    warnings = 0
+    for label in sorted(fresh):
+        m = re.match(r"par-(chain|fanout)-(\d+)/speedup$", label)
+        if not m:
+            continue
+        value = fresh[label][0]
+        kind, width = m.group(1), int(m.group(2))
+        if kind == "fanout" and width >= 4 and value < PAR_MIN_SPEEDUP:
+            print(f"bench_delta: warn — {label} = {value:.2f}x, below the "
+                  f"{PAR_MIN_SPEEDUP:.1f}x floor for a {width}-wide fan-out "
+                  "(1-core runner, oversubscription, or a scheduler regression)")
+            warnings += 1
+        else:
+            note = "parallel speedup" if kind == "fanout" else "parallel speedup (1-wide: ~1x expected)"
+            print(f"{label:44} {value:12.2f}x  {note}")
+    return warnings
 
 
 def main():
@@ -57,11 +99,12 @@ def main():
     if base is None or not base:
         print("bench_delta: no baseline measurements to compare against "
               "(seed commit or unreadable baseline) — recording first trajectory point")
+        parallel_speedup_check(fresh)
         return 0
 
-    common = sorted(set(base) & set(fresh))
-    only_base = sorted(set(base) - set(fresh))
-    only_fresh = sorted(set(fresh) - set(base))
+    common = sorted((set(base) & set(fresh)) - METADATA_LABELS)
+    only_base = sorted(set(base) - set(fresh) - METADATA_LABELS)
+    only_fresh = sorted(set(fresh) - set(base) - METADATA_LABELS)
     worst_fail = None
     warnings = 0
 
@@ -96,6 +139,8 @@ def main():
         # nothing until a baseline containing them is committed
         print(f"bench_delta: {len(only_fresh)} new shape(s) recorded informationally "
               "(commit the fresh JSON to baseline them)")
+
+    warnings += parallel_speedup_check(fresh)
 
     if worst_fail:
         label, pct = worst_fail
