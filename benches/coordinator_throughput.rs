@@ -120,9 +120,9 @@ struct Run {
     hops_per_sec: f64,
 }
 
-fn run_shape(shape: &Shape, provenance: bool) -> Run {
+fn run_shape(shape: &Shape, provenance: bool, trace: bool) -> Run {
     let spec = parse(&shape.spec_text()).unwrap();
-    let cfg = DeployConfig { provenance, ..Default::default() };
+    let cfg = DeployConfig { provenance, trace, ..Default::default() };
     let mut c = Coordinator::deploy(&spec, cfg).unwrap();
     if let Shape::FanoutEmit { outs } = *shape {
         // the port-API emitter under test: fetch once, emit on every
@@ -263,10 +263,10 @@ fn run_par_shape(chain: bool, width: usize, workers: usize) -> (f64, usize) {
 }
 
 /// Best-of-3 (the shared benchmark host is noisy).
-fn best_of_3(shape: &Shape, provenance: bool) -> Run {
-    let mut best = run_shape(shape, provenance);
+fn best_of_3(shape: &Shape, provenance: bool, trace: bool) -> Run {
+    let mut best = run_shape(shape, provenance, trace);
     for _ in 0..2 {
-        let r = run_shape(shape, provenance);
+        let r = run_shape(shape, provenance, trace);
         if r.events_per_sec > best.events_per_sec {
             best = r;
         }
@@ -297,7 +297,7 @@ fn main() {
     ];
     for (label, shape) in &shapes {
         for prov in [true, false] {
-            let r = best_of_3(shape, prov);
+            let r = best_of_3(shape, prov, false);
             row(&[
                 label.to_string(),
                 format!("{prov}"),
@@ -362,6 +362,34 @@ fn main() {
             report.push(Measurement::new(format!("{label}/speedup"), speedup, "x"));
         }
         report.push(Measurement::new("par/workers", par_workers as f64, "count"));
+    }
+
+    // ---- observability overhead: the same shape with the flight ----
+    // ---- recorder off (one dead branch per site) and on           ----
+    //
+    // chain-16 with provenance on is the span-densest shape here: every
+    // arrival crosses 16 instrumented firings + publishes. The off arm is
+    // the cost of shipping the instrumentation disabled (gated ≤ 5% vs
+    // baseline by tools/bench_delta.py); the on arm is the cost of actually
+    // recording (gated ≤ 15% over the off arm, same tool, fresh-only).
+    table_header(
+        "E11d: observability overhead — flight recorder off vs on (chain-16, prov)",
+        &["arm", "events_per_s", "ns_per_event", "overhead_pct"],
+    );
+    {
+        let shape = Shape::Chain { depth: 16 };
+        let off = best_of_3(&shape, true, false);
+        let on = best_of_3(&shape, true, true);
+        let overhead_pct = (on.ns_per_event - off.ns_per_event) / off.ns_per_event * 100.0;
+        row(&["trace-off".into(), f(off.events_per_sec), f(off.ns_per_event), f(0.0)]);
+        row(&["trace-on".into(), f(on.events_per_sec), f(on.ns_per_event), f(overhead_pct)]);
+        report.push(Measurement::new(
+            "obs-overhead/off/ns_per_event",
+            off.ns_per_event,
+            "ns",
+        ));
+        report.push(Measurement::new("obs-overhead/on/ns_per_event", on.ns_per_event, "ns"));
+        report.push(Measurement::new("obs-overhead/overhead_pct", overhead_pct, "%"));
     }
 
     table_header("E11b: substrate op costs (ns/op, wallclock)", &["op", "ns_per_op"]);

@@ -91,6 +91,12 @@ if [ "$HAVE_CARGO" = 1 ]; then
 
     run_step "cargo-test" 0 cargo test -q
 
+    # observability smoke + artifact: a traced CLI session over the fig. 5
+    # spec, exporting the schema'd obs snapshot (artifacts/obs/*.json) the
+    # same way `koalja trace` does for users
+    run_step "obs-trace" 0 \
+        ./target/release/koalja trace specs/tfmodel.koalja --json artifacts/obs
+
     # advisory: a broken tap bench reports as an (advisory) fail, never
     # as "skip" — skip means the toolchain is absent, nothing else
     run_step "bench-tap-overhead" 1 cargo bench --bench tap_overhead
@@ -133,7 +139,7 @@ else
     for s in cargo-fmt cargo-clippy bench-tap-overhead; do
         record "$s" skip 1 0
     done
-    for s in cargo-build cargo-build-examples cargo-test \
+    for s in cargo-build cargo-build-examples cargo-test obs-trace \
              bench-coordinator-throughput bench-delta; do
         record "$s" skip 0 0
     done

@@ -3,13 +3,29 @@ use koalja::prelude::*;
 /// Steady-state hop-rate probe over a 4-stage chain. The injection loop
 /// rides a pre-resolved `SourceHandle` — zero name resolutions after
 /// deploy, like any production feeder should.
+///
+/// Usage: `perf_probe [prov: true|false] [trace: true|false]` — both
+/// default false; the second arm turns the flight recorder on and prints
+/// the obs summary next to the hop rate, so the probe doubles as a quick
+/// eyeball check of the recorder's cost.
 fn main() {
-    let mut args = std::env::args().skip(1);
-    let prov: bool = args.next().unwrap().parse().unwrap();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let parse_bool = |s: &String| match s.as_str() {
+        "true" | "1" => Some(true),
+        "false" | "0" => Some(false),
+        _ => None,
+    };
+    let (prov, trace) = match (args.first().map(&parse_bool), args.get(1).map(&parse_bool)) {
+        (Some(None), _) | (_, Some(None)) => {
+            eprintln!("usage: perf_probe [prov: true|false] [trace: true|false]");
+            std::process::exit(2);
+        }
+        (p, t) => (p.flatten().unwrap_or(false), t.flatten().unwrap_or(false)),
+    };
     let text = "[t]\n(w0) t0 (w1)\n(w1) t1 (w2)\n(w2) t2 (w3)\n(w3) t3 (w4)\n";
     for _ in 0..5 {
         let spec = parse(text).unwrap();
-        let cfg = DeployConfig { provenance: prov, ..Default::default() };
+        let cfg = DeployConfig { provenance: prov, trace, ..Default::default() };
         let mut pipe = Pipeline::deploy(&spec, cfg).unwrap();
         let w0 = pipe.source("w0").unwrap();
         // steady-state: inject in small batches like a live stream (the
@@ -24,6 +40,23 @@ fn main() {
         }
         let secs = wall.elapsed().as_secs_f64();
         let hops: u64 = pipe.links.iter().map(|l| l.delivered).sum();
-        println!("prov={prov} {:.0} hops/s", hops as f64 / secs);
+        println!("prov={prov} trace={trace} {:.0} hops/s", hops as f64 / secs);
+        if trace {
+            // the obs surface rides the same facade: Pipeline derefs to
+            // Coordinator, so obs()/obs_snapshot() are right there
+            let o = pipe.obs();
+            let wf = o.wavefront;
+            let firings: u64 = o.all_task_stats().iter().map(|t| t.firings).sum();
+            println!(
+                "  obs: {} spans recorded ({} retained, {} evicted); \
+                 {} instants / {} firings, max width {}",
+                o.rec.recorded(),
+                o.rec.len(),
+                o.rec.dropped(),
+                wf.instants,
+                firings,
+                wf.max_width
+            );
+        }
     }
 }

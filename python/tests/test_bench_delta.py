@@ -131,6 +131,66 @@ def test_par_fanout_healthy_speedup_is_quiet(tmp_path):
     assert "within tolerance" in out
 
 
+def test_obs_off_arm_gates_tighter_than_default(tmp_path):
+    # +8% on a regular ns_per_event metric: warning only. The same +8%
+    # on the trace-off arm breaches its 5% limit and fails the run.
+    base = doc([row("chain-4/prov/ns_per_event", 800.0)])
+    fresh = doc([row("chain-4/prov/ns_per_event", 864.0)])
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 0, out
+
+    base = doc([row("obs-overhead/off/ns_per_event", 800.0)])
+    fresh = doc([row("obs-overhead/off/ns_per_event", 864.0)])
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 1, out
+    assert "FAIL (> 5% regression)" in out
+
+
+def test_obs_on_overhead_gate_is_in_report(tmp_path):
+    # on-vs-off is compared within the fresh report: 20% overhead fails
+    # even when both arms match the baseline exactly
+    pair = lambda on: [
+        row("obs-overhead/off/ns_per_event", 1000.0),
+        row("obs-overhead/on/ns_per_event", on),
+    ]
+    base = doc(pair(1100.0))
+    fresh = doc(pair(1200.0))
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 1, out
+    assert "flight recorder costs" in out
+    assert "limit 15%" in out
+
+    fresh = doc(pair(1100.0))  # 10%: within budget
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 0, out
+    assert "within 15% budget" in out
+
+
+def test_obs_on_overhead_gate_holds_on_seed_baseline(tmp_path):
+    # the in-report gate needs no baseline — it fires on seed commits too
+    base = doc([])
+    fresh = doc(
+        [
+            row("obs-overhead/off/ns_per_event", 1000.0),
+            row("obs-overhead/on/ns_per_event", 1300.0),
+        ]
+    )
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 1, out
+    assert "first trajectory point" in out
+    assert "flight recorder costs" in out
+
+
+def test_obs_overhead_pct_is_metadata(tmp_path):
+    # the derived ratio may swing wildly run to run (3% -> 6% is +100%);
+    # it is gated by the absolute budget above, never by the delta table
+    base = doc([row("obs-overhead/overhead_pct", 3.0, "%")])
+    fresh = doc([row("obs-overhead/overhead_pct", 6.0, "%")])
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 0, out
+    assert "warn" not in out
+
+
 def test_environment_metadata_is_not_compared(tmp_path):
     # par/workers is the runner's core count: an 8-core baseline vs a
     # 4-core runner must not read as a 50% regression

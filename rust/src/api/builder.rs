@@ -46,6 +46,9 @@ pub struct PipelineBuilder {
     /// Deploy-time override of [`DeployConfig::workers`] (wavefront
     /// worker-pool width); `None` = whatever the passed config says.
     workers: Option<usize>,
+    /// Deploy-time override of [`DeployConfig::trace`] (flight recorder +
+    /// metrics); `None` = whatever the passed config says.
+    trace: Option<bool>,
 }
 
 impl PipelineBuilder {
@@ -55,6 +58,7 @@ impl PipelineBuilder {
             tasks: Vec::new(),
             errors: Vec::new(),
             workers: None,
+            trace: None,
         };
         if !valid_name(name) {
             b.errors.push(format!("bad pipeline name '{name}'"));
@@ -68,6 +72,16 @@ impl PipelineBuilder {
     /// wiring: `build()`'s spec is unaffected.
     pub fn workers(mut self, n: usize) -> Self {
         self.workers = Some(n.max(1));
+        self
+    }
+
+    /// Turn the observability layer on (or off) for the deployment: the
+    /// flight recorder and id-indexed metrics behind
+    /// [`Coordinator::obs`](crate::coordinator::Coordinator::obs). A
+    /// deploy-time knob like [`workers`](PipelineBuilder::workers):
+    /// `build()`'s spec is unaffected.
+    pub fn trace(mut self, on: bool) -> Self {
+        self.trace = Some(on);
         self
     }
 
@@ -113,6 +127,9 @@ impl PipelineBuilder {
     pub fn deploy(self, mut cfg: DeployConfig) -> Result<Pipeline> {
         if let Some(w) = self.workers {
             cfg.workers = w;
+        }
+        if let Some(t) = self.trace {
+            cfg.trace = t;
         }
         let spec = self.build()?;
         Pipeline::deploy(&spec, cfg)
@@ -231,6 +248,13 @@ impl TaskBuilder {
         self
     }
 
+    /// Turn the observability layer on (or off) mid-chain (see
+    /// [`PipelineBuilder::trace`]).
+    pub fn trace(mut self, on: bool) -> Self {
+        self.pb.trace = Some(on);
+        self
+    }
+
     /// Seal this task and return to the pipeline level (for loops that
     /// add tasks programmatically).
     pub fn done(self) -> PipelineBuilder {
@@ -331,6 +355,22 @@ mod tests {
             .emits("b")
             .build()
             .is_err());
+    }
+
+    #[test]
+    fn trace_knob_reaches_the_deployment() {
+        let pipe = PipelineBuilder::new("p")
+            .task("t").reads("a").emits("b")
+            .trace(true)
+            .deploy(DeployConfig { trace: false, ..Default::default() })
+            .unwrap();
+        assert!(pipe.obs().enabled, "builder trace(true) overrides the config");
+
+        let pipe = PipelineBuilder::new("p")
+            .task("t").reads("a").emits("b")
+            .deploy(DeployConfig { trace: false, ..Default::default() })
+            .unwrap();
+        assert!(!pipe.obs().enabled, "no override: config wins");
     }
 
     #[test]

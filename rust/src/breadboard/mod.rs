@@ -246,6 +246,21 @@ impl Breadboard {
         Ok(self.pipe.taps.stats(id))
     }
 
+    /// Live per-wire observability counters (publications / injections /
+    /// bytes / sink commits) from the deployment's [`Obs`](crate::obs::Obs)
+    /// registry — the panel meter next to the tap's scope probe.
+    /// Workspace-gated like tap reads (traffic volume is a side channel
+    /// too); `Ok(None)` when the deployment was not traced
+    /// (`DeployConfig::trace` off).
+    pub fn wire_counters(&mut self, wire: &str) -> Result<Option<crate::obs::WireStats>> {
+        self.authorize(Resource::Wire(wire.to_string()))?;
+        if !self.pipe.obs().enabled {
+            return Ok(None);
+        }
+        let wid = self.pipe.wire_id(wire)?;
+        Ok(self.pipe.obs().wire_stats(wid))
+    }
+
     // ------------------------------------------------------------------
     // Virtual-time control (pause / step / resume)
     // ------------------------------------------------------------------
@@ -478,6 +493,28 @@ mod tests {
     }
 
     #[test]
+    fn wire_counters_ride_the_obs_registry() {
+        // untraced session: the panel meter is dark, not an error
+        let mut b = session();
+        assert!(b.wire_counters("raw").unwrap().is_none());
+
+        let spec = crate::spec::parse("[bb]\n(raw) work (out)\n").unwrap();
+        let mut b =
+            Breadboard::deploy(&spec, DeployConfig { trace: true, ..Default::default() }).unwrap();
+        b.plug("work", scale_factory(1.0, 1)).unwrap();
+        inject_series(&mut b, &[1.0, 2.0], 0);
+        b.run_until_idle();
+        let raw = b.wire_counters("raw").unwrap().unwrap();
+        assert_eq!(raw.injections, 2);
+        assert!(raw.bytes > 0);
+        let out = b.wire_counters("out").unwrap().unwrap();
+        assert_eq!(out.publications, 2);
+        assert_eq!(out.sink_commits, 2);
+        // unknown wires fail resolution like every other name surface
+        assert!(b.wire_counters("nope").is_err());
+    }
+
+    #[test]
     fn out_of_order_injections_observe_in_virtual_time_order() {
         // observation rides the event queue, so future-dated injections
         // issued out of order still land in the ring oldest-first
@@ -605,5 +642,6 @@ mod tests {
         assert!(b.samples(tap).is_err(), "revocation is final for reads too");
         assert!(b.drain_samples(tap).is_err());
         assert!(b.tap_stats(tap).is_err(), "counters are gated like samples");
+        assert!(b.wire_counters("raw").is_err(), "obs counters are gated like taps");
     }
 }

@@ -31,6 +31,9 @@ impl Coordinator {
 
     /// Id-based demand (the handle API's path — `SinkHandle::demand`).
     pub fn demand_id(&mut self, wire: WireId) -> Result<AnnotatedValue> {
+        if self.obs.enabled {
+            self.obs.demand(self.plat.now, wire);
+        }
         let mut visited = HashSet::new();
         self.suppress_routing = true;
         let r = self.demand_wire(wire, &mut visited);

@@ -29,11 +29,12 @@ use crate::policy::{InputBuffer, RateControl, Snapshot, SnapshotEngine};
 use crate::provenance::{CheckpointEvent, Relation};
 use crate::spec::PipelineSpec;
 use crate::storage::{PurgePolicy, StorageConfig};
+use crate::obs::Obs;
 use crate::task::builtins::PassThrough;
-use crate::task::effects::{PreparedFiring, RecordedBody, RecordedRun};
+use crate::task::effects::{DeferReason, PreparedFiring, RecordedBody, RecordedRun};
 use crate::task::{RunOutcome, TaskAgent, TaskCode};
 use crate::util::{
-    AvId, ContentHash, LinkId, ObjectId, RegionId, SimDuration, SimTime, TaskId, WireId,
+    AvId, ContentHash, Json, LinkId, ObjectId, RegionId, SimDuration, SimTime, TaskId, WireId,
 };
 use anyhow::{anyhow, bail, Result};
 use std::cmp::Reverse;
@@ -71,6 +72,13 @@ pub struct DeployConfig {
     /// no effect recording). Defaults to `KOALJA_WORKERS` when set, else
     /// `std::thread::available_parallelism()`; clamped to ≥ 1 at deploy.
     pub workers: usize,
+    /// Flight recorder + id-indexed metrics registry (see [`crate::obs`]).
+    /// Off by default: disabled tracing costs one branch per
+    /// instrumentation site and records nothing. Turning it on never
+    /// changes a committed byte (spans record at commit in canonical
+    /// order); the overhead budget is benchmarked by the `obs-overhead`
+    /// shape pair. Defaults to `KOALJA_TRACE` when set ("1"/"true").
+    pub trace: bool,
 }
 
 /// The deploy-time default for [`DeployConfig::workers`]: the
@@ -85,6 +93,15 @@ pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// The deploy-time default for [`DeployConfig::trace`]: the `KOALJA_TRACE`
+/// env override (the CI determinism matrix sets it to 0 and 1), else off.
+pub fn default_trace() -> bool {
+    match std::env::var("KOALJA_TRACE") {
+        Ok(v) => matches!(v.trim(), "1" | "true"),
+        Err(_) => false,
+    }
+}
+
 impl Default for DeployConfig {
     fn default() -> Self {
         Self {
@@ -97,6 +114,7 @@ impl Default for DeployConfig {
             placement: PlacementStrategy::NetworkAttached,
             force_central: false,
             workers: default_workers(),
+            trace: default_trace(),
         }
     }
 }
@@ -335,6 +353,10 @@ pub struct Coordinator {
     pending_pumps: Vec<PendingPump>,
     /// Deterministic commit log of sink captures (see [`SinkCommit`]).
     commit_log: Vec<SinkCommit>,
+    /// Flight recorder + id-indexed metrics (see [`crate::obs`]). Every
+    /// instrumentation site guards on `obs.enabled`, so a trace-off
+    /// deployment pays one branch per site (benchmarked: `obs-overhead`).
+    obs: Obs,
 }
 
 impl Coordinator {
@@ -481,6 +503,7 @@ impl Coordinator {
         // one shared copy of the interned names for every dense per-wire
         // structure (sink book, wire currency, tap mask)
         let wire_names: Arc<Vec<String>> = Arc::new(graph.wires.names().to_vec());
+        let (n_tasks, n_wires) = (graph.n_tasks(), graph.wires.len());
 
         Ok(Self {
             graph,
@@ -503,6 +526,7 @@ impl Coordinator {
             workers: cfg.workers.max(1),
             pending_pumps: Vec::new(),
             commit_log: Vec::new(),
+            obs: Obs::sized(cfg.trace, n_tasks, n_wires),
         })
     }
 
@@ -510,6 +534,23 @@ impl Coordinator {
     /// fully sequential).
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// The observability registry: flight recorder, per-task/per-wire
+    /// counters, wavefront occupancy. Empty unless the deployment set
+    /// [`DeployConfig::trace`].
+    pub fn obs(&self) -> &Obs {
+        &self.obs
+    }
+
+    /// Schema'd JSON export of the observability registry (tasks, wires,
+    /// wavefront occupancy, retained span dump), names resolved against
+    /// the deploy-time intern tables.
+    pub fn obs_snapshot(&self) -> Json {
+        let task_names: Vec<&str> = self.graph.tasks.iter().map(|t| t.name.as_str()).collect();
+        let wire_names: Vec<&str> =
+            self.graph.wires.names().iter().map(|n| n.as_str()).collect();
+        self.obs.snapshot(&self.graph.name, &task_names, &wire_names)
     }
 
     /// Plug task code into a task (recorded in the agent's versioned code
@@ -620,7 +661,12 @@ impl Coordinator {
         let watched = self.taps.watches(wire);
         let current = at <= self.plat.now;
         let wire_name = self.graph.wires.name(wire).to_string();
-        Ok(self.inject_prepared(wire, &wire_name, payload, class, region, at, watched, current, fanout))
+        let id =
+            self.inject_prepared(wire, &wire_name, payload, class, region, at, watched, current, fanout);
+        if self.obs.enabled {
+            self.obs.inject_span(at, wire, 1);
+        }
+        Ok(id)
     }
 
     /// One payload's mint → ledger → tap → currency → fan-out sequence,
@@ -649,6 +695,9 @@ impl Coordinator {
         let (av, _lat) =
             self.plat.mint_av(payload, EXTERNAL, run, 0, SINK, region, class, 0, &[], at);
         self.plat.now = saved_now;
+        if self.obs.enabled {
+            self.obs.inject_value(wire, av.size_bytes);
+        }
         // forensic ledger: the breadboard replays a window from exactly
         // these records + the deployment seed (§III-J reconstruction)
         self.plat.prov.record_injection(crate::provenance::InjectionRecord {
@@ -747,6 +796,9 @@ impl Coordinator {
                 wire, &wire_name, payload, class, region, at, watched, current, fanout,
             ));
         }
+        if self.obs.enabled {
+            self.obs.inject_span(at, wire, ids.len() as u32);
+        }
         Ok(ids)
     }
 
@@ -824,6 +876,9 @@ impl Coordinator {
             self.dispatch(ev.kind);
             handled += 1;
         }
+        if self.obs.enabled {
+            self.obs.instant(at, handled as u32);
+        }
         self.flush_wavefront();
         handled
     }
@@ -865,6 +920,9 @@ impl Coordinator {
                 }
             }
             EventKind::TapObserve { wire, av } => {
+                if self.obs.enabled {
+                    self.obs.tap_observe(self.plat.now, wire, av.id);
+                }
                 self.taps.observe(wire, &av, &self.plat.store, self.plat.now);
             }
         }
@@ -980,14 +1038,38 @@ impl Coordinator {
             groups.push(WaveGroup { task: p.task, via_poll: p.via_poll, queued, snaps });
         }
         let busy = groups.iter().filter(|g| !g.snaps.is_empty()).count();
+        // wavefront spans carry the width only (identical for every
+        // `workers` setting); occupancy lands in stats, never in spans
+        let width: u32 = groups.iter().map(|g| g.snaps.len() as u32).sum();
+        if self.obs.enabled && width > 0 {
+            self.obs.wavefront_begin(self.plat.now, width);
+        }
         if self.workers > 1 && busy >= 2 {
+            if self.obs.enabled {
+                self.obs.wavefront_parallel(busy as u32);
+            }
             // phases 2+3: execute on the worker pool, then commit in
             // task-index order
             let prepared = wavefront::execute_parallel(self, &mut groups);
             for (g, items) in groups.iter().zip(prepared) {
                 for item in items {
                     match item {
-                        PreparedFiring::Deferred(snap) => {
+                        PreparedFiring::Deferred(snap, reason) => {
+                            if self.obs.enabled {
+                                // scheduling notes, not behavior: these
+                                // spans exist only on the pool path and
+                                // are projected out of the cross-worker
+                                // span-identity comparison
+                                match reason {
+                                    DeferReason::Sequential => self
+                                        .obs
+                                        .note_deferred_sequential(self.plat.now, g.task),
+                                    DeferReason::Direct => {
+                                        self.obs.note_rollback(self.plat.now, g.task)
+                                    }
+                                    DeferReason::MemoHit => self.obs.note_deferred_memo(),
+                                }
+                            }
                             if let Err(e) = self.fire_snapshot(g.task, snap) {
                                 self.record_task_error(g.task, e);
                             }
@@ -1010,6 +1092,9 @@ impl Coordinator {
                 }
                 self.pump_epilogue(task, groups[gi].queued, groups[gi].via_poll);
             }
+        }
+        if self.obs.enabled && width > 0 {
+            self.obs.wavefront_commit(self.plat.now, width);
         }
         // hand the drained pump list back: steady state reuses its
         // capacity instant after instant (§Perf)
@@ -1080,6 +1165,11 @@ impl Coordinator {
     fn record_task_error(&mut self, task: TaskId, e: anyhow::Error) {
         self.plat.metrics.bump("task_errors");
         let run = self.plat.next_run_id();
+        if self.obs.enabled {
+            // plain errors and caught panics are indistinguishable here —
+            // the panic guard converts both to the same error shape
+            self.obs.firing_failed(self.plat.now, task, run);
+        }
         self.plat.prov.checkpoint(
             task,
             run,
@@ -1149,6 +1239,9 @@ impl Coordinator {
     ) {
         match outcome {
             RunOutcome::Ran { run, mut emissions, cost, ghost } => {
+                if self.obs.enabled {
+                    self.obs.firing_run(self.plat.now, task, run, cost);
+                }
                 let publish_base = self.plat.now + cold + cost;
                 let mut memo_rec = Vec::new();
                 for (ei, em) in emissions.drain(..).enumerate() {
@@ -1238,6 +1331,11 @@ impl Coordinator {
                 // defer keeps deferred emissions trailing the run exactly
                 // as they did when computed.
                 let publish_base = self.plat.now + cold + SimDuration::micros(30);
+                // a memo replay draws one run id per output — the firing
+                // span records the first (the id the checkpoint ledger
+                // joins on); recorded after the loop so an output-less hit
+                // still leaves no span
+                let mut memo_run = None;
                 for (wire, object, content, size, class, defer) in outputs {
                     let publish_at = publish_base + defer;
                     // every memo entry carries an interned wire: either one
@@ -1254,6 +1352,9 @@ impl Coordinator {
                     let seq = self.agents[task.index()].out_seq;
                     self.agents[task.index()].out_seq += 1;
                     let run = self.plat.next_run_id();
+                    if memo_run.is_none() {
+                        memo_run = Some(run);
+                    }
                     let id = self.plat.next_av_id();
                     let av = AnnotatedValue {
                         id,
@@ -1282,6 +1383,11 @@ impl Coordinator {
                     );
                     self.plat.prov.register_object(id, object, size);
                     self.route_output(task, target, Arc::new(av), None, publish_at);
+                }
+                if self.obs.enabled {
+                    if let Some(run) = memo_run {
+                        self.obs.firing_memo(self.plat.now, task, run);
+                    }
                 }
             }
         }
@@ -1316,6 +1422,9 @@ impl Coordinator {
             RouteTarget::Slot(si) => (self.out_links[from.index()][si].wire, Some(si)),
             RouteTarget::Wire(w) => (w, None),
         };
+        if self.obs.enabled {
+            self.obs.publish(at, from, wire, av.id, av.size_bytes);
+        }
         // breadboard probe point: one observation per value published on
         // the wire, regardless of consumer fan-out, stamped at publish
         // time through the queue so rings stay time-ordered. `watches` is
@@ -1340,6 +1449,9 @@ impl Coordinator {
             // unbounded growth on provenance-off deployments.
             if self.plat.prov.enabled {
                 self.commit_log.push(SinkCommit { wire, at, content: av.content });
+            }
+            if self.obs.enabled {
+                self.obs.sink_commit(at, wire, av.id);
             }
             let rec = Collected { at, av: (*av).clone(), payload };
             self.collected.push(wire, rec);

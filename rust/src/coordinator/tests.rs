@@ -88,7 +88,7 @@ fn make_mode_rebuilds_only_stale_suffix() {
 #[test]
 fn ghost_batch_exposes_routing_without_payload_cost() {
     let mut c = deploy("[g]\n(raw) screen (mid)\n(mid) aggregate (out)\n");
-    let wan_before = c.plat.metrics.bytes(crate::metrics::NetTier::Wan);
+    let wan_before = c.plat.metrics.bytes(crate::obs::NetTier::Wan);
     let ghost = c.inject_ghost("raw", 100 << 20, RegionId::new(0)).unwrap();
     c.run_until_idle();
     // route is visible...
@@ -97,7 +97,7 @@ fn ghost_batch_exposes_routing_without_payload_cost() {
     // ...but no real compute ran and no payload bytes moved
     assert_eq!(c.plat.metrics.task_runs, 0);
     assert_eq!(c.plat.metrics.ghost_runs, 2);
-    assert_eq!(c.plat.metrics.bytes(crate::metrics::NetTier::Wan), wan_before);
+    assert_eq!(c.plat.metrics.bytes(crate::obs::NetTier::Wan), wan_before);
 }
 
 #[test]

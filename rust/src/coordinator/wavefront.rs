@@ -32,7 +32,7 @@
 use super::{Coordinator, TaskId};
 use crate::graph::WireTable;
 use crate::policy::Snapshot;
-use crate::task::effects::{PreparedFiring, WorldView};
+use crate::task::effects::{DeferReason, PreparedFiring, WorldView};
 use crate::task::TaskAgent;
 use crate::util::ContentHash;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -116,7 +116,9 @@ fn prepare_group(
 ) -> Vec<PreparedFiring> {
     let mut out = Vec::with_capacity(snaps.len());
     if !agent.code.parallel_safe() {
-        out.extend(snaps.into_iter().map(PreparedFiring::Deferred));
+        out.extend(
+            snaps.into_iter().map(|s| PreparedFiring::Deferred(s, DeferReason::Sequential)),
+        );
         return out;
     }
     let mut attempted: Vec<ContentHash> = Vec::new();
@@ -125,7 +127,7 @@ fn prepare_group(
         let dup = attempted.contains(&recipe);
         attempted.push(recipe);
         if !snap.ghost && (dup || agent.memo_valid_in(world.store, recipe)) {
-            out.push(PreparedFiring::Deferred(snap));
+            out.push(PreparedFiring::Deferred(snap, DeferReason::MemoHit));
             continue;
         }
         out.push(agent.execute_recorded(world, wires, snap, recipe));

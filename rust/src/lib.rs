@@ -15,6 +15,8 @@
 //! * [`task`] / [`link`] — smart task & link agents
 //! * [`policy`] — snapshot policies (AllNew / SwapNewForOld / Merge / windows)
 //! * [`provenance`] — the three metadata stories (traveller / checkpoint / map)
+//! * [`obs`] — observability: the flight recorder + id-indexed metrics
+//!   (`Coordinator::obs()`, `koalja trace`)
 //! * [`runtime`] — PJRT loader for the AOT-compiled JAX+Pallas artifacts
 //! * [`storage`], [`bus`], [`net`], [`cluster`], [`workspace`] — substrates
 //! * [`baseline`] — cron-style and centralized comparators
@@ -32,6 +34,7 @@ pub mod graph;
 pub mod link;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod platform;
 pub mod policy;
 pub mod provenance;
@@ -49,8 +52,11 @@ pub mod prelude {
     pub use crate::av::{DataClass, Payload};
     pub use crate::breadboard::{Breadboard, TapSpec};
     pub use crate::bus::NotifyMode;
-    pub use crate::coordinator::{default_workers, Collected, Coordinator, DeployConfig, SinkCommit};
+    pub use crate::coordinator::{
+        default_trace, default_workers, Collected, Coordinator, DeployConfig, SinkCommit,
+    };
     pub use crate::net::{demo_topology, WanLink, WanTopology};
+    pub use crate::obs::{FiringKind, Obs, SpanEvent, TaskStats, WireStats};
     pub use crate::platform::{PlacementStrategy, Service};
     pub use crate::policy::{BufferSpec, Snapshot, SnapshotPolicy};
     pub use crate::provenance::ProvenanceQuery;

@@ -26,13 +26,19 @@ USAGE:
       List the AOT manifest and compile every artifact on the PJRT CPU
       client (default dir: ./artifacts).
 
-  koalja trace <spec.koalja>
-      Run a short synthetic session, then dump the provenance registry
-      (traveller passports, checkpoint logs, concept map) as JSON.
+  koalja trace <spec.koalja> [--grep PAT] [--spans N] [--json DIR]
+      Run a short synthetic session with the flight recorder on; print
+      the per-task and per-wire observability tables, the wavefront
+      occupancy summary, and a span dump with names resolved (--grep
+      filters spans by task/wire/event substring; --spans caps the dump,
+      default 40). Every firing's run id is checked against the
+      provenance checkpoint ledger, and the schema'd obs snapshot is
+      exported as JSON (default dir: artifacts/obs).
 
   koalja bread <spec.koalja> [--swap TASK] [--seconds N]
-      Scripted breadboard session (§III-H): attach live wire taps to every
-      wire, stream synthetic data, hot-swap TASK (default: the producer of
+      Scripted breadboard session (§III-H): attach live wire taps (plus
+      the obs registry's per-wire counters) to every wire, stream
+      synthetic data, hot-swap TASK (default: the producer of
       the first sink) with a dry-run invalidation preview and a version
       bump, then forensically replay the whole run from the provenance
       ledger + seed — the pre-swap window shows hash drift (old software),
@@ -172,10 +178,22 @@ fn cmd_artifacts(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Traced synthetic session: feed every in-tray, then render the flight
+/// recorder + id-indexed metrics (`Coordinator::obs`) as tables and a
+/// span dump, cross-check firing run ids against the provenance
+/// checkpoint ledger, and export the schema'd JSON snapshot.
 fn cmd_trace(args: &[String]) -> Result<()> {
+    use koalja::obs::NO_RUN;
+    use koalja::util::TaskId;
+
     let path = args.first().ok_or_else(|| anyhow!("trace: missing spec path"))?;
     let spec = load_spec(path)?;
-    let mut pipe = Pipeline::deploy(&spec, DeployConfig::default())?;
+    let grep = flag_value(args, "--grep");
+    let span_cap: usize =
+        flag_value(args, "--spans").map(|v| v.parse()).transpose()?.unwrap_or(40);
+    let json_dir = flag_value(args, "--json").unwrap_or_else(|| "artifacts/obs".into());
+
+    let mut pipe = Pipeline::deploy(&spec, DeployConfig { trace: true, ..Default::default() })?;
     let mut r = rng(11);
     for src in pipe.sources().to_vec() {
         for i in 0..3u64 {
@@ -190,7 +208,130 @@ fn cmd_trace(args: &[String]) -> Result<()> {
         }
     }
     pipe.run_until_idle();
-    println!("{}", pipe.plat.prov.dump_json().to_string());
+
+    let obs = pipe.obs();
+    let tname = |t: TaskId| pipe.graph.task(t).name.as_str();
+    let wname = |w: WireId| pipe.graph.wires.name(w);
+
+    println!(
+        "[{}] traced session: {} spans recorded ({} retained, {} evicted)",
+        spec.name,
+        obs.rec.recorded(),
+        obs.rec.len(),
+        obs.rec.dropped()
+    );
+    let wf = obs.wavefront;
+    println!(
+        "wavefront: {} instants / {} firings, max width {}, {} parallel instants, \
+         {} deferred ({} rollbacks)",
+        wf.instants, wf.firings, wf.max_width, wf.parallel_instants, wf.deferred, wf.rollbacks
+    );
+
+    // per-task table, busiest first
+    println!("\n  task              firings  memo  errs  defer  rollbk  mean_us  p99_us");
+    let mut rows: Vec<(usize, &TaskStats)> = obs.all_task_stats().iter().enumerate().collect();
+    rows.sort_by(|a, b| b.1.firings.cmp(&a.1.firings).then(a.0.cmp(&b.0)));
+    for (i, t) in rows.iter().take(10) {
+        println!(
+            "  {:<18} {:>6} {:>5} {:>5} {:>6} {:>7} {:>8} {:>7}",
+            tname(TaskId::new(*i as u64)),
+            t.firings,
+            t.memo_hits,
+            t.errors,
+            t.deferred,
+            t.rollbacks,
+            t.latency.mean().as_micros(),
+            t.latency.quantile(0.99).as_micros()
+        );
+    }
+    if rows.len() > 10 {
+        println!("  … {} more tasks (full set in the JSON snapshot)", rows.len() - 10);
+    }
+
+    // per-wire table (only wires that saw traffic)
+    println!("\n  wire               publ   inj  sink      bytes");
+    for (i, w) in obs.all_wire_stats().iter().enumerate() {
+        if w.publications + w.injections + w.sink_commits == 0 {
+            continue;
+        }
+        println!(
+            "  {:<18} {:>4} {:>5} {:>5} {:>10}",
+            wname(WireId::new(i as u32)),
+            w.publications,
+            w.injections,
+            w.sink_commits,
+            w.bytes
+        );
+    }
+
+    // every execution span's run id must resolve in the checkpoint ledger
+    // — the join the ids were interned for
+    let mut ledger_runs = std::collections::HashSet::new();
+    for i in 0..pipe.graph.n_tasks() {
+        for e in pipe.plat.prov.checkpoint_log(TaskId::new(i as u64)) {
+            ledger_runs.insert(e.run);
+        }
+    }
+    let (mut firing_spans, mut resolved) = (0u64, 0u64);
+    for s in obs.rec.spans() {
+        if let Some(run) = s.event.run() {
+            firing_spans += 1;
+            if ledger_runs.contains(&run) {
+                resolved += 1;
+            }
+        }
+    }
+    println!(
+        "\nprovenance join: {resolved}/{firing_spans} firing run ids resolve in the \
+         checkpoint ledger"
+    );
+
+    // span dump, names resolved; --grep filters on the rendered line
+    let render = |s: &koalja::obs::Span| -> String {
+        let detail = match s.event {
+            SpanEvent::InjectBatch { wire, count } => format!("{} x{count}", wname(wire)),
+            SpanEvent::InstantDrain { events } => format!("{events} events"),
+            SpanEvent::WavefrontExtract { width }
+            | SpanEvent::WavefrontExecute { width }
+            | SpanEvent::WavefrontCommit { width } => format!("width {width}"),
+            SpanEvent::Firing { task, run, kind } if run == NO_RUN => {
+                format!("{} [{}]", tname(task), kind.as_str())
+            }
+            SpanEvent::Firing { task, run, kind } => {
+                format!("{} [{}] {run}", tname(task), kind.as_str())
+            }
+            SpanEvent::Publish { task, wire, av, bytes } => {
+                format!("{} -> {} {av} ({bytes} B)", tname(task), wname(wire))
+            }
+            SpanEvent::SinkCommit { wire, av } => format!("{} {av}", wname(wire)),
+            SpanEvent::TapObserve { wire, av } => format!("{} {av}", wname(wire)),
+            SpanEvent::Demand { wire } => wname(wire).to_string(),
+        };
+        format!("  {:>6}  t+{:>9}us  {:<18} {detail}", s.seq, s.at.as_micros(), s.event.name())
+    };
+    let lines: Vec<String> = obs
+        .rec
+        .spans()
+        .map(render)
+        .filter(|l| grep.as_deref().map_or(true, |g| l.contains(g)))
+        .collect();
+    match &grep {
+        Some(g) => println!("\nspans matching '{g}': {}", lines.len()),
+        None => println!("\nspans (last {} of {} retained):", span_cap.min(lines.len()), lines.len()),
+    }
+    let skip = lines.len().saturating_sub(span_cap);
+    if skip > 0 {
+        println!("  … {skip} earlier spans elided (--spans N to widen)");
+    }
+    for l in lines.iter().skip(skip) {
+        println!("{l}");
+    }
+
+    // schema'd JSON export — the same artifact ci.sh publishes
+    std::fs::create_dir_all(&json_dir).with_context(|| format!("creating {json_dir}"))?;
+    let out = format!("{json_dir}/{}_obs.json", spec.name);
+    std::fs::write(&out, pipe.obs_snapshot().to_string()).with_context(|| format!("writing {out}"))?;
+    println!("\nobs snapshot -> {out}");
     Ok(())
 }
 
@@ -234,8 +375,10 @@ fn cmd_bread(args: &[String]) -> Result<()> {
         bail!("bread: spec has no external wires to feed");
     }
 
-    // the session runs as a workspace principal with explicit grants (§IV)
-    let mut bread = Breadboard::deploy(&spec, DeployConfig::default())?.as_principal("operator");
+    // the session runs as a workspace principal with explicit grants (§IV),
+    // with the flight recorder on so live wire counters sit next to the taps
+    let mut bread = Breadboard::deploy(&spec, DeployConfig { trace: true, ..Default::default() })?
+        .as_principal("operator");
     let ws = bread.plat.workspaces.create("breadboard");
     bread.plat.workspaces.add_member(ws, "operator");
     bread.plat.workspaces.grant(ws, koalja::workspace::Resource::Pipeline(spec.name.clone()));
@@ -300,6 +443,13 @@ fn cmd_bread(args: &[String]) -> Result<()> {
             stats.dropped,
             last.unwrap_or_else(|| "-".into())
         );
+        // the obs registry's panel meter for the same wire
+        if let Some(c) = bread.wire_counters(wire)? {
+            println!(
+                "  obs {wire:16} publ={:4} inj={:8} sink={:6} bytes={}",
+                c.publications, c.injections, c.sink_commits, c.bytes
+            );
+        }
     }
 
     // 3. hot-swap: dry-run preview, then commit a v2 that doubles tensors

@@ -1,243 +1,6 @@
-//! Platform metrics: counters, latency histograms, bytes-moved and an
-//! energy proxy.
-//!
-//! The paper frames transport avoidance as "rapidly becoming a global
-//! sustainability imperative" (§III-G); to make that measurable we account
-//! every byte by the network tier it crossed and convert to a joule proxy
-//! (E7, fig. 11 experiments).
+//! Compatibility shim: the metrics types moved into the observability
+//! layer ([`crate::obs`]) when the id-indexed registries and the flight
+//! recorder landed. Existing `koalja::metrics::{NetTier, ...}` paths keep
+//! working; new code should import from `crate::obs` directly.
 
-use crate::util::{SimDuration, SimTime};
-
-use std::collections::BTreeMap;
-
-/// Which hop a transfer crossed — the cost hierarchy of §III-G.
-#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
-pub enum NetTier {
-    /// Same host: RAM / local disk.
-    Local,
-    /// Same region: storage network / fibre channel.
-    Lan,
-    /// Cross-region: the expensive, contended wide-area path.
-    Wan,
-}
-
-/// Energy proxy constants (J/byte moved, J/task-run overhead). Absolute
-/// values are order-of-magnitude literature figures; the *ratios* between
-/// tiers are what the experiments depend on.
-#[derive(Clone, Copy, Debug)]
-pub struct EnergyModel {
-    pub j_per_byte_local: f64,
-    pub j_per_byte_lan: f64,
-    pub j_per_byte_wan: f64,
-    pub j_per_run: f64,
-}
-
-impl Default for EnergyModel {
-    fn default() -> Self {
-        Self {
-            j_per_byte_local: 1e-9,
-            j_per_byte_lan: 2e-8,
-            j_per_byte_wan: 2e-6,
-            j_per_run: 1e-2,
-        }
-    }
-}
-
-impl EnergyModel {
-    pub fn per_byte(&self, tier: NetTier) -> f64 {
-        match tier {
-            NetTier::Local => self.j_per_byte_local,
-            NetTier::Lan => self.j_per_byte_lan,
-            NetTier::Wan => self.j_per_byte_wan,
-        }
-    }
-}
-
-/// Fixed-boundary latency histogram (power-of-2 microsecond buckets).
-#[derive(Clone, Debug, Default)]
-pub struct LatencyHistogram {
-    /// bucket i counts samples in [2^i, 2^{i+1}) microseconds; bucket 0
-    /// includes 0.
-    buckets: Vec<u64>,
-    count: u64,
-    sum_us: u64,
-    max_us: u64,
-}
-
-impl LatencyHistogram {
-    pub fn record(&mut self, d: SimDuration) {
-        let us = d.as_micros();
-        let idx = (64 - us.leading_zeros()) as usize; // 0 -> 0
-        if self.buckets.len() <= idx {
-            self.buckets.resize(idx + 1, 0);
-        }
-        self.buckets[idx] += 1;
-        self.count += 1;
-        self.sum_us += us;
-        self.max_us = self.max_us.max(us);
-    }
-
-    pub fn count(&self) -> u64 {
-        self.count
-    }
-
-    pub fn mean(&self) -> SimDuration {
-        if self.count == 0 {
-            return SimDuration::ZERO;
-        }
-        SimDuration::micros(self.sum_us / self.count)
-    }
-
-    pub fn max(&self) -> SimDuration {
-        SimDuration::micros(self.max_us)
-    }
-
-    /// Upper bucket boundary below which `q` of the mass falls.
-    pub fn quantile(&self, q: f64) -> SimDuration {
-        if self.count == 0 {
-            return SimDuration::ZERO;
-        }
-        let target = (self.count as f64 * q).ceil() as u64;
-        let mut seen = 0;
-        for (i, &c) in self.buckets.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                return SimDuration::micros(if i == 0 { 0 } else { 1 << i });
-            }
-        }
-        self.max()
-    }
-}
-
-/// The platform-wide metrics sink. Cheap to update on the hot path.
-#[derive(Clone, Debug, Default)]
-pub struct Metrics {
-    pub counters: BTreeMap<String, u64>,
-    pub bytes_moved: BTreeMap<NetTier, u64>,
-    pub task_runs: u64,
-    pub ghost_runs: u64,
-    pub cache_hits: u64,
-    pub cache_misses: u64,
-    pub wasted_runs: u64,
-    pub notifications_sent: u64,
-    pub polls_performed: u64,
-    pub polls_empty: u64,
-    pub energy: EnergyModel,
-    pub joules: f64,
-    pub e2e_latency: LatencyHistogram,
-    pub storage_latency: LatencyHistogram,
-}
-
-impl Metrics {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    pub fn bump(&mut self, key: &str) {
-        self.add(key, 1);
-    }
-
-    pub fn add(&mut self, key: &str, n: u64) {
-        *self.counters.entry(key.to_string()).or_insert(0) += n;
-    }
-
-    pub fn get(&self, key: &str) -> u64 {
-        self.counters.get(key).copied().unwrap_or(0)
-    }
-
-    /// Account a transfer of `bytes` across `tier` (bytes + joules).
-    pub fn moved(&mut self, tier: NetTier, bytes: u64) {
-        *self.bytes_moved.entry(tier).or_insert(0) += bytes;
-        self.joules += bytes as f64 * self.energy.per_byte(tier);
-    }
-
-    pub fn bytes(&self, tier: NetTier) -> u64 {
-        self.bytes_moved.get(&tier).copied().unwrap_or(0)
-    }
-
-    pub fn ran_task(&mut self, ghost: bool) {
-        if ghost {
-            self.ghost_runs += 1;
-        } else {
-            self.task_runs += 1;
-            self.joules += self.energy.j_per_run;
-        }
-    }
-
-    /// Record an end-to-end artifact latency: source stamp → sink arrival.
-    pub fn e2e(&mut self, born: SimTime, done: SimTime) {
-        self.e2e_latency.record(done.saturating_sub(born));
-    }
-
-    pub fn report(&self) -> String {
-        let mut s = String::new();
-        s.push_str(&format!(
-            "task_runs={} ghost_runs={} wasted_runs={} cache_hit/miss={}/{}\n",
-            self.task_runs, self.ghost_runs, self.wasted_runs, self.cache_hits, self.cache_misses
-        ));
-        s.push_str(&format!(
-            "bytes local={} lan={} wan={}  energy={:.3}J\n",
-            self.bytes(NetTier::Local),
-            self.bytes(NetTier::Lan),
-            self.bytes(NetTier::Wan),
-            self.joules
-        ));
-        s.push_str(&format!(
-            "notify={} polls={} (empty {})  e2e mean={} p99~{} n={}\n",
-            self.notifications_sent,
-            self.polls_performed,
-            self.polls_empty,
-            self.e2e_latency.mean(),
-            self.e2e_latency.quantile(0.99),
-            self.e2e_latency.count()
-        ));
-        for (k, v) in &self.counters {
-            s.push_str(&format!("  {k}={v}\n"));
-        }
-        s
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn histogram_mean_and_quantile() {
-        let mut h = LatencyHistogram::default();
-        for us in [1u64, 2, 4, 8, 1000] {
-            h.record(SimDuration::micros(us));
-        }
-        assert_eq!(h.count(), 5);
-        assert_eq!(h.mean().as_micros(), (1 + 2 + 4 + 8 + 1000) / 5);
-        assert!(h.quantile(0.5).as_micros() <= 8);
-        assert!(h.quantile(1.0).as_micros() >= 1000);
-    }
-
-    #[test]
-    fn energy_scales_with_tier() {
-        let mut m = Metrics::new();
-        m.moved(NetTier::Local, 1_000_000);
-        let local_j = m.joules;
-        m.moved(NetTier::Wan, 1_000_000);
-        // WAN must dominate by orders of magnitude (the E7 premise).
-        assert!(m.joules - local_j > local_j * 100.0);
-        assert_eq!(m.bytes(NetTier::Wan), 1_000_000);
-    }
-
-    #[test]
-    fn counters_accumulate() {
-        let mut m = Metrics::new();
-        m.bump("snapshots");
-        m.add("snapshots", 2);
-        assert_eq!(m.get("snapshots"), 3);
-        assert_eq!(m.get("absent"), 0);
-    }
-
-    #[test]
-    fn e2e_latency_saturates() {
-        let mut m = Metrics::new();
-        m.e2e(SimTime::micros(100), SimTime::micros(50)); // clock skew guard
-        assert_eq!(m.e2e_latency.max().as_micros(), 0);
-    }
-}
+pub use crate::obs::{EnergyModel, LatencyHistogram, Metrics, NetTier};

@@ -8,7 +8,7 @@
 //! constraints live in.
 
 use crate::av::DataClass;
-use crate::metrics::NetTier;
+use crate::obs::NetTier;
 use crate::util::{RegionId, SimDuration};
 
 use std::collections::HashMap;

@@ -1,0 +1,133 @@
+//! The platform-wide metrics sink: counters, bytes-moved, energy, e2e
+//! latency. Cheap to update on the hot path.
+//!
+//! This is the always-on half of observability — the substrates (storage,
+//! bus, links) account here unconditionally, exactly as they did when this
+//! lived in the old `metrics` module. The per-task / per-wire Vec-indexed
+//! registries and the flight recorder live in [`super::Obs`] and are
+//! gated; see the module doc for the split.
+
+use super::{EnergyModel, LatencyHistogram, NetTier};
+use crate::util::{SimDuration, SimTime};
+use std::collections::BTreeMap;
+
+/// The platform-wide metrics sink. Cheap to update on the hot path.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub counters: BTreeMap<String, u64>,
+    pub bytes_moved: BTreeMap<NetTier, u64>,
+    pub task_runs: u64,
+    pub ghost_runs: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub wasted_runs: u64,
+    pub notifications_sent: u64,
+    pub polls_performed: u64,
+    pub polls_empty: u64,
+    pub energy: EnergyModel,
+    pub joules: f64,
+    pub e2e_latency: LatencyHistogram,
+    pub storage_latency: LatencyHistogram,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn bump(&mut self, key: &str) {
+        self.add(key, 1);
+    }
+
+    pub fn add(&mut self, key: &str, n: u64) {
+        *self.counters.entry(key.to_string()).or_insert(0) += n;
+    }
+
+    pub fn get(&self, key: &str) -> u64 {
+        self.counters.get(key).copied().unwrap_or(0)
+    }
+
+    /// Account a transfer of `bytes` across `tier` (bytes + joules).
+    pub fn moved(&mut self, tier: NetTier, bytes: u64) {
+        *self.bytes_moved.entry(tier).or_insert(0) += bytes;
+        self.joules += bytes as f64 * self.energy.per_byte(tier);
+    }
+
+    pub fn bytes(&self, tier: NetTier) -> u64 {
+        self.bytes_moved.get(&tier).copied().unwrap_or(0)
+    }
+
+    pub fn ran_task(&mut self, ghost: bool) {
+        if ghost {
+            self.ghost_runs += 1;
+        } else {
+            self.task_runs += 1;
+            self.joules += self.energy.j_per_run;
+        }
+    }
+
+    /// Record an end-to-end artifact latency: source stamp → sink arrival.
+    pub fn e2e(&mut self, born: SimTime, done: SimTime) {
+        self.e2e_latency.record(done.saturating_sub(born));
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "task_runs={} ghost_runs={} wasted_runs={} cache_hit/miss={}/{}\n",
+            self.task_runs, self.ghost_runs, self.wasted_runs, self.cache_hits, self.cache_misses
+        ));
+        s.push_str(&format!(
+            "bytes local={} lan={} wan={}  energy={:.3}J\n",
+            self.bytes(NetTier::Local),
+            self.bytes(NetTier::Lan),
+            self.bytes(NetTier::Wan),
+            self.joules
+        ));
+        s.push_str(&format!(
+            "notify={} polls={} (empty {})  e2e mean={} p99~{} n={}\n",
+            self.notifications_sent,
+            self.polls_performed,
+            self.polls_empty,
+            self.e2e_latency.mean(),
+            self.e2e_latency.quantile(0.99),
+            self.e2e_latency.count()
+        ));
+        for (k, v) in &self.counters {
+            s.push_str(&format!("  {k}={v}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_scales_with_tier() {
+        let mut m = Metrics::new();
+        m.moved(NetTier::Local, 1_000_000);
+        let local_j = m.joules;
+        m.moved(NetTier::Wan, 1_000_000);
+        // WAN must dominate by orders of magnitude (the E7 premise).
+        assert!(m.joules - local_j > local_j * 100.0);
+        assert_eq!(m.bytes(NetTier::Wan), 1_000_000);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut m = Metrics::new();
+        m.bump("snapshots");
+        m.add("snapshots", 2);
+        assert_eq!(m.get("snapshots"), 3);
+        assert_eq!(m.get("absent"), 0);
+    }
+
+    #[test]
+    fn e2e_latency_saturates() {
+        let mut m = Metrics::new();
+        m.e2e(SimTime::micros(100), SimTime::micros(50)); // clock skew guard
+        assert_eq!(m.e2e_latency.max().as_micros(), 0);
+    }
+}

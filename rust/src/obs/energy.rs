@@ -1,0 +1,51 @@
+//! Transport tiers and the byte-to-joule energy proxy.
+//!
+//! The paper frames transport avoidance as "rapidly becoming a global
+//! sustainability imperative" (§III-G); to make that measurable we account
+//! every byte by the network tier it crossed and convert to a joule proxy
+//! (E7, fig. 11 experiments). Rehomed from the old string-keyed `metrics`
+//! island: the per-wire byte counters in [`super::Obs`] feed the same
+//! model.
+
+/// Which hop a transfer crossed — the cost hierarchy of §III-G.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub enum NetTier {
+    /// Same host: RAM / local disk.
+    Local,
+    /// Same region: storage network / fibre channel.
+    Lan,
+    /// Cross-region: the expensive, contended wide-area path.
+    Wan,
+}
+
+/// Energy proxy constants (J/byte moved, J/task-run overhead). Absolute
+/// values are order-of-magnitude literature figures; the *ratios* between
+/// tiers are what the experiments depend on.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyModel {
+    pub j_per_byte_local: f64,
+    pub j_per_byte_lan: f64,
+    pub j_per_byte_wan: f64,
+    pub j_per_run: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        Self {
+            j_per_byte_local: 1e-9,
+            j_per_byte_lan: 2e-8,
+            j_per_byte_wan: 2e-6,
+            j_per_run: 1e-2,
+        }
+    }
+}
+
+impl EnergyModel {
+    pub fn per_byte(&self, tier: NetTier) -> f64 {
+        match tier {
+            NetTier::Local => self.j_per_byte_local,
+            NetTier::Lan => self.j_per_byte_lan,
+            NetTier::Wan => self.j_per_byte_wan,
+        }
+    }
+}

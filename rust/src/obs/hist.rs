@@ -1,0 +1,170 @@
+//! Fixed-boundary latency histogram (power-of-2 microsecond buckets).
+//!
+//! Bucket `i` counts samples in `[2^i, 2^{i+1})` microseconds; bucket 0
+//! additionally includes 0 (and therefore every sub-microsecond sample —
+//! the virtual clock cannot represent them any finer). `merge` exists for
+//! cross-worker aggregation: per-task histograms recorded independently
+//! sum into one pipeline-wide view without re-recording samples.
+
+use crate::util::SimDuration;
+
+#[derive(Clone, Debug, Default)]
+pub struct LatencyHistogram {
+    /// bucket i counts samples in [2^i, 2^{i+1}) microseconds; bucket 0
+    /// includes 0.
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, d: SimDuration) {
+        let us = d.as_micros();
+        // floor(log2(us)) puts us in [2^idx, 2^{idx+1}); 0 and 1 both
+        // belong in bucket 0 (the former `64 - leading_zeros` shifted
+        // every sample one bucket up, exiling 1µs from bucket 0)
+        let idx = if us <= 1 { 0 } else { (63 - us.leading_zeros()) as usize };
+        if self.buckets.len() <= idx {
+            self.buckets.resize(idx + 1, 0);
+        }
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> SimDuration {
+        if self.count == 0 {
+            return SimDuration::ZERO;
+        }
+        SimDuration::micros(self.sum_us / self.count)
+    }
+
+    pub fn max(&self) -> SimDuration {
+        SimDuration::micros(self.max_us)
+    }
+
+    /// The raw bucket counts (bucket i = `[2^i, 2^{i+1})` µs, bucket 0
+    /// includes 0). Exposed for JSON export and aggregation tests.
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    /// Fold another histogram into this one (cross-worker / cross-task
+    /// aggregation). Bucket boundaries are fixed, so merging is a
+    /// bucket-wise sum.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        if self.buckets.len() < other.buckets.len() {
+            self.buckets.resize(other.buckets.len(), 0);
+        }
+        for (b, &o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// Upper bucket boundary below which `q` of the mass falls.
+    pub fn quantile(&self, q: f64) -> SimDuration {
+        if self.count == 0 {
+            return SimDuration::ZERO;
+        }
+        let target = (self.count as f64 * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                // bucket i spans [2^i, 2^{i+1}): report the upper edge
+                return SimDuration::micros(1 << (i + 1));
+            }
+        }
+        self.max()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_mean_and_quantile() {
+        let mut h = LatencyHistogram::default();
+        for us in [1u64, 2, 4, 8, 1000] {
+            h.record(SimDuration::micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.mean().as_micros(), (1 + 2 + 4 + 8 + 1000) / 5);
+        assert!(h.quantile(0.5).as_micros() <= 8);
+        assert!(h.quantile(1.0).as_micros() >= 1000);
+    }
+
+    #[test]
+    fn bucket_zero_includes_zero_and_one_microsecond() {
+        let mut h = LatencyHistogram::default();
+        h.record(SimDuration::ZERO);
+        h.record(SimDuration::micros(1));
+        // both land in bucket 0: [0, 2) µs
+        assert_eq!(h.buckets(), &[2]);
+        // powers of two start their own bucket: 2 -> bucket 1, 4 -> bucket 2
+        h.record(SimDuration::micros(2));
+        h.record(SimDuration::micros(3));
+        h.record(SimDuration::micros(4));
+        assert_eq!(h.buckets(), &[2, 2, 1]);
+        // 1000 µs: floor(log2(1000)) = 9
+        h.record(SimDuration::micros(1000));
+        assert_eq!(h.buckets().len(), 10);
+        assert_eq!(h.buckets()[9], 1);
+    }
+
+    #[test]
+    fn quantile_reports_upper_bucket_edge() {
+        let mut h = LatencyHistogram::default();
+        h.record(SimDuration::micros(1));
+        // everything is in bucket 0 = [0, 2): the q=1.0 upper edge is 2
+        assert_eq!(h.quantile(1.0).as_micros(), 2);
+        h.record(SimDuration::micros(5)); // bucket 2 = [4, 8)
+        assert_eq!(h.quantile(1.0).as_micros(), 8);
+    }
+
+    #[test]
+    fn merge_sums_buckets_and_moments() {
+        let mut a = LatencyHistogram::default();
+        let mut b = LatencyHistogram::default();
+        for us in [0u64, 1, 2] {
+            a.record(SimDuration::micros(us));
+        }
+        for us in [4u64, 1000] {
+            b.record(SimDuration::micros(us));
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 5);
+        assert_eq!(a.max().as_micros(), 1000);
+        assert_eq!(a.mean().as_micros(), (0 + 1 + 2 + 4 + 1000) / 5);
+        assert_eq!(a.buckets()[0], 2);
+        assert_eq!(a.buckets()[1], 1);
+        assert_eq!(a.buckets()[2], 1);
+        assert_eq!(a.buckets()[9], 1);
+        // merging preserves totals vs recording everything in one go
+        let mut all = LatencyHistogram::default();
+        for us in [0u64, 1, 2, 4, 1000] {
+            all.record(SimDuration::micros(us));
+        }
+        assert_eq!(all.buckets(), a.buckets());
+    }
+
+    #[test]
+    fn merge_into_empty() {
+        let mut a = LatencyHistogram::default();
+        let mut b = LatencyHistogram::default();
+        b.record(SimDuration::micros(7));
+        a.merge(&b);
+        assert_eq!(a.count(), 1);
+        assert_eq!(a.buckets(), b.buckets());
+    }
+}

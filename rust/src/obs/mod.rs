@@ -1,0 +1,437 @@
+//! Observability: the flight recorder + the id-indexed metrics registry.
+//!
+//! The paper's enterprise pitch is "full tracing of provenance and
+//! forensic reconstruction of transactional processes" — this layer makes
+//! the *runtime* side of that story inspectable: what fired, when, why
+//! (memo hit / deferral / rollback), what was published where, and what
+//! it cost, all joined against the provenance ledger by the same dense
+//! ids.
+//!
+//! Three pieces:
+//!  * [`FlightRecorder`] ([`span`]) — a bounded ring of structured span
+//!    events carrying `TaskId`/`WireId`/`RunId`/`AvId` + virtual instant;
+//!  * [`Obs`] — per-task firing counters and latency histograms, per-wire
+//!    publication/byte counters, wavefront occupancy, all `Vec`-indexed
+//!    by the interned ids (no string ever touches the recording path);
+//!  * the always-on platform sink [`Metrics`] ([`counters`]) plus the
+//!    [`NetTier`]/[`EnergyModel`] byte-to-joule accounting ([`energy`]),
+//!    rehomed here from the old string-keyed `metrics` island.
+//!
+//! Gating mirrors `prov.enabled`: every instrumentation site in the
+//! coordinator guards with `if self.obs.enabled { ... }`, so a disabled
+//! deployment pays one predictable branch per site — benchmarked by the
+//! `obs-overhead` shape pair in `benches/coordinator_throughput.rs`, and
+//! gated in CI (`tools/bench_delta.py`: trace-off ≤ 5% vs baseline,
+//! trace-on ≤ 15% over trace-off).
+//!
+//! Recording is deterministic by construction: spans and counters update
+//! only on the coordinator thread, at commit, in the wavefront's
+//! canonical task-index order — workers never record (their observable
+//! actions already funnel through the `EffectLog` replay, which *is* the
+//! deterministic merge point). See DESIGN.md §Observability.
+
+pub mod counters;
+pub mod energy;
+pub mod hist;
+pub mod span;
+
+pub use counters::Metrics;
+pub use energy::{EnergyModel, NetTier};
+pub use hist::LatencyHistogram;
+pub use span::{FiringKind, FlightRecorder, Span, SpanEvent, NO_RUN};
+
+use crate::util::{AvId, Json, RunId, SimDuration, SimTime, TaskId, WireId};
+
+/// Per-task observability: how its firings resolved, and what they cost.
+#[derive(Clone, Debug, Default)]
+pub struct TaskStats {
+    /// Completed user-code executions (direct or worker-recorded).
+    pub firings: u64,
+    /// Firings resolved from the memo (cached objects republished).
+    pub memo_hits: u64,
+    /// Firings that errored (including caught panics).
+    pub errors: u64,
+    /// Firings that skipped the worker pool (`parallel_safe() == false`).
+    pub deferred: u64,
+    /// Worker executions rolled back for a sequential re-run (direct-only
+    /// API touched mid-recording).
+    pub rollbacks: u64,
+    /// Virtual cost of completed executions.
+    pub latency: LatencyHistogram,
+}
+
+/// Per-wire observability (dense, `Copy` — one slot per interned wire).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WireStats {
+    /// Values published onto this wire by producing tasks.
+    pub publications: u64,
+    /// Values injected externally (in-tray drops).
+    pub injections: u64,
+    /// Payload bytes that crossed this wire (published + injected).
+    pub bytes: u64,
+    /// Values that reached this wire as a sink and entered the commit log.
+    pub sink_commits: u64,
+}
+
+/// Wavefront scheduler occupancy. Unlike spans, these may legitimately
+/// differ between `workers` settings (parallel instants, deferral counts
+/// are strategy); the determinism contract covers books, not occupancy.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WavefrontStats {
+    /// Instants that flushed at least one firing.
+    pub instants: u64,
+    /// Total firings across all wavefronts.
+    pub firings: u64,
+    /// Widest single wavefront seen.
+    pub max_width: u32,
+    /// Instants that took the worker-pool path (`workers > 1`, ≥ 2 busy).
+    pub parallel_instants: u64,
+    /// Sum of busy-task counts over parallel instants (mean occupancy =
+    /// `busy_accum / parallel_instants`).
+    pub busy_accum: u64,
+    /// Firings deferred from the pool to the commit phase (all reasons).
+    pub deferred: u64,
+    /// Deferred firings that were worker rollbacks specifically.
+    pub rollbacks: u64,
+}
+
+/// The observability registry: one per deployed coordinator, sized to its
+/// interned id spaces at deploy. All recording methods assume the caller
+/// already checked [`Obs::enabled`] — that keeps the disabled cost to
+/// exactly one branch per site, with no call into this module at all.
+#[derive(Debug)]
+pub struct Obs {
+    /// Mirror of `DeployConfig::trace`. Sites guard on this.
+    pub enabled: bool,
+    pub rec: FlightRecorder,
+    tasks: Vec<TaskStats>,
+    wires: Vec<WireStats>,
+    pub wavefront: WavefrontStats,
+}
+
+impl Obs {
+    /// Registry for a pipeline with `n_tasks` tasks and `n_wires` wires.
+    /// A disabled registry allocates nothing but the empty ring.
+    pub fn sized(enabled: bool, n_tasks: usize, n_wires: usize) -> Self {
+        let (nt, nw) = if enabled { (n_tasks, n_wires) } else { (0, 0) };
+        Self {
+            enabled,
+            rec: FlightRecorder::default(),
+            tasks: (0..nt).map(|_| TaskStats::default()).collect(),
+            wires: vec![WireStats::default(); nw],
+            wavefront: WavefrontStats::default(),
+        }
+    }
+
+    pub fn disabled() -> Self {
+        Self::sized(false, 0, 0)
+    }
+
+    // ---- recording (call sites guard on `enabled`) --------------------
+
+    /// One injection batch's span (`count` payloads; singles are batches
+    /// of 1). Byte accounting happens per payload in [`Obs::inject_value`]
+    /// — the batch path amortizes the span, never the bookkeeping.
+    pub fn inject_span(&mut self, at: SimTime, wire: WireId, count: u32) {
+        self.rec.record(at, SpanEvent::InjectBatch { wire, count });
+    }
+
+    /// Per-payload injection accounting (stats only — the caller's batch
+    /// emits the span).
+    pub fn inject_value(&mut self, wire: WireId, bytes: u64) {
+        let w = &mut self.wires[wire.index()];
+        w.injections += 1;
+        w.bytes += bytes;
+    }
+
+    pub fn instant(&mut self, at: SimTime, events: u32) {
+        self.rec.record(at, SpanEvent::InstantDrain { events });
+    }
+
+    /// Wavefront phases 1+2 begin: extract + execute spans, width stats.
+    pub fn wavefront_begin(&mut self, at: SimTime, width: u32) {
+        self.rec.record(at, SpanEvent::WavefrontExtract { width });
+        self.rec.record(at, SpanEvent::WavefrontExecute { width });
+        self.wavefront.instants += 1;
+        self.wavefront.firings += width as u64;
+        self.wavefront.max_width = self.wavefront.max_width.max(width);
+    }
+
+    /// Stats-only occupancy note for a worker-pool instant (no span: the
+    /// busy count differs across `workers` settings and spans must not).
+    pub fn wavefront_parallel(&mut self, busy: u32) {
+        self.wavefront.parallel_instants += 1;
+        self.wavefront.busy_accum += busy as u64;
+    }
+
+    pub fn wavefront_commit(&mut self, at: SimTime, width: u32) {
+        self.rec.record(at, SpanEvent::WavefrontCommit { width });
+    }
+
+    pub fn firing_run(&mut self, at: SimTime, task: TaskId, run: RunId, cost: SimDuration) {
+        self.rec.record(at, SpanEvent::Firing { task, run, kind: FiringKind::Run });
+        let t = &mut self.tasks[task.index()];
+        t.firings += 1;
+        t.latency.record(cost);
+    }
+
+    pub fn firing_memo(&mut self, at: SimTime, task: TaskId, run: RunId) {
+        self.rec.record(at, SpanEvent::Firing { task, run, kind: FiringKind::MemoHit });
+        self.tasks[task.index()].memo_hits += 1;
+    }
+
+    pub fn firing_failed(&mut self, at: SimTime, task: TaskId, run: RunId) {
+        self.rec.record(at, SpanEvent::Firing { task, run, kind: FiringKind::Panic });
+        self.tasks[task.index()].errors += 1;
+    }
+
+    /// Scheduling note: `parallel_safe() == false` code skipped the pool.
+    pub fn note_deferred_sequential(&mut self, at: SimTime, task: TaskId) {
+        self.rec.record(
+            at,
+            SpanEvent::Firing { task, run: NO_RUN, kind: FiringKind::DeferredSequential },
+        );
+        self.tasks[task.index()].deferred += 1;
+        self.wavefront.deferred += 1;
+    }
+
+    /// Scheduling note: a worker recording was rolled back for sequential
+    /// re-run.
+    pub fn note_rollback(&mut self, at: SimTime, task: TaskId) {
+        self.rec
+            .record(at, SpanEvent::Firing { task, run: NO_RUN, kind: FiringKind::RollbackRerun });
+        self.tasks[task.index()].rollbacks += 1;
+        self.wavefront.deferred += 1;
+        self.wavefront.rollbacks += 1;
+    }
+
+    /// Memo-valid snapshot routed to the commit phase (no span: the memo
+    /// firing span follows when it resolves).
+    pub fn note_deferred_memo(&mut self) {
+        self.wavefront.deferred += 1;
+    }
+
+    pub fn publish(&mut self, at: SimTime, task: TaskId, wire: WireId, av: AvId, bytes: u64) {
+        self.rec.record(at, SpanEvent::Publish { task, wire, av, bytes });
+        let w = &mut self.wires[wire.index()];
+        w.publications += 1;
+        w.bytes += bytes;
+    }
+
+    pub fn sink_commit(&mut self, at: SimTime, wire: WireId, av: AvId) {
+        self.rec.record(at, SpanEvent::SinkCommit { wire, av });
+        self.wires[wire.index()].sink_commits += 1;
+    }
+
+    pub fn tap_observe(&mut self, at: SimTime, wire: WireId, av: AvId) {
+        self.rec.record(at, SpanEvent::TapObserve { wire, av });
+    }
+
+    pub fn demand(&mut self, at: SimTime, wire: WireId) {
+        self.rec.record(at, SpanEvent::Demand { wire });
+    }
+
+    // ---- reading ------------------------------------------------------
+
+    pub fn task_stats(&self, task: TaskId) -> Option<&TaskStats> {
+        self.tasks.get(task.index())
+    }
+
+    pub fn wire_stats(&self, wire: WireId) -> Option<WireStats> {
+        self.wires.get(wire.index()).copied()
+    }
+
+    pub fn all_task_stats(&self) -> &[TaskStats] {
+        &self.tasks
+    }
+
+    pub fn all_wire_stats(&self) -> &[WireStats] {
+        &self.wires
+    }
+
+    /// Schema'd JSON export (schema 1): the whole registry plus the
+    /// retained span dump, names resolved once here — ids stay in the
+    /// rows so external tooling can join against provenance dumps.
+    pub fn snapshot(&self, pipeline: &str, task_names: &[&str], wire_names: &[&str]) -> Json {
+        let tasks: Vec<Json> = self
+            .tasks
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                Json::obj(vec![
+                    ("id", Json::num(i as u32)),
+                    ("name", Json::str(*task_names.get(i).unwrap_or(&"?"))),
+                    ("firings", Json::num(t.firings as u32)),
+                    ("memo_hits", Json::num(t.memo_hits as u32)),
+                    ("errors", Json::num(t.errors as u32)),
+                    ("deferred", Json::num(t.deferred as u32)),
+                    ("rollbacks", Json::num(t.rollbacks as u32)),
+                    (
+                        "latency",
+                        Json::obj(vec![
+                            ("count", Json::num(t.latency.count() as u32)),
+                            ("mean_us", Json::num(t.latency.mean().as_micros() as u32)),
+                            ("max_us", Json::num(t.latency.max().as_micros() as u32)),
+                            ("p99_us", Json::num(t.latency.quantile(0.99).as_micros() as u32)),
+                            (
+                                "buckets",
+                                Json::Arr(
+                                    t.latency
+                                        .buckets()
+                                        .iter()
+                                        .map(|&b| Json::num(b as u32))
+                                        .collect(),
+                                ),
+                            ),
+                        ]),
+                    ),
+                ])
+            })
+            .collect();
+        let wires: Vec<Json> = self
+            .wires
+            .iter()
+            .enumerate()
+            .map(|(i, w)| {
+                Json::obj(vec![
+                    ("id", Json::num(i as u32)),
+                    ("name", Json::str(*wire_names.get(i).unwrap_or(&"?"))),
+                    ("publications", Json::num(w.publications as u32)),
+                    ("injections", Json::num(w.injections as u32)),
+                    ("bytes", Json::num(w.bytes as f64)),
+                    ("sink_commits", Json::num(w.sink_commits as u32)),
+                ])
+            })
+            .collect();
+        let wf = &self.wavefront;
+        let spans: Vec<Json> = self.rec.spans().map(span_json).collect();
+        Json::obj(vec![
+            ("schema", Json::num(1)),
+            ("pipeline", Json::str(pipeline)),
+            ("enabled", Json::Bool(self.enabled)),
+            ("tasks", Json::Arr(tasks)),
+            ("wires", Json::Arr(wires)),
+            (
+                "wavefront",
+                Json::obj(vec![
+                    ("instants", Json::num(wf.instants as f64)),
+                    ("firings", Json::num(wf.firings as f64)),
+                    ("max_width", Json::num(wf.max_width)),
+                    ("parallel_instants", Json::num(wf.parallel_instants as f64)),
+                    ("busy_accum", Json::num(wf.busy_accum as f64)),
+                    ("deferred", Json::num(wf.deferred as f64)),
+                    ("rollbacks", Json::num(wf.rollbacks as f64)),
+                ]),
+            ),
+            (
+                "recorder",
+                Json::obj(vec![
+                    ("recorded", Json::num(self.rec.recorded() as f64)),
+                    ("retained", Json::num(self.rec.len() as u32)),
+                    ("dropped", Json::num(self.rec.dropped() as f64)),
+                    ("cap", Json::num(span::DEFAULT_SPAN_CAP as u32)),
+                ]),
+            ),
+            ("spans", Json::Arr(spans)),
+        ])
+    }
+}
+
+/// One span as a JSON row: event name + whichever dense ids it carries.
+fn span_json(s: &Span) -> Json {
+    let mut pairs = vec![
+        ("seq", Json::num(s.seq as f64)),
+        ("at_us", Json::num(s.at.as_micros() as f64)),
+        ("event", Json::str(s.event.name())),
+    ];
+    if let Some(t) = s.event.task() {
+        pairs.push(("task", Json::num(t.index() as u32)));
+    }
+    if let Some(w) = s.event.wire() {
+        pairs.push(("wire", Json::num(w.0)));
+    }
+    if let Some(r) = s.event.run() {
+        pairs.push(("run", Json::num(r.0 as f64)));
+    }
+    match s.event {
+        SpanEvent::InjectBatch { count, .. } => pairs.push(("count", Json::num(count))),
+        SpanEvent::InstantDrain { events } => pairs.push(("events", Json::num(events))),
+        SpanEvent::WavefrontExtract { width }
+        | SpanEvent::WavefrontExecute { width }
+        | SpanEvent::WavefrontCommit { width } => pairs.push(("width", Json::num(width))),
+        SpanEvent::Firing { kind, .. } => pairs.push(("kind", Json::str(kind.as_str()))),
+        SpanEvent::Publish { av, bytes, .. } => {
+            pairs.push(("av", Json::num(av.0 as f64)));
+            pairs.push(("bytes", Json::num(bytes as f64)));
+        }
+        SpanEvent::SinkCommit { av, .. } | SpanEvent::TapObserve { av, .. } => {
+            pairs.push(("av", Json::num(av.0 as f64)));
+        }
+        SpanEvent::Demand { .. } => {}
+    }
+    Json::obj(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_registry_allocates_no_slots() {
+        let o = Obs::sized(false, 100, 100);
+        assert!(!o.enabled);
+        assert!(o.all_task_stats().is_empty());
+        assert!(o.all_wire_stats().is_empty());
+    }
+
+    #[test]
+    fn stats_accumulate_per_id() {
+        let mut o = Obs::sized(true, 2, 3);
+        let at = SimTime::micros(10);
+        o.firing_run(at, TaskId::new(1), RunId::new(0), SimDuration::micros(5));
+        o.firing_run(at, TaskId::new(1), RunId::new(1), SimDuration::micros(7));
+        o.firing_memo(at, TaskId::new(0), RunId::new(2));
+        o.publish(at, TaskId::new(1), WireId::new(2), AvId::new(0), 128);
+        o.inject_span(at, WireId::new(0), 3);
+        for _ in 0..3 {
+            o.inject_value(WireId::new(0), 32);
+        }
+        o.sink_commit(at, WireId::new(2), AvId::new(0));
+        let t1 = o.task_stats(TaskId::new(1)).unwrap();
+        assert_eq!(t1.firings, 2);
+        assert_eq!(t1.latency.count(), 2);
+        assert_eq!(o.task_stats(TaskId::new(0)).unwrap().memo_hits, 1);
+        let w2 = o.wire_stats(WireId::new(2)).unwrap();
+        assert_eq!(w2.publications, 1);
+        assert_eq!(w2.bytes, 128);
+        assert_eq!(w2.sink_commits, 1);
+        let w0 = o.wire_stats(WireId::new(0)).unwrap();
+        assert_eq!(w0.injections, 3);
+        assert_eq!(w0.bytes, 96);
+        // 6 spans were recorded (one per call above)
+        assert_eq!(o.rec.len(), 6);
+    }
+
+    #[test]
+    fn snapshot_is_valid_schema1_json() {
+        let mut o = Obs::sized(true, 1, 2);
+        o.wavefront_begin(SimTime::micros(1), 1);
+        o.firing_run(SimTime::micros(1), TaskId::new(0), RunId::new(0), SimDuration::micros(3));
+        o.publish(SimTime::micros(2), TaskId::new(0), WireId::new(1), AvId::new(4), 32);
+        o.wavefront_commit(SimTime::micros(2), 1);
+        let j = o.snapshot("demo", &["t0"], &["in", "out"]);
+        let text = j.to_string();
+        let back = Json::parse(&text).expect("snapshot round-trips");
+        assert_eq!(back.get("schema").and_then(|v| v.as_u64()), Some(1));
+        assert_eq!(back.get("pipeline").and_then(|v| v.as_str()), Some("demo"));
+        let tasks = back.get("tasks").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(tasks[0].get("name").and_then(|v| v.as_str()), Some("t0"));
+        assert_eq!(tasks[0].get("firings").and_then(|v| v.as_u64()), Some(1));
+        let spans = back.get("spans").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(spans.len(), 5); // extract, execute, firing, publish, commit
+        assert_eq!(
+            back.get("wavefront").and_then(|w| w.get("firings")).and_then(|v| v.as_u64()),
+            Some(1)
+        );
+    }
+}

@@ -1,0 +1,245 @@
+//! The flight recorder: a bounded ring of structured span events.
+//!
+//! Every span carries dense ids ([`TaskId`] / [`WireId`] / [`RunId`] /
+//! [`AvId`]) plus the virtual instant it happened, so a trace joins
+//! directly against the provenance ledger (checkpoint logs key on the
+//! same `RunId`s, traveller passports on the same `AvId`s) for forensic
+//! reconstruction. Spans are recorded *at commit* on the coordinator
+//! thread, in the wavefront's canonical task-index order — so the
+//! recorded sequence is identical for every `workers` setting (see
+//! DESIGN.md §Observability for the merge argument), and turning the
+//! recorder on cannot perturb a single committed byte.
+
+use crate::util::{AvId, RunId, SimTime, TaskId, WireId};
+use std::collections::VecDeque;
+
+/// Sentinel run id for spans that describe scheduling (not an execution):
+/// no run was drawn for them, and none ever will be.
+pub const NO_RUN: RunId = RunId(u64::MAX);
+
+/// How a firing resolved.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum FiringKind {
+    /// User code executed (direct or worker-recorded — indistinguishable
+    /// by contract).
+    Run,
+    /// Recipe matched the memo: cached objects republished, no compute.
+    MemoHit,
+    /// Scheduling note: the firing skipped the worker pool because its
+    /// code declares `parallel_safe() == false`; it ran in the commit
+    /// phase (a `Run`/`MemoHit`/`Panic` span follows).
+    DeferredSequential,
+    /// Scheduling note: a worker execution touched a direct-only API and
+    /// was rolled back for a sequential re-run (a `Run`/`Panic` span
+    /// follows).
+    RollbackRerun,
+    /// The firing errored. Caught panics and plain task errors share this
+    /// kind: the panic guard converts both to the same error shape before
+    /// bookkeeping sees them.
+    Panic,
+}
+
+impl FiringKind {
+    /// Scheduling notes describe *strategy* (which execution phase ran the
+    /// firing), not behavior — they only occur when `workers > 1`, so the
+    /// span-identity comparison across worker counts projects them out.
+    pub fn is_scheduling_note(self) -> bool {
+        matches!(self, FiringKind::DeferredSequential | FiringKind::RollbackRerun)
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FiringKind::Run => "run",
+            FiringKind::MemoHit => "memo-hit",
+            FiringKind::DeferredSequential => "deferred-sequential",
+            FiringKind::RollbackRerun => "rollback-rerun",
+            FiringKind::Panic => "panic",
+        }
+    }
+}
+
+/// One structured trace event. Everything is a dense id or a count — no
+/// strings on the recording path; names resolve at render time.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SpanEvent {
+    /// External data landed on an in-tray wire (`count` payloads in one
+    /// batch; single injections are batches of 1).
+    InjectBatch { wire: WireId, count: u32 },
+    /// One virtual instant's event-queue drain (`events` dispatched).
+    InstantDrain { events: u32 },
+    /// Wavefront phase 1: `width` ready firings extracted this instant.
+    WavefrontExtract { width: u32 },
+    /// Wavefront phase 2 begins. Deliberately carries the width only —
+    /// never the worker or busy count, which would differ between
+    /// `workers` settings and break span-identity across them (occupancy
+    /// lives in [`super::WavefrontStats`]).
+    WavefrontExecute { width: u32 },
+    /// Wavefront phase 3 finished: `width` firings committed.
+    WavefrontCommit { width: u32 },
+    /// One task firing resolved (see [`FiringKind`]).
+    Firing { task: TaskId, run: RunId, kind: FiringKind },
+    /// A produced AV was published onto a wire.
+    Publish { task: TaskId, wire: WireId, av: AvId, bytes: u64 },
+    /// A published AV reached a sink wire and entered the commit log.
+    SinkCommit { wire: WireId, av: AvId },
+    /// A breadboard tap observed a value on its wire.
+    TapObserve { wire: WireId, av: AvId },
+    /// Make-mode: a target wire was demanded (§III-B pull trigger).
+    Demand { wire: WireId },
+}
+
+impl SpanEvent {
+    pub fn task(&self) -> Option<TaskId> {
+        match self {
+            SpanEvent::Firing { task, .. } | SpanEvent::Publish { task, .. } => Some(*task),
+            _ => None,
+        }
+    }
+
+    pub fn wire(&self) -> Option<WireId> {
+        match self {
+            SpanEvent::InjectBatch { wire, .. }
+            | SpanEvent::Publish { wire, .. }
+            | SpanEvent::SinkCommit { wire, .. }
+            | SpanEvent::TapObserve { wire, .. }
+            | SpanEvent::Demand { wire } => Some(*wire),
+            _ => None,
+        }
+    }
+
+    pub fn run(&self) -> Option<RunId> {
+        match self {
+            SpanEvent::Firing { run, .. } if *run != NO_RUN => Some(*run),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanEvent::InjectBatch { .. } => "inject-batch",
+            SpanEvent::InstantDrain { .. } => "instant-drain",
+            SpanEvent::WavefrontExtract { .. } => "wavefront-extract",
+            SpanEvent::WavefrontExecute { .. } => "wavefront-execute",
+            SpanEvent::WavefrontCommit { .. } => "wavefront-commit",
+            SpanEvent::Firing { .. } => "firing",
+            SpanEvent::Publish { .. } => "publish",
+            SpanEvent::SinkCommit { .. } => "sink-commit",
+            SpanEvent::TapObserve { .. } => "tap-observe",
+            SpanEvent::Demand { .. } => "demand",
+        }
+    }
+}
+
+/// One recorded span: what happened, when, and in which record position.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub at: SimTime,
+    /// Monotonic record sequence — total order over the whole session,
+    /// surviving ring evictions (span `seq` N is the N+1th ever recorded).
+    pub seq: u64,
+    pub event: SpanEvent,
+}
+
+/// Default ring capacity: 64Ki spans ≈ a few MB resident, enough to hold
+/// the full tail of any bench shape while bounding a long-running session.
+pub const DEFAULT_SPAN_CAP: usize = 65_536;
+
+/// The bounded span ring. Recording is push-back / pop-front; eviction is
+/// counted, never silent.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    ring: VecDeque<Span>,
+    cap: usize,
+    next_seq: u64,
+    dropped: u64,
+}
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_SPAN_CAP)
+    }
+}
+
+impl FlightRecorder {
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { ring: VecDeque::new(), cap: cap.max(1), next_seq: 0, dropped: 0 }
+    }
+
+    #[inline]
+    pub fn record(&mut self, at: SimTime, event: SpanEvent) {
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+            self.dropped += 1;
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.ring.push_back(Span { at, seq, event });
+    }
+
+    /// The retained spans, oldest first.
+    pub fn spans(&self) -> impl Iterator<Item = &Span> {
+        self.ring.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Spans evicted from the front of the ring since deploy.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Total spans ever recorded (retained + dropped).
+    pub fn recorded(&self) -> u64 {
+        self.next_seq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_is_bounded_and_counts_evictions() {
+        let mut r = FlightRecorder::with_capacity(3);
+        for i in 0..5u64 {
+            r.record(SimTime::micros(i), SpanEvent::InstantDrain { events: i as u32 });
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        assert_eq!(r.recorded(), 5);
+        // oldest retained span is the 3rd ever recorded (seq 2)
+        let seqs: Vec<u64> = r.spans().map(|s| s.seq).collect();
+        assert_eq!(seqs, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn span_accessors_join_on_ids() {
+        let e = SpanEvent::Firing { task: TaskId::new(3), run: RunId::new(7), kind: FiringKind::Run };
+        assert_eq!(e.task(), Some(TaskId::new(3)));
+        assert_eq!(e.run(), Some(RunId::new(7)));
+        assert_eq!(e.wire(), None);
+        let note = SpanEvent::Firing {
+            task: TaskId::new(3),
+            run: NO_RUN,
+            kind: FiringKind::DeferredSequential,
+        };
+        assert_eq!(note.run(), None, "scheduling notes carry no run id");
+        assert!(FiringKind::DeferredSequential.is_scheduling_note());
+        assert!(FiringKind::RollbackRerun.is_scheduling_note());
+        assert!(!FiringKind::Run.is_scheduling_note());
+        let p = SpanEvent::Publish {
+            task: TaskId::new(1),
+            wire: WireId::new(2),
+            av: AvId::new(9),
+            bytes: 64,
+        };
+        assert_eq!(p.wire(), Some(WireId::new(2)));
+        assert_eq!(p.name(), "publish");
+    }
+}

@@ -11,7 +11,7 @@ pub use service::{RecordedLookup, Service, ServiceDirectory};
 use crate::av::{AnnotatedValue, DataClass, Payload};
 use crate::bus::Bus;
 use crate::cluster::{Cluster, ScalePolicy};
-use crate::metrics::Metrics;
+use crate::obs::Metrics;
 use crate::net::WanTopology;
 use crate::provenance::{ProvenanceRegistry, Stamp};
 use crate::storage::{ObjectStore, StorageConfig, StorageTier};

@@ -20,7 +20,7 @@
 //! [`EffectLog::apply`] time.
 
 use crate::av::Payload;
-use crate::metrics::NetTier;
+use crate::obs::NetTier;
 use crate::net::WanTopology;
 use crate::platform::Platform;
 use crate::provenance::{CheckpointEvent, Stamp};
@@ -133,6 +133,25 @@ impl EffectLog {
     }
 }
 
+/// Why a firing skipped (or abandoned) the worker pool. Carried on
+/// [`PreparedFiring::Deferred`] so the commit phase can tell the flight
+/// recorder *which* scheduling story happened — the reasons are spans
+/// (`deferred-sequential` / `rollback-rerun`) and wavefront counters, not
+/// behavior: every reason resolves through the identical `workers = 1`
+/// path.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub(crate) enum DeferReason {
+    /// Code declares `parallel_safe() == false`: never attempted on a
+    /// worker.
+    Sequential,
+    /// Memo hit or duplicate recipe within the wavefront: the commit
+    /// phase re-probes and resolves it (usually as a memo republish).
+    MemoHit,
+    /// A worker execution touched a direct-only API and was rolled back
+    /// (needs-sequential sentinel or poisoned effect log).
+    Direct,
+}
+
 /// What the wavefront scheduler gets back for one firing.
 pub(crate) enum PreparedFiring {
     /// Execute at commit with direct platform access: memo hits,
@@ -140,7 +159,7 @@ pub(crate) enum PreparedFiring {
     /// memoization must land first), code declared `parallel_safe() ==
     /// false`, and sentinel fallbacks all take this path — it is exactly
     /// the `workers = 1` path, so deferral is always behavior-preserving.
-    Deferred(Snapshot),
+    Deferred(Snapshot, DeferReason),
     /// Executed on a worker: commit replays the effect tape, then
     /// publishes the emissions.
     Recorded(RecordedRun),

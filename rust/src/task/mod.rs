@@ -26,14 +26,14 @@ pub mod ports;
 pub use ports::{Emission, Emitter, InPort, Inputs, NameCache, OutPort, PortIo, PortMap, Ports};
 
 use effects::{
-    ghost_payload, is_needs_sequential, needs_sequential, Effect, EffectLog, PreparedFiring,
-    RecordedBody, RecordedRun, WorldView,
+    ghost_payload, is_needs_sequential, needs_sequential, DeferReason, Effect, EffectLog,
+    PreparedFiring, RecordedBody, RecordedRun, WorldView,
 };
 
 use crate::av::{AnnotatedValue, DataClass, Payload};
 use crate::bus::NotifyMode;
 use crate::graph::WireTable;
-use crate::metrics::NetTier;
+use crate::obs::NetTier;
 use crate::platform::Platform;
 use crate::policy::{Snapshot, SnapshotEngine};
 use crate::provenance::{CheckpointEvent, Stamp};
@@ -861,7 +861,7 @@ impl TaskAgent {
                 self.emit_buf = buf;
                 self.cache = cache_save;
                 self.name_cache = names_save;
-                return PreparedFiring::Deferred(snapshot);
+                return PreparedFiring::Deferred(snapshot, DeferReason::Direct);
             }
             match run_result {
                 Ok(run_cost) => run_cost + self.code.compute_cost(consumed_bytes),
@@ -877,7 +877,7 @@ impl TaskAgent {
                     self.emit_buf = buf;
                     self.cache = cache_save;
                     self.name_cache = names_save;
-                    return PreparedFiring::Deferred(snapshot);
+                    return PreparedFiring::Deferred(snapshot, DeferReason::Direct);
                 }
                 Err(e) => {
                     buf.clear();

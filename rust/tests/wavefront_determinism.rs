@@ -13,9 +13,16 @@
 //! sequential order — which is the whole design (commit in task-index
 //! order, effects recorded on workers and replayed at commit).
 //!
-//! The CI matrix runs this file under `KOALJA_WORKERS={1,4}`; the env
-//! var sets the parallel arm's pool width (1 makes the test a
-//! sequential-vs-sequential control).
+//! The CI matrix runs this file under `KOALJA_WORKERS={1,4}` ×
+//! `KOALJA_TRACE={0,1}`; KOALJA_WORKERS sets the parallel arm's pool
+//! width (1 makes the test a sequential-vs-sequential control), and
+//! KOALJA_TRACE exercises the ambient default the flight recorder picks
+//! up through `DeployConfig::default()`. The tests below additionally
+//! pin the trace axis *explicitly* (env mutation is racy under the
+//! multi-threaded test harness): the books must be byte-identical for
+//! every {trace} × {workers} combination, and the recorded span stream
+//! itself — scheduling notes projected out — must be identical at
+//! workers=1 and workers=N.
 
 use koalja::prelude::*;
 use koalja::util::{Rng, TaskId};
@@ -135,9 +142,19 @@ fn case_code() -> Box<dyn TaskCode> {
 // ---------------------------------------------------------------------
 
 fn run_arm(case: &Case, workers: usize) -> String {
+    run_arm_traced(case, workers, false).0
+}
+
+/// One arm with the flight recorder explicitly on/off. Returns (canonical
+/// book dump, span projection). The projection renders every retained
+/// span except scheduling notes (DeferredSequential / RollbackRerun) —
+/// those describe *strategy*, exist only when `workers > 1`, and are the
+/// one sanctioned difference between arms; it also omits `seq`, which
+/// the notes consume on the parallel arm.
+fn run_arm_traced(case: &Case, workers: usize, trace: bool) -> (String, String) {
     use std::fmt::Write as _;
     let spec = parse(&case.text).expect("generated wirings parse");
-    let cfg = DeployConfig { workers, ..Default::default() };
+    let cfg = DeployConfig { workers, trace, ..Default::default() };
     let mut c = Coordinator::deploy(&spec, cfg).unwrap();
     for t in 0..c.graph.n_tasks() {
         let name = c.graph.task(TaskId::new(t as u64)).name.clone();
@@ -210,7 +227,17 @@ fn run_arm(case: &Case, workers: usize) -> String {
         c.plat.metrics.joules,
     )
     .unwrap();
-    s
+
+    let mut spans = String::new();
+    for span in c.obs().rec.spans() {
+        if let SpanEvent::Firing { kind, .. } = span.event {
+            if kind.is_scheduling_note() {
+                continue;
+            }
+        }
+        writeln!(spans, "{:?} {:?}", span.at, span.event).unwrap();
+    }
+    (s, spans)
 }
 
 // ---------------------------------------------------------------------
@@ -236,6 +263,67 @@ fn workers_one_and_n_produce_byte_identical_books() {
             }
             panic!(
                 "case {case_idx}: books differ in length only (workers 1 vs {w})\nspec:\n{}",
+                case.text
+            );
+        }
+    }
+}
+
+#[test]
+fn tracing_never_perturbs_the_books() {
+    // the full {trace} × {workers} matrix against one untraced sequential
+    // baseline: turning the flight recorder on must not move a single
+    // committed byte, at any pool width
+    let w = par_workers();
+    let mut r = rng(0x0B5_CA5E);
+    for case_idx in 0..12 {
+        let case = random_case(&mut r);
+        let baseline = run_arm_traced(&case, 1, false).0;
+        for (workers, trace) in [(1usize, true), (w, false), (w, true)] {
+            let (books, _) = run_arm_traced(&case, workers, trace);
+            if baseline != books {
+                for (lb, la) in baseline.lines().zip(books.lines()) {
+                    assert_eq!(
+                        lb, la,
+                        "case {case_idx} (workers={workers} trace={trace}) diverged\nspec:\n{}",
+                        case.text
+                    );
+                }
+                panic!(
+                    "case {case_idx}: books differ in length only (workers={workers} \
+                     trace={trace})\nspec:\n{}",
+                    case.text
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn span_stream_is_identical_across_worker_counts() {
+    // stronger than byte-identical books: the *trace itself* is part of
+    // the determinism contract. With scheduling notes projected out (they
+    // only exist when workers > 1), the retained span stream at workers=1
+    // and workers=N must match event for event — same instants, same
+    // dense ids, same firing kinds, same run numbers.
+    let w = par_workers().max(2);
+    let mut r = rng(0x5BA_2F00);
+    for case_idx in 0..12 {
+        let case = random_case(&mut r);
+        let (_, seq_spans) = run_arm_traced(&case, 1, true);
+        let (_, par_spans) = run_arm_traced(&case, w, true);
+        assert!(!seq_spans.is_empty(), "case {case_idx}: traced run recorded no spans");
+        if seq_spans != par_spans {
+            for (ls, lp) in seq_spans.lines().zip(par_spans.lines()) {
+                assert_eq!(
+                    ls, lp,
+                    "case {case_idx}: span streams diverged (workers 1 vs {w})\nspec:\n{}",
+                    case.text
+                );
+            }
+            panic!(
+                "case {case_idx}: span streams differ in length only (workers 1 vs {w})\n\
+                 spec:\n{}",
                 case.text
             );
         }

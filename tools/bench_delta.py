@@ -20,6 +20,14 @@ by the worker-pool arm. Fan-outs >= 4 wide are expected to actually
 parallelize; a speedup below PAR_MIN_SPEEDUP there warns (never fails —
 CI runners can be 1-core). Chains are 1-wide wavefronts and are exempt:
 their honest expectation is ~1.0x.
+
+The observability pair (obs-overhead/{off,on}/ns_per_event) carries two
+extra gates. The off arm is the cost of shipping the instrumentation
+disabled — one dead branch per site — so it gets a tighter baseline
+limit: > OBS_OFF_FAIL_PCT regression vs baseline fails. The on arm is
+compared within the fresh report only: recording may cost at most
+OBS_ON_MAX_OVERHEAD_PCT over the off arm, or the run fails (this gate
+needs no baseline, so it also runs on seed commits).
 """
 
 import json
@@ -29,12 +37,18 @@ import sys
 WARN_PCT = 10.0
 FAIL_PCT = 35.0
 PAR_MIN_SPEEDUP = 1.2
+# Tighter baseline gate for the trace-off arm: disabled instrumentation
+# must stay within noise of "never instrumented at all".
+OBS_OFF_FAIL_PCT = 5.0
+# In-report gate: trace-on ns/event may exceed trace-off by at most this.
+OBS_ON_MAX_OVERHEAD_PCT = 15.0
 
 # Environment/config metadata recorded in the report for context, not
 # performance measurements — excluded from the regression comparison
 # (e.g. par/workers is the runner's core count; a 8-core baseline vs a
-# 4-core runner is not a regression).
-METADATA_LABELS = {"arrivals", "par/workers"}
+# 4-core runner is not a regression). obs-overhead/overhead_pct is a
+# derived ratio gated by obs_overhead_check, not a measurement.
+METADATA_LABELS = {"arrivals", "par/workers", "obs-overhead/overhead_pct"}
 
 
 def load(path):
@@ -89,6 +103,30 @@ def parallel_speedup_check(fresh):
     return warnings
 
 
+def obs_overhead_check(fresh):
+    """Gate the flight recorder's own cost, fresh report only.
+
+    Compares obs-overhead/on/ns_per_event against its off twin from the
+    same run; > OBS_ON_MAX_OVERHEAD_PCT fails. Returns 1 on failure, 0
+    when within budget or when the pair is absent (old reports).
+    """
+    off = fresh.get("obs-overhead/off/ns_per_event")
+    on = fresh.get("obs-overhead/on/ns_per_event")
+    if off is None or on is None:
+        return 0
+    if off[0] <= 0:
+        print("bench_delta: obs-overhead off arm is zero — cannot gate overhead")
+        return 0
+    pct = (on[0] - off[0]) / off[0] * 100.0
+    if pct > OBS_ON_MAX_OVERHEAD_PCT:
+        print(f"bench_delta: FAIL — flight recorder costs {pct:+.1f}% ns/event over "
+              f"the trace-off arm (limit {OBS_ON_MAX_OVERHEAD_PCT:.0f}%)")
+        return 1
+    print(f"{'obs-overhead on-vs-off':44} {pct:+11.1f}%  recorder within "
+          f"{OBS_ON_MAX_OVERHEAD_PCT:.0f}% budget")
+    return 0
+
+
 def main():
     if len(sys.argv) != 3:
         print(__doc__)
@@ -100,7 +138,9 @@ def main():
         print("bench_delta: no baseline measurements to compare against "
               "(seed commit or unreadable baseline) — recording first trajectory point")
         parallel_speedup_check(fresh)
-        return 0
+        # the recorder-overhead gate is an in-report comparison: it holds
+        # even before any baseline exists
+        return 1 if obs_overhead_check(fresh) else 0
 
     common = sorted((set(base) & set(fresh)) - METADATA_LABELS)
     only_base = sorted(set(base) - set(fresh) - METADATA_LABELS)
@@ -118,8 +158,11 @@ def main():
         pct = (fv - bv) / bv * 100.0
         regression = pct if lower_is_better(label, unit) else -pct
         verdict = "ok"
-        if regression > FAIL_PCT and "ns_per_event" in label:
-            verdict = f"FAIL (> {FAIL_PCT:.0f}% regression)"
+        # the trace-off arm gates tighter: disabled instrumentation must
+        # cost no more than noise vs the committed baseline
+        fail_pct = OBS_OFF_FAIL_PCT if label.startswith("obs-overhead/off") else FAIL_PCT
+        if regression > fail_pct and "ns_per_event" in label:
+            verdict = f"FAIL (> {fail_pct:.0f}% regression)"
             if worst_fail is None or regression > worst_fail[1]:
                 worst_fail = (label, regression)
         elif regression > WARN_PCT:
@@ -141,11 +184,14 @@ def main():
               "(commit the fresh JSON to baseline them)")
 
     warnings += parallel_speedup_check(fresh)
+    obs_failed = obs_overhead_check(fresh)
 
     if worst_fail:
         label, pct = worst_fail
         print(f"\nbench_delta: FAIL — {label} regressed {pct:.1f}% "
-              f"(limit {FAIL_PCT:.0f}%) vs the committed baseline")
+              f"vs the committed baseline")
+        return 1
+    if obs_failed:
         return 1
     if warnings:
         print(f"\nbench_delta: {warnings} metric(s) regressed > {WARN_PCT:.0f}% (warning only)")
