@@ -121,9 +121,26 @@ struct Run {
 }
 
 fn run_shape(shape: &Shape, provenance: bool, trace: bool) -> Run {
+    run_shape_supervised(shape, provenance, trace, false)
+}
+
+/// `supervised` installs a retry policy on every task — the full
+/// per-firing guard computation + pinned-snapshot clone — while
+/// injecting no faults, so the pair isolates the supervision layer's
+/// overhead on healthy firings (the off arm leaves `Supervision`
+/// inactive: one predicted branch per firing).
+fn run_shape_supervised(shape: &Shape, provenance: bool, trace: bool, supervised: bool) -> Run {
     let spec = parse(&shape.spec_text()).unwrap();
-    let cfg = DeployConfig { provenance, trace, ..Default::default() };
+    let cfg = DeployConfig { provenance, trace, fault: None, ..Default::default() };
     let mut c = Coordinator::deploy(&spec, cfg).unwrap();
+    if supervised {
+        for t in 0..c.graph.n_tasks() {
+            c.set_fire_policy_id(
+                koalja::util::TaskId::new(t as u64),
+                FirePolicy::retries(2).dead_letter(),
+            );
+        }
+    }
     if let Shape::FanoutEmit { outs } = *shape {
         // the port-API emitter under test: fetch once, emit on every
         // declared port — ports resolved by index, classes defaulted
@@ -264,9 +281,13 @@ fn run_par_shape(chain: bool, width: usize, workers: usize) -> (f64, usize) {
 
 /// Best-of-3 (the shared benchmark host is noisy).
 fn best_of_3(shape: &Shape, provenance: bool, trace: bool) -> Run {
-    let mut best = run_shape(shape, provenance, trace);
+    best_of_3_supervised(shape, provenance, trace, false)
+}
+
+fn best_of_3_supervised(shape: &Shape, provenance: bool, trace: bool, supervised: bool) -> Run {
+    let mut best = run_shape_supervised(shape, provenance, trace, supervised);
     for _ in 0..2 {
-        let r = run_shape(shape, provenance, trace);
+        let r = run_shape_supervised(shape, provenance, trace, supervised);
         if r.events_per_sec > best.events_per_sec {
             best = r;
         }
@@ -390,6 +411,36 @@ fn main() {
         ));
         report.push(Measurement::new("obs-overhead/on/ns_per_event", on.ns_per_event, "ns"));
         report.push(Measurement::new("obs-overhead/overhead_pct", overhead_pct, "%"));
+    }
+
+    // ---- supervision overhead: fire policies installed, no faults ----
+    //
+    // The same span-dense shape (chain-16, prov on). The off arm leaves
+    // the supervision layer inactive — `Supervision::active()` is false
+    // and every firing pays one predicted branch. The on arm installs a
+    // retry/dead-letter policy on all 16 tasks, so every healthy firing
+    // pays the full guard computation plus the pinned-snapshot clone.
+    // tools/bench_delta.py gates the off arm within 5% of baseline
+    // (exactly like obs-overhead/off: shipping the feature disabled must
+    // be free) and tracks the on arm's overhead_pct as metadata.
+    table_header(
+        "E11e: supervision overhead — fire policies off vs on (chain-16, prov, no faults)",
+        &["arm", "events_per_s", "ns_per_event", "overhead_pct"],
+    );
+    {
+        let shape = Shape::Chain { depth: 16 };
+        let off = best_of_3_supervised(&shape, true, false, false);
+        let on = best_of_3_supervised(&shape, true, false, true);
+        let overhead_pct = (on.ns_per_event - off.ns_per_event) / off.ns_per_event * 100.0;
+        row(&["policies-off".into(), f(off.events_per_sec), f(off.ns_per_event), f(0.0)]);
+        row(&["policies-on".into(), f(on.events_per_sec), f(on.ns_per_event), f(overhead_pct)]);
+        report.push(Measurement::new(
+            "fault-overhead/off/ns_per_event",
+            off.ns_per_event,
+            "ns",
+        ));
+        report.push(Measurement::new("fault-overhead/on/ns_per_event", on.ns_per_event, "ns"));
+        report.push(Measurement::new("fault-overhead/overhead_pct", overhead_pct, "%"));
     }
 
     table_header("E11b: substrate op costs (ns/op, wallclock)", &["op", "ns_per_op"]);

@@ -25,6 +25,21 @@ fn run_policy(policy: &str) -> Result<(usize, f64)> {
         .task("fuse").reads("temp").reads("wind").reads("humidity")
         .emits("sample-set").policy(policy)
         .deploy(DeployConfig::default())?;
+    // field deployments brown out: give the fuse task two retries with
+    // exponential virtual-time backoff, and if a firing still exhausts
+    // its budget, emit an empty fallback sample-set so the downstream
+    // aggregation keeps flowing instead of stalling on one bad firing
+    // (try `KOALJA_FAULT_SEED=7 cargo run --example iot_weather` to
+    // watch the supervision engage under injected faults)
+    pipe.task("fuse")?.set_fire_policy(
+        &mut pipe,
+        FirePolicy::retries(2)
+            .with_backoff(Backoff::Exponential {
+                base: SimDuration::millis(50),
+                cap: SimDuration::millis(400),
+            })
+            .degrade(Payload::tensor(&[4], vec![0.0; 4])),
+    );
     let sample_set = pipe.sink("sample-set")?;
     let mut r = rng(77);
     let mut sensors = [
@@ -70,10 +85,18 @@ fn main() -> Result<()> {
     let mut pipe = Pipeline::deploy(&spec, DeployConfig::default())?;
     let stream = pipe.source("stream")?;
     let means = pipe.sink("means")?;
-    pipe.task("window-stats")?.plug(
+    let stats = pipe.task("window-stats")?;
+    stats.plug(
         &mut pipe,
         Box::new(PjrtTask::new(window_exe.clone(), "means").with_flops(256 * 8 * 2)),
     )?;
+    // the kernel path gets the stricter treatment: one retry, a deadline
+    // budget on each firing, and anything that still fails is pinned in
+    // the dead-letter book for a post-mortem redrive (no silent drops)
+    stats.set_fire_policy(
+        &mut pipe,
+        FirePolicy::retries(1).with_deadline(SimDuration::secs(5)).dead_letter(),
+    );
     let mut r = rng(99);
     let mut sensor = koalja::workload::SensorStream::new("chan", SimDuration::millis(20), 8, 15.0);
     for (t, p) in sensor.arrivals_until(&mut r, SimTime::secs(12)) {
@@ -93,6 +116,16 @@ fn main() -> Result<()> {
         assert!((data[0] - 15.0).abs() < 2.0, "window mean near sensor bias");
     }
     println!("kernel executions on the PJRT hot path: {}", window_exe.runs());
+    let letters = stats.dead_letters(&pipe);
+    if letters.is_empty() {
+        println!("dead-letter book: empty (every window firing fit its 5s budget)");
+    } else {
+        println!(
+            "dead-letter book: {} firing(s) pinned for redrive (first: {})",
+            letters.len(),
+            letters[0].error
+        );
+    }
     println!("\n{}", pipe.plat.metrics.report());
     Ok(())
 }

@@ -191,6 +191,33 @@ def test_obs_overhead_pct_is_metadata(tmp_path):
     assert "warn" not in out
 
 
+def test_fault_off_arm_gates_tighter_than_default(tmp_path):
+    # the supervision pair's off arm shares the obs-off contract: the
+    # same +8% that only warns on a regular metric fails here, because
+    # shipping the (disabled) supervision layer must be free
+    base = doc([row("fault-overhead/off/ns_per_event", 800.0)])
+    fresh = doc([row("fault-overhead/off/ns_per_event", 864.0)])
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 1, out
+    assert "FAIL (> 5% regression)" in out
+
+    base = doc([row("fault-overhead/off/ns_per_event", 800.0)])
+    fresh = doc([row("fault-overhead/off/ns_per_event", 820.0)])  # +2.5%
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 0, out
+    assert "within tolerance" in out
+
+
+def test_fault_overhead_pct_is_metadata(tmp_path):
+    # like obs-overhead/overhead_pct: a derived ratio, tracked but never
+    # gated by the delta table (2% -> 4% is +100% of a tiny number)
+    base = doc([row("fault-overhead/overhead_pct", 2.0, "%")])
+    fresh = doc([row("fault-overhead/overhead_pct", 4.0, "%")])
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 0, out
+    assert "warn" not in out
+
+
 def test_environment_metadata_is_not_compared(tmp_path):
     # par/workers is the runner's core count: an 8-core baseline vs a
     # 4-core runner must not read as a 50% regression

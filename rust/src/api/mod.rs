@@ -51,6 +51,7 @@ pub use builder::{PipelineBuilder, TaskBuilder};
 
 use crate::av::{AnnotatedValue, DataClass, Payload};
 use crate::coordinator::{Collected, Coordinator, DeployConfig};
+use crate::fault::{DeadLetter, FirePolicy};
 use crate::provenance::{CheckpointEntry, ProvenanceQuery};
 use crate::spec::PipelineSpec;
 use crate::task::TaskCode;
@@ -454,6 +455,48 @@ impl TaskHandle {
     pub fn stale_frontier(self, pipe: &Pipeline) -> (usize, Vec<(ObjectId, u64)>) {
         pipe.check(self.token);
         pipe.coord.stale_frontier_of(self.task)
+    }
+
+    /// Declare (or replace) this task's firing supervision policy:
+    /// retries with virtual-time backoff, a per-firing deadline, and the
+    /// on-exhaust action (dead-letter / quarantine / degrade).
+    pub fn set_fire_policy(self, pipe: &mut Pipeline, policy: FirePolicy) {
+        pipe.check(self.token);
+        pipe.coord.set_fire_policy_id(self.task, policy);
+    }
+
+    /// The currently declared supervision policy, if any.
+    pub fn fire_policy(self, pipe: &Pipeline) -> Option<&FirePolicy> {
+        pipe.check(self.token);
+        pipe.coord.fire_policy_id(self.task)
+    }
+
+    /// This task's dead-letter book: every firing that exhausted its
+    /// retry budget (or was dropped by an open breaker), oldest first.
+    pub fn dead_letters(self, pipe: &Pipeline) -> Vec<DeadLetter> {
+        pipe.check(self.token);
+        pipe.coord.dead_letter_book(self.task).letters().cloned().collect()
+    }
+
+    /// Take the dead-letter book's contents, leaving it empty.
+    pub fn drain_dead_letters(self, pipe: &mut Pipeline) -> Vec<DeadLetter> {
+        pipe.check(self.token);
+        pipe.coord.drain_dead_letters_id(self.task)
+    }
+
+    /// Whether this task's circuit breaker is open (quarantined).
+    pub fn quarantined(self, pipe: &Pipeline) -> bool {
+        pipe.check(self.token);
+        pipe.coord.quarantined_id(self.task)
+    }
+
+    /// Replay every dead-lettered firing through the (presumably fixed)
+    /// current code, with fresh retry budgets. Fails while the task is
+    /// still quarantined — hot-swap a fix or reset the breaker first.
+    /// Returns the number of firings redriven.
+    pub fn redrive(self, pipe: &mut Pipeline) -> Result<usize> {
+        pipe.check(self.token);
+        pipe.coord.redrive_id(self.task)
     }
 }
 

@@ -55,6 +55,22 @@ pub struct SwapOutcome {
     pub at: SimTime,
 }
 
+/// Inspection panel for a task's supervised-firing state: breaker
+/// position plus the dead-letter backlog behind it.
+#[derive(Clone, Copy, Debug)]
+pub struct QuarantineView {
+    /// Is the circuit breaker open (wakes dead-letter without executing)?
+    pub quarantined: bool,
+    /// Exhausted firings since the last success / reset.
+    pub consecutive_exhausts: u32,
+    /// Virtual instant the breaker tripped, if it is (or was) open.
+    pub tripped_at: Option<SimTime>,
+    /// Letters currently in the dead-letter book.
+    pub dead_letters: usize,
+    /// Letters evicted from the capped book since deploy.
+    pub dead_letters_dropped: u64,
+}
+
 /// Record of one swap performed in this session.
 #[derive(Debug)]
 pub struct SwapRecord {
@@ -344,6 +360,49 @@ impl Breadboard {
     {
         let h = self.pipe.task(task)?;
         self.hot_swap_task(h, factory, recompute_last)
+    }
+
+    // ------------------------------------------------------------------
+    // Quarantine inspection (supervised firing lifecycle)
+    // ------------------------------------------------------------------
+
+    /// Inspect a task's supervision state: breaker position, consecutive
+    /// exhaust count, when it tripped, and the dead-letter backlog.
+    /// Gated like swaps — breaker state is operational pipeline state.
+    pub fn quarantine_view_task(&mut self, task: TaskHandle) -> Result<QuarantineView> {
+        self.pipe.check_task(task);
+        self.authorize(Resource::Pipeline(self.pipe.spec().name.clone()))?;
+        let id = task.task_id();
+        let breaker = *self.pipe.supervision.breaker(id);
+        let book = self.pipe.dead_letter_book(id);
+        Ok(QuarantineView {
+            quarantined: breaker.quarantined,
+            consecutive_exhausts: breaker.consecutive_exhausts,
+            tripped_at: breaker.tripped_at,
+            dead_letters: book.len(),
+            dead_letters_dropped: book.dropped(),
+        })
+    }
+
+    /// Name-resolving wrapper over [`Breadboard::quarantine_view_task`].
+    pub fn quarantine_view(&mut self, task: &str) -> Result<QuarantineView> {
+        let h = self.pipe.task(task)?;
+        self.quarantine_view_task(h)
+    }
+
+    /// Manually close a task's circuit breaker (the operator override —
+    /// hot-swapping a fix clears it automatically). Returns whether the
+    /// breaker was actually open. Gated like swaps.
+    pub fn reset_quarantine_task(&mut self, task: TaskHandle) -> Result<bool> {
+        self.pipe.check_task(task);
+        self.authorize(Resource::Pipeline(self.pipe.spec().name.clone()))?;
+        Ok(self.pipe.quarantine_reset_id(task.task_id()))
+    }
+
+    /// Name-resolving wrapper over [`Breadboard::reset_quarantine_task`].
+    pub fn reset_quarantine(&mut self, task: &str) -> Result<bool> {
+        let h = self.pipe.task(task)?;
+        self.reset_quarantine_task(h)
     }
 
     // ------------------------------------------------------------------

@@ -21,6 +21,10 @@ mod wavefront;
 use crate::av::{AnnotatedValue, DataClass, Payload};
 use crate::breadboard::tap::TapBoard;
 use crate::bus::NotifyMode;
+use crate::fault::{
+    is_panic_error, DeadLetter, DeadLetterBook, EventStorm, FaultPlan, FireGuard, FirePolicy,
+    Firing, OnExhaust, Supervision,
+};
 use crate::graph::PipelineGraph;
 use crate::link::{Delivery, LinkAgent};
 use crate::net::WanTopology;
@@ -31,7 +35,7 @@ use crate::spec::PipelineSpec;
 use crate::storage::{PurgePolicy, StorageConfig};
 use crate::obs::Obs;
 use crate::task::builtins::PassThrough;
-use crate::task::effects::{DeferReason, PreparedFiring, RecordedBody, RecordedRun};
+use crate::task::effects::{DeferReason, FireFail, PreparedFiring, RecordedBody, RecordedRun};
 use crate::task::{RunOutcome, TaskAgent, TaskCode};
 use crate::util::{
     AvId, ContentHash, Json, LinkId, ObjectId, RegionId, SimDuration, SimTime, TaskId, WireId,
@@ -79,6 +83,12 @@ pub struct DeployConfig {
     /// order); the overhead budget is benchmarked by the `obs-overhead`
     /// shape pair. Defaults to `KOALJA_TRACE` when set ("1"/"true").
     pub trace: bool,
+    /// Seeded fault-injection plan (see [`crate::fault`]): deterministic
+    /// panics, errors and cost spikes at chosen (task, firing-index)
+    /// coordinates — the chaos-testing lever. `None` (the default unless
+    /// `KOALJA_FAULT_SEED` is set) injects nothing and keeps the whole
+    /// supervision layer off the hot path.
+    pub fault: Option<FaultPlan>,
 }
 
 /// The deploy-time default for [`DeployConfig::workers`]: the
@@ -115,6 +125,7 @@ impl Default for DeployConfig {
             force_central: false,
             workers: default_workers(),
             trace: default_trace(),
+            fault: crate::fault::default_fault_plan(),
         }
     }
 }
@@ -134,6 +145,10 @@ enum EventKind {
     /// land in virtual-time order even for future-dated publications.
     /// Only ever pushed while at least one tap watches this wire.
     TapObserve { wire: WireId, av: Arc<AnnotatedValue> },
+    /// A supervised retry: a failed firing re-enters the wavefront at
+    /// `T + backoff(attempt)` with its input snapshot pinned. Boxed —
+    /// the snapshot would otherwise quadruple the event size (§Perf).
+    RetryFire { task: TaskId, firing: Box<Firing> },
 }
 
 struct Ev {
@@ -357,6 +372,17 @@ pub struct Coordinator {
     /// instrumentation site guards on `obs.enabled`, so a trace-off
     /// deployment pays one branch per site (benchmarked: `obs-overhead`).
     obs: Obs,
+    /// Supervised firing lifecycle (see [`crate::fault`]): per-task fire
+    /// policies, dead-letter books, quarantine breakers, and the seeded
+    /// fault plan. Idle (one branch per firing) unless a policy or plan
+    /// is installed — benchmarked by the `fault-overhead` shape pair.
+    pub supervision: Supervision,
+    /// `run_until_idle` gives up after this many events in one call and
+    /// reports an [`EventStorm`] instead of looping forever.
+    storm_cap: u64,
+    /// The storm report from the most recent `run_until_idle`, if it
+    /// tripped (cleared on the next run call).
+    last_storm: Option<EventStorm>,
 }
 
 impl Coordinator {
@@ -527,6 +553,9 @@ impl Coordinator {
             pending_pumps: Vec::new(),
             commit_log: Vec::new(),
             obs: Obs::sized(cfg.trace, n_tasks, n_wires),
+            supervision: Supervision::sized(n_tasks, cfg.fault),
+            storm_cap: 10_000_000,
+            last_storm: None,
         })
     }
 
@@ -847,22 +876,86 @@ impl Coordinator {
         handled
     }
 
-    /// Drain the queue completely (with a runaway guard).
+    /// Drain the queue completely (with a runaway guard). A tripped
+    /// guard no longer panics: the loop stops, the structured
+    /// [`EventStorm`] report (naming the hottest tasks and wires) is
+    /// stashed in [`Coordinator::last_storm`], and the events handled so
+    /// far are returned — a runaway pipeline degrades instead of
+    /// aborting the process. Callers that want the error itself use
+    /// [`Coordinator::try_run_until_idle`].
     pub fn run_until_idle(&mut self) -> u64 {
+        match self.try_run_until_idle() {
+            Ok(n) => n,
+            Err(storm) => {
+                let handled = storm.handled;
+                self.last_storm = Some(storm);
+                handled
+            }
+        }
+    }
+
+    /// [`run_until_idle`](Self::run_until_idle), surfacing the storm
+    /// report as an error instead of stashing it.
+    pub fn try_run_until_idle(&mut self) -> std::result::Result<u64, EventStorm> {
+        self.last_storm = None;
         let mut handled = 0;
-        let cap = 10_000_000u64;
         loop {
             let at = match self.queue.peek() {
                 Some(Reverse(e)) => e.at,
                 None => break,
             };
             handled += self.drain_instant(at);
-            if handled > cap {
-                panic!("run_until_idle: event storm (> {cap} events)");
+            if handled > self.storm_cap {
+                self.plat.metrics.bump("event_storms");
+                self.events_processed += handled;
+                return Err(self.build_storm(handled));
             }
         }
         self.events_processed += handled;
-        handled
+        Ok(handled)
+    }
+
+    /// The storm report from the most recent [`run_until_idle`] call, if
+    /// its cap tripped.
+    pub fn last_storm(&self) -> Option<&EventStorm> {
+        self.last_storm.as_ref()
+    }
+
+    /// Override the runaway guard (default 10 million events per
+    /// `run_until_idle` call). Mostly for tests.
+    pub fn set_storm_cap(&mut self, cap: u64) {
+        self.storm_cap = cap.max(1);
+    }
+
+    fn build_storm(&self, handled: u64) -> EventStorm {
+        let mut tasks: Vec<(String, u64)> = self
+            .agents
+            .iter()
+            .map(|a| (a.spec.name.clone(), a.runs))
+            .filter(|(_, runs)| *runs > 0)
+            .collect();
+        tasks.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        tasks.truncate(3);
+        let mut wires: Vec<(String, u64)> = Vec::new();
+        if self.obs.enabled {
+            for (i, name) in self.graph.wires.names().iter().enumerate() {
+                let Some(w) = self.obs.wire_stats(WireId::new(i as u32)) else { continue };
+                let traffic = w.publications + w.injections;
+                if traffic > 0 {
+                    wires.push((name.clone(), traffic));
+                }
+            }
+            wires.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+            wires.truncate(3);
+        }
+        EventStorm {
+            handled,
+            cap: self.storm_cap,
+            at: self.plat.now,
+            pending: self.queue.len(),
+            hottest_tasks: tasks,
+            hottest_wires: wires,
+        }
     }
 
     /// Pop and dispatch every event at virtual instant `at` — including
@@ -924,6 +1017,12 @@ impl Coordinator {
                     self.obs.tap_observe(self.plat.now, wire, av.id);
                 }
                 self.taps.observe(wire, &av, &self.plat.store, self.plat.now);
+            }
+            EventKind::RetryFire { task, firing } => {
+                // the retry joins this instant's wavefront like any fresh
+                // snapshot — collect_snapshots drains it ahead of new work
+                self.supervision.push_retry(task, *firing);
+                self.enqueue_pump(task, false);
             }
         }
     }
@@ -1034,13 +1133,13 @@ impl Coordinator {
         // phase 1: extract each task's ready firings
         let mut groups: Vec<WaveGroup> = Vec::with_capacity(pumps.len());
         for p in &pumps {
-            let (snaps, queued) = self.collect_snapshots(p.task);
-            groups.push(WaveGroup { task: p.task, via_poll: p.via_poll, queued, snaps });
+            let (firings, queued) = self.collect_snapshots(p.task);
+            groups.push(WaveGroup { task: p.task, via_poll: p.via_poll, queued, firings });
         }
-        let busy = groups.iter().filter(|g| !g.snaps.is_empty()).count();
+        let busy = groups.iter().filter(|g| !g.firings.is_empty()).count();
         // wavefront spans carry the width only (identical for every
         // `workers` setting); occupancy lands in stats, never in spans
-        let width: u32 = groups.iter().map(|g| g.snaps.len() as u32).sum();
+        let width: u32 = groups.iter().map(|g| g.firings.len() as u32).sum();
         if self.obs.enabled && width > 0 {
             self.obs.wavefront_begin(self.plat.now, width);
         }
@@ -1054,7 +1153,7 @@ impl Coordinator {
             for (g, items) in groups.iter().zip(prepared) {
                 for item in items {
                     match item {
-                        PreparedFiring::Deferred(snap, reason) => {
+                        PreparedFiring::Deferred(firing, reason) => {
                             if self.obs.enabled {
                                 // scheduling notes, not behavior: these
                                 // spans exist only on the pool path and
@@ -1070,9 +1169,7 @@ impl Coordinator {
                                     DeferReason::MemoHit => self.obs.note_deferred_memo(),
                                 }
                             }
-                            if let Err(e) = self.fire_snapshot(g.task, snap) {
-                                self.record_task_error(g.task, e);
-                            }
+                            self.fire_supervised(g.task, firing);
                         }
                         PreparedFiring::Recorded(rec) => self.commit_recorded(g.task, rec),
                     }
@@ -1081,14 +1178,12 @@ impl Coordinator {
             }
         } else {
             // sequential wavefront (the 1-wide chain hot path): fire
-            // directly, moving each group's existing snapshot Vec — no
+            // directly, moving each group's existing firing Vec — no
             // PreparedFiring wrapping, no extra allocation (§Perf)
             for gi in 0..groups.len() {
                 let task = groups[gi].task;
-                for snap in std::mem::take(&mut groups[gi].snaps) {
-                    if let Err(e) = self.fire_snapshot(task, snap) {
-                        self.record_task_error(task, e);
-                    }
+                for firing in std::mem::take(&mut groups[gi].firings) {
+                    self.fire_supervised(task, firing);
                 }
                 self.pump_epilogue(task, groups[gi].queued, groups[gi].via_poll);
             }
@@ -1107,19 +1202,43 @@ impl Coordinator {
     /// Fires never feed the same instant back (publication costs are
     /// strictly positive), so the snapshot sequence is identical to
     /// firing inline.
-    fn collect_snapshots(&mut self, task: TaskId) -> (Vec<Snapshot>, usize) {
+    fn collect_snapshots(&mut self, task: TaskId) -> (Vec<Firing>, usize) {
         // autoscaling signal: how much work was waiting when we woke (the
         // bounded snapshot buffers hide the burst; the topics don't)
         let queued: usize = self.in_links[task.index()]
             .iter()
             .map(|&li| self.plat.bus.depth(self.links[li].link.id))
             .sum();
-        let mut snaps = Vec::new();
+        let active = self.supervision.active();
+        // retries scheduled for this instant re-enter ahead of fresh
+        // work: their index (and hence provenance order) predates it
+        let mut firings: Vec<Firing> = if active {
+            let mut retries = self.supervision.take_retries(task);
+            for f in &mut retries {
+                f.guard = self.supervision.guard(task, f.index, f.attempt);
+            }
+            retries
+        } else {
+            Vec::new()
+        };
         loop {
             loop {
                 let now = self.plat.now;
                 match self.agents[task.index()].engine.take(now) {
-                    Some(s) => snaps.push(s),
+                    Some(s) => {
+                        // the guard is computed ONCE here, on the
+                        // coordinator thread, so workers never touch
+                        // supervision state — and the verdict is pinned
+                        // to the firing's (task, index, attempt)
+                        // coordinate, identical for every worker count
+                        let (index, guard) = if active {
+                            let i = self.supervision.assign_index(task);
+                            (i, self.supervision.guard(task, i, 1))
+                        } else {
+                            (0, FireGuard::NONE)
+                        };
+                        firings.push(Firing { snapshot: s, index, attempt: 1, guard });
+                    }
                     None => break,
                 }
             }
@@ -1127,7 +1246,41 @@ impl Coordinator {
                 break;
             }
         }
-        (snaps, queued)
+        if active && !firings.is_empty() && self.supervision.quarantined(task) {
+            // circuit open: dead-letter everything without executing
+            self.quarantine_divert(task, std::mem::take(&mut firings));
+        }
+        (firings, queued)
+    }
+
+    /// Dead-letter a quarantined task's ready firings without executing
+    /// them (the circuit breaker is open).
+    fn quarantine_divert(&mut self, task: TaskId, firings: Vec<Firing>) {
+        for f in firings {
+            let run = self.plat.next_run_id();
+            self.plat.metrics.bump("quarantine_dropped");
+            if self.obs.enabled {
+                self.obs.firing_exhausted(self.plat.now, task, run, 0);
+            }
+            self.plat.prov.checkpoint(
+                task,
+                run,
+                self.plat.now,
+                CheckpointEvent::Remark(format!(
+                    "quarantined: firing {} dead-lettered without execution",
+                    f.index
+                )),
+            );
+            self.supervision.book_mut(task).push(DeadLetter {
+                index: f.index,
+                at: self.plat.now,
+                attempts: 0,
+                error: "quarantined: dead-lettered without execution".to_string(),
+                panicked: false,
+                quarantine_drop: true,
+                snapshot: f.snapshot,
+            });
+        }
     }
 
     /// The tail of the old pump, run after a task's wavefront commits.
@@ -1161,21 +1314,27 @@ impl Coordinator {
     }
 
     /// Task-error bookkeeping (metrics + checkpoint remark) — shared by
-    /// the deferred and recorded commit paths.
-    fn record_task_error(&mut self, task: TaskId, e: anyhow::Error) {
+    /// the deferred and recorded commit paths. Returns the run id drawn
+    /// for the failure record and whether the error was a caught panic
+    /// (the panic guard marks its errors, so the distinction survives
+    /// into the remark, the span event, and the dead-letter record).
+    fn record_task_error(&mut self, task: TaskId, e: &anyhow::Error) -> (crate::util::RunId, bool) {
+        let panicked = is_panic_error(e);
         self.plat.metrics.bump("task_errors");
         let run = self.plat.next_run_id();
         if self.obs.enabled {
-            // plain errors and caught panics are indistinguishable here —
-            // the panic guard converts both to the same error shape
-            self.obs.firing_failed(self.plat.now, task, run);
+            self.obs.firing_failed(self.plat.now, task, run, panicked);
         }
         self.plat.prov.checkpoint(
             task,
             run,
             self.plat.now,
-            CheckpointEvent::Remark(format!("task error: {e}")),
+            CheckpointEvent::Remark(format!(
+                "{}: {e}",
+                if panicked { "task panic" } else { "task error" }
+            )),
         );
+        (run, panicked)
     }
 
     /// Commit one worker-executed firing: draw the run id (canonical
@@ -1190,23 +1349,32 @@ impl Coordinator {
             Ok(RecordedBody { emissions, hashes, cost, ghost }) => {
                 let outcome = RunOutcome::Ran { run, emissions, cost, ghost };
                 self.publish_outcome(task, recipe, &parents, born, cold, outcome, Some(&hashes));
+                if self.supervision.active() {
+                    self.supervision.note_success(task);
+                }
             }
-            Err(e) => self.record_task_error(task, e),
+            Err(FireFail { error, firing }) => self.supervise_failure(task, Some(firing), error),
         }
     }
 
     /// Execute one snapshot on a task and publish the results.
     pub fn fire_snapshot(&mut self, task: TaskId, snapshot: Snapshot) -> Result<()> {
-        self.fire_snapshot_inner(task, snapshot, false)
+        self.fire_snapshot_inner(task, snapshot, false, FireGuard::NONE)
     }
 
     /// Execute bypassing memoization — the schedule-driven baseline's
     /// data-unaware behaviour (E8).
     pub fn fire_snapshot_forced(&mut self, task: TaskId, snapshot: Snapshot) -> Result<()> {
-        self.fire_snapshot_inner(task, snapshot, true)
+        self.fire_snapshot_inner(task, snapshot, true, FireGuard::NONE)
     }
 
-    fn fire_snapshot_inner(&mut self, task: TaskId, snapshot: Snapshot, forced: bool) -> Result<()> {
+    fn fire_snapshot_inner(
+        &mut self,
+        task: TaskId,
+        snapshot: Snapshot,
+        forced: bool,
+        guard: FireGuard,
+    ) -> Result<()> {
         let cold = self.plat.cluster.activate(task, self.plat.now);
         let recipe = self.agents[task.index()].recipe(&snapshot);
         let parents: Vec<AvId> = snapshot.all_avs().map(|a| a.id).collect();
@@ -1214,10 +1382,184 @@ impl Coordinator {
         let outcome = if forced {
             self.agents[task.index()].execute_forced(&mut self.plat, &self.graph.wires, snapshot)?
         } else {
-            self.agents[task.index()].execute(&mut self.plat, &self.graph.wires, snapshot)?
+            self.agents[task.index()].execute_guarded(
+                &mut self.plat,
+                &self.graph.wires,
+                snapshot,
+                guard,
+            )?
         };
         self.publish_outcome(task, recipe, &parents, born, cold, outcome, None);
         Ok(())
+    }
+
+    /// Fire one supervised firing on the direct (commit-phase) path:
+    /// execute under its guard, and hand any failure to the supervision
+    /// machinery. The firing is cloned into a pinned copy first only
+    /// when the task actually carries a policy (retries / dead-letter /
+    /// degrade need the inputs back); unsupervised failures keep the old
+    /// record-and-drop behaviour with no clone.
+    fn fire_supervised(&mut self, task: TaskId, firing: Firing) {
+        let guard = firing.guard;
+        let pinned = if self.supervision.active() && self.supervision.policy(task).is_some() {
+            Some(firing.clone())
+        } else {
+            None
+        };
+        if let Err(e) = self.fire_snapshot_inner(task, firing.snapshot, false, guard) {
+            self.supervise_failure(task, pinned, e);
+        } else if self.supervision.active() {
+            self.supervision.note_success(task);
+        }
+    }
+
+    /// The supervision state machine for one failed attempt: retry in
+    /// virtual time while the budget lasts, then the policy's on-exhaust
+    /// action (dead-letter / quarantine / degrade). `firing` is `None`
+    /// for unsupervised tasks — they keep the record-and-drop path.
+    fn supervise_failure(&mut self, task: TaskId, firing: Option<Firing>, e: anyhow::Error) {
+        let (run, panicked) = self.record_task_error(task, &e);
+        let Some(firing) = firing else { return };
+        let Some(policy) = self.supervision.policy(task).cloned() else { return };
+
+        if firing.attempt < policy.max_attempts && !self.supervision.quarantined(task) {
+            // budget left: schedule the retry at T + backoff(attempt)
+            // with the input snapshot pinned. Virtual time makes this
+            // deterministic — the Wake lands at the same instant for
+            // every `workers` setting.
+            let delay = policy.backoff.delay(firing.attempt);
+            self.plat.metrics.bump("task_retries");
+            if self.obs.enabled {
+                self.obs.firing_retry(self.plat.now, task, run, firing.attempt);
+            }
+            self.plat.prov.checkpoint(
+                task,
+                run,
+                self.plat.now,
+                CheckpointEvent::Remark(format!(
+                    "retry: firing {} attempt {}/{} failed; attempt {} scheduled at +{}us",
+                    firing.index,
+                    firing.attempt,
+                    policy.max_attempts,
+                    firing.attempt + 1,
+                    delay.as_micros()
+                )),
+            );
+            let next = Firing {
+                snapshot: firing.snapshot,
+                index: firing.index,
+                attempt: firing.attempt + 1,
+                // recomputed (plan + policy may differ per attempt) when
+                // the retry is collected
+                guard: FireGuard::NONE,
+            };
+            self.push_event(
+                self.plat.now + delay,
+                EventKind::RetryFire { task, firing: Box::new(next) },
+            );
+            return;
+        }
+
+        // budget exhausted (or the breaker opened mid-flight)
+        self.plat.metrics.bump("task_exhausted");
+        self.supervision.breaker_mut(task).consecutive_exhausts += 1;
+        if self.obs.enabled {
+            self.obs.firing_exhausted(self.plat.now, task, run, firing.attempt);
+        }
+        self.plat.prov.checkpoint(
+            task,
+            run,
+            self.plat.now,
+            CheckpointEvent::Anomaly(format!(
+                "firing {} exhausted after {} attempt(s): {e}",
+                firing.index, firing.attempt
+            )),
+        );
+        match policy.on_exhaust {
+            OnExhaust::DeadLetter => {
+                self.dead_letter(task, firing, &e, panicked);
+            }
+            OnExhaust::Quarantine { after } => {
+                self.dead_letter(task, firing, &e, panicked);
+                let b = self.supervision.breaker(task);
+                if b.consecutive_exhausts >= after && !b.quarantined {
+                    let now = self.plat.now;
+                    let b = self.supervision.breaker_mut(task);
+                    b.quarantined = true;
+                    b.tripped_at = Some(now);
+                    self.plat.metrics.bump("quarantine_trips");
+                    if self.obs.enabled {
+                        self.obs.quarantine(now, task, true);
+                    }
+                    self.plat.prov.checkpoint(
+                        task,
+                        run,
+                        now,
+                        CheckpointEvent::Remark(format!(
+                            "quarantined after {after} consecutive exhausted firings"
+                        )),
+                    );
+                }
+            }
+            OnExhaust::Degrade { ref fallback } => {
+                self.plat.metrics.bump("task_degraded");
+                if self.obs.enabled {
+                    self.obs.firing_degraded(self.plat.now, task, run);
+                }
+                self.plat.prov.checkpoint(
+                    task,
+                    run,
+                    self.plat.now,
+                    CheckpointEvent::Remark(format!(
+                        "degraded: fallback emitted after {} exhausted attempt(s)",
+                        firing.attempt
+                    )),
+                );
+                let parents: Vec<AvId> = firing.snapshot.all_avs().map(|a| a.id).collect();
+                self.emit_degraded(task, fallback.clone(), &parents, firing.snapshot.born);
+            }
+        }
+    }
+
+    /// Record an exhausted firing into the task's dead-letter book,
+    /// inputs pinned for a later redrive.
+    fn dead_letter(&mut self, task: TaskId, firing: Firing, e: &anyhow::Error, panicked: bool) {
+        self.plat.metrics.bump("dead_letters");
+        self.supervision.book_mut(task).push(DeadLetter {
+            index: firing.index,
+            at: self.plat.now,
+            attempts: firing.attempt,
+            error: format!("{e}"),
+            panicked,
+            quarantine_drop: false,
+            snapshot: firing.snapshot,
+        });
+    }
+
+    /// Publish a declared fallback on every output wire of `task` so
+    /// downstream keeps flowing (the Degrade on-exhaust action). The
+    /// emission publishes through the normal outcome path — minted AVs,
+    /// provenance, routing, sink capture — but as a ghost-flagged run so
+    /// the fallback is never memoized as the recipe's real result.
+    fn emit_degraded(&mut self, task: TaskId, fallback: Payload, parents: &[AvId], born: SimTime) {
+        let run = self.plat.next_run_id();
+        let emissions: Vec<crate::task::Emission> = self.out_links[task.index()]
+            .iter()
+            .map(|slot| crate::task::Emission {
+                wire: slot.wire,
+                payload: fallback.clone(),
+                class: DataClass::Summary,
+                defer: SimDuration::ZERO,
+            })
+            .collect();
+        let recipe = fallback.content_hash();
+        let outcome = RunOutcome::Ran {
+            run,
+            emissions,
+            cost: SimDuration::micros(10),
+            ghost: true,
+        };
+        self.publish_outcome(task, recipe, parents, born, SimDuration::ZERO, outcome, None);
     }
 
     /// Publish a run outcome: mint AVs, stamp provenance, route/collect,
@@ -1558,6 +1900,20 @@ impl Coordinator {
             CheckpointEvent::VersionChange { from: old_v, to: new_v },
         );
         self.plat.metrics.bump("software_updates");
+        // a hot-swap is the operator's "the code is fixed now" signal:
+        // clear the circuit breaker so redriven / fresh firings execute
+        if self.supervision.active() && self.supervision.clear_breaker(id) {
+            self.plat.metrics.bump("quarantine_resets");
+            if self.obs.enabled {
+                self.obs.quarantine(self.plat.now, id, false);
+            }
+            self.plat.prov.checkpoint(
+                id,
+                run,
+                self.plat.now,
+                CheckpointEvent::Remark("quarantine cleared by software update".to_string()),
+            );
+        }
         if recompute_last {
             if let Some(snap) = self.agents[id.index()].last_snapshot.clone() {
                 self.fire_snapshot(id, snap)?;
@@ -1576,6 +1932,92 @@ impl Coordinator {
     pub fn run_source_id(&mut self, task: TaskId) -> Result<()> {
         let snap = Snapshot { inputs: vec![], born: self.plat.now, ghost: false };
         self.fire_snapshot(task, snap)
+    }
+
+    // ------------------------------------------------------------------
+    // Supervised firing lifecycle (see crate::fault)
+    // ------------------------------------------------------------------
+
+    /// Install a per-task [`FirePolicy`] (retries / deadline / on-exhaust
+    /// action). The handle API's `set_fire_policy` lands here.
+    pub fn set_fire_policy_id(&mut self, task: TaskId, policy: FirePolicy) {
+        self.supervision.set_policy(task, policy);
+    }
+
+    /// The task's installed fire policy, if any.
+    pub fn fire_policy_id(&self, task: TaskId) -> Option<&FirePolicy> {
+        self.supervision.policy(task)
+    }
+
+    /// The task's dead-letter book (read-only).
+    pub fn dead_letter_book(&self, task: TaskId) -> &DeadLetterBook {
+        self.supervision.book(task)
+    }
+
+    /// Drain the task's dead-letter book, returning the letters.
+    pub fn drain_dead_letters_id(&mut self, task: TaskId) -> Vec<DeadLetter> {
+        self.supervision.book_mut(task).drain()
+    }
+
+    /// Is the task's circuit breaker open?
+    pub fn quarantined_id(&self, task: TaskId) -> bool {
+        self.supervision.quarantined(task)
+    }
+
+    /// Explicitly clear the task's circuit breaker (the breadboard's
+    /// reset verb; hot-swap does this implicitly). Returns whether the
+    /// breaker was actually open.
+    pub fn quarantine_reset_id(&mut self, task: TaskId) -> bool {
+        if !self.supervision.active() || !self.supervision.clear_breaker(task) {
+            return false;
+        }
+        self.plat.metrics.bump("quarantine_resets");
+        if self.obs.enabled {
+            self.obs.quarantine(self.plat.now, task, false);
+        }
+        let run = self.plat.next_run_id();
+        self.plat.prov.checkpoint(
+            task,
+            run,
+            self.plat.now,
+            CheckpointEvent::Remark("quarantine reset by operator".to_string()),
+        );
+        true
+    }
+
+    /// Redrive the task's dead-lettered firings through its current code:
+    /// each letter's pinned snapshot re-enters as a fresh supervised
+    /// firing (new index, attempt 1). Errors while the task is still
+    /// quarantined — hot-swap a fix (or reset the breaker) first.
+    pub fn redrive_id(&mut self, task: TaskId) -> Result<usize> {
+        if self.supervision.quarantined(task) {
+            bail!(
+                "task is quarantined; hot-swap a fix or reset the breaker before redriving"
+            );
+        }
+        let letters = self.supervision.book_mut(task).drain();
+        if letters.is_empty() {
+            return Ok(0);
+        }
+        let n = letters.len();
+        self.plat.metrics.bump("redrives");
+        if self.obs.enabled {
+            self.obs.redrive(self.plat.now, task, n as u32);
+        }
+        let run = self.plat.next_run_id();
+        self.plat.prov.checkpoint(
+            task,
+            run,
+            self.plat.now,
+            CheckpointEvent::Remark(format!("redrive: replaying {n} dead-lettered firing(s)")),
+        );
+        for letter in letters {
+            let index = self.supervision.assign_index(task);
+            let guard = self.supervision.guard(task, index, 1);
+            let firing = Firing { snapshot: letter.snapshot, index, attempt: 1, guard };
+            self.fire_supervised(task, firing);
+        }
+        Ok(n)
     }
 
     /// Total values collected on a sink wire.

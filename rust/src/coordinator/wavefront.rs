@@ -30,8 +30,8 @@
 //! needs no deterministic scheduler.
 
 use super::{Coordinator, TaskId};
+use crate::fault::Firing;
 use crate::graph::WireTable;
-use crate::policy::Snapshot;
 use crate::task::effects::{DeferReason, PreparedFiring, WorldView};
 use crate::task::TaskAgent;
 use crate::util::ContentHash;
@@ -44,7 +44,7 @@ pub(crate) struct WaveGroup {
     pub task: TaskId,
     pub via_poll: bool,
     pub queued: usize,
-    pub snaps: Vec<Snapshot>,
+    pub firings: Vec<Firing>,
 }
 
 /// A unit of worker work: one group's agent (exclusively borrowed) plus
@@ -52,7 +52,7 @@ pub(crate) struct WaveGroup {
 struct Job<'a> {
     group_idx: usize,
     agent: &'a mut TaskAgent,
-    snaps: Vec<Snapshot>,
+    firings: Vec<Firing>,
 }
 
 /// Execute every busy group's firings on the worker pool. Returns one
@@ -71,14 +71,14 @@ pub(super) fn execute_parallel(
     let mut slot_of: std::collections::HashMap<usize, usize> = groups
         .iter()
         .enumerate()
-        .filter(|(_, g)| !g.snaps.is_empty())
+        .filter(|(_, g)| !g.firings.is_empty())
         .map(|(gi, g)| (g.task.index(), gi))
         .collect();
     let mut jobs: Vec<Mutex<Option<Job<'_>>>> = Vec::with_capacity(slot_of.len());
     for (i, agent) in agents.iter_mut().enumerate() {
         if let Some(group_idx) = slot_of.remove(&i) {
-            let snaps = std::mem::take(&mut groups[group_idx].snaps);
-            jobs.push(Mutex::new(Some(Job { group_idx, agent, snaps })));
+            let firings = std::mem::take(&mut groups[group_idx].firings);
+            jobs.push(Mutex::new(Some(Job { group_idx, agent, firings })));
         }
     }
     debug_assert!(slot_of.is_empty(), "every busy group maps to a deployed agent");
@@ -94,9 +94,9 @@ pub(super) fn execute_parallel(
                 if i >= jobs.len() {
                     break;
                 }
-                let Job { group_idx, agent, snaps } =
+                let Job { group_idx, agent, firings } =
                     jobs[i].lock().unwrap().take().expect("each job is taken once");
-                let out = prepare_group(agent, wires, &world, snaps);
+                let out = prepare_group(agent, wires, &world, firings);
                 *results[group_idx].lock().unwrap() = out;
             });
         }
@@ -112,25 +112,25 @@ fn prepare_group(
     agent: &mut TaskAgent,
     wires: &WireTable,
     world: &WorldView<'_>,
-    snaps: Vec<Snapshot>,
+    firings: Vec<Firing>,
 ) -> Vec<PreparedFiring> {
-    let mut out = Vec::with_capacity(snaps.len());
+    let mut out = Vec::with_capacity(firings.len());
     if !agent.code.parallel_safe() {
         out.extend(
-            snaps.into_iter().map(|s| PreparedFiring::Deferred(s, DeferReason::Sequential)),
+            firings.into_iter().map(|f| PreparedFiring::Deferred(f, DeferReason::Sequential)),
         );
         return out;
     }
     let mut attempted: Vec<ContentHash> = Vec::new();
-    for snap in snaps {
-        let recipe = agent.recipe(&snap);
+    for f in firings {
+        let recipe = agent.recipe(&f.snapshot);
         let dup = attempted.contains(&recipe);
         attempted.push(recipe);
-        if !snap.ghost && (dup || agent.memo_valid_in(world.store, recipe)) {
-            out.push(PreparedFiring::Deferred(snap, DeferReason::MemoHit));
+        if !f.snapshot.ghost && (dup || agent.memo_valid_in(world.store, recipe)) {
+            out.push(PreparedFiring::Deferred(f, DeferReason::MemoHit));
             continue;
         }
-        out.push(agent.execute_recorded(world, wires, snap, recipe));
+        out.push(agent.execute_recorded(world, wires, f, recipe));
     }
     out
 }

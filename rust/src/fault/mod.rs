@@ -1,0 +1,645 @@
+//! Supervised firing lifecycle: per-task fire policies (bounded retries
+//! with virtual-time backoff, deadline budgets, on-exhaust actions),
+//! capped dead-letter books, a quarantine circuit breaker, and a seeded
+//! fault-injection plan.
+//!
+//! Determinism contract: every decision in this module is a pure
+//! function of deployment-time configuration plus the (task,
+//! firing-index, attempt) coordinate of the firing being supervised.
+//! Nothing here consults wall-clock time, thread identity, or worker
+//! count, so the whole failure machinery — injected faults included —
+//! commits byte-identical books at `workers = 1` and `workers = N`.
+
+use crate::av::Payload;
+use crate::policy::Snapshot;
+use crate::util::{Rng, SimDuration, SimTime, TaskId};
+use anyhow::anyhow;
+use std::collections::VecDeque;
+
+/// Marker prefix carried by errors synthesized from caught panics
+/// (`task/mod.rs:run_code_guarded`). The vendored `anyhow` shim
+/// flattens error chains to strings, so the marker is how the panic /
+/// plain-error distinction survives into remarks, dead letters, and
+/// span events.
+pub const PANIC_MARKER: &str = "task panicked: ";
+
+/// True when `e` originated as a caught panic rather than a plain task
+/// error return.
+pub fn is_panic_error(e: &anyhow::Error) -> bool {
+    format!("{e}").contains(PANIC_MARKER)
+}
+
+pub(crate) fn deadline_error(cost: SimDuration, budget: SimDuration) -> anyhow::Error {
+    anyhow!(
+        "deadline exceeded: firing cost {}us over budget {}us",
+        cost.as_micros(),
+        budget.as_micros()
+    )
+}
+
+/// Backoff schedule for retries, in virtual time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Backoff {
+    /// The same delay before every retry.
+    Fixed(SimDuration),
+    /// `base * 2^(attempt-1)`, capped.
+    Exponential { base: SimDuration, cap: SimDuration },
+}
+
+impl Backoff {
+    /// Delay scheduled before retrying after failed attempt `attempt`
+    /// (1-based).
+    pub fn delay(&self, attempt: u32) -> SimDuration {
+        match *self {
+            Backoff::Fixed(d) => d,
+            Backoff::Exponential { base, cap } => {
+                let shift = attempt.saturating_sub(1).min(20);
+                let scaled = base.scale((1u64 << shift) as f64);
+                if scaled > cap {
+                    cap
+                } else {
+                    scaled
+                }
+            }
+        }
+    }
+}
+
+/// What to do once a firing has exhausted its retry budget.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OnExhaust {
+    /// Record the firing (inputs pinned) into the task's dead-letter
+    /// book; redrivable later via `TaskHandle::redrive`.
+    DeadLetter,
+    /// Dead-letter, and after `after` consecutive exhausted firings
+    /// flip the task's circuit breaker: subsequent wakes dead-letter
+    /// immediately without executing. Hot-swap (or an explicit
+    /// breadboard reset) clears the breaker.
+    Quarantine { after: u32 },
+    /// Emit the declared fallback payload on every output wire so
+    /// downstream keeps flowing. The fallback is never memoized.
+    Degrade { fallback: Payload },
+}
+
+/// Per-task supervision policy for firings.
+#[derive(Clone, Debug)]
+pub struct FirePolicy {
+    /// Total attempts per firing (1 = no retries).
+    pub max_attempts: u32,
+    /// Virtual-time delay schedule between attempts.
+    pub backoff: Backoff,
+    /// Optional per-firing budget checked against the firing's
+    /// `compute_cost`; exceeding it fails the attempt.
+    pub deadline: Option<SimDuration>,
+    /// Action when `max_attempts` is exhausted.
+    pub on_exhaust: OnExhaust,
+}
+
+impl Default for FirePolicy {
+    fn default() -> Self {
+        FirePolicy {
+            max_attempts: 1,
+            backoff: Backoff::Fixed(SimDuration::millis(10)),
+            deadline: None,
+            on_exhaust: OnExhaust::DeadLetter,
+        }
+    }
+}
+
+impl FirePolicy {
+    /// Policy allowing `n` retries (so `n + 1` attempts total).
+    pub fn retries(n: u32) -> Self {
+        FirePolicy {
+            max_attempts: n + 1,
+            ..FirePolicy::default()
+        }
+    }
+
+    pub fn with_backoff(mut self, backoff: Backoff) -> Self {
+        self.backoff = backoff;
+        self
+    }
+
+    pub fn with_deadline(mut self, budget: SimDuration) -> Self {
+        self.deadline = Some(budget);
+        self
+    }
+
+    pub fn dead_letter(mut self) -> Self {
+        self.on_exhaust = OnExhaust::DeadLetter;
+        self
+    }
+
+    pub fn quarantine(mut self, after: u32) -> Self {
+        self.on_exhaust = OnExhaust::Quarantine { after: after.max(1) };
+        self
+    }
+
+    pub fn degrade(mut self, fallback: Payload) -> Self {
+        self.on_exhaust = OnExhaust::Degrade { fallback };
+        self
+    }
+}
+
+/// The kind of fault a `FaultPlan` injects into a firing.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// The task run returns a plain error.
+    Error,
+    /// The task run "panics" — the injected error carries the panic
+    /// marker so the supervision path classifies it like a real caught
+    /// panic (without actually unwinding, which would spam stderr in
+    /// property tests).
+    Panic,
+    /// The firing completes but its compute cost is inflated by this
+    /// much — the lever for exercising deadline budgets.
+    CostSpike(SimDuration),
+}
+
+/// Supervision verdict for one attempt of one firing, computed once on
+/// the coordinator thread and carried with the firing so workers never
+/// touch shared supervision state.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FireGuard {
+    /// Fault to inject into this attempt, if any.
+    pub fault: Option<FaultKind>,
+    /// Deadline budget from the task's policy, if any.
+    pub deadline: Option<SimDuration>,
+}
+
+impl FireGuard {
+    pub const NONE: FireGuard = FireGuard {
+        fault: None,
+        deadline: None,
+    };
+
+    /// The error this guard injects before the task code runs, if any.
+    pub(crate) fn injected_failure(&self) -> Option<anyhow::Error> {
+        match self.fault {
+            Some(FaultKind::Error) => Some(anyhow!("injected fault: error (seeded FaultPlan)")),
+            Some(FaultKind::Panic) => Some(anyhow!("{PANIC_MARKER}injected fault (seeded FaultPlan)")),
+            _ => None,
+        }
+    }
+}
+
+/// One supervised attempt: the pinned input snapshot plus its
+/// per-task firing index, attempt number, and precomputed guard.
+#[derive(Clone, Debug)]
+pub struct Firing {
+    pub snapshot: Snapshot,
+    /// Per-task firing index, assigned in arrival order on the
+    /// coordinator thread — the stable coordinate fault plans key on.
+    pub index: u64,
+    /// 1-based attempt counter.
+    pub attempt: u32,
+    pub guard: FireGuard,
+}
+
+/// A forced fault at a chosen (task, firing-index) coordinate —
+/// the deterministic lever for targeted tests.
+#[derive(Clone, Copy, Debug)]
+pub struct Forced {
+    /// `TaskId::index()` of the target task.
+    pub task: u64,
+    /// Per-task firing index to hit.
+    pub firing: u64,
+    /// Fault fires on attempts `1..=upto_attempt` (so retries past it
+    /// succeed).
+    pub upto_attempt: u32,
+    pub kind: FaultKind,
+}
+
+/// Seeded fault-injection plan: deterministic per-(task, firing,
+/// attempt) fault draws plus explicitly forced coordinates.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub p_error: f64,
+    pub p_panic: f64,
+    pub p_cost_spike: f64,
+    /// Cost inflation applied by drawn `CostSpike` faults.
+    pub spike: SimDuration,
+    pub forced: Vec<Forced>,
+}
+
+impl FaultPlan {
+    /// A plan with modest default rates, fully determined by `seed`.
+    pub fn seeded(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            p_error: 0.02,
+            p_panic: 0.01,
+            p_cost_spike: 0.01,
+            spike: SimDuration::millis(5),
+            forced: Vec::new(),
+        }
+    }
+
+    pub fn with_rates(mut self, p_error: f64, p_panic: f64, p_cost_spike: f64) -> Self {
+        self.p_error = p_error;
+        self.p_panic = p_panic;
+        self.p_cost_spike = p_cost_spike;
+        self
+    }
+
+    /// Force `kind` at (task, firing) for attempts `1..=upto_attempt`.
+    pub fn force(mut self, task: u64, firing: u64, upto_attempt: u32, kind: FaultKind) -> Self {
+        self.forced.push(Forced {
+            task,
+            firing,
+            upto_attempt,
+            kind,
+        });
+        self
+    }
+
+    /// The fault (if any) this plan injects at the given coordinate.
+    ///
+    /// Order-independent: the draw is keyed on a per-coordinate seeded
+    /// hash, not on a shared RNG stream, so the verdict is identical
+    /// whichever order firings are evaluated in — the property that
+    /// keeps injected faults byte-identical across worker counts.
+    pub fn decide(&self, task: TaskId, firing: u64, attempt: u32) -> Option<FaultKind> {
+        for f in &self.forced {
+            if f.task == task.index() as u64 && f.firing == firing && attempt <= f.upto_attempt {
+                return Some(f.kind);
+            }
+        }
+        let key = self.seed
+            ^ (task.index() as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ firing.wrapping_mul(0xBF58_476D_1CE4_E5B9)
+            ^ (attempt as u64).wrapping_mul(0x94D0_49BB_1331_11EB);
+        let draw = Rng::seed_from_u64(key).f64();
+        if draw < self.p_panic {
+            Some(FaultKind::Panic)
+        } else if draw < self.p_panic + self.p_error {
+            Some(FaultKind::Error)
+        } else if draw < self.p_panic + self.p_error + self.p_cost_spike {
+            Some(FaultKind::CostSpike(self.spike))
+        } else {
+            None
+        }
+    }
+}
+
+/// Default fault plan from the `KOALJA_FAULT_SEED` env var (unset or
+/// unparsable → none). Mirrors `default_workers` / `default_trace`.
+pub fn default_fault_plan() -> Option<FaultPlan> {
+    let raw = std::env::var("KOALJA_FAULT_SEED").ok()?;
+    let seed: u64 = raw.trim().parse().ok()?;
+    Some(FaultPlan::seeded(seed))
+}
+
+/// A firing that exhausted its retry budget, with its inputs pinned so
+/// it can be redriven after a hot-swap fixes the code.
+#[derive(Clone, Debug)]
+pub struct DeadLetter {
+    /// Per-task firing index of the exhausted firing.
+    pub index: u64,
+    /// Virtual instant the firing was dead-lettered.
+    pub at: SimTime,
+    /// Attempts consumed before exhaustion (0 = dropped by quarantine
+    /// without executing).
+    pub attempts: u32,
+    /// Flattened error chain of the final attempt.
+    pub error: String,
+    /// True when the final failure was a caught panic.
+    pub panicked: bool,
+    /// True when the firing never executed because the task was
+    /// quarantined.
+    pub quarantine_drop: bool,
+    /// The pinned input snapshot (Arc'd AVs — cheap to clone).
+    pub snapshot: Snapshot,
+}
+
+impl DeadLetter {
+    /// Input wire names captured in the pinned snapshot.
+    pub fn input_names(&self) -> impl Iterator<Item = &str> {
+        self.snapshot.inputs.iter().map(|(n, _)| n.as_ref())
+    }
+
+    /// Ids of every annotated value pinned in the snapshot.
+    pub fn av_ids(&self) -> Vec<u64> {
+        self.snapshot.all_avs().map(|av| av.id.0).collect()
+    }
+}
+
+/// Cap on retained letters per task; older letters are evicted (and
+/// counted) once the book is full.
+pub const DEAD_LETTER_CAP: usize = 256;
+
+/// Capped per-task book of dead-lettered firings.
+#[derive(Clone, Debug, Default)]
+pub struct DeadLetterBook {
+    letters: VecDeque<DeadLetter>,
+    dropped: u64,
+}
+
+impl DeadLetterBook {
+    pub(crate) fn push(&mut self, letter: DeadLetter) {
+        if self.letters.len() >= DEAD_LETTER_CAP {
+            self.letters.pop_front();
+            self.dropped += 1;
+        }
+        self.letters.push_back(letter);
+    }
+
+    pub fn letters(&self) -> impl Iterator<Item = &DeadLetter> {
+        self.letters.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.letters.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.letters.is_empty()
+    }
+
+    /// Letters evicted by the cap since deployment.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub(crate) fn drain(&mut self) -> Vec<DeadLetter> {
+        self.letters.drain(..).collect()
+    }
+}
+
+/// Per-task circuit-breaker state.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Breaker {
+    pub consecutive_exhausts: u32,
+    pub quarantined: bool,
+    pub tripped_at: Option<SimTime>,
+}
+
+/// Coordinator-side supervision state: policies, dead-letter books,
+/// breakers, firing-index counters, pending retries, and the fault
+/// plan. Lives on the coordinator thread only; workers see per-firing
+/// `FireGuard`s computed here.
+#[derive(Debug, Default)]
+pub struct Supervision {
+    policies: Vec<Option<FirePolicy>>,
+    books: Vec<DeadLetterBook>,
+    breakers: Vec<Breaker>,
+    next_index: Vec<u64>,
+    retries: Vec<Vec<Firing>>,
+    pub plan: Option<FaultPlan>,
+    any_policy: bool,
+}
+
+impl Supervision {
+    pub fn sized(n_tasks: usize, plan: Option<FaultPlan>) -> Self {
+        Supervision {
+            policies: vec![None; n_tasks],
+            books: (0..n_tasks).map(|_| DeadLetterBook::default()).collect(),
+            breakers: vec![Breaker::default(); n_tasks],
+            next_index: vec![0; n_tasks],
+            retries: (0..n_tasks).map(|_| Vec::new()).collect(),
+            plan,
+            any_policy: false,
+        }
+    }
+
+    /// True when any supervision machinery is in play — the fast-path
+    /// gate: with no policies and no plan, the hot loop pays one
+    /// predicted branch.
+    pub fn active(&self) -> bool {
+        self.any_policy || self.plan.is_some()
+    }
+
+    pub fn policy(&self, task: TaskId) -> Option<&FirePolicy> {
+        self.policies[task.index()].as_ref()
+    }
+
+    pub fn set_policy(&mut self, task: TaskId, policy: FirePolicy) {
+        self.policies[task.index()] = Some(policy);
+        self.any_policy = true;
+    }
+
+    /// Mint the next firing index for `task` (arrival order).
+    pub(crate) fn assign_index(&mut self, task: TaskId) -> u64 {
+        let i = self.next_index[task.index()];
+        self.next_index[task.index()] += 1;
+        i
+    }
+
+    /// Compute the guard for one attempt: fault draw from the plan,
+    /// deadline from the policy.
+    pub(crate) fn guard(&self, task: TaskId, index: u64, attempt: u32) -> FireGuard {
+        FireGuard {
+            fault: self
+                .plan
+                .as_ref()
+                .and_then(|p| p.decide(task, index, attempt)),
+            deadline: self.policy(task).and_then(|p| p.deadline),
+        }
+    }
+
+    pub fn quarantined(&self, task: TaskId) -> bool {
+        self.breakers[task.index()].quarantined
+    }
+
+    pub(crate) fn push_retry(&mut self, task: TaskId, firing: Firing) {
+        self.retries[task.index()].push(firing);
+    }
+
+    pub(crate) fn take_retries(&mut self, task: TaskId) -> Vec<Firing> {
+        std::mem::take(&mut self.retries[task.index()])
+    }
+
+    pub fn book(&self, task: TaskId) -> &DeadLetterBook {
+        &self.books[task.index()]
+    }
+
+    pub(crate) fn book_mut(&mut self, task: TaskId) -> &mut DeadLetterBook {
+        &mut self.books[task.index()]
+    }
+
+    pub fn breaker(&self, task: TaskId) -> &Breaker {
+        &self.breakers[task.index()]
+    }
+
+    pub(crate) fn breaker_mut(&mut self, task: TaskId) -> &mut Breaker {
+        &mut self.breakers[task.index()]
+    }
+
+    /// A successful commit resets the consecutive-exhaust count.
+    pub(crate) fn note_success(&mut self, task: TaskId) {
+        self.breakers[task.index()].consecutive_exhausts = 0;
+    }
+
+    /// Clear the breaker (hot-swap / explicit reset). Returns whether
+    /// the task was quarantined.
+    pub(crate) fn clear_breaker(&mut self, task: TaskId) -> bool {
+        let b = &mut self.breakers[task.index()];
+        let was = b.quarantined;
+        *b = Breaker::default();
+        was
+    }
+}
+
+/// Structured report for a runaway event loop: `run_until_idle` hit its
+/// storm cap. Replaces the old process-aborting panic.
+#[derive(Clone, Debug)]
+pub struct EventStorm {
+    /// Events handled before the cap tripped.
+    pub handled: u64,
+    pub cap: u64,
+    /// Virtual instant at which the cap tripped.
+    pub at: SimTime,
+    /// Events still queued when the loop stopped.
+    pub pending: usize,
+    /// Busiest tasks by firing count (name, firings), hottest first.
+    pub hottest_tasks: Vec<(String, u64)>,
+    /// Busiest wires by traffic (name, publications + injections) when
+    /// obs is enabled; empty otherwise.
+    pub hottest_wires: Vec<(String, u64)>,
+}
+
+impl std::fmt::Display for EventStorm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "event storm: {} events handled (cap {}) at t+{}us with {} still queued",
+            self.handled,
+            self.cap,
+            self.at.as_micros(),
+            self.pending
+        )?;
+        if !self.hottest_tasks.is_empty() {
+            let tasks: Vec<String> = self
+                .hottest_tasks
+                .iter()
+                .map(|(n, c)| format!("{n}({c})"))
+                .collect();
+            write!(f, "; hottest tasks: {}", tasks.join(", "))?;
+        }
+        if !self.hottest_wires.is_empty() {
+            let wires: Vec<String> = self
+                .hottest_wires
+                .iter()
+                .map(|(n, c)| format!("{n}({c})"))
+                .collect();
+            write!(f, "; hottest wires: {}", wires.join(", "))?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for EventStorm {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(i: usize) -> TaskId {
+        TaskId::new(i as u64)
+    }
+
+    #[test]
+    fn decide_is_deterministic_and_order_independent() {
+        let plan = FaultPlan::seeded(7).with_rates(0.2, 0.1, 0.1);
+        let coords: Vec<(usize, u64, u32)> =
+            (0..8).flat_map(|t| (0..16).map(move |f| (t, f, 1u32))).collect();
+        let forward: Vec<_> = coords
+            .iter()
+            .map(|&(ti, f, a)| plan.decide(t(ti), f, a))
+            .collect();
+        let reverse: Vec<_> = coords
+            .iter()
+            .rev()
+            .map(|&(ti, f, a)| plan.decide(t(ti), f, a))
+            .collect();
+        let mut rev = reverse;
+        rev.reverse();
+        assert_eq!(forward, rev);
+        // Same seed, fresh plan: identical verdicts.
+        let again = FaultPlan::seeded(7).with_rates(0.2, 0.1, 0.1);
+        for &(ti, f, a) in &coords {
+            assert_eq!(plan.decide(t(ti), f, a), again.decide(t(ti), f, a));
+        }
+        // At these rates, some coordinate must draw a fault and some
+        // must not.
+        assert!(forward.iter().any(|v| v.is_some()));
+        assert!(forward.iter().any(|v| v.is_none()));
+    }
+
+    #[test]
+    fn forced_faults_take_precedence_and_respect_upto_attempt() {
+        let plan = FaultPlan::seeded(1)
+            .with_rates(0.0, 0.0, 0.0)
+            .force(3, 5, 2, FaultKind::Error);
+        assert_eq!(plan.decide(t(3), 5, 1), Some(FaultKind::Error));
+        assert_eq!(plan.decide(t(3), 5, 2), Some(FaultKind::Error));
+        assert_eq!(plan.decide(t(3), 5, 3), None);
+        assert_eq!(plan.decide(t(3), 6, 1), None);
+        assert_eq!(plan.decide(t(2), 5, 1), None);
+    }
+
+    #[test]
+    fn backoff_delays() {
+        let fixed = Backoff::Fixed(SimDuration::millis(10));
+        assert_eq!(fixed.delay(1), SimDuration::millis(10));
+        assert_eq!(fixed.delay(5), SimDuration::millis(10));
+        let exp = Backoff::Exponential {
+            base: SimDuration::millis(10),
+            cap: SimDuration::millis(45),
+        };
+        assert_eq!(exp.delay(1), SimDuration::millis(10));
+        assert_eq!(exp.delay(2), SimDuration::millis(20));
+        assert_eq!(exp.delay(3), SimDuration::millis(40));
+        assert_eq!(exp.delay(4), SimDuration::millis(45)); // capped
+        assert_eq!(exp.delay(40), SimDuration::millis(45)); // shift clamp
+    }
+
+    #[test]
+    fn dead_letter_book_caps_and_counts_evictions() {
+        let mut book = DeadLetterBook::default();
+        for i in 0..(DEAD_LETTER_CAP as u64 + 10) {
+            book.push(DeadLetter {
+                index: i,
+                at: SimTime::ZERO,
+                attempts: 1,
+                error: format!("e{i}"),
+                panicked: false,
+                quarantine_drop: false,
+                snapshot: Snapshot::new(Vec::new(), SimTime::ZERO),
+            });
+        }
+        assert_eq!(book.len(), DEAD_LETTER_CAP);
+        assert_eq!(book.dropped(), 10);
+        // Oldest evicted: the first retained letter is index 10.
+        assert_eq!(book.letters().next().unwrap().index, 10);
+    }
+
+    #[test]
+    fn breaker_trips_and_clears() {
+        let mut sup = Supervision::sized(2, None);
+        sup.set_policy(t(0), FirePolicy::retries(0).quarantine(2));
+        assert!(sup.active());
+        sup.breaker_mut(t(0)).consecutive_exhausts = 2;
+        sup.breaker_mut(t(0)).quarantined = true;
+        sup.breaker_mut(t(0)).tripped_at = Some(SimTime::ZERO);
+        assert!(sup.quarantined(t(0)));
+        assert!(!sup.quarantined(t(1)));
+        assert!(sup.clear_breaker(t(0)));
+        assert!(!sup.quarantined(t(0)));
+        assert_eq!(sup.breaker(t(0)).consecutive_exhausts, 0);
+        assert!(!sup.clear_breaker(t(0))); // already clear
+    }
+
+    #[test]
+    fn policy_builders() {
+        let p = FirePolicy::retries(2)
+            .with_backoff(Backoff::Fixed(SimDuration::millis(3)))
+            .with_deadline(SimDuration::millis(50))
+            .quarantine(0);
+        assert_eq!(p.max_attempts, 3);
+        assert_eq!(p.deadline, Some(SimDuration::millis(50)));
+        // quarantine(0) clamps to 1
+        assert_eq!(p.on_exhaust, OnExhaust::Quarantine { after: 1 });
+    }
+}

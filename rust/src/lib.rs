@@ -13,6 +13,8 @@
 //! * [`breadboard`] — the smart-workspace layer: live wire taps, hot code
 //!   swaps with invalidation previews, forensic replay (§III-H/J, §IV)
 //! * [`task`] / [`link`] — smart task & link agents
+//! * [`fault`] — the supervised firing lifecycle: deterministic retries,
+//!   quarantine breakers, dead-letter redrive, seeded fault injection
 //! * [`policy`] — snapshot policies (AllNew / SwapNewForOld / Merge / windows)
 //! * [`provenance`] — the three metadata stories (traveller / checkpoint / map)
 //! * [`obs`] — observability: the flight recorder + id-indexed metrics
@@ -30,6 +32,7 @@ pub mod breadboard;
 pub mod bus;
 pub mod cluster;
 pub mod coordinator;
+pub mod fault;
 pub mod graph;
 pub mod link;
 pub mod metrics;
@@ -54,6 +57,10 @@ pub mod prelude {
     pub use crate::bus::NotifyMode;
     pub use crate::coordinator::{
         default_trace, default_workers, Collected, Coordinator, DeployConfig, SinkCommit,
+    };
+    pub use crate::fault::{
+        default_fault_plan, Backoff, DeadLetter, EventStorm, FaultKind, FaultPlan, FirePolicy,
+        OnExhaust,
     };
     pub use crate::net::{demo_topology, WanLink, WanTopology};
     pub use crate::obs::{FiringKind, Obs, SpanEvent, TaskStats, WireStats};

@@ -306,6 +306,24 @@ fn cmd_trace(args: &[String]) -> Result<()> {
             SpanEvent::SinkCommit { wire, av } => format!("{} {av}", wname(wire)),
             SpanEvent::TapObserve { wire, av } => format!("{} {av}", wname(wire)),
             SpanEvent::Demand { wire } => wname(wire).to_string(),
+            SpanEvent::FiringRetry { task, run, attempt } => {
+                format!("{} attempt {attempt} failed, retry scheduled {run}", tname(task))
+            }
+            SpanEvent::FiringExhausted { task, run, attempts } if attempts == 0 => {
+                format!("{} dropped by open breaker {run}", tname(task))
+            }
+            SpanEvent::FiringExhausted { task, run, attempts } => {
+                format!("{} after {attempts} attempt(s) {run}", tname(task))
+            }
+            SpanEvent::Quarantine { task, open } => {
+                format!("{} [{}]", tname(task), if open { "open" } else { "reset" })
+            }
+            SpanEvent::Redrive { task, count } => {
+                format!("{} x{count} dead-lettered firing(s)", tname(task))
+            }
+            SpanEvent::FiringDegraded { task, run } => {
+                format!("{} fallback emitted {run}", tname(task))
+            }
         };
         format!("  {:>6}  t+{:>9}us  {:<18} {detail}", s.seq, s.at.as_micros(), s.event.name())
     };

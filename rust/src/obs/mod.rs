@@ -180,9 +180,39 @@ impl Obs {
         self.tasks[task.index()].memo_hits += 1;
     }
 
-    pub fn firing_failed(&mut self, at: SimTime, task: TaskId, run: RunId) {
-        self.rec.record(at, SpanEvent::Firing { task, run, kind: FiringKind::Panic });
+    pub fn firing_failed(&mut self, at: SimTime, task: TaskId, run: RunId, panicked: bool) {
+        let kind = if panicked { FiringKind::Panic } else { FiringKind::Error };
+        self.rec.record(at, SpanEvent::Firing { task, run, kind });
         self.tasks[task.index()].errors += 1;
+    }
+
+    /// Supervision: a failed firing scheduled a virtual-time retry
+    /// (`attempt` is the attempt that just failed). Span-only — the
+    /// failure itself already counted in [`TaskStats::errors`].
+    pub fn firing_retry(&mut self, at: SimTime, task: TaskId, run: RunId, attempt: u32) {
+        self.rec.record(at, SpanEvent::FiringRetry { task, run, attempt });
+    }
+
+    /// Supervision: a firing exhausted its retry budget (`attempts`
+    /// consumed; 0 = dropped unexecuted by an open circuit breaker).
+    pub fn firing_exhausted(&mut self, at: SimTime, task: TaskId, run: RunId, attempts: u32) {
+        self.rec.record(at, SpanEvent::FiringExhausted { task, run, attempts });
+    }
+
+    /// Supervision: the task's circuit breaker flipped (`open` =
+    /// quarantined, `!open` = reset by operator or hot-swap).
+    pub fn quarantine(&mut self, at: SimTime, task: TaskId, open: bool) {
+        self.rec.record(at, SpanEvent::Quarantine { task, open });
+    }
+
+    /// Supervision: `count` dead-lettered firings were redriven.
+    pub fn redrive(&mut self, at: SimTime, task: TaskId, count: u32) {
+        self.rec.record(at, SpanEvent::Redrive { task, count });
+    }
+
+    /// Supervision: an exhausted firing emitted its declared fallback.
+    pub fn firing_degraded(&mut self, at: SimTime, task: TaskId, run: RunId) {
+        self.rec.record(at, SpanEvent::FiringDegraded { task, run });
     }
 
     /// Scheduling note: `parallel_safe() == false` code skipped the pool.
@@ -368,6 +398,13 @@ fn span_json(s: &Span) -> Json {
             pairs.push(("av", Json::num(av.0 as f64)));
         }
         SpanEvent::Demand { .. } => {}
+        SpanEvent::FiringRetry { attempt, .. } => pairs.push(("attempt", Json::num(attempt))),
+        SpanEvent::FiringExhausted { attempts, .. } => {
+            pairs.push(("attempts", Json::num(attempts)));
+        }
+        SpanEvent::Quarantine { open, .. } => pairs.push(("open", Json::Bool(open))),
+        SpanEvent::Redrive { count, .. } => pairs.push(("count", Json::num(count))),
+        SpanEvent::FiringDegraded { .. } => {}
     }
     Json::obj(pairs)
 }

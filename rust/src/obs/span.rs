@@ -33,10 +33,11 @@ pub enum FiringKind {
     /// was rolled back for a sequential re-run (a `Run`/`Panic` span
     /// follows).
     RollbackRerun,
-    /// The firing errored. Caught panics and plain task errors share this
-    /// kind: the panic guard converts both to the same error shape before
-    /// bookkeeping sees them.
+    /// The firing died from a caught panic (the panic guard marks its
+    /// errors, so panics and plain errors record distinct kinds).
     Panic,
+    /// The firing returned a plain task error.
+    Error,
 }
 
 impl FiringKind {
@@ -54,6 +55,7 @@ impl FiringKind {
             FiringKind::DeferredSequential => "deferred-sequential",
             FiringKind::RollbackRerun => "rollback-rerun",
             FiringKind::Panic => "panic",
+            FiringKind::Error => "error",
         }
     }
 }
@@ -86,12 +88,30 @@ pub enum SpanEvent {
     TapObserve { wire: WireId, av: AvId },
     /// Make-mode: a target wire was demanded (§III-B pull trigger).
     Demand { wire: WireId },
+    /// A failed supervised firing scheduled a retry (virtual-time
+    /// backoff); `attempt` is the attempt that just failed.
+    FiringRetry { task: TaskId, run: RunId, attempt: u32 },
+    /// A supervised firing exhausted its retry budget (`attempts`
+    /// consumed; 0 = dropped by an open circuit breaker).
+    FiringExhausted { task: TaskId, run: RunId, attempts: u32 },
+    /// The task's circuit breaker flipped (`open` = quarantined).
+    Quarantine { task: TaskId, open: bool },
+    /// `count` dead-lettered firings were redriven through the task.
+    Redrive { task: TaskId, count: u32 },
+    /// An exhausted firing emitted its declared fallback (Degrade).
+    FiringDegraded { task: TaskId, run: RunId },
 }
 
 impl SpanEvent {
     pub fn task(&self) -> Option<TaskId> {
         match self {
-            SpanEvent::Firing { task, .. } | SpanEvent::Publish { task, .. } => Some(*task),
+            SpanEvent::Firing { task, .. }
+            | SpanEvent::Publish { task, .. }
+            | SpanEvent::FiringRetry { task, .. }
+            | SpanEvent::FiringExhausted { task, .. }
+            | SpanEvent::Quarantine { task, .. }
+            | SpanEvent::Redrive { task, .. }
+            | SpanEvent::FiringDegraded { task, .. } => Some(*task),
             _ => None,
         }
     }
@@ -109,7 +129,14 @@ impl SpanEvent {
 
     pub fn run(&self) -> Option<RunId> {
         match self {
-            SpanEvent::Firing { run, .. } if *run != NO_RUN => Some(*run),
+            SpanEvent::Firing { run, .. }
+            | SpanEvent::FiringRetry { run, .. }
+            | SpanEvent::FiringExhausted { run, .. }
+            | SpanEvent::FiringDegraded { run, .. }
+                if *run != NO_RUN =>
+            {
+                Some(*run)
+            }
             _ => None,
         }
     }
@@ -126,6 +153,11 @@ impl SpanEvent {
             SpanEvent::SinkCommit { .. } => "sink-commit",
             SpanEvent::TapObserve { .. } => "tap-observe",
             SpanEvent::Demand { .. } => "demand",
+            SpanEvent::FiringRetry { .. } => "firing-retry",
+            SpanEvent::FiringExhausted { .. } => "firing-exhausted",
+            SpanEvent::Quarantine { .. } => "quarantine",
+            SpanEvent::Redrive { .. } => "redrive",
+            SpanEvent::FiringDegraded { .. } => "firing-degraded",
         }
     }
 }

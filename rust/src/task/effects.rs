@@ -20,15 +20,14 @@
 //! [`EffectLog::apply`] time.
 
 use crate::av::Payload;
+use crate::fault::Firing;
 use crate::obs::NetTier;
 use crate::net::WanTopology;
 use crate::platform::Platform;
 use crate::provenance::{CheckpointEvent, Stamp};
 use crate::storage::ObjectStore;
 use crate::task::Emission;
-use crate::policy::Snapshot;
 use crate::util::{AvId, ContentHash, ObjectId, RegionId, RunId, SimDuration, SimTime, TaskId};
-use anyhow::Result;
 
 /// The read-only world a wavefront worker executes against: committed
 /// storage, the WAN topology, and the frozen virtual instant. Everything
@@ -159,10 +158,18 @@ pub(crate) enum PreparedFiring {
     /// memoization must land first), code declared `parallel_safe() ==
     /// false`, and sentinel fallbacks all take this path — it is exactly
     /// the `workers = 1` path, so deferral is always behavior-preserving.
-    Deferred(Snapshot, DeferReason),
+    Deferred(Firing, DeferReason),
     /// Executed on a worker: commit replays the effect tape, then
     /// publishes the emissions.
     Recorded(RecordedRun),
+}
+
+/// A failed recorded attempt: the error plus the whole supervised firing
+/// (snapshot pinned) so the commit-side supervision can retry,
+/// dead-letter, quarantine, or degrade it.
+pub(crate) struct FireFail {
+    pub error: anyhow::Error,
+    pub firing: Firing,
 }
 
 /// A worker-executed firing, ready to commit.
@@ -175,8 +182,9 @@ pub(crate) struct RecordedRun {
     pub fx: EffectLog,
     /// `Err` is a task error (including caught panics): commit replays
     /// the partial tape — the direct path records those effects before
-    /// erroring too — then runs the standard error bookkeeping.
-    pub body: Result<RecordedBody>,
+    /// erroring too — then hands the failed firing to the supervision
+    /// machinery (retry / dead-letter / quarantine / degrade).
+    pub body: std::result::Result<RecordedBody, FireFail>,
 }
 
 /// The successful half of a recorded run.

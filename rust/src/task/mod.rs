@@ -27,10 +27,11 @@ pub use ports::{Emission, Emitter, InPort, Inputs, NameCache, OutPort, PortIo, P
 
 use effects::{
     ghost_payload, is_needs_sequential, needs_sequential, DeferReason, Effect, EffectLog,
-    PreparedFiring, RecordedBody, RecordedRun, WorldView,
+    FireFail, PreparedFiring, RecordedBody, RecordedRun, WorldView,
 };
 
 use crate::av::{AnnotatedValue, DataClass, Payload};
+use crate::fault::{deadline_error, FaultKind, FireGuard, Firing};
 use crate::bus::NotifyMode;
 use crate::graph::WireTable;
 use crate::obs::NetTier;
@@ -645,7 +646,20 @@ impl TaskAgent {
         wires: &WireTable,
         snapshot: Snapshot,
     ) -> Result<RunOutcome> {
-        self.execute_inner(plat, wires, snapshot, true)
+        self.execute_inner(plat, wires, snapshot, true, FireGuard::NONE)
+    }
+
+    /// [`execute`](Self::execute) under a supervision guard: the guard may
+    /// inject a seeded fault before the code runs and enforces the
+    /// policy's deadline budget against the firing's compute cost.
+    pub(crate) fn execute_guarded(
+        &mut self,
+        plat: &mut Platform,
+        wires: &WireTable,
+        snapshot: Snapshot,
+        guard: FireGuard,
+    ) -> Result<RunOutcome> {
+        self.execute_inner(plat, wires, snapshot, true, guard)
     }
 
     /// Execute ignoring the memo — what a schedule-driven, data-unaware
@@ -656,7 +670,7 @@ impl TaskAgent {
         wires: &WireTable,
         snapshot: Snapshot,
     ) -> Result<RunOutcome> {
-        self.execute_inner(plat, wires, snapshot, false)
+        self.execute_inner(plat, wires, snapshot, false, FireGuard::NONE)
     }
 
     fn execute_inner(
@@ -665,6 +679,7 @@ impl TaskAgent {
         wires: &WireTable,
         snapshot: Snapshot,
         use_memo: bool,
+        guard: FireGuard,
     ) -> Result<RunOutcome> {
         let recipe = self.recipe(&snapshot);
         if use_memo && !snapshot.ghost {
@@ -714,6 +729,15 @@ impl TaskAgent {
             }
             SimDuration::micros(10)
         } else {
+            // seeded fault injection happens where a real task failure
+            // would: after the inputs are consumed and the Start /
+            // ReadInput checkpoints land, before user code runs —
+            // identical on the recorded (worker) path
+            if let Some(e) = guard.injected_failure() {
+                buf.clear();
+                self.emit_buf = buf;
+                return Err(e);
+            }
             let mut ctx = TaskCtx {
                 // explicit reborrow: `plat` is needed again after the run
                 // for the End checkpoint and run accounting below
@@ -749,6 +773,17 @@ impl TaskAgent {
             }
             let mut cost = ctx.cost;
             cost += self.code.compute_cost(consumed_bytes);
+            if let Some(FaultKind::CostSpike(d)) = guard.fault {
+                cost += d;
+            }
+            if let Some(budget) = guard.deadline {
+                if cost > budget {
+                    drop(io);
+                    buf.clear();
+                    self.emit_buf = buf;
+                    return Err(deadline_error(cost, budget));
+                }
+            }
             cost
         };
 
@@ -791,9 +826,11 @@ impl TaskAgent {
         &mut self,
         world: &WorldView<'_>,
         wires: &WireTable,
-        snapshot: Snapshot,
+        firing: Firing,
         recipe: ContentHash,
     ) -> PreparedFiring {
+        let guard = firing.guard;
+        let snapshot = &firing.snapshot;
         let mut fx = EffectLog::default();
         let ghost = snapshot.ghost;
         let version = self.code.version();
@@ -824,6 +861,22 @@ impl TaskAgent {
             }
             SimDuration::micros(10)
         } else {
+            // seeded fault injection: same point as the direct path —
+            // after the Consumed / Start / ReadInput effects are taped,
+            // before user code runs
+            if let Some(e) = guard.injected_failure() {
+                buf.clear();
+                self.emit_buf = buf;
+                return PreparedFiring::Recorded(RecordedRun {
+                    recipe,
+                    parents,
+                    born,
+                    version,
+                    region,
+                    fx,
+                    body: Err(FireFail { error: e, firing }),
+                });
+            }
             // snapshot the agent caches: a needs-sequential fallback must
             // leave the agent exactly as the deferred re-run expects it
             let cache_save = self.cache.clone();
@@ -842,7 +895,7 @@ impl TaskAgent {
                     cost: SimDuration::ZERO,
                 };
                 let mut io = PortIo {
-                    inputs: Inputs { snapshot: &snapshot, map: &self.ports },
+                    inputs: Inputs { snapshot, map: &self.ports },
                     emitter: Emitter {
                         buf: &mut buf,
                         map: &self.ports,
@@ -861,10 +914,34 @@ impl TaskAgent {
                 self.emit_buf = buf;
                 self.cache = cache_save;
                 self.name_cache = names_save;
-                return PreparedFiring::Deferred(snapshot, DeferReason::Direct);
+                return PreparedFiring::Deferred(firing, DeferReason::Direct);
             }
             match run_result {
-                Ok(run_cost) => run_cost + self.code.compute_cost(consumed_bytes),
+                Ok(run_cost) => {
+                    let mut cost = run_cost + self.code.compute_cost(consumed_bytes);
+                    if let Some(FaultKind::CostSpike(d)) = guard.fault {
+                        cost += d;
+                    }
+                    if let Some(budget) = guard.deadline {
+                        if cost > budget {
+                            buf.clear();
+                            self.emit_buf = buf;
+                            return PreparedFiring::Recorded(RecordedRun {
+                                recipe,
+                                parents,
+                                born,
+                                version,
+                                region,
+                                fx,
+                                body: Err(FireFail {
+                                    error: deadline_error(cost, budget),
+                                    firing,
+                                }),
+                            });
+                        }
+                    }
+                    cost
+                }
                 // Defensive only: every in-ctx producer of the
                 // needs-sequential error poisons the log first, so the
                 // needs_direct() check above already deferred. This arm
@@ -877,7 +954,7 @@ impl TaskAgent {
                     self.emit_buf = buf;
                     self.cache = cache_save;
                     self.name_cache = names_save;
-                    return PreparedFiring::Deferred(snapshot, DeferReason::Direct);
+                    return PreparedFiring::Deferred(firing, DeferReason::Direct);
                 }
                 Err(e) => {
                     buf.clear();
@@ -889,7 +966,7 @@ impl TaskAgent {
                         version,
                         region,
                         fx,
-                        body: Err(e),
+                        body: Err(FireFail { error: e, firing }),
                     });
                 }
             }
@@ -898,7 +975,7 @@ impl TaskAgent {
         fx.push(Effect::Checkpoint(CheckpointEvent::End { outputs: buf.len() as u32 }));
         fx.push(Effect::RanTask { ghost });
         self.runs += 1;
-        self.last_snapshot = Some(snapshot);
+        self.last_snapshot = Some(firing.snapshot);
         // absorb the publish-side payload hashing here, off the
         // sequential commit path (§Perf)
         let hashes: Vec<ContentHash> = buf.iter().map(|e| e.payload.content_hash()).collect();

@@ -1,0 +1,369 @@
+//! Supervised firing lifecycle: deterministic retries, dead-letter
+//! books, quarantine breakers, redrive after hot-swap, degrade
+//! fallbacks, deadline budgets, and the structured event-storm report.
+//!
+//! Every scenario drives faults through a seeded [`FaultPlan`] with
+//! forced (task, firing-index) coordinates and zeroed random rates, so
+//! the failures land exactly where the assertions expect — at any
+//! `KOALJA_WORKERS` setting, which these tests deliberately inherit
+//! from the environment (the supervision machinery is part of the
+//! byte-identical-provenance contract, so the CI chaos matrix runs
+//! this file at several pool widths and seeds).
+
+use koalja::breadboard::Breadboard;
+use koalja::prelude::*;
+use koalja::provenance::CheckpointEvent;
+use koalja::util::TaskId;
+
+/// Pass-through task code: fetch every snapshot AV, emit it on port 0.
+fn passthrough() -> Box<dyn TaskCode> {
+    Box::new(PortFn::new(|ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
+        let port = io.out(0)?;
+        for av in io.inputs.all() {
+            let p = ctx.fetch(av)?;
+            io.emitter.emit(port, p);
+        }
+        Ok(())
+    }))
+}
+
+/// One-task pipeline `(x) work (y)` with the given plan, code plugged.
+fn rig(plan: FaultPlan) -> Coordinator {
+    let spec = parse("[sup]\n(x) work (y)\n").unwrap();
+    let cfg = DeployConfig { fault: Some(plan), ..Default::default() };
+    let mut c = Coordinator::deploy(&spec, cfg).unwrap();
+    c.set_code("work", passthrough()).unwrap();
+    c
+}
+
+fn inject_n(c: &mut Coordinator, wire: &str, n: u64) {
+    for i in 0..n {
+        c.inject_at(
+            wire,
+            Payload::scalar(i as f32),
+            DataClass::Summary,
+            RegionId::new(0),
+            SimTime::millis(i),
+        )
+        .unwrap();
+    }
+}
+
+fn remark_present(c: &Coordinator, task: TaskId, needle: &str) -> bool {
+    c.plat.prov.checkpoint_log(task).iter().any(|e| match &e.event {
+        CheckpointEvent::Remark(m) | CheckpointEvent::Anomaly(m) => m.contains(needle),
+        _ => false,
+    })
+}
+
+// ---------------------------------------------------------------------
+// retries
+// ---------------------------------------------------------------------
+
+#[test]
+fn retry_in_virtual_time_then_succeed() {
+    // firing 0 fails on attempt 1 only; the policy allows 2 retries, so
+    // attempt 2 (at T + 10ms) succeeds and the value still reaches the
+    // sink — late, but intact
+    let plan = FaultPlan::seeded(1).with_rates(0.0, 0.0, 0.0).force(0, 0, 1, FaultKind::Error);
+    let mut c = rig(plan);
+    let id = c.task_id("work").unwrap();
+    c.set_fire_policy_id(
+        id,
+        FirePolicy::retries(2).with_backoff(Backoff::Fixed(SimDuration::millis(10))),
+    );
+    inject_n(&mut c, "x", 1);
+    c.run_until_idle();
+
+    assert_eq!(c.collected_count("y"), 1, "retried firing still delivered");
+    let rec = &c.collected.get("y").unwrap()[0];
+    assert!(
+        rec.at >= SimTime::millis(10),
+        "retry ran in virtual time (published at {:?}, backoff 10ms)",
+        rec.at
+    );
+    assert_eq!(c.plat.metrics.get("task_errors"), 1);
+    assert_eq!(c.plat.metrics.get("task_retries"), 1);
+    assert_eq!(c.plat.metrics.get("task_exhausted"), 0);
+    assert!(c.dead_letter_book(id).is_empty());
+    assert!(remark_present(&c, id, "retry: firing 0 attempt 1/3"));
+}
+
+#[test]
+fn exhausted_firing_lands_in_the_dead_letter_book() {
+    // firing 0 fails on every attempt; retries(1) = 2 attempts total,
+    // then the default on-exhaust action dead-letters it with the input
+    // snapshot pinned
+    let plan = FaultPlan::seeded(2).with_rates(0.0, 0.0, 0.0).force(0, 0, 9, FaultKind::Error);
+    let mut c = rig(plan);
+    let id = c.task_id("work").unwrap();
+    c.set_fire_policy_id(id, FirePolicy::retries(1).dead_letter());
+    inject_n(&mut c, "x", 2);
+    c.run_until_idle();
+
+    assert_eq!(c.collected_count("y"), 1, "only the healthy firing delivered");
+    assert_eq!(c.plat.metrics.get("task_errors"), 2, "two failed attempts");
+    assert_eq!(c.plat.metrics.get("task_retries"), 1);
+    assert_eq!(c.plat.metrics.get("task_exhausted"), 1);
+    assert_eq!(c.plat.metrics.get("dead_letters"), 1);
+
+    let book = c.dead_letter_book(id);
+    assert_eq!(book.len(), 1);
+    let letter = book.letters().next().unwrap();
+    assert_eq!(letter.index, 0);
+    assert_eq!(letter.attempts, 2);
+    assert!(!letter.panicked);
+    assert!(!letter.quarantine_drop);
+    assert!(letter.error.contains("injected fault"), "{}", letter.error);
+    assert!(letter.input_names().any(|n| n == "x"), "snapshot pinned the input wire");
+    assert!(!letter.av_ids().is_empty(), "snapshot pinned the input AVs");
+    assert!(remark_present(&c, id, "exhausted after 2 attempt(s)"));
+}
+
+// ---------------------------------------------------------------------
+// quarantine breaker
+// ---------------------------------------------------------------------
+
+#[test]
+fn breaker_trips_diverts_and_resets_via_breadboard() {
+    // firings 0 and 1 exhaust consecutively -> breaker trips at 2; the
+    // third wake is diverted straight to the book without executing
+    let plan = FaultPlan::seeded(3)
+        .with_rates(0.0, 0.0, 0.0)
+        .force(0, 0, 9, FaultKind::Error)
+        .force(0, 1, 9, FaultKind::Error);
+    let spec = parse("[sup]\n(x) work (y)\n").unwrap();
+    let cfg = DeployConfig { fault: Some(plan), ..Default::default() };
+    let mut b = Breadboard::deploy(&spec, cfg).unwrap();
+    b.plug("work", passthrough).unwrap();
+    let h = b.task("work").unwrap();
+    h.set_fire_policy(&mut b, FirePolicy::retries(0).quarantine(2));
+    for i in 0..3u64 {
+        b.inject_at(
+            "x",
+            Payload::scalar(i as f32),
+            DataClass::Summary,
+            RegionId::new(0),
+            SimTime::millis(i),
+        )
+        .unwrap();
+    }
+    b.run_until_idle();
+
+    assert!(h.quarantined(&b), "breaker open after 2 consecutive exhausts");
+    assert_eq!(b.plat.metrics.get("quarantine_trips"), 1);
+    assert_eq!(b.plat.metrics.get("quarantine_dropped"), 1, "third wake diverted");
+    let letters = h.dead_letters(&b);
+    assert_eq!(letters.len(), 3);
+    assert!(letters[2].quarantine_drop, "diverted letter marked as a breaker drop");
+    assert_eq!(letters[2].attempts, 0, "diverted firing never executed");
+
+    // breadboard inspect + reset verbs
+    let view = b.quarantine_view("work").unwrap();
+    assert!(view.quarantined);
+    assert_eq!(view.consecutive_exhausts, 2);
+    assert!(view.tripped_at.is_some());
+    assert_eq!(view.dead_letters, 3);
+    assert_eq!(view.dead_letters_dropped, 0);
+
+    assert!(b.reset_quarantine("work").unwrap(), "reset reports the breaker was open");
+    assert!(!h.quarantined(&b));
+    assert_eq!(b.plat.metrics.get("quarantine_resets"), 1);
+    assert!(!b.reset_quarantine("work").unwrap(), "idempotent: already clear");
+
+    // healthy again: a fresh injection flows end to end
+    b.inject_at("x", Payload::scalar(9.0), DataClass::Summary, RegionId::new(0), SimTime::millis(10))
+        .unwrap();
+    b.run_until_idle();
+    assert_eq!(b.collected_count("y"), 1, "post-reset firing delivered");
+}
+
+#[test]
+fn redrive_replays_dead_letters_after_hot_swap() {
+    // the acceptance scenario: quarantine a task, hot-swap (which
+    // clears the breaker), redrive -- the pinned snapshots replay
+    // through the new code and reach the sink
+    let plan = FaultPlan::seeded(4)
+        .with_rates(0.0, 0.0, 0.0)
+        .force(0, 0, 9, FaultKind::Error)
+        .force(0, 1, 9, FaultKind::Error);
+    let spec = parse("[sup]\n(x) work (y)\n").unwrap();
+    let cfg = DeployConfig { fault: Some(plan), ..Default::default() };
+    let mut p = Pipeline::deploy(&spec, cfg).unwrap();
+    let h = p.task("work").unwrap();
+    h.plug(&mut p, passthrough()).unwrap();
+    h.set_fire_policy(&mut p, FirePolicy::retries(0).quarantine(1));
+    for i in 0..2u64 {
+        p.inject_at(
+            "x",
+            Payload::scalar(i as f32),
+            DataClass::Summary,
+            RegionId::new(0),
+            SimTime::millis(i),
+        )
+        .unwrap();
+    }
+    p.run_until_idle();
+    assert!(h.quarantined(&p));
+    assert_eq!(h.dead_letters(&p).len(), 2, "one exhausted + one diverted");
+    assert_eq!(p.collected_count("y"), 0);
+
+    // redrive refuses while the breaker is open
+    let e = h.redrive(&mut p).unwrap_err().to_string();
+    assert!(e.contains("quarantined"), "{e}");
+
+    // hot-swap is the "code is fixed" signal: breaker clears implicitly
+    h.hot_swap(&mut p, passthrough(), false).unwrap();
+    assert!(!h.quarantined(&p), "software update cleared the breaker");
+    assert!(remark_present(&p, h.task_id(), "quarantine cleared by software update"));
+
+    // redriven firings get fresh indices (2, 3) the forced coordinates
+    // miss, so they succeed through the swapped code
+    let n = h.redrive(&mut p).unwrap();
+    assert_eq!(n, 2);
+    p.run_until_idle();
+    assert_eq!(p.collected_count("y"), 2, "both pinned snapshots replayed to the sink");
+    assert!(h.dead_letters(&p).is_empty(), "book drained by the redrive");
+    assert_eq!(p.plat.metrics.get("redrives"), 1);
+    assert!(remark_present(&p, h.task_id(), "redrive: replaying 2 dead-lettered firing(s)"));
+    assert_eq!(h.redrive(&mut p).unwrap(), 0, "nothing left to redrive");
+}
+
+// ---------------------------------------------------------------------
+// degrade + deadline
+// ---------------------------------------------------------------------
+
+#[test]
+fn degrade_emits_declared_fallback() {
+    // firing 0 exhausts; the policy's fallback keeps downstream flowing
+    let plan = FaultPlan::seeded(5).with_rates(0.0, 0.0, 0.0).force(0, 0, 9, FaultKind::Error);
+    let mut c = rig(plan);
+    let id = c.task_id("work").unwrap();
+    c.set_fire_policy_id(id, FirePolicy::retries(0).degrade(Payload::scalar(-1.0)));
+    inject_n(&mut c, "x", 2);
+    c.run_until_idle();
+
+    assert_eq!(c.collected_count("y"), 2, "fallback + healthy value both arrive");
+    let recs = c.collected.get("y").unwrap();
+    assert_eq!(recs[0].payload, Payload::scalar(-1.0), "firing 0 degraded to the fallback");
+    assert_eq!(recs[1].payload, Payload::scalar(1.0), "firing 1 ran normally");
+    assert_eq!(c.plat.metrics.get("task_degraded"), 1);
+    assert!(c.dead_letter_book(id).is_empty(), "degrade does not dead-letter");
+    assert!(remark_present(&c, id, "degraded: fallback emitted"));
+}
+
+#[test]
+fn deadline_budget_fails_slow_firings() {
+    // a forced cost spike inflates firing 0 far past the policy's
+    // budget; the deadline check fails the attempt and the firing
+    // dead-letters with a structured error
+    let plan = FaultPlan::seeded(6)
+        .with_rates(0.0, 0.0, 0.0)
+        .force(0, 0, 9, FaultKind::CostSpike(SimDuration::secs(2)));
+    let mut c = rig(plan);
+    let id = c.task_id("work").unwrap();
+    c.set_fire_policy_id(
+        id,
+        FirePolicy::retries(0).with_deadline(SimDuration::secs(1)).dead_letter(),
+    );
+    inject_n(&mut c, "x", 2);
+    c.run_until_idle();
+
+    assert_eq!(c.collected_count("y"), 1, "unspiked firing fits the budget");
+    let book = c.dead_letter_book(id);
+    assert_eq!(book.len(), 1);
+    let letter = book.letters().next().unwrap();
+    assert!(letter.error.contains("deadline exceeded"), "{}", letter.error);
+    assert!(!letter.panicked);
+}
+
+// ---------------------------------------------------------------------
+// panic / error distinction
+// ---------------------------------------------------------------------
+
+#[test]
+fn injected_panic_and_error_stay_distinguishable() {
+    // two unsupervised tasks (record-and-drop path): one draws a plain
+    // error, the other a synthesized panic — the distinction survives
+    // into remarks, metrics, and the flight recorder's firing kinds
+    let plan = FaultPlan::seeded(7)
+        .with_rates(0.0, 0.0, 0.0)
+        .force(0, 0, 9, FaultKind::Error)
+        .force(1, 0, 9, FaultKind::Panic);
+    let spec = parse("[sup]\n(x) perr (a)\n(x) ppan (b)\n").unwrap();
+    let cfg = DeployConfig { trace: true, fault: Some(plan), ..Default::default() };
+    let mut c = Coordinator::deploy(&spec, cfg).unwrap();
+    c.set_code("perr", passthrough()).unwrap();
+    c.set_code("ppan", passthrough()).unwrap();
+    inject_n(&mut c, "x", 1);
+    c.run_until_idle();
+
+    assert_eq!(c.collected_count("a"), 0);
+    assert_eq!(c.collected_count("b"), 0);
+    assert_eq!(c.plat.metrics.get("task_errors"), 2);
+    let perr = c.task_id("perr").unwrap();
+    let ppan = c.task_id("ppan").unwrap();
+    assert!(remark_present(&c, perr, "task error: injected fault"));
+    assert!(remark_present(&c, ppan, "task panic: task panicked: injected fault"));
+
+    let kinds: Vec<(TaskId, FiringKind)> = c
+        .obs()
+        .rec
+        .spans()
+        .iter()
+        .filter_map(|s| match s.event {
+            SpanEvent::Firing { task, kind, .. }
+                if matches!(kind, FiringKind::Error | FiringKind::Panic) =>
+            {
+                Some((task, kind))
+            }
+            _ => None,
+        })
+        .collect();
+    assert!(kinds.contains(&(perr, FiringKind::Error)), "{kinds:?}");
+    assert!(kinds.contains(&(ppan, FiringKind::Panic)), "{kinds:?}");
+}
+
+// ---------------------------------------------------------------------
+// event storm report
+// ---------------------------------------------------------------------
+
+#[test]
+fn event_storm_is_a_structured_report_not_a_panic() {
+    // a tiny cap makes a modest batch look like a runaway pipeline:
+    // try_run_until_idle surfaces the structured report, run_until_idle
+    // stashes it — neither aborts the process
+    let spec = parse("[storm]\n(x) work (y)\n").unwrap();
+    let cfg = DeployConfig { trace: true, fault: None, ..Default::default() };
+    let mut c = Coordinator::deploy(&spec, cfg).unwrap();
+    c.set_code("work", passthrough()).unwrap();
+    c.set_storm_cap(10);
+    inject_n(&mut c, "x", 30);
+
+    let storm = c.try_run_until_idle().unwrap_err();
+    assert_eq!(storm.cap, 10);
+    assert!(storm.handled > 10, "cap trips after the instant that crossed it");
+    assert!(storm.pending > 0, "the stalled queue is reported");
+    assert_eq!(c.plat.metrics.get("event_storms"), 1);
+    assert!(!storm.hottest_tasks.is_empty(), "report names the busiest tasks");
+    assert_eq!(storm.hottest_tasks[0].0, "work");
+    assert!(storm.hottest_tasks[0].1 > 0);
+    assert!(
+        storm.hottest_wires.iter().any(|(n, c)| n == "x" && *c > 0),
+        "with obs on, the report names hot wires: {:?}",
+        storm.hottest_wires
+    );
+    let msg = storm.to_string();
+    assert!(msg.contains("event storm"), "{msg}");
+    assert!(msg.contains("hottest tasks"), "{msg}");
+
+    // the infallible wrapper degrades instead of panicking
+    let handled = c.run_until_idle();
+    assert!(handled > 0);
+    assert!(c.last_storm().is_some(), "report stashed for later inspection");
+
+    // raising the cap lets the same queue drain normally
+    c.set_storm_cap(10_000_000);
+    assert!(c.try_run_until_idle().is_ok());
+    assert!(c.last_storm().is_none(), "a clean run clears the stash");
+}

@@ -407,6 +407,186 @@ fn swallowed_direct_only_error_still_defers() {
     assert_eq!(seq, par, "swallowed refusals must not leak divergent results");
 }
 
+// ---------------------------------------------------------------------
+// fault matrix: the supervision machinery is part of the contract
+// ---------------------------------------------------------------------
+
+/// One arm with a seeded fault plan and a mixed per-task policy
+/// assignment (dead-letter / quarantine / degrade by task index).
+/// Returns (canonical dump including every supervision book, span
+/// projection) — the fault-matrix analogue of [`run_arm_traced`].
+fn run_fault_arm(case: &Case, workers: usize, trace: bool, fault_seed: u64) -> (String, String) {
+    use std::fmt::Write as _;
+    let spec = parse(&case.text).expect("generated wirings parse");
+    let plan = FaultPlan::seeded(fault_seed).with_rates(0.15, 0.10, 0.05);
+    let cfg = DeployConfig { workers, trace, fault: Some(plan), ..Default::default() };
+    let mut c = Coordinator::deploy(&spec, cfg).unwrap();
+    for t in 0..c.graph.n_tasks() {
+        let id = TaskId::new(t as u64);
+        let name = c.graph.task(id).name.clone();
+        c.set_code(&name, case_code()).unwrap();
+        let policy = match t % 3 {
+            0 => FirePolicy::retries(2)
+                .with_backoff(Backoff::Fixed(SimDuration::millis(2)))
+                .dead_letter(),
+            1 => FirePolicy::retries(1)
+                .with_backoff(Backoff::Exponential {
+                    base: SimDuration::millis(1),
+                    cap: SimDuration::millis(8),
+                })
+                .quarantine(2),
+            _ => FirePolicy::retries(1)
+                .with_deadline(SimDuration::millis(3))
+                .degrade(Payload::scalar(-9.0)),
+        };
+        c.set_fire_policy_id(id, policy);
+    }
+    for (wire, at_ms, data) in &case.plan {
+        c.inject_at(
+            wire,
+            Payload::tensor(&[4], data.clone()),
+            DataClass::Summary,
+            RegionId::new(0),
+            SimTime::millis(*at_ms),
+        )
+        .unwrap();
+    }
+    c.run_until_idle();
+
+    let mut s = String::new();
+    writeln!(s, "== sink book ==").unwrap();
+    for (w, recs) in c.collected.iter() {
+        for rec in recs {
+            writeln!(s, "{w} @{:?} av={:?} payload={:?}", rec.at, rec.av, rec.payload).unwrap();
+        }
+    }
+    writeln!(s, "== commit log ==").unwrap();
+    for sc in c.commit_log() {
+        writeln!(s, "{sc:?}").unwrap();
+    }
+    writeln!(s, "== passports ==").unwrap();
+    let mut av_ids: Vec<_> = c.plat.prov.passports_iter().map(|(id, _)| *id).collect();
+    av_ids.sort();
+    for id in av_ids {
+        let p = c.plat.prov.passport(id).unwrap();
+        writeln!(s, "{id}: parents={:?} stamps={:?}", p.parents, p.stamps).unwrap();
+    }
+    writeln!(s, "== checkpoint logs ==").unwrap();
+    for t in 0..c.graph.n_tasks() {
+        let id = TaskId::new(t as u64);
+        writeln!(s, "task{t}: {:?}", c.plat.prov.checkpoint_log(id)).unwrap();
+    }
+    writeln!(s, "== dead letters ==").unwrap();
+    for t in 0..c.graph.n_tasks() {
+        let id = TaskId::new(t as u64);
+        let book = c.dead_letter_book(id);
+        writeln!(s, "task{t}: dropped={}", book.dropped()).unwrap();
+        for l in book.letters() {
+            writeln!(
+                s,
+                "  #{} @{:?} attempts={} panicked={} qdrop={} avs={:?} err={}",
+                l.index,
+                l.at,
+                l.attempts,
+                l.panicked,
+                l.quarantine_drop,
+                l.av_ids(),
+                l.error
+            )
+            .unwrap();
+        }
+    }
+    writeln!(s, "== breakers ==").unwrap();
+    for t in 0..c.graph.n_tasks() {
+        let b = c.supervision.breaker(TaskId::new(t as u64));
+        writeln!(
+            s,
+            "task{t}: quarantined={} consec={} tripped_at={:?}",
+            b.quarantined, b.consecutive_exhausts, b.tripped_at
+        )
+        .unwrap();
+    }
+    writeln!(s, "== counters ==").unwrap();
+    writeln!(
+        s,
+        "task_runs={} errors={} retries={} exhausted={} dead_letters={} trips={} dropped={} \
+         degraded={} events={}",
+        c.plat.metrics.task_runs,
+        c.plat.metrics.get("task_errors"),
+        c.plat.metrics.get("task_retries"),
+        c.plat.metrics.get("task_exhausted"),
+        c.plat.metrics.get("dead_letters"),
+        c.plat.metrics.get("quarantine_trips"),
+        c.plat.metrics.get("quarantine_dropped"),
+        c.plat.metrics.get("task_degraded"),
+        c.events_processed,
+    )
+    .unwrap();
+
+    let mut spans = String::new();
+    for span in c.obs().rec.spans() {
+        if let SpanEvent::Firing { kind, .. } = span.event {
+            if kind.is_scheduling_note() {
+                continue;
+            }
+        }
+        writeln!(spans, "{:?} {:?}", span.at, span.event).unwrap();
+    }
+    (s, spans)
+}
+
+#[test]
+fn fault_matrix_is_byte_identical_across_workers_and_trace() {
+    // with a seeded fault plan injecting errors, panics and cost spikes
+    // at ~30% of attempts, and a mixed dead-letter / quarantine /
+    // degrade policy assignment, every supervision artifact — sink
+    // books, provenance, dead-letter books, breaker states, fault
+    // counters, and the retained span stream — must be byte-identical
+    // for every {workers} × {trace} combination
+    let w = par_workers().max(2);
+    let mut r = rng(0xFA_017);
+    let mut any_fault_engaged = false;
+    for case_idx in 0..12 {
+        let case = random_case(&mut r);
+        let fault_seed = 1000 + case_idx as u64;
+        let (baseline, base_spans) = run_fault_arm(&case, 1, true, fault_seed);
+        any_fault_engaged |= !baseline.contains("errors=0 ");
+        for (workers, trace) in [(1usize, false), (w, false), (w, true)] {
+            let (books, spans) = run_fault_arm(&case, workers, trace, fault_seed);
+            if baseline != books {
+                for (lb, la) in baseline.lines().zip(books.lines()) {
+                    assert_eq!(
+                        lb, la,
+                        "case {case_idx} (workers={workers} trace={trace}) diverged\nspec:\n{}",
+                        case.text
+                    );
+                }
+                panic!(
+                    "case {case_idx}: books differ in length only (workers={workers} \
+                     trace={trace})\nspec:\n{}",
+                    case.text
+                );
+            }
+            if trace && spans != base_spans {
+                for (ls, lp) in base_spans.lines().zip(spans.lines()) {
+                    assert_eq!(
+                        ls, lp,
+                        "case {case_idx}: span streams diverged (workers 1 vs {workers})\n\
+                         spec:\n{}",
+                        case.text
+                    );
+                }
+                panic!(
+                    "case {case_idx}: span streams differ in length only (workers 1 vs \
+                     {workers})\nspec:\n{}",
+                    case.text
+                );
+            }
+        }
+    }
+    assert!(any_fault_engaged, "at these rates the fault plan must have fired at least once");
+}
+
 #[test]
 fn sequential_fallback_code_keeps_determinism() {
     // a wavefront mixing parallel-safe and declared-sequential code:

@@ -28,6 +28,13 @@ limit: > OBS_OFF_FAIL_PCT regression vs baseline fails. The on arm is
 compared within the fresh report only: recording may cost at most
 OBS_ON_MAX_OVERHEAD_PCT over the off arm, or the run fails (this gate
 needs no baseline, so it also runs on seed commits).
+
+The supervision pair (fault-overhead/{off,on}/ns_per_event) reuses the
+same tight off-arm gate: with no fire policies installed the
+supervision layer is one predicted branch per firing, so the off arm
+regressing > OBS_OFF_FAIL_PCT vs baseline fails — shipping the feature
+disabled must be free. The on arm (policies installed, zero faults) is
+trajectory: its overhead_pct rides along as metadata.
 """
 
 import json
@@ -47,8 +54,15 @@ OBS_ON_MAX_OVERHEAD_PCT = 15.0
 # performance measurements — excluded from the regression comparison
 # (e.g. par/workers is the runner's core count; a 8-core baseline vs a
 # 4-core runner is not a regression). obs-overhead/overhead_pct is a
-# derived ratio gated by obs_overhead_check, not a measurement.
-METADATA_LABELS = {"arrivals", "par/workers", "obs-overhead/overhead_pct"}
+# derived ratio gated by obs_overhead_check, not a measurement;
+# fault-overhead/overhead_pct is the same kind of derived ratio for the
+# supervision pair (tracked, not gated).
+METADATA_LABELS = {
+    "arrivals",
+    "par/workers",
+    "obs-overhead/overhead_pct",
+    "fault-overhead/overhead_pct",
+}
 
 
 def load(path):
@@ -158,9 +172,10 @@ def main():
         pct = (fv - bv) / bv * 100.0
         regression = pct if lower_is_better(label, unit) else -pct
         verdict = "ok"
-        # the trace-off arm gates tighter: disabled instrumentation must
-        # cost no more than noise vs the committed baseline
-        fail_pct = OBS_OFF_FAIL_PCT if label.startswith("obs-overhead/off") else FAIL_PCT
+        # the trace-off and policies-off arms gate tighter: a disabled
+        # feature must cost no more than noise vs the committed baseline
+        off_arms = ("obs-overhead/off", "fault-overhead/off")
+        fail_pct = OBS_OFF_FAIL_PCT if label.startswith(off_arms) else FAIL_PCT
         if regression > fail_pct and "ns_per_event" in label:
             verdict = f"FAIL (> {fail_pct:.0f}% regression)"
             if worst_fail is None or regression > worst_fail[1]:
