@@ -5,11 +5,11 @@
 use koalja::benchkit::{f, row, table_header};
 use koalja::prelude::*;
 
-fn run(rho: f64, placement: PlacementStrategy) -> f64 {
+fn run(rho: f64, storage_placement: PlacementStrategy) -> f64 {
     let spec = parse("[r]\n(x) stage1 (m)\n(m) stage2 (out)\n").unwrap();
     let cfg = DeployConfig {
         storage: StorageConfig::with_rho(rho, 64 * 1024),
-        placement,
+        storage_placement,
         cache_policy: PurgePolicy::Ttl(SimDuration::micros(0)), // isolate storage cost
         ..Default::default()
     };

@@ -134,13 +134,51 @@ if [ "$HAVE_CARGO" = 1 ]; then
         fail=1
     fi
     rm -f "$BASELINE"
+
+    step "edge-vs-central bench (E7 placement payoff: BENCH_edge_vs_central.json)"
+    # same pattern as the throughput bench: snapshot the committed
+    # baseline, regenerate, archive, diff. The transfer_reduction gate
+    # inside bench_delta.py is in-report (fails < 5x even on the seed
+    # baseline), so a placement-optimizer regression turns CI red here.
+    EDGE_BASELINE="$(mktemp)"
+    if ! git show HEAD:BENCH_edge_vs_central.json > "$EDGE_BASELINE" 2>/dev/null; then
+        cp BENCH_edge_vs_central.json "$EDGE_BASELINE" 2>/dev/null || : > "$EDGE_BASELINE"
+    fi
+    rm -f BENCH_edge_vs_central.json
+    t0=$(date +%s)
+    if cargo bench --bench edge_vs_central; then
+        if [ -f BENCH_edge_vs_central.json ]; then
+            record "bench-edge-vs-central" pass 0 $(( $(date +%s) - t0 ))
+            mkdir -p artifacts/bench
+            cp BENCH_edge_vs_central.json \
+               "artifacts/bench/edge_vs_central-$(date -u +%Y%m%dT%H%M%SZ).json"
+            echo "archived BENCH_edge_vs_central.json -> artifacts/bench/"
+            if [ -n "$PY" ]; then
+                run_step "bench-delta-edge" 0 "$PY" tools/bench_delta.py "$EDGE_BASELINE" BENCH_edge_vs_central.json
+            else
+                skip_step "bench-delta-edge" "python not found"
+            fi
+        else
+            echo "ERROR: bench ran but emitted no BENCH_edge_vs_central.json"
+            record "bench-edge-vs-central" fail 0 $(( $(date +%s) - t0 ))
+            skip_step "bench-delta-edge" "no fresh bench JSON to diff"
+            fail=1
+        fi
+    else
+        echo "ERROR: edge_vs_central bench failed"
+        record "bench-edge-vs-central" fail 0 $(( $(date +%s) - t0 ))
+        skip_step "bench-delta-edge" "bench failed; nothing to diff"
+        fail=1
+    fi
+    rm -f "$EDGE_BASELINE"
 else
     echo "note: cargo not found — rust tier skipped in this environment"
     for s in cargo-fmt cargo-clippy bench-tap-overhead; do
         record "$s" skip 1 0
     done
     for s in cargo-build cargo-build-examples cargo-test obs-trace \
-             bench-coordinator-throughput bench-delta; do
+             bench-coordinator-throughput bench-delta \
+             bench-edge-vs-central bench-delta-edge; do
         record "$s" skip 0 0
     done
 fi

@@ -6,7 +6,12 @@
 //! coordinating and composing data."
 //!
 //! Part 1 compares the three snapshot policies (§III-I) on the same
-//! mismatched arrival trace. Part 2 runs the L1 Pallas sliding-window
+//! mismatched arrival trace — placed on the extended cloud: the fast
+//! temperature sensor reports from `edge-0`, the wind sensor from the
+//! EU edge `edge-1`, humidity from the datacentre, and the fuse task is
+//! pinned to `central`, so every edge sample pays real WAN physics on
+//! the way in (watch the WAN-bytes column move with the policy).
+//! Part 2 runs the L1 Pallas sliding-window
 //! kernel (AOT-compiled, executed via PJRT) over a buffered sensor stream
 //! — the `input[N/S]` feature computing real moving averages.
 //!
@@ -18,13 +23,18 @@ use koalja::task::compute::PjrtTask;
 
 /// Feed the same three-sensor trace (temp fast, wind slow, humidity
 /// slowest) into a fuse task under `policy`; report what comes out.
-fn run_policy(policy: &str) -> Result<(usize, f64)> {
+/// The fleet spans three regions: the sensors inject at `edge-0`,
+/// `edge-1` and `central`, and the fuse task is placed at `central` —
+/// so the two edge feeds cross the WAN on fetch (summaries cross
+/// zones freely; only Raw is stopped at the border).
+fn run_policy(policy: &str) -> Result<(usize, f64, u64)> {
     // the fuse task, built programmatically (the three sensor ports and
     // the policy attr are data here, not spec text)
     let mut pipe = PipelineBuilder::new("weather")
         .task("fuse").reads("temp").reads("wind").reads("humidity")
         .emits("sample-set").policy(policy)
-        .deploy(DeployConfig::default())?;
+        .place_at("fuse", "central")
+        .deploy(DeployConfig { topology: demo_topology(2), ..Default::default() })?;
     // field deployments brown out: give the fuse task two retries with
     // exponential virtual-time backoff, and if a firing still exhausts
     // its budget, emit an empty fallback sample-set so the downstream
@@ -47,31 +57,40 @@ fn run_policy(policy: &str) -> Result<(usize, f64)> {
         koalja::workload::SensorStream::new("wind", SimDuration::millis(300), 4, 5.0),
         koalja::workload::SensorStream::new("humidity", SimDuration::millis(1000), 4, 60.0),
     ];
+    // where each sensor physically reports from: temp on the near edge,
+    // wind on the EU edge, humidity already in the datacentre
+    let homes = ["edge-0", "edge-1", "central"]
+        .map(|name| pipe.plat.net.by_name(name).expect("demo topology region"));
     let horizon = SimTime::secs(30);
-    for s in &mut sensors {
+    for (s, home) in sensors.iter_mut().zip(homes) {
         // one resolution per sensor; the arrival loop rides the handle
         let src = pipe.source(&s.name)?;
         for (t, p) in s.arrivals_until(&mut r, horizon) {
-            src.inject_at(&mut pipe, p, DataClass::Summary, RegionId::new(0), t);
+            src.inject_at(&mut pipe, p, DataClass::Summary, home, t);
         }
     }
     pipe.run_until_idle();
     let n = sample_set.count(&pipe);
     let staleness = pipe.plat.metrics.e2e_latency.mean().as_secs_f64();
-    Ok((n, staleness))
+    let wan = pipe.plat.metrics.bytes(koalja::obs::NetTier::Wan);
+    Ok((n, staleness, wan))
 }
 
 fn main() -> Result<()> {
     println!("== fig. 7: snapshot policies under 10:3:1 arrival-rate mismatch ==");
-    println!("policy          sample-sets   mean staleness");
+    println!("   (sensors report from edge-0 / edge-1 / central; fuse placed at central)");
+    println!("policy          sample-sets   mean staleness    WAN bytes");
     for policy in ["allnew", "swap", "merge"] {
-        let (n, stale) = run_policy(policy)?;
-        println!("{policy:14}  {n:10}   {stale:8.3}s");
+        let (n, stale, wan) = run_policy(policy)?;
+        println!("{policy:14}  {n:10}   {stale:8.3}s   {wan:10}");
     }
     println!(
         "\nallnew waits for the slowest sensor (few, coherent sets);\n\
          swap fires on every fresh value reusing stale ones (many, mixed age);\n\
-         merge folds everything FCFS into one stream (most, no tuple shape).\n"
+         merge folds everything FCFS into one stream (most, no tuple shape).\n\
+         Every edge sample crossed the WAN to reach the central fuse task —\n\
+         move the fuse with `place_at` (or let Placement::optimize pick) and\n\
+         the WAN column collapses; see benches/edge_vs_central.rs.\n"
     );
 
     // ---- part 2: the paper's input[N/S] with the real Pallas kernel ----

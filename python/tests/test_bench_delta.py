@@ -218,6 +218,52 @@ def test_fault_overhead_pct_is_metadata(tmp_path):
     assert "warn" not in out
 
 
+def test_transfer_reduction_below_floor_fails(tmp_path):
+    # the edge-placement payoff is an in-report gate: < 5x fails even
+    # when the baseline agrees with the fresh value exactly
+    base = doc([row("transfer_reduction", 3.0, "x")])
+    fresh = doc([row("transfer_reduction", 3.0, "x")])
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 1, out
+    assert "below the 5x floor" in out
+
+
+def test_transfer_reduction_between_floor_and_target_warns(tmp_path):
+    base = doc([])
+    fresh = doc([row("transfer_reduction", 7.5, "x")])
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 0, out
+    assert "below the 10x target" in out
+
+
+def test_transfer_reduction_healthy_is_quiet(tmp_path):
+    base = doc([row("transfer_reduction", 200.0, "x")])
+    fresh = doc([row("transfer_reduction", 210.0, "x")])
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 0, out
+    assert "clears the 10x target" in out
+    assert "below the" not in out
+
+
+def test_transfer_reduction_gate_holds_on_seed_baseline(tmp_path):
+    # like the recorder-overhead gate, it needs no baseline
+    base = doc([])
+    fresh = doc([row("transfer_reduction", 2.0, "x")])
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 1, out
+    assert "first trajectory point" in out
+    assert "below the 5x floor" in out
+
+
+def test_edge_workload_knobs_are_metadata(tmp_path):
+    # edges / chunk_rows describe the workload shape, not performance
+    base = doc([row("edges", 4.0, "count"), row("chunk_rows", 1024.0, "count")])
+    fresh = doc([row("edges", 8.0, "count"), row("chunk_rows", 256.0, "count")])
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 0, out
+    assert "warn" not in out
+
+
 def test_environment_metadata_is_not_compared(tmp_path):
     # par/workers is the runner's core count: an 8-core baseline vs a
     # 4-core runner must not read as a 50% regression

@@ -49,6 +49,15 @@ pub struct PipelineBuilder {
     /// Deploy-time override of [`DeployConfig::trace`] (flight recorder +
     /// metrics); `None` = whatever the passed config says.
     trace: Option<bool>,
+    /// Deploy-time override of the simulated node count
+    /// ([`DeployConfig::placement`]`.nodes`); `None` = config (and its
+    /// `KOALJA_NODES` ambient default) wins.
+    nodes: Option<usize>,
+    /// Deploy-time region pins (task name → region name), merged over
+    /// [`DeployConfig::placement`]`.regions` at deploy. This is where
+    /// [`Placement::optimize`](crate::shard::Placement::optimize) output
+    /// lands when driven through the builder.
+    pins: BTreeMap<String, String>,
 }
 
 impl PipelineBuilder {
@@ -59,6 +68,8 @@ impl PipelineBuilder {
             errors: Vec::new(),
             workers: None,
             trace: None,
+            nodes: None,
+            pins: BTreeMap::new(),
         };
         if !valid_name(name) {
             b.errors.push(format!("bad pipeline name '{name}'"));
@@ -82,6 +93,26 @@ impl PipelineBuilder {
     /// `build()`'s spec is unaffected.
     pub fn trace(mut self, on: bool) -> Self {
         self.trace = Some(on);
+        self
+    }
+
+    /// Run the deployment partitioned across `n` simulated nodes (the
+    /// sharded runtime, [`crate::shard`]). Purely operational: any node
+    /// count commits byte-identical books; cross-node wires ride the
+    /// inter-node exchange. A deploy-time knob — `build()`'s spec is
+    /// unaffected.
+    pub fn nodes(mut self, n: usize) -> Self {
+        self.nodes = Some(n.max(1));
+        self
+    }
+
+    /// Pin `task` to `region` at deploy. Semantically identical to a
+    /// `@region=…` attr except it loses to one (spec text stays the
+    /// source of truth) and wins over the nearest-datacentre default.
+    /// Unknown task names fail at deploy; unknown regions fail inside
+    /// `Coordinator::deploy` with the region named.
+    pub fn place_at(mut self, task: &str, region: &str) -> Self {
+        self.pins.insert(task.to_string(), region.to_string());
         self
     }
 
@@ -124,14 +155,27 @@ impl PipelineBuilder {
     }
 
     /// Build, validate and deploy in one step.
-    pub fn deploy(self, mut cfg: DeployConfig) -> Result<Pipeline> {
+    pub fn deploy(mut self, mut cfg: DeployConfig) -> Result<Pipeline> {
         if let Some(w) = self.workers {
             cfg.workers = w;
         }
         if let Some(t) = self.trace {
             cfg.trace = t;
         }
+        if let Some(n) = self.nodes {
+            cfg.placement.nodes = n;
+        }
+        let pins = std::mem::take(&mut self.pins);
         let spec = self.build()?;
+        for (task, region) in pins {
+            if !spec.tasks.iter().any(|t| t.name == task) {
+                return Err(anyhow!(
+                    "place_at: no task '{task}' in pipeline [{}]",
+                    spec.name
+                ));
+            }
+            cfg.placement.regions.insert(task, region);
+        }
         Pipeline::deploy(&spec, cfg)
     }
 }
@@ -255,6 +299,20 @@ impl TaskBuilder {
         self
     }
 
+    /// Set the simulated node count mid-chain (see
+    /// [`PipelineBuilder::nodes`]).
+    pub fn nodes(mut self, n: usize) -> Self {
+        self.pb.nodes = Some(n.max(1));
+        self
+    }
+
+    /// Pin a task to a region mid-chain (see
+    /// [`PipelineBuilder::place_at`]).
+    pub fn place_at(mut self, task: &str, region: &str) -> Self {
+        self.pb.pins.insert(task.to_string(), region.to_string());
+        self
+    }
+
     /// Seal this task and return to the pipeline level (for loops that
     /// add tasks programmatically).
     pub fn done(self) -> PipelineBuilder {
@@ -371,6 +429,43 @@ mod tests {
             .deploy(DeployConfig { trace: false, ..Default::default() })
             .unwrap();
         assert!(!pipe.obs().enabled, "no override: config wins");
+    }
+
+    #[test]
+    fn nodes_and_pins_reach_the_deployment() {
+        let pipe = PipelineBuilder::new("p")
+            .task("t").reads("a").emits("b")
+            .task("u").reads("b").emits("c")
+            .nodes(2)
+            .place_at("t", "edge-0")
+            .deploy(DeployConfig::default())
+            .unwrap();
+        assert_eq!(pipe.shard().nodes, 2);
+        let edge0 = pipe.plat.net.by_name("edge-0").unwrap();
+        let t = pipe.task("t").unwrap().task_id();
+        let u = pipe.task("u").unwrap().task_id();
+        assert_eq!(pipe.agents[t.index()].region, edge0, "place_at pins the region");
+        assert_ne!(pipe.agents[u.index()].region, edge0, "unpinned task keeps the default");
+        // the two regions rank onto different nodes, so the b wire crosses
+        assert!(pipe.shard().is_cross(t, u));
+
+        // an @region attr in the wiring beats a builder pin
+        let pipe = PipelineBuilder::new("p")
+            .task("t").reads("a").emits("b").region("central")
+            .place_at("t", "edge-0")
+            .deploy(DeployConfig::default())
+            .unwrap();
+        let central = pipe.plat.net.by_name("central").unwrap();
+        assert_eq!(pipe.agents[0].region, central);
+
+        // unknown pinned task fails at deploy, before the coordinator
+        let e = PipelineBuilder::new("p")
+            .task("t").reads("a").emits("b")
+            .place_at("ghost", "central")
+            .deploy(DeployConfig::default())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("no task 'ghost'"), "{e}");
     }
 
     #[test]

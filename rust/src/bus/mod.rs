@@ -12,7 +12,11 @@
 //! [`NotifyMode`].
 
 use crate::av::AnnotatedValue;
-use crate::util::{LinkId, SimDuration, TaskId};
+use crate::graph::PipelineGraph;
+use crate::net::{WanLink, WanTopology};
+use crate::obs::{EnergyModel, NetTier};
+use crate::shard::ShardPlan;
+use crate::util::{LinkId, RegionId, SimDuration, TaskId, WireId};
 
 use std::collections::VecDeque;
 
@@ -136,6 +140,188 @@ impl Bus {
     }
 }
 
+// ---------------------------------------------------------------------
+// inter-node exchange (§III-B/IV: the sharded runtime's data movement)
+// ---------------------------------------------------------------------
+
+/// Running totals for one cross-node channel (and, summed, for the whole
+/// exchange). This is a *separate ledger* from `Metrics::bytes_moved` —
+/// the fetch path already accounts region physics there; the exchange
+/// ledger answers "what did the node partition move?", so the two must
+/// not be conflated or bytes double-count.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TransferStat {
+    pub transfers: u64,
+    pub bytes: u64,
+    /// WAN microseconds attributable to these transfers (informational:
+    /// the exchange never touches virtual time — node placement is
+    /// time-neutral by construction).
+    pub wan_us: u64,
+    pub joules: f64,
+    /// Sovereignty-denied deliveries on this channel; each one moved
+    /// exactly zero bytes.
+    pub denied: u64,
+}
+
+impl TransferStat {
+    fn absorb(&mut self, other: &TransferStat) {
+        self.transfers += other.transfers;
+        self.bytes += other.bytes;
+        self.wan_us += other.wan_us;
+        self.joules += other.joules;
+        self.denied += other.denied;
+    }
+}
+
+/// One cross-node wire topic: the link's endpoints resolved to nodes and
+/// regions at deploy, with the cost model per byte frozen in.
+#[derive(Clone, Debug)]
+pub struct LinkChannel {
+    pub wire: WireId,
+    pub from_node: usize,
+    pub to_node: usize,
+    pub from_region: RegionId,
+    pub to_region: RegionId,
+    /// `Lan` when both nodes sit in one region, `Wan` across regions.
+    pub tier: NetTier,
+    /// The WAN link crossed (None for LAN channels).
+    pub wan: Option<WanLink>,
+    joules_per_byte: f64,
+    pub stat: TransferStat,
+}
+
+/// What one granted transfer looked like — the payload for
+/// `SpanEvent::Transfer` stamping.
+#[derive(Clone, Copy, Debug)]
+pub struct TransferNote {
+    pub wire: WireId,
+    pub from_node: usize,
+    pub to_node: usize,
+    pub bytes: u64,
+    pub tier: NetTier,
+    pub wan_us: u64,
+}
+
+/// The inter-node exchange: every wire whose producer and consumer live on
+/// different nodes gets a channel with per-link byte/latency/energy
+/// accounting (DataX-style — the exchange, not the tasks, owns movement
+/// between streaming stages). Built once at deploy from the [`ShardPlan`];
+/// a single-node plan builds an empty exchange and costs nothing.
+///
+/// Injection links (`from == None`) never ride the exchange: external data
+/// materializes on the consumer's node, and its *region* physics is
+/// already charged on the fetch path.
+#[derive(Clone, Debug, Default)]
+pub struct Exchange {
+    /// Dense by `LinkId`; `None` for same-node links.
+    channels: Vec<Option<LinkChannel>>,
+    totals: TransferStat,
+}
+
+impl Exchange {
+    pub fn build(
+        graph: &PipelineGraph,
+        plan: &ShardPlan,
+        regions: &[RegionId],
+        net: &WanTopology,
+        energy: &EnergyModel,
+    ) -> Self {
+        let mut channels: Vec<Option<LinkChannel>> = vec![None; graph.links.len()];
+        for l in &graph.links {
+            let Some(from) = l.from else { continue };
+            let (from_node, to_node) = (plan.node(from), plan.node(l.to));
+            if from_node == to_node {
+                continue;
+            }
+            let (from_region, to_region) = (regions[from.index()], regions[l.to.index()]);
+            let (tier, wan) = if from_region == to_region {
+                (NetTier::Lan, None)
+            } else {
+                // mirror plan_transfer's fallback for unlinked region pairs
+                let link = net.link(from_region, to_region).unwrap_or(WanLink {
+                    rtt: SimDuration::millis(80),
+                    gbps: 1.0,
+                    dollars_per_gb: 0.08,
+                });
+                (NetTier::Wan, Some(link))
+            };
+            channels[l.id.index()] = Some(LinkChannel {
+                wire: l.wire_id,
+                from_node,
+                to_node,
+                from_region,
+                to_region,
+                tier,
+                wan,
+                joules_per_byte: energy.per_byte(tier),
+                stat: TransferStat::default(),
+            });
+        }
+        Self { channels, totals: TransferStat::default() }
+    }
+
+    /// Is this link cross-node?
+    pub fn channel(&self, link: LinkId) -> Option<&LinkChannel> {
+        self.channels.get(link.index()).and_then(|c| c.as_ref())
+    }
+
+    /// Account one granted AV transfer over `link`. Returns the note to
+    /// stamp into the span stream, or None when the link is same-node
+    /// (no exchange hop). Pure bookkeeping: virtual time is untouched.
+    pub fn record(&mut self, link: LinkId, bytes: u64) -> Option<TransferNote> {
+        let ch = self.channels.get_mut(link.index())?.as_mut()?;
+        let wan_us = ch.wan.map_or(0, |w| w.transfer_time(bytes).as_micros());
+        ch.stat.transfers += 1;
+        ch.stat.bytes += bytes;
+        ch.stat.wan_us += wan_us;
+        ch.stat.joules += bytes as f64 * ch.joules_per_byte;
+        self.totals.transfers += 1;
+        self.totals.bytes += bytes;
+        self.totals.wan_us += wan_us;
+        self.totals.joules += bytes as f64 * ch.joules_per_byte;
+        Some(TransferNote {
+            wire: ch.wire,
+            from_node: ch.from_node,
+            to_node: ch.to_node,
+            bytes,
+            tier: ch.tier,
+            wan_us,
+        })
+    }
+
+    /// Account a sovereignty-denied delivery on `link`: the channel
+    /// records the refusal and *zero* bytes, enforcing the "a Denied raw
+    /// transfer must move zero bytes" contract at the ledger level.
+    pub fn record_denied(&mut self, link: LinkId) {
+        if let Some(Some(ch)) = self.channels.get_mut(link.index()) {
+            ch.stat.denied += 1;
+            self.totals.denied += 1;
+        }
+    }
+
+    pub fn totals(&self) -> TransferStat {
+        self.totals
+    }
+
+    /// Per-channel view in `LinkId` order (for `koalja trace` and tests).
+    pub fn channels(&self) -> impl Iterator<Item = (LinkId, &LinkChannel)> {
+        self.channels
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| c.as_ref().map(|ch| (LinkId::new(i as u64), ch)))
+    }
+
+    /// Recompute totals from per-channel stats (defensive; also used by
+    /// tests to prove the two ledgers agree).
+    pub fn recomputed_totals(&self) -> TransferStat {
+        let mut t = TransferStat::default();
+        for (_, ch) in self.channels() {
+            t.absorb(&ch.stat);
+        }
+        t
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -213,5 +399,94 @@ mod tests {
         let mut bus = Bus::new();
         assert!(bus.consume(LinkId::new(9)).is_none());
         assert_eq!(bus.depth(LinkId::new(9)), 0);
+    }
+
+    // -----------------------------------------------------------------
+    // exchange
+    // -----------------------------------------------------------------
+
+    use crate::net::demo_topology;
+    use crate::shard::{PlacementSpec, ShardPlan};
+    use crate::spec::parse;
+
+    /// a → b → c on wires x, y; raw is the external in-tray.
+    fn chain_exchange(nodes: usize, regions: Vec<RegionId>) -> (crate::graph::PipelineGraph, Exchange) {
+        let g = crate::graph::PipelineGraph::build(
+            &parse("[ex]\n(raw) a (x)\n(x) b (y)\n(y) c (z)\n").unwrap(),
+        );
+        let net = demo_topology(2);
+        let plan = ShardPlan::build(&g, &regions, &PlacementSpec::on_nodes(nodes));
+        let ex = Exchange::build(&g, &plan, &regions, &net, &EnergyModel::default());
+        (g, ex)
+    }
+
+    #[test]
+    fn single_node_exchange_is_empty() {
+        let (_, ex) = chain_exchange(1, vec![RegionId::new(0); 3]);
+        assert_eq!(ex.channels().count(), 0);
+        assert_eq!(ex.totals(), TransferStat::default());
+    }
+
+    #[test]
+    fn cross_node_links_get_channels_with_tiers() {
+        // a,c @ central (node 0); b @ eu-dc (node 1): both internal links
+        // cross nodes *and* regions -> Wan channels; the injection link
+        // (raw -> a) never rides the exchange
+        let central = RegionId::new(0);
+        let eu = RegionId::new(1);
+        let (g, mut ex) = chain_exchange(2, vec![central, eu, central]);
+        let chans: Vec<_> = ex.channels().map(|(l, c)| (l, c.tier, c.from_node, c.to_node)).collect();
+        assert_eq!(chans.len(), 2, "x and y cross; raw does not");
+        assert!(chans.iter().all(|(_, tier, ..)| *tier == NetTier::Wan));
+        // record one transfer over the first cross link
+        let link = chans[0].0;
+        let note = ex.record(link, 4096).expect("cross-node link records");
+        assert_eq!(note.bytes, 4096);
+        assert_eq!(note.tier, NetTier::Wan);
+        assert!(note.wan_us > 0, "WAN transfers cost wall time on the ledger");
+        assert_eq!(ex.totals().bytes, 4096);
+        assert_eq!(ex.totals().transfers, 1);
+        assert!(ex.totals().joules > 0.0);
+        assert_eq!(ex.recomputed_totals(), ex.totals());
+        // same-node link records nothing
+        let same_node = g
+            .links
+            .iter()
+            .find(|l| ex.channel(l.id).is_none())
+            .expect("injection link is same-node");
+        assert!(ex.record(same_node.id, 100).is_none());
+        assert_eq!(ex.totals().bytes, 4096, "same-node moves stay off the ledger");
+    }
+
+    #[test]
+    fn cross_node_same_region_is_lan() {
+        // all tasks in central, but b pinned to node 1: cross-node links
+        // exist yet stay on the LAN tier with no WAN link attached
+        let g = crate::graph::PipelineGraph::build(
+            &parse("[ex]\n(raw) a (x)\n(x) b (y)\n(y) c (z)\n").unwrap(),
+        );
+        let net = demo_topology(2);
+        let regions = vec![RegionId::new(0); 3];
+        let spec = PlacementSpec::on_nodes(2).pin_node("b", 1);
+        let plan = ShardPlan::build(&g, &regions, &spec);
+        let mut ex = Exchange::build(&g, &plan, &regions, &net, &EnergyModel::default());
+        let chans: Vec<_> = ex.channels().map(|(l, c)| (l, c.tier)).collect();
+        assert_eq!(chans.len(), 2);
+        assert!(chans.iter().all(|(_, t)| *t == NetTier::Lan));
+        let note = ex.record(chans[0].0, 1000).unwrap();
+        assert_eq!(note.wan_us, 0, "LAN hops cost no WAN time");
+    }
+
+    #[test]
+    fn denied_deliveries_move_zero_bytes() {
+        let central = RegionId::new(0);
+        let eu = RegionId::new(1);
+        let (g, mut ex) = chain_exchange(2, vec![central, eu, central]);
+        let link = g.links.iter().find(|l| ex.channel(l.id).is_some()).unwrap().id;
+        ex.record_denied(link);
+        ex.record_denied(link);
+        assert_eq!(ex.totals().denied, 2);
+        assert_eq!(ex.totals().bytes, 0, "a denial moves exactly zero bytes");
+        assert_eq!(ex.channel(link).unwrap().stat.denied, 2);
     }
 }

@@ -41,6 +41,12 @@ pub struct Deployment {
     pub state: PodState,
     pub last_active: SimTime,
     pub cold_starts: u64,
+    /// When the deployment last entered `PodState::Zero` (None while
+    /// running) — the open end of the current zero-dwell interval.
+    pub zero_since: Option<SimTime>,
+    /// Total time spent scaled to zero across *closed* intervals; an open
+    /// interval is added on top by [`Cluster::zero_dwell`].
+    pub zero_dwell: SimDuration,
 }
 
 /// Elastic-scaling policy knobs.
@@ -111,6 +117,8 @@ impl Cluster {
                 state: PodState::Running,
                 last_active: now,
                 cold_starts: 0,
+                zero_since: None,
+                zero_dwell: SimDuration::ZERO,
             },
         );
         node
@@ -131,6 +139,9 @@ impl Cluster {
         if d.state == PodState::Zero {
             d.state = PodState::Running;
             d.cold_starts += 1;
+            if let Some(since) = d.zero_since.take() {
+                d.zero_dwell += now.saturating_sub(since);
+            }
             policy.cold_start
         } else {
             SimDuration::ZERO
@@ -163,6 +174,7 @@ impl Cluster {
             if d.state == PodState::Running && now.saturating_sub(d.last_active) > idle {
                 d.state = PodState::Zero;
                 d.replicas = 0;
+                d.zero_since = Some(now);
                 self.to_zero += 1;
                 count += 1;
             }
@@ -174,6 +186,22 @@ impl Cluster {
     /// dispatch path revives it first).
     pub fn replicas(&self, task: TaskId) -> u32 {
         self.deployments.get(&task).map_or(1, |d| d.replicas.max(1))
+    }
+
+    /// Total zero-scaled dwell for `task` as of `now`: every closed
+    /// Zero→Running interval plus the currently-open one, if any. This is
+    /// what `koalja trace` reports per task — scale-to-zero as *observed
+    /// time parked*, not just an event count.
+    pub fn zero_dwell(&self, task: TaskId, now: SimTime) -> SimDuration {
+        self.deployments.get(&task).map_or(SimDuration::ZERO, |d| {
+            let open = d.zero_since.map_or(SimDuration::ZERO, |s| now.saturating_sub(s));
+            d.zero_dwell + open
+        })
+    }
+
+    /// Cold starts recorded for `task` (0 for unknown tasks).
+    pub fn cold_starts(&self, task: TaskId) -> u64 {
+        self.deployments.get(&task).map_or(0, |d| d.cold_starts)
     }
 
     pub fn running_pods(&self) -> u32 {
@@ -222,6 +250,23 @@ mod tests {
         assert_eq!(c.deployment(TaskId::new(0)).unwrap().state, PodState::Running);
         // second dispatch is warm
         assert_eq!(c.activate(TaskId::new(0), SimTime::secs(62)), SimDuration::ZERO);
+    }
+
+    #[test]
+    fn zero_dwell_accumulates_across_intervals() {
+        let mut c = cluster();
+        let t = TaskId::new(0);
+        c.place(t, RegionId::new(0), SimTime::ZERO);
+        // parked at 60s, revived at 100s: 40s of closed dwell
+        c.scale_to_zero_sweep(SimTime::secs(60));
+        assert_eq!(c.zero_dwell(t, SimTime::secs(90)), SimDuration::secs(30), "open interval");
+        c.activate(t, SimTime::secs(100));
+        assert_eq!(c.zero_dwell(t, SimTime::secs(500)), SimDuration::secs(40));
+        // parked again at 200s: the open interval rides on top
+        c.scale_to_zero_sweep(SimTime::secs(200));
+        assert_eq!(c.zero_dwell(t, SimTime::secs(250)), SimDuration::secs(90));
+        assert_eq!(c.cold_starts(t), 1);
+        assert_eq!(c.zero_dwell(TaskId::new(9), SimTime::secs(1)), SimDuration::ZERO);
     }
 
     #[test]

@@ -20,7 +20,7 @@ mod wavefront;
 
 use crate::av::{AnnotatedValue, DataClass, Payload};
 use crate::breadboard::tap::TapBoard;
-use crate::bus::NotifyMode;
+use crate::bus::{Exchange, NotifyMode};
 use crate::fault::{
     is_panic_error, DeadLetter, DeadLetterBook, EventStorm, FaultPlan, FireGuard, FirePolicy,
     Firing, OnExhaust, Supervision,
@@ -31,6 +31,7 @@ use crate::net::WanTopology;
 use crate::platform::{PlacementStrategy, Platform};
 use crate::policy::{InputBuffer, RateControl, Snapshot, SnapshotEngine};
 use crate::provenance::{CheckpointEvent, Relation};
+use crate::shard::{PlacementSpec, ShardPlan};
 use crate::spec::PipelineSpec;
 use crate::storage::{PurgePolicy, StorageConfig};
 use crate::obs::Obs;
@@ -63,7 +64,16 @@ pub struct DeployConfig {
     /// Record provenance metadata (disable to measure its overhead, E6).
     pub provenance: bool,
     pub default_notify: NotifyMode,
-    pub placement: PlacementStrategy,
+    /// Where freshly minted artifacts physically land (network-attached
+    /// store vs host-local disk) — the ρ-storage knob, nothing to do with
+    /// *task* placement (that's [`DeployConfig::placement`]).
+    pub storage_placement: PlacementStrategy,
+    /// Task placement across regions and simulated nodes (the sharded
+    /// runtime): region pins move the *semantics* (fetch latency, books,
+    /// sovereignty); the node count and node pins are purely operational —
+    /// any partition commits byte-identical books (see `crate::shard`).
+    /// Defaults to one node (`KOALJA_NODES` overrides) and no pins.
+    pub placement: PlacementSpec,
     /// Baseline arm: ignore `@region` attrs, put everything in the nearest
     /// datacentre ("push everything to the centre", E7 control).
     pub force_central: bool,
@@ -121,7 +131,8 @@ impl Default for DeployConfig {
             cache_policy: PurgePolicy::Never,
             provenance: true,
             default_notify: NotifyMode::Push,
-            placement: PlacementStrategy::NetworkAttached,
+            storage_placement: PlacementStrategy::NetworkAttached,
+            placement: PlacementSpec::default(),
             force_central: false,
             workers: default_workers(),
             trace: default_trace(),
@@ -329,6 +340,23 @@ struct PendingPump {
     via_poll: bool,
 }
 
+/// One structured sovereignty refusal (§IV): a delivery the zone policy
+/// denied, with enough context to fix the pipeline. The delivery itself
+/// keeps the established drop semantics (passport stamped, counter
+/// bumped, pipeline flows on) — this record is the operator-facing error
+/// surface, and it carries the did-you-mean guidance the raw drop can't.
+#[derive(Clone, Debug)]
+pub struct SovereigntyError {
+    pub task: TaskId,
+    pub wire: WireId,
+    pub av: AvId,
+    pub from: RegionId,
+    pub to: RegionId,
+    pub at: SimTime,
+    /// Human-readable diagnosis, including the summarize-first suggestion.
+    pub error: String,
+}
+
 /// The deployed pipeline.
 pub struct Coordinator {
     pub graph: PipelineGraph,
@@ -377,6 +405,16 @@ pub struct Coordinator {
     /// fault plan. Idle (one branch per firing) unless a policy or plan
     /// is installed — benchmarked by the `fault-overhead` shape pair.
     pub supervision: Supervision,
+    /// The node partition this deployment runs under (see
+    /// [`crate::shard`]): purely operational — every plan commits
+    /// byte-identical books.
+    shard: ShardPlan,
+    /// Per-cross-node-wire transfer accounting (see [`crate::bus::Exchange`]).
+    exchange: Exchange,
+    /// Structured sovereignty refusals, event order (see
+    /// [`SovereigntyError`]). Region-determined, so identical for every
+    /// node partition and worker count.
+    sovereignty_errors: Vec<SovereigntyError>,
     /// `run_until_idle` gives up after this many events in one call and
     /// reports an [`EventStorm`] instead of looping forever.
     storm_cap: u64,
@@ -392,12 +430,13 @@ impl Coordinator {
         spec.validate().map_err(|e| anyhow!("invalid spec: {e}"))?;
         let graph = PipelineGraph::build(spec);
         let mut plat = Platform::new(cfg.topology, cfg.storage, cfg.seed);
-        plat.placement = cfg.placement;
+        plat.storage_placement = cfg.storage_placement;
         if !cfg.provenance {
             plat.prov = crate::provenance::ProvenanceRegistry::disabled();
         }
 
-        // Region assignment: @region attr, else nearest datacentre.
+        // Region assignment: @region attr, else a placement pin, else the
+        // nearest datacentre.
         let default_region = plat
             .net
             .regions
@@ -416,7 +455,12 @@ impl Coordinator {
                         .net
                         .by_name(name)
                         .ok_or_else(|| anyhow!("task '{}': unknown region '{name}'", t.name))?,
-                    None => default_region,
+                    None => match cfg.placement.regions.get(&t.name) {
+                        Some(name) => plat.net.by_name(name).ok_or_else(|| {
+                            anyhow!("task '{}': unknown placement region '{name}'", t.name)
+                        })?,
+                        None => default_region,
+                    },
                 }
             };
             plat.cluster.place(id, region, plat.now);
@@ -531,6 +575,13 @@ impl Coordinator {
         let wire_names: Arc<Vec<String>> = Arc::new(graph.wires.names().to_vec());
         let (n_tasks, n_wires) = (graph.n_tasks(), graph.wires.len());
 
+        // the node partition and its exchange: which simulated node runs
+        // each task, and a channel per wire that crosses nodes. Regions
+        // were settled above, so the plan sees the final assignment.
+        let regions: Vec<RegionId> = agents.iter().map(|a| a.region).collect();
+        let shard = ShardPlan::build(&graph, &regions, &cfg.placement);
+        let exchange = Exchange::build(&graph, &shard, &regions, &plat.net, &plat.metrics.energy);
+
         Ok(Self {
             graph,
             agents,
@@ -554,6 +605,9 @@ impl Coordinator {
             commit_log: Vec::new(),
             obs: Obs::sized(cfg.trace, n_tasks, n_wires),
             supervision: Supervision::sized(n_tasks, cfg.fault),
+            shard,
+            exchange,
+            sovereignty_errors: Vec::new(),
             storm_cap: 10_000_000,
             last_storm: None,
         })
@@ -563,6 +617,24 @@ impl Coordinator {
     /// fully sequential).
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// The node partition this deployment runs under.
+    pub fn shard(&self) -> &ShardPlan {
+        &self.shard
+    }
+
+    /// The inter-node exchange: per-cross-node-wire transfer accounting.
+    /// Empty (every link same-node) on a single-node deployment.
+    pub fn exchange(&self) -> &Exchange {
+        &self.exchange
+    }
+
+    /// Structured sovereignty refusals recorded so far, event order. Each
+    /// entry is a delivery the zone policy denied — zero bytes moved —
+    /// with a did-you-mean-summarize diagnosis in `error`.
+    pub fn sovereignty_errors(&self) -> &[SovereigntyError] {
+        &self.sovereignty_errors
     }
 
     /// The observability registry: flight recorder, per-task/per-wire
@@ -1045,7 +1117,7 @@ impl Coordinator {
         // denied one pays none at all (§Perf)
         let verdict = self.links[link_idx].deliver(&mut self.plat, &av);
         match verdict {
-            Delivery::Denied => {}
+            Delivery::Denied => self.record_sovereignty_error(link_idx, &av),
             Delivery::NotifyNow => {
                 self.last_arrival.insert(task, self.plat.now);
                 self.push_event(self.plat.now, EventKind::Wake { task });
@@ -1060,11 +1132,64 @@ impl Coordinator {
             }
         }
         if verdict != Delivery::Denied {
+            // cross-node hop? account it on the exchange and stamp the
+            // movement note. Pure bookkeeping — the ledger and the span
+            // are the only places the node partition is visible, and the
+            // span is projected out of placement-identity comparisons.
+            if let Some(note) = self.exchange.record(self.links[link_idx].link.id, av.size_bytes)
+            {
+                if self.obs.enabled {
+                    self.obs.transfer(
+                        self.plat.now,
+                        note.wire,
+                        note.from_node as u32,
+                        note.to_node as u32,
+                        note.bytes,
+                        note.tier,
+                    );
+                }
+            }
             // a successful delivery makes this AV the wire's current value:
             // move the event's Arc into the dense slot — no clone, no hash
             let wire = self.links[link_idx].link.wire_id;
             self.latest_on_wire.set(wire, av);
         }
+    }
+
+    /// Record the structured error surface for a sovereignty-denied
+    /// delivery: the exchange books the refusal (zero bytes moved) and
+    /// the error book gains a did-you-mean-summarize diagnosis. Runs on
+    /// the coordinator thread in event order, and the verdict depends on
+    /// regions only — identical for every node partition.
+    fn record_sovereignty_error(&mut self, link_idx: usize, av: &AnnotatedValue) {
+        let link = &self.links[link_idx].link;
+        self.exchange.record_denied(link.id);
+        self.plat.metrics.bump("sovereignty_errors");
+        let from = av.region;
+        let to = self.links[link_idx].consumer_region;
+        let wire_name = self.graph.wires.name(link.wire_id);
+        let task_name = &self.graph.task(link.to).name;
+        let error = format!(
+            "sovereignty: {:?} data on wire '{wire_name}' may not cross from zone '{}' \
+             ({}) into zone '{}' ({}) toward task '{task_name}' — zero bytes moved. \
+             Did you mean to summarize first? Emit the wire as DataClass::Summary \
+             (or place '{task_name}' inside zone '{}').",
+            av.class,
+            self.plat.net.region(from).zone,
+            self.plat.net.region(from).name,
+            self.plat.net.region(to).zone,
+            self.plat.net.region(to).name,
+            self.plat.net.region(from).zone,
+        );
+        self.sovereignty_errors.push(SovereigntyError {
+            task: link.to,
+            wire: link.wire_id,
+            av: av.id,
+            from,
+            to,
+            at: self.plat.now,
+            error,
+        });
     }
 
     /// Pull the single oldest queued AV (FCFS across this task's incoming
@@ -1143,7 +1268,7 @@ impl Coordinator {
         if self.obs.enabled && width > 0 {
             self.obs.wavefront_begin(self.plat.now, width);
         }
-        if self.workers > 1 && busy >= 2 {
+        if (self.workers > 1 || self.shard.nodes > 1) && busy >= 2 {
             if self.obs.enabled {
                 self.obs.wavefront_parallel(busy as u32);
             }
@@ -1342,6 +1467,9 @@ impl Coordinator {
     /// sequence direct execution performs.
     fn commit_recorded(&mut self, task: TaskId, rec: RecordedRun) {
         let cold = self.plat.cluster.activate(task, self.plat.now);
+        if cold > SimDuration::ZERO {
+            self.plat.metrics.bump("cold_starts");
+        }
         let run = self.plat.next_run_id();
         let RecordedRun { recipe, parents, born, version, region, fx, body } = rec;
         fx.apply(&mut self.plat, task, run, version, region);
@@ -1376,6 +1504,9 @@ impl Coordinator {
         guard: FireGuard,
     ) -> Result<()> {
         let cold = self.plat.cluster.activate(task, self.plat.now);
+        if cold > SimDuration::ZERO {
+            self.plat.metrics.bump("cold_starts");
+        }
         let recipe = self.agents[task.index()].recipe(&snapshot);
         let parents: Vec<AvId> = snapshot.all_avs().map(|a| a.id).collect();
         let born = snapshot.born;

@@ -28,6 +28,14 @@
 //! Scheduling is work-stealing over an atomic cursor; it affects only
 //! *which thread* runs a group, never the committed order, so the pool
 //! needs no deterministic scheduler.
+//!
+//! On a multi-node [`ShardPlan`](crate::shard::ShardPlan) the pool is
+//! replaced by **thread-per-node** execution: each busy node gets one
+//! thread that runs exactly its own tasks' groups, in task-index order —
+//! the cluster-simulation execution model (§III-B deployments). The swap
+//! changes only which thread prepares a group; every effect still commits
+//! on the coordinator thread in canonical order, which is why node count
+//! and node pins cannot perturb a committed byte.
 
 use super::{Coordinator, TaskId};
 use crate::fault::Firing;
@@ -62,7 +70,7 @@ pub(super) fn execute_parallel(
     coord: &mut Coordinator,
     groups: &mut [WaveGroup],
 ) -> Vec<Vec<PreparedFiring>> {
-    let Coordinator { agents, plat, graph, workers, .. } = coord;
+    let Coordinator { agents, plat, graph, workers, shard, .. } = coord;
     let world = WorldView { store: &plat.store, net: &plat.net, now: plat.now };
     let wires: &WireTable = &graph.wires;
 
@@ -75,16 +83,49 @@ pub(super) fn execute_parallel(
         .map(|(gi, g)| (g.task.index(), gi))
         .collect();
     let mut jobs: Vec<Mutex<Option<Job<'_>>>> = Vec::with_capacity(slot_of.len());
+    // node hosting each job's task, parallel to `jobs`
+    let mut job_node: Vec<usize> = Vec::with_capacity(slot_of.len());
     for (i, agent) in agents.iter_mut().enumerate() {
         if let Some(group_idx) = slot_of.remove(&i) {
             let firings = std::mem::take(&mut groups[group_idx].firings);
             jobs.push(Mutex::new(Some(Job { group_idx, agent, firings })));
+            job_node.push(shard.node(TaskId::new(i as u64)));
         }
     }
     debug_assert!(slot_of.is_empty(), "every busy group maps to a deployed agent");
 
     let results: Vec<Mutex<Vec<PreparedFiring>>> =
         groups.iter().map(|_| Mutex::new(Vec::new())).collect();
+    if shard.nodes > 1 {
+        // thread-per-node: each busy node runs its own tasks' groups in
+        // task-index order. Worker width is ignored — the partition *is*
+        // the schedule (a node is a simulated machine, not a pool slot).
+        let jobs_ref = &jobs;
+        let results_ref = &results;
+        let world_ref = &world;
+        std::thread::scope(|s| {
+            for node in 0..shard.nodes {
+                let mine: Vec<usize> = job_node
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &n)| n == node)
+                    .map(|(j, _)| j)
+                    .collect();
+                if mine.is_empty() {
+                    continue;
+                }
+                s.spawn(move || {
+                    for j in mine {
+                        let Job { group_idx, agent, firings } =
+                            jobs_ref[j].lock().unwrap().take().expect("each job is taken once");
+                        let out = prepare_group(agent, wires, world_ref, firings);
+                        *results_ref[group_idx].lock().unwrap() = out;
+                    }
+                });
+            }
+        });
+        return results.into_iter().map(|m| m.into_inner().unwrap()).collect();
+    }
     let cursor = AtomicUsize::new(0);
     let n_workers = (*workers).min(jobs.len()).max(1);
     std::thread::scope(|s| {

@@ -42,6 +42,7 @@ pub mod platform;
 pub mod policy;
 pub mod provenance;
 pub mod runtime;
+pub mod shard;
 pub mod spec;
 pub mod storage;
 pub mod task;
@@ -54,9 +55,10 @@ pub mod prelude {
     pub use crate::api::{Pipeline, PipelineBuilder, SinkHandle, SourceHandle, TaskHandle};
     pub use crate::av::{DataClass, Payload};
     pub use crate::breadboard::{Breadboard, TapSpec};
-    pub use crate::bus::NotifyMode;
+    pub use crate::bus::{NotifyMode, TransferStat};
     pub use crate::coordinator::{
         default_trace, default_workers, Collected, Coordinator, DeployConfig, SinkCommit,
+        SovereigntyError,
     };
     pub use crate::fault::{
         default_fault_plan, Backoff, DeadLetter, EventStorm, FaultKind, FaultPlan, FirePolicy,
@@ -68,6 +70,9 @@ pub mod prelude {
     pub use crate::policy::{BufferSpec, Snapshot, SnapshotPolicy};
     pub use crate::provenance::ProvenanceQuery;
     pub use crate::runtime::Runtime;
+    pub use crate::shard::{
+        default_nodes, Placement, PlacementInput, PlacementSpec, ShardPlan,
+    };
     pub use crate::spec::parse;
     pub use crate::storage::{PurgePolicy, StorageConfig};
     pub use crate::task::builtins::*;

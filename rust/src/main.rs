@@ -227,21 +227,29 @@ fn cmd_trace(args: &[String]) -> Result<()> {
         wf.instants, wf.firings, wf.max_width, wf.parallel_instants, wf.deferred, wf.rollbacks
     );
 
-    // per-task table, busiest first
-    println!("\n  task              firings  memo  errs  defer  rollbk  mean_us  p99_us");
+    // per-task table, busiest first; the last three columns come from the
+    // cluster substrate (scale-to-zero lifecycle), not the obs registry
+    println!(
+        "\n  task              firings  memo  errs  defer  rollbk  mean_us  p99_us  cold  repl  dwell_ms"
+    );
     let mut rows: Vec<(usize, &TaskStats)> = obs.all_task_stats().iter().enumerate().collect();
     rows.sort_by(|a, b| b.1.firings.cmp(&a.1.firings).then(a.0.cmp(&b.0)));
+    let now = pipe.plat.now;
     for (i, t) in rows.iter().take(10) {
+        let task = TaskId::new(*i as u64);
         println!(
-            "  {:<18} {:>6} {:>5} {:>5} {:>6} {:>7} {:>8} {:>7}",
-            tname(TaskId::new(*i as u64)),
+            "  {:<18} {:>6} {:>5} {:>5} {:>6} {:>7} {:>8} {:>7} {:>5} {:>5} {:>9}",
+            tname(task),
             t.firings,
             t.memo_hits,
             t.errors,
             t.deferred,
             t.rollbacks,
             t.latency.mean().as_micros(),
-            t.latency.quantile(0.99).as_micros()
+            t.latency.quantile(0.99).as_micros(),
+            pipe.plat.cluster.cold_starts(task),
+            pipe.plat.cluster.replicas(task),
+            pipe.plat.cluster.zero_dwell(task, now).as_micros() / 1_000,
         );
     }
     if rows.len() > 10 {
@@ -262,6 +270,49 @@ fn cmd_trace(args: &[String]) -> Result<()> {
             w.sink_commits,
             w.bytes
         );
+    }
+
+    // sharded runtime: the node partition and what the exchange moved
+    let shard = pipe.shard();
+    if shard.nodes > 1 {
+        println!("\nshard plan: {} node(s)", shard.nodes);
+        for node in 0..shard.nodes {
+            let mine: Vec<&str> =
+                shard.tasks_of[node].iter().map(|&t| tname(t)).collect();
+            println!("  node {node}: [{}]", mine.join(", "));
+        }
+    }
+    let ex_totals = pipe.exchange().totals();
+    if ex_totals.transfers + ex_totals.denied > 0 {
+        println!("\n  exchange channel               tier  xfers      bytes    wan_us  denied");
+        for (_, ch) in pipe.exchange().channels() {
+            if ch.stat.transfers + ch.stat.denied == 0 {
+                continue;
+            }
+            println!(
+                "  {:<18} n{} -> n{}  {:>4} {:>6} {:>10} {:>9} {:>7}",
+                wname(ch.wire),
+                ch.from_node,
+                ch.to_node,
+                match ch.tier {
+                    koalja::obs::NetTier::Wan => "wan",
+                    koalja::obs::NetTier::Lan => "lan",
+                    koalja::obs::NetTier::Local => "loc",
+                },
+                ch.stat.transfers,
+                ch.stat.bytes,
+                ch.stat.wan_us,
+                ch.stat.denied,
+            );
+        }
+        println!(
+            "  totals: {} transfer(s), {} B, {} WAN us, {:.3} J, {} denied",
+            ex_totals.transfers, ex_totals.bytes, ex_totals.wan_us, ex_totals.joules,
+            ex_totals.denied
+        );
+    }
+    for e in pipe.sovereignty_errors() {
+        println!("\nsovereignty error at {}: {}", e.at, e.error);
     }
 
     // every execution span's run id must resolve in the checkpoint ledger
@@ -323,6 +374,9 @@ fn cmd_trace(args: &[String]) -> Result<()> {
             }
             SpanEvent::FiringDegraded { task, run } => {
                 format!("{} fallback emitted {run}", tname(task))
+            }
+            SpanEvent::Transfer { wire, from, to, bytes, tier } => {
+                format!("{} n{from} -> n{to} ({bytes} B, {tier:?})", wname(wire))
             }
         };
         format!("  {:>6}  t+{:>9}us  {:<18} {detail}", s.seq, s.at.as_micros(), s.event.name())

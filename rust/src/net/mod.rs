@@ -38,7 +38,12 @@ pub struct WanLink {
 impl WanLink {
     pub fn transfer_time(&self, bytes: u64) -> SimDuration {
         let serialize_us = (bytes as f64 * 8.0) / (self.gbps * 1e3); // bits / (Gb/s) -> us
-        SimDuration::micros(self.rtt.as_micros() + serialize_us.round() as u64)
+        // Nonzero payloads always pay at least 1 µs of serialization:
+        // rounding small transfers to a free 0 µs made a 100-byte hop on a
+        // 10 Gbps link indistinguishable from no transfer at all, which in
+        // turn let byte-count regressions hide below the clock's tick.
+        let serialize = if bytes == 0 { 0 } else { (serialize_us.ceil() as u64).max(1) };
+        SimDuration::micros(self.rtt.as_micros() + serialize)
     }
 }
 
@@ -187,6 +192,23 @@ mod tests {
         // 1 MB over 1 Gbps = 8 ms serialization + 10 ms rtt
         let t = l.transfer_time(1_000_000);
         assert_eq!(t.as_micros(), 10_000 + 8_000);
+    }
+
+    #[test]
+    fn transfer_time_is_monotone_in_bytes() {
+        // fast link, tiny payloads: the old `.round()` mapped 1..=62 bytes
+        // to a free 0 µs of serialization, so time was flat where it should
+        // grow. Now every nonzero payload costs >= 1 µs and the curve is
+        // non-decreasing in bytes.
+        let l = WanLink { rtt: SimDuration::millis(1), gbps: 10.0, dollars_per_gb: 0.05 };
+        assert_eq!(l.transfer_time(0).as_micros(), 1_000, "empty transfer is pure rtt");
+        assert_eq!(l.transfer_time(1).as_micros(), 1_001, "one byte is never free");
+        let mut last = SimDuration::ZERO;
+        for bytes in [0u64, 1, 62, 63, 1_000, 10_000, 1_000_000, 10_000_000] {
+            let t = l.transfer_time(bytes);
+            assert!(t >= last, "transfer_time({bytes}) = {t:?} dropped below {last:?}");
+            last = t;
+        }
     }
 
     #[test]

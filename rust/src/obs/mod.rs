@@ -261,6 +261,15 @@ impl Obs {
         self.rec.record(at, SpanEvent::Demand { wire });
     }
 
+    /// Exchange movement note: `bytes` crossed from node `from` to node
+    /// `to` over `wire` at `tier`. Recorded on the coordinator thread in
+    /// delivery order, so `koalja trace` reconstructs data movement end to
+    /// end; projected out of cross-placement span comparisons
+    /// ([`SpanEvent::is_movement_note`]).
+    pub fn transfer(&mut self, at: SimTime, wire: WireId, from: u32, to: u32, bytes: u64, tier: NetTier) {
+        self.rec.record(at, SpanEvent::Transfer { wire, from, to, bytes, tier });
+    }
+
     // ---- reading ------------------------------------------------------
 
     pub fn task_stats(&self, task: TaskId) -> Option<&TaskStats> {
@@ -405,6 +414,17 @@ fn span_json(s: &Span) -> Json {
         SpanEvent::Quarantine { open, .. } => pairs.push(("open", Json::Bool(open))),
         SpanEvent::Redrive { count, .. } => pairs.push(("count", Json::num(count))),
         SpanEvent::FiringDegraded { .. } => {}
+        SpanEvent::Transfer { from, to, bytes, tier, .. } => {
+            pairs.push(("from_node", Json::num(from)));
+            pairs.push(("to_node", Json::num(to)));
+            pairs.push(("bytes", Json::num(bytes as f64)));
+            let tier_name = match tier {
+                NetTier::Local => "local",
+                NetTier::Lan => "lan",
+                NetTier::Wan => "wan",
+            };
+            pairs.push(("tier", Json::str(tier_name)));
+        }
     }
     Json::obj(pairs)
 }

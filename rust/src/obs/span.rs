@@ -10,6 +10,7 @@
 //! DESIGN.md §Observability for the merge argument), and turning the
 //! recorder on cannot perturb a single committed byte.
 
+use super::NetTier;
 use crate::util::{AvId, RunId, SimTime, TaskId, WireId};
 use std::collections::VecDeque;
 
@@ -100,6 +101,13 @@ pub enum SpanEvent {
     Redrive { task: TaskId, count: u32 },
     /// An exhausted firing emitted its declared fallback (Degrade).
     FiringDegraded { task: TaskId, run: RunId },
+    /// An AV crossed the inter-node exchange: `bytes` moved from node
+    /// `from` to node `to` over `wire` at `tier`. Like scheduling notes,
+    /// this is a *movement note*: it describes which node partition ran
+    /// the pipeline, not what the pipeline computed, so span-identity
+    /// comparisons across placements project it out
+    /// (see [`SpanEvent::is_movement_note`]).
+    Transfer { wire: WireId, from: u32, to: u32, bytes: u64, tier: NetTier },
 }
 
 impl SpanEvent {
@@ -122,6 +130,7 @@ impl SpanEvent {
             | SpanEvent::Publish { wire, .. }
             | SpanEvent::SinkCommit { wire, .. }
             | SpanEvent::TapObserve { wire, .. }
+            | SpanEvent::Transfer { wire, .. }
             | SpanEvent::Demand { wire } => Some(*wire),
             _ => None,
         }
@@ -158,7 +167,17 @@ impl SpanEvent {
             SpanEvent::Quarantine { .. } => "quarantine",
             SpanEvent::Redrive { .. } => "redrive",
             SpanEvent::FiringDegraded { .. } => "firing-degraded",
+            SpanEvent::Transfer { .. } => "transfer",
         }
+    }
+
+    /// Movement notes record *where* data physically travelled under the
+    /// current node partition. They are placement-dependent by design —
+    /// the one sanctioned span-stream difference between node counts — so
+    /// the placement determinism property projects them out, exactly as
+    /// worker-count comparisons project out scheduling notes.
+    pub fn is_movement_note(&self) -> bool {
+        matches!(self, SpanEvent::Transfer { .. })
     }
 }
 
@@ -273,5 +292,16 @@ mod tests {
         };
         assert_eq!(p.wire(), Some(WireId::new(2)));
         assert_eq!(p.name(), "publish");
+        let t = SpanEvent::Transfer {
+            wire: WireId::new(2),
+            from: 0,
+            to: 1,
+            bytes: 4096,
+            tier: NetTier::Wan,
+        };
+        assert!(t.is_movement_note());
+        assert!(!p.is_movement_note());
+        assert_eq!(t.wire(), Some(WireId::new(2)));
+        assert_eq!(t.name(), "transfer");
     }
 }

@@ -39,7 +39,7 @@ pub struct Platform {
     pub workspaces: WorkspaceRegistry,
     pub services: ServiceDirectory,
     pub rng: Rng,
-    pub placement: PlacementStrategy,
+    pub storage_placement: PlacementStrategy,
     av_ids: IdGen,
     run_ids: IdGen,
 }
@@ -57,7 +57,7 @@ impl Platform {
             workspaces: WorkspaceRegistry::new(),
             services: ServiceDirectory::new(),
             rng: Rng::seed_from_u64(seed),
-            placement: PlacementStrategy::NetworkAttached,
+            storage_placement: PlacementStrategy::NetworkAttached,
             av_ids: IdGen::new(),
             run_ids: IdGen::new(),
         }
@@ -72,7 +72,7 @@ impl Platform {
     }
 
     pub fn storage_tier(&self) -> StorageTier {
-        match self.placement {
+        match self.storage_placement {
             PlacementStrategy::NetworkAttached => StorageTier::ObjectStore,
             PlacementStrategy::HostLocal => StorageTier::HostLocal,
         }
@@ -215,7 +215,7 @@ mod tests {
     fn placement_picks_tier() {
         let mut p = plat();
         assert_eq!(p.storage_tier(), StorageTier::ObjectStore);
-        p.placement = PlacementStrategy::HostLocal;
+        p.storage_placement = PlacementStrategy::HostLocal;
         assert_eq!(p.storage_tier(), StorageTier::HostLocal);
     }
 }

@@ -1,0 +1,190 @@
+//! Sharded multi-node runtime — partitioning a deployed pipeline across N
+//! simulated nodes (§III-B, §IV: "tasks should be freely locatable in any
+//! region, with transparent interconnection between Kubernetes
+//! deployments").
+//!
+//! Two placement dimensions, deliberately distinct:
+//!
+//! * **Region** (task → [`RegionId`]) is *semantic*: it decides WAN fetch
+//!   latency, sovereignty verdicts and energy tiers, so it moves the books.
+//!   Regions come from `@region` attrs, [`PlacementSpec::regions`] pins, or
+//!   the [`Placement`] optimizer.
+//! * **Node** (task → thread) is *operational*: it decides which simulated
+//!   node executes a firing and which wires cross the inter-node
+//!   [`Exchange`](crate::bus::Exchange). Node assignment must never
+//!   perturb a single committed byte — all cross-node effects ride the
+//!   effect tape and commit in (instant, task-index) order on the
+//!   coordinator thread, so sink books, provenance, dead letters and span
+//!   streams are byte-identical across any node count
+//!   (`rust/tests/placement_determinism.rs` is the enforcement).
+//!
+//! The ambient default node count is `KOALJA_NODES` (like `KOALJA_WORKERS`
+//! for the worker pool), so the CI matrix can sweep placements without
+//! touching code.
+
+pub mod placement;
+
+pub use placement::{Placement, PlacementInput};
+
+use crate::graph::PipelineGraph;
+use crate::util::{RegionId, TaskId};
+
+use std::collections::BTreeMap;
+
+/// Ambient default for [`PlacementSpec::nodes`]: `KOALJA_NODES`, clamped
+/// to >= 1; anything unset or unparsable means a single node (the
+/// seed-era behaviour).
+pub fn default_nodes() -> usize {
+    std::env::var("KOALJA_NODES")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .unwrap_or(1)
+        .max(1)
+}
+
+/// Deploy-time placement request: how many simulated nodes to run, plus
+/// region pins (by task name) layered between `@region` spec attrs and the
+/// nearest-datacentre default, and node pins for tests that want to force
+/// a particular partition.
+#[derive(Clone, Debug)]
+pub struct PlacementSpec {
+    /// Simulated node (thread) count; 1 reproduces the single-node runtime
+    /// exactly.
+    pub nodes: usize,
+    /// task name → region name. Loses to an explicit `@region` attr in the
+    /// spec text, wins over the default-region fallback. This is where
+    /// [`Placement::optimize`] output and `PipelineBuilder::place_at` land.
+    pub regions: BTreeMap<String, String>,
+    /// task name → node index (taken modulo `nodes`). Overrides the
+    /// region-rank round-robin; exists so the determinism property test
+    /// can drive *arbitrary* partitions.
+    pub node_pins: BTreeMap<String, usize>,
+}
+
+impl Default for PlacementSpec {
+    fn default() -> Self {
+        Self { nodes: default_nodes(), regions: BTreeMap::new(), node_pins: BTreeMap::new() }
+    }
+}
+
+impl PlacementSpec {
+    /// Explicit node count, no pins, ignoring the `KOALJA_NODES` ambient.
+    pub fn on_nodes(nodes: usize) -> Self {
+        Self { nodes: nodes.max(1), regions: BTreeMap::new(), node_pins: BTreeMap::new() }
+    }
+
+    pub fn pin(mut self, task: &str, region: &str) -> Self {
+        self.regions.insert(task.to_string(), region.to_string());
+        self
+    }
+
+    pub fn pin_node(mut self, task: &str, node: usize) -> Self {
+        self.node_pins.insert(task.to_string(), node);
+        self
+    }
+}
+
+/// The compiled node partition: which node runs which task. Built once at
+/// deploy, immutable afterwards — like the wire table, it is dense by task
+/// index so the hot path never hashes.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    pub nodes: usize,
+    /// Node index per task (dense by task index).
+    pub node_of: Vec<usize>,
+    /// Tasks hosted per node, in task-index order.
+    pub tasks_of: Vec<Vec<TaskId>>,
+}
+
+impl ShardPlan {
+    /// Partition tasks over `spec.nodes` nodes. The default assignment
+    /// keeps co-located work together: distinct task regions are ranked by
+    /// first appearance in task-index order, and each task lands on
+    /// `rank(region) % nodes` — so a 3-region pipeline on 3 nodes gets one
+    /// node per region, and on 1 node everything collapses to node 0.
+    /// `spec.node_pins` override per task. Fully deterministic in
+    /// (graph, regions, spec).
+    pub fn build(graph: &PipelineGraph, regions: &[RegionId], spec: &PlacementSpec) -> Self {
+        let nodes = spec.nodes.max(1);
+        let mut rank: BTreeMap<RegionId, usize> = BTreeMap::new();
+        let mut node_of = Vec::with_capacity(regions.len());
+        for (i, r) in regions.iter().enumerate() {
+            let next = rank.len();
+            let region_rank = *rank.entry(*r).or_insert(next);
+            let node = match spec.node_pins.get(&graph.tasks[i].name) {
+                Some(&pin) => pin % nodes,
+                None => region_rank % nodes,
+            };
+            node_of.push(node);
+        }
+        let mut tasks_of = vec![Vec::new(); nodes];
+        for (i, &n) in node_of.iter().enumerate() {
+            tasks_of[n].push(TaskId::new(i as u64));
+        }
+        Self { nodes, node_of, tasks_of }
+    }
+
+    /// The node hosting `task`.
+    pub fn node(&self, task: TaskId) -> usize {
+        self.node_of.get(task.index()).copied().unwrap_or(0)
+    }
+
+    /// Does a `from → to` wire cross nodes (and therefore ride the
+    /// exchange)?
+    pub fn is_cross(&self, from: TaskId, to: TaskId) -> bool {
+        self.node(from) != self.node(to)
+    }
+
+    /// How many nodes actually host at least one task.
+    pub fn occupied_nodes(&self) -> usize {
+        self.tasks_of.iter().filter(|t| !t.is_empty()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::parse;
+
+    fn graph() -> PipelineGraph {
+        PipelineGraph::build(&parse("[s]\n(raw) a (x)\n(x) b (y)\n(y) c (z)\n").unwrap())
+    }
+
+    #[test]
+    fn single_node_collapses_everything() {
+        let g = graph();
+        let regions = vec![RegionId::new(2), RegionId::new(0), RegionId::new(1)];
+        let plan = ShardPlan::build(&g, &regions, &PlacementSpec::on_nodes(1));
+        assert_eq!(plan.node_of, vec![0, 0, 0]);
+        assert_eq!(plan.occupied_nodes(), 1);
+        assert!(!plan.is_cross(TaskId::new(0), TaskId::new(1)));
+    }
+
+    #[test]
+    fn regions_round_robin_by_first_appearance() {
+        let g = graph();
+        // a@r2, b@r0, c@r2: r2 ranks 0, r0 ranks 1
+        let regions = vec![RegionId::new(2), RegionId::new(0), RegionId::new(2)];
+        let plan = ShardPlan::build(&g, &regions, &PlacementSpec::on_nodes(2));
+        assert_eq!(plan.node_of, vec![0, 1, 0], "co-located tasks share a node");
+        assert!(plan.is_cross(TaskId::new(0), TaskId::new(1)));
+        assert!(!plan.is_cross(TaskId::new(0), TaskId::new(2)));
+        assert_eq!(plan.tasks_of[0], vec![TaskId::new(0), TaskId::new(2)]);
+    }
+
+    #[test]
+    fn node_pins_override_the_round_robin() {
+        let g = graph();
+        let regions = vec![RegionId::new(0); 3];
+        let spec = PlacementSpec::on_nodes(2).pin_node("b", 1).pin_node("c", 7); // 7 % 2 == 1
+        let plan = ShardPlan::build(&g, &regions, &spec);
+        assert_eq!(plan.node_of, vec![0, 1, 1]);
+    }
+
+    #[test]
+    fn default_nodes_is_at_least_one() {
+        // KOALJA_NODES is unset (or numeric) in the test environment; the
+        // clamp guarantees the invariant either way
+        assert!(default_nodes() >= 1);
+    }
+}

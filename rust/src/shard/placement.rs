@@ -1,0 +1,307 @@
+//! Transfer-minimizing region placement — greedy + local search over the
+//! observed wire byte profile (the TOSCAdata move: placement is a model
+//! you optimize, not an ops afterthought).
+//!
+//! The optimizer assigns a region to every *unpinned* task so that the
+//! bytes crossing region boundaries are minimized, with sovereignty folded
+//! in as a hard penalty: a Raw wire crossing zones costs six orders of
+//! magnitude more than any honest transfer, so feasible placements always
+//! dominate. Pinned tasks (spec `@region` attrs, `place_at` pins) are
+//! fixed points. The byte profile comes from a prior run's
+//! `obs::WireStats` (E7: profile centrally, then push the summarizers to
+//! the edge).
+//!
+//! Everything iterates in dense index / `BTreeMap` order and breaks ties
+//! toward the lowest `RegionId`, so the result is a pure function of its
+//! inputs — a placement computed on one machine is the placement.
+
+use crate::av::DataClass;
+use crate::graph::PipelineGraph;
+use crate::net::{TransferVerdict, WanTopology};
+use crate::util::{RegionId, TaskId, WireId};
+
+use std::collections::BTreeMap;
+
+/// Cost multiplier that makes sovereignty-denied edges dominate any
+/// feasible byte count.
+const DENIED_PENALTY: u64 = 1_000_000;
+/// Local-search improvement passes (each pass sweeps every unpinned task;
+/// the loop stops early at a fixpoint).
+const MAX_PASSES: usize = 32;
+
+/// Everything the optimizer knows about one pipeline.
+#[derive(Clone, Debug, Default)]
+pub struct PlacementInput {
+    /// Fixed task → region assignments (`@region` attrs, explicit pins).
+    pub pinned: BTreeMap<TaskId, RegionId>,
+    /// Observed bytes per wire from a profiling run (`obs::WireStats`);
+    /// unprofiled wires count as zero bytes but still pay the per-edge
+    /// crossing cost, so the optimizer never *gains* by splitting them.
+    pub wire_bytes: BTreeMap<WireId, u64>,
+    /// Dominant data class per wire, for the sovereignty penalty; missing
+    /// wires default to [`DataClass::Summary`] (freely movable).
+    pub wire_class: BTreeMap<WireId, DataClass>,
+    /// Where external injections on a wire physically originate — sensors
+    /// are not movable, so consumers placed away from them pay.
+    pub external_region: BTreeMap<WireId, RegionId>,
+}
+
+impl PlacementInput {
+    fn class(&self, wire: WireId) -> DataClass {
+        self.wire_class.get(&wire).copied().unwrap_or(DataClass::Summary)
+    }
+
+    fn bytes(&self, wire: WireId) -> u64 {
+        self.wire_bytes.get(&wire).copied().unwrap_or(0)
+    }
+}
+
+/// An optimized assignment of every task to a region.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    /// Region per task, dense by task index.
+    pub region_of: Vec<RegionId>,
+    /// Estimated bytes crossing region boundaries under this placement
+    /// (the objective, before the rtt tie-break terms).
+    pub cross_region_bytes: u64,
+}
+
+impl Placement {
+    /// Greedy construction in topological order, then bounded local
+    /// search: each pass offers every unpinned task every region and takes
+    /// strict improvements of its incident-edge cost.
+    pub fn optimize(graph: &PipelineGraph, net: &WanTopology, input: &PlacementInput) -> Self {
+        let candidates: Vec<RegionId> = net.regions.iter().map(|r| r.id).collect();
+        let fallback = default_region(net);
+        let n = graph.n_tasks();
+        let mut region_of: Vec<RegionId> = (0..n)
+            .map(|i| input.pinned.get(&TaskId::new(i as u64)).copied().unwrap_or(fallback))
+            .collect();
+        if candidates.len() <= 1 {
+            let cross = total_cross_bytes(graph, &region_of, input);
+            return Self { region_of, cross_region_bytes: cross };
+        }
+        // greedy: topo order means producers are (usually) settled before
+        // their consumers weigh in
+        for t in graph.topo_order() {
+            if input.pinned.contains_key(&t) {
+                continue;
+            }
+            region_of[t.index()] = best_region(graph, net, input, &region_of, t, &candidates);
+        }
+        // local search to a fixpoint (or MAX_PASSES)
+        for _ in 0..MAX_PASSES {
+            let mut moved = false;
+            for ti in 0..n {
+                let t = TaskId::new(ti as u64);
+                if input.pinned.contains_key(&t) {
+                    continue;
+                }
+                let best = best_region(graph, net, input, &region_of, t, &candidates);
+                if best != region_of[ti]
+                    && incident_cost(graph, net, input, &region_of, t, best)
+                        < incident_cost(graph, net, input, &region_of, t, region_of[ti])
+                {
+                    region_of[ti] = best;
+                    moved = true;
+                }
+            }
+            if !moved {
+                break;
+            }
+        }
+        let cross = total_cross_bytes(graph, &region_of, input);
+        Self { region_of, cross_region_bytes: cross }
+    }
+
+    /// Render as task-name → region-name pins for
+    /// `PlacementSpec::regions` / `PipelineBuilder::place_at`.
+    pub fn as_pins(&self, graph: &PipelineGraph, net: &WanTopology) -> BTreeMap<String, String> {
+        self.region_of
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (graph.tasks[i].name.clone(), net.region(*r).name.clone()))
+            .collect()
+    }
+}
+
+/// The region deploy falls back to when nothing pins a task: the first
+/// datacentre, else region 0 (must match the coordinator's default).
+fn default_region(net: &WanTopology) -> RegionId {
+    net.regions.iter().find(|r| !r.is_edge).map(|r| r.id).unwrap_or(RegionId::new(0))
+}
+
+/// Cost of moving `bytes` of `class` data from `a` to `b`: free in-region;
+/// bytes-dominated with an rtt tie-break across regions; prohibitive when
+/// sovereignty denies the move.
+fn edge_cost(net: &WanTopology, class: DataClass, a: RegionId, b: RegionId, bytes: u64) -> u64 {
+    if a == b {
+        return 0;
+    }
+    match net.check(class, a, b) {
+        TransferVerdict::Denied => bytes.max(1).saturating_mul(DENIED_PENALTY),
+        _ => {
+            let rtt_us = net.link(a, b).map(|l| l.rtt.as_micros()).unwrap_or(80_000);
+            // bytes dominate; rtt/8 breaks ties among equal-byte options;
+            // +1 keeps any crossing strictly worse than none
+            bytes.saturating_mul(1024).saturating_add(rtt_us / 8).saturating_add(1)
+        }
+    }
+}
+
+/// Sum of [`edge_cost`] over every link incident to `t`, with `t` placed
+/// at `r` and everyone else at their current assignment.
+fn incident_cost(
+    graph: &PipelineGraph,
+    net: &WanTopology,
+    input: &PlacementInput,
+    region_of: &[RegionId],
+    t: TaskId,
+    r: RegionId,
+) -> u64 {
+    let mut cost = 0u64;
+    for l in &graph.links {
+        let bytes = input.bytes(l.wire_id);
+        let class = input.class(l.wire_id);
+        match l.from {
+            None if l.to == t => {
+                // external injection: the sensor end is immovable
+                if let Some(&src) = input.external_region.get(&l.wire_id) {
+                    cost = cost.saturating_add(edge_cost(net, class, src, r, bytes));
+                }
+            }
+            Some(from) if from == t && l.to == t => {} // self-loop: free
+            Some(from) if from == t => {
+                cost =
+                    cost.saturating_add(edge_cost(net, class, r, region_of[l.to.index()], bytes));
+            }
+            Some(from) if l.to == t => {
+                cost =
+                    cost.saturating_add(edge_cost(net, class, region_of[from.index()], r, bytes));
+            }
+            _ => {}
+        }
+    }
+    cost
+}
+
+fn best_region(
+    graph: &PipelineGraph,
+    net: &WanTopology,
+    input: &PlacementInput,
+    region_of: &[RegionId],
+    t: TaskId,
+    candidates: &[RegionId],
+) -> RegionId {
+    let mut best = region_of[t.index()];
+    let mut best_cost = incident_cost(graph, net, input, region_of, t, best);
+    for &r in candidates {
+        if r == best {
+            continue;
+        }
+        let c = incident_cost(graph, net, input, region_of, t, r);
+        // strict improvement only, candidates scanned in RegionId order:
+        // ties keep the incumbent, and among new optima the lowest id wins
+        if c < best_cost {
+            best = r;
+            best_cost = c;
+        }
+    }
+    best
+}
+
+/// The headline objective: profiled bytes whose producer and consumer
+/// regions differ (external injections included).
+fn total_cross_bytes(graph: &PipelineGraph, region_of: &[RegionId], input: &PlacementInput) -> u64 {
+    let mut total = 0u64;
+    for l in &graph.links {
+        let to_r = region_of[l.to.index()];
+        let from_r = match l.from {
+            Some(f) => region_of[f.index()],
+            None => match input.external_region.get(&l.wire_id) {
+                Some(&r) => r,
+                None => continue,
+            },
+        };
+        if from_r != to_r {
+            total = total.saturating_add(input.bytes(l.wire_id));
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::demo_topology;
+    use crate::spec::parse;
+
+    /// sensors (pinned, edge) → summarize (free) → train (pinned, central)
+    fn fleet() -> PipelineGraph {
+        PipelineGraph::build(
+            &parse("[fleet]\n(readings) summarize (digest)\n(digest) train (model)\n").unwrap(),
+        )
+    }
+
+    #[test]
+    fn summarizer_moves_to_the_heavy_edge() {
+        let g = fleet();
+        let net = demo_topology(2);
+        let edge0 = net.by_name("edge-0").unwrap();
+        let central = net.by_name("central").unwrap();
+        let mut input = PlacementInput::default();
+        input.pinned.insert(g.task_id("train").unwrap(), central);
+        // raw readings are huge and born at the edge; digests are tiny
+        input.wire_bytes.insert(g.wires.id("readings").unwrap(), 10_000_000);
+        input.wire_bytes.insert(g.wires.id("digest").unwrap(), 10_000);
+        input.external_region.insert(g.wires.id("readings").unwrap(), edge0);
+        let p = Placement::optimize(&g, &net, &input);
+        assert_eq!(p.region_of[g.task_id("summarize").unwrap().index()], edge0);
+        assert_eq!(p.region_of[g.task_id("train").unwrap().index()], central);
+        // only the tiny digest crosses regions now
+        assert_eq!(p.cross_region_bytes, 10_000);
+    }
+
+    #[test]
+    fn sovereignty_penalty_keeps_raw_in_zone() {
+        let g = fleet();
+        let net = demo_topology(2); // edge-0 is us-zone, edge-1/eu-dc are eu
+        let edge1 = net.by_name("edge-1").unwrap(); // eu edge
+        let eu_dc = net.by_name("eu-dc").unwrap();
+        let mut input = PlacementInput::default();
+        // readings are Raw, born at the EU edge, and heavy; train is free.
+        // Without the penalty, central (the default-region fallback and a
+        // us-zone datacentre) would tie-break by rtt — with it, every
+        // us-zone candidate costs bytes * DENIED_PENALTY and loses.
+        input.wire_bytes.insert(g.wires.id("readings").unwrap(), 5_000_000);
+        input.wire_class.insert(g.wires.id("readings").unwrap(), DataClass::Raw);
+        input.external_region.insert(g.wires.id("readings").unwrap(), edge1);
+        let p = Placement::optimize(&g, &net, &input);
+        let summ = p.region_of[g.task_id("summarize").unwrap().index()];
+        let zone = &net.region(summ).zone;
+        assert_eq!(zone, "eu", "raw consumer stays in the data's zone");
+        assert!(summ == edge1 || summ == eu_dc);
+    }
+
+    #[test]
+    fn no_profile_is_the_status_quo() {
+        // with nothing profiled and nothing pinned, everything lands on
+        // the default datacentre — exactly what deploy would do anyway
+        let g = fleet();
+        let net = demo_topology(2);
+        let p = Placement::optimize(&g, &net, &PlacementInput::default());
+        let central = net.by_name("central").unwrap();
+        assert!(p.region_of.iter().all(|r| *r == central));
+        assert_eq!(p.cross_region_bytes, 0);
+    }
+
+    #[test]
+    fn as_pins_round_trips_names() {
+        let g = fleet();
+        let net = demo_topology(1);
+        let p = Placement::optimize(&g, &net, &PlacementInput::default());
+        let pins = p.as_pins(&g, &net);
+        assert_eq!(pins.len(), 2);
+        assert_eq!(pins.get("train").map(String::as_str), Some("central"));
+    }
+}

@@ -156,11 +156,11 @@ fn cache_policy_changes_fetch_costs() {
 
 #[test]
 fn rho_decides_storage_strategy() {
-    let run = |rho: f64, placement: PlacementStrategy| -> u64 {
+    let run = |rho: f64, storage_placement: PlacementStrategy| -> u64 {
         let spec = parse("[r]\n(x) work (out)\n").unwrap();
         let cfg = DeployConfig {
             storage: StorageConfig::with_rho(rho, 64 * 1024),
-            placement,
+            storage_placement,
             cache_policy: PurgePolicy::Ttl(SimDuration::micros(0)), // no cache help
             ..Default::default()
         };

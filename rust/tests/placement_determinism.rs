@@ -1,0 +1,529 @@
+//! Placement neutrality: the sharded runtime's byte-identical contract.
+//!
+//! A pipeline's *semantic* placement — which region each task lives in —
+//! legitimately changes the books (WAN physics, sovereignty verdicts).
+//! Its *operational* placement — how many simulated nodes host those
+//! tasks, and which node each task is pinned to — must change NOTHING:
+//! sink books, the commit log, wire currency, provenance passports,
+//! checkpoint logs, dead letters and the headline counters must be
+//! byte-identical for every node count and every node-pin assignment,
+//! with or without the flight recorder. The span stream itself must also
+//! match once movement notes (`SpanEvent::Transfer`) are projected out —
+//! like scheduling notes, they describe which partition ran the pipeline,
+//! not what it computed.
+//!
+//! The CI matrix runs this file under `KOALJA_NODES={1,4}` ×
+//! `KOALJA_WORKERS=4`; the tests below additionally pin the node axis
+//! explicitly (env mutation is racy under the multi-threaded harness).
+//!
+//! The directed half covers the sovereignty contract at the exchange:
+//! a Denied raw cross-zone wire moves zero bytes through the exchange and
+//! surfaces as a structured [`SovereigntyError`] with did-you-mean-
+//! summarize guidance, while the same wire re-classed as Summary crosses
+//! and is booked per channel.
+
+use koalja::prelude::*;
+use koalja::util::{Rng, TaskId};
+use std::collections::BTreeMap;
+
+/// Multi-node arm width: `KOALJA_NODES` (the CI matrix leg) or 4.
+fn par_nodes() -> usize {
+    default_nodes().max(1)
+}
+
+// ---------------------------------------------------------------------
+// random pipeline + region assignment + injection plan
+// ---------------------------------------------------------------------
+
+const REGIONS: [&str; 4] = ["central", "eu-dc", "edge-0", "edge-1"];
+
+struct Case {
+    text: String,
+    /// task name -> region name; identical across every arm (semantic).
+    regions: BTreeMap<String, String>,
+    /// (external wire, at_ms, origin region index, tensor data).
+    plan: Vec<(String, u64, usize, Vec<f32>)>,
+}
+
+fn random_case(r: &mut Rng) -> Case {
+    let n_tasks = 2 + r.range(0, 6);
+    let mut produced: Vec<String> = Vec::new();
+    let mut externals: Vec<String> = Vec::new();
+    let mut text = String::from("[placecase]\n");
+    let mut regions = BTreeMap::new();
+    for ti in 0..n_tasks {
+        let n_in = 1 + r.range(0, 2);
+        let mut inputs: Vec<String> = Vec::new();
+        for _ in 0..n_in {
+            let wire = if !produced.is_empty() && r.bool(0.55) {
+                produced[r.range(0, produced.len())].clone()
+            } else {
+                let w = format!("ext{}", r.range(0, 3));
+                if !externals.contains(&w) {
+                    externals.push(w.clone());
+                }
+                w
+            };
+            if inputs.contains(&wire) {
+                continue;
+            }
+            let token = match r.range(0, 5) {
+                0 => format!("{wire}[{}]", 2 + r.range(0, 3)),
+                1 => format!("{wire}[4/2]"),
+                _ => wire.clone(),
+            };
+            inputs.push(token);
+        }
+        let n_out = 1 + r.range(0, 2);
+        let outputs: Vec<String> = (0..n_out).map(|k| format!("t{ti}o{k}")).collect();
+        produced.extend(outputs.iter().cloned());
+        text.push_str(&format!("({}) task{ti} ({})\n", inputs.join(", "), outputs.join(", ")));
+        // every task gets a random — but arm-invariant — region
+        regions.insert(format!("task{ti}"), REGIONS[r.range(0, REGIONS.len())].to_string());
+    }
+    let mut plan = Vec::new();
+    for w in &externals {
+        let k = 3 + r.range(0, 6);
+        for _ in 0..k {
+            let at_ms = r.range(0, 40) as u64;
+            let origin = r.range(0, REGIONS.len());
+            let data: Vec<f32> = if r.bool(0.3) {
+                vec![1.0, 2.0, 3.0, 4.0] // repeated content -> memo hits
+            } else {
+                (0..4).map(|_| (r.range(0, 1000) as f32) / 10.0).collect()
+            };
+            plan.push((w.clone(), at_ms, origin, data));
+        }
+    }
+    Case { text, regions, plan }
+}
+
+/// Random node pins for some of the tasks — legal values deliberately
+/// exceed the node count sometimes (the plan wraps pins modulo nodes).
+fn random_node_pins(case: &Case, r: &mut Rng) -> BTreeMap<String, usize> {
+    let mut pins = BTreeMap::new();
+    for task in case.regions.keys() {
+        if r.bool(0.5) {
+            pins.insert(task.clone(), r.range(0, 7));
+        }
+    }
+    pins
+}
+
+fn case_code() -> Box<dyn TaskCode> {
+    Box::new(PortFn::new(|ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
+        let n_ports = io.outs().len();
+        for av in io.inputs.snapshot().all_avs() {
+            let p = ctx.fetch(av)?;
+            for pi in 0..n_ports {
+                let port = io.out(pi)?;
+                let out = match p.as_tensor() {
+                    Some((shape, data)) => Payload::tensor(
+                        shape,
+                        data.iter().map(|x| x * (pi as f32 + 2.0) + 1.0).collect(),
+                    ),
+                    None => p.clone(),
+                };
+                io.emitter.emit(port, out);
+            }
+        }
+        Ok(())
+    }))
+}
+
+// ---------------------------------------------------------------------
+// canonical byte dump of every placement-invariant book
+// ---------------------------------------------------------------------
+
+/// One arm on `nodes` simulated nodes with the given node pins. Returns
+/// (canonical book dump, span projection). The projection drops
+/// scheduling notes (worker strategy) and movement notes (node
+/// partition) — the two sanctioned differences between arms.
+fn run_arm(
+    case: &Case,
+    nodes: usize,
+    node_pins: &BTreeMap<String, usize>,
+    trace: bool,
+) -> (String, String) {
+    use std::fmt::Write as _;
+    let spec = parse(&case.text).expect("generated wirings parse");
+    let mut placement = PlacementSpec::on_nodes(nodes);
+    placement.regions = case.regions.clone();
+    placement.node_pins = node_pins.clone();
+    let cfg = DeployConfig {
+        topology: demo_topology(2),
+        placement,
+        trace,
+        ..Default::default()
+    };
+    let mut c = Coordinator::deploy(&spec, cfg).unwrap();
+    for t in 0..c.graph.n_tasks() {
+        let name = c.graph.task(TaskId::new(t as u64)).name.clone();
+        c.set_code(&name, case_code()).unwrap();
+    }
+    let topo = demo_topology(2);
+    for (wire, at_ms, origin, data) in &case.plan {
+        c.inject_at(
+            wire,
+            Payload::tensor(&[4], data.clone()),
+            DataClass::Summary,
+            topo.by_name(REGIONS[*origin]).unwrap(),
+            SimTime::millis(*at_ms),
+        )
+        .unwrap();
+    }
+    c.run_until_idle();
+
+    // the exchange's two ledgers must agree in every arm
+    assert_eq!(
+        c.exchange().totals(),
+        c.exchange().recomputed_totals(),
+        "exchange totals drifted from the per-channel stats"
+    );
+    if nodes == 1 {
+        assert_eq!(c.exchange().totals(), TransferStat::default(), "single node moves nothing");
+    }
+
+    let wire_names: Vec<String> = c.graph.wires.names().to_vec();
+    let mut s = String::new();
+    writeln!(s, "== sink book ==").unwrap();
+    for (w, recs) in c.collected.iter() {
+        for rec in recs {
+            writeln!(s, "{w} @{:?} av={:?} payload={:?}", rec.at, rec.av, rec.payload).unwrap();
+        }
+    }
+    writeln!(s, "== commit log ==").unwrap();
+    for sc in c.commit_log() {
+        writeln!(s, "{sc:?}").unwrap();
+    }
+    writeln!(s, "== wire currency ==").unwrap();
+    for w in &wire_names {
+        writeln!(s, "{w}: {:?}", c.latest_on_wire.get(w)).unwrap();
+    }
+    writeln!(s, "== passports ==").unwrap();
+    let mut av_ids: Vec<_> = c.plat.prov.passports_iter().map(|(id, _)| *id).collect();
+    av_ids.sort();
+    for id in av_ids {
+        let p = c.plat.prov.passport(id).unwrap();
+        writeln!(s, "{id}: parents={:?} stamps={:?}", p.parents, p.stamps).unwrap();
+    }
+    writeln!(s, "== checkpoint logs ==").unwrap();
+    for t in 0..c.graph.n_tasks() {
+        let id = TaskId::new(t as u64);
+        writeln!(s, "task{t}: {:?}", c.plat.prov.checkpoint_log(id)).unwrap();
+    }
+    writeln!(s, "== dead letters ==").unwrap();
+    for t in 0..c.graph.n_tasks() {
+        let id = TaskId::new(t as u64);
+        let book = c.dead_letter_book(id);
+        writeln!(s, "task{t}: dropped={} letters={}", book.dropped(), book.letters().count())
+            .unwrap();
+    }
+    writeln!(s, "== counters ==").unwrap();
+    writeln!(
+        s,
+        "task_runs={} memo_hits={} task_errors={} cold_starts={} denied={} sov_errors={} \
+         cache={}h/{}m stamps={} puts={} gets={} events={} wan={} joules={:.9}",
+        c.plat.metrics.task_runs,
+        c.plat.metrics.get("memo_hits"),
+        c.plat.metrics.get("task_errors"),
+        c.plat.metrics.get("cold_starts"),
+        c.plat.metrics.get("sovereignty_denied"),
+        c.plat.metrics.get("sovereignty_errors"),
+        c.plat.metrics.cache_hits,
+        c.plat.metrics.cache_misses,
+        c.plat.prov.stamp_count,
+        c.plat.store.puts,
+        c.plat.store.gets,
+        c.events_processed,
+        c.plat.metrics.bytes(koalja::obs::NetTier::Wan),
+        c.plat.metrics.joules,
+    )
+    .unwrap();
+
+    let mut spans = String::new();
+    for span in c.obs().rec.spans() {
+        if span.event.is_movement_note() {
+            continue;
+        }
+        if let SpanEvent::Firing { kind, .. } = span.event {
+            if kind.is_scheduling_note() {
+                continue;
+            }
+        }
+        writeln!(spans, "{:?} {:?}", span.at, span.event).unwrap();
+    }
+    (s, spans)
+}
+
+fn assert_books_match(case_idx: usize, arm: &str, baseline: &str, books: &str, spec: &str) {
+    if baseline != books {
+        for (lb, la) in baseline.lines().zip(books.lines()) {
+            assert_eq!(lb, la, "case {case_idx} ({arm}) diverged\nspec:\n{spec}");
+        }
+        panic!("case {case_idx}: books differ in length only ({arm})\nspec:\n{spec}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// the property
+// ---------------------------------------------------------------------
+
+#[test]
+fn node_count_and_pins_produce_byte_identical_books() {
+    let n = par_nodes().max(4);
+    let mut r = rng(0x9_1ACE);
+    for case_idx in 0..25 {
+        let case = random_case(&mut r);
+        let no_pins = BTreeMap::new();
+        let pins = random_node_pins(&case, &mut r);
+        let (baseline, _) = run_arm(&case, 1, &no_pins, false);
+        for (nodes, node_pins, trace) in [
+            (1, &no_pins, true),
+            (n, &no_pins, false),
+            (n, &no_pins, true),
+            (n, &pins, false),
+        ] {
+            let (books, _) = run_arm(&case, nodes, node_pins, trace);
+            let arm = format!("nodes={nodes} pins={} trace={trace}", node_pins.len());
+            assert_books_match(case_idx, &arm, &baseline, &books, &case.text);
+        }
+    }
+}
+
+#[test]
+fn span_stream_is_identical_across_node_counts() {
+    // with movement notes projected out, the retained span stream on one
+    // node and on N must match event for event — the multi-node analogue
+    // of the workers-axis span contract
+    let n = par_nodes().max(4);
+    let mut r = rng(0x5_0DE5);
+    for case_idx in 0..12 {
+        let case = random_case(&mut r);
+        let pins = random_node_pins(&case, &mut r);
+        let (_, single) = run_arm(&case, 1, &BTreeMap::new(), true);
+        let (_, sharded) = run_arm(&case, n, &pins, true);
+        assert!(!single.is_empty(), "case {case_idx}: traced run recorded no spans");
+        if single != sharded {
+            for (ls, lp) in single.lines().zip(sharded.lines()) {
+                assert_eq!(
+                    ls, lp,
+                    "case {case_idx}: span streams diverged (nodes 1 vs {n})\nspec:\n{}",
+                    case.text
+                );
+            }
+            panic!(
+                "case {case_idx}: span streams differ in length only (nodes 1 vs {n})\n\
+                 spec:\n{}",
+                case.text
+            );
+        }
+    }
+}
+
+#[test]
+fn workers_and_nodes_compose() {
+    // node partition x worker pool: on a multi-node plan the partition
+    // *is* the schedule, but deploying with any worker width must still
+    // produce the sequential books
+    let mut r = rng(0xC0_FFEE);
+    let case = random_case(&mut r);
+    let spec_deploy = |nodes: usize, workers: usize| -> String {
+        let spec = parse(&case.text).unwrap();
+        let mut placement = PlacementSpec::on_nodes(nodes);
+        placement.regions = case.regions.clone();
+        let cfg = DeployConfig {
+            topology: demo_topology(2),
+            placement,
+            workers,
+            ..Default::default()
+        };
+        let mut c = Coordinator::deploy(&spec, cfg).unwrap();
+        for t in 0..c.graph.n_tasks() {
+            let name = c.graph.task(TaskId::new(t as u64)).name.clone();
+            c.set_code(&name, case_code()).unwrap();
+        }
+        let topo = demo_topology(2);
+        for (wire, at_ms, origin, data) in &case.plan {
+            c.inject_at(
+                wire,
+                Payload::tensor(&[4], data.clone()),
+                DataClass::Summary,
+                topo.by_name(REGIONS[*origin]).unwrap(),
+                SimTime::millis(*at_ms),
+            )
+            .unwrap();
+        }
+        c.run_until_idle();
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        for (w, recs) in c.collected.iter() {
+            for rec in recs {
+                writeln!(s, "{w} {:?} {:?} {:?}", rec.at, rec.av, rec.payload).unwrap();
+            }
+        }
+        s
+    };
+    let baseline = spec_deploy(1, 1);
+    for (nodes, workers) in [(1, 4), (4, 1), (4, 4)] {
+        assert_eq!(
+            baseline,
+            spec_deploy(nodes, workers),
+            "nodes={nodes} workers={workers} perturbed the sink book"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// directed: the sovereignty contract at the exchange
+// ---------------------------------------------------------------------
+
+/// producer (EU edge) -> consumer (US datacentre), payload class chosen
+/// by the caller. Returns the drained coordinator.
+fn cross_zone_fleet(class: DataClass) -> Coordinator {
+    let spec = parse("[zone]\n(x) producer (mid)\n(mid) consumer (out)\n").unwrap();
+    let mut placement = PlacementSpec::on_nodes(2);
+    placement.regions.insert("producer".into(), "edge-1".into()); // eu zone
+    placement.regions.insert("consumer".into(), "central".into()); // us zone
+    let cfg = DeployConfig {
+        topology: demo_topology(2),
+        placement,
+        trace: true,
+        ..Default::default()
+    };
+    let mut c = Coordinator::deploy(&spec, cfg).unwrap();
+    c.set_code(
+        "producer",
+        Box::new(PortFn::new(move |ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
+            let port = io.out(0)?;
+            for av in io.inputs.snapshot().all_avs() {
+                let p = ctx.fetch(av)?;
+                io.emitter.emit_class(port, p, class);
+            }
+            Ok(())
+        })),
+    )
+    .unwrap();
+    let eu_edge = c.plat.net.by_name("edge-1").unwrap();
+    for i in 0..5u64 {
+        c.inject_at(
+            "x",
+            Payload::tensor(&[4], vec![i as f32; 4]),
+            DataClass::Summary,
+            eu_edge,
+            SimTime::millis(i * 10),
+        )
+        .unwrap();
+    }
+    c.run_until_idle();
+    c
+}
+
+#[test]
+fn denied_raw_transfer_moves_zero_bytes_and_surfaces_guidance() {
+    let c = cross_zone_fleet(DataClass::Raw);
+    // the wire is cross-node AND cross-zone: the channel exists, booked
+    // every refusal, and moved not one byte
+    let mid = c.graph.wires.id("mid").unwrap();
+    let ch = c
+        .exchange()
+        .channels()
+        .map(|(_, ch)| ch)
+        .find(|ch| ch.wire == mid)
+        .expect("cross-node wire has an exchange channel");
+    assert!(ch.stat.denied > 0, "every delivery on 'mid' is refused");
+    assert_eq!(ch.stat.bytes, 0, "a Denied raw transfer moves zero bytes");
+    assert_eq!(ch.stat.transfers, 0, "no granted transfers on a denied wire");
+    assert_eq!(c.exchange().totals().bytes, 0);
+
+    // the silent-drop books still hold (denial is not a task error)...
+    assert!(c.plat.metrics.get("sovereignty_denied") > 0);
+    assert_eq!(c.plat.metrics.get("task_errors"), 0);
+    assert_eq!(c.collected_count("out"), 0, "nothing crossed, nothing sunk");
+
+    // ...and the structured error surfaces with actionable guidance
+    let errs = c.sovereignty_errors();
+    assert_eq!(errs.len() as u64, c.plat.metrics.get("sovereignty_errors"));
+    assert!(!errs.is_empty());
+    let e = &errs[0];
+    assert_eq!(e.wire, mid);
+    assert!(e.error.contains("zero bytes moved"), "error states the guarantee: {}", e.error);
+    assert!(
+        e.error.to_lowercase().contains("summar"),
+        "error suggests summarizing first: {}",
+        e.error
+    );
+    assert!(e.error.contains("consumer"), "error names the blocked task: {}", e.error);
+}
+
+#[test]
+fn summary_class_crosses_and_is_booked_per_channel() {
+    let c = cross_zone_fleet(DataClass::Summary);
+    let mid = c.graph.wires.id("mid").unwrap();
+    let ch = c
+        .exchange()
+        .channels()
+        .map(|(_, ch)| ch)
+        .find(|ch| ch.wire == mid)
+        .expect("cross-node wire has an exchange channel");
+    assert_eq!(ch.stat.denied, 0);
+    assert!(ch.stat.transfers > 0, "summaries cross the zone boundary");
+    assert!(ch.stat.bytes > 0);
+    assert!(ch.stat.wan_us > 0, "cross-region channels ride the WAN");
+    assert!(c.collected_count("out") > 0);
+    assert!(c.sovereignty_errors().is_empty());
+    assert_eq!(c.plat.metrics.get("sovereignty_errors"), 0);
+    // movement notes were stamped for the granted transfers
+    let transfers = c
+        .obs()
+        .rec
+        .spans()
+        .filter(|s| matches!(s.event, SpanEvent::Transfer { wire, .. } if wire == mid))
+        .count() as u64;
+    assert_eq!(transfers, ch.stat.transfers);
+}
+
+#[test]
+fn builder_nodes_and_injection_links_stay_off_the_exchange() {
+    // same-region two-node split (node pins force the tasks apart —
+    // co-located regions would otherwise share a node): the cross-node
+    // wire rides the LAN tier, and the injection link (no producer
+    // task) never gets a channel
+    let placement = PlacementSpec::on_nodes(2).pin_node("a", 0).pin_node("b", 1);
+    let mut pipe = PipelineBuilder::new("lan")
+        .task("a").reads("x").emits("m")
+        .task("b").reads("m").emits("out")
+        .nodes(2)
+        .place_at("a", "central")
+        .place_at("b", "central")
+        .deploy(DeployConfig { topology: demo_topology(1), placement, ..Default::default() })
+        .unwrap();
+    let src = pipe.source("x").unwrap();
+    for i in 0..3u64 {
+        src.inject_at(
+            &mut pipe,
+            Payload::scalar(i as f32),
+            DataClass::Summary,
+            RegionId::new(0),
+            SimTime::millis(i),
+        );
+    }
+    pipe.run_until_idle();
+    assert_eq!(pipe.shard().nodes, 2, "builder .nodes(2) reaches the shard plan");
+    assert_eq!(pipe.shard().occupied_nodes(), 2, "node pins split the co-located tasks");
+    let x = pipe.graph.wires.id("x").unwrap();
+    let m = pipe.graph.wires.id("m").unwrap();
+    let mut saw_m = false;
+    for (_, ch) in pipe.exchange().channels() {
+        assert_ne!(ch.wire, x, "injection links never ride the exchange");
+        if ch.wire == m {
+            saw_m = true;
+            assert_eq!(ch.from_region, ch.to_region);
+            assert!(matches!(ch.tier, koalja::obs::NetTier::Lan));
+            assert!(ch.stat.transfers > 0, "the a->b wire moved data cross-node");
+            assert_eq!(ch.stat.wan_us, 0, "LAN channels charge no WAN time");
+        }
+    }
+    assert!(saw_m, "the cross-node wire got an exchange channel");
+    assert!(pipe.collected_count("out") > 0);
+}

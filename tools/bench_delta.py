@@ -35,6 +35,12 @@ supervision layer is one predicted branch per firing, so the off arm
 regressing > OBS_OFF_FAIL_PCT vs baseline fails — shipping the feature
 disabled must be free. The on arm (policies installed, zero faults) is
 trajectory: its overhead_pct rides along as metadata.
+
+The edge-vs-central report carries a `transfer_reduction` metric:
+central-arm WAN bytes divided by the optimized-placement arm's. It is
+an in-report gate (no baseline needed, so it also runs on seed
+commits): below EDGE_MIN_REDUCTION fails — the placement optimizer is
+not paying for itself; below EDGE_GOOD_REDUCTION warns.
 """
 
 import json
@@ -49,6 +55,12 @@ PAR_MIN_SPEEDUP = 1.2
 OBS_OFF_FAIL_PCT = 5.0
 # In-report gate: trace-on ns/event may exceed trace-off by at most this.
 OBS_ON_MAX_OVERHEAD_PCT = 15.0
+# In-report gates for the edge-vs-central bench: the optimized placement
+# must move at least EDGE_MIN_REDUCTION-fold fewer WAN bytes than the
+# centralized arm (hard floor), and is expected to clear
+# EDGE_GOOD_REDUCTION (warns below).
+EDGE_MIN_REDUCTION = 5.0
+EDGE_GOOD_REDUCTION = 10.0
 
 # Environment/config metadata recorded in the report for context, not
 # performance measurements — excluded from the regression comparison
@@ -62,6 +74,9 @@ METADATA_LABELS = {
     "par/workers",
     "obs-overhead/overhead_pct",
     "fault-overhead/overhead_pct",
+    # edge-vs-central workload shape knobs (config, not measurements)
+    "edges",
+    "chunk_rows",
 }
 
 
@@ -141,6 +156,31 @@ def obs_overhead_check(fresh):
     return 0
 
 
+def edge_central_check(fresh):
+    """Gate the edge-placement payoff, fresh report only.
+
+    Reads `transfer_reduction` (central WAN bytes / optimized-placement
+    WAN bytes) from the fresh report; < EDGE_MIN_REDUCTION fails,
+    < EDGE_GOOD_REDUCTION warns. Returns 1 on failure, 0 otherwise
+    (including when the metric is absent — other benches' reports).
+    """
+    red = fresh.get("transfer_reduction")
+    if red is None:
+        return 0
+    value = red[0]
+    if value < EDGE_MIN_REDUCTION:
+        print(f"bench_delta: FAIL — transfer_reduction = {value:.1f}x, below the "
+              f"{EDGE_MIN_REDUCTION:.0f}x floor (edge placement is not paying for itself)")
+        return 1
+    if value < EDGE_GOOD_REDUCTION:
+        print(f"bench_delta: warn — transfer_reduction = {value:.1f}x, below the "
+              f"{EDGE_GOOD_REDUCTION:.0f}x target (WAN savings thinner than the paper's case)")
+        return 0
+    print(f"{'edge-vs-central transfer_reduction':44} {value:12.1f}x  clears the "
+          f"{EDGE_GOOD_REDUCTION:.0f}x target")
+    return 0
+
+
 def main():
     if len(sys.argv) != 3:
         print(__doc__)
@@ -152,9 +192,9 @@ def main():
         print("bench_delta: no baseline measurements to compare against "
               "(seed commit or unreadable baseline) — recording first trajectory point")
         parallel_speedup_check(fresh)
-        # the recorder-overhead gate is an in-report comparison: it holds
-        # even before any baseline exists
-        return 1 if obs_overhead_check(fresh) else 0
+        # the in-report gates (recorder overhead, edge-placement payoff)
+        # hold even before any baseline exists
+        return 1 if obs_overhead_check(fresh) or edge_central_check(fresh) else 0
 
     common = sorted((set(base) & set(fresh)) - METADATA_LABELS)
     only_base = sorted(set(base) - set(fresh) - METADATA_LABELS)
@@ -200,13 +240,14 @@ def main():
 
     warnings += parallel_speedup_check(fresh)
     obs_failed = obs_overhead_check(fresh)
+    edge_failed = edge_central_check(fresh)
 
     if worst_fail:
         label, pct = worst_fail
         print(f"\nbench_delta: FAIL — {label} regressed {pct:.1f}% "
               f"vs the committed baseline")
         return 1
-    if obs_failed:
+    if obs_failed or edge_failed:
         return 1
     if warnings:
         print(f"\nbench_delta: {warnings} metric(s) regressed > {WARN_PCT:.0f}% (warning only)")
