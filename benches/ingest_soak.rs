@@ -1,0 +1,221 @@
+//! Soak benchmark for the streaming ingestion subsystem (see
+//! `rust/src/ingest/`): a producer thread pushes wall-clock-paced events
+//! through a bounded [`Feed`] while the main thread pumps, measuring the
+//! three numbers the subsystem exists to optimize:
+//!
+//! - `sustained_events_per_sec` — end-to-end absorbed rate from first
+//!   push to drained commit log (gated by tools/bench_delta.py: a >35%
+//!   drop fails CI, same contract as ns_per_event).
+//! - `p50_us` / `p99_us` — wall-clock enqueue-to-commit latency. The
+//!   producer stamps each event before `push` (so queue wait under
+//!   backpressure counts), the pump loop stamps each commit-log growth
+//!   step, and commit order = push order (single feed, deterministic
+//!   merged instant walk), so the i-th commit resolves the i-th stamp.
+//! - `mean_batch` — events per `inject_batch_at_id` call. Virtual
+//!   timestamps are wall arrival times quantized to `WINDOW_US` windows,
+//!   so a higher offered rate packs more events per instant and the
+//!   coalescing payoff must *grow* with load (bench_delta.py warns when
+//!   the highest offered rate's mean batch fails to beat the lowest's —
+//!   the adaptive batcher not engaging).
+//!
+//! Offered rates are spin-paced on the producer thread; each arm deploys
+//! a fresh single-task pipeline so the cumulative `IngestStats` are
+//! per-arm. `KOALJA_SOAK_EVENTS` bounds the per-arm event count (CI uses
+//! a small budget; see ci.sh / .github/workflows/ci.yml).
+//!
+//! Each run rewrites `BENCH_ingest_soak.json` (schema in
+//! `benchkit::write_json`); ci.sh archives it per run and diffs it
+//! against the committed baseline.
+
+use koalja::benchkit::{f, row, table_header, write_json, Measurement};
+use koalja::ingest::DEFAULT_FEED_CAPACITY;
+use koalja::prelude::*;
+
+use std::time::{Duration, Instant};
+
+const BENCH_JSON: &str = "BENCH_ingest_soak.json";
+
+/// Virtual-time quantization window: wall arrival micros are rounded up
+/// to this grid, so events arriving within one window share an instant
+/// (and therefore an injection batch).
+const WINDOW_US: u64 = 64;
+
+/// Per-arm event count (override with KOALJA_SOAK_EVENTS).
+const DEFAULT_EVENTS: u64 = 30_000;
+
+/// Offered wall rates, thousands of events/s. The spread must be wide
+/// enough that per-window occupancy (rate * 64us) crosses from ~1-2
+/// events to tens — that growth is what the mean_batch gate watches.
+const OFFERED_K: [u64; 3] = [25, 100, 400];
+
+/// Producer-side queue capacity: deliberately the library default so the
+/// soak exercises the same credit window users get.
+const CAPACITY: usize = DEFAULT_FEED_CAPACITY;
+
+struct ArmResult {
+    sustained_events_per_sec: f64,
+    mean_batch: f64,
+    p50_us: f64,
+    p99_us: f64,
+    largest_batch: usize,
+    parked: u64,
+}
+
+fn soak_events() -> u64 {
+    std::env::var("KOALJA_SOAK_EVENTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(DEFAULT_EVENTS)
+}
+
+/// One soak arm: fresh pipeline, one producer spin-paced at
+/// `offered_k * 1000` events/s, main thread pumping `ingest_cycle` in a
+/// tight loop and recording commit-log growth stamps for the latency
+/// distribution.
+fn run_arm(offered_k: u64, total: u64) -> ArmResult {
+    let spec = parse("[soak]\n(raw) smooth (out)\n").unwrap();
+    let cfg = DeployConfig { provenance: false, trace: false, ..Default::default() };
+    let mut c = Coordinator::deploy(&spec, cfg).unwrap();
+    c.set_code(
+        "smooth",
+        Box::new(PortFn::new(|ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
+            let mut fetched = None;
+            for av in io.inputs.all() {
+                fetched = Some(ctx.fetch(av)?);
+            }
+            let p = fetched.expect("snapshot has one input");
+            let port = io.out(0)?;
+            io.emitter.emit(port, p);
+            Ok(())
+        })),
+    )
+    .unwrap();
+    let feed = c.open_feed_with("raw", CAPACITY).unwrap();
+
+    let rate = (offered_k * 1000) as f64;
+    let start = Instant::now();
+    let (stamps, commits) = std::thread::scope(|s| {
+        let producer = {
+            let feed = feed.clone();
+            s.spawn(move || {
+                let mut stamps: Vec<Duration> = Vec::with_capacity(total as usize);
+                let mut last_window = 0u64;
+                for i in 0..total {
+                    // spin-pace to the offered rate (sleep granularity is
+                    // far too coarse at these periods)
+                    let due = Duration::from_secs_f64(i as f64 / rate);
+                    while start.elapsed() < due {
+                        std::hint::spin_loop();
+                    }
+                    let stamp = start.elapsed();
+                    let window = (stamp.as_micros() as u64 / WINDOW_US + 1) * WINDOW_US;
+                    if last_window != 0 && window > last_window {
+                        feed.advance(SimTime::micros(last_window)).unwrap();
+                    }
+                    last_window = window;
+                    stamps.push(stamp);
+                    feed.push(
+                        SimTime::micros(window),
+                        Payload::scalar(i as f32),
+                        DataClass::Summary,
+                        RegionId::new(0),
+                    )
+                    .unwrap();
+                }
+                feed.close();
+                stamps
+            })
+        };
+
+        // Pump loop: one (cumulative commits, wall) stamp per growth step.
+        let mut commits: Vec<(u64, Duration)> = vec![(0, start.elapsed())];
+        let deadline = Duration::from_secs(120);
+        loop {
+            let progress = c.ingest_cycle();
+            let cum = c.commit_log().len() as u64;
+            if commits.last().map(|l| l.0) != Some(cum) {
+                commits.push((cum, start.elapsed()));
+            }
+            if !progress {
+                if feed.is_closed() && cum >= total {
+                    break;
+                }
+                assert!(start.elapsed() < deadline, "soak arm wedged: {cum}/{total} commits");
+                std::thread::yield_now();
+            }
+        }
+        (producer.join().expect("producer thread"), commits)
+    });
+    let wall = start.elapsed().as_secs_f64().max(1e-9);
+    c.run_until_idle();
+    assert_eq!(c.commit_log().len() as u64, total, "every event must commit exactly once");
+
+    // i-th commit <-> i-th push: binary-search the first growth step
+    // that covers index i.
+    let mut lat_us: Vec<f64> = stamps
+        .iter()
+        .enumerate()
+        .map(|(i, &pushed)| {
+            let k = commits.partition_point(|&(cum, _)| cum <= i as u64);
+            let committed = commits[k.min(commits.len() - 1)].1;
+            committed.saturating_sub(pushed).as_secs_f64() * 1e6
+        })
+        .collect();
+    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| lat_us[((lat_us.len() - 1) as f64 * p) as usize];
+
+    let stats = c.ingest_stats().expect("feed was opened").clone();
+    assert_eq!(stats.events, total);
+    ArmResult {
+        sustained_events_per_sec: total as f64 / wall,
+        mean_batch: stats.mean_batch(),
+        p50_us: pct(0.50),
+        p99_us: pct(0.99),
+        largest_batch: stats.largest_batch,
+        parked: stats.parked,
+    }
+}
+
+fn main() {
+    let total = soak_events();
+    let mut report: Vec<Measurement> = vec![
+        Measurement::new("ingest-soak/events", total as f64, "count"),
+        Measurement::new("ingest-soak/window_us", WINDOW_US as f64, "count"),
+        Measurement::new("ingest-soak/capacity", CAPACITY as f64, "count"),
+    ];
+
+    table_header(
+        &format!("ingest soak ({total} events/arm, {WINDOW_US}us windows)"),
+        &["offered", "sustained ev/s", "mean batch", "largest", "p50 us", "p99 us", "parked"],
+    );
+    for offered_k in OFFERED_K {
+        let r = run_arm(offered_k, total);
+        row(&[
+            format!("{offered_k}k/s"),
+            f(r.sustained_events_per_sec),
+            f(r.mean_batch),
+            f(r.largest_batch as f64),
+            f(r.p50_us),
+            f(r.p99_us),
+            f(r.parked as f64),
+        ]);
+        let tag = format!("ingest-soak/offered-{offered_k}k");
+        report.push(Measurement::new(
+            format!("{tag}/sustained_events_per_sec"),
+            r.sustained_events_per_sec,
+            "events/s",
+        ));
+        report.push(Measurement::new(format!("{tag}/mean_batch"), r.mean_batch, "events/batch"));
+        report.push(Measurement::new(format!("{tag}/p50_us"), r.p50_us, "us"));
+        report.push(Measurement::new(format!("{tag}/p99_us"), r.p99_us, "us"));
+    }
+
+    match write_json(BENCH_JSON, &report) {
+        Ok(()) => println!("\nwrote {BENCH_JSON} ({} measurements)", report.len()),
+        Err(e) => {
+            eprintln!("FAIL: could not write {BENCH_JSON}: {e}");
+            std::process::exit(1);
+        }
+    }
+}

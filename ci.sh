@@ -171,6 +171,42 @@ if [ "$HAVE_CARGO" = 1 ]; then
         fail=1
     fi
     rm -f "$EDGE_BASELINE"
+
+    step "ingest soak bench (streaming front door: BENCH_ingest_soak.json)"
+    # same pattern again. KOALJA_SOAK_EVENTS bounds the per-arm event
+    # count so CI runners spend ~a second per arm; the sustained-rate
+    # hard gate and the mean-batch growth warn live in bench_delta.py.
+    SOAK_BASELINE="$(mktemp)"
+    if ! git show HEAD:BENCH_ingest_soak.json > "$SOAK_BASELINE" 2>/dev/null; then
+        cp BENCH_ingest_soak.json "$SOAK_BASELINE" 2>/dev/null || : > "$SOAK_BASELINE"
+    fi
+    rm -f BENCH_ingest_soak.json
+    t0=$(date +%s)
+    if KOALJA_SOAK_EVENTS="${KOALJA_SOAK_EVENTS:-8000}" cargo bench --bench ingest_soak; then
+        if [ -f BENCH_ingest_soak.json ]; then
+            record "bench-ingest-soak" pass 0 $(( $(date +%s) - t0 ))
+            mkdir -p artifacts/bench
+            cp BENCH_ingest_soak.json \
+               "artifacts/bench/ingest_soak-$(date -u +%Y%m%dT%H%M%SZ).json"
+            echo "archived BENCH_ingest_soak.json -> artifacts/bench/"
+            if [ -n "$PY" ]; then
+                run_step "bench-delta-soak" 0 "$PY" tools/bench_delta.py "$SOAK_BASELINE" BENCH_ingest_soak.json
+            else
+                skip_step "bench-delta-soak" "python not found"
+            fi
+        else
+            echo "ERROR: bench ran but emitted no BENCH_ingest_soak.json"
+            record "bench-ingest-soak" fail 0 $(( $(date +%s) - t0 ))
+            skip_step "bench-delta-soak" "no fresh bench JSON to diff"
+            fail=1
+        fi
+    else
+        echo "ERROR: ingest_soak bench failed"
+        record "bench-ingest-soak" fail 0 $(( $(date +%s) - t0 ))
+        skip_step "bench-delta-soak" "bench failed; nothing to diff"
+        fail=1
+    fi
+    rm -f "$SOAK_BASELINE"
 else
     echo "note: cargo not found — rust tier skipped in this environment"
     for s in cargo-fmt cargo-clippy bench-tap-overhead; do
@@ -178,7 +214,8 @@ else
     done
     for s in cargo-build cargo-build-examples cargo-test obs-trace \
              bench-coordinator-throughput bench-delta \
-             bench-edge-vs-central bench-delta-edge; do
+             bench-edge-vs-central bench-delta-edge \
+             bench-ingest-soak bench-delta-soak; do
         record "$s" skip 0 0
     done
 fi

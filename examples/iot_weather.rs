@@ -10,7 +10,11 @@
 //! temperature sensor reports from `edge-0`, the wind sensor from the
 //! EU edge `edge-1`, humidity from the datacentre, and the fuse task is
 //! pinned to `central`, so every edge sample pays real WAN physics on
-//! the way in (watch the WAN-bytes column move with the policy).
+//! the way in (watch the WAN-bytes column move with the policy). The
+//! sensors stream through the live front door: one producer *thread*
+//! per sensor replays its recorded trace through a bounded feed
+//! (`Feed::run_source` + `ReplaySource`) while the main thread pumps —
+//! the field-deployment shape, not a pre-loaded quiescent coordinator.
 //! Part 2 runs the L1 Pallas sliding-window
 //! kernel (AOT-compiled, executed via PJRT) over a buffered sensor stream
 //! — the `input[N/S]` feature computing real moving averages.
@@ -34,6 +38,7 @@ fn run_policy(policy: &str) -> Result<(usize, f64, u64)> {
         .task("fuse").reads("temp").reads("wind").reads("humidity")
         .emits("sample-set").policy(policy)
         .place_at("fuse", "central")
+        .source_feed("temp").source_feed("wind").source_feed("humidity")
         .deploy(DeployConfig { topology: demo_topology(2), ..Default::default() })?;
     // field deployments brown out: give the fuse task two retries with
     // exponential virtual-time backoff, and if a firing still exhausts
@@ -62,14 +67,28 @@ fn run_policy(policy: &str) -> Result<(usize, f64, u64)> {
     let homes = ["edge-0", "edge-1", "central"]
         .map(|name| pipe.plat.net.by_name(name).expect("demo topology region"));
     let horizon = SimTime::secs(30);
+    // record each sensor's trace (same rng walk as ever), then stream it
+    // live: one producer thread per sensor replays through its bounded
+    // feed while the main thread pumps — watermarks keep the mismatched
+    // rates honest (the frontier waits for the slowest open feed), and
+    // the books are byte-identical to any other interleaving
+    let mut replays = Vec::new();
     for (s, home) in sensors.iter_mut().zip(homes) {
-        // one resolution per sensor; the arrival loop rides the handle
-        let src = pipe.source(&s.name)?;
-        for (t, p) in s.arrivals_until(&mut r, horizon) {
-            src.inject_at(&mut pipe, p, DataClass::Summary, home, t);
-        }
+        let events: Vec<koalja::ingest::TimedEvent> = s
+            .arrivals_until(&mut r, horizon)
+            .into_iter()
+            .map(|(t, p)| koalja::ingest::TimedEvent::new(t, p, DataClass::Summary, home))
+            .collect();
+        let feed = pipe.feed(&s.name)?;
+        replays.push((feed, koalja::ingest::ReplaySource::new(&s.name, events, 8)));
     }
-    pipe.run_until_idle();
+    let report = std::thread::scope(|scope| {
+        for (feed, replay) in replays.drain(..) {
+            scope.spawn(move || feed.run_source(replay).expect("sensor replay producer"));
+        }
+        pipe.pump_ingest(std::time::Duration::from_secs(60))
+    });
+    assert!(!report.timed_out, "all sensor feeds close, so the pump drains to idle");
     let n = sample_set.count(&pipe);
     let staleness = pipe.plat.metrics.e2e_latency.mean().as_secs_f64();
     let wan = pipe.plat.metrics.bytes(koalja::obs::NetTier::Wan);

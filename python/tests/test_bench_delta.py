@@ -1,7 +1,8 @@
 """Exit-code and output contract of tools/bench_delta.py.
 
-The CI gate (ci.sh) relies on precise semantics: only ns_per_event
-regressions beyond the fail threshold return 1; warnings (including the
+The CI gate (ci.sh) relies on precise semantics: only hard-gated
+metrics (ns_per_event and the ingest soak's sustained_events_per_sec)
+regressing beyond the fail threshold return 1; warnings (including the
 parallel-speedup floor on >=4-wide fan-outs) return 0; malformed rows
 are skipped with a note; an empty seed baseline compares clean. These
 tests pin each of those behaviours by invoking the script exactly as
@@ -259,6 +260,77 @@ def test_edge_workload_knobs_are_metadata(tmp_path):
     # edges / chunk_rows describe the workload shape, not performance
     base = doc([row("edges", 4.0, "count"), row("chunk_rows", 1024.0, "count")])
     fresh = doc([row("edges", 8.0, "count"), row("chunk_rows", 256.0, "count")])
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 0, out
+    assert "warn" not in out
+
+
+def test_sustained_rate_fail_exits_one(tmp_path):
+    # the ingest soak's absorbed rate shares the ns_per_event hard gate:
+    # a -50% drop is a broken streaming front door, not noise
+    base = doc([row("ingest-soak/offered-100k/sustained_events_per_sec", 100000.0, "events/s")])
+    fresh = doc([row("ingest-soak/offered-100k/sustained_events_per_sec", 50000.0, "events/s")])
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 1, out
+    assert "FAIL" in out
+
+    # a -20% drop is still only a warning
+    fresh = doc([row("ingest-soak/offered-100k/sustained_events_per_sec", 80000.0, "events/s")])
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 0, out
+    assert "warning only" in out
+
+
+def test_soak_latency_polarity_is_lower_is_better(tmp_path):
+    # p99 enqueue-to-commit latency growing is a regression (warn, never
+    # fail); shrinking is an improvement
+    base = doc([row("ingest-soak/offered-100k/p99_us", 100.0, "us")])
+    fresh = doc([row("ingest-soak/offered-100k/p99_us", 200.0, "us")])
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 0, out
+    assert "warn" in out and "improved" not in out
+
+    fresh = doc([row("ingest-soak/offered-100k/p99_us", 50.0, "us")])
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 0, out
+    assert "improved" in out
+
+
+def test_soak_no_batch_growth_warns(tmp_path):
+    # in-report gate: the highest offered rate must coalesce larger mean
+    # batches than the lowest, or adaptive batching is not engaging
+    base = doc([])
+    fresh = doc(
+        [
+            row("ingest-soak/offered-25k/mean_batch", 4.0, "events/batch"),
+            row("ingest-soak/offered-400k/mean_batch", 3.0, "events/batch"),
+        ]
+    )
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 0, out  # warns, never fails
+    assert "adaptive batching is not engaging" in out
+    assert "first trajectory point" in out
+
+
+def test_soak_batch_growth_is_quiet(tmp_path):
+    base = doc([])
+    fresh = doc(
+        [
+            row("ingest-soak/offered-25k/mean_batch", 2.0, "events/batch"),
+            row("ingest-soak/offered-400k/mean_batch", 24.0, "events/batch"),
+        ]
+    )
+    code, out = run_tool(tmp_path, base, fresh)
+    assert code == 0, out
+    assert "adaptive batching is not engaging" not in out
+    assert "batch growth" in out
+
+
+def test_soak_workload_knobs_are_metadata(tmp_path):
+    # events honors KOALJA_SOAK_EVENTS: a bounded CI run vs a full local
+    # run must not read as a 90% regression
+    base = doc([row("ingest-soak/events", 30000.0, "count")])
+    fresh = doc([row("ingest-soak/events", 3000.0, "count")])
     code, out = run_tool(tmp_path, base, fresh)
     assert code == 0, out
     assert "warn" not in out

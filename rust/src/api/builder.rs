@@ -58,6 +58,9 @@ pub struct PipelineBuilder {
     /// [`Placement::optimize`](crate::shard::Placement::optimize) output
     /// lands when driven through the builder.
     pins: BTreeMap<String, String>,
+    /// Streaming feeds to pre-open at deploy: (source wire, queue
+    /// capacity). Declared order = watermark-clock registration order.
+    feeds: Vec<(String, usize)>,
 }
 
 impl PipelineBuilder {
@@ -70,6 +73,7 @@ impl PipelineBuilder {
             trace: None,
             nodes: None,
             pins: BTreeMap::new(),
+            feeds: Vec::new(),
         };
         if !valid_name(name) {
             b.errors.push(format!("bad pipeline name '{name}'"));
@@ -113,6 +117,25 @@ impl PipelineBuilder {
     /// `Coordinator::deploy` with the region named.
     pub fn place_at(mut self, task: &str, region: &str) -> Self {
         self.pins.insert(task.to_string(), region.to_string());
+        self
+    }
+
+    /// Declare a streaming feed on a source wire: deploy pre-opens a
+    /// bounded ingest queue there (default capacity) and registers it
+    /// with the watermark clock, so the running [`Pipeline`] hands out
+    /// the [`FeedHandle`](super::FeedHandle) via
+    /// [`Pipeline::feed`](super::Pipeline::feed). The wire must be an
+    /// external in-tray — produced wires fail at deploy with the same
+    /// diagnostics as [`Pipeline::source`](super::Pipeline::source). A
+    /// deploy-time knob: `build()`'s spec is unaffected.
+    pub fn source_feed(self, wire: &str) -> Self {
+        self.source_feed_with(wire, crate::ingest::DEFAULT_FEED_CAPACITY)
+    }
+
+    /// [`source_feed`](PipelineBuilder::source_feed) with an explicit
+    /// bounded-queue capacity (the producer credit window).
+    pub fn source_feed_with(mut self, wire: &str, capacity: usize) -> Self {
+        self.feeds.push((wire.to_string(), capacity));
         self
     }
 
@@ -166,6 +189,7 @@ impl PipelineBuilder {
             cfg.placement.nodes = n;
         }
         let pins = std::mem::take(&mut self.pins);
+        let feeds = std::mem::take(&mut self.feeds);
         let spec = self.build()?;
         for (task, region) in pins {
             if !spec.tasks.iter().any(|t| t.name == task) {
@@ -176,7 +200,12 @@ impl PipelineBuilder {
             }
             cfg.placement.regions.insert(task, region);
         }
-        Pipeline::deploy(&spec, cfg)
+        let mut pipe = Pipeline::deploy(&spec, cfg)?;
+        for (wire, capacity) in feeds {
+            pipe.open_feed_with(&wire, capacity)
+                .map_err(|e| anyhow!("source_feed: {e}"))?;
+        }
+        Ok(pipe)
     }
 }
 
@@ -310,6 +339,20 @@ impl TaskBuilder {
     /// [`PipelineBuilder::place_at`]).
     pub fn place_at(mut self, task: &str, region: &str) -> Self {
         self.pb.pins.insert(task.to_string(), region.to_string());
+        self
+    }
+
+    /// Declare a streaming feed mid-chain (see
+    /// [`PipelineBuilder::source_feed`]).
+    pub fn source_feed(mut self, wire: &str) -> Self {
+        self.pb.feeds.push((wire.to_string(), crate::ingest::DEFAULT_FEED_CAPACITY));
+        self
+    }
+
+    /// Declare a streaming feed with explicit capacity mid-chain (see
+    /// [`PipelineBuilder::source_feed_with`]).
+    pub fn source_feed_with(mut self, wire: &str, capacity: usize) -> Self {
+        self.pb.feeds.push((wire.to_string(), capacity));
         self
     }
 
@@ -466,6 +509,30 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(e.contains("no task 'ghost'"), "{e}");
+    }
+
+    #[test]
+    fn source_feed_reaches_the_deployment() {
+        let pipe = PipelineBuilder::new("p")
+            .task("t").reads("a").emits("b")
+            .source_feed_with("a", 64)
+            .deploy(DeployConfig::default())
+            .unwrap();
+        let feed = pipe.feed("a").unwrap();
+        assert_eq!(feed.wire_name(), "a");
+        assert_eq!(feed.capacity(), 64);
+        assert_eq!(pipe.feeds().len(), 1);
+
+        // produced wires fail at deploy with the source diagnostics
+        let e = PipelineBuilder::new("p")
+            .task("t").reads("a").emits("b")
+            .task("u").reads("b").emits("c")
+            .source_feed("b")
+            .deploy(DeployConfig::default())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("source_feed"), "{e}");
+        assert!(e.contains("produced by task"), "{e}");
     }
 
     #[test]

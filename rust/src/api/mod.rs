@@ -52,6 +52,7 @@ pub use builder::{PipelineBuilder, TaskBuilder};
 use crate::av::{AnnotatedValue, DataClass, Payload};
 use crate::coordinator::{Collected, Coordinator, DeployConfig};
 use crate::fault::{DeadLetter, FirePolicy};
+use crate::ingest::Feed;
 use crate::provenance::{CheckpointEntry, ProvenanceQuery};
 use crate::spec::PipelineSpec;
 use crate::task::TaskCode;
@@ -76,7 +77,17 @@ pub struct Pipeline {
     sources: Vec<SourceHandle>,
     sinks: Vec<SinkHandle>,
     tasks: Vec<TaskHandle>,
+    /// Feeds opened through this pipeline (builder-declared or
+    /// [`Pipeline::open_feed`]), lookup order = registration order.
+    feeds: Vec<FeedHandle>,
 }
+
+/// The streaming counterpart of [`SourceHandle`]: a cloneable,
+/// thread-safe handle onto one external wire's bounded ingest queue.
+/// Unlike the `Copy` handles it is *detached* — producer threads push
+/// through it without touching the `Pipeline` — so it is simply the
+/// [`crate::ingest::Feed`] under its API-layer name.
+pub type FeedHandle = Feed;
 
 impl std::ops::Deref for Pipeline {
     type Target = Coordinator;
@@ -120,7 +131,47 @@ impl Pipeline {
         let tasks = (0..coord.graph.n_tasks())
             .map(|i| TaskHandle { token, task: TaskId::new(i as u64) })
             .collect();
-        Ok(Self { coord, spec, cfg, token, sources, sinks, tasks })
+        Ok(Self { coord, spec, cfg, token, sources, sinks, tasks, feeds: Vec::new() })
+    }
+
+    // ------------------------------------------------------------------
+    // Streaming feeds (the live front door; see crate::ingest)
+    // ------------------------------------------------------------------
+
+    /// Open a streaming [`FeedHandle`] onto an external wire with the
+    /// default queue capacity. The handle is cloneable and thread-safe;
+    /// producer threads push timestamped events through it concurrently
+    /// with execution, then `pump_ingest` (via `Deref` to
+    /// [`Coordinator`]) moves them into the pipeline under watermark
+    /// gating. Fails like [`Pipeline::source`] on non-source wires.
+    pub fn open_feed(&mut self, wire: &str) -> Result<FeedHandle> {
+        self.open_feed_with(wire, crate::ingest::DEFAULT_FEED_CAPACITY)
+    }
+
+    /// [`open_feed`](Self::open_feed) with an explicit bounded-queue
+    /// capacity — the credit window producers get before `push` blocks.
+    pub fn open_feed_with(&mut self, wire: &str, capacity: usize) -> Result<FeedHandle> {
+        let src = self.source(wire)?; // source-wire validation + near-miss errors
+        let feed = self.coord.open_feed_id(src.wire_id(), capacity)?;
+        self.feeds.push(feed.clone());
+        Ok(feed)
+    }
+
+    /// A clone of an already-opened feed (builder-declared via
+    /// `source_feed`, or a prior [`Pipeline::open_feed`]).
+    pub fn feed(&self, wire: &str) -> Result<FeedHandle> {
+        self.feeds.iter().find(|f| f.wire_name() == wire).cloned().ok_or_else(|| {
+            anyhow!(
+                "no open feed on wire '{wire}' in pipeline [{}]{}",
+                self.spec.name,
+                suggest(wire, "feed", self.feeds.iter().map(|f| f.wire_name()))
+            )
+        })
+    }
+
+    /// Every feed opened through this pipeline, registration order.
+    pub fn feeds(&self) -> &[FeedHandle] {
+        &self.feeds
     }
 
     /// The wiring this pipeline was deployed from.

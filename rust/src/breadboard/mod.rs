@@ -433,11 +433,11 @@ impl Breadboard {
         for rec in ledger {
             match self.pipe.plat.store.peek(rec.object) {
                 Some(obj) => {
-                    let wid = match resolved.get(&rec.wire) {
+                    let wid = match resolved.get(&*rec.wire) {
                         Some(w) => *w,
                         None => {
                             let w = fresh.wire_id(&rec.wire)?;
-                            resolved.insert(rec.wire.clone(), w);
+                            resolved.insert(rec.wire.to_string(), w);
                             w
                         }
                     };

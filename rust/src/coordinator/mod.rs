@@ -26,6 +26,10 @@ use crate::fault::{
     Firing, OnExhaust, Supervision,
 };
 use crate::graph::PipelineGraph;
+use crate::ingest::{
+    Feed, FeedCore, IngestPump, IngestReport, IngestStats, StalledFeed,
+    DEFAULT_FEED_CAPACITY,
+};
 use crate::link::{Delivery, LinkAgent};
 use crate::net::WanTopology;
 use crate::platform::{PlacementStrategy, Platform};
@@ -421,6 +425,13 @@ pub struct Coordinator {
     /// The storm report from the most recent `run_until_idle`, if it
     /// tripped (cleared on the next run call).
     last_storm: Option<EventStorm>,
+    /// Interned wire names shared with every injection ledger record, so
+    /// large batches pay a refcount bump per event instead of a fresh
+    /// `String` allocation (§Perf; see [`InjectionRecord`]).
+    ledger_names: Vec<Arc<str>>,
+    /// The streaming ingestion pump, created lazily by the first
+    /// [`Coordinator::open_feed`] (see [`crate::ingest`]).
+    ingest: Option<Box<IngestPump>>,
 }
 
 impl Coordinator {
@@ -573,6 +584,8 @@ impl Coordinator {
         // one shared copy of the interned names for every dense per-wire
         // structure (sink book, wire currency, tap mask)
         let wire_names: Arc<Vec<String>> = Arc::new(graph.wires.names().to_vec());
+        let wire_name_arcs: Vec<Arc<str>> =
+            graph.wires.names().iter().map(|n| Arc::from(n.as_str())).collect();
         let (n_tasks, n_wires) = (graph.n_tasks(), graph.wires.len());
 
         // the node partition and its exchange: which simulated node runs
@@ -610,6 +623,8 @@ impl Coordinator {
             sovereignty_errors: Vec::new(),
             storm_cap: 10_000_000,
             last_storm: None,
+            ledger_names: wire_name_arcs,
+            ingest: None,
         })
     }
 
@@ -761,7 +776,7 @@ impl Coordinator {
         }
         let watched = self.taps.watches(wire);
         let current = at <= self.plat.now;
-        let wire_name = self.graph.wires.name(wire).to_string();
+        let wire_name = Arc::clone(&self.ledger_names[wire.index()]);
         let id =
             self.inject_prepared(wire, &wire_name, payload, class, region, at, watched, current, fanout);
         if self.obs.enabled {
@@ -780,7 +795,7 @@ impl Coordinator {
     fn inject_prepared(
         &mut self,
         wire: WireId,
-        wire_name: &str,
+        wire_name: &Arc<str>,
         payload: Payload,
         class: DataClass,
         region: RegionId,
@@ -803,7 +818,7 @@ impl Coordinator {
         // these records + the deployment seed (§III-J reconstruction)
         self.plat.prov.record_injection(crate::provenance::InjectionRecord {
             av: av.id,
-            wire: wire_name.to_string(),
+            wire: Arc::clone(wire_name),
             at,
             region,
             class,
@@ -887,7 +902,7 @@ impl Coordinator {
         }
         let watched = self.taps.watches(wire);
         let current = at <= self.plat.now;
-        let wire_name = self.graph.wires.name(wire).to_string();
+        let wire_name = Arc::clone(&self.ledger_names[wire.index()]);
         let payloads = payloads.into_iter();
         let (size_lo, _) = payloads.size_hint();
         self.queue.reserve(size_lo * (fanout + usize::from(watched)));
@@ -918,6 +933,104 @@ impl Coordinator {
             region,
             self.plat.now,
         )
+    }
+
+    // ------------------------------------------------------------------
+    // Streaming ingestion (the live front door; see crate::ingest)
+    // ------------------------------------------------------------------
+
+    /// Open a streaming [`Feed`] onto external wire `wire` with the
+    /// default bounded-queue capacity. The returned handle is cloneable
+    /// and thread-safe: producer threads push timestamped events through
+    /// it concurrently with execution, and
+    /// [`Coordinator::pump_ingest`] / [`Coordinator::ingest_cycle`]
+    /// move them into the pipeline under watermark gating.
+    pub fn open_feed(&mut self, wire: &str) -> Result<Feed> {
+        self.open_feed_with(wire, DEFAULT_FEED_CAPACITY)
+    }
+
+    /// [`open_feed`](Self::open_feed) with an explicit queue capacity —
+    /// the credit window producers get before `push` blocks
+    /// (`try_push` returns [`crate::ingest::IngestError::Backpressure`]).
+    pub fn open_feed_with(&mut self, wire: &str, capacity: usize) -> Result<Feed> {
+        let wid = self.wire_id(wire)?;
+        self.open_feed_id(wid, capacity)
+    }
+
+    /// Id-based feed open. Validates here (range + injectability) so the
+    /// pump's injections can never fail mid-stream.
+    pub fn open_feed_id(&mut self, wire: WireId, capacity: usize) -> Result<Feed> {
+        if wire.index() >= self.graph.wires.len() {
+            bail!(
+                "{wire} is out of range for pipeline [{}] ({} wires) — ids are only \
+                 valid for the coordinator whose wire table minted them",
+                self.graph.name,
+                self.graph.wires.len()
+            );
+        }
+        if self.graph.wires.injections(wire).is_empty() {
+            bail!(
+                "wire '{}' has no injection point (a task produces it)",
+                self.graph.wires.name(wire)
+            );
+        }
+        let name = Arc::clone(&self.ledger_names[wire.index()]);
+        let pump = self.ingest.get_or_insert_with(|| Box::new(IngestPump::new()));
+        let core = Arc::new(FeedCore::new(capacity, Arc::clone(&pump.bell)));
+        let feed = Feed { wire, name, core };
+        pump.register(feed.clone());
+        Ok(feed)
+    }
+
+    /// Run one ingest pump cycle: drain every feed, seal what the
+    /// watermark frontier allows, and execute it. Returns whether the
+    /// cycle made progress (drained, injected, or executed anything).
+    /// The manual-cadence alternative to [`Coordinator::pump_ingest`]
+    /// for callers interleaving their own work.
+    pub fn ingest_cycle(&mut self) -> bool {
+        let Some(mut pump) = self.ingest.take() else { return false };
+        let out = pump.cycle(self);
+        self.ingest = Some(pump);
+        out.progress
+    }
+
+    /// The ingest pump loop: cycle until every feed has closed and
+    /// drained (then run the pipeline to idle), parking on the wake bell
+    /// when idle instead of busy-spinning. `drain_deadline` is wall
+    /// clock — the escape hatch for producers that never close; on
+    /// expiry the report's `timed_out` is set and buffered work stays
+    /// staged for a later call.
+    pub fn pump_ingest(&mut self, drain_deadline: std::time::Duration) -> IngestReport {
+        let Some(mut pump) = self.ingest.take() else {
+            return IngestReport {
+                stats: IngestStats::default(),
+                timed_out: false,
+                stalled: Vec::new(),
+            };
+        };
+        let report = pump.run(self, drain_deadline);
+        self.ingest = Some(pump);
+        report
+    }
+
+    /// Cumulative ingestion counters, if any feed was ever opened.
+    pub fn ingest_stats(&self) -> Option<&IngestStats> {
+        self.ingest.as_deref().map(|p| &p.stats)
+    }
+
+    /// Open feeds currently pinning the watermark frontier behind their
+    /// peers (see [`crate::ingest::WatermarkClock`]).
+    pub fn ingest_stalled(&self) -> Vec<StalledFeed> {
+        self.ingest.as_deref().map(|p| p.stalled()).unwrap_or_default()
+    }
+
+    /// The virtual time of the next pending event, if any.
+    pub fn next_event_at(&self) -> Option<SimTime> {
+        self.queue.peek().map(|Reverse(e)| e.at)
+    }
+
+    pub(crate) fn obs_mut(&mut self) -> &mut Obs {
+        &mut self.obs
     }
 
     // ------------------------------------------------------------------

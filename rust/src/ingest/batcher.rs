@@ -1,0 +1,117 @@
+//! Adaptive batch sizing: the deeper the backlog, the bigger the
+//! injection batches.
+//!
+//! Each pump cycle asks for a *credit* — the maximum number of sealed
+//! events to inject before yielding back to execution. Under light load
+//! the credit stays small so enqueue-to-commit latency stays low; as
+//! queue depth grows the credit grows with it, amortizing per-batch
+//! validation and heap reservation (`inject_batch_at_id` pays its setup
+//! once per batch), so throughput *improves* under pressure.
+//!
+//! Determinism note: the credit changes how many instants a cycle seals
+//! — i.e. *when* events enter the coordinator — never how same-instant
+//! events are grouped or ordered. Canonical grouping happens after
+//! sealing (see `super::pump`), so batch sizing is invisible to the
+//! books.
+
+/// Smallest per-cycle injection credit (light-load latency floor).
+pub(crate) const MIN_CREDIT: usize = 32;
+/// Largest per-cycle injection credit (keeps cycles preemptible).
+pub(crate) const MAX_CREDIT: usize = 4096;
+
+pub(crate) struct AdaptiveBatcher {
+    /// Smoothed backlog estimate (integer EWMA, alpha = 1/4).
+    smoothed_depth: usize,
+    batches: u64,
+    batched_events: u64,
+    largest: usize,
+}
+
+impl AdaptiveBatcher {
+    pub fn new() -> Self {
+        Self { smoothed_depth: 0, batches: 0, batched_events: 0, largest: 0 }
+    }
+
+    /// Injection credit for a cycle that observed `depth` queued events
+    /// across all feeds: proportional to the smoothed backlog, clamped
+    /// to [MIN_CREDIT, MAX_CREDIT].
+    pub fn cycle_credit(&mut self, depth: usize) -> usize {
+        // EWMA keeps one deep burst from whipsawing the credit
+        self.smoothed_depth = (self.smoothed_depth * 3 + depth) / 4;
+        self.smoothed_depth.max(depth / 2).clamp(MIN_CREDIT, MAX_CREDIT)
+    }
+
+    /// Record one `inject_batch_at_id` call of `n` events.
+    pub fn note_batch(&mut self, n: usize) {
+        self.batches += 1;
+        self.batched_events += n as u64;
+        self.largest = self.largest.max(n);
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+
+    pub fn batched_events(&self) -> u64 {
+        self.batched_events
+    }
+
+    pub fn largest(&self) -> usize {
+        self.largest
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_events as f64 / self.batches as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn credit_grows_with_sustained_depth_and_clamps() {
+        let mut b = AdaptiveBatcher::new();
+        assert_eq!(b.cycle_credit(0), MIN_CREDIT, "empty queues get the floor");
+        assert_eq!(b.cycle_credit(10), MIN_CREDIT, "shallow backlog stays at the floor");
+        let mut last = MIN_CREDIT;
+        for _ in 0..16 {
+            let c = b.cycle_credit(2000);
+            assert!(c >= last, "credit is nondecreasing under sustained depth");
+            last = c;
+        }
+        assert!(last > MIN_CREDIT, "sustained backlog grows the credit");
+        for _ in 0..32 {
+            last = b.cycle_credit(1_000_000);
+        }
+        assert_eq!(last, MAX_CREDIT, "credit clamps at the ceiling");
+    }
+
+    #[test]
+    fn credit_decays_when_load_drops() {
+        let mut b = AdaptiveBatcher::new();
+        for _ in 0..32 {
+            b.cycle_credit(4000);
+        }
+        for _ in 0..64 {
+            b.cycle_credit(0);
+        }
+        assert_eq!(b.cycle_credit(0), MIN_CREDIT, "credit returns to the floor when idle");
+    }
+
+    #[test]
+    fn batch_stats_track_mean_and_largest() {
+        let mut b = AdaptiveBatcher::new();
+        assert_eq!(b.mean_batch(), 0.0);
+        b.note_batch(10);
+        b.note_batch(30);
+        assert_eq!(b.batches(), 2);
+        assert_eq!(b.batched_events(), 40);
+        assert_eq!(b.largest(), 30);
+        assert!((b.mean_batch() - 20.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,310 @@
+//! The vendored concurrency primitives under a feed: a bounded MPSC
+//! channel (crossbeam-style, built in-tree like the other offline shims)
+//! plus the wake bell the pump parks on.
+//!
+//! One channel per feed. Producers on external threads `push` (blocking
+//! while full) or `try_push` (returning a structured
+//! [`Backpressure`](super::Backpressure) rejection); the pump drains the
+//! whole buffer under one lock acquisition per cycle. The per-feed low
+//! watermark lives *inside* the channel state on purpose: the pump reads
+//! `(buffered events, watermark, closed)` atomically under the channel
+//! lock, so the watermark it observes can never run ahead of the events
+//! it drained — the ordering that makes sealing sound (see
+//! `super::pump`).
+
+use crate::av::{DataClass, Payload};
+use crate::util::{RegionId, SimTime};
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// One event queued on a feed, stamped with the per-feed push sequence
+/// (the canonical tiebreak when same-instant events from several feeds
+/// are merged — see `super::pump`).
+pub(crate) struct QueuedEvent {
+    pub at: SimTime,
+    pub seq: u64,
+    pub payload: Payload,
+    pub class: DataClass,
+    pub region: RegionId,
+}
+
+struct FeedState {
+    buf: VecDeque<QueuedEvent>,
+    /// Low watermark: the producer promises every future push on this
+    /// feed arrives strictly after it. `None` = nothing promised yet.
+    wm: Option<SimTime>,
+    closed: bool,
+    next_seq: u64,
+    /// `try_push` rejections since the last drain (backpressure events).
+    rejected: u64,
+}
+
+/// What one drain observed, atomically: every buffered event plus the
+/// watermark/closed state *as of the same lock acquisition*.
+pub(crate) struct Drained {
+    pub events: Vec<QueuedEvent>,
+    pub wm: Option<SimTime>,
+    pub closed: bool,
+    pub rejected: u64,
+}
+
+/// Outcome of a push attempt, before it is dressed up as an
+/// [`IngestError`](super::IngestError) (the channel layer knows depths
+/// and capacities; the feed layer knows its name).
+pub(crate) enum PushRefusal {
+    Full { depth: usize },
+    BehindWatermark { at: SimTime, watermark: SimTime },
+    Closed,
+}
+
+/// The bounded MPSC core shared by a [`Feed`](super::Feed)'s clones and
+/// its pump-side endpoint.
+pub(crate) struct FeedCore {
+    state: Mutex<FeedState>,
+    not_full: Condvar,
+    cap: usize,
+    bell: Arc<WakeBell>,
+}
+
+impl FeedCore {
+    pub fn new(cap: usize, bell: Arc<WakeBell>) -> Self {
+        Self {
+            state: Mutex::new(FeedState {
+                buf: VecDeque::new(),
+                wm: None,
+                closed: false,
+                next_seq: 0,
+                rejected: 0,
+            }),
+            not_full: Condvar::new(),
+            cap: cap.max(1),
+            bell,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Blocking push: waits while the buffer is full (credit returns when
+    /// the pump drains), then enqueues and rings the pump's bell.
+    pub fn push(
+        &self,
+        at: SimTime,
+        payload: Payload,
+        class: DataClass,
+        region: RegionId,
+    ) -> Result<(), PushRefusal> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if s.closed {
+                return Err(PushRefusal::Closed);
+            }
+            if let Some(wm) = s.wm {
+                if at <= wm {
+                    return Err(PushRefusal::BehindWatermark { at, watermark: wm });
+                }
+            }
+            if s.buf.len() < self.cap {
+                let seq = s.next_seq;
+                s.next_seq += 1;
+                s.buf.push_back(QueuedEvent { at, seq, payload, class, region });
+                drop(s);
+                self.bell.ring();
+                return Ok(());
+            }
+            s = self.not_full.wait(s).unwrap();
+        }
+    }
+
+    /// Non-blocking push: a full buffer is a structured refusal carrying
+    /// the observed depth, so producers can shed or retry on their own
+    /// schedule (credit-based backpressure without blocking).
+    pub fn try_push(
+        &self,
+        at: SimTime,
+        payload: Payload,
+        class: DataClass,
+        region: RegionId,
+    ) -> Result<(), PushRefusal> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return Err(PushRefusal::Closed);
+        }
+        if let Some(wm) = s.wm {
+            if at <= wm {
+                return Err(PushRefusal::BehindWatermark { at, watermark: wm });
+            }
+        }
+        if s.buf.len() >= self.cap {
+            let depth = s.buf.len();
+            s.rejected += 1;
+            return Err(PushRefusal::Full { depth });
+        }
+        let seq = s.next_seq;
+        s.next_seq += 1;
+        s.buf.push_back(QueuedEvent { at, seq, payload, class, region });
+        drop(s);
+        self.bell.ring();
+        Ok(())
+    }
+
+    /// Advance the feed's low watermark: every future push must arrive
+    /// strictly after `t`. Monotonic (a lower `t` is a no-op); errors
+    /// after close.
+    pub fn advance(&self, t: SimTime) -> Result<(), PushRefusal> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return Err(PushRefusal::Closed);
+        }
+        s.wm = Some(s.wm.map_or(t, |w| w.max(t)));
+        drop(s);
+        self.bell.ring();
+        Ok(())
+    }
+
+    /// Close the feed: no more pushes; blocked producers wake with
+    /// [`PushRefusal::Closed`]. Idempotent.
+    pub fn close(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.closed = true;
+        drop(s);
+        self.not_full.notify_all();
+        self.bell.ring();
+    }
+
+    /// Pump-side: take every buffered event and read the watermark/closed
+    /// state under the same lock (the consistency the sealing proof
+    /// needs), then wake blocked producers — the drained capacity is
+    /// their credit.
+    pub fn drain(&self) -> Drained {
+        let mut s = self.state.lock().unwrap();
+        let events: Vec<QueuedEvent> = s.buf.drain(..).collect();
+        let out = Drained {
+            events,
+            wm: s.wm,
+            closed: s.closed,
+            rejected: std::mem::take(&mut s.rejected),
+        };
+        drop(s);
+        self.not_full.notify_all();
+        out
+    }
+
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().buf.len()
+    }
+
+    pub fn watermark(&self) -> Option<SimTime> {
+        self.state.lock().unwrap().wm
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+}
+
+/// The pump's doorbell: every feed push / advance / close rings it, and
+/// the pump parks on it when there is nothing to seal and nothing to run
+/// — the fix for the busy-spin an empty heap with open feeds used to
+/// cause. Epoch-counted so a ring between "pump decides to park" and
+/// "pump actually waits" is never lost: the pump snapshots the epoch
+/// before draining and waits only while the epoch is unchanged.
+pub(crate) struct WakeBell {
+    epoch: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl WakeBell {
+    pub fn new() -> Self {
+        Self { epoch: Mutex::new(0), cv: Condvar::new() }
+    }
+
+    pub fn ring(&self) {
+        *self.epoch.lock().unwrap() += 1;
+        self.cv.notify_all();
+    }
+
+    pub fn epoch(&self) -> u64 {
+        *self.epoch.lock().unwrap()
+    }
+
+    /// Park until the epoch moves past `seen` or `timeout` elapses.
+    /// Returns `true` when woken by a ring, `false` on timeout.
+    pub fn wait_past(&self, seen: u64, timeout: Duration) -> bool {
+        let g = self.epoch.lock().unwrap();
+        let (g, res) = self.cv.wait_timeout_while(g, timeout, |e| *e == seen).unwrap();
+        let woken = !res.timed_out() || *g != seen;
+        drop(g);
+        woken
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn core(cap: usize) -> FeedCore {
+        FeedCore::new(cap, Arc::new(WakeBell::new()))
+    }
+
+    #[test]
+    fn drain_sees_events_and_watermark_atomically() {
+        let c = core(8);
+        c.push(SimTime::micros(5), Payload::scalar(1.0), DataClass::Summary, RegionId::new(0))
+            .ok()
+            .unwrap();
+        c.advance(SimTime::micros(5)).ok().unwrap();
+        let d = c.drain();
+        assert_eq!(d.events.len(), 1);
+        assert_eq!(d.wm, Some(SimTime::micros(5)));
+        assert!(!d.closed);
+        // a push at or behind the promised watermark is refused
+        let refusal = c
+            .push(SimTime::micros(5), Payload::scalar(2.0), DataClass::Summary, RegionId::new(0))
+            .err()
+            .unwrap();
+        assert!(matches!(refusal, PushRefusal::BehindWatermark { .. }));
+    }
+
+    #[test]
+    fn try_push_counts_rejections() {
+        let c = core(1);
+        c.try_push(SimTime::micros(1), Payload::scalar(0.0), DataClass::Summary, RegionId::new(0))
+            .ok()
+            .unwrap();
+        let r = c
+            .try_push(SimTime::micros(2), Payload::scalar(0.0), DataClass::Summary, RegionId::new(0))
+            .err()
+            .unwrap();
+        assert!(matches!(r, PushRefusal::Full { depth: 1 }));
+        let d = c.drain();
+        assert_eq!(d.rejected, 1);
+        assert_eq!(d.events.len(), 1);
+        assert_eq!(c.drain().rejected, 0, "rejection counter resets per drain");
+    }
+
+    #[test]
+    fn close_wakes_and_refuses() {
+        let c = core(4);
+        c.close();
+        assert!(matches!(
+            c.push(SimTime::ZERO, Payload::scalar(0.0), DataClass::Summary, RegionId::new(0)),
+            Err(PushRefusal::Closed)
+        ));
+        assert!(c.is_closed());
+    }
+
+    #[test]
+    fn bell_epoch_prevents_lost_wakeups() {
+        let bell = WakeBell::new();
+        let seen = bell.epoch();
+        bell.ring();
+        // the ring landed before the wait: wait_past returns immediately
+        assert!(bell.wait_past(seen, Duration::from_millis(1)));
+        // nothing rings: the wait times out
+        let seen = bell.epoch();
+        assert!(!bell.wait_past(seen, Duration::from_millis(1)));
+    }
+}

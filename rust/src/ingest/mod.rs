@@ -1,0 +1,88 @@
+//! Streaming ingestion: the front door that turns the coordinator from
+//! a library you call into a service that absorbs load.
+//!
+//! Everything else in the repo injects from the client thread and then
+//! drains. This subsystem lets external producer threads push
+//! timestamped events *concurrently with execution*:
+//!
+//! - [`Feed`] — a cloneable handle onto one external wire's bounded
+//!   queue (in-tree MPSC; `push` blocks for credit, `try_push` returns a
+//!   structured [`Backpressure`] refusal).
+//! - [`Source`] — the pull-style connector trait ([`ReplaySource`] for
+//!   recorded traces); [`Feed::run_source`] is the standard producer
+//!   thread body.
+//! - [`WatermarkClock`] — event-time completeness: virtual time advances
+//!   only when every open feed's low watermark has passed, and feeds
+//!   pinning the frontier are surfaced as [`StalledFeed`] anomalies.
+//! - An adaptive batcher whose per-cycle injection credit grows with
+//!   queue depth, so `inject_batch_at_id`'s amortized setup makes
+//!   throughput *improve* under pressure.
+//! - The pump (driven by `Coordinator::pump_ingest` /
+//!   `Coordinator::ingest_cycle`), which interleaves feed draining with
+//!   wavefront execution and parks on a wake bell when idle instead of
+//!   busy-spinning.
+//!
+//! The subsystem preserves the repo's core invariant — for fixed
+//! per-feed event sequences the books are byte-identical regardless of
+//! producer interleaving, pump cadence, batch credit, worker count, or
+//! node count; `pump.rs` documents the argument and
+//! `rust/tests/ingest_determinism.rs` proves it across the matrix.
+
+mod batcher;
+mod channel;
+mod pump;
+mod source;
+mod watermark;
+
+pub use pump::{IngestReport, DEFAULT_STALL_THRESHOLD};
+pub use source::{Backpressure, Feed, IngestError, ReplaySource, Source, TimedEvent};
+pub use watermark::{Frontier, StalledFeed, WatermarkClock};
+
+pub(crate) use channel::FeedCore;
+pub(crate) use pump::IngestPump;
+
+use crate::util::SimDuration;
+
+/// Default bounded-queue capacity for feeds opened without an explicit
+/// one: deep enough to ride out a pump cycle, small enough that a
+/// runaway producer feels backpressure quickly.
+pub const DEFAULT_FEED_CAPACITY: usize = 1024;
+
+/// Cumulative ingestion counters, kept by the pump and surfaced through
+/// `Coordinator::ingest_stats` / [`IngestReport`].
+#[derive(Debug, Clone, Default)]
+pub struct IngestStats {
+    /// Events injected into the coordinator.
+    pub events: u64,
+    /// `inject_batch_at_id` calls issued.
+    pub batches: u64,
+    /// Events that went through those batches (= `events`; kept separate
+    /// so `mean_batch` stays honest if the accounting ever diverges).
+    pub batched_events: u64,
+    /// Pump cycles run.
+    pub cycles: u64,
+    /// Times the pump parked on the wake bell instead of spinning.
+    pub parked: u64,
+    /// `try_push` refusals observed across all feeds.
+    pub backpressure_rejections: u64,
+    /// Deepest combined backlog (staged + freshly drained) seen at a
+    /// cycle boundary.
+    pub depth_high_water: usize,
+    /// Largest single injection batch.
+    pub largest_batch: usize,
+    /// Furthest any buffered event ran ahead of the sealable frontier.
+    pub watermark_lag_max: SimDuration,
+    /// Distinct stall anomalies reported (set-change-deduplicated).
+    pub stall_warnings: u64,
+}
+
+impl IngestStats {
+    /// Mean events per injection batch.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_events as f64 / self.batches as f64
+        }
+    }
+}

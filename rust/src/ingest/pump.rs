@@ -1,0 +1,321 @@
+//! The pump: the single consumer that moves events from feed queues
+//! into the coordinator, interleaved with wavefront execution.
+//!
+//! # The canonical cycle
+//!
+//! Each cycle: drain every feed (one lock each, observing events +
+//! watermark + closed atomically), fold the observations into the
+//! [`WatermarkClock`], and compute the frontier `w`. Events at or below
+//! `w` are *sealed* — event time there is complete, no feed can ever
+//! push into it again — so they are sorted into the canonical order
+//! `(at, feed registration index, per-feed push sequence)` and walked
+//! instant by instant, **merged with the coordinator's own pending
+//! events**: at each step the next instant `T` is the earlier of the
+//! next sealed instant and the next heap instant (≤ w); sealed events at
+//! `T` are injected (grouped into maximal consecutive
+//! `(wire, class, region)` runs, one `inject_batch_at_id` each), then
+//! `run_until(T)` executes everything due.
+//!
+//! # Why every arrangement commits the same books
+//!
+//! The merged instant walk is a pure function of (per-feed event
+//! sequences, pipeline state): producer interleaving only changes *when*
+//! events surface in a drain, never their `(at, feed, seq)` key; the
+//! frontier is monotone however advances are batched; and a cycle
+//! boundary (or the adaptive credit truncating a cycle between instants)
+//! just pauses the walk — the next cycle resumes it at the same point.
+//! So AV mint order, delivery order, and commit order — hence sink
+//! books, commit logs, provenance, and span projections — are
+//! byte-identical for any producer thread count, pump cadence, batch
+//! credit, worker count, or node count. Batching changes *when* events
+//! enter the coordinator, never *what* runs at each instant.
+//!
+//! Every injection also happens with `at > now` (strict), except a
+//! genuine event at virtual zero before anything ran — exactly the
+//! currency semantics of classic future-dated `inject_at`.
+
+use super::batcher::AdaptiveBatcher;
+use super::channel::WakeBell;
+use super::source::Feed;
+use super::watermark::{Frontier, StalledFeed, WatermarkClock};
+use super::IngestStats;
+use crate::av::{DataClass, Payload};
+use crate::coordinator::Coordinator;
+use crate::util::{RegionId, SimDuration, SimTime, WireId};
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A drained event staged for sealing, stamped with its canonical sort
+/// key: `(at, feed registration index, per-feed push sequence)`.
+struct StagedEvent {
+    at: SimTime,
+    feed: u32,
+    seq: u64,
+    wire: WireId,
+    payload: Payload,
+    class: DataClass,
+    region: RegionId,
+}
+
+/// What one cycle accomplished — the pump loop's parking decision.
+pub(crate) struct CycleOutcome {
+    /// Bell epoch snapshotted *before* the drains: parking waits past
+    /// this, so a push racing the cycle is never a lost wakeup.
+    pub epoch: u64,
+    /// Drained, injected, or executed anything.
+    pub progress: bool,
+    /// Every feed closed and every staged event injected.
+    pub done: bool,
+}
+
+/// Outcome of [`Coordinator::pump_ingest`]: final ingest statistics plus
+/// how the loop ended.
+#[derive(Debug, Clone)]
+pub struct IngestReport {
+    pub stats: IngestStats,
+    /// The `drain_deadline` elapsed before every feed closed and
+    /// drained — the escape hatch that keeps tests from hanging on a
+    /// producer that never closes.
+    pub timed_out: bool,
+    /// Open feeds pinning the frontier behind their peers when the loop
+    /// ended (empty on a clean drain).
+    pub stalled: Vec<StalledFeed>,
+}
+
+/// Default virtual-time gap behind the leading watermark before an open
+/// feed is reported as stalled.
+pub const DEFAULT_STALL_THRESHOLD: SimDuration = SimDuration(30_000_000);
+
+/// How long one park lasts before the loop re-checks its deadline.
+const PARK_SLICE: Duration = Duration::from_millis(20);
+
+pub(crate) struct IngestPump {
+    feeds: Vec<Feed>,
+    clock: WatermarkClock,
+    staged: Vec<StagedEvent>,
+    batcher: AdaptiveBatcher,
+    pub(crate) bell: Arc<WakeBell>,
+    pub(crate) stats: IngestStats,
+    stall_threshold: SimDuration,
+    /// Last reported stall set (dedup so a persistent laggard warns once).
+    last_stalls: Vec<StalledFeed>,
+}
+
+impl IngestPump {
+    pub fn new() -> Self {
+        Self {
+            feeds: Vec::new(),
+            clock: WatermarkClock::new(),
+            staged: Vec::new(),
+            batcher: AdaptiveBatcher::new(),
+            bell: Arc::new(WakeBell::new()),
+            stats: IngestStats::default(),
+            stall_threshold: DEFAULT_STALL_THRESHOLD,
+            last_stalls: Vec::new(),
+        }
+    }
+
+    pub fn set_stall_threshold(&mut self, t: SimDuration) {
+        self.stall_threshold = t;
+    }
+
+    /// Register a feed (already validated to target an injectable wire).
+    /// Registration order is the canonical same-instant tiebreak.
+    pub fn register(&mut self, feed: Feed) {
+        self.clock.register(feed.wire_name());
+        self.feeds.push(feed);
+    }
+
+    pub fn feed_named(&self, name: &str) -> Option<&Feed> {
+        self.feeds.iter().find(|f| f.wire_name() == name)
+    }
+
+    pub fn stalled(&self) -> Vec<StalledFeed> {
+        self.clock.stalled(self.stall_threshold)
+    }
+
+    /// One canonical cycle: drain → seal → merged instant walk.
+    pub fn cycle(&mut self, coord: &mut Coordinator) -> CycleOutcome {
+        let epoch = self.bell.epoch();
+        self.stats.cycles += 1;
+
+        // -- drain every feed; fold watermarks into the clock
+        let mut drained = 0usize;
+        for (i, f) in self.feeds.iter().enumerate() {
+            let d = f.core.drain();
+            self.clock.observe(i as u32, d.wm, d.closed);
+            self.stats.backpressure_rejections += d.rejected;
+            drained += d.events.len();
+            for ev in d.events {
+                self.staged.push(StagedEvent {
+                    at: ev.at,
+                    feed: i as u32,
+                    seq: ev.seq,
+                    wire: f.wire_id(),
+                    payload: ev.payload,
+                    class: ev.class,
+                    region: ev.region,
+                });
+            }
+        }
+        let backlog = self.staged.len();
+        self.stats.depth_high_water = self.stats.depth_high_water.max(backlog);
+
+        // -- frontier: how far event time is complete
+        let frontier = self.clock.frontier();
+        let seal_to = match frontier {
+            Frontier::Unknown => None,
+            Frontier::At(t) => Some(t),
+            // all feeds closed: everything staged is final
+            Frontier::Open => self.staged.iter().map(|e| e.at).max(),
+        };
+        if let (Some(newest), Frontier::At(t)) =
+            (self.staged.iter().map(|e| e.at).max(), frontier)
+        {
+            let lag = newest.saturating_sub(t);
+            self.stats.watermark_lag_max = self.stats.watermark_lag_max.max(lag);
+        }
+
+        let mut injected = 0usize;
+        let mut cycle_batches = 0u32;
+        let mut cycle_largest = 0usize;
+        let mut ran = 0u64;
+        if let Some(w) = seal_to {
+            // -- seal: pull out everything at or below the frontier
+            let mut ready: Vec<StagedEvent> = Vec::new();
+            let mut i = 0;
+            while i < self.staged.len() {
+                if self.staged[i].at <= w {
+                    ready.push(self.staged.swap_remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+            ready.sort_unstable_by_key(|e| (e.at, e.feed, e.seq));
+            let mut ready: VecDeque<StagedEvent> = ready.into();
+
+            // -- merged instant walk (see module docs)
+            let credit = self.batcher.cycle_credit(backlog);
+            loop {
+                if injected >= credit {
+                    break; // truncate between instants; next cycle resumes
+                }
+                let next_staged = ready.front().map(|e| e.at);
+                let next_heap = coord.next_event_at().filter(|&t| t <= w);
+                let t = match (next_staged, next_heap) {
+                    (None, None) => break,
+                    (Some(a), None) => a,
+                    (None, Some(b)) => b,
+                    (Some(a), Some(b)) => a.min(b),
+                };
+                if next_staged == Some(t) {
+                    // inject this whole instant, in canonical runs
+                    let mut instant: Vec<StagedEvent> = Vec::new();
+                    while ready.front().is_some_and(|e| e.at == t) {
+                        instant.push(ready.pop_front().unwrap());
+                    }
+                    let mut s = 0;
+                    while s < instant.len() {
+                        let (wire, class, region) =
+                            (instant[s].wire, instant[s].class, instant[s].region);
+                        let mut e = s + 1;
+                        while e < instant.len()
+                            && instant[e].wire == wire
+                            && instant[e].class == class
+                            && instant[e].region == region
+                        {
+                            e += 1;
+                        }
+                        let payloads: Vec<Payload> = instant[s..e]
+                            .iter_mut()
+                            .map(|ev| {
+                                std::mem::replace(&mut ev.payload, Payload::Ghost {
+                                    pretend_bytes: 0,
+                                })
+                            })
+                            .collect();
+                        let n = payloads.len();
+                        coord
+                            .inject_batch_at_id(wire, payloads, class, region, t)
+                            .expect("feed wire validated at open_feed");
+                        self.batcher.note_batch(n);
+                        cycle_batches += 1;
+                        cycle_largest = cycle_largest.max(n);
+                        s = e;
+                    }
+                    injected += instant.len();
+                }
+                ran += coord.run_until(t);
+            }
+
+            if ready.is_empty() && injected < credit {
+                // the walk completed: advance virtual time to the
+                // frontier so due timers/polls don't wait for the next
+                // external event (processes nothing — the walk already
+                // drained every instant ≤ w)
+                ran += coord.run_until(w);
+            } else {
+                // truncated: un-walked events resume next cycle
+                self.staged.extend(ready);
+            }
+        }
+
+        self.stats.events += injected as u64;
+        self.stats.batches = self.batcher.batches();
+        self.stats.largest_batch = self.batcher.largest();
+        self.stats.batched_events = self.batcher.batched_events();
+        if injected > 0 && coord.obs_mut().enabled {
+            let now = coord.plat.now;
+            coord.obs_mut().ingest_flush(
+                now,
+                injected as u32,
+                cycle_batches,
+                cycle_largest as u32,
+                backlog as u32,
+            );
+        }
+
+        let done = self.clock.all_closed() && self.staged.is_empty();
+        let progress = drained > 0 || injected > 0 || ran > 0;
+        if !progress && !done {
+            let stalls = self.clock.stalled(self.stall_threshold);
+            if !stalls.is_empty() && stalls != self.last_stalls {
+                self.stats.stall_warnings += 1;
+                coord.plat.metrics.bump("ingest_stalled_feeds");
+                self.last_stalls = stalls;
+            }
+        }
+        CycleOutcome { epoch, progress, done }
+    }
+
+    /// The pump loop: cycle until every feed has closed and drained
+    /// (then flush the coordinator to idle), parking on the bell when a
+    /// cycle makes no progress. `deadline` is the wall-clock escape
+    /// hatch — on expiry the loop returns with `timed_out` set instead
+    /// of hanging on a producer that never closes.
+    pub fn run(&mut self, coord: &mut Coordinator, deadline: Duration) -> IngestReport {
+        let start = Instant::now();
+        loop {
+            let out = self.cycle(coord);
+            if out.done {
+                coord.run_until_idle();
+                return self.report(false);
+            }
+            if out.progress {
+                continue;
+            }
+            let elapsed = start.elapsed();
+            if elapsed >= deadline {
+                return self.report(true);
+            }
+            let nap = PARK_SLICE.min(deadline - elapsed);
+            self.stats.parked += 1;
+            self.bell.wait_past(out.epoch, nap);
+        }
+    }
+
+    fn report(&self, timed_out: bool) -> IngestReport {
+        IngestReport { stats: self.stats.clone(), timed_out, stalled: self.stalled() }
+    }
+}

@@ -1,0 +1,177 @@
+//! Event-time completeness: the clock that decides how far virtual time
+//! may safely advance.
+//!
+//! Each feed carries a *low watermark* — the producer's promise that
+//! every future event on that feed arrives strictly after it. The
+//! pipeline-wide **frontier** is the minimum watermark over open feeds:
+//! below the frontier the event-time order is complete, so the pump may
+//! seal those events and let the coordinator run them. A feed that never
+//! advances (or falls far behind its peers) pins the frontier; the clock
+//! surfaces such feeds as stall anomalies instead of silently freezing
+//! the pipeline.
+
+use crate::util::{SimDuration, SimTime};
+
+/// How far event time is known-complete across all registered feeds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Frontier {
+    /// Every feed has closed: all event time is complete.
+    Open,
+    /// Complete through this instant inclusive (min open-feed watermark).
+    At(SimTime),
+    /// Some open feed has never advanced its watermark — nothing can be
+    /// sealed yet.
+    Unknown,
+}
+
+/// A feed pinning the frontier well behind its peers (or behind the
+/// pump's idle clock): the anomaly report for "why is nothing running?".
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StalledFeed {
+    pub feed: String,
+    /// Its watermark, if it ever advanced one.
+    pub watermark: Option<SimTime>,
+    /// How far the most advanced peer watermark is ahead of this feed.
+    pub behind: SimDuration,
+}
+
+struct FeedTrack {
+    name: String,
+    wm: Option<SimTime>,
+    closed: bool,
+}
+
+/// Tracks every registered feed's watermark and computes the frontier.
+/// Pure bookkeeping — the pump copies channel-observed state in via
+/// [`observe`](WatermarkClock::observe), so the clock never races the
+/// channels.
+pub struct WatermarkClock {
+    feeds: Vec<FeedTrack>,
+}
+
+impl WatermarkClock {
+    pub fn new() -> Self {
+        Self { feeds: Vec::new() }
+    }
+
+    /// Register a feed; returns its dense index (the pump's feed id, and
+    /// the canonical same-instant tiebreak order — registration order).
+    pub fn register(&mut self, name: &str) -> u32 {
+        let id = self.feeds.len() as u32;
+        self.feeds.push(FeedTrack { name: name.to_string(), wm: None, closed: false });
+        id
+    }
+
+    /// Record what a drain observed for feed `id`. Watermarks are
+    /// monotone; closed is sticky.
+    pub fn observe(&mut self, id: u32, wm: Option<SimTime>, closed: bool) {
+        let f = &mut self.feeds[id as usize];
+        if let Some(t) = wm {
+            f.wm = Some(f.wm.map_or(t, |w| w.max(t)));
+        }
+        f.closed |= closed;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.feeds.is_empty()
+    }
+
+    pub fn all_closed(&self) -> bool {
+        self.feeds.iter().all(|f| f.closed)
+    }
+
+    /// The pipeline-wide frontier: min watermark over open feeds.
+    /// Monotone nondecreasing because each feed's watermark is.
+    pub fn frontier(&self) -> Frontier {
+        let mut min: Option<SimTime> = None;
+        for f in self.feeds.iter().filter(|f| !f.closed) {
+            match f.wm {
+                None => return Frontier::Unknown,
+                Some(w) => min = Some(min.map_or(w, |m| m.min(w))),
+            }
+        }
+        match min {
+            Some(t) => Frontier::At(t),
+            None => Frontier::Open,
+        }
+    }
+
+    /// Open feeds whose watermark trails the most advanced peer by more
+    /// than `threshold` (a feed that never advanced counts as trailing
+    /// from zero). Empty when no feed has pulled ahead — uniform silence
+    /// is idleness, not a stall.
+    pub fn stalled(&self, threshold: SimDuration) -> Vec<StalledFeed> {
+        let lead = match self.feeds.iter().filter(|f| !f.closed).filter_map(|f| f.wm).max() {
+            Some(t) => t,
+            None => return Vec::new(),
+        };
+        self.feeds
+            .iter()
+            .filter(|f| !f.closed)
+            .filter(|f| lead.saturating_sub(f.wm.unwrap_or(SimTime::ZERO)) > threshold)
+            .map(|f| StalledFeed {
+                feed: f.name.clone(),
+                watermark: f.wm,
+                behind: lead.saturating_sub(f.wm.unwrap_or(SimTime::ZERO)),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frontier_is_min_over_open_feeds() {
+        let mut c = WatermarkClock::new();
+        let a = c.register("a");
+        let b = c.register("b");
+        assert_eq!(c.frontier(), Frontier::Unknown, "unadvanced feed blocks sealing");
+        c.observe(a, Some(SimTime::micros(10)), false);
+        assert_eq!(c.frontier(), Frontier::Unknown, "one feed still silent");
+        c.observe(b, Some(SimTime::micros(4)), false);
+        assert_eq!(c.frontier(), Frontier::At(SimTime::micros(4)));
+        // closing the laggard releases the frontier to the leader
+        c.observe(b, None, true);
+        assert_eq!(c.frontier(), Frontier::At(SimTime::micros(10)));
+        c.observe(a, None, true);
+        assert_eq!(c.frontier(), Frontier::Open);
+        assert!(c.all_closed());
+    }
+
+    #[test]
+    fn watermarks_are_monotone_under_observation() {
+        let mut c = WatermarkClock::new();
+        let a = c.register("a");
+        c.observe(a, Some(SimTime::micros(9)), false);
+        c.observe(a, Some(SimTime::micros(3)), false);
+        assert_eq!(c.frontier(), Frontier::At(SimTime::micros(9)));
+    }
+
+    #[test]
+    fn stall_detection_names_the_laggard() {
+        let mut c = WatermarkClock::new();
+        let a = c.register("fast");
+        let _b = c.register("silent");
+        let d = c.register("slow");
+        c.observe(a, Some(SimTime::secs(10)), false);
+        c.observe(d, Some(SimTime::secs(9)), false);
+        let stalls = c.stalled(SimDuration::secs(5));
+        assert_eq!(stalls.len(), 1, "slow is within threshold; silent is not");
+        assert_eq!(stalls[0].feed, "silent");
+        assert_eq!(stalls[0].watermark, None);
+        assert_eq!(stalls[0].behind, SimDuration::secs(10));
+        // closed laggards are not stalls
+        c.observe(1, None, true);
+        assert!(c.stalled(SimDuration::secs(5)).is_empty());
+    }
+
+    #[test]
+    fn uniform_silence_is_not_a_stall() {
+        let mut c = WatermarkClock::new();
+        c.register("a");
+        c.register("b");
+        assert!(c.stalled(SimDuration::micros(1)).is_empty());
+    }
+}

@@ -15,6 +15,8 @@
 //! * [`task`] / [`link`] — smart task & link agents
 //! * [`fault`] — the supervised firing lifecycle: deterministic retries,
 //!   quarantine breakers, dead-letter redrive, seeded fault injection
+//! * [`ingest`] — the streaming front door: [`ingest::Feed`] handles,
+//!   watermark-gated virtual time, credit backpressure, adaptive batching
 //! * [`policy`] — snapshot policies (AllNew / SwapNewForOld / Merge / windows)
 //! * [`provenance`] — the three metadata stories (traveller / checkpoint / map)
 //! * [`obs`] — observability: the flight recorder + id-indexed metrics
@@ -34,6 +36,7 @@ pub mod cluster;
 pub mod coordinator;
 pub mod fault;
 pub mod graph;
+pub mod ingest;
 pub mod link;
 pub mod metrics;
 pub mod net;
@@ -52,7 +55,7 @@ pub mod workspace;
 
 /// Convenient imports for examples and downstream users.
 pub mod prelude {
-    pub use crate::api::{Pipeline, PipelineBuilder, SinkHandle, SourceHandle, TaskHandle};
+    pub use crate::api::{FeedHandle, Pipeline, PipelineBuilder, SinkHandle, SourceHandle, TaskHandle};
     pub use crate::av::{DataClass, Payload};
     pub use crate::breadboard::{Breadboard, TapSpec};
     pub use crate::bus::{NotifyMode, TransferStat};
@@ -63,6 +66,10 @@ pub mod prelude {
     pub use crate::fault::{
         default_fault_plan, Backoff, DeadLetter, EventStorm, FaultKind, FaultPlan, FirePolicy,
         OnExhaust,
+    };
+    pub use crate::ingest::{
+        Backpressure, Feed, IngestError, IngestReport, IngestStats, ReplaySource, Source,
+        StalledFeed, TimedEvent,
     };
     pub use crate::net::{demo_topology, WanLink, WanTopology};
     pub use crate::obs::{FiringKind, Obs, SpanEvent, TaskStats, WireStats};

@@ -19,6 +19,16 @@ USAGE:
       (default 200); print the metrics report. --ghost sends wireframe
       batches instead (§III-K).
 
+  koalja soak <spec.koalja> [--seconds N] [--rate-ms M] [--capacity C]
+              [--events E]
+      Streaming-ingestion soak: open a bounded feed on every external
+      wire, push timestamped events from one real producer thread per
+      feed (watermarks advanced as they go) while the main thread pumps
+      them into the pipeline with adaptive batching; print the ingest
+      report and the metrics. --capacity sets the per-feed queue bound
+      (default 1024); --events caps events per feed (also via
+      KOALJA_SOAK_EVENTS, for bounded CI runs).
+
   koalja check <spec.koalja>
       Parse + validate a spec; print tasks, wires, in-trays and sinks.
 
@@ -63,6 +73,7 @@ fn main() {
 fn run(args: &[String]) -> Result<()> {
     match args.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(&args[1..]),
+        Some("soak") => cmd_soak(&args[1..]),
         Some("check") => cmd_check(&args[1..]),
         Some("artifacts") => cmd_artifacts(&args[1..]),
         Some("trace") => cmd_trace(&args[1..]),
@@ -152,6 +163,110 @@ fn cmd_run(args: &[String]) -> Result<()> {
     pipe.run_until(horizon);
     pipe.run_until_idle();
     println!("[{}] {} virtual seconds, ghost={}", spec.name, seconds, ghost);
+    println!("{}", pipe.plat.metrics.report());
+    for sink in pipe.sinks() {
+        println!("sink '{}': {} artifacts", sink.name(&pipe), sink.count(&pipe));
+    }
+    Ok(())
+}
+
+/// Live-ingestion counterpart of `cmd_run`: the same synthetic arrival
+/// process, but pushed through bounded feeds by real producer threads
+/// concurrently with execution, instead of pre-injected into a quiescent
+/// coordinator. Exercises the whole ingest path — backpressure, watermark
+/// gating, adaptive batching — and prints its report.
+fn cmd_soak(args: &[String]) -> Result<()> {
+    let path = args.first().ok_or_else(|| anyhow!("soak: missing spec path"))?;
+    let spec = load_spec(path)?;
+    let seconds: u64 = flag_value(args, "--seconds").map(|v| v.parse()).transpose()?.unwrap_or(10);
+    let rate_ms: u64 = flag_value(args, "--rate-ms").map(|v| v.parse()).transpose()?.unwrap_or(50);
+    let capacity: usize = flag_value(args, "--capacity")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(koalja::ingest::DEFAULT_FEED_CAPACITY);
+    let events_cap: u64 = match flag_value(args, "--events") {
+        Some(v) => v.parse()?,
+        None => std::env::var("KOALJA_SOAK_EVENTS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(u64::MAX),
+    };
+
+    let mut pipe = Pipeline::deploy(&spec, DeployConfig::default())?;
+    let wires = spec.external_wires();
+    if wires.is_empty() {
+        bail!("spec has no external wires to feed");
+    }
+    let mut feeds: Vec<FeedHandle> = Vec::new();
+    for w in &wires {
+        feeds.push(pipe.open_feed_with(w, capacity)?);
+    }
+    let horizon = SimTime::secs(seconds);
+
+    let report = std::thread::scope(|s| {
+        for (i, feed) in feeds.iter().enumerate() {
+            let feed = feed.clone();
+            s.spawn(move || {
+                let mut r = rng(41 + i as u64);
+                let mut t = SimTime::ZERO;
+                let mut sent = 0u64;
+                while sent < events_cap {
+                    let mut dt = SimDuration::millis(rate_ms).scale(r.exp1());
+                    if dt.as_micros() == 0 {
+                        dt = SimDuration::micros(1); // watermark needs strict progress
+                    }
+                    t += dt;
+                    if t > horizon {
+                        break;
+                    }
+                    let data: Vec<f32> = (0..8).map(|_| r.normal() as f32).collect();
+                    feed.push(
+                        t,
+                        Payload::tensor(&[1, 8], data),
+                        DataClass::Summary,
+                        RegionId::new(0),
+                    )
+                    .expect("producer pushes strictly ahead of its own watermark");
+                    feed.advance(t).expect("watermark advances monotonically");
+                    sent += 1;
+                }
+                feed.close();
+            });
+        }
+        // producers block on queue credit, so any deadline generous enough
+        // for the offered load works; 60s is a stall backstop, not a pace
+        pipe.pump_ingest(std::time::Duration::from_secs(60))
+    });
+
+    println!("[{}] soak: {} virtual seconds, {} feed(s)", spec.name, seconds, feeds.len());
+    let st = &report.stats;
+    println!(
+        "ingest: {} events / {} batches (mean {:.1}, largest {}), {} cycles ({} parked)",
+        st.events,
+        st.batches,
+        st.mean_batch(),
+        st.largest_batch,
+        st.cycles,
+        st.parked
+    );
+    println!(
+        "        depth high-water {}/{capacity}, {} try_push rejections, \
+         watermark lag max {} us",
+        st.depth_high_water,
+        st.backpressure_rejections,
+        st.watermark_lag_max.as_micros()
+    );
+    if report.timed_out {
+        println!("        drain deadline hit before all feeds closed");
+    }
+    for sf in &report.stalled {
+        println!(
+            "        stalled feed '{}': watermark {:?} lags the lead by {} us",
+            sf.feed,
+            sf.watermark,
+            sf.behind.as_micros()
+        );
+    }
     println!("{}", pipe.plat.metrics.report());
     for sink in pipe.sinks() {
         println!("sink '{}': {} artifacts", sink.name(&pipe), sink.count(&pipe));
@@ -377,6 +492,9 @@ fn cmd_trace(args: &[String]) -> Result<()> {
             }
             SpanEvent::Transfer { wire, from, to, bytes, tier } => {
                 format!("{} n{from} -> n{to} ({bytes} B, {tier:?})", wname(wire))
+            }
+            SpanEvent::IngestFlush { events, batches } => {
+                format!("{events} event(s) in {batches} batch(es)")
             }
         };
         format!("  {:>6}  t+{:>9}us  {:<18} {detail}", s.seq, s.at.as_micros(), s.event.name())

@@ -95,6 +95,24 @@ pub struct WavefrontStats {
     pub rollbacks: u64,
 }
 
+/// Streaming-ingestion observability: pump flush counters (see
+/// [`crate::ingest`]). Like [`WavefrontStats`], these describe *pacing*
+/// — they may legitimately differ between producer arrangements; the
+/// determinism contract covers books, not cycle chopping.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IngestObs {
+    /// Pump cycles that injected at least one event.
+    pub flushes: u64,
+    /// Events injected by the pump.
+    pub events: u64,
+    /// `inject_batch` calls the pump issued.
+    pub batches: u64,
+    /// Largest single pump injection batch.
+    pub max_batch: u32,
+    /// Deepest combined feed backlog seen at a cycle boundary.
+    pub depth_high_water: u32,
+}
+
 /// The observability registry: one per deployed coordinator, sized to its
 /// interned id spaces at deploy. All recording methods assume the caller
 /// already checked [`Obs::enabled`] — that keeps the disabled cost to
@@ -107,6 +125,7 @@ pub struct Obs {
     tasks: Vec<TaskStats>,
     wires: Vec<WireStats>,
     pub wavefront: WavefrontStats,
+    pub ingest: IngestObs,
 }
 
 impl Obs {
@@ -120,6 +139,7 @@ impl Obs {
             tasks: (0..nt).map(|_| TaskStats::default()).collect(),
             wires: vec![WireStats::default(); nw],
             wavefront: WavefrontStats::default(),
+            ingest: IngestObs::default(),
         }
     }
 
@@ -270,6 +290,26 @@ impl Obs {
         self.rec.record(at, SpanEvent::Transfer { wire, from, to, bytes, tier });
     }
 
+    /// One ingest pump flush: a cycle sealed and injected `events` across
+    /// `batches` `inject_batch` calls (`largest` = biggest of them),
+    /// having observed `depth` backlogged events at the cycle boundary.
+    /// The span is a pacing note ([`SpanEvent::is_pacing_note`]).
+    pub fn ingest_flush(
+        &mut self,
+        at: SimTime,
+        events: u32,
+        batches: u32,
+        largest: u32,
+        depth: u32,
+    ) {
+        self.rec.record(at, SpanEvent::IngestFlush { events, batches });
+        self.ingest.flushes += 1;
+        self.ingest.events += events as u64;
+        self.ingest.batches += batches as u64;
+        self.ingest.max_batch = self.ingest.max_batch.max(largest);
+        self.ingest.depth_high_water = self.ingest.depth_high_water.max(depth);
+    }
+
     // ---- reading ------------------------------------------------------
 
     pub fn task_stats(&self, task: TaskId) -> Option<&TaskStats> {
@@ -363,6 +403,16 @@ impl Obs {
                 ]),
             ),
             (
+                "ingest",
+                Json::obj(vec![
+                    ("flushes", Json::num(self.ingest.flushes as f64)),
+                    ("events", Json::num(self.ingest.events as f64)),
+                    ("batches", Json::num(self.ingest.batches as f64)),
+                    ("max_batch", Json::num(self.ingest.max_batch)),
+                    ("depth_high_water", Json::num(self.ingest.depth_high_water)),
+                ]),
+            ),
+            (
                 "recorder",
                 Json::obj(vec![
                     ("recorded", Json::num(self.rec.recorded() as f64)),
@@ -414,6 +464,10 @@ fn span_json(s: &Span) -> Json {
         SpanEvent::Quarantine { open, .. } => pairs.push(("open", Json::Bool(open))),
         SpanEvent::Redrive { count, .. } => pairs.push(("count", Json::num(count))),
         SpanEvent::FiringDegraded { .. } => {}
+        SpanEvent::IngestFlush { events, batches } => {
+            pairs.push(("events", Json::num(events)));
+            pairs.push(("batches", Json::num(batches)));
+        }
         SpanEvent::Transfer { from, to, bytes, tier, .. } => {
             pairs.push(("from_node", Json::num(from)));
             pairs.push(("to_node", Json::num(to)));

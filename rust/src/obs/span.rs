@@ -108,6 +108,13 @@ pub enum SpanEvent {
     /// comparisons across placements project it out
     /// (see [`SpanEvent::is_movement_note`]).
     Transfer { wire: WireId, from: u32, to: u32, bytes: u64, tier: NetTier },
+    /// One ingest pump cycle sealed and injected events (`events` across
+    /// `batches` `inject_batch` calls). Like scheduling and movement
+    /// notes, this is a *pacing note*: how many instants a cycle sealed
+    /// depends on wall-clock producer/pump interleaving and the adaptive
+    /// credit, so span-identity comparisons across ingestion
+    /// arrangements project it out ([`SpanEvent::is_pacing_note`]).
+    IngestFlush { events: u32, batches: u32 },
 }
 
 impl SpanEvent {
@@ -168,6 +175,7 @@ impl SpanEvent {
             SpanEvent::Redrive { .. } => "redrive",
             SpanEvent::FiringDegraded { .. } => "firing-degraded",
             SpanEvent::Transfer { .. } => "transfer",
+            SpanEvent::IngestFlush { .. } => "ingest-flush",
         }
     }
 
@@ -178,6 +186,16 @@ impl SpanEvent {
     /// worker-count comparisons project out scheduling notes.
     pub fn is_movement_note(&self) -> bool {
         matches!(self, SpanEvent::Transfer { .. })
+    }
+
+    /// Pacing notes record *how* the ingest pump chopped the stream into
+    /// cycles — wall-clock- and credit-dependent by design, the one
+    /// sanctioned span-stream difference between ingestion arrangements.
+    /// Span-identity comparisons across producer thread counts and pump
+    /// cadences project them out, exactly as worker-count comparisons
+    /// project out scheduling notes.
+    pub fn is_pacing_note(&self) -> bool {
+        matches!(self, SpanEvent::IngestFlush { .. })
     }
 }
 

@@ -109,7 +109,10 @@ pub struct ConceptEdge {
 #[derive(Clone, Debug)]
 pub struct InjectionRecord {
     pub av: AvId,
-    pub wire: String,
+    /// Interned at deploy and shared across records: a refcount bump per
+    /// event, not an allocation — large injection batches stay O(1) in
+    /// per-event ledger setup.
+    pub wire: std::sync::Arc<str>,
     pub at: SimTime,
     pub region: RegionId,
     pub class: DataClass,
@@ -463,7 +466,7 @@ mod tests {
         });
         reg.register_object(AvId::new(0), crate::util::ObjectId::new(9), 128);
         assert_eq!(reg.injections().len(), 1);
-        assert_eq!(reg.injections()[0].wire, "raw");
+        assert_eq!(&*reg.injections()[0].wire, "raw");
         assert_eq!(reg.object_of(AvId::new(0)), Some((crate::util::ObjectId::new(9), 128)));
         assert_eq!(reg.object_of(AvId::new(1)), None);
         // disabled registries keep no ledger

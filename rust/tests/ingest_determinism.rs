@@ -1,0 +1,490 @@
+//! Streaming-ingestion determinism: the ingest pump's byte-identical
+//! books contract.
+//!
+//! The core invariant of `koalja::ingest` (DESIGN.md §Streaming
+//! ingestion): for a fixed per-feed event sequence, the committed books
+//! are **byte-identical** — including AV ids, run ids and the retained
+//! span stream (pacing notes projected out) — no matter how the events
+//! arrived: how many producer threads pushed them, what cadence the pump
+//! ran at, how small the bounded queues were (backpressure stalls), how
+//! wide the worker pool was, or whether the flight recorder was on.
+//!
+//! The mechanism under test is the pump's *merged instant walk*: each
+//! cycle seals events up to the watermark frontier and interleaves
+//! per-instant injection with execution so that the id-mint order is a
+//! pure function of the data, never of wall-clock arrival or credit.
+//!
+//! A third arm runs the classic quiescent path (`inject_at` everything,
+//! then `run_until_idle`). Its mint interleaving necessarily differs, so
+//! it is compared on id-free projections only: the deterministic commit
+//! log and the (wire, at, payload) sink book.
+
+use koalja::prelude::*;
+use koalja::util::TaskId;
+use std::fmt::Write as _;
+use std::time::Duration;
+
+/// Pool width for parallel arms: `KOALJA_WORKERS` (the CI matrix leg) or 4.
+fn par_workers() -> usize {
+    std::env::var("KOALJA_WORKERS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .unwrap_or(4)
+        .max(1)
+}
+
+// ---------------------------------------------------------------------
+// fixture: wiring, task code, per-feed event plans
+// ---------------------------------------------------------------------
+
+const WIRING: &str = "\
+[ingestcase]
+(ext0) stage-a (a0, a1)
+(ext1, a0[3]) stage-b (b0)
+(ext2, a1[4/2]) stage-c (c0) @policy=swap
+(b0, c0[2]) merge (out)
+";
+
+/// Deterministic multi-port body: scale per port, defer odd ports —
+/// covers multi-emission routing and deferred publish under the pump.
+fn case_code() -> Box<dyn TaskCode> {
+    Box::new(PortFn::new(|ctx: &mut TaskCtx<'_>, io: &mut PortIo<'_>| {
+        let n_ports = io.outs().len();
+        for av in io.inputs.snapshot().all_avs() {
+            let p = ctx.fetch(av)?;
+            for pi in 0..n_ports {
+                let port = io.out(pi)?;
+                let out = match p.as_tensor() {
+                    Some((shape, data)) => Payload::tensor(
+                        shape,
+                        data.iter().map(|x| x * (pi as f32 + 2.0) + 1.0).collect(),
+                    ),
+                    None => p.clone(),
+                };
+                if pi % 2 == 1 {
+                    io.emitter.emit_after(port, out, SimDuration::micros(150));
+                } else {
+                    io.emitter.emit(port, out);
+                }
+            }
+        }
+        Ok(())
+    }))
+}
+
+/// One feed's event sequence: strictly increasing timestamps (each push
+/// is chased by an `advance`, so non-monotone stamps would be refused).
+struct FeedPlan {
+    wire: &'static str,
+    events: Vec<(SimTime, Vec<f32>)>,
+}
+
+fn plans() -> Vec<FeedPlan> {
+    let mut out = Vec::new();
+    for (fi, wire) in ["ext0", "ext1", "ext2"].iter().enumerate() {
+        let mut r = rng(0x1913_57 + fi as u64);
+        let mut t = SimTime::ZERO;
+        let mut events = Vec::new();
+        for _ in 0..120 {
+            t += SimDuration::micros(1 + r.range(0, 2500) as u64);
+            let data: Vec<f32> = if r.bool(0.3) {
+                vec![1.0, 2.0, 3.0, 4.0] // repeated content → memo hits
+            } else {
+                (0..4).map(|_| (r.range(0, 1000) as f32) / 10.0).collect()
+            };
+            events.push((t, data));
+        }
+        out.push(FeedPlan { wire, events });
+    }
+    out
+}
+
+fn deploy(workers: usize, trace: bool) -> Coordinator {
+    let spec = parse(WIRING).unwrap();
+    let cfg = DeployConfig { workers, trace, ..Default::default() };
+    let mut c = Coordinator::deploy(&spec, cfg).unwrap();
+    for t in 0..c.graph.n_tasks() {
+        let name = c.graph.task(TaskId::new(t as u64)).name.clone();
+        c.set_code(&name, case_code()).unwrap();
+    }
+    c
+}
+
+// ---------------------------------------------------------------------
+// canonical dumps (id-bearing and id-free)
+// ---------------------------------------------------------------------
+
+fn dump_books(c: &Coordinator) -> String {
+    let mut s = String::new();
+    writeln!(s, "== sink book ==").unwrap();
+    for (w, recs) in c.collected.iter() {
+        for rec in recs {
+            writeln!(s, "{w} @{:?} av={:?} payload={:?}", rec.at, rec.av, rec.payload).unwrap();
+        }
+    }
+    writeln!(s, "== commit log ==").unwrap();
+    for sc in c.commit_log() {
+        writeln!(s, "{sc:?}").unwrap();
+    }
+    writeln!(s, "== wire currency ==").unwrap();
+    for w in c.graph.wires.names() {
+        writeln!(s, "{w}: {:?}", c.latest_on_wire.get(w)).unwrap();
+    }
+    writeln!(s, "== passports ==").unwrap();
+    let mut av_ids: Vec<_> = c.plat.prov.passports_iter().map(|(id, _)| *id).collect();
+    av_ids.sort();
+    for id in av_ids {
+        let p = c.plat.prov.passport(id).unwrap();
+        writeln!(s, "{id}: parents={:?} stamps={:?}", p.parents, p.stamps).unwrap();
+    }
+    writeln!(s, "== checkpoint logs ==").unwrap();
+    for t in 0..c.graph.n_tasks() {
+        let id = TaskId::new(t as u64);
+        writeln!(s, "task{t}: {:?}", c.plat.prov.checkpoint_log(id)).unwrap();
+    }
+    writeln!(s, "== counters ==").unwrap();
+    writeln!(
+        s,
+        "task_runs={} memo_hits={} task_errors={} cache={}h/{}m stamps={} puts={} gets={} \
+         events={} joules={:.9}",
+        c.plat.metrics.task_runs,
+        c.plat.metrics.get("memo_hits"),
+        c.plat.metrics.get("task_errors"),
+        c.plat.metrics.cache_hits,
+        c.plat.metrics.cache_misses,
+        c.plat.prov.stamp_count,
+        c.plat.store.puts,
+        c.plat.store.gets,
+        c.events_processed,
+        c.plat.metrics.joules,
+    )
+    .unwrap();
+    s
+}
+
+/// Id-free projections for the classic-arm comparison: the deterministic
+/// commit log (wire, at, content hash — no ids by construction) and the
+/// sink book without AV ids.
+fn dump_id_free(c: &Coordinator) -> String {
+    let mut s = String::new();
+    writeln!(s, "== commit log ==").unwrap();
+    for sc in c.commit_log() {
+        writeln!(s, "{sc:?}").unwrap();
+    }
+    writeln!(s, "== sink book (id-free) ==").unwrap();
+    for (w, recs) in c.collected.iter() {
+        for rec in recs {
+            writeln!(s, "{w} @{:?} payload={:?}", rec.at, rec.payload).unwrap();
+        }
+    }
+    s
+}
+
+/// Span projection: everything retained except scheduling notes
+/// (worker strategy), movement notes (node placement) and pacing notes
+/// (ingest cycle chopping); `seq` omitted — the notes consume it.
+fn dump_spans(c: &Coordinator) -> String {
+    let mut s = String::new();
+    for span in c.obs().rec.spans() {
+        if let SpanEvent::Firing { kind, .. } = span.event {
+            if kind.is_scheduling_note() {
+                continue;
+            }
+        }
+        if span.event.is_movement_note() || span.event.is_pacing_note() {
+            continue;
+        }
+        writeln!(s, "{:?} {:?}", span.at, span.event).unwrap();
+    }
+    s
+}
+
+// ---------------------------------------------------------------------
+// the three arms
+// ---------------------------------------------------------------------
+
+/// Real producer threads, one per feed, pushing concurrently with the
+/// pump loop on the main thread. `capacity` bounds each queue — small
+/// values force producers to block on backpressure mid-stream.
+fn run_threaded(workers: usize, trace: bool, capacity: usize) -> (String, String) {
+    let mut c = deploy(workers, trace);
+    let plans = plans();
+    let feeds: Vec<Feed> =
+        plans.iter().map(|p| c.open_feed_with(p.wire, capacity).unwrap()).collect();
+    let report = std::thread::scope(|s| {
+        for (plan, feed) in plans.iter().zip(&feeds) {
+            let feed = feed.clone();
+            s.spawn(move || {
+                for (at, data) in &plan.events {
+                    feed.push(
+                        *at,
+                        Payload::tensor(&[4], data.clone()),
+                        DataClass::Summary,
+                        RegionId::new(0),
+                    )
+                    .unwrap();
+                    feed.advance(*at).unwrap();
+                }
+                feed.close();
+            });
+        }
+        c.pump_ingest(Duration::from_secs(60))
+    });
+    assert!(!report.timed_out, "producers closed, the pump must drain");
+    assert!(report.stalled.is_empty(), "no feed stalls: {:?}", report.stalled);
+    assert_eq!(
+        report.stats.events,
+        plans.iter().map(|p| p.events.len() as u64).sum::<u64>(),
+        "every pushed event must be injected exactly once"
+    );
+    (dump_books(&c), dump_spans(&c))
+}
+
+/// Single-thread arm: pushes interleaved round-robin in chunks of
+/// `cadence` events per feed, running one manual pump cycle per round —
+/// a completely different arrival/drain chopping from the threaded arm.
+fn run_serial(workers: usize, trace: bool, capacity: usize, cadence: usize) -> (String, String) {
+    let mut c = deploy(workers, trace);
+    let plans = plans();
+    let feeds: Vec<Feed> =
+        plans.iter().map(|p| c.open_feed_with(p.wire, capacity).unwrap()).collect();
+    let mut idx = vec![0usize; plans.len()];
+    while idx.iter().zip(&plans).any(|(i, p)| *i < p.events.len()) {
+        for (fi, plan) in plans.iter().enumerate() {
+            let mut pushed = 0;
+            while pushed < cadence && idx[fi] < plan.events.len() {
+                let (at, data) = &plan.events[idx[fi]];
+                match feeds[fi].try_push(
+                    *at,
+                    Payload::tensor(&[4], data.clone()),
+                    DataClass::Summary,
+                    RegionId::new(0),
+                ) {
+                    Ok(()) => {
+                        feeds[fi].advance(*at).unwrap();
+                        idx[fi] += 1;
+                        pushed += 1;
+                    }
+                    Err(IngestError::Backpressure(bp)) => {
+                        // single-threaded: drain the queue ourselves, retry
+                        assert_eq!(bp.depth, capacity, "refusal reports the observed depth");
+                        assert!(c.ingest_cycle(), "a full queue always gives a cycle work");
+                    }
+                    Err(e) => panic!("unexpected refusal: {e}"),
+                }
+            }
+        }
+        c.ingest_cycle();
+    }
+    for f in &feeds {
+        f.close();
+    }
+    while c.ingest_cycle() {}
+    c.run_until_idle();
+    (dump_books(&c), dump_spans(&c))
+}
+
+/// The pre-existing quiescent path: inject the union of all plans up
+/// front, sorted by (at, feed, seq), then run to idle.
+fn run_classic(workers: usize) -> String {
+    let mut c = deploy(workers, false);
+    let plans = plans();
+    let mut union: Vec<(SimTime, usize, usize, &'static str, Vec<f32>)> = Vec::new();
+    for (fi, plan) in plans.iter().enumerate() {
+        for (seq, (at, data)) in plan.events.iter().enumerate() {
+            union.push((*at, fi, seq, plan.wire, data.clone()));
+        }
+    }
+    union.sort_by(|a, b| (a.0, a.1, a.2).cmp(&(b.0, b.1, b.2)));
+    for (at, _, _, wire, data) in union {
+        c.inject_at(
+            wire,
+            Payload::tensor(&[4], data),
+            DataClass::Summary,
+            RegionId::new(0),
+            at,
+        )
+        .unwrap();
+    }
+    c.run_until_idle();
+    dump_id_free(&c)
+}
+
+fn assert_same(label: &str, expect: &str, got: &str) {
+    if expect != got {
+        for (le, lg) in expect.lines().zip(got.lines()) {
+            assert_eq!(le, lg, "{label}: first divergent line");
+        }
+        panic!("{label}: dumps differ in length only");
+    }
+}
+
+// ---------------------------------------------------------------------
+// the property
+// ---------------------------------------------------------------------
+
+#[test]
+fn ingestion_arrangement_never_moves_a_byte() {
+    let w = par_workers().max(2);
+    // reference: serial, one event per feed per cycle, sequential, traced
+    let (ref_books, ref_spans) = run_serial(1, true, 1024, 1);
+    assert!(ref_books.contains("out @"), "the fixture must commit sink artifacts");
+    assert!(!ref_spans.is_empty(), "traced reference must retain spans");
+
+    // threaded producers × {workers} × {queue capacity} × {trace}
+    for (workers, trace, capacity) in
+        [(1, true, 1024), (w, true, 1024), (w, true, 8), (w, false, 16), (1, false, 8)]
+    {
+        let (books, spans) = run_threaded(workers, trace, capacity);
+        let label =
+            format!("threaded workers={workers} trace={trace} cap={capacity}");
+        assert_same(&label, &ref_books, &books);
+        if trace {
+            assert_same(&format!("{label} (spans)"), &ref_spans, &spans);
+        }
+    }
+
+    // serial pump at coarser cadences and tight queues
+    for (workers, trace, capacity, cadence) in
+        [(1, true, 16, 7), (w, true, 1024, 32), (w, false, 8, 3)]
+    {
+        let (books, spans) = run_serial(workers, trace, capacity, cadence);
+        let label = format!(
+            "serial workers={workers} trace={trace} cap={capacity} cadence={cadence}"
+        );
+        assert_same(&label, &ref_books, &books);
+        if trace {
+            assert_same(&format!("{label} (spans)"), &ref_spans, &spans);
+        }
+    }
+}
+
+#[test]
+fn pump_matches_the_classic_quiescent_path_id_free() {
+    // mint interleaving differs by design, so compare the id-free
+    // projections: commit log bytes and the (wire, at, payload) book
+    let classic = run_classic(1);
+    assert!(classic.contains("SinkCommit"), "classic arm must commit something");
+    let mut c = deploy(par_workers().max(2), true);
+    let plans = plans();
+    let feeds: Vec<Feed> = plans.iter().map(|p| c.open_feed(p.wire).unwrap()).collect();
+    std::thread::scope(|s| {
+        for (plan, feed) in plans.iter().zip(&feeds) {
+            let feed = feed.clone();
+            s.spawn(move || {
+                for (at, data) in &plan.events {
+                    feed.push(
+                        *at,
+                        Payload::tensor(&[4], data.clone()),
+                        DataClass::Summary,
+                        RegionId::new(0),
+                    )
+                    .unwrap();
+                    feed.advance(*at).unwrap();
+                }
+                feed.close();
+            });
+        }
+        c.pump_ingest(Duration::from_secs(60))
+    });
+    assert_same("pump vs classic (id-free)", &classic, &dump_id_free(&c));
+}
+
+// ---------------------------------------------------------------------
+// watermark stalls and backpressure surfaces (integration level)
+// ---------------------------------------------------------------------
+
+#[test]
+fn silent_feed_past_the_threshold_is_reported_stalled() {
+    let mut c = deploy(1, false);
+    let chatty = c.open_feed("ext0").unwrap();
+    let _silent = c.open_feed_with("ext1", 4).unwrap();
+    // chatty advances far beyond DEFAULT_STALL_THRESHOLD (30 virtual s);
+    // the silent feed never advances, pinning the frontier at Unknown
+    chatty
+        .push(SimTime::secs(60), Payload::scalar(1.0), DataClass::Summary, RegionId::new(0))
+        .unwrap();
+    chatty.advance(SimTime::secs(60)).unwrap();
+    let report = c.pump_ingest(Duration::from_millis(50));
+    assert!(report.timed_out, "an open silent feed can never drain");
+    assert_eq!(report.stalled.len(), 1, "stalls: {:?}", report.stalled);
+    let sf = &report.stalled[0];
+    assert_eq!(sf.feed, "ext1");
+    assert_eq!(sf.watermark, None, "the silent feed never advanced");
+    assert!(
+        sf.behind >= SimDuration::secs(60),
+        "lag is measured from the leading watermark: {:?}",
+        sf.behind
+    );
+    assert!(report.stats.stall_warnings > 0, "the stall was counted");
+    assert_eq!(report.stats.events, 0, "nothing seals while the frontier is unknown");
+
+    // closing the laggard releases the frontier; the buffered event lands
+    chatty.close();
+    _silent.close();
+    let report = c.pump_ingest(Duration::from_secs(10));
+    assert!(!report.timed_out);
+    assert_eq!(report.stats.events, 1);
+    assert!(c.ingest_stalled().is_empty());
+}
+
+#[test]
+fn backpressure_refusal_names_the_queue_and_its_depth() {
+    let mut c = deploy(1, false);
+    let feed = c.open_feed_with("ext0", 3).unwrap();
+    for i in 1..=3u64 {
+        feed.try_push(
+            SimTime::micros(i),
+            Payload::scalar(i as f32),
+            DataClass::Summary,
+            RegionId::new(0),
+        )
+        .unwrap();
+    }
+    let err = feed
+        .try_push(SimTime::micros(9), Payload::scalar(9.0), DataClass::Summary, RegionId::new(0))
+        .unwrap_err();
+    match &err {
+        IngestError::Backpressure(bp) => {
+            assert_eq!(bp.queue, "ext0");
+            assert_eq!(bp.depth, 3);
+            assert_eq!(bp.capacity, 3);
+        }
+        other => panic!("expected Backpressure, got {other}"),
+    }
+    assert!(
+        err.to_string().contains("backpressure on feed 'ext0'") && err.to_string().contains("3/3"),
+        "operator-facing message carries the context: {err}"
+    );
+    // the refusal was counted, and draining makes room again
+    assert!(c.ingest_cycle());
+    assert_eq!(c.ingest_stats().unwrap().backpressure_rejections, 1);
+    feed.try_push(SimTime::micros(10), Payload::scalar(1.0), DataClass::Summary, RegionId::new(0))
+        .unwrap();
+}
+
+#[test]
+fn adaptive_batcher_coalesces_under_load() {
+    // push many events landing on few instants: the pump should inject
+    // them in far fewer batches than events
+    let mut c = deploy(1, false);
+    let feed = c.open_feed("ext0").unwrap();
+    for i in 0..400u64 {
+        // 400 events on 8 distinct instants (50 per instant, one batch each)
+        let at = SimTime::millis(1 + i / 50);
+        feed.push(at, Payload::scalar(i as f32), DataClass::Summary, RegionId::new(0)).unwrap();
+    }
+    feed.advance(SimTime::millis(9)).unwrap();
+    feed.close();
+    let report = c.pump_ingest(Duration::from_secs(30));
+    assert!(!report.timed_out);
+    let st = &report.stats;
+    assert_eq!(st.events, 400);
+    assert_eq!(st.largest_batch, 50, "a full instant is one inject_batch call");
+    assert!(
+        st.mean_batch() > 10.0,
+        "coalescing must beat per-event injection: mean {}",
+        st.mean_batch()
+    );
+    assert!(st.depth_high_water >= 50, "the queue visibly filled: {}", st.depth_high_water);
+}

@@ -8,8 +8,9 @@ Reads two schema-1 bench reports ({"schema":1,"bench":...,"results":
 matters: for ns/op-style metrics (unit contains "ns") an increase is a
 regression; for rate metrics (events/s, hops/s, ...) a decrease is.
 
-Exit code 1 only when an ns/event metric regresses by more than
-FAIL_PCT; other regressions above WARN_PCT warn. Labels present in only
+Exit code 1 only when a hard-gated metric (ns/event, or the ingest
+soak's sustained_events_per_sec) regresses by more than FAIL_PCT;
+other regressions above WARN_PCT warn. Labels present in only
 one file are reported informationally (new shapes appear, old ones
 retire — that is trajectory, not failure). An empty baseline (the seed
 commit before any measured run) compares clean by definition.
@@ -41,6 +42,16 @@ central-arm WAN bytes divided by the optimized-placement arm's. It is
 an in-report gate (no baseline needed, so it also runs on seed
 commits): below EDGE_MIN_REDUCTION fails — the placement optimizer is
 not paying for itself; below EDGE_GOOD_REDUCTION warns.
+
+The ingest-soak report (ingest-soak/offered-Nk/...) gates two ways.
+`sustained_events_per_sec` shares the hard-fail contract with
+ns_per_event: a regression beyond FAIL_PCT vs baseline fails the run
+(the streaming front door slowing down >35% is a broken subsystem, not
+noise). `mean_batch` is an in-report warn gate (no baseline needed):
+the arm with the highest offered rate must coalesce larger injection
+batches than the lowest-rate arm, or the adaptive batcher is not
+engaging under load — warn, never fail, because a fast enough pump can
+legitimately drain windows before they deepen.
 """
 
 import json
@@ -77,6 +88,11 @@ METADATA_LABELS = {
     # edge-vs-central workload shape knobs (config, not measurements)
     "edges",
     "chunk_rows",
+    # ingest-soak workload shape knobs (events honors KOALJA_SOAK_EVENTS,
+    # so a bounded CI run vs a full local run must not read as a delta)
+    "ingest-soak/events",
+    "ingest-soak/window_us",
+    "ingest-soak/capacity",
 }
 
 
@@ -103,8 +119,10 @@ def load(path):
 
 def lower_is_better(label, unit):
     # latencies and wallclock shrink when things improve; rates and
-    # speedups grow. The par-* wall_ms metrics are wallclock.
-    return "ns" in unit or "ns_per" in label or unit == "ms" or "wall_ms" in label
+    # speedups grow. The par-* wall_ms metrics are wallclock; the
+    # ingest-soak p50_us/p99_us metrics are enqueue-to-commit latency.
+    return ("ns" in unit or "ns_per" in label or unit == "ms" or "wall_ms" in label
+            or unit == "us" or label.endswith("_us"))
 
 
 def parallel_speedup_check(fresh):
@@ -181,6 +199,33 @@ def edge_central_check(fresh):
     return 0
 
 
+def soak_check(fresh):
+    """Warn when adaptive batching shows no growth across offered rates.
+
+    Reads the fresh report only: the ingest-soak arms quantize arrival
+    times onto a shared window grid, so the highest offered rate packs
+    the most events per instant and its mean injection batch must exceed
+    the lowest rate's. Returns the number of warnings raised (0 or 1);
+    absent or single-arm reports are skipped silently (other benches).
+    """
+    arms = {}
+    for label in fresh:
+        m = re.match(r"ingest-soak/offered-(\d+)k/mean_batch$", label)
+        if m:
+            arms[int(m.group(1))] = fresh[label][0]
+    if len(arms) < 2:
+        return 0
+    lo, hi = min(arms), max(arms)
+    if arms[hi] <= arms[lo]:
+        print(f"bench_delta: warn — ingest-soak mean_batch does not grow with load "
+              f"(offered-{hi}k: {arms[hi]:.1f} <= offered-{lo}k: {arms[lo]:.1f}); "
+              "adaptive batching is not engaging")
+        return 1
+    print(f"{'ingest-soak batch growth':44} {arms[hi] / max(arms[lo], 1e-9):12.1f}x  "
+          f"mean batch, offered-{lo}k -> offered-{hi}k")
+    return 0
+
+
 def main():
     if len(sys.argv) != 3:
         print(__doc__)
@@ -192,6 +237,7 @@ def main():
         print("bench_delta: no baseline measurements to compare against "
               "(seed commit or unreadable baseline) — recording first trajectory point")
         parallel_speedup_check(fresh)
+        soak_check(fresh)
         # the in-report gates (recorder overhead, edge-placement payoff)
         # hold even before any baseline exists
         return 1 if obs_overhead_check(fresh) or edge_central_check(fresh) else 0
@@ -216,7 +262,10 @@ def main():
         # feature must cost no more than noise vs the committed baseline
         off_arms = ("obs-overhead/off", "fault-overhead/off")
         fail_pct = OBS_OFF_FAIL_PCT if label.startswith(off_arms) else FAIL_PCT
-        if regression > fail_pct and "ns_per_event" in label:
+        # hard-fail metrics: ns/event (the hot path) and the ingest
+        # soak's sustained absorption rate (the streaming front door)
+        gated = "ns_per_event" in label or "sustained_events_per_sec" in label
+        if regression > fail_pct and gated:
             verdict = f"FAIL (> {fail_pct:.0f}% regression)"
             if worst_fail is None or regression > worst_fail[1]:
                 worst_fail = (label, regression)
@@ -239,6 +288,7 @@ def main():
               "(commit the fresh JSON to baseline them)")
 
     warnings += parallel_speedup_check(fresh)
+    warnings += soak_check(fresh)
     obs_failed = obs_overhead_check(fresh)
     edge_failed = edge_central_check(fresh)
 
