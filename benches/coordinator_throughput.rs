@@ -211,19 +211,44 @@ fn par_worker_count() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(4, 8)
 }
 
+/// Topology of a compute-heavy parallel shape.
+#[derive(Clone, Copy)]
+enum ParShape {
+    /// Linear pipeline: 1-wide instants, parallel only via the
+    /// cross-instant pipeline (frontier scheduling).
+    Chain,
+    /// One wire fanning to `width` leaves: N-wide instants.
+    Fanout,
+    /// `width` arms between a shared source wire and a fan-in join:
+    /// wide instants *and* cross-instant overlap (the join for arrival
+    /// k runs alongside the arms for arrival k+1).
+    Diamond,
+}
+
 /// One run of a compute-heavy parallel shape. Returns (wall seconds over
 /// inject+drain, total sink captures) — the capture count must match
 /// across `workers` arms (the determinism contract's cheap proxy here;
 /// the byte-level property lives in rust/tests/wavefront_determinism.rs).
-fn run_par_shape(chain: bool, width: usize, workers: usize) -> (f64, usize) {
+fn run_par_shape(shape: ParShape, width: usize, workers: usize) -> (f64, usize) {
     let mut text = String::from("[par]\n");
-    if chain {
-        for d in 0..width {
-            text.push_str(&format!("(w{d}) t{d} (w{})\n", d + 1));
+    match shape {
+        ParShape::Chain => {
+            for d in 0..width {
+                text.push_str(&format!("(w{d}) t{d} (w{})\n", d + 1));
+            }
         }
-    } else {
-        for i in 0..width {
-            text.push_str(&format!("(x) leaf{i} (s{i})\n"));
+        ParShape::Fanout => {
+            for i in 0..width {
+                text.push_str(&format!("(x) leaf{i} (s{i})\n"));
+            }
+        }
+        ParShape::Diamond => {
+            let mut arms: Vec<String> = Vec::new();
+            for i in 0..width {
+                text.push_str(&format!("(x) arm{i} (a{i})\n"));
+                arms.push(format!("a{i}"));
+            }
+            text.push_str(&format!("({}) join (out)\n", arms.join(", ")));
         }
     }
     let spec = parse(&text).unwrap();
@@ -247,15 +272,21 @@ fn run_par_shape(chain: bool, width: usize, workers: usize) -> (f64, usize) {
             Ok(())
         })) as Box<dyn TaskCode>
     };
-    let task_names: Vec<String> = if chain {
-        (0..width).map(|d| format!("t{d}")).collect()
-    } else {
-        (0..width).map(|i| format!("leaf{i}")).collect()
+    let task_names: Vec<String> = match shape {
+        ParShape::Chain => (0..width).map(|d| format!("t{d}")).collect(),
+        ParShape::Fanout => (0..width).map(|i| format!("leaf{i}")).collect(),
+        ParShape::Diamond => {
+            let mut v: Vec<String> = (0..width).map(|i| format!("arm{i}")).collect();
+            v.push("join".to_string());
+            v
+        }
     };
     for name in &task_names {
         c.set_code(name, heavy()).unwrap();
     }
-    let wid = c.wire_id(if chain { "w0" } else { "x" }).unwrap();
+    let wid = c
+        .wire_id(if matches!(shape, ParShape::Chain) { "w0" } else { "x" })
+        .unwrap();
     let wall = std::time::Instant::now();
     for i in 0..PAR_ARRIVALS {
         // distinct payloads per arrival: memoization never short-circuits
@@ -271,10 +302,10 @@ fn run_par_shape(chain: bool, width: usize, workers: usize) -> (f64, usize) {
     }
     c.run_until_idle();
     let secs = wall.elapsed().as_secs_f64().max(1e-9);
-    let collected: usize = if chain {
-        c.collected_count(&format!("w{width}"))
-    } else {
-        (0..width).map(|i| c.collected_count(&format!("s{i}"))).sum()
+    let collected: usize = match shape {
+        ParShape::Chain => c.collected_count(&format!("w{width}")),
+        ParShape::Fanout => (0..width).map(|i| c.collected_count(&format!("s{i}"))).sum(),
+        ParShape::Diamond => c.collected_count("out"),
     };
     (secs, collected)
 }
@@ -348,27 +379,29 @@ fn main() {
     // ---- parallel wavefront shapes: speedup vs the workers=1 twin ----
     //
     // par-fanout-N: one injection wire fanning to N compute-heavy leaf
-    // tasks — every arrival instant forms an N-wide wavefront, the case
-    // the scheduler parallelizes. par-chain-N: a linear pipeline of the
-    // same heavy stages — stages fire at *different* instants (each
-    // publication lands later in virtual time), so its wavefronts are
-    // 1-wide and the honest expectation is speedup ≈ 1.0; it is reported
-    // to keep the scheduler honest about where parallelism exists.
-    // tools/bench_delta.py warns when a ≥4-wide fan-out speeds up < 1.2x.
+    // tasks — every arrival instant forms an N-wide wavefront, the
+    // classic same-instant case. par-chain-N: a linear pipeline of the
+    // same heavy stages — its instants are 1-wide, so any speedup comes
+    // entirely from the frontier pipeline overlapping *instants* (stage
+    // N on arrival k+1 while stage N+1 runs arrival k). par-diamond-N:
+    // N arms into a fan-in join — wide instants and cross-instant
+    // overlap at once. tools/bench_delta.py warns when any of them
+    // speeds up < 1.2x.
     table_header(
         "E11c: parallel wavefront scheduler — wallclock vs workers=1 (byte-identical books)",
         &["shape", "workers", "seq_ms", "par_ms", "speedup"],
     );
     {
         let par_workers = par_worker_count();
-        let shapes: [(&str, bool, usize); 3] = [
-            ("par-chain-8", true, 8),
-            ("par-fanout-4", false, 4),
-            ("par-fanout-8", false, 8),
+        let shapes: [(&str, ParShape, usize); 4] = [
+            ("par-chain-8", ParShape::Chain, 8),
+            ("par-fanout-4", ParShape::Fanout, 4),
+            ("par-fanout-8", ParShape::Fanout, 8),
+            ("par-diamond-4", ParShape::Diamond, 4),
         ];
-        for (label, chain, width) in shapes {
-            let (seq_s, seq_out) = run_par_shape(chain, width, 1);
-            let (par_s, par_out) = run_par_shape(chain, width, par_workers);
+        for (label, shape, width) in shapes {
+            let (seq_s, seq_out) = run_par_shape(shape, width, 1);
+            let (par_s, par_out) = run_par_shape(shape, width, par_workers);
             assert_eq!(seq_out, par_out, "{label}: workers must not change the books");
             let speedup = seq_s / par_s.max(1e-9);
             row(&[

@@ -91,6 +91,11 @@ if [ "$HAVE_CARGO" = 1 ]; then
 
     run_step "cargo-test" 0 cargo test -q
 
+    # rustdoc must keep building: the module overviews and handle docs
+    # are the documented API surface (advisory — warnings don't gate)
+    run_step "cargo-doc" 1 cargo doc --no-deps
+
+
     # observability smoke + artifact: a traced CLI session over the fig. 5
     # spec, exporting the schema'd obs snapshot (artifacts/obs/*.json) the
     # same way `koalja trace` does for users
@@ -209,7 +214,7 @@ if [ "$HAVE_CARGO" = 1 ]; then
     rm -f "$SOAK_BASELINE"
 else
     echo "note: cargo not found — rust tier skipped in this environment"
-    for s in cargo-fmt cargo-clippy bench-tap-overhead; do
+    for s in cargo-fmt cargo-clippy cargo-doc bench-tap-overhead; do
         record "$s" skip 1 0
     done
     for s in cargo-build cargo-build-examples cargo-test obs-trace \

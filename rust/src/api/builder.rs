@@ -49,6 +49,10 @@ pub struct PipelineBuilder {
     /// Deploy-time override of [`DeployConfig::trace`] (flight recorder +
     /// metrics); `None` = whatever the passed config says.
     trace: Option<bool>,
+    /// Deploy-time override of [`DeployConfig::reorder_window`]
+    /// (pipelined multi-instant scheduling depth); `None` = config (and
+    /// its `KOALJA_REORDER_WINDOW` ambient default) wins.
+    reorder_window: Option<usize>,
     /// Deploy-time override of the simulated node count
     /// ([`DeployConfig::placement`]`.nodes`); `None` = config (and its
     /// `KOALJA_NODES` ambient default) wins.
@@ -71,6 +75,7 @@ impl PipelineBuilder {
             errors: Vec::new(),
             workers: None,
             trace: None,
+            reorder_window: None,
             nodes: None,
             pins: BTreeMap::new(),
             feeds: Vec::new(),
@@ -97,6 +102,18 @@ impl PipelineBuilder {
     /// `build()`'s spec is unaffected.
     pub fn trace(mut self, on: bool) -> Self {
         self.trace = Some(on);
+        self
+    }
+
+    /// Set the pipelined-scheduling window the deployment runs with: how
+    /// many virtual instants may execute concurrently before retiring
+    /// (see [`DeployConfig::reorder_window`] and DESIGN.md §Execution
+    /// model). `1` restores the strict per-instant barrier; `0` = auto
+    /// (the worker-pool width). Results are byte-identical for every
+    /// value — commits always retire in `(instant, task-index)` order. A
+    /// deploy-time knob: `build()`'s spec is unaffected.
+    pub fn reorder_window(mut self, n: usize) -> Self {
+        self.reorder_window = Some(n);
         self
     }
 
@@ -184,6 +201,9 @@ impl PipelineBuilder {
         }
         if let Some(t) = self.trace {
             cfg.trace = t;
+        }
+        if let Some(w) = self.reorder_window {
+            cfg.reorder_window = w;
         }
         if let Some(n) = self.nodes {
             cfg.placement.nodes = n;
@@ -325,6 +345,13 @@ impl TaskBuilder {
     /// [`PipelineBuilder::trace`]).
     pub fn trace(mut self, on: bool) -> Self {
         self.pb.trace = Some(on);
+        self
+    }
+
+    /// Set the pipelined-scheduling window mid-chain (see
+    /// [`PipelineBuilder::reorder_window`]).
+    pub fn reorder_window(mut self, n: usize) -> Self {
+        self.pb.reorder_window = Some(n);
         self
     }
 

@@ -1,0 +1,220 @@
+//! Frontier progress tracking for pipelined multi-instant scheduling.
+//!
+//! The PR 5 wavefront scheduler parallelized firings *within* one virtual
+//! instant but kept a hard barrier between instants: no task could start
+//! instant `T+k` until every task had committed instant `T`. This module
+//! supplies the bookkeeping that breaks that barrier, in the style of
+//! timely-dataflow progress tracking: each in-flight unit of work (one
+//! instant's extracted wavefront) owns a *capability* over the set of tasks
+//! it may still affect, and a later instant may be extracted early exactly
+//! when its events touch no task under an outstanding capability.
+//!
+//! Two inputs feed the tracker:
+//!
+//! * **Tasks** contribute the minimum instant at which they may still
+//!   publish. Concretely, an extracted-but-unretired unit shadows every
+//!   task it woke *plus the transitive downstream closure* of those tasks,
+//!   because a firing at instant `T` can publish onto wires that reach any
+//!   of them at `T+δ`. While a task is shadowed its events must wait.
+//! * **Injection feeds** contribute their ingest watermarks
+//!   ([`crate::ingest::WatermarkClock`], PR 9): the pump reports each sealed
+//!   epoch's frontier via `note_ingest`, so observers can see how far the
+//!   external front door has progressed relative to the execution frontier.
+//!
+//! The tracker is deliberately *conservative and cheap*: closures are
+//! precomputed bitsets (one `u64` word per 64 tasks) at deploy time, and
+//! occupy/release are word-wise loops. It never consults payloads or wire
+//! contents — eligibility is a pure graph property, which is what makes the
+//! determinism argument in `DESIGN.md` §Execution model tractable: the set
+//! of instants overlapped depends only on {graph, event order}, never on
+//! thread timing.
+
+use crate::util::ids::TaskId;
+use crate::util::time::SimTime;
+
+/// One in-flight unit's capability: the bitset of tasks it shadows.
+///
+/// Returned by [`FrontierTracker::occupy`]; hand it back to
+/// [`FrontierTracker::release`] when the unit retires. The mask is plain
+/// data (no lifetimes) so the coordinator can stash it inside the unit.
+#[derive(Debug, Clone, Default)]
+pub struct ShadowMask {
+    words: Vec<u64>,
+}
+
+impl ShadowMask {
+    /// True if no task is shadowed by this mask.
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|w| *w == 0)
+    }
+}
+
+/// Per-task input-frontier tracker (see module docs).
+///
+/// Owned by the coordinator; rebuilt at deploy time from the pipeline
+/// graph. All methods are `O(n_tasks / 64)` or better — this sits on the
+/// event-loop hot path.
+#[derive(Debug, Default)]
+pub struct FrontierTracker {
+    n_tasks: usize,
+    /// `closure[t]` = bitset over tasks: `t` itself plus every task
+    /// transitively downstream of `t` in the wiring diagram.
+    closure: Vec<Vec<u64>>,
+    /// Per-task count of in-flight units shadowing it. A count (not a
+    /// bit) because several units may cover the same task.
+    shadow: Vec<u32>,
+    /// Number of units currently extracted but not yet retired.
+    in_flight: usize,
+    /// Latest sealed ingest watermark reported by the pump, if any.
+    ingest_frontier: Option<SimTime>,
+    // -- occupancy counters (surfaced through the obs snapshot) --
+    /// Total units ever occupied (== pipelined instants extracted).
+    pub units_total: u64,
+    /// High-water mark of simultaneously in-flight units.
+    pub peak_in_flight: usize,
+}
+
+fn words_for(n: usize) -> usize {
+    n.div_ceil(64)
+}
+
+impl FrontierTracker {
+    /// Build the tracker for a graph with `n_tasks` tasks, given the
+    /// transitive downstream closure of each task (as produced by
+    /// `PipelineGraph::reachable_downstream`).
+    pub fn new(n_tasks: usize, downstream: impl Fn(TaskId) -> Vec<TaskId>) -> Self {
+        let w = words_for(n_tasks);
+        let mut closure = vec![vec![0u64; w]; n_tasks];
+        for t in 0..n_tasks {
+            closure[t][t / 64] |= 1u64 << (t % 64);
+            for d in downstream(TaskId::new(t as u64)) {
+                let i = d.index();
+                closure[t][i / 64] |= 1u64 << (i % 64);
+            }
+        }
+        Self {
+            n_tasks,
+            closure,
+            shadow: vec![0; n_tasks],
+            in_flight: 0,
+            ingest_frontier: None,
+            units_total: 0,
+            peak_in_flight: 0,
+        }
+    }
+
+    /// True if `task` sits under an outstanding capability: some extracted
+    /// but unretired unit may still publish onto a wire that reaches it.
+    pub fn is_shadowed(&self, task: TaskId) -> bool {
+        self.shadow.get(task.index()).is_some_and(|c| *c > 0)
+    }
+
+    /// Number of units currently extracted but not yet retired.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Claim a capability for one unit: shadow every task in `tasks` plus
+    /// its transitive downstream closure. Returns the mask to pass to
+    /// [`Self::release`] at retirement.
+    pub fn occupy(&mut self, tasks: impl IntoIterator<Item = TaskId>) -> ShadowMask {
+        let mut words = vec![0u64; words_for(self.n_tasks)];
+        for t in tasks {
+            if let Some(cl) = self.closure.get(t.index()) {
+                for (acc, w) in words.iter_mut().zip(cl) {
+                    *acc |= *w;
+                }
+            }
+        }
+        for (wi, w) in words.iter().enumerate() {
+            let mut bits = *w;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                self.shadow[wi * 64 + b] += 1;
+                bits &= bits - 1;
+            }
+        }
+        self.in_flight += 1;
+        self.units_total += 1;
+        self.peak_in_flight = self.peak_in_flight.max(self.in_flight);
+        ShadowMask { words }
+    }
+
+    /// Retire one unit's capability (the inverse of [`Self::occupy`]).
+    pub fn release(&mut self, mask: &ShadowMask) {
+        for (wi, w) in mask.words.iter().enumerate() {
+            let mut bits = *w;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                self.shadow[wi * 64 + b] -= 1;
+                bits &= bits - 1;
+            }
+        }
+        self.in_flight -= 1;
+    }
+
+    /// Record the ingest watermark the pump just sealed to. Monotone:
+    /// regressions (a late feed re-opening an epoch never happens, but
+    /// defensive anyway) are ignored.
+    pub fn note_ingest(&mut self, w: SimTime) {
+        if self.ingest_frontier.is_none_or(|cur| w > cur) {
+            self.ingest_frontier = Some(w);
+        }
+    }
+
+    /// Latest sealed ingest watermark, if the pump has reported one.
+    pub fn ingest_frontier(&self) -> Option<SimTime> {
+        self.ingest_frontier
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // chain 0 -> 1 -> 2, plus isolated 3
+    fn chain_downstream(t: TaskId) -> Vec<TaskId> {
+        match t.index() {
+            0 => vec![TaskId::new(1), TaskId::new(2)],
+            1 => vec![TaskId::new(2)],
+            _ => vec![],
+        }
+    }
+
+    #[test]
+    fn occupy_shadows_downstream_closure() {
+        let mut fr = FrontierTracker::new(4, chain_downstream);
+        let mask = fr.occupy([TaskId::new(0)]);
+        assert!(fr.is_shadowed(TaskId::new(0)));
+        assert!(fr.is_shadowed(TaskId::new(1)));
+        assert!(fr.is_shadowed(TaskId::new(2)));
+        assert!(!fr.is_shadowed(TaskId::new(3)));
+        assert_eq!(fr.in_flight(), 1);
+        fr.release(&mask);
+        assert!(!fr.is_shadowed(TaskId::new(1)));
+        assert_eq!(fr.in_flight(), 0);
+    }
+
+    #[test]
+    fn overlapping_units_count_not_bit() {
+        let mut fr = FrontierTracker::new(4, chain_downstream);
+        let a = fr.occupy([TaskId::new(0)]);
+        let b = fr.occupy([TaskId::new(1)]);
+        // task 2 is shadowed by both units; releasing one must keep it.
+        fr.release(&a);
+        assert!(fr.is_shadowed(TaskId::new(2)));
+        fr.release(&b);
+        assert!(!fr.is_shadowed(TaskId::new(2)));
+        assert_eq!(fr.units_total, 2);
+        assert_eq!(fr.peak_in_flight, 2);
+    }
+
+    #[test]
+    fn ingest_frontier_is_monotone() {
+        let mut fr = FrontierTracker::new(1, |_| vec![]);
+        assert_eq!(fr.ingest_frontier(), None);
+        fr.note_ingest(SimTime::micros(50));
+        fr.note_ingest(SimTime::micros(20));
+        assert_eq!(fr.ingest_frontier(), Some(SimTime::micros(50)));
+    }
+}

@@ -14,7 +14,17 @@
 //!
 //! Ghost batches (§III-K), software-update recomputation (§III-J), poll vs
 //! push wakeups (Principle 1) and scale-to-zero sweeps also dispatch here.
+//!
+//! Scheduling is **pipelined across instants** by default: a frontier
+//! tracker ([`frontier`]) knows which tasks can still be affected by
+//! in-flight work, so independent tasks from several virtual instants
+//! execute concurrently while commits retire strictly in
+//! `(instant, task-index)` order inside a bounded reorder window
+//! ([`DeployConfig::reorder_window`]). Every committed byte is identical
+//! to the per-instant schedule's — DESIGN.md §Execution model carries
+//! the argument, `rust/tests/wavefront_determinism.rs` the proof.
 
+pub mod frontier;
 pub mod make;
 mod wavefront;
 
@@ -103,6 +113,19 @@ pub struct DeployConfig {
     /// `KOALJA_FAULT_SEED` is set) injects nothing and keeps the whole
     /// supervision layer off the hot path.
     pub fault: Option<FaultPlan>,
+    /// Pipelined multi-instant scheduling window (see
+    /// [`crate::coordinator::frontier`]): how many virtual instants may be
+    /// in flight — extracted, executing, but not yet retired — at once.
+    /// Events at instant `T+k` whose target tasks sit outside every
+    /// in-flight instant's downstream shadow may start executing while
+    /// instant `T` is still open; commits still land in strict
+    /// `(instant, task-index)` order, so sink books, commit logs,
+    /// provenance, dead letters and span projections are byte-identical
+    /// for **every** window setting (the determinism invariant in
+    /// DESIGN.md §Execution model). `1` disables pipelining (the pure
+    /// per-instant barrier); `0` means "auto": use [`DeployConfig::workers`].
+    /// Defaults to `KOALJA_REORDER_WINDOW` when set, else auto.
+    pub reorder_window: usize,
 }
 
 /// The deploy-time default for [`DeployConfig::workers`]: the
@@ -115,6 +138,19 @@ pub fn default_workers() -> usize {
         }
     }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The deploy-time default for [`DeployConfig::reorder_window`]: the
+/// `KOALJA_REORDER_WINDOW` env override (the CI determinism matrix sets
+/// it to 1 and 64), else `0` = auto (resolve to the worker-pool width at
+/// deploy).
+pub fn default_reorder_window() -> usize {
+    if let Ok(v) = std::env::var("KOALJA_REORDER_WINDOW") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n;
+        }
+    }
+    0
 }
 
 /// The deploy-time default for [`DeployConfig::trace`]: the `KOALJA_TRACE`
@@ -141,6 +177,7 @@ impl Default for DeployConfig {
             workers: default_workers(),
             trace: default_trace(),
             fault: crate::fault::default_fault_plan(),
+            reorder_window: default_reorder_window(),
         }
     }
 }
@@ -344,6 +381,36 @@ struct PendingPump {
     via_poll: bool,
 }
 
+/// One order-sensitive artifact produced while dispatching a *staged*
+/// instant under pipelined scheduling (see [`frontier`]). Commutative
+/// bookkeeping (bus pushes, byte counters, wire currency) runs live at
+/// stage time; artifacts whose *sequence* is part of the determinism
+/// contract — tap ring observations, transfer spans, sovereignty error
+/// records — are buffered here and replayed at the unit's retirement, in
+/// staged-dispatch order, so every `reorder_window` produces the same
+/// books and span projections.
+enum StagedArtifact {
+    Tap { wire: WireId, av: Arc<AnnotatedValue> },
+    Transfer(crate::bus::TransferNote),
+    Denied { link_idx: usize, av: Arc<AnnotatedValue> },
+}
+
+/// One extracted-but-unretired instant under pipelined scheduling: its
+/// wavefront groups (indices into the batch's flat group vector), the
+/// frontier capability it holds, and its buffered dispatch artifacts.
+struct InFlightUnit {
+    at: SimTime,
+    handled: u32,
+    /// Range into the batch's flat `Vec<WaveGroup>`.
+    groups: std::ops::Range<usize>,
+    /// Tasks whose groups were extracted while quarantined — their
+    /// firings dead-letter at retirement (commit order), not at stage
+    /// time (the divert draws run ids).
+    quarantined: Vec<usize>,
+    mask: frontier::ShadowMask,
+    artifacts: Vec<StagedArtifact>,
+}
+
 /// One structured sovereignty refusal (§IV): a delivery the zone policy
 /// denied, with enough context to fix the pipeline. The delivery itself
 /// keeps the established drop semantics (passport stamped, counter
@@ -395,6 +462,19 @@ pub struct Coordinator {
     pub taps: TapBoard,
     /// Wavefront worker-pool width (see [`DeployConfig::workers`]).
     workers: usize,
+    /// Resolved pipelining window (see [`DeployConfig::reorder_window`]):
+    /// `1` = per-instant barrier, `> 1` = up to that many instants in
+    /// flight. The `0 = auto` sentinel was resolved to `workers` at deploy.
+    reorder_window: usize,
+    /// Per-task input-frontier tracker (see [`frontier`]): which tasks sit
+    /// under an in-flight instant's downstream shadow, plus the ingest
+    /// watermark the pump last sealed to.
+    frontier: frontier::FrontierTracker,
+    /// Order-sensitive artifacts of the instant currently being *staged*
+    /// (`Some` only inside the pipelined drain's dispatch phase — the
+    /// dispatch hooks divert taps, transfer spans and sovereignty errors
+    /// here for replay at retirement).
+    stage_buf: Option<Vec<StagedArtifact>>,
     /// Tasks woken during the current same-instant event batch, awaiting
     /// the wavefront flush (dedup'd, flushed in task-index order).
     pending_pumps: Vec<PendingPump>,
@@ -595,6 +675,15 @@ impl Coordinator {
         let shard = ShardPlan::build(&graph, &regions, &cfg.placement);
         let exchange = Exchange::build(&graph, &shard, &regions, &plat.net, &plat.metrics.energy);
 
+        let workers = cfg.workers.max(1);
+        // resolve the 0 = auto sentinel: pipeline as deep as the pool is
+        // wide (a deeper window cannot be *wrong* — commits stay ordered —
+        // it just holds more memory in flight)
+        let reorder_window =
+            if cfg.reorder_window == 0 { workers } else { cfg.reorder_window }.max(1);
+        let frontier_tracker =
+            frontier::FrontierTracker::new(n_tasks, |t| graph.reachable_downstream(t));
+
         Ok(Self {
             graph,
             agents,
@@ -613,7 +702,10 @@ impl Coordinator {
             out_links,
             link_buffer,
             taps: TapBoard::bound(wire_names),
-            workers: cfg.workers.max(1),
+            workers,
+            reorder_window,
+            frontier: frontier_tracker,
+            stage_buf: None,
             pending_pumps: Vec::new(),
             commit_log: Vec::new(),
             obs: Obs::sized(cfg.trace, n_tasks, n_wires),
@@ -632,6 +724,25 @@ impl Coordinator {
     /// fully sequential).
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Resolved pipelining window this deployment runs with (`1` = the
+    /// per-instant barrier; see [`DeployConfig::reorder_window`]).
+    pub fn reorder_window(&self) -> usize {
+        self.reorder_window
+    }
+
+    /// The frontier tracker (in-flight instant shadows + ingest
+    /// watermark; see [`frontier`]). Read-only — occupancy statistics
+    /// also surface in the obs snapshot's `wavefront.frontier` object.
+    pub fn frontier(&self) -> &frontier::FrontierTracker {
+        &self.frontier
+    }
+
+    /// Ingest-pump handoff: record the watermark the pump just sealed to
+    /// as the injection feeds' contribution to the input frontier.
+    pub(crate) fn note_ingest_frontier(&mut self, w: SimTime) {
+        self.frontier.note_ingest(w);
     }
 
     /// The node partition this deployment runs under.
@@ -1039,12 +1150,20 @@ impl Coordinator {
 
     /// Process events up to and including `horizon`. Returns events handled.
     ///
-    /// The loop advances one virtual *instant* at a time: every event at
-    /// the next instant is dispatched in heap order (cheap bookkeeping —
-    /// deliveries, tap observations, sweeps; wakes and polls only enqueue
-    /// their task), then the resulting **wavefront** of ready, mutually
-    /// independent task firings executes — on the worker pool when
-    /// `workers > 1` — and commits deterministically in task-index order.
+    /// With `reorder_window = 1` the loop advances one virtual *instant*
+    /// at a time: every event at the next instant is dispatched in heap
+    /// order (cheap bookkeeping — deliveries, tap observations, sweeps;
+    /// wakes and polls only enqueue their task), then the resulting
+    /// **wavefront** of ready, mutually independent task firings executes
+    /// — on the worker pool when `workers > 1` — and commits
+    /// deterministically in task-index order.
+    ///
+    /// With `reorder_window > 1` the per-instant barrier is gone: up to
+    /// `reorder_window` instants whose events the frontier tracker proves
+    /// independent are staged and *execute* concurrently, while commits
+    /// still retire in strict `(instant, task-index)` order — the books
+    /// are byte-identical either way (see [`frontier`] and DESIGN.md
+    /// §Execution model).
     pub fn run_until(&mut self, horizon: SimTime) -> u64 {
         let mut handled = 0;
         loop {
@@ -1052,7 +1171,11 @@ impl Coordinator {
                 Some(Reverse(e)) if e.at <= horizon => e.at,
                 _ => break,
             };
-            handled += self.drain_instant(at);
+            handled += if self.reorder_window > 1 {
+                self.drain_pipelined(horizon)
+            } else {
+                self.drain_instant(at)
+            };
         }
         if self.plat.now < horizon {
             self.plat.now = horizon;
@@ -1089,7 +1212,11 @@ impl Coordinator {
                 Some(Reverse(e)) => e.at,
                 None => break,
             };
-            handled += self.drain_instant(at);
+            handled += if self.reorder_window > 1 {
+                self.drain_pipelined(SimTime(u64::MAX))
+            } else {
+                self.drain_instant(at)
+            };
             if handled > self.storm_cap {
                 self.plat.metrics.bump("event_storms");
                 self.events_processed += handled;
@@ -1161,6 +1288,342 @@ impl Coordinator {
         handled
     }
 
+    /// Which task must be clear of in-flight shadows before this event
+    /// may be staged? `Deliver`/`Wake`/`Poll`/`RetryFire` gate on their
+    /// target (a shadowed target means an earlier open instant may still
+    /// publish into it); `TapObserve` touches no task; `ScaleSweep` is a
+    /// batch barrier handled by the caller. Routing retries through this
+    /// check is what keeps a quarantined task from holding back unrelated
+    /// frontiers: its `RetryFire` blocks only its own closure.
+    fn stage_target(&self, kind: &EventKind) -> Option<TaskId> {
+        match kind {
+            EventKind::Deliver { link, .. } => Some(self.links[*link as usize].link.to),
+            EventKind::Wake { task } | EventKind::Poll { task } => Some(*task),
+            EventKind::RetryFire { task, .. } => Some(*task),
+            EventKind::TapObserve { .. } | EventKind::ScaleSweep => None,
+        }
+    }
+
+    /// One pipelined scheduling round (`reorder_window > 1`): stage up to
+    /// `reorder_window` frontier-independent instants ≤ `horizon`
+    /// (phase A), execute all their wavefront groups in a single pool
+    /// pass (phase B), then retire them in instant order (phase C).
+    /// Returns events handled; `0` only when nothing ≤ `horizon` was
+    /// pending.
+    ///
+    /// The determinism invariant (DESIGN.md §Execution model): overlap is
+    /// of *execution only*. Every order-sensitive mutation — run/AV id
+    /// draws, provenance stamps, sink commits, tap rings, span streams,
+    /// dead letters, sovereignty errors — happens at retirement, in
+    /// strict `(instant, task-index)` order, so any window setting
+    /// commits byte-identical books.
+    fn drain_pipelined(&mut self, horizon: SimTime) -> u64 {
+        let mut handled: u64 = 0;
+        let mut units: Vec<InFlightUnit> = Vec::new();
+        let mut groups: Vec<WaveGroup> = Vec::new();
+
+        // ---- phase A: stage eligible instants ----
+        while units.len() < self.reorder_window {
+            let at = match self.queue.peek() {
+                Some(Reverse(e)) if e.at <= horizon => e.at,
+                _ => break,
+            };
+            // pop the instant's events, vetting each against the frontier
+            let mut staged: Vec<Ev> = Vec::new();
+            let mut sweep = false;
+            let mut blocked = false;
+            while self.queue.peek().is_some_and(|Reverse(e)| e.at == at) {
+                let Reverse(ev) = self.queue.pop().unwrap();
+                match ev.kind {
+                    EventKind::ScaleSweep => sweep = true,
+                    ref k => {
+                        if self.stage_target(k).is_some_and(|t| self.frontier.is_shadowed(t)) {
+                            blocked = true;
+                        }
+                    }
+                }
+                staged.push(ev);
+            }
+            if sweep || blocked {
+                // restore the heap exactly (original at/seq; the seq
+                // counter is untouched, so heap order is preserved)
+                for ev in staged {
+                    self.queue.push(Reverse(ev));
+                }
+                if units.is_empty() {
+                    // nothing in flight: a sweep instant (which reads
+                    // cluster state commits mutate) runs on the legacy
+                    // path with clean state. `blocked` is unreachable
+                    // here — no shadows without in-flight units — but
+                    // the legacy drain is the correct fallback anyway.
+                    handled += self.drain_instant(at);
+                    continue;
+                }
+                // conflict with an open instant: stop the batch and let
+                // phase C retire what we have; the next round resumes here
+                break;
+            }
+
+            // dispatch the instant's events with order-sensitive
+            // artifacts diverted to the stage buffer (commutative
+            // bookkeeping — bus pushes, counters, currency — runs live)
+            self.plat.now = at;
+            self.stage_buf = Some(Vec::new());
+            let mut n: u32 = 0;
+            for ev in staged {
+                self.dispatch(ev.kind);
+                n += 1;
+            }
+            // same-instant cascade: deliveries wake their tasks through
+            // the queue
+            while self.queue.peek().is_some_and(|Reverse(e)| e.at == at) {
+                let Reverse(ev) = self.queue.pop().unwrap();
+                self.dispatch(ev.kind);
+                n += 1;
+            }
+            let artifacts = self.stage_buf.take().unwrap_or_default();
+
+            // extract the instant's wavefront. No quarantine divert here:
+            // the divert draws run ids, which must happen in commit order
+            // at retirement.
+            let mut pumps = std::mem::take(&mut self.pending_pumps);
+            pumps.sort_by_key(|p| p.task);
+            let start = groups.len();
+            let mut quarantined: Vec<usize> = Vec::new();
+            let supervised = self.supervision.active();
+            for p in &pumps {
+                let (firings, queued) = self.collect_snapshots_core(p.task);
+                if supervised && !firings.is_empty() && self.supervision.quarantined(p.task) {
+                    quarantined.push(groups.len());
+                }
+                groups.push(WaveGroup {
+                    task: p.task,
+                    at,
+                    via_poll: p.via_poll,
+                    queued,
+                    firings,
+                });
+            }
+            pumps.clear();
+            self.pending_pumps = pumps;
+
+            // the pipelining note: this instant entered execution while
+            // `behind` earlier instants were still open. Never present
+            // with window = 1, so it is projected out of cross-window
+            // span comparisons (SpanEvent::is_pipelining_note).
+            let behind = self.frontier.in_flight() as u32;
+            if self.obs.enabled && behind >= 1 {
+                self.obs.frontier_advance(at, behind);
+            }
+            let mask = self.frontier.occupy(groups[start..].iter().map(|g| g.task));
+            units.push(InFlightUnit {
+                at,
+                handled: n,
+                groups: start..groups.len(),
+                quarantined,
+                mask,
+                artifacts,
+            });
+            handled += n as u64;
+        }
+        if units.is_empty() {
+            return handled;
+        }
+
+        // ---- phase B: one pool pass over every staged instant ----
+        // quarantined groups never execute: park their firings for the
+        // retirement-time dead-letter divert
+        let mut q_fire: HashMap<usize, Vec<Firing>> = HashMap::new();
+        for u in &units {
+            for &gi in &u.quarantined {
+                q_fire.insert(gi, std::mem::take(&mut groups[gi].firings));
+            }
+        }
+        let busy = groups.iter().filter(|g| !g.firings.is_empty()).count();
+        let pooled = (self.workers > 1 || self.shard.nodes > 1) && busy >= 2;
+        let mut prepared: Vec<Vec<PreparedFiring>> = if pooled {
+            if self.obs.enabled {
+                self.obs.wavefront_parallel(busy as u32);
+            }
+            wavefront::execute_parallel(self, &mut groups)
+        } else {
+            Vec::new()
+        };
+
+        // ---- phase C: retire units in instant order ----
+        enum Member {
+            /// Index into the batch's flat group/prepared vectors.
+            Staged(usize),
+            /// A straggler group pumped at retirement (quarantined flag).
+            Fresh(WaveGroup, bool),
+        }
+        for ui in 0..units.len() {
+            let at = units[ui].at;
+            // instants created by earlier retirements that precede this
+            // unit are complete window-1 instants: legacy path
+            loop {
+                let next = match self.queue.peek() {
+                    Some(Reverse(e)) if e.at < at => e.at,
+                    _ => break,
+                };
+                handled += self.drain_instant(next);
+            }
+            self.plat.now = at;
+            // replay the staged dispatch's order-sensitive artifacts, in
+            // staged-dispatch order
+            for art in std::mem::take(&mut units[ui].artifacts) {
+                match art {
+                    StagedArtifact::Tap { wire, av } => {
+                        if self.obs.enabled {
+                            self.obs.tap_observe(at, wire, av.id);
+                        }
+                        self.taps.observe(wire, &av, &self.plat.store, at);
+                    }
+                    StagedArtifact::Transfer(note) => {
+                        if self.obs.enabled {
+                            self.obs.transfer(
+                                at,
+                                note.wire,
+                                note.from_node as u32,
+                                note.to_node as u32,
+                                note.bytes,
+                                note.tier,
+                            );
+                        }
+                    }
+                    StagedArtifact::Denied { link_idx, av } => {
+                        self.record_sovereignty_error(link_idx, &av);
+                    }
+                }
+            }
+            // stragglers: events at exactly this instant pushed by
+            // earlier retirements. Dispatched live (the stage buffer is
+            // off) — they sort after the staged events by sequence
+            // number, exactly as the window-1 drain would pop them.
+            let mut n = units[ui].handled;
+            while self.queue.peek().is_some_and(|Reverse(e)| e.at == at) {
+                let Reverse(ev) = self.queue.pop().unwrap();
+                self.dispatch(ev.kind);
+                n += 1;
+                handled += 1;
+            }
+            if self.obs.enabled {
+                self.obs.instant(at, n);
+            }
+            // straggler wavefront groups (targets provably disjoint from
+            // this unit's staged groups — else this unit would not have
+            // been eligible)
+            let mut pumps = std::mem::take(&mut self.pending_pumps);
+            pumps.sort_by_key(|p| p.task);
+            let supervised = self.supervision.active();
+            let mut members: Vec<(TaskId, Member)> = units[ui]
+                .groups
+                .clone()
+                .map(|gi| (groups[gi].task, Member::Staged(gi)))
+                .collect();
+            for p in &pumps {
+                let (firings, queued) = self.collect_snapshots_core(p.task);
+                let q =
+                    supervised && !firings.is_empty() && self.supervision.quarantined(p.task);
+                members.push((
+                    p.task,
+                    Member::Fresh(
+                        WaveGroup { task: p.task, at, via_poll: p.via_poll, queued, firings },
+                        q,
+                    ),
+                ));
+            }
+            pumps.clear();
+            self.pending_pumps = pumps;
+            members.sort_by_key(|(t, _)| *t);
+
+            // quarantine diverts first, in task order — the same point
+            // (phase 1, pre-commit) and id order as the window-1 drain
+            for (task, m) in &mut members {
+                match m {
+                    Member::Staged(gi) => {
+                        if units[ui].quarantined.contains(gi) {
+                            let f = q_fire.remove(gi).unwrap_or_default();
+                            self.quarantine_divert(*task, f);
+                        }
+                    }
+                    Member::Fresh(g, q) => {
+                        if *q {
+                            let f = std::mem::take(&mut g.firings);
+                            self.quarantine_divert(*task, f);
+                        }
+                    }
+                }
+            }
+            let width: u32 = members
+                .iter()
+                .map(|(_, m)| match m {
+                    Member::Staged(gi) => {
+                        if pooled {
+                            prepared[*gi].len() as u32
+                        } else {
+                            groups[*gi].firings.len() as u32
+                        }
+                    }
+                    Member::Fresh(g, _) => g.firings.len() as u32,
+                })
+                .sum();
+            if self.obs.enabled && width > 0 {
+                self.obs.wavefront_begin(at, width);
+            }
+            // commit in task-index order: replay recorded effects /
+            // execute fresh firings, then the pump epilogue — the same
+            // per-group sequence as the per-instant flush
+            for (task, m) in members {
+                match m {
+                    Member::Staged(gi) => {
+                        if pooled {
+                            for item in std::mem::take(&mut prepared[gi]) {
+                                match item {
+                                    PreparedFiring::Deferred(firing, reason) => {
+                                        if self.obs.enabled {
+                                            match reason {
+                                                DeferReason::Sequential => self
+                                                    .obs
+                                                    .note_deferred_sequential(at, task),
+                                                DeferReason::Direct => {
+                                                    self.obs.note_rollback(at, task)
+                                                }
+                                                DeferReason::MemoHit => {
+                                                    self.obs.note_deferred_memo()
+                                                }
+                                            }
+                                        }
+                                        self.fire_supervised(task, firing);
+                                    }
+                                    PreparedFiring::Recorded(rec) => {
+                                        self.commit_recorded(task, rec)
+                                    }
+                                }
+                            }
+                        } else {
+                            for firing in std::mem::take(&mut groups[gi].firings) {
+                                self.fire_supervised(task, firing);
+                            }
+                        }
+                        self.pump_epilogue(task, groups[gi].queued, groups[gi].via_poll);
+                    }
+                    Member::Fresh(g, _) => {
+                        for firing in g.firings {
+                            self.fire_supervised(task, firing);
+                        }
+                        self.pump_epilogue(task, g.queued, g.via_poll);
+                    }
+                }
+            }
+            if self.obs.enabled && width > 0 {
+                self.obs.wavefront_commit(at, width);
+            }
+            self.frontier.release(&units[ui].mask);
+        }
+        handled
+    }
+
     pub fn pending_events(&self) -> usize {
         self.queue.len()
     }
@@ -1198,10 +1661,17 @@ impl Coordinator {
                 }
             }
             EventKind::TapObserve { wire, av } => {
-                if self.obs.enabled {
-                    self.obs.tap_observe(self.plat.now, wire, av.id);
+                // staged instant: tap rings are ordered, so the
+                // observation replays at retirement (canonical order),
+                // not now
+                if let Some(buf) = self.stage_buf.as_mut() {
+                    buf.push(StagedArtifact::Tap { wire, av });
+                } else {
+                    if self.obs.enabled {
+                        self.obs.tap_observe(self.plat.now, wire, av.id);
+                    }
+                    self.taps.observe(wire, &av, &self.plat.store, self.plat.now);
                 }
-                self.taps.observe(wire, &av, &self.plat.store, self.plat.now);
             }
             EventKind::RetryFire { task, firing } => {
                 // the retry joins this instant's wavefront like any fresh
@@ -1230,7 +1700,17 @@ impl Coordinator {
         // denied one pays none at all (§Perf)
         let verdict = self.links[link_idx].deliver(&mut self.plat, &av);
         match verdict {
-            Delivery::Denied => self.record_sovereignty_error(link_idx, &av),
+            Delivery::Denied => {
+                // staged instant: the error book is event-ordered, so the
+                // record (and its exchange/metrics bookkeeping) replays at
+                // retirement in staged-dispatch order
+                match self.stage_buf.as_mut() {
+                    Some(buf) => {
+                        buf.push(StagedArtifact::Denied { link_idx, av: Arc::clone(&av) })
+                    }
+                    None => self.record_sovereignty_error(link_idx, &av),
+                }
+            }
             Delivery::NotifyNow => {
                 self.last_arrival.insert(task, self.plat.now);
                 self.push_event(self.plat.now, EventKind::Wake { task });
@@ -1251,7 +1731,12 @@ impl Coordinator {
             // span is projected out of placement-identity comparisons.
             if let Some(note) = self.exchange.record(self.links[link_idx].link.id, av.size_bytes)
             {
-                if self.obs.enabled {
+                // staged instant: the exchange sums are commutative (they
+                // ran just now), but the span stream is ordered — defer
+                // the recording to retirement
+                if let Some(buf) = self.stage_buf.as_mut() {
+                    buf.push(StagedArtifact::Transfer(note));
+                } else if self.obs.enabled {
                     self.obs.transfer(
                         self.plat.now,
                         note.wire,
@@ -1372,7 +1857,13 @@ impl Coordinator {
         let mut groups: Vec<WaveGroup> = Vec::with_capacity(pumps.len());
         for p in &pumps {
             let (firings, queued) = self.collect_snapshots(p.task);
-            groups.push(WaveGroup { task: p.task, via_poll: p.via_poll, queued, firings });
+            groups.push(WaveGroup {
+                task: p.task,
+                at: self.plat.now,
+                via_poll: p.via_poll,
+                queued,
+                firings,
+            });
         }
         let busy = groups.iter().filter(|g| !g.firings.is_empty()).count();
         // wavefront spans carry the width only (identical for every
@@ -1439,8 +1930,26 @@ impl Coordinator {
     /// sequential pump performed, minus the fires (which commit later).
     /// Fires never feed the same instant back (publication costs are
     /// strictly positive), so the snapshot sequence is identical to
-    /// firing inline.
+    /// firing inline. This wrapper adds the inline quarantine divert the
+    /// per-instant path wants; the pipelined path calls
+    /// [`Self::collect_snapshots_core`] and diverts at retirement instead
+    /// (the divert draws run ids, which must be allocated in commit
+    /// order).
     fn collect_snapshots(&mut self, task: TaskId) -> (Vec<Firing>, usize) {
+        let (mut firings, queued) = self.collect_snapshots_core(task);
+        if self.supervision.active()
+            && !firings.is_empty()
+            && self.supervision.quarantined(task)
+        {
+            // circuit open: dead-letter everything without executing
+            self.quarantine_divert(task, std::mem::take(&mut firings));
+        }
+        (firings, queued)
+    }
+
+    /// The divert-free body of [`Self::collect_snapshots`]: drain retries
+    /// and ready snapshots into firings, reporting the queued backlog.
+    fn collect_snapshots_core(&mut self, task: TaskId) -> (Vec<Firing>, usize) {
         // autoscaling signal: how much work was waiting when we woke (the
         // bounded snapshot buffers hide the burst; the topics don't)
         let queued: usize = self.in_links[task.index()]
@@ -1483,10 +1992,6 @@ impl Coordinator {
             if !self.pull_one(task) {
                 break;
             }
-        }
-        if active && !firings.is_empty() && self.supervision.quarantined(task) {
-            // circuit open: dead-letter everything without executing
-            self.quarantine_divert(task, std::mem::take(&mut firings));
         }
         (firings, queued)
     }

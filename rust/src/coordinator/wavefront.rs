@@ -1,18 +1,25 @@
-//! The parallel half of the wavefront scheduler: execute one instant's
-//! ready, mutually independent task firings on a `std::thread::scope`
-//! worker pool.
+//! The parallel half of the wavefront scheduler: execute ready, mutually
+//! independent task firings on a `std::thread::scope` worker pool. One
+//! call carries one instant's wavefront on the per-instant path, or the
+//! groups of several overlapped instants under pipelined scheduling
+//! (`reorder_window > 1`; see `coordinator::frontier`) — each group
+//! executes under its own instant's clock either way.
 //!
-//! Safety/determinism model (see DESIGN.md §Perf notes):
+//! Safety/determinism model (see DESIGN.md §Execution model):
 //!  * **Disjoint ownership** — each wavefront task's [`TaskAgent`] is
 //!    handed to exactly one worker as `&mut` (split out of the agent
 //!    vector), so agent-local state (snapshot engine aside — it was
 //!    drained in phase 1 — the dependent-local cache, memo, code state,
 //!    recycled emission buffer) mutates with no synchronization at all.
+//!    The frontier tracker guarantees a task appears in at most one
+//!    in-flight group, so the multi-instant case plucks disjoint agents
+//!    exactly like the single-instant one.
 //!  * **Frozen world** — workers read the platform through a `Sync`
-//!    [`WorldView`] (committed object store, WAN topology, the instant's
+//!    [`WorldView`] (committed object store, WAN topology, the group's
 //!    clock). Nothing a wavefront firing can read is written until the
-//!    commit phase: publications land strictly later in virtual time, so
-//!    same-instant firings are mutually independent by construction.
+//!    commit phase: publications land strictly later in virtual time, and
+//!    the object store is append-only, so in-flight firings are mutually
+//!    independent by construction even across instants.
 //!  * **Recorded effects** — would-be platform mutations go to each
 //!    firing's [`EffectLog`](crate::task::effects::EffectLog); the
 //!    coordinator replays them in task-index order, drawing run/AV/object
@@ -42,23 +49,30 @@ use crate::fault::Firing;
 use crate::graph::WireTable;
 use crate::task::effects::{DeferReason, PreparedFiring, WorldView};
 use crate::task::TaskAgent;
-use crate::util::ContentHash;
+use crate::util::{ContentHash, SimTime};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// One wavefront member: a woken task, its extracted ready firings, and
-/// the pump-epilogue inputs (autoscale signal, poll re-arm flag).
+/// the pump-epilogue inputs (autoscale signal, poll re-arm flag). `at`
+/// is the virtual instant the group was extracted at — equal to
+/// `plat.now` on the per-instant path, but under pipelined multi-instant
+/// scheduling (see `coordinator::frontier`) one execute call can carry
+/// groups from several instants, each seeing its own clock.
 pub(crate) struct WaveGroup {
     pub task: TaskId,
+    pub at: SimTime,
     pub via_poll: bool,
     pub queued: usize,
     pub firings: Vec<Firing>,
 }
 
 /// A unit of worker work: one group's agent (exclusively borrowed) plus
-/// its firings, tagged with the group's result slot.
+/// its firings, tagged with the group's result slot and its instant
+/// (the `WorldView` clock this job executes under).
 struct Job<'a> {
     group_idx: usize,
+    at: SimTime,
     agent: &'a mut TaskAgent,
     firings: Vec<Firing>,
 }
@@ -71,7 +85,7 @@ pub(super) fn execute_parallel(
     groups: &mut [WaveGroup],
 ) -> Vec<Vec<PreparedFiring>> {
     let Coordinator { agents, plat, graph, workers, shard, .. } = coord;
-    let world = WorldView { store: &plat.store, net: &plat.net, now: plat.now };
+    let (store, net) = (&plat.store, &plat.net);
     let wires: &WireTable = &graph.wires;
 
     // pluck each wavefront agent as a disjoint &mut out of the agent
@@ -88,7 +102,8 @@ pub(super) fn execute_parallel(
     for (i, agent) in agents.iter_mut().enumerate() {
         if let Some(group_idx) = slot_of.remove(&i) {
             let firings = std::mem::take(&mut groups[group_idx].firings);
-            jobs.push(Mutex::new(Some(Job { group_idx, agent, firings })));
+            let at = groups[group_idx].at;
+            jobs.push(Mutex::new(Some(Job { group_idx, at, agent, firings })));
             job_node.push(shard.node(TaskId::new(i as u64)));
         }
     }
@@ -102,7 +117,6 @@ pub(super) fn execute_parallel(
         // the schedule (a node is a simulated machine, not a pool slot).
         let jobs_ref = &jobs;
         let results_ref = &results;
-        let world_ref = &world;
         std::thread::scope(|s| {
             for node in 0..shard.nodes {
                 let mine: Vec<usize> = job_node
@@ -116,9 +130,10 @@ pub(super) fn execute_parallel(
                 }
                 s.spawn(move || {
                     for j in mine {
-                        let Job { group_idx, agent, firings } =
+                        let Job { group_idx, at, agent, firings } =
                             jobs_ref[j].lock().unwrap().take().expect("each job is taken once");
-                        let out = prepare_group(agent, wires, world_ref, firings);
+                        let world = WorldView { store, net, now: at };
+                        let out = prepare_group(agent, wires, &world, firings);
                         *results_ref[group_idx].lock().unwrap() = out;
                     }
                 });
@@ -135,8 +150,9 @@ pub(super) fn execute_parallel(
                 if i >= jobs.len() {
                     break;
                 }
-                let Job { group_idx, agent, firings } =
+                let Job { group_idx, at, agent, firings } =
                     jobs[i].lock().unwrap().take().expect("each job is taken once");
+                let world = WorldView { store, net, now: at };
                 let out = prepare_group(agent, wires, &world, firings);
                 *results[group_idx].lock().unwrap() = out;
             });

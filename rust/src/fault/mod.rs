@@ -82,6 +82,12 @@ pub enum OnExhaust {
 }
 
 /// Per-task supervision policy for firings.
+///
+/// Retries are ordinary future-dated events: a backed-off attempt
+/// re-enters the schedule through the coordinator's frontier tracker
+/// like any other wake, so under pipelined scheduling a retrying (or
+/// quarantined) task delays only its own downstream closure — unrelated
+/// tasks' frontiers keep advancing past it.
 #[derive(Clone, Debug)]
 pub struct FirePolicy {
     /// Total attempts per firing (1 = no retries).

@@ -14,6 +14,9 @@
 //! - [`WatermarkClock`] — event-time completeness: virtual time advances
 //!   only when every open feed's low watermark has passed, and feeds
 //!   pinning the frontier are surfaced as [`StalledFeed`] anomalies.
+//!   Each sealed watermark is also handed to the coordinator's frontier
+//!   tracker (`coordinator::frontier`) as the feeds' contribution to the
+//!   input frontier that drives pipelined multi-instant scheduling.
 //! - An adaptive batcher whose per-cycle injection credit grows with
 //!   queue depth, so `inject_batch_at_id`'s amortized setup makes
 //!   throughput *improve* under pressure.

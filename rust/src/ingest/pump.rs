@@ -182,6 +182,10 @@ impl IngestPump {
         let mut cycle_largest = 0usize;
         let mut ran = 0u64;
         if let Some(w) = seal_to {
+            // frontier handoff: the injection feeds' contribution to the
+            // coordinator's input frontier (see coordinator::frontier) —
+            // event time ≤ w is complete, no feed can push below it again
+            coord.note_ingest_frontier(w);
             // -- seal: pull out everything at or below the frontier
             let mut ready: Vec<StagedEvent> = Vec::new();
             let mut i = 0;

@@ -93,6 +93,16 @@ pub struct WavefrontStats {
     pub deferred: u64,
     /// Deferred firings that were worker rollbacks specifically.
     pub rollbacks: u64,
+    /// Frontier occupancy: instants extracted for pipelined execution
+    /// while at least one earlier instant was still in flight (each one
+    /// also records a [`SpanEvent::FrontierAdvance`] pipelining note).
+    pub frontier_advances: u64,
+    /// Sum of `behind` counts over those advances (mean overlap depth =
+    /// `frontier_behind_accum / frontier_advances`).
+    pub frontier_behind_accum: u64,
+    /// Deepest overlap seen: the most in-flight earlier instants any
+    /// single extraction ran ahead of.
+    pub frontier_peak_behind: u32,
 }
 
 /// Streaming-ingestion observability: pump flush counters (see
@@ -186,6 +196,18 @@ impl Obs {
 
     pub fn wavefront_commit(&mut self, at: SimTime, width: u32) {
         self.rec.record(at, SpanEvent::WavefrontCommit { width });
+    }
+
+    /// Pipelining note + occupancy: virtual instant `at` was extracted
+    /// for execution while `behind` earlier instants were still in
+    /// flight. Only recorded with `behind >= 1` (running alone is not an
+    /// advance); projected out of cross-window span comparisons
+    /// ([`SpanEvent::is_pipelining_note`]).
+    pub fn frontier_advance(&mut self, at: SimTime, behind: u32) {
+        self.rec.record(at, SpanEvent::FrontierAdvance { behind });
+        self.wavefront.frontier_advances += 1;
+        self.wavefront.frontier_behind_accum += behind as u64;
+        self.wavefront.frontier_peak_behind = self.wavefront.frontier_peak_behind.max(behind);
     }
 
     pub fn firing_run(&mut self, at: SimTime, task: TaskId, run: RunId, cost: SimDuration) {
@@ -400,6 +422,14 @@ impl Obs {
                     ("busy_accum", Json::num(wf.busy_accum as f64)),
                     ("deferred", Json::num(wf.deferred as f64)),
                     ("rollbacks", Json::num(wf.rollbacks as f64)),
+                    (
+                        "frontier",
+                        Json::obj(vec![
+                            ("advances", Json::num(wf.frontier_advances as f64)),
+                            ("behind_accum", Json::num(wf.frontier_behind_accum as f64)),
+                            ("peak_behind", Json::num(wf.frontier_peak_behind)),
+                        ]),
+                    ),
                 ]),
             ),
             (
@@ -468,6 +498,7 @@ fn span_json(s: &Span) -> Json {
             pairs.push(("events", Json::num(events)));
             pairs.push(("batches", Json::num(batches)));
         }
+        SpanEvent::FrontierAdvance { behind } => pairs.push(("behind", Json::num(behind))),
         SpanEvent::Transfer { from, to, bytes, tier, .. } => {
             pairs.push(("from_node", Json::num(from)));
             pairs.push(("to_node", Json::num(to)));

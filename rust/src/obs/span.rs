@@ -115,6 +115,15 @@ pub enum SpanEvent {
     /// credit, so span-identity comparisons across ingestion
     /// arrangements project it out ([`SpanEvent::is_pacing_note`]).
     IngestFlush { events: u32, batches: u32 },
+    /// The frontier tracker extracted virtual instant `at` for pipelined
+    /// execution while `behind` earlier instants were still in flight
+    /// (extracted but not yet retired). `behind >= 1` is the proof that
+    /// instant overlap actually occurred. Like scheduling notes, this is
+    /// a *pipelining note*: it describes which instants the scheduler
+    /// chose to overlap under the current `reorder_window`, never what
+    /// the pipeline computed, so span-identity comparisons across window
+    /// settings project it out ([`SpanEvent::is_pipelining_note`]).
+    FrontierAdvance { behind: u32 },
 }
 
 impl SpanEvent {
@@ -176,6 +185,7 @@ impl SpanEvent {
             SpanEvent::FiringDegraded { .. } => "firing-degraded",
             SpanEvent::Transfer { .. } => "transfer",
             SpanEvent::IngestFlush { .. } => "ingest-flush",
+            SpanEvent::FrontierAdvance { .. } => "frontier-advance",
         }
     }
 
@@ -196,6 +206,16 @@ impl SpanEvent {
     /// project out scheduling notes.
     pub fn is_pacing_note(&self) -> bool {
         matches!(self, SpanEvent::IngestFlush { .. })
+    }
+
+    /// Pipelining notes record *which* virtual instants the frontier
+    /// tracker chose to overlap — a pure function of the
+    /// `reorder_window` setting, never of the data. They only occur when
+    /// `reorder_window > 1`, so span-identity comparisons across window
+    /// settings project them out, exactly as worker-count comparisons
+    /// project out scheduling notes.
+    pub fn is_pipelining_note(&self) -> bool {
+        matches!(self, SpanEvent::FrontierAdvance { .. })
     }
 }
 

@@ -310,7 +310,6 @@ fn injected_panic_and_error_stay_distinguishable() {
         .obs()
         .rec
         .spans()
-        .iter()
         .filter_map(|s| match s.event {
             SpanEvent::Firing { task, kind, .. }
                 if matches!(kind, FiringKind::Error | FiringKind::Panic) =>

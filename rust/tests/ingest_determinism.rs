@@ -181,8 +181,9 @@ fn dump_id_free(c: &Coordinator) -> String {
 }
 
 /// Span projection: everything retained except scheduling notes
-/// (worker strategy), movement notes (node placement) and pacing notes
-/// (ingest cycle chopping); `seq` omitted — the notes consume it.
+/// (worker strategy), movement notes (node placement), pacing notes
+/// (ingest cycle chopping) and pipelining notes (frontier overlap);
+/// `seq` omitted — the notes consume it.
 fn dump_spans(c: &Coordinator) -> String {
     let mut s = String::new();
     for span in c.obs().rec.spans() {
@@ -191,7 +192,10 @@ fn dump_spans(c: &Coordinator) -> String {
                 continue;
             }
         }
-        if span.event.is_movement_note() || span.event.is_pacing_note() {
+        if span.event.is_movement_note()
+            || span.event.is_pacing_note()
+            || span.event.is_pipelining_note()
+        {
             continue;
         }
         writeln!(s, "{:?} {:?}", span.at, span.event).unwrap();

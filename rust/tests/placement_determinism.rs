@@ -243,7 +243,7 @@ fn run_arm(
 
     let mut spans = String::new();
     for span in c.obs().rec.spans() {
-        if span.event.is_movement_note() {
+        if span.event.is_movement_note() || span.event.is_pipelining_note() {
             continue;
         }
         if let SpanEvent::Firing { kind, .. } = span.event {

@@ -152,9 +152,23 @@ fn run_arm(case: &Case, workers: usize) -> String {
 /// one sanctioned difference between arms; it also omits `seq`, which
 /// the notes consume on the parallel arm.
 fn run_arm_traced(case: &Case, workers: usize, trace: bool) -> (String, String) {
+    run_arm_windowed(case, workers, trace, None)
+}
+
+/// One arm with the reorder window pinned explicitly (`None` keeps the
+/// ambient default: `KOALJA_REORDER_WINDOW`, else auto = workers).
+fn run_arm_windowed(
+    case: &Case,
+    workers: usize,
+    trace: bool,
+    window: Option<usize>,
+) -> (String, String) {
     use std::fmt::Write as _;
     let spec = parse(&case.text).expect("generated wirings parse");
-    let cfg = DeployConfig { workers, trace, ..Default::default() };
+    let mut cfg = DeployConfig { workers, trace, ..Default::default() };
+    if let Some(w) = window {
+        cfg.reorder_window = w;
+    }
     let mut c = Coordinator::deploy(&spec, cfg).unwrap();
     for t in 0..c.graph.n_tasks() {
         let name = c.graph.task(TaskId::new(t as u64)).name.clone();
@@ -234,6 +248,9 @@ fn run_arm_traced(case: &Case, workers: usize, trace: bool) -> (String, String) 
             if kind.is_scheduling_note() {
                 continue;
             }
+        }
+        if span.event.is_pipelining_note() {
+            continue; // frontier-advance exists only when reorder_window > 1
         }
         writeln!(spans, "{:?} {:?}", span.at, span.event).unwrap();
     }
@@ -530,6 +547,9 @@ fn run_fault_arm(case: &Case, workers: usize, trace: bool, fault_seed: u64) -> (
                 continue;
             }
         }
+        if span.event.is_pipelining_note() {
+            continue; // frontier-advance exists only when reorder_window > 1
+        }
         writeln!(spans, "{:?} {:?}", span.at, span.event).unwrap();
     }
     (s, spans)
@@ -638,4 +658,128 @@ fn sequential_fallback_code_keeps_determinism() {
         s
     };
     assert_eq!(arm(1), arm(par_workers().max(2)));
+}
+
+// ---------------------------------------------------------------------
+// pipelined scheduling: the reorder-window axis of the contract
+// ---------------------------------------------------------------------
+
+#[test]
+fn reorder_window_matrix_is_byte_identical() {
+    // the tentpole invariant: breaking the per-instant barrier must not
+    // move a committed byte. Every {window} × {workers} × {trace} cell —
+    // window 1 (pipelining off), window = workers (the auto default) and
+    // a window far wider than any batch — is compared byte-for-byte
+    // against the strict per-instant sequential baseline, books and
+    // span projection both (pipelining notes projected out: they are
+    // the one sanctioned difference, absent by construction at
+    // window = 1).
+    let w = par_workers().max(4);
+    let mut r = rng(0xF2_0A71E5);
+    for case_idx in 0..8 {
+        let case = random_case(&mut r);
+        let (baseline, base_spans) = run_arm_windowed(&case, 1, true, Some(1));
+        for workers in [1usize, w] {
+            for window in [1usize, w, 64] {
+                for trace in [false, true] {
+                    let (books, spans) =
+                        run_arm_windowed(&case, workers, trace, Some(window));
+                    if baseline != books {
+                        for (lb, la) in baseline.lines().zip(books.lines()) {
+                            assert_eq!(
+                                lb, la,
+                                "case {case_idx} (workers={workers} window={window} \
+                                 trace={trace}) diverged\nspec:\n{}",
+                                case.text
+                            );
+                        }
+                        panic!(
+                            "case {case_idx}: books differ in length only (workers={workers} \
+                             window={window} trace={trace})\nspec:\n{}",
+                            case.text
+                        );
+                    }
+                    if trace && spans != base_spans {
+                        for (ls, lp) in base_spans.lines().zip(spans.lines()) {
+                            assert_eq!(
+                                ls, lp,
+                                "case {case_idx}: span streams diverged (window={window} \
+                                 workers={workers})\nspec:\n{}",
+                                case.text
+                            );
+                        }
+                        panic!(
+                            "case {case_idx}: span streams differ in length only \
+                             (window={window} workers={workers})\nspec:\n{}",
+                            case.text
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn diamond_overlaps_instants_and_commits_identically() {
+    // the directed overlap witness: a fan-out/fan-in diamond fed a
+    // stream of arrivals. Under pipelined scheduling the join's firing
+    // for arrival k (at T+δ) and the diamond arms' firings for arrival
+    // k+1 (at T') execute in the same batch — the frontier-advance span
+    // with behind >= 1 records exactly that: an instant entered
+    // execution while an earlier instant was still open. The books must
+    // nonetheless be byte-identical to the strict per-instant run.
+    let text =
+        "[diamond]\n(x) arm_a (ao)\n(x) arm_b (bo)\n(ao, bo) join (out)\n".to_string();
+    let case = Case {
+        text,
+        plan: (0..10u64)
+            .map(|i| ("x".to_string(), i * 3, vec![i as f32, 1.0, 2.0, 3.0]))
+            .collect(),
+    };
+    let (seq_books, _) = run_arm_windowed(&case, 1, true, Some(1));
+
+    // pipelined arm, instrumented directly so the raw (unprojected)
+    // span stream is visible
+    let spec = parse(&case.text).unwrap();
+    let cfg = DeployConfig {
+        workers: par_workers().max(2),
+        trace: true,
+        reorder_window: 64,
+        ..Default::default()
+    };
+    let mut c = Coordinator::deploy(&spec, cfg).unwrap();
+    for t in 0..c.graph.n_tasks() {
+        let name = c.graph.task(TaskId::new(t as u64)).name.clone();
+        c.set_code(&name, case_code()).unwrap();
+    }
+    for (wire, at_ms, data) in &case.plan {
+        c.inject_at(
+            wire,
+            Payload::tensor(&[4], data.clone()),
+            DataClass::Summary,
+            RegionId::new(0),
+            SimTime::millis(*at_ms),
+        )
+        .unwrap();
+    }
+    c.run_until_idle();
+    let advances: Vec<u32> = c
+        .obs()
+        .rec
+        .spans()
+        .filter_map(|s| match s.event {
+            SpanEvent::FrontierAdvance { behind } => Some(behind),
+            _ => None,
+        })
+        .collect();
+    assert!(
+        advances.iter().any(|&b| b >= 1),
+        "pipelined diamond must overlap instants (frontier-advance with behind >= 1); \
+         recorded: {advances:?}"
+    );
+
+    // and the committed books are the sequential per-instant books
+    let (par_books, _) = run_arm_windowed(&case, par_workers().max(2), true, Some(64));
+    assert_eq!(seq_books, par_books, "diamond books must be byte-identical across windows");
 }

@@ -15,12 +15,14 @@ one file are reported informationally (new shapes appear, old ones
 retire — that is trajectory, not failure). An empty baseline (the seed
 commit before any measured run) compares clean by definition.
 
-The parallel wavefront shapes (par-chain-N / par-fanout-N) additionally
-carry a `<shape>/speedup` metric: fresh wallclock at workers=1 divided
-by the worker-pool arm. Fan-outs >= 4 wide are expected to actually
-parallelize; a speedup below PAR_MIN_SPEEDUP there warns (never fails —
-CI runners can be 1-core). Chains are 1-wide wavefronts and are exempt:
-their honest expectation is ~1.0x.
+The parallel wavefront shapes (par-chain-N / par-fanout-N /
+par-diamond-N) additionally carry a `<shape>/speedup` metric: fresh
+wallclock at workers=1 divided by the worker-pool arm. Every shape
+>= 4 wide is expected to clear PAR_MIN_SPEEDUP; below it warns (never
+fails — CI runners can be 1-core). Chains stopped being exempt when
+scheduling went pipelined: their instants are 1-wide, but the frontier
+overlaps *instants* (stage N on arrival k+1 while stage N+1 runs
+arrival k), so par-chain-8 must now show a real speedup too.
 
 The observability pair (obs-overhead/{off,on}/ns_per_event) carries two
 extra gates. The off arm is the cost of shipping the instrumentation
@@ -126,27 +128,32 @@ def lower_is_better(label, unit):
 
 
 def parallel_speedup_check(fresh):
-    """Warn when a >=4-wide par-fanout shape parallelizes < PAR_MIN_SPEEDUP.
+    """Warn when a >=4-wide parallel shape parallelizes < PAR_MIN_SPEEDUP.
 
     Reads the fresh report only (the speedup is already a same-run
     seq-vs-par comparison; the committed baseline is not involved).
-    Returns the number of warnings raised.
+    Applies to fan-outs, diamonds AND chains: with pipelined scheduling
+    a chain overlaps its instants, so a chain speedup below the floor
+    means the frontier tracker is not engaging. Returns the number of
+    warnings raised.
     """
     warnings = 0
     for label in sorted(fresh):
-        m = re.match(r"par-(chain|fanout)-(\d+)/speedup$", label)
+        m = re.match(r"par-(chain|fanout|diamond)-(\d+)/speedup$", label)
         if not m:
             continue
         value = fresh[label][0]
         kind, width = m.group(1), int(m.group(2))
-        if kind == "fanout" and width >= 4 and value < PAR_MIN_SPEEDUP:
+        if width >= 4 and value < PAR_MIN_SPEEDUP:
+            detail = ("pipelined instant overlap not engaging"
+                      if kind == "chain"
+                      else f"{width}-wide {kind} not parallelizing")
             print(f"bench_delta: warn — {label} = {value:.2f}x, below the "
-                  f"{PAR_MIN_SPEEDUP:.1f}x floor for a {width}-wide fan-out "
-                  "(1-core runner, oversubscription, or a scheduler regression)")
+                  f"{PAR_MIN_SPEEDUP:.1f}x floor ({detail}; or a 1-core "
+                  "runner / oversubscription)")
             warnings += 1
         else:
-            note = "parallel speedup" if kind == "fanout" else "parallel speedup (1-wide: ~1x expected)"
-            print(f"{label:44} {value:12.2f}x  {note}")
+            print(f"{label:44} {value:12.2f}x  parallel speedup")
     return warnings
 
 
